@@ -1,0 +1,65 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Emits one `artifacts/gains_n{N}_w{W}.hlo.txt` per shape bucket. The bucket
+menu must match `BUCKETS` in rust/src/runtime/artifacts.rs (the integration
+test rust/tests/runtime_xla.rs asserts the files exist for that menu).
+
+HLO *text* (NOT a serialized HloModuleProto): jax >= 0.5 emits protos with
+64-bit instruction ids which the `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import select_best_batch
+
+# (n, w) shape buckets — keep in sync with rust/src/runtime/artifacts.rs.
+SHAPE_BUCKETS = [
+    (256, 32),
+    (1024, 64),
+    (4096, 128),
+    (16384, 512),
+]
+
+
+def lower_to_hlo_text(n: int, w: int) -> str:
+    cov = jax.ShapeDtypeStruct((n, w), jnp.uint32)
+    covered = jax.ShapeDtypeStruct((1, w), jnp.uint32)
+    active = jax.ShapeDtypeStruct((n,), jnp.int32)
+    lowered = jax.jit(select_best_batch).lower(cov, covered, active)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--buckets",
+        default=None,
+        help="comma-separated n:w pairs (default: the full menu)",
+    )
+    args = ap.parse_args()
+    buckets = SHAPE_BUCKETS
+    if args.buckets:
+        buckets = [tuple(map(int, b.split(":"))) for b in args.buckets.split(",")]
+    os.makedirs(args.out_dir, exist_ok=True)
+    for n, w in buckets:
+        text = lower_to_hlo_text(n, w)
+        path = os.path.join(args.out_dir, f"gains_n{n}_w{w}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the coverage kernel — the CORE correctness signal.
+
+Deliberately written with no Pallas, no tiling, no cleverness: just the
+mathematical definition of marginal-gain scoring. pytest asserts the Pallas
+kernel and the full model agree with this bit-exactly across shapes and
+dtypes (python/tests/test_kernel.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def coverage_gains_ref(cov, covered):
+    """gains[v] = sum_w popcount(cov[v, w] & ~covered[w]); int32[n]."""
+    new_bits = jnp.bitwise_and(cov, jnp.bitwise_not(covered))
+    return jnp.sum(jax.lax.population_count(new_bits).astype(jnp.int32), axis=1)
+
+
+def select_best_ref(cov, covered, active):
+    """Reference for the full model step: masked argmax over gains.
+
+    active: int32[n] (1 = candidate, 0 = already selected / padding).
+    Returns (best_idx int32, best_gain int32); best_gain = -1 if no
+    active rows.
+    """
+    gains = coverage_gains_ref(cov, covered)
+    masked = jnp.where(active.astype(bool), gains, jnp.int32(-1))
+    best = jnp.argmax(masked).astype(jnp.int32)
+    return best, masked[best]

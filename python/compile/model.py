@@ -1,0 +1,33 @@
+"""L2 — the JAX "model": one greedy-selection step over packed coverage
+bitmaps, calling the L1 Pallas kernel for the gains and fusing the masked
+argmax so only two scalars cross the PJRT boundary per greedy iteration.
+
+The Rust coordinator (rust/src/runtime/scorer.rs) executes the AOT-lowered
+form of `select_best` with signature
+
+    f(cov: u32[n, w], covered: u32[1, w], active: i32[n])
+        -> (best_idx: i32, best_gain: i32)
+
+`best_gain` is -1 when no active rows remain (all selected / padding).
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.coverage import coverage_gains
+
+
+def select_best(cov, covered, active):
+    """One dense-greedy iteration: gains via the Pallas kernel, then a
+    masked argmax. Ties resolve to the lowest row index (jnp.argmax takes
+    the first maximum), matching the Rust CpuScorer bit-for-bit."""
+    gains = coverage_gains(cov, covered)
+    masked = jnp.where(active.astype(bool), gains, jnp.int32(-1))
+    best = jnp.argmax(masked).astype(jnp.int32)
+    return best, masked[best]
+
+
+def select_best_batch(cov, covered, active):
+    """Tuple-returning wrapper used for AOT lowering (PJRT executables
+    return a tuple)."""
+    best, gain = select_best(cov, covered, active)
+    return (best, gain)

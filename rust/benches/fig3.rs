@@ -1,0 +1,11 @@
+//! Regenerates paper Fig. 3: total-time scaling on orkut-group —
+//! GreediRIS vs GreediRIS-trunc vs Ripples up to m = 512.
+use greediris::exp::tables::{fig3, BenchScale, GraphCache};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let mut cache = GraphCache::default();
+    let f = fig3(scale, &[8, 16, 32, 64, 128, 256, 512], &mut cache);
+    println!("{}", f.render());
+    println!("paper phenomenon: Ripples flattens early; GreediRIS scales further; trunc furthest.");
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Fig. 4: runtime breakdown on livejournal (IC) —
+//! sender phases vs receiver vs total (4a) and the receiver's
+//! communicating/bucketing thread split (4b).
+use greediris::exp::tables::{fig4, BenchScale, GraphCache};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let mut cache = GraphCache::default();
+    let f = fig4(scale, &[8, 16, 32, 64, 128, 256, 512], &mut cache);
+    println!("{}", f.render());
+    println!("paper phenomena: total ≈ max(sender, receiver) (streaming masks comm);");
+    println!("receiver's communicating thread is dominated by waiting (high availability).");
+}

@@ -1,0 +1,89 @@
+//! Micro-benchmarks of the max-k-cover solver family — the L3 hot path.
+//! Drives the §Perf iteration log in EXPERIMENTS.md.
+use greediris::exp::bench::Bench;
+use greediris::maxcover::{
+    dense_greedy_max_cover, greedy_max_cover, lazy_greedy_max_cover, CpuScorer, PackedCovers,
+    SetSystem, StreamingMaxCover,
+};
+use greediris::rng::Xoshiro256pp;
+
+fn random_system(seed: u64, n: usize, theta: usize, avg_len: u64) -> SetSystem {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = 1 + rng.gen_range(2 * avg_len) as usize;
+            let mut v: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect();
+    SetSystem { theta, vertices: (0..n as u32).collect(), sets }
+}
+
+/// The pre-§Perf-L3-2 scorer (scalar u32 popcounts) kept for the A/B.
+struct LegacyU32Scorer;
+
+impl greediris::maxcover::GainScorer for LegacyU32Scorer {
+    fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
+        let mut best = (usize::MAX, 0u32);
+        for i in 0..covers.n {
+            if selected[i] {
+                continue;
+            }
+            let mut gain = 0u32;
+            for (a, b) in covers.row(i).iter().zip(covered) {
+                gain += (a & !b).count_ones();
+            }
+            if best.0 == usize::MAX || gain > best.1 {
+                best = (i, gain);
+            }
+        }
+        best
+    }
+    fn name(&self) -> &'static str {
+        "legacy-u32"
+    }
+}
+
+fn main() {
+    let sys = random_system(1, 4000, 16_384, 40);
+    let k = 100;
+    let b = Bench::new("maxcover");
+
+    b.bench("greedy_n4k_k100", || greedy_max_cover(&sys, k));
+    b.bench("lazy_greedy_n4k_k100", || lazy_greedy_max_cover(&sys, k));
+
+    let covers = PackedCovers::from_sets(&sys);
+    b.bench("dense_cpu_greedy_n4k_k100", || {
+        dense_greedy_max_cover(&covers, k, &mut CpuScorer)
+    });
+    b.bench("dense_cpu_legacy_u32_n4k_k100", || {
+        dense_greedy_max_cover(&covers, k, &mut LegacyU32Scorer)
+    });
+
+    b.bench("streaming_n4k_k100_d0.077", || {
+        let mut s = StreamingMaxCover::new(sys.theta, k, 0.077);
+        for (i, ids) in sys.sets.iter().enumerate() {
+            s.offer(sys.vertices[i], ids);
+        }
+        s.finalize()
+    });
+
+    // XLA backend, if artifacts are present.
+    if let Ok(mut xla) = greediris::runtime::XlaScorer::new() {
+        if xla.artifacts_present() {
+            let small = random_system(2, 1000, 2000, 20);
+            let pc = PackedCovers::from_sets(&small);
+            b.bench("dense_xla_greedy_n1k_k50", || {
+                dense_greedy_max_cover(&pc, 50, &mut xla)
+            });
+            let mut cpu = CpuScorer;
+            b.bench("dense_cpu_greedy_n1k_k50", || {
+                dense_greedy_max_cover(&pc, 50, &mut cpu)
+            });
+        } else {
+            println!("(skipping XLA benches: run `make artifacts`)");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Micro-benchmarks of RRR sampling (S1) — throughput per model and the
+//! Monte-Carlo spread evaluator.
+use greediris::diffusion::{evaluate_spread, DiffusionModel};
+use greediris::exp::bench::Bench;
+use greediris::exp::inputs::{analog, build_analog};
+use greediris::graph::{generators, weights::WeightModel, Graph};
+use greediris::sampling::RrrSampler;
+
+fn main() {
+    let b = Bench::new("sampling");
+    let spec = analog("pokec").expect("catalog");
+    let g_ic = build_analog(spec, DiffusionModel::IC, 3);
+    let g_lt = build_analog(spec, DiffusionModel::LT, 3);
+
+    b.bench("rrr_ic_pokec_1k_samples", || {
+        let mut s = RrrSampler::new(&g_ic, DiffusionModel::IC, 1);
+        s.batch(0, 1000).total_entries()
+    });
+    b.bench("rrr_lt_pokec_1k_samples", || {
+        let mut s = RrrSampler::new(&g_lt, DiffusionModel::LT, 1);
+        s.batch(0, 1000).total_entries()
+    });
+
+    // The paper's observation: LT samples are shorter than IC.
+    let mut si = RrrSampler::new(&g_ic, DiffusionModel::IC, 2);
+    let mut sl = RrrSampler::new(&g_lt, DiffusionModel::LT, 2);
+    let ic_len = si.batch(0, 2000).total_entries() as f64 / 2000.0;
+    let lt_len = sl.batch(0, 2000).total_entries() as f64 / 2000.0;
+    println!("avg RRR length: IC {ic_len:.1} vs LT {lt_len:.1} (paper: LT shorter)");
+
+    let edges = generators::barabasi_albert(5000, 4, 5);
+    let g = Graph::from_edges(5000, &edges, WeightModel::UniformIc { max: 0.1 }, 5);
+    let seeds: Vec<u32> = (0..50).collect();
+    b.bench("spread_ic_5k_vertices_5sims", || {
+        evaluate_spread(&g, &seeds, DiffusionModel::IC, 5, 9).mean
+    });
+}

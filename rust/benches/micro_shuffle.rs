@@ -1,0 +1,40 @@
+//! Micro-benchmarks of the distributed substrate: all-to-all shuffle (S2)
+//! payload assembly + exchange, and collective cost models.
+use greediris::coordinator::config::{Algorithm, Config};
+use greediris::coordinator::sampling::{grow_to, DistState};
+use greediris::diffusion::DiffusionModel;
+use greediris::distributed::{collectives, Cluster, NetModel};
+use greediris::exp::bench::Bench;
+use greediris::exp::inputs::{analog, build_analog};
+
+fn main() {
+    let b = Bench::new("shuffle");
+    let spec = analog("dblp").expect("catalog");
+    let g = build_analog(spec, DiffusionModel::IC, 4);
+
+    for m in [8usize, 64, 256] {
+        b.bench(&format!("grow_shuffle_m{m}_theta4096"), || {
+            let mut cl = Cluster::new(m, NetModel::slingshot());
+            let cfg = Config::new(50, m, DiffusionModel::IC, Algorithm::GreediRis);
+            let pool: Vec<usize> = (1..m).collect();
+            let mut st = DistState::new(g.n(), m, &pool, 7, 0, true);
+            grow_to(&mut cl, &g, &cfg, &mut st, 4096);
+            st.theta
+        });
+    }
+
+    b.bench("alltoallv_m64_1k_elems_per_pair", || {
+        let m = 64;
+        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let outbox: Vec<Vec<Vec<u32>>> = (0..m)
+            .map(|_| (0..m).map(|_| vec![7u32; 1000]).collect())
+            .collect();
+        collectives::all_to_allv(&mut cl, outbox, 4).len()
+    });
+
+    b.bench("allreduce_m128_n65536", || {
+        let mut cl = Cluster::new(4, NetModel::slingshot());
+        let parts: Vec<Vec<u32>> = (0..4).map(|i| vec![i as u32; 65_536]).collect();
+        collectives::allreduce_sum_u32(&mut cl, &parts).len()
+    });
+}

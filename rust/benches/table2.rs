@@ -1,0 +1,27 @@
+//! Regenerates paper Table 2: local vs global max-k-cover time under the
+//! offline RandGreedi template as m grows. `GREEDIRIS_BENCH_SCALE=full`
+//! for the calibrated budget.
+use greediris::exp::bench::Bench;
+use greediris::exp::tables::{table2, BenchScale, GraphCache};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let mut cache = GraphCache::default();
+    let t = table2(scale, &mut cache);
+    println!("{}", t.render());
+    // Check the paper's phenomenon: local time decreases, global increases.
+    let first = t.rows.first().unwrap();
+    let last = t.rows.last().unwrap();
+    println!(
+        "phenomenon check: local {:.4}->{:.4} (expect ↓), global {:.4}->{:.4} (expect ↑)",
+        first.1, last.1, first.2, last.2
+    );
+    // Criterion-style timing of the m=32 point.
+    let b = Bench::new("table2");
+    b.bench("randgreedi_offline_m32_point", || {
+        let mut c = GraphCache::default();
+        let mut s = scale;
+        s.theta /= 4;
+        greediris::exp::tables::table2_point(s, 32, &mut c)
+    });
+}

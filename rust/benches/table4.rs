@@ -1,0 +1,19 @@
+//! Regenerates paper Table 4: Ripples vs DiIMM vs GreediRIS vs
+//! GreediRIS-trunc at m = 512 for both diffusion models, with quality
+//! deltas and geometric-mean speedups.
+use greediris::diffusion::DiffusionModel;
+use greediris::exp::tables::{all_inputs, table4, BenchScale, GraphCache};
+
+fn main() {
+    let scale = BenchScale::from_env();
+    let mut cache = GraphCache::default();
+    let inputs = all_inputs();
+    for model in [DiffusionModel::LT, DiffusionModel::IC] {
+        let t = table4(scale, model, &inputs, &mut cache);
+        println!("{}", t.render());
+        println!(
+            "paper reference ({}): geo-mean speedups 28.99x (LT) / 36.35x (IC); quality within 2.72%",
+            model.as_str()
+        );
+    }
+}

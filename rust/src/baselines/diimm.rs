@@ -1,0 +1,171 @@
+//! DiIMM-style master–worker lazy seed selection (Tang et al., ICDE 2022;
+//! reimplemented from the paper's description in §2.1, as the original
+//! software was never released — the GreediRIS authors did the same).
+//!
+//! After a reduce-to-root of the initial frequency vector, the master
+//! processes candidates in non-increasing stale-coverage order (a lazy
+//! priority queue). Selecting a seed triggers a broadcast of the seed and a
+//! fresh reduce-to-root of the updated counts — "algorithmically equivalent
+//! of performing k global reductions" under a master–worker layout.
+
+use super::RankSelectState;
+use crate::coordinator::sampling::DistState;
+use crate::distributed::{collectives, Cluster};
+use crate::maxcover::CoverSolution;
+use crate::Vertex;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+pub struct MasterWorkerSelect {
+    pub solution: CoverSolution,
+    pub select_time: f64,
+    pub build_time: f64,
+    pub reduction_bytes: u64,
+    /// Stale candidates the master pushed back (diagnostics of laziness).
+    pub stale_pops: u64,
+}
+
+const MASTER: usize = 0;
+
+/// Charges every rank the reduce-to-root cost for an n-sized vector:
+/// modeled wire time plus the real vector-add compute of the tree.
+fn charge_reduce(cluster: &mut Cluster, bytes: u64, scratch: &mut super::ReduceScratch) {
+    let m = cluster.m;
+    cluster.barrier();
+    for r in 0..m {
+        let cost = cluster.net.reduce(m, bytes);
+        cluster.charge_comm(r, cost);
+    }
+    super::charge_reduction_compute(cluster, scratch);
+}
+
+/// Runs the DiIMM master–worker selection.
+pub fn diimm_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usize) -> MasterWorkerSelect {
+    let m = cluster.m;
+    let t0 = cluster.barrier();
+
+    let mut global = vec![0u32; n];
+    let mut ranks: Vec<RankSelectState> = Vec::with_capacity(m);
+    for p in 0..m {
+        let t = Instant::now();
+        let r = RankSelectState::build(state, p, &mut global);
+        cluster.charge_compute(p, t.elapsed().as_secs_f64());
+        ranks.push(r);
+    }
+    let build_time = cluster.barrier() - t0;
+
+    // Initial reduce-to-root + master heap of (count, vertex).
+    let reduce_bytes = (n * 4) as u64;
+    let mut scratch = super::ReduceScratch::new(n);
+    charge_reduce(cluster, reduce_bytes, &mut scratch);
+    let mut reduction_bytes = reduce_bytes;
+    let (mut heap, _) = cluster.run_compute(MASTER, || {
+        let mut h: BinaryHeap<(u32, Reverse<u32>)> = BinaryHeap::with_capacity(n / 2);
+        for (v, &c) in global.iter().enumerate() {
+            if c > 0 {
+                h.push((c, Reverse(v as u32)));
+            }
+        }
+        h
+    });
+
+    let mut solution = CoverSolution::default();
+    let mut stale_pops = 0u64;
+    while solution.len() < k {
+        // Master: lazily pop until a candidate's key is fresh. (Counts are
+        // globally fresh after each reduction, but heap keys are not.)
+        let mut chosen: Option<(u32, Vertex)> = None;
+        let t = Instant::now();
+        while let Some((c, Reverse(v))) = heap.pop() {
+            let actual = global[v as usize];
+            if c == actual {
+                if actual > 0 {
+                    chosen = Some((actual, v));
+                }
+                break;
+            }
+            stale_pops += 1;
+            if actual > 0 {
+                heap.push((actual, Reverse(v)));
+            }
+        }
+        cluster.charge_compute(MASTER, t.elapsed().as_secs_f64());
+        let Some((gain, seed)) = chosen else { break };
+
+        // Broadcast the selected seed to all workers.
+        collectives::broadcast_cost(cluster, MASTER, 8);
+        // Workers update local coverage; master accumulates via reduction.
+        for (p, r) in ranks.iter_mut().enumerate() {
+            let t = Instant::now();
+            r.apply_seed(state, p, seed, &mut global);
+            cluster.charge_compute(p, t.elapsed().as_secs_f64());
+        }
+        charge_reduce(cluster, reduce_bytes, &mut scratch);
+        reduction_bytes += reduce_bytes;
+        solution.push(seed, gain);
+    }
+    cluster.barrier();
+    let select_time = cluster.makespan() - t0 - build_time;
+
+    MasterWorkerSelect { solution, select_time, build_time, reduction_bytes, stale_pops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::ripples::ripples_select;
+    use crate::coordinator::config::{Algorithm, Config};
+    use crate::coordinator::sampling::grow_to;
+    use crate::diffusion::DiffusionModel;
+    use crate::distributed::NetModel;
+    use crate::graph::generators;
+    use crate::graph::weights::WeightModel;
+    use crate::graph::Graph;
+
+    fn setup(m: usize, theta: u64) -> (Graph, Cluster, DistState, Config) {
+        let edges = generators::barabasi_albert(250, 4, 5);
+        let g = Graph::from_edges(250, &edges, WeightModel::UniformIc { max: 0.1 }, 5);
+        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let cfg = Config::new(6, m, DiffusionModel::IC, Algorithm::DiImm);
+        let mut st = DistState::new(g.n(), m, &[0], cfg.seed, 0, false);
+        grow_to(&mut cl, &g, &cfg, &mut st, theta);
+        (g, cl, st, cfg)
+    }
+
+    /// DiIMM and Ripples must select identical seed sets (both are exact
+    /// global greedy); only their communication pattern differs.
+    #[test]
+    fn matches_ripples_selection() {
+        let (g, mut cl, st, cfg) = setup(4, 280);
+        let d = diimm_select(&mut cl, &st, g.n(), cfg.k);
+        let (g2, mut cl2, st2, _) = setup(4, 280);
+        let r = ripples_select(&mut cl2, &st2, g2.n(), cfg.k);
+        assert_eq!(d.solution.seeds, r.solution.seeds);
+        assert_eq!(d.solution.coverage, r.solution.coverage);
+    }
+
+    #[test]
+    fn gains_non_increasing() {
+        let (g, mut cl, st, cfg) = setup(3, 300);
+        let d = diimm_select(&mut cl, &st, g.n(), cfg.k);
+        for w in d.solution.gains.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn reduction_bytes_scale_with_k() {
+        let (g, mut cl, st, _) = setup(2, 300);
+        let d = diimm_select(&mut cl, &st, g.n(), 5);
+        // initial + one per selected seed.
+        assert_eq!(d.reduction_bytes, (g.n() * 4) as u64 * (1 + d.solution.len() as u64));
+    }
+
+    #[test]
+    fn master_comm_charged() {
+        let (g, mut cl, st, cfg) = setup(8, 300);
+        let _ = diimm_select(&mut cl, &st, g.n(), cfg.k);
+        assert!(cl.clocks[MASTER].comm > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Ripples-style distributed seed selection (Minutoli et al. 2019):
+//! k iterations, each performing a *global allreduce of the n-sized vertex
+//! frequency vector*, then a replicated argmax — "The Ripples algorithm
+//! implements this using k global reductions (over an n-sized frequency
+//! vector)" (paper §2.1).
+//!
+//! The reduced vector is maintained incrementally (see
+//! [`super`] module docs); the wire cost of the full per-iteration
+//! allreduce is charged to every rank as the real system pays it.
+
+use super::RankSelectState;
+use crate::coordinator::sampling::DistState;
+use crate::distributed::Cluster;
+use crate::maxcover::CoverSolution;
+use crate::Vertex;
+use std::time::Instant;
+
+/// Outcome of one Ripples selection phase.
+pub struct ReduceSelect {
+    pub solution: CoverSolution,
+    /// Time from first reduction to completion (simulated).
+    pub select_time: f64,
+    /// Index-building (local) portion.
+    pub build_time: f64,
+    pub reduction_bytes: u64,
+}
+
+/// Runs the k-reduction selection over the locally held samples.
+pub fn ripples_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usize) -> ReduceSelect {
+    let m = cluster.m;
+    let t0 = cluster.barrier();
+
+    // Build per-rank sparse indexes; `global` is the reduced vector.
+    let mut global = vec![0u32; n];
+    let mut ranks: Vec<RankSelectState> = Vec::with_capacity(m);
+    for p in 0..m {
+        let t = Instant::now();
+        let r = RankSelectState::build(state, p, &mut global);
+        cluster.charge_compute(p, t.elapsed().as_secs_f64());
+        ranks.push(r);
+    }
+    let build_time = cluster.barrier() - t0;
+
+    let reduce_bytes_per_iter = (n * 4) as u64;
+    let mut solution = CoverSolution::default();
+    let mut reduction_bytes = 0u64;
+    let mut scratch = super::ReduceScratch::new(n);
+    for _ in 0..k {
+        // The global reduction every rank participates in: modeled wire
+        // cost + the real vector-add compute of the reduction tree (the
+        // summed vector itself is maintained incrementally).
+        cluster.barrier();
+        for r in 0..m {
+            let cost = cluster.net.allreduce(m, reduce_bytes_per_iter);
+            cluster.charge_comm(r, cost);
+        }
+        super::charge_reduction_compute(cluster, &mut scratch);
+        reduction_bytes += reduce_bytes_per_iter;
+        // Replicated argmax: every rank scans the reduced vector. Measure
+        // once, charge all ranks the same scan time.
+        let t = Instant::now();
+        let (best_v, best_c) = global
+            .iter()
+            .enumerate()
+            .fold((0usize, 0u32), |acc, (v, &c)| if c > acc.1 { (v, c) } else { acc });
+        let scan = t.elapsed().as_secs_f64();
+        for r in 0..m {
+            cluster.charge_compute(r, scan);
+        }
+        if best_c == 0 {
+            break;
+        }
+        // Apply the seed on every rank (updates `global` incrementally).
+        let mut gain = 0u32;
+        for (p, r) in ranks.iter_mut().enumerate() {
+            let t = Instant::now();
+            gain += r.apply_seed(state, p, best_v as Vertex, &mut global);
+            cluster.charge_compute(p, t.elapsed().as_secs_f64());
+        }
+        debug_assert_eq!(gain, best_c, "reduced count must equal realized gain");
+        solution.push(best_v as Vertex, best_c);
+    }
+    cluster.barrier();
+    let select_time = cluster.makespan() - t0 - build_time;
+
+    ReduceSelect { solution, select_time, build_time, reduction_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{Algorithm, Config};
+    use crate::coordinator::sampling::grow_to;
+    use crate::diffusion::DiffusionModel;
+    use crate::distributed::NetModel;
+    use crate::graph::generators;
+    use crate::graph::weights::WeightModel;
+    use crate::graph::Graph;
+    use crate::maxcover::{greedy_max_cover, SetSystem};
+
+    fn setup(m: usize, theta: u64) -> (Graph, Cluster, DistState, Config) {
+        let edges = generators::barabasi_albert(300, 4, 5);
+        let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 5);
+        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let cfg = Config::new(6, m, DiffusionModel::IC, Algorithm::Ripples);
+        let mut st = DistState::new(g.n(), m, &[0], cfg.seed, 0, false);
+        grow_to(&mut cl, &g, &cfg, &mut st, theta);
+        (g, cl, st, cfg)
+    }
+
+    /// Ripples' k-reduction selection IS global greedy over the union of all
+    /// samples — verify bit-equality against the sequential reference.
+    #[test]
+    fn equals_sequential_greedy() {
+        let (g, mut cl, st, cfg) = setup(3, 300);
+        let r = ripples_select(&mut cl, &st, g.n(), cfg.k);
+        let batches: Vec<_> = st.local_batches.iter().flatten().collect();
+        let sys = SetSystem::invert(g.n(), &batches, st.theta as usize);
+        let reference = greedy_max_cover(&sys, cfg.k);
+        assert_eq!(r.solution.seeds, reference.seeds);
+        assert_eq!(r.solution.coverage, reference.coverage);
+    }
+
+    #[test]
+    fn invariant_to_m() {
+        let (_, mut cl2, st2, cfg) = setup(2, 240);
+        let (_, mut cl6, st6, _) = setup(6, 240);
+        let a = ripples_select(&mut cl2, &st2, 300, cfg.k);
+        let b = ripples_select(&mut cl6, &st6, 300, cfg.k);
+        assert_eq!(a.solution.seeds, b.solution.seeds, "leap-frog invariance");
+    }
+
+    #[test]
+    fn reduction_cost_grows_with_m() {
+        let (_, mut cl2, st2, cfg) = setup(2, 240);
+        let (_, mut cl8, st8, _) = setup(8, 240);
+        let a = ripples_select(&mut cl2, &st2, 300, cfg.k);
+        let b = ripples_select(&mut cl8, &st8, 300, cfg.k);
+        assert!(b.select_time > a.select_time * 0.5, "a {} b {}", a.select_time, b.select_time);
+        assert!(a.reduction_bytes > 0 && b.reduction_bytes > 0);
+    }
+
+    #[test]
+    fn gains_non_increasing() {
+        let (g, mut cl, st, cfg) = setup(3, 280);
+        let r = ripples_select(&mut cl, &st, g.n(), cfg.k);
+        for w in r.solution.gains.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}

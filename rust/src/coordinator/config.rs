@@ -1,0 +1,246 @@
+//! Run configuration and result types for the coordinator.
+
+use crate::diffusion::DiffusionModel;
+use crate::distributed::NetModel;
+use crate::imm::bounds;
+use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
+use crate::Vertex;
+
+/// Which distributed seed-selection algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// §3.3/§3.4: streaming RandGreedi (the paper's GreediRIS).
+    GreediRis,
+    /// §3.3.2: GreediRIS with sender-side truncation (`alpha` < 1).
+    GreediRisTrunc,
+    /// §3.2/Table 2: offline RandGreedi template (gather + global lazy greedy).
+    RandGreediOffline,
+    /// Baseline: Ripples-style k global allreduce reductions.
+    Ripples,
+    /// Baseline: DiIMM-style master-worker lazy selection.
+    DiImm,
+}
+
+impl Algorithm {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Algorithm::GreediRis => "greediris",
+            Algorithm::GreediRisTrunc => "greediris-trunc",
+            Algorithm::RandGreediOffline => "randgreedi",
+            Algorithm::Ripples => "ripples",
+            Algorithm::DiImm => "diimm",
+        }
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "greediris" => Ok(Algorithm::GreediRis),
+            "greediris-trunc" | "trunc" => Ok(Algorithm::GreediRisTrunc),
+            "randgreedi" => Ok(Algorithm::RandGreediOffline),
+            "ripples" => Ok(Algorithm::Ripples),
+            "diimm" => Ok(Algorithm::DiImm),
+            other => Err(format!("unknown algorithm '{other}'")),
+        }
+    }
+}
+
+/// Local (sender-side) max-k-cover backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalSolver {
+    /// Paper Algorithm 2 (heap-based lazy greedy) — the default.
+    LazyGreedy,
+    /// Dense packed-bitmap greedy on the native CPU scorer.
+    DenseCpu,
+    /// Dense greedy on the AOT-compiled XLA/Pallas scorer
+    /// (requires `artifacts/`, see [`crate::runtime`]).
+    DenseXla,
+}
+
+/// Full configuration of one InfMax run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of seeds.
+    pub k: usize,
+    /// IMM sampling-error parameter ε.
+    pub eps: f64,
+    /// Streaming bucket parameter δ (paper default 0.077 → 63 buckets at
+    /// k = 100).
+    pub delta: f64,
+    /// Truncation fraction α ∈ (0, 1]; only used by
+    /// [`Algorithm::GreediRisTrunc`].
+    pub alpha: f64,
+    /// Number of ranks (machines) in the virtual cluster.
+    pub m: usize,
+    /// Receiver thread count t (1 communicating + t−1 bucketing).
+    pub threads: usize,
+    pub model: DiffusionModel,
+    pub algorithm: Algorithm,
+    pub local_solver: LocalSolver,
+    pub seed: u64,
+    pub net: NetModel,
+    /// Divisor modeling intra-node parallelism for the sampling phase
+    /// (the paper's nodes run 64–128 OpenMP threads).
+    pub node_threads: f64,
+    /// Skip the martingale estimation and use exactly this many samples
+    /// (used by benches that sweep m at fixed work).
+    pub theta_override: Option<u64>,
+}
+
+impl Config {
+    pub fn new(k: usize, m: usize, model: DiffusionModel, algorithm: Algorithm) -> Self {
+        Self {
+            k,
+            eps: 0.13,
+            delta: 0.077,
+            alpha: 1.0,
+            m,
+            threads: 64,
+            model,
+            algorithm,
+            local_solver: LocalSolver::LazyGreedy,
+            seed: 0x5EED,
+            net: NetModel::slingshot(),
+            node_threads: 64.0,
+            theta_override: None,
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_theta(mut self, theta: u64) -> Self {
+        self.theta_override = Some(theta);
+        self
+    }
+
+    pub fn with_eps(mut self, eps: f64) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    pub fn with_local_solver(mut self, s: LocalSolver) -> Self {
+        self.local_solver = s;
+        self
+    }
+
+    /// Number of sender processes (the receiver, rank 0, does not own a
+    /// vertex partition in the streaming variants; with m == 1 everything
+    /// degenerates to a single local solve).
+    pub fn senders(&self) -> usize {
+        if self.m <= 1 {
+            1
+        } else {
+            self.m - 1
+        }
+    }
+
+    /// Truncation limit in seeds (⌈α·k⌉), k for non-truncated variants.
+    pub fn trunc_limit(&self) -> usize {
+        match self.algorithm {
+            Algorithm::GreediRisTrunc => ((self.alpha * self.k as f64).ceil() as usize).max(1),
+            _ => self.k,
+        }
+    }
+
+    /// The worst-case approximation ratio of this configuration
+    /// (Lemmas 3.1/3.3, Corollary 2.1).
+    pub fn worst_case_ratio(&self) -> f64 {
+        match self.algorithm {
+            Algorithm::GreediRis | Algorithm::RandGreediOffline => {
+                bounds::greediris_ratio(self.delta, self.eps)
+            }
+            Algorithm::GreediRisTrunc => {
+                bounds::greediris_trunc_ratio(self.alpha, self.delta, self.eps)
+            }
+            Algorithm::Ripples | Algorithm::DiImm => {
+                bounds::infmax_ratio(bounds::greedy_ratio(), self.eps)
+            }
+        }
+    }
+}
+
+/// Result of one full InfMax run (all martingale rounds + final selection).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub seeds: Vec<Vertex>,
+    /// Coverage of the final seed set over the final θ samples.
+    pub coverage: u64,
+    /// Final sample count θ.
+    pub theta: u64,
+    /// Martingale rounds executed (excluding the final selection).
+    pub rounds: u32,
+    /// Modeled parallel runtime (critical-path makespan, seconds).
+    pub sim_time: f64,
+    /// Phase breakdown of `sim_time`.
+    pub breakdown: Breakdown,
+    /// Modeled communication volumes.
+    pub volumes: CommVolume,
+    /// Receiver-side thread breakdown (streaming variants only).
+    pub receiver: ReceiverBreakdown,
+    /// Longest-running sender's simulated time (Fig. 4a).
+    pub sender_time_max: f64,
+    /// Receiver's simulated time (Fig. 4a).
+    pub receiver_time: f64,
+    /// Actual wall-clock of the whole simulation (diagnostics).
+    pub wall_time: f64,
+    /// Worst-case approximation ratio of the configuration.
+    pub worst_case_ratio: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(a: Algorithm) -> Config {
+        Config::new(100, 8, DiffusionModel::IC, a)
+    }
+
+    #[test]
+    fn trunc_limit() {
+        let c = cfg(Algorithm::GreediRisTrunc).with_alpha(0.125);
+        assert_eq!(c.trunc_limit(), 13); // ceil(12.5)
+        assert_eq!(cfg(Algorithm::GreediRis).trunc_limit(), 100);
+    }
+
+    #[test]
+    fn senders_count() {
+        assert_eq!(cfg(Algorithm::GreediRis).senders(), 7);
+        let mut c = cfg(Algorithm::GreediRis);
+        c.m = 1;
+        assert_eq!(c.senders(), 1);
+    }
+
+    #[test]
+    fn worst_case_ratios_ordered() {
+        let rip = cfg(Algorithm::Ripples).worst_case_ratio();
+        let gr = cfg(Algorithm::GreediRis).worst_case_ratio();
+        let tr = cfg(Algorithm::GreediRisTrunc).with_alpha(0.125).worst_case_ratio();
+        assert!(rip > gr, "{rip} vs {gr}");
+        assert!(gr > tr, "{gr} vs {tr}");
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in [
+            Algorithm::GreediRis,
+            Algorithm::GreediRisTrunc,
+            Algorithm::RandGreediOffline,
+            Algorithm::Ripples,
+            Algorithm::DiImm,
+        ] {
+            assert_eq!(a.as_str().parse::<Algorithm>().unwrap(), a);
+        }
+        assert!("bogus".parse::<Algorithm>().is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! The GreediRIS coordinator — the paper's system contribution (§3).
+//!
+//! Orchestrates the distributed RIS workflow over the virtual cluster:
+//!
+//! - S1 distributed sampling and S2 all-to-all shuffle ([`sampling`],
+//!   shared by every algorithm variant);
+//! - the streaming sender/receiver pipeline with optional truncation
+//!   ([`greediris`], paper §3.3–3.4);
+//! - the offline RandGreedi template used to motivate streaming
+//!   ([`randgreedi`], paper Table 2);
+//! - the real lock-free threaded receiver ([`receiver`], §3.4 S4);
+//! - the martingale/OPIM drivers gluing rounds together ([`pipeline`]).
+
+pub mod config;
+pub mod sampling;
+pub mod greediris;
+pub mod randgreedi;
+pub mod receiver;
+pub mod pipeline;
+
+pub use config::{Algorithm, Config, LocalSolver, RunResult};
+pub use pipeline::{run_infmax, run_infmax_with_scorer, run_opim, OpimResult};

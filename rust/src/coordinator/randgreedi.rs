@@ -1,0 +1,151 @@
+//! The offline RandGreedi template (paper §3.2, Algorithm 4) — local lazy
+//! greedy everywhere, then *gather* all local solutions at the global
+//! machine which runs an offline lazy greedy over the merged candidates.
+//!
+//! This is the variant whose global step becomes the bottleneck as `m`
+//! grows (paper Table 2), motivating the streaming receiver.
+
+use crate::coordinator::config::Config;
+use crate::coordinator::sampling::DistState;
+use crate::distributed::{collectives, Cluster};
+use crate::maxcover::{lazy_greedy_max_cover, CoverSolution, SetSystem};
+use crate::SampleId;
+
+/// Outcome of one offline RandGreedi round, with the Table-2 timings.
+pub struct OfflineRound {
+    pub solution: CoverSolution,
+    /// Longest local max-k-cover time (Table 2 row 1).
+    pub local_time: f64,
+    /// Global gather + merge + lazy greedy time (Table 2 row 2).
+    pub global_time: f64,
+    pub gather_bytes: u64,
+}
+
+/// Runs Algorithm 4 over the current shuffled state. Every rank (including
+/// rank 0) owns a partition and computes a local solution; rank 0 is the
+/// global machine.
+pub fn offline_round(cluster: &mut Cluster, state: &DistState, cfg: &Config) -> OfflineRound {
+    let m = cluster.m;
+    let k = cfg.k;
+    let t0 = cluster.barrier();
+
+    // Local solves (Alg. 4 line 2).
+    let mut locals: Vec<CoverSolution> = Vec::with_capacity(m);
+    let mut payloads: Vec<Vec<u32>> = Vec::with_capacity(m);
+    let mut local_time = 0.0f64;
+    for p in 0..m {
+        let system = state.system_at(p);
+        let ((sol, payload), secs) = cluster.run_compute(p, || {
+            let sol = lazy_greedy_max_cover(&system, k);
+            // Serialize (vertex, full covering subset) pairs for the gather.
+            let mut buf: Vec<u32> = Vec::new();
+            for &v in &sol.seeds {
+                let i = system.vertices.binary_search(&v).expect("seed from system");
+                buf.push(v);
+                buf.push(system.sets[i].len() as u32);
+                buf.extend_from_slice(&system.sets[i]);
+            }
+            (sol, buf)
+        });
+        local_time = local_time.max(secs);
+        locals.push(sol);
+        payloads.push(payload);
+    }
+
+    // Gather S' = union of local solutions at the global machine (line 3).
+    let gather_bytes: u64 = payloads
+        .iter()
+        .enumerate()
+        .filter(|(p, _)| *p != 0)
+        .map(|(_, b)| b.len() as u64 * 4)
+        .sum();
+    let t_gather_start = cluster.makespan();
+    let gathered = collectives::gather_at(cluster, 0, payloads, 4);
+
+    // Global lazy greedy over the merged candidates (line 4).
+    let (global_sol, global_solve_secs) = cluster.run_compute(0, || {
+        let mut vertices = Vec::new();
+        let mut sets: Vec<Vec<SampleId>> = Vec::new();
+        for buf in &gathered {
+            let mut i = 0usize;
+            while i < buf.len() {
+                let v = buf[i];
+                let cnt = buf[i + 1] as usize;
+                vertices.push(v);
+                sets.push(buf[i + 2..i + 2 + cnt].to_vec());
+                i += 2 + cnt;
+            }
+        }
+        let merged = SetSystem { theta: state.theta as usize, vertices, sets };
+        lazy_greedy_max_cover(&merged, k)
+    });
+    let global_time = cluster.now(0) - t_gather_start;
+    let _ = global_solve_secs;
+
+    // Final compare: best local vs global (lines 5-6), then broadcast.
+    let best_local = locals.into_iter().max_by_key(|s| s.coverage).unwrap_or_default();
+    let solution = if global_sol.coverage >= best_local.coverage { global_sol } else { best_local };
+    collectives::broadcast_cost(cluster, 0, (cfg.k as u64 + 1) * 4);
+    let _ = t0;
+
+    OfflineRound { solution, local_time, global_time, gather_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Algorithm;
+    use crate::coordinator::sampling::grow_to;
+    use crate::diffusion::DiffusionModel;
+    use crate::distributed::NetModel;
+    use crate::graph::generators;
+    use crate::graph::weights::WeightModel;
+    use crate::graph::Graph;
+
+    fn setup(m: usize, theta: u64) -> (Cluster, DistState, Config) {
+        let edges = generators::barabasi_albert(300, 4, 3);
+        let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 3);
+        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let cfg = Config::new(6, m, DiffusionModel::IC, Algorithm::RandGreediOffline);
+        let pool: Vec<usize> = (0..m).collect();
+        let mut st = DistState::new(g.n(), m, &pool, cfg.seed, 0, true);
+        grow_to(&mut cl, &g, &cfg, &mut st, theta);
+        (cl, st, cfg)
+    }
+
+    #[test]
+    fn offline_produces_valid_solution() {
+        let (mut cl, st, cfg) = setup(4, 256);
+        let r = offline_round(&mut cl, &st, &cfg);
+        assert!(!r.solution.seeds.is_empty());
+        assert!(r.solution.seeds.len() <= cfg.k);
+        assert!(r.gather_bytes > 0);
+    }
+
+    #[test]
+    fn global_beats_or_matches_every_local() {
+        let (mut cl, st, cfg) = setup(4, 512);
+        let r = offline_round(&mut cl, &st, &cfg);
+        for p in 0..4 {
+            let sys = st.system_at(p);
+            let local = lazy_greedy_max_cover(&sys, cfg.k);
+            assert!(r.solution.coverage >= local.coverage);
+        }
+    }
+
+    #[test]
+    fn single_rank_equals_sequential() {
+        let (mut cl, st, cfg) = setup(1, 128);
+        let r = offline_round(&mut cl, &st, &cfg);
+        let direct = lazy_greedy_max_cover(&st.system_at(0), cfg.k);
+        assert_eq!(r.solution.coverage, direct.coverage);
+    }
+
+    #[test]
+    fn times_are_recorded() {
+        let (mut cl, st, cfg) = setup(3, 256);
+        let r = offline_round(&mut cl, &st, &cfg);
+        assert!(r.local_time > 0.0);
+        assert!(r.global_time > 0.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! The real threaded, lock-free streaming receiver (paper §3.4 S4).
+//!
+//! Structure mirrors the paper exactly: one *communicating thread* drains
+//! the incoming seed stream (here an mpsc channel standing in for the MPI
+//! nonblocking receive) and publishes each `<x, S(x)>` into a shared
+//! append-only slot array `A` of capacity `m·k`, setting a per-slot flag
+//! atomically (a `OnceLock` publish). Each *bucketing thread* owns the
+//! buckets whose exponent falls in its residue class mod `t−1` and scans
+//! the slot array with its own cursor, spinning until the next flag is set
+//! — a lock-free single-writer multi-reader protocol; bucket updates need
+//! no synchronization because bucket ownership is disjoint, and every
+//! thread sees the identical element order, so the union of the threads'
+//! buckets is bit-identical to the sequential [`StreamingMaxCover`]
+//! (asserted by tests).
+//!
+//! This module proves the concurrency design executes correctly; the
+//! performance *model* of the receiver lives in
+//! [`crate::coordinator::greediris`] (DESIGN.md §3 explains why timing is
+//! simulated rather than measured on this 1-core host).
+
+use crate::maxcover::streaming::BucketBank;
+use crate::maxcover::CoverSolution;
+use crate::{SampleId, Vertex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, OnceLock};
+
+/// One published stream element.
+#[derive(Debug)]
+pub struct StreamItem {
+    pub vertex: Vertex,
+    pub ids: Vec<SampleId>,
+}
+
+/// Shared slot array `A` (paper: "the receiver maintains a shared array A of
+/// maximum size m·k" with atomic per-index flags).
+pub struct SlotArray {
+    slots: Vec<OnceLock<StreamItem>>,
+    /// Number of published slots (monotone).
+    published: AtomicUsize,
+    /// Set once the communicating thread has seen all sender terminations.
+    done: AtomicBool,
+}
+
+impl SlotArray {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            slots: (0..capacity).map(|_| OnceLock::new()).collect(),
+            published: AtomicUsize::new(0),
+            done: AtomicBool::new(false),
+        }
+    }
+
+    /// Publishes the next item (single writer). Returns its index.
+    pub fn publish(&self, item: StreamItem) -> usize {
+        let i = self.published.load(Ordering::Relaxed);
+        assert!(i < self.slots.len(), "slot array overflow (capacity m·k)");
+        self.slots[i].set(item).expect("single writer");
+        // Release so readers observing `published > i` see the slot data.
+        self.published.store(i + 1, Ordering::Release);
+        i
+    }
+
+    pub fn finish(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+
+    /// Reader-side: returns the item at `cursor` once available, or `None`
+    /// if the stream completed before reaching `cursor`.
+    pub fn wait_for(&self, cursor: usize) -> Option<&StreamItem> {
+        loop {
+            if self.published.load(Ordering::Acquire) > cursor {
+                return Some(self.slots[cursor].get().expect("published"));
+            }
+            if self.done.load(Ordering::Acquire)
+                && self.published.load(Ordering::Acquire) <= cursor
+            {
+                return None;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Statistics from a threaded-receiver run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ThreadedStats {
+    pub elements: usize,
+    pub buckets: usize,
+    pub bucket_threads: usize,
+}
+
+/// Runs the full threaded receiver over the `rx` stream with `t` threads
+/// (1 communicating + `t−1` bucketing), `capacity` = m·k slot bound.
+/// Returns the best-bucket solution and stats.
+pub fn run_threaded_receiver(
+    theta: usize,
+    k: usize,
+    delta: f64,
+    t: usize,
+    capacity: usize,
+    rx: mpsc::Receiver<StreamItem>,
+) -> (CoverSolution, ThreadedStats) {
+    let bucket_threads = t.saturating_sub(1).max(1);
+    let slots = Arc::new(SlotArray::new(capacity));
+
+    std::thread::scope(|scope| {
+        // Communicating thread: drain the channel into the slot array.
+        let slots_w = Arc::clone(&slots);
+        let comm = scope.spawn(move || {
+            let mut n = 0usize;
+            while let Ok(item) = rx.recv() {
+                slots_w.publish(item);
+                n += 1;
+            }
+            slots_w.finish();
+            n
+        });
+
+        // Bucketing threads: thread j owns buckets with exponent ≡ j
+        // (mod bucket_threads); all threads scan the same slot order.
+        let mut handles = Vec::new();
+        for j in 0..bucket_threads {
+            let slots_r = Arc::clone(&slots);
+            handles.push(scope.spawn(move || {
+                let mut bank = BucketBank::new(theta, k, delta, j, bucket_threads);
+                let mut cursor = 0usize;
+                while let Some(item) = slots_r.wait_for(cursor) {
+                    cursor += 1;
+                    bank.offer(item.vertex, &item.ids);
+                }
+                bank
+            }));
+        }
+
+        let elements = comm.join().expect("comm thread");
+        let mut best = CoverSolution::default();
+        let mut buckets = 0usize;
+        for h in handles {
+            let bank = h.join().expect("bucket thread");
+            buckets += bank.len();
+            let sol = bank.best();
+            if sol.coverage > best.coverage || best.is_empty() {
+                best = sol;
+            }
+        }
+        (best, ThreadedStats { elements, buckets, bucket_threads })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxcover::StreamingMaxCover;
+    use crate::rng::Xoshiro256pp;
+
+    fn random_stream(seed: u64, n: usize, theta: usize) -> Vec<StreamItem> {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        (0..n)
+            .map(|i| {
+                let len = 1 + rng.gen_range(24) as usize;
+                let mut ids: Vec<u32> =
+                    (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                StreamItem { vertex: i as u32, ids }
+            })
+            .collect()
+    }
+
+    fn run_sequential(items: &[StreamItem], theta: usize, k: usize, delta: f64) -> CoverSolution {
+        let mut s = StreamingMaxCover::new(theta, k, delta);
+        for it in items {
+            s.offer(it.vertex, &it.ids);
+        }
+        s.finalize()
+    }
+
+    #[test]
+    fn threaded_matches_sequential_bitwise() {
+        let theta = 512;
+        let k = 8;
+        let delta = 0.1;
+        for seed in 0..5u64 {
+            let items = random_stream(seed, 120, theta);
+            let expected = run_sequential(&items, theta, k, delta);
+            let (tx, rx) = mpsc::channel();
+            let sender_items: Vec<StreamItem> = items
+                .iter()
+                .map(|i| StreamItem { vertex: i.vertex, ids: i.ids.clone() })
+                .collect();
+            let h = std::thread::spawn(move || {
+                for it in sender_items {
+                    tx.send(it).unwrap();
+                }
+            });
+            let (got, stats) = run_threaded_receiver(theta, k, delta, 4, 200, rx);
+            h.join().unwrap();
+            assert_eq!(got.coverage, expected.coverage, "seed {seed}");
+            assert_eq!(got.seeds, expected.seeds, "seed {seed}");
+            assert_eq!(stats.elements, 120);
+        }
+    }
+
+    #[test]
+    fn works_with_single_bucketing_thread() {
+        let theta = 128;
+        let items = random_stream(9, 40, theta);
+        let expected = run_sequential(&items, theta, 4, 0.2);
+        let (tx, rx) = mpsc::channel();
+        for it in items {
+            tx.send(it).unwrap();
+        }
+        drop(tx);
+        let (got, _) = run_threaded_receiver(theta, 4, 0.2, 2, 64, rx);
+        assert_eq!(got.coverage, expected.coverage);
+    }
+
+    #[test]
+    fn more_threads_than_buckets() {
+        let theta = 128;
+        let items = random_stream(3, 30, theta);
+        let expected = run_sequential(&items, theta, 3, 0.3);
+        let (tx, rx) = mpsc::channel();
+        for it in items {
+            tx.send(it).unwrap();
+        }
+        drop(tx);
+        let (got, stats) = run_threaded_receiver(theta, 3, 0.3, 64, 64, rx);
+        assert_eq!(got.coverage, expected.coverage);
+        assert!(stats.bucket_threads >= stats.buckets);
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_solution() {
+        let (tx, rx) = mpsc::channel::<StreamItem>();
+        drop(tx);
+        let (got, stats) = run_threaded_receiver(64, 4, 0.1, 4, 16, rx);
+        assert!(got.is_empty());
+        assert_eq!(stats.elements, 0);
+    }
+
+    #[test]
+    fn slot_array_publish_wait() {
+        let a = SlotArray::new(4);
+        a.publish(StreamItem { vertex: 1, ids: vec![0] });
+        assert_eq!(a.wait_for(0).unwrap().vertex, 1);
+        a.finish();
+        assert!(a.wait_for(1).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn slot_array_overflow_panics() {
+        let a = SlotArray::new(1);
+        a.publish(StreamItem { vertex: 1, ids: vec![] });
+        a.publish(StreamItem { vertex: 2, ids: vec![] });
+    }
+}

@@ -1,0 +1,342 @@
+//! S1 (distributed sampling) and S2 (all-to-all shuffle) — shared by every
+//! algorithm variant (paper §3.4, Fig. 1).
+//!
+//! Samples carry *global* ids `[p·θ̂/m, (p+1)·θ̂/m)` per generating rank so
+//! ranks claim disjoint intervals; the leap-frog RNG makes the sample content
+//! a pure function of the global id, so results are invariant to `m`.
+//! When θ̂ doubles between martingale rounds, only the new half is generated
+//! and shuffled (the paper: "we retain the previous batch of samples and
+//! simply add the second half").
+
+use crate::coordinator::config::Config;
+use crate::distributed::{collectives, Cluster};
+use crate::maxcover::SetSystem;
+use crate::rng::{domains, stream_for};
+use crate::sampling::{RrrSampler, SampleBatch};
+use crate::graph::Graph;
+use crate::{SampleId, Vertex};
+use std::collections::HashMap;
+
+/// Distributed sampling/shuffle state, persisted across martingale rounds.
+pub struct DistState {
+    /// Samples generated so far (global θ̂).
+    pub theta: u64,
+    /// Offset added to sample ids when deriving RNG streams — the final
+    /// selection phase uses a disjoint id space so its samples are fresh
+    /// (the Chen 2018 correction).
+    pub id_base: u64,
+    /// Owner rank of each vertex (uniform random partition over the sender
+    /// pool, drawn once per phase).
+    pub owner: Vec<u32>,
+    /// Accumulated covering subsets at each owner rank:
+    /// `covers[rank][vertex] -> sorted sample ids`.
+    pub covers: Vec<HashMap<Vertex, Vec<SampleId>>>,
+    /// Per generating rank, the batches it generated (kept for the
+    /// reduction-based baselines, which never shuffle).
+    pub local_batches: Vec<Vec<SampleBatch>>,
+    /// Whether S2 runs (baselines skip the shuffle).
+    pub do_shuffle: bool,
+}
+
+/// Timing/volume record of one `grow_to` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GrowStats {
+    pub sampling_time: f64,
+    pub alltoall_time: f64,
+    pub alltoall_bytes: u64,
+}
+
+impl DistState {
+    /// `owner_pool`: ranks eligible to own vertex partitions (all ranks for
+    /// offline RandGreedi; ranks `1..m` for streaming so rank 0 stays a pure
+    /// receiver, per §3.4 S2).
+    pub fn new(n: usize, m: usize, owner_pool: &[usize], seed: u64, id_base: u64, do_shuffle: bool) -> Self {
+        assert!(!owner_pool.is_empty());
+        let owner = (0..n)
+            .map(|v| {
+                let mut s = stream_for(seed, domains::PARTITION, id_base ^ v as u64);
+                owner_pool[s.gen_range(owner_pool.len() as u64) as usize] as u32
+            })
+            .collect();
+        Self {
+            theta: 0,
+            id_base,
+            owner,
+            covers: (0..m).map(|_| HashMap::new()).collect(),
+            local_batches: (0..m).map(|_| Vec::new()).collect(),
+            do_shuffle,
+        }
+    }
+
+    /// Materializes rank `p`'s accumulated covering sets as a [`SetSystem`]
+    /// over the current θ̂ universe.
+    pub fn system_at(&self, p: usize) -> SetSystem {
+        let mut vertices: Vec<Vertex> = self.covers[p].keys().copied().collect();
+        vertices.sort_unstable();
+        let sets = vertices
+            .iter()
+            .map(|v| self.covers[p][v].clone())
+            .collect();
+        SetSystem { theta: self.theta as usize, vertices, sets }
+    }
+
+    /// Total covering entries at rank `p` (diagnostics).
+    pub fn entries_at(&self, p: usize) -> usize {
+        self.covers[p].values().map(Vec::len).sum()
+    }
+
+    /// Contents of local sample `sid` held by rank `p` (global id). Batches
+    /// are appended in id order, so a linear scan over the few per-round
+    /// batches suffices.
+    pub fn sample_contents(&self, p: usize, sid: SampleId) -> &[Vertex] {
+        for b in &self.local_batches[p] {
+            let lo = b.first_id;
+            let hi = lo + b.sets.len() as SampleId;
+            if sid >= lo && sid < hi {
+                return &b.sets[(sid - lo) as usize];
+            }
+        }
+        panic!("sample {sid} not held by rank {p}");
+    }
+}
+
+/// Grows the global sample pool to `target_theta`: distributed generation
+/// (S1) followed by the shuffle of the new samples (S2). Returns the phase
+/// stats; rank clocks inside `cluster` are advanced as a side effect.
+pub fn grow_to(
+    cluster: &mut Cluster,
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    target_theta: u64,
+) -> GrowStats {
+    let m = cluster.m;
+    let mut stats = GrowStats::default();
+    if target_theta <= state.theta {
+        return stats;
+    }
+    let new_total = target_theta - state.theta;
+    // Block-partition the new ids across ranks.
+    let per_rank = new_total.div_ceil(m as u64);
+    let mut new_batches: Vec<SampleBatch> = Vec::with_capacity(m);
+    let t_before = cluster.makespan();
+    for p in 0..m {
+        let lo = state.theta + (p as u64) * per_rank;
+        let hi = (lo + per_rank).min(target_theta);
+        if lo >= hi {
+            new_batches.push(SampleBatch { first_id: lo as SampleId, sets: vec![], roots: vec![] });
+            continue;
+        }
+        let (batch, _) = cluster.run_compute_scaled(p, cfg.node_threads, || {
+            let mut sampler = RrrSampler::new(graph, cfg.model, cfg.seed ^ state.id_base);
+            let mut b = sampler.batch(lo as SampleId, (hi - lo) as usize);
+            // Store ids relative to the phase-local universe.
+            b.first_id = lo as SampleId;
+            b
+        });
+        new_batches.push(batch);
+    }
+    let t_sampled = cluster.barrier();
+    stats.sampling_time = t_sampled - t_before;
+
+    if state.do_shuffle {
+        // Build per-(src,dst) flat payloads: [v, count, ids...] streams.
+        let mut outbox: Vec<Vec<Vec<u32>>> = Vec::with_capacity(m);
+        for (p, batch) in new_batches.iter().enumerate() {
+            let (rankbox, _) = cluster.run_compute(p, || {
+                // Invert this rank's new samples into partial covering sets.
+                let mut partial: HashMap<Vertex, Vec<SampleId>> = HashMap::new();
+                for (j, set) in batch.sets.iter().enumerate() {
+                    let sid = batch.first_id + j as SampleId;
+                    for &v in set {
+                        partial.entry(v).or_default().push(sid);
+                    }
+                }
+                let mut rb: Vec<Vec<u32>> = (0..m).map(|_| Vec::new()).collect();
+                let mut keys: Vec<Vertex> = partial.keys().copied().collect();
+                keys.sort_unstable();
+                for v in keys {
+                    let ids = &partial[&v];
+                    let dst = state.owner[v as usize] as usize;
+                    let buf = &mut rb[dst];
+                    buf.push(v);
+                    buf.push(ids.len() as u32);
+                    buf.extend_from_slice(ids);
+                }
+                rb
+            });
+            outbox.push(rankbox);
+        }
+        stats.alltoall_bytes = outbox
+            .iter()
+            .enumerate()
+            .map(|(src, row)| {
+                row.iter()
+                    .enumerate()
+                    .filter(|(dst, _)| *dst != src)
+                    .map(|(_, v)| v.len() as u64 * 4)
+                    .sum::<u64>()
+            })
+            .sum();
+        let t_pre = cluster.makespan();
+        let inbox = collectives::all_to_allv(cluster, outbox, 4);
+        // Merge received partial covers into the accumulated state.
+        for (dst, streams) in inbox.into_iter().enumerate() {
+            let covers = &mut state.covers[dst];
+            let ((), _) = cluster.run_compute(dst, || {
+                for s in streams {
+                    let mut i = 0usize;
+                    while i < s.len() {
+                        let v = s[i];
+                        let cnt = s[i + 1] as usize;
+                        let ids = &s[i + 2..i + 2 + cnt];
+                        covers.entry(v).or_default().extend_from_slice(ids);
+                        i += 2 + cnt;
+                    }
+                }
+            });
+        }
+        let t_post = cluster.barrier();
+        stats.alltoall_time = t_post - t_pre;
+    }
+
+    for (p, b) in new_batches.into_iter().enumerate() {
+        state.local_batches[p].push(b);
+    }
+    state.theta = target_theta;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Algorithm;
+    use crate::diffusion::DiffusionModel;
+    use crate::distributed::NetModel;
+    use crate::graph::generators;
+    use crate::graph::weights::WeightModel;
+
+    fn small_graph() -> Graph {
+        let edges = generators::erdos_renyi(200, 1200, 11);
+        Graph::from_edges(200, &edges, WeightModel::UniformIc { max: 0.1 }, 11)
+    }
+
+    fn cfg(m: usize) -> Config {
+        Config::new(10, m, DiffusionModel::IC, Algorithm::GreediRis)
+    }
+
+    #[test]
+    fn grow_generates_exactly_theta_samples() {
+        let g = small_graph();
+        let mut cl = Cluster::new(4, NetModel::free());
+        let c = cfg(4);
+        let mut st = DistState::new(g.n(), 4, &[1, 2, 3], c.seed, 0, true);
+        grow_to(&mut cl, &g, &c, &mut st, 100);
+        let total: usize = st.local_batches.iter().flat_map(|bs| bs.iter().map(|b| b.sets.len())).sum();
+        assert_eq!(total, 100);
+        assert_eq!(st.theta, 100);
+    }
+
+    #[test]
+    fn incremental_growth_only_adds_new() {
+        let g = small_graph();
+        let mut cl = Cluster::new(2, NetModel::free());
+        let c = cfg(2);
+        let mut st = DistState::new(g.n(), 2, &[1], c.seed, 0, true);
+        grow_to(&mut cl, &g, &c, &mut st, 50);
+        let entries_before = st.entries_at(1);
+        grow_to(&mut cl, &g, &c, &mut st, 100);
+        assert_eq!(st.theta, 100);
+        assert!(st.entries_at(1) >= entries_before);
+        let total: usize = st.local_batches.iter().flat_map(|bs| bs.iter().map(|b| b.sets.len())).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn shuffle_routes_every_entry_to_owner() {
+        let g = small_graph();
+        let mut cl = Cluster::new(4, NetModel::free());
+        let c = cfg(4);
+        let mut st = DistState::new(g.n(), 4, &[1, 2, 3], c.seed, 0, true);
+        grow_to(&mut cl, &g, &c, &mut st, 200);
+        // Every vertex's covering set must live at its owner, and rank 0
+        // (receiver) must own nothing.
+        assert!(st.covers[0].is_empty());
+        for p in 1..4 {
+            for v in st.covers[p].keys() {
+                assert_eq!(st.owner[*v as usize] as usize, p);
+            }
+        }
+        // Union of covering entries equals total sample entries.
+        let total_entries: usize = (0..4).map(|p| st.entries_at(p)).sum();
+        let sample_entries: usize = st
+            .local_batches
+            .iter()
+            .flat_map(|bs| bs.iter().map(|b| b.total_entries()))
+            .sum();
+        assert_eq!(total_entries, sample_entries);
+    }
+
+    #[test]
+    fn sample_content_invariant_to_m() {
+        // Leap-frog: the union of covering sets must be identical for any m.
+        let g = small_graph();
+        let mut collect = |m: usize| -> Vec<(Vertex, Vec<SampleId>)> {
+            let mut cl = Cluster::new(m, NetModel::free());
+            let c = cfg(m);
+            let pool: Vec<usize> = if m == 1 { vec![0] } else { (1..m).collect() };
+            let mut st = DistState::new(g.n(), m, &pool, c.seed, 0, true);
+            grow_to(&mut cl, &g, &c, &mut st, 64);
+            let mut all: Vec<(Vertex, Vec<SampleId>)> = Vec::new();
+            for p in 0..m {
+                for (v, ids) in &st.covers[p] {
+                    let mut ids = ids.clone();
+                    ids.sort_unstable();
+                    all.push((*v, ids));
+                }
+            }
+            all.sort();
+            all
+        };
+        assert_eq!(collect(2), collect(5));
+    }
+
+    #[test]
+    fn fresh_id_base_gives_different_samples() {
+        let g = small_graph();
+        let mut cl = Cluster::new(2, NetModel::free());
+        let c = cfg(2);
+        let mut a = DistState::new(g.n(), 2, &[1], c.seed, 0, true);
+        let mut b = DistState::new(g.n(), 2, &[1], c.seed, 1 << 32, true);
+        grow_to(&mut cl, &g, &c, &mut a, 32);
+        grow_to(&mut cl, &g, &c, &mut b, 32);
+        let ra: Vec<_> = a.local_batches.iter().flat_map(|bs| bs.iter().flat_map(|x| x.roots.clone())).collect();
+        let rb: Vec<_> = b.local_batches.iter().flat_map(|bs| bs.iter().flat_map(|x| x.roots.clone())).collect();
+        assert_ne!(ra, rb, "fresh phase must draw fresh roots");
+    }
+
+    #[test]
+    fn baselines_skip_shuffle() {
+        let g = small_graph();
+        let mut cl = Cluster::new(3, NetModel::slingshot());
+        let c = cfg(3);
+        let mut st = DistState::new(g.n(), 3, &[0, 1, 2], c.seed, 0, false);
+        let stats = grow_to(&mut cl, &g, &c, &mut st, 60);
+        assert_eq!(stats.alltoall_bytes, 0);
+        assert_eq!(stats.alltoall_time, 0.0);
+        assert!(st.covers.iter().all(HashMap::is_empty));
+    }
+
+    #[test]
+    fn owners_uniformish() {
+        let st = DistState::new(10_000, 9, &[1, 2, 3, 4, 5, 6, 7, 8], 7, 0, true);
+        let mut counts = vec![0usize; 9];
+        for &o in &st.owner {
+            counts[o as usize] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        for &c in &counts[1..] {
+            assert!((900..1600).contains(&c), "count {c}");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Diffusion models (§2 of the paper) and the Monte-Carlo spread evaluator
+//! used for the quality columns of the evaluation (§4.1: "average number of
+//! node activations over 5 simulations of the diffusion models").
+
+mod spread;
+
+pub use spread::{evaluate_spread, simulate_ic_once, simulate_lt_once, SpreadEstimate};
+
+/// The stochastic diffusion process `M`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DiffusionModel {
+    /// Independent Cascade: each newly-activated `u` gets one chance to
+    /// activate each out-neighbor `v` with probability `p(u,v)`.
+    IC,
+    /// Linear Threshold: `v` activates once the weight of its active
+    /// in-neighbors reaches a uniformly drawn threshold `tau_v`.
+    LT,
+}
+
+impl DiffusionModel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DiffusionModel::IC => "IC",
+            DiffusionModel::LT => "LT",
+        }
+    }
+}
+
+impl std::str::FromStr for DiffusionModel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_uppercase().as_str() {
+            "IC" => Ok(DiffusionModel::IC),
+            "LT" => Ok(DiffusionModel::LT),
+            other => Err(format!("unknown diffusion model '{other}' (expected IC or LT)")),
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Monte-Carlo estimation of the expected influence spread σ(S).
+//!
+//! This is the *evaluation* path only — seed selection never calls it. It is
+//! the ground-truth oracle for the paper's quality comparison: seed sets from
+//! different algorithms are scored by averaging activations over `sims`
+//! forward simulations (the paper uses 5).
+
+use super::DiffusionModel;
+use crate::graph::Graph;
+use crate::rng::{domains, stream_for, Xoshiro256pp};
+use crate::Vertex;
+
+/// Result of a Monte-Carlo spread evaluation.
+#[derive(Clone, Debug)]
+pub struct SpreadEstimate {
+    /// Mean activations per simulation (includes the seeds themselves).
+    pub mean: f64,
+    /// Sample standard deviation across simulations.
+    pub stddev: f64,
+    /// Number of simulations run.
+    pub sims: usize,
+}
+
+/// One forward IC cascade from `seeds`; returns total activations.
+pub fn simulate_ic_once(g: &Graph, seeds: &[Vertex], rng: &mut Xoshiro256pp) -> usize {
+    let n = g.n();
+    let mut active = vec![false; n];
+    let mut frontier: Vec<Vertex> = Vec::new();
+    for &s in seeds {
+        if !active[s as usize] {
+            active[s as usize] = true;
+            frontier.push(s);
+        }
+    }
+    let mut count = frontier.len();
+    let mut next: Vec<Vertex> = Vec::new();
+    while !frontier.is_empty() {
+        next.clear();
+        for &u in &frontier {
+            let ns = g.fwd.neighbors(u);
+            let ts = g.fwd.edge_thresholds(u);
+            // Coin first: the ~95% of edges that fail the trial never touch
+            // the `active` array (a random memory access) — §Perf L3-1.
+            for (&v, &t) in ns.iter().zip(ts) {
+                if rng.coin(t) && !active[v as usize] {
+                    active[v as usize] = true;
+                    next.push(v);
+                }
+            }
+        }
+        count += next.len();
+        std::mem::swap(&mut frontier, &mut next);
+    }
+    count
+}
+
+/// One forward LT cascade from `seeds`; thresholds `tau_v ~ U[0,1)` are drawn
+/// fresh per simulation. Returns total activations.
+pub fn simulate_lt_once(g: &Graph, seeds: &[Vertex], rng: &mut Xoshiro256pp) -> usize {
+    let n = g.n();
+    let mut threshold = vec![0f32; n];
+    for t in threshold.iter_mut() {
+        *t = rng.next_f32();
+    }
+    let mut active = vec![false; n];
+    let mut incoming = vec![0f32; n]; // accumulated active in-weight
+    let mut frontier: Vec<Vertex> = Vec::new();
+    for &s in seeds {
+        if !active[s as usize] {
+            active[s as usize] = true;
+            frontier.push(s);
+        }
+    }
+    let mut count = frontier.len();
+    let mut next: Vec<Vertex> = Vec::new();
+    while !frontier.is_empty() {
+        next.clear();
+        for &u in &frontier {
+            let ns = g.fwd.neighbors(u);
+            let ws = g.fwd.edge_weights(u);
+            for (&v, &w) in ns.iter().zip(ws) {
+                if !active[v as usize] {
+                    incoming[v as usize] += w;
+                    if incoming[v as usize] >= threshold[v as usize] {
+                        active[v as usize] = true;
+                        next.push(v);
+                    }
+                }
+            }
+        }
+        count += next.len();
+        std::mem::swap(&mut frontier, &mut next);
+    }
+    count
+}
+
+/// Averages `sims` forward simulations of `model` from `seeds`.
+pub fn evaluate_spread(
+    g: &Graph,
+    seeds: &[Vertex],
+    model: DiffusionModel,
+    sims: usize,
+    seed: u64,
+) -> SpreadEstimate {
+    let mut vals = Vec::with_capacity(sims);
+    for i in 0..sims {
+        let mut rng = stream_for(seed, domains::SPREAD, i as u64);
+        let v = match model {
+            DiffusionModel::IC => simulate_ic_once(g, seeds, &mut rng),
+            DiffusionModel::LT => simulate_lt_once(g, seeds, &mut rng),
+        } as f64;
+        vals.push(v);
+    }
+    let mean = vals.iter().sum::<f64>() / sims.max(1) as f64;
+    let var = if sims > 1 {
+        vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (sims - 1) as f64
+    } else {
+        0.0
+    };
+    SpreadEstimate { mean, stddev: var.sqrt(), sims }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::weights::WeightModel;
+
+    fn path_graph(p: f32) -> Graph {
+        // 0 -> 1 -> 2 -> 3
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)], WeightModel::Const(p), 1)
+    }
+
+    #[test]
+    fn ic_prob_one_reaches_everything() {
+        let g = path_graph(1.0);
+        let mut rng = Xoshiro256pp::seeded(1);
+        assert_eq!(simulate_ic_once(&g, &[0], &mut rng), 4);
+    }
+
+    #[test]
+    fn ic_prob_zero_only_seeds() {
+        let g = path_graph(0.0);
+        let mut rng = Xoshiro256pp::seeded(1);
+        assert_eq!(simulate_ic_once(&g, &[0, 2], &mut rng), 2);
+    }
+
+    #[test]
+    fn ic_expected_value_on_single_edge() {
+        // One edge with p = 0.3: E[spread from {0}] = 1 + 0.3 = 1.3.
+        let g = Graph::from_edges(2, &[(0, 1)], WeightModel::Const(0.3), 1);
+        let est = evaluate_spread(&g, &[0], DiffusionModel::IC, 20_000, 7);
+        assert!((est.mean - 1.3).abs() < 0.02, "mean {}", est.mean);
+    }
+
+    #[test]
+    fn lt_full_weight_always_activates() {
+        // in-weight 1.0 >= any threshold in [0,1).
+        let g = path_graph(1.0);
+        let mut rng = Xoshiro256pp::seeded(5);
+        assert_eq!(simulate_lt_once(&g, &[0], &mut rng), 4);
+    }
+
+    #[test]
+    fn lt_expected_value_matches_weight() {
+        // Single edge with weight w: activation prob = P(tau <= w) = w.
+        let g = Graph::from_edges(2, &[(0, 1)], WeightModel::Const(0.4), 1);
+        let est = evaluate_spread(&g, &[0], DiffusionModel::LT, 20_000, 7);
+        assert!((est.mean - 1.4).abs() < 0.02, "mean {}", est.mean);
+    }
+
+    #[test]
+    fn duplicate_seeds_counted_once() {
+        let g = path_graph(0.0);
+        let mut rng = Xoshiro256pp::seeded(1);
+        assert_eq!(simulate_ic_once(&g, &[0, 0, 0], &mut rng), 1);
+    }
+
+    #[test]
+    fn spread_monotone_in_seed_set() {
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1), (1, 2), (3, 4), (4, 5)],
+            WeightModel::Const(0.5),
+            1,
+        );
+        let a = evaluate_spread(&g, &[0], DiffusionModel::IC, 4000, 3).mean;
+        let b = evaluate_spread(&g, &[0, 3], DiffusionModel::IC, 4000, 3).mean;
+        assert!(b > a, "adding a seed in a disjoint component must help");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = path_graph(0.5);
+        let a = evaluate_spread(&g, &[0], DiffusionModel::IC, 100, 11);
+        let b = evaluate_spread(&g, &[0], DiffusionModel::IC, 100, 11);
+        assert_eq!(a.mean, b.mean);
+    }
+}

@@ -1,0 +1,183 @@
+//! Per-rank simulated clocks and the measurement harness.
+//!
+//! Every rank owns a clock (seconds). Real compute executed on behalf of a
+//! rank is measured with `Instant` and added to that rank's clock (scaled by
+//! `compute_scale`, which models the intra-node OpenMP parallelism of the
+//! paper's 64-core nodes for embarrassingly parallel phases). Communication
+//! primitives add modeled α-β costs. The experiment's reported runtime is
+//! [`Cluster::makespan`].
+
+use super::netmodel::NetModel;
+use std::time::Instant;
+
+/// Per-rank time breakdown (for the Fig. 4-style reports).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankClock {
+    /// Current simulated time of this rank (seconds).
+    pub now: f64,
+    /// Accumulated compute seconds (subset of `now`).
+    pub compute: f64,
+    /// Accumulated communication seconds (subset of `now`).
+    pub comm: f64,
+    /// Accumulated idle/wait seconds (barrier skew).
+    pub idle: f64,
+}
+
+/// The virtual cluster of `m` ranks.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub m: usize,
+    pub net: NetModel,
+    pub clocks: Vec<RankClock>,
+    /// Divisor applied to *measured* compute before charging clocks.
+    /// `1.0` = this machine's single-thread speed is one paper-node;
+    /// `64.0` models the paper's fully-parallel intra-node phases.
+    pub compute_scale: f64,
+}
+
+impl Cluster {
+    pub fn new(m: usize, net: NetModel) -> Self {
+        assert!(m >= 1);
+        Self { m, net, clocks: vec![RankClock::default(); m], compute_scale: 1.0 }
+    }
+
+    pub fn with_compute_scale(mut self, s: f64) -> Self {
+        assert!(s > 0.0);
+        self.compute_scale = s;
+        self
+    }
+
+    /// Runs `f` as rank `rank`'s compute, measuring wall-clock and charging
+    /// the rank's clock. Returns `f`'s result and the charged seconds.
+    pub fn run_compute<R>(&mut self, rank: usize, f: impl FnOnce() -> R) -> (R, f64) {
+        let scale = self.compute_scale;
+        self.run_compute_scaled(rank, scale, f)
+    }
+
+    /// Like [`Self::run_compute`] but with an explicit scale for this call —
+    /// used to distinguish intra-node-parallel phases (sampling, which the
+    /// paper parallelizes over 64 OpenMP threads) from inherently sequential
+    /// ones (the lazy-greedy selection loop).
+    pub fn run_compute_scaled<R>(&mut self, rank: usize, scale: f64, f: impl FnOnce() -> R) -> (R, f64) {
+        let t0 = Instant::now();
+        let r = f();
+        let secs = t0.elapsed().as_secs_f64() / scale;
+        self.charge_compute(rank, secs);
+        (r, secs)
+    }
+
+    #[inline]
+    pub fn charge_compute(&mut self, rank: usize, secs: f64) {
+        let c = &mut self.clocks[rank];
+        c.now += secs;
+        c.compute += secs;
+    }
+
+    #[inline]
+    pub fn charge_comm(&mut self, rank: usize, secs: f64) {
+        let c = &mut self.clocks[rank];
+        c.now += secs;
+        c.comm += secs;
+    }
+
+    /// Advances `rank` to at least `t`, accounting the gap as idle time.
+    #[inline]
+    pub fn wait_until(&mut self, rank: usize, t: f64) {
+        let c = &mut self.clocks[rank];
+        if t > c.now {
+            c.idle += t - c.now;
+            c.now = t;
+        }
+    }
+
+    /// Synchronizes all ranks to the latest clock (barrier); the skew is
+    /// accounted as idle time. Returns the barrier time.
+    pub fn barrier(&mut self) -> f64 {
+        let t = self.makespan();
+        for r in 0..self.m {
+            self.wait_until(r, t);
+        }
+        t
+    }
+
+    /// Current critical-path time.
+    pub fn makespan(&self) -> f64 {
+        self.clocks.iter().map(|c| c.now).fold(0.0, f64::max)
+    }
+
+    pub fn now(&self, rank: usize) -> f64 {
+        self.clocks[rank].now
+    }
+
+    /// Total compute across ranks (useful for efficiency metrics).
+    pub fn total_compute(&self) -> f64 {
+        self.clocks.iter().map(|c| c.compute).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clocks_start_at_zero() {
+        let c = Cluster::new(4, NetModel::free());
+        assert_eq!(c.makespan(), 0.0);
+    }
+
+    #[test]
+    fn compute_charging_and_measurement() {
+        let mut c = Cluster::new(2, NetModel::free());
+        let (val, secs) = c.run_compute(0, || {
+            let mut s = 0u64;
+            for i in 0..100_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(val > 0);
+        assert!(secs >= 0.0);
+        assert_eq!(c.now(0), c.clocks[0].compute);
+        assert_eq!(c.now(1), 0.0);
+    }
+
+    #[test]
+    fn compute_scale_divides() {
+        let mut a = Cluster::new(1, NetModel::free());
+        let mut b = Cluster::new(1, NetModel::free()).with_compute_scale(10.0);
+        a.charge_compute(0, 1.0);
+        b.charge_compute(0, 1.0); // explicit charges are not scaled
+        assert_eq!(a.now(0), b.now(0));
+        let (_, sa) = a.run_compute(0, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        let (_, sb) = b.run_compute(0, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(sb < sa, "scaled compute must charge less: {sb} vs {sa}");
+    }
+
+    #[test]
+    fn barrier_syncs_and_accounts_idle() {
+        let mut c = Cluster::new(3, NetModel::free());
+        c.charge_compute(0, 5.0);
+        c.charge_compute(1, 2.0);
+        let t = c.barrier();
+        assert_eq!(t, 5.0);
+        assert_eq!(c.now(2), 5.0);
+        assert_eq!(c.clocks[2].idle, 5.0);
+        assert_eq!(c.clocks[1].idle, 3.0);
+        assert_eq!(c.clocks[0].idle, 0.0);
+    }
+
+    #[test]
+    fn wait_until_never_rewinds() {
+        let mut c = Cluster::new(1, NetModel::free());
+        c.charge_compute(0, 10.0);
+        c.wait_until(0, 4.0);
+        assert_eq!(c.now(0), 10.0);
+    }
+
+    #[test]
+    fn makespan_is_max() {
+        let mut c = Cluster::new(4, NetModel::free());
+        c.charge_comm(2, 7.5);
+        assert_eq!(c.makespan(), 7.5);
+    }
+}

@@ -1,0 +1,181 @@
+//! Collective operations over the virtual cluster: real data movement plus
+//! modeled wire time, with bulk-synchronous timing semantics (all ranks
+//! enter, synchronize, then each pays its own cost).
+
+use super::cluster::Cluster;
+
+/// Personalized all-to-all ("MPI_Alltoallv"): `outbox[src][dst]` becomes
+/// `inbox[dst][src]`. Charges each rank the α-β all-to-all cost for its own
+/// send+receive volume (`elem_bytes` per element).
+pub fn all_to_allv<T>(
+    cluster: &mut Cluster,
+    outbox: Vec<Vec<Vec<T>>>,
+    elem_bytes: u64,
+) -> Vec<Vec<Vec<T>>> {
+    let m = cluster.m;
+    assert_eq!(outbox.len(), m);
+    for row in &outbox {
+        assert_eq!(row.len(), m);
+    }
+    // Volumes before moving the data out.
+    let send_bytes: Vec<u64> = outbox
+        .iter()
+        .map(|row| row.iter().map(|v| v.len() as u64 * elem_bytes).sum())
+        .collect();
+    let mut recv_bytes = vec![0u64; m];
+    for (src, row) in outbox.iter().enumerate() {
+        for (dst, v) in row.iter().enumerate() {
+            if dst != src {
+                recv_bytes[dst] += v.len() as u64 * elem_bytes;
+            }
+        }
+    }
+    // Barrier: the exchange starts when the last rank arrives.
+    cluster.barrier();
+    for r in 0..m {
+        let cost = cluster.net.all_to_all(m, send_bytes[r], recv_bytes[r]);
+        cluster.charge_comm(r, cost);
+    }
+    // Transpose: inbox[dst][src].
+    let mut inbox: Vec<Vec<Vec<T>>> = (0..m).map(|_| Vec::with_capacity(m)).collect();
+    let mut staging: Vec<Vec<Option<Vec<T>>>> =
+        (0..m).map(|_| (0..m).map(|_| None).collect()).collect();
+    for (src, row) in outbox.into_iter().enumerate() {
+        for (dst, v) in row.into_iter().enumerate() {
+            staging[dst][src] = Some(v);
+        }
+    }
+    for (dst, row) in staging.into_iter().enumerate() {
+        for v in row {
+            inbox[dst].push(v.expect("filled above"));
+        }
+    }
+    inbox
+}
+
+/// Allreduce-sum of per-rank `u32` vectors (the Ripples baseline's
+/// k-iteration frequency reduction). Returns the elementwise sum, charging
+/// every rank the Rabenseifner cost.
+pub fn allreduce_sum_u32(cluster: &mut Cluster, contributions: &[Vec<u32>]) -> Vec<u32> {
+    let m = cluster.m;
+    assert_eq!(contributions.len(), m);
+    let len = contributions[0].len();
+    let bytes = (len * 4) as u64;
+    cluster.barrier();
+    for r in 0..m {
+        let cost = cluster.net.allreduce(m, bytes);
+        cluster.charge_comm(r, cost);
+    }
+    let mut out = vec![0u32; len];
+    for c in contributions {
+        assert_eq!(c.len(), len);
+        for (o, &x) in out.iter_mut().zip(c) {
+            *o = o.wrapping_add(x);
+        }
+    }
+    out
+}
+
+/// Gather variable-sized payloads at `root`; returns them indexed by source
+/// rank. Charges the root the full-volume gather cost and each sender a
+/// point-to-point cost.
+pub fn gather_at<T>(cluster: &mut Cluster, root: usize, payloads: Vec<Vec<T>>, elem_bytes: u64) -> Vec<Vec<T>> {
+    let m = cluster.m;
+    assert_eq!(payloads.len(), m);
+    cluster.barrier();
+    let mut total = 0u64;
+    for (r, p) in payloads.iter().enumerate() {
+        if r != root {
+            let b = p.len() as u64 * elem_bytes;
+            total += b;
+            let cost = cluster.net.p2p(b);
+            cluster.charge_comm(r, cost);
+        }
+    }
+    let root_cost = cluster.net.tau * ((m as f64).log2().ceil()) + cluster.net.mu * total as f64;
+    cluster.charge_comm(root, root_cost);
+    payloads
+}
+
+/// Broadcast `bytes` from `root` to everyone (charging only; the caller
+/// already holds the value — in-process there is nothing to move).
+pub fn broadcast_cost(cluster: &mut Cluster, _root: usize, bytes: u64) {
+    let m = cluster.m;
+    cluster.barrier();
+    for r in 0..m {
+        let cost = cluster.net.broadcast(m, bytes);
+        cluster.charge_comm(r, cost);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::netmodel::NetModel;
+
+    #[test]
+    fn all_to_all_transposes() {
+        let mut c = Cluster::new(3, NetModel::free());
+        // outbox[src][dst] = vec![src*10 + dst]
+        let outbox: Vec<Vec<Vec<u32>>> = (0..3)
+            .map(|s| (0..3).map(|d| vec![(s * 10 + d) as u32]).collect())
+            .collect();
+        let inbox = all_to_allv(&mut c, outbox, 4);
+        for dst in 0..3 {
+            for src in 0..3 {
+                assert_eq!(inbox[dst][src], vec![(src * 10 + dst) as u32]);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_charges_time() {
+        let mut c = Cluster::new(4, NetModel::slingshot());
+        let outbox: Vec<Vec<Vec<u32>>> = (0..4)
+            .map(|_| (0..4).map(|_| vec![0u32; 1000]).collect())
+            .collect();
+        let _ = all_to_allv(&mut c, outbox, 4);
+        for r in 0..4 {
+            assert!(c.clocks[r].comm > 0.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_sums_elementwise() {
+        let mut c = Cluster::new(3, NetModel::free());
+        let parts = vec![vec![1u32, 2, 3], vec![10, 20, 30], vec![100, 200, 300]];
+        let sum = allreduce_sum_u32(&mut c, &parts);
+        assert_eq!(sum, vec![111, 222, 333]);
+    }
+
+    #[test]
+    fn allreduce_cost_grows_with_m() {
+        let mut c2 = Cluster::new(2, NetModel::slingshot());
+        let mut c128 = Cluster::new(128, NetModel::slingshot());
+        let v = vec![0u32; 100_000];
+        let _ = allreduce_sum_u32(&mut c2, &vec![v.clone(); 2]);
+        let _ = allreduce_sum_u32(&mut c128, &vec![v; 128]);
+        assert!(c128.makespan() > c2.makespan());
+    }
+
+    #[test]
+    fn gather_keeps_payloads_and_charges_root_most() {
+        let mut c = Cluster::new(4, NetModel::slingshot());
+        let payloads: Vec<Vec<u8>> = (0..4).map(|r| vec![r as u8; 1 << 16]).collect();
+        let got = gather_at(&mut c, 0, payloads, 1);
+        assert_eq!(got[2], vec![2u8; 1 << 16]);
+        // Root receives from 3 senders; its comm exceeds any single sender's.
+        assert!(c.clocks[0].comm > c.clocks[1].comm);
+    }
+
+    #[test]
+    fn barrier_semantics_sync_before_exchange() {
+        let mut c = Cluster::new(2, NetModel::free());
+        c.charge_compute(0, 10.0);
+        let outbox: Vec<Vec<Vec<u32>>> = vec![vec![vec![], vec![]], vec![vec![], vec![]]];
+        let _ = all_to_allv(&mut c, outbox, 4);
+        // Rank 1 must have waited for rank 0.
+        assert_eq!(c.now(1), 10.0);
+        assert_eq!(c.clocks[1].idle, 10.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The virtual distributed cluster — this repository's substitute for the
+//! paper's 512-node Perlmutter testbed (DESIGN.md §3).
+//!
+//! The *algorithms* run for real: every rank executes the actual Rust code
+//! on its actual shard of samples/vertices, producing bit-exact outputs
+//! (leap-frog RNG guarantees seed sets are independent of `m`'s layout).
+//! Only the *wire* is modeled: each communication primitive charges an α-β
+//! cost (`τ` latency + `μ` seconds/byte) to per-rank simulated clocks, and
+//! per-rank compute is measured wall-clock and added to the same clocks.
+//! The reported "parallel runtime" of an experiment is the resulting
+//! critical-path makespan — the standard LogP-style methodology.
+//!
+//! Why this preserves the paper's phenomena: the quantities the evaluation
+//! hinges on (per-rank work θ/m, shuffle volume, the m·k candidate stream
+//! converging on the receiver, k reductions of n-sized vectors for the
+//! baselines) are all *produced by the real implementation*; the network
+//! model only converts their byte counts into time.
+
+pub mod netmodel;
+pub mod cluster;
+pub mod collectives;
+
+pub use cluster::{Cluster, RankClock};
+pub use netmodel::NetModel;

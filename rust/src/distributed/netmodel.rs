@@ -1,0 +1,149 @@
+//! α-β (latency–bandwidth) network cost model.
+//!
+//! Point-to-point: `t(b) = τ + μ·b`. Collectives use the standard
+//! algorithm-aware cost formulas (Thakur et al., "Optimization of Collective
+//! Communication Operations in MPICH") so that e.g. an allreduce does not
+//! naively cost `m` point-to-point messages.
+//!
+//! Default parameters approximate a Slingshot-11-class fabric
+//! (τ ≈ 2 µs, ~25 GB/s effective per-NIC bandwidth); a slower
+//! "commodity" profile is provided for sensitivity studies.
+
+/// Seconds-valued α-β model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Per-message latency τ (seconds).
+    pub tau: f64,
+    /// Reciprocal bandwidth μ (seconds per byte).
+    pub mu: f64,
+}
+
+impl NetModel {
+    /// HPE Slingshot-11-class interconnect (the paper's testbed).
+    pub fn slingshot() -> Self {
+        Self { tau: 2.0e-6, mu: 1.0 / 25.0e9 }
+    }
+
+    /// 10 GbE commodity cluster (for ablations).
+    pub fn commodity() -> Self {
+        Self { tau: 50.0e-6, mu: 1.0 / 1.25e9 }
+    }
+
+    /// Zero-cost network (isolates compute in ablations).
+    pub fn free() -> Self {
+        Self { tau: 0.0, mu: 0.0 }
+    }
+
+    /// Point-to-point message of `bytes`.
+    #[inline]
+    pub fn p2p(&self, bytes: u64) -> f64 {
+        self.tau + self.mu * bytes as f64
+    }
+
+    /// Personalized all-to-all among `m` ranks where this rank sends
+    /// `send_bytes` total and receives `recv_bytes` total (pairwise-exchange
+    /// algorithm: m−1 rounds, latency per round, bytes serialized on the
+    /// NIC).
+    #[inline]
+    pub fn all_to_all(&self, m: usize, send_bytes: u64, recv_bytes: u64) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        self.tau * (m - 1) as f64 + self.mu * (send_bytes + recv_bytes) as f64
+    }
+
+    /// Allreduce of `bytes` over `m` ranks (Rabenseifner:
+    /// 2·log2(m) latency terms + 2·(m−1)/m·bytes volume).
+    #[inline]
+    pub fn allreduce(&self, m: usize, bytes: u64) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let lm = (m as f64).log2().ceil();
+        2.0 * self.tau * lm + 2.0 * ((m - 1) as f64 / m as f64) * self.mu * bytes as f64
+    }
+
+    /// Reduce-to-root (binomial tree).
+    #[inline]
+    pub fn reduce(&self, m: usize, bytes: u64) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let lm = (m as f64).log2().ceil();
+        self.tau * lm + self.mu * bytes as f64 * lm
+    }
+
+    /// Broadcast of `bytes` to `m` ranks (binomial tree / scatter-allgather
+    /// hybrid — latency log term, single volume term for large messages).
+    #[inline]
+    pub fn broadcast(&self, m: usize, bytes: u64) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let lm = (m as f64).log2().ceil();
+        self.tau * lm + 2.0 * self.mu * bytes as f64
+    }
+
+    /// Gather of `bytes_per_rank` from each of `m` ranks at the root —
+    /// root's NIC serializes the full volume.
+    #[inline]
+    pub fn gather(&self, m: usize, bytes_per_rank: u64) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        self.tau * ((m as f64).log2().ceil()) + self.mu * (bytes_per_rank * (m as u64 - 1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_scales_linearly() {
+        let n = NetModel::slingshot();
+        let t1 = n.p2p(1_000);
+        let t2 = n.p2p(2_000);
+        assert!(t2 > t1);
+        assert!((t2 - t1 - n.mu * 1000.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn single_rank_collectives_free() {
+        let n = NetModel::slingshot();
+        assert_eq!(n.all_to_all(1, 100, 100), 0.0);
+        assert_eq!(n.allreduce(1, 100), 0.0);
+        assert_eq!(n.broadcast(1, 100), 0.0);
+    }
+
+    #[test]
+    fn allreduce_cheaper_than_naive_gather_bcast() {
+        let n = NetModel::slingshot();
+        let m = 128;
+        let bytes = 4_000_000u64; // n-sized frequency vector, 1M vertices * 4B
+        let ar = n.allreduce(m, bytes);
+        let naive = n.gather(m, bytes) + n.broadcast(m, bytes);
+        assert!(ar < naive);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages_at_scale() {
+        let n = NetModel::slingshot();
+        // 512-rank all-to-all of 64-byte messages: latency term must dominate.
+        let t = n.all_to_all(512, 64 * 511, 64 * 511);
+        let lat = n.tau * 511.0;
+        assert!(lat / t > 0.5, "latency share {}", lat / t);
+    }
+
+    #[test]
+    fn commodity_slower_than_slingshot() {
+        assert!(NetModel::commodity().p2p(1 << 20) > NetModel::slingshot().p2p(1 << 20));
+    }
+
+    #[test]
+    fn free_network_is_free() {
+        let n = NetModel::free();
+        assert_eq!(n.all_to_all(512, 1 << 30, 1 << 30), 0.0);
+        assert_eq!(n.allreduce(512, 1 << 30), 0.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal criterion-style benchmark harness (this image has no network
+//! access to crates.io, so the criterion crate itself is unavailable —
+//! see Cargo.toml). Provides warmup, adaptive iteration counts, and
+//! mean/median/stddev reporting compatible with `cargo bench` targets
+//! built with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    fn from_samples(mut xs: Vec<f64>) -> Self {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n.max(1) as f64;
+        Stats {
+            iters: n,
+            mean,
+            median: xs[n / 2],
+            stddev: var.sqrt(),
+            min: xs[0],
+            max: xs[n - 1],
+        }
+    }
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Benchmark runner. `Bench::new("group").bench("name", || work())`.
+pub struct Bench {
+    group: String,
+    /// Target cumulative measurement time per benchmark.
+    pub measurement: Duration,
+    /// Max samples per benchmark.
+    pub max_samples: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let quick = std::env::var("GREEDIRIS_BENCH_SCALE").as_deref() != Ok("full");
+        Self {
+            group: group.to_string(),
+            measurement: if quick { Duration::from_millis(700) } else { Duration::from_secs(3) },
+            max_samples: if quick { 20 } else { 60 },
+        }
+    }
+
+    /// Runs `f` repeatedly, reporting statistics. Returns the stats so the
+    /// caller can assert or log them.
+    pub fn bench<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup: one call (our workloads are seconds-scale at most; no need
+        // for criterion's multi-second warmup on a shared 1-core box).
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let first = t0.elapsed().as_secs_f64();
+        let mut samples = vec![first];
+        let budget = self.measurement.as_secs_f64();
+        let mut spent = first;
+        while spent < budget && samples.len() < self.max_samples {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            let dt = t.elapsed().as_secs_f64();
+            samples.push(dt);
+            spent += dt;
+        }
+        let stats = Stats::from_samples(samples);
+        println!(
+            "bench {}/{name}: {} median ({} mean ± {}, {} iters, range {}..{})",
+            self.group,
+            fmt_secs(stats.median),
+            fmt_secs(stats.mean),
+            fmt_secs(stats.stddev),
+            stats.iters,
+            fmt_secs(stats.min),
+            fmt_secs(stats.max),
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_computed() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.iters, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::new("test");
+        let s = b.bench("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 1);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-6).contains("µs"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harness: input catalog (scaled analogs of the paper's
+//! Table 3) and table/figure regeneration used by `cargo bench` and the
+//! `greediris exp` CLI.
+
+pub mod bench;
+pub mod inputs;
+pub mod tables;
+
+pub use inputs::{analog, build_analog, AnalogSpec, ANALOGS};

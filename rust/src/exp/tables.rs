@@ -1,0 +1,459 @@
+//! Regeneration harness for every table and figure of the paper's
+//! evaluation (§4). Each `table*`/`fig*` function runs the real pipeline on
+//! the scaled analog inputs and returns printable rows mirroring the paper's
+//! layout; `cargo bench --bench <id>` drives them (see `rust/benches/`).
+//!
+//! Scale control: `GREEDIRIS_BENCH_SCALE=quick|full` (default `quick`).
+//! Quick keeps every experiment's *structure* (all inputs, all m points)
+//! with a reduced sample budget θ; full uses the calibrated budget.
+
+use crate::coordinator::{run_infmax, run_opim, Algorithm, Config};
+use crate::diffusion::{evaluate_spread, DiffusionModel};
+use crate::exp::inputs::{analog, build_analog, AnalogSpec, ANALOGS};
+use crate::graph::Graph;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Experiment scale knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchScale {
+    /// Sample budget (θ override — benches sweep m at fixed work, as the
+    /// strong-scaling methodology requires).
+    pub theta: u64,
+    pub k: usize,
+    /// Monte-Carlo spread simulations for quality columns (paper: 5).
+    pub sims: usize,
+    /// The "big" node count for Table 4 / Table 6 (paper: 512).
+    pub m_big: usize,
+}
+
+impl BenchScale {
+    pub fn quick() -> Self {
+        Self { theta: 2_048, k: 50, sims: 3, m_big: 512 }
+    }
+
+    pub fn full() -> Self {
+        Self { theta: 16_384, k: 100, sims: 5, m_big: 512 }
+    }
+
+    pub fn from_env() -> Self {
+        match std::env::var("GREEDIRIS_BENCH_SCALE").as_deref() {
+            Ok("full") => Self::full(),
+            _ => Self::quick(),
+        }
+    }
+}
+
+/// Graph cache so sweeps reuse the built analog.
+#[derive(Default)]
+pub struct GraphCache {
+    graphs: HashMap<(String, DiffusionModel), Graph>,
+}
+
+impl GraphCache {
+    pub fn get(&mut self, name: &str, model: DiffusionModel) -> &Graph {
+        self.graphs
+            .entry((name.to_string(), model))
+            .or_insert_with(|| {
+                let spec = analog(name).unwrap_or_else(|| panic!("unknown analog {name}"));
+                build_analog(spec, model, 0xA11A ^ spec.scale as u64)
+            })
+    }
+}
+
+fn cfg_for(algo: Algorithm, scale: BenchScale, m: usize, model: DiffusionModel) -> Config {
+    let mut c = Config::new(scale.k, m, model, algo).with_theta(scale.theta);
+    if algo == Algorithm::GreediRisTrunc {
+        c = c.with_alpha(0.125); // Table 4 setting
+    }
+    c
+}
+
+fn geo_mean(xs: &[f64]) -> f64 {
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+// ---------------------------------------------------------------- Table 2
+
+/// Table 2: local vs global max-k-cover time under the offline RandGreedi
+/// template, as m grows (livejournal analog, IC).
+pub struct Table2 {
+    pub rows: Vec<(usize, f64, f64)>, // (m, local_s, global_s)
+}
+
+/// One Table-2 data point (used by the bench target's timed section).
+pub fn table2_point(scale: BenchScale, m: usize, cache: &mut GraphCache) -> (f64, f64) {
+    let g = cache.get("livejournal", DiffusionModel::IC);
+    let cfg = cfg_for(Algorithm::RandGreediOffline, scale, m, DiffusionModel::IC);
+    let r = run_infmax(g, &cfg);
+    (r.breakdown.select_local, r.breakdown.select_global)
+}
+
+pub fn table2(scale: BenchScale, cache: &mut GraphCache) -> Table2 {
+    let g = cache.get("livejournal", DiffusionModel::IC);
+    let ms = [8usize, 16, 32, 64, 128];
+    let mut rows = Vec::new();
+    for &m in &ms {
+        let cfg = cfg_for(Algorithm::RandGreediOffline, scale, m, DiffusionModel::IC);
+        let r = run_infmax(g, &cfg);
+        rows.push((m, r.breakdown.select_local, r.breakdown.select_global));
+    }
+    Table2 { rows }
+}
+
+impl Table2 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "Table 2: RandGreedi template, local vs global max-k-cover time (livejournal analog, IC)");
+        let _ = writeln!(s, "{:>6} {:>14} {:>14}", "m", "local (s)", "global (s)");
+        for (m, l, g) in &self.rows {
+            let _ = writeln!(s, "{m:>6} {l:>14.4} {g:>14.4}");
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------- Table 4
+
+/// One Table-4 row: modeled runtimes of the four systems plus the quality
+/// delta of the GreediRIS variants vs the Ripples baseline.
+pub struct Table4Row {
+    pub input: &'static str,
+    pub ripples: f64,
+    pub diimm: f64,
+    pub greediris: f64,
+    pub trunc: f64,
+    /// Percent change in expected influence vs Ripples (negative = worse).
+    pub quality_gr_pct: f64,
+    pub quality_trunc_pct: f64,
+}
+
+pub struct Table4 {
+    pub model: DiffusionModel,
+    pub rows: Vec<Table4Row>,
+    pub geo_speedup_gr: f64,
+    pub geo_speedup_trunc: f64,
+}
+
+pub fn table4(scale: BenchScale, model: DiffusionModel, inputs: &[&'static str], cache: &mut GraphCache) -> Table4 {
+    let mut rows = Vec::new();
+    for &name in inputs {
+        let g = cache.get(name, model);
+        // Warm the page cache / allocator so the first timed algorithm is
+        // not penalized (measured compute feeds the simulated clocks).
+        {
+            let mut warm = cfg_for(Algorithm::GreediRis, scale, 8, model);
+            warm.theta_override = Some((scale.theta / 8).max(64));
+            let _ = run_infmax(g, &warm);
+        }
+        let run = |algo| {
+            let cfg = cfg_for(algo, scale, scale.m_big, model);
+            run_infmax(g, &cfg)
+        };
+        let rip = run(Algorithm::Ripples);
+        let dii = run(Algorithm::DiImm);
+        let gre = run(Algorithm::GreediRis);
+        let tru = run(Algorithm::GreediRisTrunc);
+        let base = evaluate_spread(g, &rip.seeds, model, scale.sims, 0xEC0);
+        let q = |r: &crate::coordinator::RunResult| {
+            let s = evaluate_spread(g, &r.seeds, model, scale.sims, 0xEC0);
+            (s.mean - base.mean) / base.mean * 100.0
+        };
+        rows.push(Table4Row {
+            input: name,
+            ripples: rip.sim_time,
+            diimm: dii.sim_time,
+            greediris: gre.sim_time,
+            trunc: tru.sim_time,
+            quality_gr_pct: q(&gre),
+            quality_trunc_pct: q(&tru),
+        });
+    }
+    let sp_gr: Vec<f64> = rows.iter().map(|r| r.ripples / r.greediris).collect();
+    let sp_tr: Vec<f64> = rows.iter().map(|r| r.ripples / r.trunc).collect();
+    Table4 {
+        model,
+        rows,
+        geo_speedup_gr: geo_mean(&sp_gr),
+        geo_speedup_trunc: geo_mean(&sp_tr),
+    }
+}
+
+impl Table4 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "Table 4 (diffusion {}): modeled runtime (s) at m = 512, α = 0.125",
+            self.model.as_str()
+        );
+        let _ = writeln!(
+            s,
+            "{:>12} {:>10} {:>10} {:>10} {:>10} {:>9} {:>9}",
+            "input", "Ripples", "DiIMM", "GreediRIS", "trunc", "Δq(gr)%", "Δq(tr)%"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{:>12} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>9.2} {:>9.2}",
+                r.input, r.ripples, r.diimm, r.greediris, r.trunc, r.quality_gr_pct, r.quality_trunc_pct
+            );
+        }
+        let _ = writeln!(
+            s,
+            "geo-mean speedup vs Ripples: GreediRIS {:.2}x, GreediRIS-trunc {:.2}x",
+            self.geo_speedup_gr, self.geo_speedup_trunc
+        );
+        s
+    }
+}
+
+// ---------------------------------------------------------------- Table 5
+
+pub struct Table5 {
+    pub ms: Vec<usize>,
+    /// (input, times-per-m)
+    pub rows: Vec<(&'static str, Vec<f64>)>,
+}
+
+pub fn table5(scale: BenchScale, inputs: &[&'static str], ms: &[usize], cache: &mut GraphCache) -> Table5 {
+    let mut rows = Vec::new();
+    for &name in inputs {
+        let g = cache.get(name, DiffusionModel::IC);
+        let times = ms
+            .iter()
+            .map(|&m| run_infmax(g, &cfg_for(Algorithm::GreediRis, scale, m, DiffusionModel::IC)).sim_time)
+            .collect();
+        rows.push((name, times));
+    }
+    Table5 { ms: ms.to_vec(), rows }
+}
+
+impl Table5 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "Table 5: GreediRIS strong scaling (IC), modeled runtime (s)");
+        let mut hdr = format!("{:>12}", "input");
+        for m in &self.ms {
+            let _ = write!(hdr, " {m:>9}");
+        }
+        let _ = writeln!(s, "{hdr}");
+        for (name, times) in &self.rows {
+            let mut line = format!("{name:>12}");
+            for t in times {
+                let _ = write!(line, " {t:>9.3}");
+            }
+            let _ = writeln!(s, "{line}");
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------- Table 6
+
+pub struct Table6 {
+    pub alphas: Vec<f64>,
+    pub select_times: Vec<f64>,
+    pub guarantees: Vec<f64>,
+}
+
+/// Table 6: OPIM + GreediRIS-trunc on the friendster analog at m_big,
+/// sweeping the truncation factor α.
+pub fn table6(scale: BenchScale, cache: &mut GraphCache) -> Table6 {
+    let g = cache.get("friendster", DiffusionModel::IC);
+    let alphas = [1.0, 0.5, 0.25, 0.125];
+    let mut select_times = Vec::new();
+    let mut guarantees = Vec::new();
+    for &a in &alphas {
+        let mut cfg = Config::new(scale.k, scale.m_big, DiffusionModel::IC, Algorithm::GreediRisTrunc)
+            .with_alpha(a)
+            .with_eps(0.01);
+        cfg.delta = 0.0562; // paper's OPIM setting
+        let r = run_opim(g, &cfg, scale.theta / 4, scale.theta, 0.99);
+        select_times.push(r.seed_select_time);
+        guarantees.push(r.bound.guarantee);
+    }
+    Table6 { alphas: alphas.to_vec(), select_times, guarantees }
+}
+
+impl Table6 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "Table 6: OPIM + GreediRIS-trunc (friendster analog, m = 512)");
+        let mut l1 = format!("{:>24}", "truncation factor α:");
+        let mut l2 = format!("{:>24}", "seed select time (s):");
+        let mut l3 = format!("{:>24}", "OPIM approx guarantee:");
+        for i in 0..self.alphas.len() {
+            let _ = write!(l1, " {:>9.3}", self.alphas[i]);
+            let _ = write!(l2, " {:>9.3}", self.select_times[i]);
+            let _ = write!(l3, " {:>9.3}", self.guarantees[i]);
+        }
+        let _ = writeln!(s, "{l1}\n{l2}\n{l3}");
+        s
+    }
+}
+
+// ---------------------------------------------------------------- Figures
+
+/// Fig. 3: total-time scaling on orkut-group — GreediRIS vs trunc vs Ripples.
+pub struct Fig3 {
+    pub ms: Vec<usize>,
+    pub greediris: Vec<f64>,
+    pub trunc: Vec<f64>,
+    pub ripples: Vec<f64>,
+}
+
+pub fn fig3(scale: BenchScale, ms: &[usize], cache: &mut GraphCache) -> Fig3 {
+    let g = cache.get("orkut-group", DiffusionModel::IC);
+    let run = |algo, m| run_infmax(g, &cfg_for(algo, scale, m, DiffusionModel::IC)).sim_time;
+    Fig3 {
+        ms: ms.to_vec(),
+        greediris: ms.iter().map(|&m| run(Algorithm::GreediRis, m)).collect(),
+        trunc: ms.iter().map(|&m| run(Algorithm::GreediRisTrunc, m)).collect(),
+        ripples: ms.iter().map(|&m| run(Algorithm::Ripples, m)).collect(),
+    }
+}
+
+impl Fig3 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "Fig 3: total-time scaling, orkut-group analog (IC), modeled seconds");
+        let _ = writeln!(s, "{:>6} {:>12} {:>12} {:>12}", "m", "GreediRIS", "trunc", "Ripples");
+        for i in 0..self.ms.len() {
+            let _ = writeln!(
+                s,
+                "{:>6} {:>12.3} {:>12.3} {:>12.3}",
+                self.ms[i], self.greediris[i], self.trunc[i], self.ripples[i]
+            );
+        }
+        s
+    }
+}
+
+/// Fig. 4: runtime breakdown for the livejournal analog (IC): per-m sender
+/// phases, receiver time, total, and the receiver's thread split.
+pub struct Fig4Row {
+    pub m: usize,
+    pub sampling: f64,
+    pub alltoall: f64,
+    pub select_local: f64,
+    pub receiver_time: f64,
+    pub sender_time: f64,
+    pub total: f64,
+    pub comm_thread_wait: f64,
+    pub comm_thread_work: f64,
+    pub bucket_thread_work: f64,
+}
+
+pub struct Fig4 {
+    pub rows: Vec<Fig4Row>,
+}
+
+pub fn fig4(scale: BenchScale, ms: &[usize], cache: &mut GraphCache) -> Fig4 {
+    let g = cache.get("livejournal", DiffusionModel::IC);
+    let mut rows = Vec::new();
+    for &m in ms {
+        let r = run_infmax(g, &cfg_for(Algorithm::GreediRis, scale, m, DiffusionModel::IC));
+        rows.push(Fig4Row {
+            m,
+            sampling: r.breakdown.sampling,
+            alltoall: r.breakdown.alltoall,
+            select_local: r.breakdown.select_local,
+            receiver_time: r.receiver_time,
+            sender_time: r.sender_time_max,
+            total: r.sim_time,
+            comm_thread_wait: r.receiver.comm_thread_wait,
+            comm_thread_work: r.receiver.comm_thread_work,
+            bucket_thread_work: r.receiver.bucket_thread_work,
+        });
+    }
+    Fig4 { rows }
+}
+
+impl Fig4 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "Fig 4a: breakdown, livejournal analog (IC), modeled seconds");
+        let _ = writeln!(
+            s,
+            "{:>6} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "m", "sampling", "alltoall", "sel-local", "sender", "receiver", "total"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+                r.m, r.sampling, r.alltoall, r.select_local, r.sender_time, r.receiver_time, r.total
+            );
+        }
+        let _ = writeln!(s, "Fig 4b: receiver threads (communicating wait/work vs bucketing work)");
+        let _ = writeln!(s, "{:>6} {:>12} {:>12} {:>12}", "m", "comm-wait", "comm-work", "bucket-work");
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{:>6} {:>12.4} {:>12.4} {:>12.4}",
+                r.m, r.comm_thread_wait, r.comm_thread_work, r.bucket_thread_work
+            );
+        }
+        s
+    }
+}
+
+/// Fig. 5: strong scaling with the seed-selection fraction, for GreediRIS
+/// and GreediRIS-trunc across several inputs.
+pub struct Fig5 {
+    pub ms: Vec<usize>,
+    /// (input, algo-name, total per m, seed-select fraction per m)
+    pub series: Vec<(&'static str, &'static str, Vec<f64>, Vec<f64>)>,
+}
+
+pub fn fig5(scale: BenchScale, inputs: &[&'static str], ms: &[usize], cache: &mut GraphCache) -> Fig5 {
+    let mut series = Vec::new();
+    for &name in inputs {
+        let g = cache.get(name, DiffusionModel::IC);
+        for (algo, label) in [
+            (Algorithm::GreediRis, "GreediRIS"),
+            (Algorithm::GreediRisTrunc, "GreediRIS-trunc"),
+        ] {
+            let mut totals = Vec::new();
+            let mut fracs = Vec::new();
+            for &m in ms {
+                let r = run_infmax(g, &cfg_for(algo, scale, m, DiffusionModel::IC));
+                totals.push(r.sim_time);
+                fracs.push(r.breakdown.seed_selection_fraction());
+            }
+            series.push((name, label, totals, fracs));
+        }
+    }
+    Fig5 { ms: ms.to_vec(), series }
+}
+
+impl Fig5 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "Fig 5: strong scaling with seed-selection fraction (shaded region of the paper)");
+        for (input, label, totals, fracs) in &self.series {
+            let _ = writeln!(s, "  {input} / {label}:");
+            let mut l1 = format!("{:>18}", "m:");
+            let mut l2 = format!("{:>18}", "total (s):");
+            let mut l3 = format!("{:>18}", "select frac:");
+            for i in 0..self.ms.len() {
+                let _ = write!(l1, " {:>8}", self.ms[i]);
+                let _ = write!(l2, " {:>8.3}", totals[i]);
+                let _ = write!(l3, " {:>8.2}", fracs[i]);
+            }
+            let _ = writeln!(s, "{l1}\n{l2}\n{l3}");
+        }
+        s
+    }
+}
+
+/// All nine analog input names (Table 3 order).
+pub fn all_inputs() -> Vec<&'static str> {
+    ANALOGS.iter().map(|a: &AnalogSpec| a.name).collect()
+}
+
+/// The larger inputs used by the scaling experiments (paper Table 5).
+pub fn scaling_inputs() -> Vec<&'static str> {
+    vec!["pokec", "livejournal", "orkut", "orkut-group", "wikipedia", "friendster"]
+}

@@ -1,0 +1,197 @@
+//! Compressed sparse row storage for directed weighted graphs.
+
+use crate::graph::weights::WeightModel;
+use crate::Vertex;
+
+/// One orientation of a directed graph in CSR form.
+///
+/// `offsets` has length `n + 1`; the neighbors of `v` occupy
+/// `targets[offsets[v] .. offsets[v+1]]` with parallel `weights`.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub offsets: Vec<u64>,
+    pub targets: Vec<Vertex>,
+    pub weights: Vec<f32>,
+    /// Integer activation thresholds: `t = round(w · 2^32)`. A Bernoulli(w)
+    /// trial is `(rng.next_u64() >> 32) < t` — one integer compare instead
+    /// of a float conversion in the sampling hot loop (§Perf L3-1).
+    pub thresholds: Vec<u64>,
+}
+
+impl Csr {
+    /// Builds a CSR from an edge list given as `(src, dst, weight)` triples.
+    /// Edges need not be sorted; counting sort by source is used (O(n + m)).
+    pub fn from_triples(n: usize, triples: &[(Vertex, Vertex, f32)]) -> Self {
+        let mut counts = vec![0u64; n + 1];
+        for &(s, _, _) in triples {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut cursor = counts;
+        let m = triples.len();
+        let mut targets = vec![0 as Vertex; m];
+        let mut weights = vec![0f32; m];
+        for &(s, d, w) in triples {
+            let at = cursor[s as usize] as usize;
+            targets[at] = d;
+            weights[at] = w;
+            cursor[s as usize] += 1;
+        }
+        let thresholds = weights
+            .iter()
+            .map(|&w| (w as f64 * (1u64 << 32) as f64).round().max(0.0) as u64)
+            .collect();
+        Self { offsets, targets, weights, thresholds }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: Vertex) -> &[Vertex] {
+        let (a, b) = self.range(v);
+        &self.targets[a..b]
+    }
+
+    #[inline]
+    pub fn edge_weights(&self, v: Vertex) -> &[f32] {
+        let (a, b) = self.range(v);
+        &self.weights[a..b]
+    }
+
+    /// Integer Bernoulli thresholds parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn edge_thresholds(&self, v: Vertex) -> &[u64] {
+        let (a, b) = self.range(v);
+        &self.thresholds[a..b]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: Vertex) -> usize {
+        let (a, b) = self.range(v);
+        b - a
+    }
+
+    #[inline]
+    fn range(&self, v: Vertex) -> (usize, usize) {
+        (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize)
+    }
+}
+
+/// A directed graph with both orientations materialized.
+///
+/// `fwd` stores out-edges (used by the Monte-Carlo spread evaluator);
+/// `rev` stores in-edges (used by the probabilistic reverse BFS that builds
+/// RRR sets). The weight of edge `(u -> v)` is stored on both sides.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub fwd: Csr,
+    pub rev: Csr,
+    /// Human-readable tag used in experiment reports (e.g. "livejournal-x1k").
+    pub name: String,
+}
+
+impl Graph {
+    /// Builds both orientations from a raw directed edge list, assigning
+    /// activation probabilities per `model` (deterministic in `seed`).
+    pub fn from_edges(n: usize, edges: &[(Vertex, Vertex)], model: WeightModel, seed: u64) -> Self {
+        let weights = model.assign(n, edges, seed);
+        let mut f: Vec<(Vertex, Vertex, f32)> = Vec::with_capacity(edges.len());
+        let mut r: Vec<(Vertex, Vertex, f32)> = Vec::with_capacity(edges.len());
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            let w = weights[i];
+            f.push((u, v, w));
+            r.push((v, u, w));
+        }
+        Self {
+            fwd: Csr::from_triples(n, &f),
+            rev: Csr::from_triples(n, &r),
+            name: String::new(),
+        }
+    }
+
+    pub fn with_name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.fwd.n()
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.fwd.m()
+    }
+
+    pub fn max_out_degree(&self) -> usize {
+        (0..self.n() as Vertex).map(|v| self.fwd.degree(v)).max().unwrap_or(0)
+    }
+
+    pub fn avg_out_degree(&self) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        self.m() as f64 / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let c = Csr::from_triples(0, &[]);
+        assert_eq!(c.n(), 0);
+        assert_eq!(c.m(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let c = Csr::from_triples(5, &[(1, 2, 1.0)]);
+        assert_eq!(c.degree(0), 0);
+        assert_eq!(c.degree(1), 1);
+        assert_eq!(c.degree(4), 0);
+        assert_eq!(c.neighbors(1), &[2]);
+    }
+
+    #[test]
+    fn unsorted_input_grouped_by_source() {
+        let c = Csr::from_triples(3, &[(2, 0, 0.1), (0, 1, 0.2), (2, 1, 0.3), (0, 2, 0.4)]);
+        assert_eq!(c.degree(0), 2);
+        assert_eq!(c.degree(1), 0);
+        assert_eq!(c.degree(2), 2);
+        // Weights travel with their edges.
+        let ns = c.neighbors(2);
+        let ws = c.edge_weights(2);
+        for (&n, &w) in ns.iter().zip(ws) {
+            match n {
+                0 => assert_eq!(w, 0.1),
+                1 => assert_eq!(w, 0.3),
+                _ => panic!("unexpected neighbor"),
+            }
+        }
+    }
+
+    #[test]
+    fn large_star_graph() {
+        let n = 10_000;
+        let edges: Vec<(Vertex, Vertex, f32)> =
+            (1..n as Vertex).map(|v| (0, v, 0.5)).collect();
+        let c = Csr::from_triples(n, &edges);
+        assert_eq!(c.degree(0), n - 1);
+        assert_eq!(c.m(), n - 1);
+    }
+}

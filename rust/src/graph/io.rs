@@ -1,0 +1,141 @@
+//! Graph I/O: SNAP-style edge-list loading and a compact binary format.
+//!
+//! The SNAP text format is whitespace-separated `src dst` pairs with `#`
+//! comment lines — the format of every input in the paper's Table 3. Vertex
+//! ids are remapped to a dense `[0, n)` range in first-appearance order, as
+//! Ripples does.
+
+use crate::graph::weights::WeightModel;
+use crate::graph::Graph;
+use crate::Vertex;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Parses SNAP edge-list text from any reader. Returns `(n, edges)` with
+/// dense vertex ids.
+pub fn parse_edge_list<R: Read>(reader: R) -> Result<(usize, Vec<(Vertex, Vertex)>)> {
+    let mut remap: HashMap<u64, Vertex> = HashMap::new();
+    let mut edges = Vec::new();
+    let mut intern = |raw: u64, remap: &mut HashMap<u64, Vertex>| -> Vertex {
+        let next = remap.len() as Vertex;
+        *remap.entry(raw).or_insert(next)
+    };
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line.context("read line")?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let a: u64 = it
+            .next()
+            .ok_or_else(|| anyhow!("line {}: missing src", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let b: u64 = it
+            .next()
+            .ok_or_else(|| anyhow!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let u = intern(a, &mut remap);
+        let v = intern(b, &mut remap);
+        edges.push((u, v));
+    }
+    Ok((remap.len(), edges))
+}
+
+/// Loads a SNAP edge-list file and attaches weights per `model`.
+pub fn load_snap(path: &Path, model: WeightModel, seed: u64) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let (n, edges) = parse_edge_list(f)?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    Ok(Graph::from_edges(n, &edges, model, seed).with_name(name))
+}
+
+const BIN_MAGIC: u32 = 0x47524952; // "GRIR"
+
+/// Writes the edge list in a compact little-endian binary format
+/// (magic, n, m, then m (u32,u32) pairs). Weights are re-derived from the
+/// model at load time, so they are not stored.
+pub fn save_binary<W: Write>(w: W, n: usize, edges: &[(Vertex, Vertex)]) -> Result<()> {
+    let mut w = BufWriter::new(w);
+    w.write_all(&BIN_MAGIC.to_le_bytes())?;
+    w.write_all(&(n as u64).to_le_bytes())?;
+    w.write_all(&(edges.len() as u64).to_le_bytes())?;
+    for &(u, v) in edges {
+        w.write_all(&u.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Reads the binary format written by [`save_binary`].
+pub fn load_binary<R: Read>(r: R) -> Result<(usize, Vec<(Vertex, Vertex)>)> {
+    let mut r = BufReader::new(r);
+    let mut buf4 = [0u8; 4];
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf4)?;
+    if u32::from_le_bytes(buf4) != BIN_MAGIC {
+        return Err(anyhow!("bad magic: not a GreediRIS binary graph"));
+    }
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let m = u64::from_le_bytes(buf8) as usize;
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        r.read_exact(&mut buf4)?;
+        let u = u32::from_le_bytes(buf4);
+        r.read_exact(&mut buf4)?;
+        let v = u32::from_le_bytes(buf4);
+        edges.push((u, v));
+    }
+    Ok((n, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_with_comments_and_remap() {
+        let text = "# SNAP header\n% konect header\n10 20\n20 30\n10 30\n";
+        let (n, edges) = parse_edge_list(text.as_bytes()).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(edges, vec![(0, 1), (1, 2), (0, 2)]);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_edge_list("1 x\n".as_bytes()).is_err());
+        assert!(parse_edge_list("1\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn parse_tab_separated() {
+        let (n, edges) = parse_edge_list("0\t1\n1\t2\n".as_bytes()).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(edges.len(), 2);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let edges = vec![(0u32, 1u32), (5, 2), (3, 3)];
+        let mut buf = Vec::new();
+        save_binary(&mut buf, 6, &edges).unwrap();
+        let (n, back) = load_binary(&buf[..]).unwrap();
+        assert_eq!(n, 6);
+        assert_eq!(back, edges);
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        assert!(load_binary(&b"XXXXXXXXXXXXXXXXXXXXXXX"[..]).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Graph substrate: CSR storage, synthetic generators, weight models, I/O.
+//!
+//! RIS sampling traverses the *reverse* graph (paper Def. 2.3), so
+//! [`Graph`] keeps both orientations in CSR form with per-edge activation
+//! probabilities attached to the reverse adjacency (the direction the
+//! probabilistic BFS walks).
+
+mod csr;
+pub mod generators;
+pub mod weights;
+pub mod io;
+
+pub use csr::{Csr, Graph};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::weights::WeightModel;
+
+    fn diamond_edges() -> Vec<(u32, u32)> {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        vec![(0, 1), (0, 2), (1, 3), (2, 3)]
+    }
+
+    #[test]
+    fn build_forward_and_reverse() {
+        let g = Graph::from_edges(4, &diamond_edges(), WeightModel::Const(0.5), 1);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.fwd.neighbors(0).len(), 2);
+        assert_eq!(g.rev.neighbors(3).len(), 2);
+        assert_eq!(g.rev.neighbors(0).len(), 0);
+        // Forward neighbors of 0 are {1,2}.
+        let mut ns: Vec<u32> = g.fwd.neighbors(0).to_vec();
+        ns.sort_unstable();
+        assert_eq!(ns, vec![1, 2]);
+        // Reverse neighbors of 3 are {1,2} (sources of in-edges).
+        let mut rs: Vec<u32> = g.rev.neighbors(3).to_vec();
+        rs.sort_unstable();
+        assert_eq!(rs, vec![1, 2]);
+    }
+
+    #[test]
+    fn const_weights_applied_both_directions() {
+        let g = Graph::from_edges(4, &diamond_edges(), WeightModel::Const(0.25), 1);
+        for v in 0..4u32 {
+            for &w in g.rev.edge_weights(v) {
+                assert_eq!(w, 0.25);
+            }
+            for &w in g.fwd.edge_weights(v) {
+                assert_eq!(w, 0.25);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_weights_in_range() {
+        let g = Graph::from_edges(4, &diamond_edges(), WeightModel::UniformIc { max: 0.1 }, 99);
+        for v in 0..4u32 {
+            for &w in g.rev.edge_weights(v) {
+                assert!((0.0..=0.1).contains(&w), "weight {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_cascade_is_inverse_indegree() {
+        let g = Graph::from_edges(4, &diamond_edges(), WeightModel::WeightedCascade, 1);
+        // Vertex 3 has indegree 2 -> each in-edge weight 0.5.
+        for &w in g.rev.edge_weights(3) {
+            assert!((w - 0.5).abs() < 1e-6);
+        }
+        // Vertex 1 has indegree 1 -> weight 1.0.
+        for &w in g.rev.edge_weights(1) {
+            assert!((w - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lt_normalized_in_weights_sum_below_one() {
+        let g = Graph::from_edges(
+            4,
+            &diamond_edges(),
+            WeightModel::LtNormalized { seed_scale: 1.0 },
+            7,
+        );
+        for v in 0..4u32 {
+            let s: f32 = g.rev.edge_weights(v).iter().sum();
+            assert!(s <= 1.0 + 1e-5, "sum {s} at {v}");
+        }
+    }
+
+    #[test]
+    fn forward_reverse_weight_consistency() {
+        // The weight of edge (u -> v) must be identical whether read from
+        // fwd[u] or rev[v].
+        let g = Graph::from_edges(4, &diamond_edges(), WeightModel::UniformIc { max: 0.1 }, 5);
+        for u in 0..4u32 {
+            let ns = g.fwd.neighbors(u);
+            let ws = g.fwd.edge_weights(u);
+            for (&v, &w) in ns.iter().zip(ws) {
+                let rn = g.rev.neighbors(v);
+                let rw = g.rev.edge_weights(v);
+                let idx = rn.iter().position(|&x| x == u).expect("reverse edge");
+                assert_eq!(rw[idx], w, "({u}->{v})");
+            }
+        }
+    }
+
+    #[test]
+    fn degrees() {
+        let g = Graph::from_edges(4, &diamond_edges(), WeightModel::Const(1.0), 1);
+        assert_eq!(g.fwd.degree(0), 2);
+        assert_eq!(g.fwd.degree(3), 0);
+        assert_eq!(g.rev.degree(3), 2);
+        assert_eq!(g.max_out_degree(), 2);
+        assert!((g.avg_out_degree() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn self_loops_and_duplicates_kept_but_harmless() {
+        let g = Graph::from_edges(2, &[(0, 1), (0, 1), (1, 1)], WeightModel::Const(0.5), 1);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.fwd.degree(0), 2);
+    }
+}

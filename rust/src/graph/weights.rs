@@ -1,0 +1,123 @@
+//! Edge-activation-probability models.
+//!
+//! §4.1 of the paper: "Since edge probabilities are not available for these
+//! public networks, consistent with practice, we generated edge probabilities
+//! from a uniform random distribution between [0, 0.1]." — that is
+//! [`WeightModel::UniformIc`]. The weighted-cascade model used by DiIMM's
+//! paper is provided for completeness ([`WeightModel::WeightedCascade`]),
+//! plus a normalized model for LT where in-weights sum to (at most) 1 as §2
+//! requires, and the trivalency model common in the InfMax literature.
+
+use crate::rng::{domains, stream_for};
+use crate::Vertex;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightModel {
+    /// Every edge gets the same probability (useful in tests).
+    Const(f32),
+    /// p(u->v) ~ Uniform[0, max] — the paper's setting with `max = 0.1`.
+    UniformIc { max: f32 },
+    /// p(u->v) = 1 / InDegree(v) — weighted cascade.
+    WeightedCascade,
+    /// p(u->v) drawn uniformly from {0.1, 0.01, 0.001} — trivalency.
+    Trivalency,
+    /// In-weights drawn uniformly then normalized so that
+    /// sum_{u in N_in(v)} w(u,v) = seed_scale (≤ 1), the LT-model invariant.
+    LtNormalized { seed_scale: f32 },
+}
+
+impl WeightModel {
+    /// Assigns one weight per edge of `edges`, deterministically in `seed`.
+    ///
+    /// Determinism is per *edge index* (not per draw order), so the same
+    /// `(edges, seed)` pair always yields the same weights even if callers
+    /// later parallelize the assignment.
+    pub fn assign(self, n: usize, edges: &[(Vertex, Vertex)], seed: u64) -> Vec<f32> {
+        match self {
+            WeightModel::Const(p) => vec![p; edges.len()],
+            WeightModel::UniformIc { max } => {
+                let mut rng = stream_for(seed, domains::WEIGHTS, 0);
+                edges.iter().map(|_| rng.next_f32() * max).collect()
+            }
+            WeightModel::Trivalency => {
+                const LEVELS: [f32; 3] = [0.1, 0.01, 0.001];
+                let mut rng = stream_for(seed, domains::WEIGHTS, 1);
+                edges
+                    .iter()
+                    .map(|_| LEVELS[rng.gen_range(3) as usize])
+                    .collect()
+            }
+            WeightModel::WeightedCascade => {
+                let mut indeg = vec![0u32; n];
+                for &(_, v) in edges {
+                    indeg[v as usize] += 1;
+                }
+                edges
+                    .iter()
+                    .map(|&(_, v)| 1.0 / indeg[v as usize].max(1) as f32)
+                    .collect()
+            }
+            WeightModel::LtNormalized { seed_scale } => {
+                // Draw raw uniform weights, then normalize per-destination so
+                // the LT invariant sum_in <= 1 holds.
+                let mut rng = stream_for(seed, domains::WEIGHTS, 2);
+                let raw: Vec<f32> = edges.iter().map(|_| 0.05 + rng.next_f32()).collect();
+                let mut sums = vec![0f64; n];
+                for (i, &(_, v)) in edges.iter().enumerate() {
+                    sums[v as usize] += raw[i] as f64;
+                }
+                edges
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(_, v))| {
+                        let s = sums[v as usize];
+                        if s > 0.0 {
+                            (raw[i] as f64 / s * seed_scale as f64) as f32
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 0)];
+        let a = WeightModel::UniformIc { max: 0.1 }.assign(3, &edges, 5);
+        let b = WeightModel::UniformIc { max: 0.1 }.assign(3, &edges, 5);
+        let c = WeightModel::UniformIc { max: 0.1 }.assign(3, &edges, 6);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn trivalency_levels_only() {
+        let edges: Vec<(u32, u32)> = (0..100).map(|i| (i, (i + 1) % 100)).collect();
+        for w in WeightModel::Trivalency.assign(100, &edges, 1) {
+            assert!(w == 0.1 || w == 0.01 || w == 0.001);
+        }
+    }
+
+    #[test]
+    fn wc_handles_zero_indegree() {
+        // Edge list where vertex 0 has no in-edges; must not divide by zero.
+        let edges = vec![(0u32, 1u32)];
+        let w = WeightModel::WeightedCascade.assign(2, &edges, 1);
+        assert_eq!(w, vec![1.0]);
+    }
+
+    #[test]
+    fn lt_normalization_exact() {
+        let edges = vec![(0u32, 2u32), (1, 2), (3, 2)];
+        let w = WeightModel::LtNormalized { seed_scale: 1.0 }.assign(4, &edges, 1);
+        let s: f32 = w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5, "sum {s}");
+    }
+}

@@ -1,0 +1,89 @@
+//! Approximation-ratio composition for the RandGreedi pipeline
+//! (Theorem 3.1, Corollary 2.1, Lemmas 3.1–3.3 of the paper).
+
+/// α = 1 − 1/e — the greedy / lazy-greedy guarantee on local machines.
+pub fn greedy_ratio() -> f64 {
+    1.0 - 1.0 / std::f64::consts::E
+}
+
+/// 1 − e^{−α_trunc} — truncated greedy guarantee (Lemma 3.2); `frac` is the
+/// fraction of the k local seeds communicated, in (0, 1].
+pub fn truncated_greedy_ratio(frac: f64) -> f64 {
+    assert!(frac > 0.0 && frac <= 1.0);
+    1.0 - (-frac).exp()
+}
+
+/// (1/2 − δ) — the streaming aggregator guarantee (Algorithm 5).
+pub fn streaming_ratio(delta: f64) -> f64 {
+    assert!(delta > 0.0 && delta < 0.5);
+    0.5 - delta
+}
+
+/// RandGreedi composition (Theorem 3.1): α-approx local + β-approx global
+/// ⇒ αβ/(α+β) in expectation.
+pub fn randgreedi_ratio(alpha: f64, beta: f64) -> f64 {
+    alpha * beta / (alpha + beta)
+}
+
+/// End-to-end InfMax guarantee: the max-k-cover ratio minus the sampling
+/// error ε (Corollary 2.1).
+pub fn infmax_ratio(cover_ratio: f64, eps: f64) -> f64 {
+    cover_ratio - eps
+}
+
+/// Lemma 3.1: GreediRIS with streaming aggregation.
+pub fn greediris_ratio(delta: f64, eps: f64) -> f64 {
+    infmax_ratio(randgreedi_ratio(greedy_ratio(), streaming_ratio(delta)), eps)
+}
+
+/// Lemma 3.3: GreediRIS-trunc with truncation fraction `alpha_frac`.
+pub fn greediris_trunc_ratio(alpha_frac: f64, delta: f64, eps: f64) -> f64 {
+    infmax_ratio(
+        randgreedi_ratio(truncated_greedy_ratio(alpha_frac), streaming_ratio(delta)),
+        eps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worst_case_numbers() {
+        // §4.2: "our experimental settings for ε = 0.13 and δ = 0.077 yield
+        // a worst-case approximation ratio of 0.123 in expectation".
+        let r = greediris_ratio(0.077, 0.13);
+        assert!((r - 0.123).abs() < 0.005, "got {r}");
+    }
+
+    #[test]
+    fn ripples_ratio_reference() {
+        // Ripples is (1 - 1/e - ε)-approximate; for ε = 0.13 that is ≈ 0.5.
+        let r = infmax_ratio(greedy_ratio(), 0.13);
+        assert!((r - 0.502).abs() < 0.005, "got {r}");
+    }
+
+    #[test]
+    fn truncation_degrades_gracefully() {
+        assert!((truncated_greedy_ratio(1.0) - greedy_ratio()).abs() < 1e-12);
+        let full = greediris_trunc_ratio(1.0, 0.077, 0.13);
+        let half = greediris_trunc_ratio(0.5, 0.077, 0.13);
+        let eighth = greediris_trunc_ratio(0.125, 0.077, 0.13);
+        assert!(full > half && half > eighth);
+        assert!(eighth > 0.0 - 0.14, "still finite");
+    }
+
+    #[test]
+    fn composition_below_both_factors() {
+        let a = 0.63;
+        let b = 0.42;
+        let c = randgreedi_ratio(a, b);
+        assert!(c < a && c < b);
+        assert!(c > 0.0);
+    }
+
+    #[test]
+    fn composition_symmetric() {
+        assert_eq!(randgreedi_ratio(0.3, 0.7), randgreedi_ratio(0.7, 0.3));
+    }
+}

@@ -1,0 +1,191 @@
+//! Sampling-effort formulas from Tang et al. 2015 ("Influence Maximization
+//! in Near-Linear Time: A Martingale Approach"), as used by the paper's
+//! `Estimate(.)` and `f(k, ε, |V|, LB)` (Algorithm 1 lines 3 and 10).
+
+/// ln C(n, k) computed stably via ln-gamma differences (Stirling series).
+pub fn ln_comb(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    let k = k.min(n - k);
+    ln_gamma((n + 1) as f64) - ln_gamma((k + 1) as f64) - ln_gamma((n - k + 1) as f64)
+}
+
+/// Lanczos approximation of ln Γ(x), |err| < 1e-10 for x >= 0.5.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// IMM parameter set. `ell` is the failure-probability exponent
+/// (success probability ≥ 1 − n^{-ell}); Tang'15 adjusts it so the union
+/// bound over the martingale rounds holds.
+#[derive(Clone, Copy, Debug)]
+pub struct ImmParams {
+    pub n: u64,
+    pub k: u64,
+    pub eps: f64,
+    pub ell: f64,
+}
+
+impl ImmParams {
+    pub fn new(n: u64, k: u64, eps: f64) -> Self {
+        // ℓ = 1 scaled by (1 + ln 2 / ln n) per Tang'15 §4.3 so the overall
+        // failure probability stays n^{-1} after the estimation union bound.
+        let ell = 1.0 * (1.0 + 2f64.ln() / (n as f64).ln());
+        Self { n, k, eps, ell }
+    }
+
+    /// ε' = √2 · ε — the estimation-phase precision (Tang'15 §4.2).
+    pub fn eps_prime(&self) -> f64 {
+        self.eps * std::f64::consts::SQRT_2
+    }
+
+    /// λ' — the estimation-phase sampling-effort constant:
+    /// λ' = (2 + 2/3 ε')·(ln C(n,k) + ℓ·ln n + ln log2 n)·n / ε'².
+    pub fn lambda_prime(&self) -> f64 {
+        let n = self.n as f64;
+        let epsp = self.eps_prime();
+        (2.0 + 2.0 / 3.0 * epsp)
+            * (ln_comb(self.n, self.k) + self.ell * n.ln() + n.log2().max(1.0).ln())
+            * n
+            / (epsp * epsp)
+    }
+
+    /// λ* — the final-phase constant:
+    /// λ* = 2n·((1 − 1/e)·α + β)² / ε², with
+    /// α = √(ℓ·ln n + ln 2), β = √((1 − 1/e)·(ln C(n,k) + ℓ·ln n + ln 2)).
+    pub fn lambda_star(&self) -> f64 {
+        let n = self.n as f64;
+        let one_me = 1.0 - 1.0 / std::f64::consts::E;
+        let alpha = (self.ell * n.ln() + 2f64.ln()).sqrt();
+        let beta = (one_me * (ln_comb(self.n, self.k) + self.ell * n.ln() + 2f64.ln())).sqrt();
+        2.0 * n * (one_me * alpha + beta).powi(2) / (self.eps * self.eps)
+    }
+
+    /// Initial sample budget θ̂₁ = λ' / (n / 2) — the `Estimate(.)` of
+    /// Algorithm 1 line 3 (the first OPT guess is n/2).
+    pub fn theta_initial(&self) -> u64 {
+        (self.lambda_prime() / (self.n as f64 / 2.0)).ceil().max(1.0) as u64
+    }
+
+    /// Final θ = λ* / LB (Algorithm 1 line 10).
+    pub fn theta_final(&self, lower_bound: f64) -> u64 {
+        (self.lambda_star() / lower_bound.max(1.0)).ceil().max(1.0) as u64
+    }
+
+    /// Maximum number of martingale rounds = ⌊log2 n⌋ − 1 (at least 1).
+    pub fn max_rounds(&self) -> u32 {
+        ((self.n as f64).log2().floor() as u32).saturating_sub(1).max(1)
+    }
+
+    /// The round-x lower-bound check of `CheckGoodness` (Algorithm 1 line 9):
+    /// at round x the OPT guess is n / 2^x; the check passes when the
+    /// estimated influence n·(C(S)/θ̂) ≥ (1 + ε')·(n / 2^x), in which case
+    /// LB = n·(C(S)/θ̂) / (1 + ε').
+    pub fn check_goodness(&self, coverage: u64, theta_hat: u64, round: u32) -> Option<f64> {
+        let n = self.n as f64;
+        let est = n * coverage as f64 / theta_hat as f64;
+        let guess = n / 2f64.powi(round as i32);
+        if est >= (1.0 + self.eps_prime()) * guess {
+            Some(est / (1.0 + self.eps_prime()))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        // Γ(n+1) = n!
+        let cases = [(1u64, 1f64), (2, 2.0), (5, 120.0), (10, 3_628_800.0)];
+        for (n, fact) in cases {
+            let got = ln_gamma((n + 1) as f64);
+            assert!((got - fact.ln()).abs() < 1e-9, "n={n}: {got} vs {}", fact.ln());
+        }
+    }
+
+    #[test]
+    fn ln_comb_small_values() {
+        assert!((ln_comb(5, 2) - 10f64.ln()).abs() < 1e-9);
+        assert!((ln_comb(10, 5) - 252f64.ln()).abs() < 1e-9);
+        assert!(ln_comb(5, 0).abs() < 1e-9);
+        assert!(ln_comb(5, 5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_comb_symmetry_and_monotonicity() {
+        assert!((ln_comb(100, 30) - ln_comb(100, 70)).abs() < 1e-8);
+        assert!(ln_comb(1000, 100) > ln_comb(1000, 10));
+    }
+
+    #[test]
+    fn lambda_values_positive_and_ordered() {
+        let p = ImmParams::new(10_000, 100, 0.13);
+        assert!(p.lambda_prime() > 0.0);
+        assert!(p.lambda_star() > 0.0);
+        // Tighter ε demands more samples.
+        let tight = ImmParams::new(10_000, 100, 0.01);
+        assert!(tight.lambda_star() > p.lambda_star() * 10.0);
+    }
+
+    #[test]
+    fn theta_initial_reasonable() {
+        let p = ImmParams::new(100_000, 100, 0.13);
+        let t = p.theta_initial();
+        // λ'/(n/2) lands in the thousands for these parameters.
+        assert!(t > 100 && t < 1_000_000, "theta_1 = {t}");
+    }
+
+    #[test]
+    fn theta_final_decreases_with_lb() {
+        let p = ImmParams::new(100_000, 100, 0.13);
+        assert!(p.theta_final(1000.0) > p.theta_final(10_000.0));
+    }
+
+    #[test]
+    fn check_goodness_gate() {
+        let p = ImmParams::new(1024, 10, 0.13);
+        // Round 1 guess = n/2 = 512. Coverage fraction 0.9 estimates 921.6
+        // influence >= (1+ε')·512 ≈ 606 → pass.
+        let lb = p.check_goodness(900, 1000, 1);
+        assert!(lb.is_some());
+        assert!(lb.unwrap() > 512.0);
+        // Low coverage fails round 1 but passes a later round.
+        assert!(p.check_goodness(100, 1000, 1).is_none());
+        assert!(p.check_goodness(100, 1000, 4).is_some());
+    }
+
+    #[test]
+    fn max_rounds_log() {
+        assert_eq!(ImmParams::new(1024, 10, 0.1).max_rounds(), 9);
+        assert_eq!(ImmParams::new(4, 1, 0.1).max_rounds(), 1);
+    }
+}

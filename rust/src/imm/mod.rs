@@ -1,0 +1,19 @@
+//! IMM estimation machinery (paper §2.1, Algorithm 1) and the OPIM-C
+//! extension (§3.3.2 "Extension to other RIS-based InfMax methods").
+//!
+//! - [`math`] — the sampling-effort formulas λ', λ* of Tang et al. 2015
+//!   (with the Chen 2018 correction: final-phase samples are regenerated
+//!   from a fresh stream, never reused from the estimation phase).
+//! - [`martingale`] — the round structure: double θ̂, select seeds, check
+//!   the lower-bound condition, then compute the final θ.
+//! - [`opim`] — OPIM-C: R1/R2 sample halves, instance-wise lower/upper
+//!   bounds and the per-round approximation guarantee of Table 6.
+//! - [`bounds`] — the RandGreedi approximation-ratio composition
+//!   (Theorem 3.1 and Lemmas 3.1–3.3).
+
+pub mod bounds;
+pub mod math;
+pub mod martingale;
+pub mod opim;
+
+pub use martingale::{MartingaleDriver, RoundDecision};

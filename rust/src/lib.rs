@@ -1,0 +1,56 @@
+//! # GreediRIS
+//!
+//! A from-scratch reproduction of *GreediRIS: Scalable Influence Maximization
+//! using Distributed Streaming Maximum Cover* (Barik et al., 2024) as a
+//! three-layer Rust + JAX/Pallas stack.
+//!
+//! The crate is organized bottom-up:
+//!
+//! - [`rng`] — counter-based parallel pseudorandom streams (the paper's
+//!   leap-frog property: sample `i` is identical regardless of which rank
+//!   generates it).
+//! - [`graph`] — CSR graphs, synthetic generators standing in for the paper's
+//!   SNAP/KONECT inputs, and edge-weight models.
+//! - [`diffusion`] — Independent Cascade / Linear Threshold models and the
+//!   Monte-Carlo influence-spread evaluator used for quality comparisons.
+//! - [`sampling`] — Random Reverse Reachable (RRR) set generation.
+//! - [`maxcover`] — the max-k-cover solver family: standard greedy, lazy
+//!   greedy (paper Alg. 2), McGregor–Vu streaming (paper Alg. 5), and the
+//!   truncated variant (§3.3.2).
+//! - [`imm`] — the IMM estimation machinery (martingale rounds, λ*, Chen'18
+//!   correction) and the OPIM-C extension.
+//! - [`distributed`] — the virtual cluster: m simulated ranks, collectives,
+//!   and an α-β network-cost model replacing the paper's 512-node Perlmutter
+//!   testbed (see DESIGN.md §3 for the substitution argument).
+//! - [`coordinator`] — the paper's contribution: the GreediRIS pipeline
+//!   (S1 sampling → S2 all-to-all → S3 senders → S4 streaming receiver),
+//!   the offline RandGreedi template, and truncation.
+//! - [`baselines`] — Ripples-style (k global reductions) and DiIMM-style
+//!   (master–worker lazy) distributed seed selection.
+//! - [`runtime`] — PJRT/XLA runtime that loads the AOT-compiled Pallas
+//!   coverage kernel (`artifacts/*.hlo.txt`) and exposes it as a scoring
+//!   backend for the greedy solvers.
+//! - [`metrics`] — phase timers and communication-volume accounting used to
+//!   regenerate the paper's breakdown figures.
+//! - [`exp`] — the experiment harness that regenerates every table and
+//!   figure of the paper's evaluation section.
+
+pub mod rng;
+pub mod graph;
+pub mod diffusion;
+pub mod sampling;
+pub mod maxcover;
+pub mod imm;
+pub mod distributed;
+pub mod coordinator;
+pub mod baselines;
+pub mod runtime;
+pub mod metrics;
+pub mod exp;
+
+/// Vertex identifier. Graphs in this crate are bounded to `u32::MAX` vertices,
+/// matching the paper's largest input (friendster, 65.6M vertices).
+pub type Vertex = u32;
+
+/// Global RRR-sample identifier (dense in `[0, theta)`).
+pub type SampleId = u32;

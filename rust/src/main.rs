@@ -1,0 +1,272 @@
+//! `greediris` — the leader CLI (hand-parsed flags; this image has no
+//! network access to crates.io, so heavyweight CLI crates are out — see
+//! Cargo.toml).
+//!
+//! Subcommands:
+//! - `run`     one InfMax run on an analog (or a SNAP edge-list file via
+//!             --file) with a chosen algorithm/model/m, printing seeds,
+//!             quality, and the phase breakdown;
+//! - `exp`     regenerate a paper table/figure (table2/4/5/6, fig3/4/7, all);
+//! - `opim`    the OPIM-C variant with a truncation sweep (Table 6 style);
+//! - `inputs`  list the analog catalog (Table 3 stand-ins).
+
+use anyhow::{anyhow, bail, Result};
+use greediris::coordinator::{run_infmax, run_infmax_with_scorer, run_opim, Algorithm, Config, LocalSolver};
+use greediris::diffusion::{evaluate_spread, DiffusionModel};
+use greediris::exp::inputs::{analog, build_analog, weights_for, ANALOGS};
+use greediris::exp::tables::{self, BenchScale, GraphCache};
+use greediris::graph::io::load_snap;
+use greediris::graph::Graph;
+use greediris::runtime::XlaScorer;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+greediris — distributed streaming influence maximization (GreediRIS reproduction)
+
+USAGE:
+  greediris run [--input NAME | --file PATH] [--algorithm A] [--model IC|LT]
+                [--m N] [--k N] [--eps F] [--alpha F] [--theta N]
+                [--solver lazy|dense-cpu|dense-xla] [--sims N] [--seed N]
+  greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
+  greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
+  greediris inputs
+
+Algorithms: greediris | greediris-trunc | randgreedi | ripples | diimm
+Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort.";
+
+/// Minimal --flag value parser.
+struct Flags {
+    map: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                map.insert(name.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { map, positional })
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.map.get(name) {
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow!("bad value for --{name}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_str(&self, name: &str, default: &str) -> String {
+        self.map.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn load_graph(input: &str, file: Option<&str>, model: DiffusionModel, seed: u64) -> Result<Graph> {
+    if let Some(path) = file {
+        return load_snap(&PathBuf::from(path), weights_for(model), seed);
+    }
+    let spec = analog(input)
+        .ok_or_else(|| anyhow!("unknown analog '{input}' (see `greediris inputs`)"))?;
+    Ok(build_analog(spec, model, seed))
+}
+
+fn cmd_run(flags: &Flags) -> Result<()> {
+    let model: DiffusionModel = flags.get_str("model", "IC").parse().map_err(|e: String| anyhow!(e))?;
+    let algorithm: Algorithm = flags
+        .get_str("algorithm", "greediris")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let seed: u64 = flags.get("seed", 0x5EED_u64)?;
+    let input = flags.get_str("input", "github");
+    let file = flags.map.get("file").map(String::as_str);
+    let g = load_graph(&input, file, model, seed)?;
+    println!(
+        "graph '{}': n = {}, m = {} (avg deg {:.2}, max {})",
+        g.name,
+        g.n(),
+        g.m(),
+        g.avg_out_degree(),
+        g.max_out_degree()
+    );
+    let m: usize = flags.get("m", 64)?;
+    let k: usize = flags.get("k", 50)?;
+    let mut cfg = Config::new(k, m, model, algorithm)
+        .with_seed(seed)
+        .with_eps(flags.get("eps", 0.13)?)
+        .with_alpha(flags.get("alpha", 0.125)?);
+    if let Some(t) = flags.map.get("theta") {
+        cfg = cfg.with_theta(t.parse()?);
+    }
+    let solver = flags.get_str("solver", "lazy");
+    let result = match solver.as_str() {
+        "lazy" => run_infmax(&g, &cfg),
+        "dense-cpu" => run_infmax(&g, &cfg.with_local_solver(LocalSolver::DenseCpu)),
+        "dense-xla" => {
+            let mut scorer = XlaScorer::new()?;
+            if !scorer.artifacts_present() {
+                bail!("no AOT artifacts found — run `make artifacts` first");
+            }
+            run_infmax_with_scorer(&g, &cfg.with_local_solver(LocalSolver::DenseXla), Some(&mut scorer))
+        }
+        other => bail!("unknown solver '{other}'"),
+    };
+    println!(
+        "{} | m = {m} | theta = {} | rounds = {} | modeled time = {:.4}s (wall {:.2}s)",
+        algorithm.as_str(),
+        result.theta,
+        result.rounds,
+        result.sim_time,
+        result.wall_time
+    );
+    println!("breakdown: {}", result.breakdown);
+    println!(
+        "comm: all-to-all {} B | stream {} B ({} seeds) | reductions {} B",
+        result.volumes.alltoall_bytes,
+        result.volumes.stream_bytes,
+        result.volumes.streamed_seeds,
+        result.volumes.reduction_bytes
+    );
+    println!("worst-case approx ratio (in expectation): {:.3}", result.worst_case_ratio);
+    println!("seeds: {:?}", &result.seeds[..result.seeds.len().min(20)]);
+    let sims: usize = flags.get("sims", 5)?;
+    if sims > 0 {
+        let s = evaluate_spread(&g, &result.seeds, model, sims, seed ^ 0xEC0);
+        println!(
+            "expected influence over {sims} sims: {:.1} ± {:.1} ({:.2}% of n)",
+            s.mean,
+            s.stddev,
+            s.mean / g.n() as f64 * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_exp(id: &str) -> Result<()> {
+    let scale = BenchScale::from_env();
+    let mut cache = GraphCache::default();
+    let all = id == "all";
+    let mut matched = all;
+    if all || id == "table2" {
+        matched = true;
+        print!("{}", tables::table2(scale, &mut cache).render());
+    }
+    if all || id == "table4" {
+        matched = true;
+        for model in [DiffusionModel::LT, DiffusionModel::IC] {
+            let inputs = tables::all_inputs();
+            print!("{}", tables::table4(scale, model, &inputs, &mut cache).render());
+        }
+    }
+    if all || id == "table5" {
+        matched = true;
+        let inputs = tables::scaling_inputs();
+        print!(
+            "{}",
+            tables::table5(scale, &inputs, &[8, 16, 32, 64, 128, 256, 512], &mut cache).render()
+        );
+    }
+    if all || id == "table6" {
+        matched = true;
+        print!("{}", tables::table6(scale, &mut cache).render());
+    }
+    if all || id == "fig3" {
+        matched = true;
+        print!("{}", tables::fig3(scale, &[8, 16, 32, 64, 128, 256, 512], &mut cache).render());
+    }
+    if all || id == "fig4" {
+        matched = true;
+        print!("{}", tables::fig4(scale, &[8, 16, 32, 64, 128, 256, 512], &mut cache).render());
+    }
+    if all || id == "fig5" {
+        matched = true;
+        let inputs = ["pokec", "livejournal", "orkut-group", "wikipedia"];
+        print!("{}", tables::fig5(scale, &inputs, &[8, 16, 32, 64, 128, 256, 512], &mut cache).render());
+    }
+    if !matched {
+        bail!("unknown experiment id '{id}'\n{USAGE}");
+    }
+    Ok(())
+}
+
+fn cmd_opim(flags: &Flags) -> Result<()> {
+    let model = DiffusionModel::IC;
+    let input = flags.get_str("input", "friendster");
+    let g = load_graph(&input, None, model, 0x5EED)?;
+    let m: usize = flags.get("m", 512)?;
+    let k: usize = flags.get("k", 100)?;
+    let theta_max: u64 = flags.get("theta-max", 4096_u64)?;
+    println!("OPIM-C on '{}' (n = {}), m = {m}, k = {k}", g.name, g.n());
+    for alpha in [1.0, 0.5, 0.25, 0.125] {
+        let mut cfg = Config::new(k, m, model, Algorithm::GreediRisTrunc)
+            .with_alpha(alpha)
+            .with_eps(0.01);
+        cfg.delta = 0.0562;
+        let r = run_opim(&g, &cfg, theta_max / 8, theta_max, 0.99);
+        println!(
+            "alpha = {alpha:>6}: seed-select {:.3}s | bound {:.3} | theta {} | rounds {}",
+            r.seed_select_time, r.bound.guarantee, r.theta, r.rounds
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(&Flags::parse(rest)?),
+        "exp" => {
+            let flags = Flags::parse(rest)?;
+            let id = flags
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("exp needs an id\n{USAGE}"))?;
+            cmd_exp(id)
+        }
+        "opim" => cmd_opim(&Flags::parse(rest)?),
+        "inputs" => {
+            println!(
+                "{:>12} {:>8} {:>10} | paper: {:>12} {:>15}",
+                "analog", "n", "edges", "vertices", "edges"
+            );
+            for a in ANALOGS {
+                println!(
+                    "{:>12} {:>8} {:>10} | paper: {:>12} {:>15}",
+                    a.name,
+                    a.n(),
+                    a.edges,
+                    a.paper_vertices,
+                    a.paper_edges
+                );
+            }
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}

@@ -1,0 +1,257 @@
+//! Coverage data structures: the covered-universe bitmap and the covering
+//! set system S = { S(v) } (paper Table 1).
+
+use crate::sampling::SampleBatch;
+use crate::{SampleId, Vertex};
+
+/// Bitmap over the sample universe `[0, theta)` tracking covered samples.
+#[derive(Clone, Debug)]
+pub struct BitCover {
+    words: Vec<u64>,
+    theta: usize,
+    count: usize,
+}
+
+impl BitCover {
+    pub fn new(theta: usize) -> Self {
+        Self { words: vec![0; theta.div_ceil(64)], theta, count: 0 }
+    }
+
+    #[inline]
+    pub fn theta(&self) -> usize {
+        self.theta
+    }
+
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn contains(&self, id: SampleId) -> bool {
+        debug_assert!((id as usize) < self.theta);
+        self.words[(id >> 6) as usize] & (1u64 << (id & 63)) != 0
+    }
+
+    #[inline]
+    pub fn insert(&mut self, id: SampleId) -> bool {
+        let w = &mut self.words[(id >> 6) as usize];
+        let bit = 1u64 << (id & 63);
+        if *w & bit == 0 {
+            *w |= bit;
+            self.count += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Marginal gain of a covering subset: how many of `ids` are uncovered.
+    #[inline]
+    pub fn count_new(&self, ids: &[SampleId]) -> u32 {
+        let mut c = 0u32;
+        for &id in ids {
+            c += (!self.contains(id)) as u32;
+        }
+        c
+    }
+
+    /// Inserts all of `ids`; returns how many were newly covered.
+    pub fn insert_all(&mut self, ids: &[SampleId]) -> u32 {
+        let mut c = 0u32;
+        for &id in ids {
+            c += self.insert(id) as u32;
+        }
+        c
+    }
+
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+        self.count = 0;
+    }
+
+    /// Raw 64-bit words (for the dense packed path).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// The covering set system: for each candidate vertex, the sorted list of
+/// sample ids it covers. This is the sparse representation used by all
+/// sparse solvers; [`super::dense::PackedCovers`] is the bitmap twin used by
+/// the XLA path.
+#[derive(Clone, Debug, Default)]
+pub struct SetSystem {
+    /// Universe size (number of samples this system refers to).
+    pub theta: usize,
+    /// Candidate vertex ids, parallel to `sets`.
+    pub vertices: Vec<Vertex>,
+    /// `sets[i]` = sample ids covered by `vertices[i]`.
+    pub sets: Vec<Vec<SampleId>>,
+}
+
+impl SetSystem {
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.sets.iter().map(Vec::len).sum()
+    }
+
+    /// Inverts a batch of RRR samples into per-vertex covering subsets
+    /// (the `S_p(v) = { j | v ∈ R_p(j) }` construction, Alg. 3 line 4),
+    /// keeping only vertices that appear in at least one sample.
+    pub fn invert(n: usize, batches: &[&SampleBatch], theta: usize) -> Self {
+        let mut counts = vec![0u32; n];
+        for b in batches {
+            for set in &b.sets {
+                for &v in set {
+                    counts[v as usize] += 1;
+                }
+            }
+        }
+        let mut vertices = Vec::new();
+        let mut index = vec![u32::MAX; n];
+        for (v, &c) in counts.iter().enumerate() {
+            if c > 0 {
+                index[v] = vertices.len() as u32;
+                vertices.push(v as Vertex);
+            }
+        }
+        let mut sets: Vec<Vec<SampleId>> = vertices
+            .iter()
+            .map(|&v| Vec::with_capacity(counts[v as usize] as usize))
+            .collect();
+        for b in batches {
+            for (j, set) in b.sets.iter().enumerate() {
+                let sid = b.first_id + j as SampleId;
+                for &v in set {
+                    sets[index[v as usize] as usize].push(sid);
+                }
+            }
+        }
+        Self { theta, vertices, sets }
+    }
+
+    /// Restricts the system to a subset of vertex ids (used by the random
+    /// vertex partition of Alg. 3). `keep` must be a predicate on vertex id.
+    pub fn filter(&self, keep: impl Fn(Vertex) -> bool) -> Self {
+        let mut vertices = Vec::new();
+        let mut sets = Vec::new();
+        for (i, &v) in self.vertices.iter().enumerate() {
+            if keep(v) {
+                vertices.push(v);
+                sets.push(self.sets[i].clone());
+            }
+        }
+        Self { theta: self.theta, vertices, sets }
+    }
+
+    /// Coverage of an explicit seed set (vertex ids) under this system.
+    pub fn coverage_of(&self, seeds: &[Vertex]) -> u64 {
+        let mut cover = BitCover::new(self.theta);
+        for &s in seeds {
+            if let Some(i) = self.vertices.iter().position(|&v| v == s) {
+                cover.insert_all(&self.sets[i]);
+            }
+        }
+        cover.count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitcover_basics() {
+        let mut c = BitCover::new(130);
+        assert_eq!(c.count(), 0);
+        assert!(c.insert(0));
+        assert!(c.insert(64));
+        assert!(c.insert(129));
+        assert!(!c.insert(64), "double insert");
+        assert_eq!(c.count(), 3);
+        assert!(c.contains(129));
+        assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn bitcover_count_new_and_insert_all() {
+        let mut c = BitCover::new(100);
+        c.insert_all(&[1, 2, 3]);
+        assert_eq!(c.count_new(&[2, 3, 4, 5]), 2);
+        assert_eq!(c.insert_all(&[2, 3, 4, 5]), 2);
+        assert_eq!(c.count(), 5);
+    }
+
+    #[test]
+    fn bitcover_clear() {
+        let mut c = BitCover::new(10);
+        c.insert_all(&[0, 9]);
+        c.clear();
+        assert_eq!(c.count(), 0);
+        assert!(!c.contains(9));
+    }
+
+    #[test]
+    fn invert_simple() {
+        // Samples: 0 -> {0,1}, 1 -> {1,2}
+        let batch = SampleBatch {
+            first_id: 0,
+            sets: vec![vec![0, 1], vec![1, 2]],
+            roots: vec![0, 1],
+        };
+        let sys = SetSystem::invert(4, &[&batch], 2);
+        assert_eq!(sys.vertices, vec![0, 1, 2]);
+        // Vertex 1 appears in both samples.
+        let i1 = sys.vertices.iter().position(|&v| v == 1).unwrap();
+        assert_eq!(sys.sets[i1], vec![0, 1]);
+        // Vertex 3 appears nowhere and is dropped.
+        assert!(!sys.vertices.contains(&3));
+        assert_eq!(sys.total_entries(), 4);
+    }
+
+    #[test]
+    fn invert_multiple_batches_with_offsets() {
+        let b1 = SampleBatch { first_id: 0, sets: vec![vec![5]], roots: vec![5] };
+        let b2 = SampleBatch { first_id: 1, sets: vec![vec![5, 6]], roots: vec![5] };
+        let sys = SetSystem::invert(8, &[&b1, &b2], 2);
+        let i5 = sys.vertices.iter().position(|&v| v == 5).unwrap();
+        assert_eq!(sys.sets[i5], vec![0, 1]);
+        let i6 = sys.vertices.iter().position(|&v| v == 6).unwrap();
+        assert_eq!(sys.sets[i6], vec![1]);
+    }
+
+    #[test]
+    fn filter_partitions() {
+        let batch = SampleBatch {
+            first_id: 0,
+            sets: vec![vec![0, 1, 2, 3]],
+            roots: vec![0],
+        };
+        let sys = SetSystem::invert(4, &[&batch], 1);
+        let even = sys.filter(|v| v % 2 == 0);
+        let odd = sys.filter(|v| v % 2 == 1);
+        assert_eq!(even.len() + odd.len(), sys.len());
+    }
+
+    #[test]
+    fn coverage_of_seed_set() {
+        let batch = SampleBatch {
+            first_id: 0,
+            sets: vec![vec![0, 1], vec![1, 2], vec![2]],
+            roots: vec![0, 1, 2],
+        };
+        let sys = SetSystem::invert(3, &[&batch], 3);
+        assert_eq!(sys.coverage_of(&[0]), 1); // vertex 0 covers sample 0 only
+        assert_eq!(sys.coverage_of(&[1]), 2); // vertex 1 covers samples 0,1
+        assert_eq!(sys.coverage_of(&[1, 2]), 3);
+        assert_eq!(sys.coverage_of(&[]), 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Lazy greedy max-k-cover (paper Algorithm 2).
+//!
+//! Exploits submodularity: a max-heap keyed by (possibly stale) marginal
+//! gains. When the popped element's *recomputed* gain still beats the next
+//! heap key it is provably the argmax and is selected without touching the
+//! other candidates — in practice a large constant-factor win over the
+//! standard greedy (Minoux 1977).
+//!
+//! The sender processes of GreediRIS (§3.4 S3) use the callback variant
+//! [`lazy_greedy_stream`] to emit each seed *as it is identified*, which is
+//! what enables the tandem local/global computation.
+
+use super::coverage::{BitCover, SetSystem};
+use super::CoverSolution;
+use crate::{SampleId, Vertex};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Eq, PartialEq)]
+struct HeapEntry {
+    gain: u32,
+    idx: u32,
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Max by gain; ties prefer the *lower* index (matching the standard
+        // greedy's first-maximum rule).
+        self.gain
+            .cmp(&other.gain)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One seed-selection event passed to the [`lazy_greedy_stream`] callback.
+#[derive(Debug)]
+pub struct SelectEvent<'a> {
+    /// 0-based selection order of this seed.
+    pub order: usize,
+    /// Row index of the seed within the input [`SetSystem`].
+    pub idx: usize,
+    /// The selected vertex.
+    pub vertex: Vertex,
+    /// Marginal gain at selection time.
+    pub gain: u32,
+    /// The *residual* covering subset — the sample ids newly covered by
+    /// this seed. (The full subset is `sys.sets[idx]`; the GreediRIS sender
+    /// ships the full subset per §3.4 S3, but the residual is what updates
+    /// the local covered state.)
+    pub residual: &'a [SampleId],
+}
+
+/// Runs lazy greedy, invoking `emit` each time a seed is selected — the
+/// hook the GreediRIS senders use to stream seeds to the receiver as they
+/// are identified.
+pub fn lazy_greedy_stream(
+    sys: &SetSystem,
+    k: usize,
+    mut emit: impl FnMut(SelectEvent<'_>),
+) -> CoverSolution {
+    let mut covered = BitCover::new(sys.theta);
+    let mut heap: BinaryHeap<HeapEntry> = (0..sys.len())
+        .map(|i| HeapEntry { gain: sys.sets[i].len() as u32, idx: i as u32 })
+        .collect();
+    let mut sol = CoverSolution::default();
+    let mut residual: Vec<SampleId> = Vec::new();
+    while sol.len() < k {
+        let Some(top) = heap.pop() else { break };
+        let i = top.idx as usize;
+        // Recompute the true marginal gain (keys in the heap are stale upper
+        // bounds thanks to submodularity).
+        residual.clear();
+        for &id in &sys.sets[i] {
+            if !covered.contains(id) {
+                residual.push(id);
+            }
+        }
+        let gain = residual.len() as u32;
+        // Select iff the recomputed gain still dominates the heap. On gain
+        // ties we defer to the lower-indexed candidate (matching the
+        // standard greedy's first-maximum rule exactly): if the next heap
+        // entry has an equal (stale, hence >= true) key and a lower index,
+        // push this one back and let the other be examined first.
+        let select = match heap.peek() {
+            None => true,
+            Some(next) => {
+                gain > next.gain || (gain == next.gain && top.idx < next.idx)
+            }
+        };
+        if select {
+            if gain == 0 {
+                // This element is the (recomputed) maximum and it is 0 —
+                // every remaining true gain is 0 too.
+                break;
+            }
+            covered.insert_all(&residual);
+            emit(SelectEvent {
+                order: sol.len(),
+                idx: i,
+                vertex: sys.vertices[i],
+                gain,
+                residual: &residual,
+            });
+            sol.push(sys.vertices[i], gain);
+        } else {
+            heap.push(HeapEntry { gain, idx: top.idx });
+        }
+    }
+    sol
+}
+
+/// Lazy greedy without the streaming callback.
+pub fn lazy_greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
+    lazy_greedy_stream(sys, k, |_| {})
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxcover::greedy::greedy_max_cover;
+    use crate::rng::Xoshiro256pp;
+
+    fn sys(theta: usize, sets: Vec<Vec<u32>>) -> SetSystem {
+        let vertices = (0..sets.len() as u32).collect();
+        SetSystem { theta, vertices, sets }
+    }
+
+    #[test]
+    fn matches_greedy_on_tie_free_instance() {
+        let s = sys(
+            10,
+            vec![vec![0, 1, 2, 3, 4], vec![3, 4, 5], vec![5, 6, 7, 8], vec![9]],
+        );
+        let a = greedy_max_cover(&s, 4);
+        let b = lazy_greedy_max_cover(&s, 4);
+        assert_eq!(a.seeds, b.seeds);
+        assert_eq!(a.coverage, b.coverage);
+        assert_eq!(a.gains, b.gains);
+    }
+
+    #[test]
+    fn emits_residual_covering_sets() {
+        let s = sys(6, vec![vec![0, 1, 2, 3], vec![2, 3, 4, 5]]);
+        let mut emitted: Vec<(Vertex, u32, Vec<u32>)> = Vec::new();
+        lazy_greedy_stream(&s, 2, |e| emitted.push((e.vertex, e.gain, e.residual.to_vec())));
+        assert_eq!(emitted.len(), 2);
+        assert_eq!(emitted[0], (0, 4, vec![0, 1, 2, 3]));
+        // Second seed's residual excludes the already-covered 2, 3.
+        assert_eq!(emitted[1], (1, 2, vec![4, 5]));
+    }
+
+    #[test]
+    fn emit_order_and_idx_consistent() {
+        let s = sys(6, vec![vec![0], vec![1, 2, 3], vec![4, 5]]);
+        let mut orders = Vec::new();
+        lazy_greedy_stream(&s, 3, |e| {
+            assert_eq!(s.vertices[e.idx], e.vertex);
+            orders.push(e.order);
+        });
+        assert_eq!(orders, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn gains_non_increasing() {
+        let mut rng = Xoshiro256pp::seeded(17);
+        let theta = 200;
+        let sets: Vec<Vec<u32>> = (0..50)
+            .map(|_| {
+                let len = 1 + rng.gen_range(20) as usize;
+                (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect()
+            })
+            .collect();
+        let s = sys(theta, sets);
+        let sol = lazy_greedy_max_cover(&s, 20);
+        for w in sol.gains.windows(2) {
+            assert!(w[0] >= w[1], "gains must be non-increasing: {:?}", sol.gains);
+        }
+    }
+
+    #[test]
+    fn coverage_equals_greedy_on_random_instances() {
+        // Both implement greedy with the same first-maximum tie-break, so
+        // the selected sequences must coincide.
+        for seed in 0..20u64 {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            let theta = 128;
+            let sets: Vec<Vec<u32>> = (0..40)
+                .map(|_| {
+                    let len = 1 + rng.gen_range(15) as usize;
+                    let mut v: Vec<u32> =
+                        (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect();
+            let s = sys(theta, sets);
+            let a = greedy_max_cover(&s, 10);
+            let b = lazy_greedy_max_cover(&s, 10);
+            assert_eq!(a.seeds, b.seeds, "seed {seed}");
+            assert_eq!(a.coverage, b.coverage, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn stops_on_exhausted_universe() {
+        let s = sys(3, vec![vec![0, 1, 2], vec![0], vec![1, 2]]);
+        let sol = lazy_greedy_max_cover(&s, 3);
+        assert_eq!(sol.seeds, vec![0]);
+    }
+
+    #[test]
+    fn k_larger_than_candidates() {
+        let s = sys(4, vec![vec![0], vec![1]]);
+        let sol = lazy_greedy_max_cover(&s, 10);
+        assert_eq!(sol.len(), 2);
+        assert_eq!(sol.coverage, 2);
+    }
+}

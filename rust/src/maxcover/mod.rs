@@ -1,0 +1,66 @@
+//! The max-k-cover solver family (paper §3.2–§3.3).
+//!
+//! Seed selection in RIS-based InfMax reduces to max-k-cover: the universe is
+//! the set of `theta` RRR samples, the covering subsets are
+//! `S(v) = { i | v ∈ RRR(i) }`, and we seek `k` vertices maximizing
+//! `C(S) = |∪ S(v)|`.
+//!
+//! Solvers provided:
+//! - [`greedy::greedy_max_cover`] — textbook greedy, `(1 - 1/e)`-approximate.
+//! - [`lazy::lazy_greedy_max_cover`] — paper Alg. 2, same guarantee, faster.
+//! - [`streaming::StreamingMaxCover`] — paper Alg. 5 (McGregor–Vu),
+//!   `(1/2 - δ)`-approximate single pass, used at the global receiver.
+//! - [`threshold::threshold_greedy_max_cover`] and
+//!   [`stochastic::stochastic_greedy_max_cover`] — the accelerated greedy
+//!   variants §3.2 cites (Badanidiyuru–Vondrák; Mirzasoleiman et al.).
+//! - truncation (§3.3.2) is a parameter of the senders, see
+//!   [`crate::coordinator`]; its `(1 - e^{-α})` guarantee composes via
+//!   [`crate::imm::bounds`].
+//! - [`dense::PackedCovers`] + [`dense::GainScorer`] — the packed-bitmap
+//!   scoring hot path shared by the native CPU backend and the AOT-compiled
+//!   XLA/Pallas backend ([`crate::runtime`]).
+
+pub mod coverage;
+pub mod dense;
+pub mod greedy;
+pub mod lazy;
+pub mod stochastic;
+pub mod streaming;
+pub mod threshold;
+
+pub use coverage::{BitCover, SetSystem};
+pub use dense::{dense_greedy_max_cover, dense_greedy_max_cover_stream, CpuScorer, GainScorer, PackedCovers};
+pub use greedy::greedy_max_cover;
+pub use lazy::lazy_greedy_max_cover;
+pub use stochastic::stochastic_greedy_max_cover;
+pub use streaming::StreamingMaxCover;
+pub use threshold::threshold_greedy_max_cover;
+
+use crate::Vertex;
+
+/// A max-k-cover solution: chosen vertices in selection order, their
+/// marginal gains, and the total coverage achieved.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CoverSolution {
+    pub seeds: Vec<Vertex>,
+    /// Marginal gain (newly covered samples) of each seed, in order.
+    pub gains: Vec<u32>,
+    /// Total covered universe elements = sum of gains.
+    pub coverage: u64,
+}
+
+impl CoverSolution {
+    pub fn push(&mut self, seed: Vertex, gain: u32) {
+        self.seeds.push(seed);
+        self.gains.push(gain);
+        self.coverage += gain as u64;
+    }
+
+    pub fn len(&self) -> usize {
+        self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seeds.is_empty()
+    }
+}

@@ -1,0 +1,392 @@
+//! Streaming max-k-cover at the global receiver (paper Algorithm 5).
+//!
+//! The McGregor–Vu-style single-pass algorithm: buckets guess the optimum
+//! coverage as powers `v_b = (1+δ)^b`; a streamed-in covering subset `s` is
+//! admitted to bucket `b` iff the bucket still has room (`|S_b| < k`) and
+//! the marginal gain clears the bucket threshold `v_b / (2k)`. The best
+//! bucket at the end is `(1/2 − δ)`-approximate.
+//!
+//! The paper derives `u/l = k` ("the optimal cover could be at most k times
+//! the cover of a set with the maximum marginal gain"), so at any point the
+//! live guesses span `[l, k·l]` where `l` is the largest subset seen so
+//! far — `B = log_{1+δ} k` concurrently-live buckets (63 for δ = 0.077,
+//! k = 100: one per receiver bucketing-thread on their Perlmutter nodes).
+//! Since `l` is only known online, buckets are *created lazily* as larger
+//! subsets stream in (the Sieve-Streaming construction); early buckets are
+//! retained — they can only improve the final max.
+
+use super::CoverSolution;
+use crate::{SampleId, Vertex};
+
+/// State of a single threshold bucket.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    /// This bucket's guess of OPT (`(1+δ)^exponent`).
+    pub opt_guess: f64,
+    /// Covered sample ids (bitmap over the universe).
+    covered: Vec<u64>,
+    covered_count: u64,
+    /// Selected seeds.
+    pub seeds: Vec<Vertex>,
+    pub gains: Vec<u32>,
+}
+
+impl Bucket {
+    /// Creates an empty bucket guessing `opt_guess` for OPT, over a universe
+    /// of `words`×64 bits.
+    pub fn new(opt_guess: f64, words: usize) -> Self {
+        Self { opt_guess, covered: vec![0; words], covered_count: 0, seeds: Vec::new(), gains: Vec::new() }
+    }
+
+    #[inline]
+    pub fn coverage(&self) -> u64 {
+        self.covered_count
+    }
+
+    /// Marginal gain of `ids` against this bucket's covered set.
+    #[inline]
+    fn marginal(&self, ids: &[SampleId]) -> u32 {
+        let mut g = 0u32;
+        for &id in ids {
+            g += ((self.covered[(id >> 6) as usize] >> (id & 63)) & 1 == 0) as u32;
+        }
+        g
+    }
+
+    #[inline]
+    fn absorb(&mut self, ids: &[SampleId]) -> u32 {
+        let mut g = 0u32;
+        for &id in ids {
+            let w = &mut self.covered[(id >> 6) as usize];
+            let bit = 1u64 << (id & 63);
+            if *w & bit == 0 {
+                *w |= bit;
+                g += 1;
+            }
+        }
+        self.covered_count += g as u64;
+        g
+    }
+
+    /// The Alg. 5 admission rule for one element: admits `v` iff the bucket
+    /// has room and the marginal gain clears `opt_guess / (2k)`. This is
+    /// THE single definition of the rule — the sequential solver and the
+    /// threaded receiver both call it, so they cannot drift apart.
+    pub fn try_admit(&mut self, v: Vertex, ids: &[SampleId], k: usize) -> bool {
+        if self.seeds.len() >= k {
+            return false;
+        }
+        let gain = self.marginal(ids);
+        if (gain as f64) >= self.opt_guess / (2.0 * k as f64) && gain > 0 {
+            self.absorb(ids);
+            self.seeds.push(v);
+            self.gains.push(gain);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// A dynamically-grown family of threshold buckets, optionally restricted
+/// to an exponent residue class (`exponent % modulus == residue`) so the
+/// threaded receiver's bucketing threads can own disjoint bucket subsets
+/// while staying bit-identical to the sequential solver.
+pub struct BucketBank {
+    k: usize,
+    delta: f64,
+    words: usize,
+    residue: usize,
+    modulus: usize,
+    /// Largest subset size seen (the online lower bound `l` on OPT).
+    l_seen: u64,
+    /// Highest exponent materialized so far (buckets cover `..=hi`).
+    hi: Option<i32>,
+    /// (exponent, bucket), ascending by exponent.
+    pub buckets: Vec<(i32, Bucket)>,
+}
+
+impl BucketBank {
+    pub fn new(theta: usize, k: usize, delta: f64, residue: usize, modulus: usize) -> Self {
+        assert!(delta > 0.0 && delta < 0.5, "delta must be in (0, 1/2)");
+        assert!(k >= 1 && modulus >= 1 && residue < modulus);
+        Self {
+            k,
+            delta,
+            words: theta.div_ceil(64).max(1),
+            residue,
+            modulus,
+            l_seen: 0,
+            hi: None,
+            buckets: Vec::new(),
+        }
+    }
+
+    /// Processes one streamed element: update `l`, materialize any newly
+    /// justified buckets (guesses up to `k·l`), then run the admission rule
+    /// on every owned bucket. Returns the number of admissions.
+    pub fn offer(&mut self, v: Vertex, ids: &[SampleId]) -> usize {
+        let s = ids.len().max(1) as u64;
+        if s > self.l_seen {
+            self.l_seen = s;
+            // Guesses span up to u = k·l (paper: u/l = k). Materialize all
+            // exponents b with (1+δ)^b <= k·l not yet present.
+            let u = (self.k as u64 * self.l_seen) as f64;
+            let new_hi = (u.ln() / (1.0 + self.delta).ln()).floor() as i32;
+            let start = match self.hi {
+                None => {
+                    // First element: also materialize down to l's exponent.
+                    let lo = ((self.l_seen as f64).ln() / (1.0 + self.delta).ln()).floor() as i32;
+                    lo
+                }
+                Some(h) => h + 1,
+            };
+            for b in start..=new_hi {
+                if (b.rem_euclid(self.modulus as i32)) as usize == self.residue {
+                    self.buckets.push((b, Bucket::new((1.0 + self.delta).powi(b), self.words)));
+                }
+            }
+            self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
+        }
+        let mut adm = 0;
+        for (_, b) in &mut self.buckets {
+            if b.try_admit(v, ids, self.k) {
+                adm += 1;
+            }
+        }
+        adm
+    }
+
+    /// Best bucket's solution.
+    pub fn best(&self) -> CoverSolution {
+        self.buckets
+            .iter()
+            .max_by(|a, b| a.1.coverage().cmp(&b.1.coverage()).then(b.0.cmp(&a.0)))
+            .map(|(_, b)| CoverSolution {
+                seeds: b.seeds.clone(),
+                gains: b.gains.clone(),
+                coverage: b.coverage(),
+            })
+            .unwrap_or_default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+/// One-pass streaming max-k-cover solver (sequential form — the threaded
+/// receiver in [`crate::coordinator::receiver`] shards the same
+/// [`BucketBank`] logic across threads).
+pub struct StreamingMaxCover {
+    bank: BucketBank,
+    /// Number of stream elements processed.
+    pub processed: usize,
+    /// Number of (element, bucket) insertions performed.
+    pub insertions: usize,
+}
+
+impl StreamingMaxCover {
+    pub fn new(theta: usize, k: usize, delta: f64) -> Self {
+        Self { bank: BucketBank::new(theta, k, delta, 0, 1), processed: 0, insertions: 0 }
+    }
+
+    /// Nominal concurrently-live bucket count `B = ⌈log_{1+δ} k⌉` — the
+    /// figure the paper sizes its receiver thread pool with.
+    pub fn bucket_count(k: usize, delta: f64) -> usize {
+        ((k as f64).ln() / (1.0 + delta).ln()).ceil().max(1.0) as usize
+    }
+
+    /// Processes one streamed-in covering subset (seed `v` with cover `ids`).
+    pub fn offer(&mut self, v: Vertex, ids: &[SampleId]) {
+        self.processed += 1;
+        self.insertions += self.bank.offer(v, ids);
+    }
+
+    /// Returns the solution of the best bucket (`b* = argmax_b |C_b|`).
+    pub fn finalize(&self) -> CoverSolution {
+        self.bank.best()
+    }
+
+    /// Buckets materialized so far (ascending guess).
+    pub fn num_buckets(&self) -> usize {
+        self.bank.len()
+    }
+
+    /// Read access for tests/diagnostics.
+    pub fn buckets(&self) -> impl Iterator<Item = &Bucket> {
+        self.bank.buckets.iter().map(|(_, b)| b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxcover::coverage::SetSystem;
+    use crate::maxcover::greedy::greedy_max_cover;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn bucket_count_matches_paper_configs() {
+        // δ = 0.077, k = 100 -> 63 buckets (paper §4.1: "number of buckets
+        // approximately equal to the number of available threads (63)").
+        assert_eq!(StreamingMaxCover::bucket_count(100, 0.077), 63);
+        assert_eq!(StreamingMaxCover::bucket_count(1000, 0.0562), 127);
+    }
+
+    #[test]
+    fn single_element_stream() {
+        let mut s = StreamingMaxCover::new(10, 2, 0.1);
+        s.offer(7, &[0, 1, 2]);
+        let sol = s.finalize();
+        assert_eq!(sol.seeds, vec![7]);
+        assert_eq!(sol.coverage, 3);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let s = StreamingMaxCover::new(10, 2, 0.1);
+        assert!(s.finalize().is_empty());
+    }
+
+    #[test]
+    fn respects_k() {
+        let mut s = StreamingMaxCover::new(100, 2, 0.1);
+        for i in 0..10u32 {
+            s.offer(i, &[i * 3, i * 3 + 1, i * 3 + 2]);
+        }
+        let sol = s.finalize();
+        assert!(sol.seeds.len() <= 2, "k bound violated: {:?}", sol.seeds);
+    }
+
+    #[test]
+    fn rejects_low_gain_elements_in_high_buckets() {
+        let mut s = StreamingMaxCover::new(1000, 4, 0.25);
+        s.offer(0, &(0..100).collect::<Vec<_>>());
+        // A tiny, heavily-overlapping set should be rejected by the buckets
+        // that guess a large OPT.
+        s.offer(1, &[0, 1]);
+        let high = s.buckets().last().unwrap();
+        assert!(!high.seeds.contains(&1));
+    }
+
+    #[test]
+    fn buckets_grow_when_larger_elements_arrive() {
+        let mut s = StreamingMaxCover::new(4096, 5, 0.2);
+        s.offer(0, &[0]);
+        let before = s.num_buckets();
+        s.offer(1, &(0..600).collect::<Vec<_>>());
+        assert!(s.num_buckets() > before, "{} vs {before}", s.num_buckets());
+    }
+
+    #[test]
+    fn adversarial_small_first_element_keeps_guarantee() {
+        // The case the naive fixed-anchor version got wrong: a singleton
+        // arrives first, then k large disjoint sets.
+        let k = 4;
+        let delta = 0.1;
+        let mut s = StreamingMaxCover::new(500, k, delta);
+        s.offer(99, &[499]);
+        for i in 0..k as u32 {
+            let ids: Vec<u32> = (i * 100..i * 100 + 100).collect();
+            s.offer(i, &ids);
+        }
+        let sol = s.finalize();
+        assert!(
+            sol.coverage as f64 >= (0.5 - delta) * 400.0,
+            "coverage {}",
+            sol.coverage
+        );
+    }
+
+    #[test]
+    fn half_minus_delta_guarantee_on_random_instances() {
+        let delta = 0.1;
+        for seed in 0..15u64 {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            let theta = 256;
+            let k = 5;
+            let sets: Vec<Vec<u32>> = (0..60)
+                .map(|_| {
+                    let len = 1 + rng.gen_range(30) as usize;
+                    let mut v: Vec<u32> =
+                        (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect();
+            let sys = SetSystem { theta, vertices: (0..60).collect(), sets: sets.clone() };
+            let greedy_cov = greedy_max_cover(&sys, k).coverage as f64;
+            let mut s = StreamingMaxCover::new(theta, k, delta);
+            for (i, ids) in sets.iter().enumerate() {
+                s.offer(i as u32, ids);
+            }
+            let got = s.finalize().coverage as f64;
+            assert!(
+                got >= (0.5 - delta) * greedy_cov,
+                "seed {seed}: streaming {got} < (1/2-δ)·greedy {greedy_cov}"
+            );
+        }
+    }
+
+    #[test]
+    fn processed_and_insertion_counters() {
+        let mut s = StreamingMaxCover::new(64, 3, 0.2);
+        s.offer(0, &[0, 1, 2, 3]);
+        s.offer(1, &[4, 5]);
+        assert_eq!(s.processed, 2);
+        assert!(s.insertions >= 1);
+    }
+
+    #[test]
+    fn duplicate_offers_do_not_inflate_coverage() {
+        let mut s = StreamingMaxCover::new(32, 3, 0.2);
+        s.offer(0, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        s.offer(0, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let sol = s.finalize();
+        assert_eq!(sol.coverage, 8);
+    }
+
+    #[test]
+    fn residue_sharded_banks_union_equals_sequential() {
+        // The threaded receiver's invariant: banks over residue classes
+        // {0..T-1} mod T together produce exactly the sequential buckets.
+        let mut rng = Xoshiro256pp::seeded(3);
+        let theta = 300;
+        let k = 6;
+        let items: Vec<Vec<u32>> = (0..50)
+            .map(|_| {
+                let len = 1 + rng.gen_range(25) as usize;
+                let mut v: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        let mut seq = StreamingMaxCover::new(theta, k, 0.15);
+        for (i, ids) in items.iter().enumerate() {
+            seq.offer(i as u32, ids);
+        }
+        let t = 3;
+        let mut banks: Vec<BucketBank> =
+            (0..t).map(|j| BucketBank::new(theta, k, 0.15, j, t)).collect();
+        for (i, ids) in items.iter().enumerate() {
+            for b in &mut banks {
+                b.offer(i as u32, ids);
+            }
+        }
+        let best_sharded = banks
+            .iter()
+            .map(|b| b.best())
+            .max_by_key(|s| s.coverage)
+            .unwrap();
+        assert_eq!(seq.finalize().coverage, best_sharded.coverage);
+        let total: usize = banks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, seq.num_buckets());
+    }
+}

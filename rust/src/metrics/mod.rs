@@ -1,0 +1,135 @@
+//! Phase timing and communication accounting — the instrumentation that
+//! regenerates the paper's breakdown figures (Fig. 4, Fig. 5 shaded region).
+
+use std::fmt;
+
+/// Simulated-time breakdown of one InfMax run (accumulated across
+/// martingale rounds). All values are seconds of *critical-path* time
+/// attributable to the phase, per the paper's Fig. 4 methodology:
+/// sender-side times are taken from the longest-running sender.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Breakdown {
+    /// S1 — distributed RRR sampling.
+    pub sampling: f64,
+    /// S2 — all-to-all shuffle of partial covering sets.
+    pub alltoall: f64,
+    /// S3 — local max-k-cover at the senders (longest sender).
+    pub select_local: f64,
+    /// S4 — global aggregation (streaming receiver / offline merge /
+    /// k-reduction loop for the baselines).
+    pub select_global: f64,
+    /// Final solution broadcast + martingale bookkeeping.
+    pub coordination: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.sampling + self.alltoall + self.select_local + self.select_global + self.coordination
+    }
+
+    /// Seed-selection share (Fig. 5 shaded fraction): local + global
+    /// selection over total.
+    pub fn seed_selection_fraction(&self) -> f64 {
+        if self.total() == 0.0 {
+            return 0.0;
+        }
+        (self.select_local + self.select_global) / self.total()
+    }
+
+    pub fn add(&mut self, other: &Breakdown) {
+        self.sampling += other.sampling;
+        self.alltoall += other.alltoall;
+        self.select_local += other.select_local;
+        self.select_global += other.select_global;
+        self.coordination += other.coordination;
+    }
+}
+
+impl fmt::Display for Breakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "sampling {:.3}s | all-to-all {:.3}s | local-select {:.3}s | global-select {:.3}s | coord {:.3}s",
+            self.sampling, self.alltoall, self.select_local, self.select_global, self.coordination
+        )
+    }
+}
+
+/// Communication-volume counters (bytes on the modeled wire).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommVolume {
+    pub alltoall_bytes: u64,
+    pub stream_bytes: u64,
+    pub reduction_bytes: u64,
+    pub broadcast_bytes: u64,
+    /// Number of seeds shipped sender→receiver (streaming path).
+    pub streamed_seeds: u64,
+}
+
+impl CommVolume {
+    pub fn total_bytes(&self) -> u64 {
+        self.alltoall_bytes + self.stream_bytes + self.reduction_bytes + self.broadcast_bytes
+    }
+
+    pub fn add(&mut self, o: &CommVolume) {
+        self.alltoall_bytes += o.alltoall_bytes;
+        self.stream_bytes += o.stream_bytes;
+        self.reduction_bytes += o.reduction_bytes;
+        self.broadcast_bytes += o.broadcast_bytes;
+        self.streamed_seeds += o.streamed_seeds;
+    }
+}
+
+/// Receiver-side thread breakdown (Fig. 4b): the communicating thread's
+/// wait vs work, and the bucketing threads' insert time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReceiverBreakdown {
+    /// Time the communicating thread spent blocked on receive (idle).
+    pub comm_thread_wait: f64,
+    /// Time the communicating thread spent enqueueing.
+    pub comm_thread_work: f64,
+    /// Max bucketing-thread busy time.
+    pub bucket_thread_work: f64,
+    /// Number of bucketing threads modeled.
+    pub bucket_threads: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_and_fraction() {
+        let b = Breakdown {
+            sampling: 2.0,
+            alltoall: 1.0,
+            select_local: 3.0,
+            select_global: 4.0,
+            coordination: 0.0,
+        };
+        assert_eq!(b.total(), 10.0);
+        assert!((b.seed_selection_fraction() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_total_fraction_is_zero() {
+        assert_eq!(Breakdown::default().seed_selection_fraction(), 0.0);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = Breakdown { sampling: 1.0, ..Default::default() };
+        a.add(&Breakdown { sampling: 2.0, alltoall: 3.0, ..Default::default() });
+        assert_eq!(a.sampling, 3.0);
+        assert_eq!(a.alltoall, 3.0);
+    }
+
+    #[test]
+    fn comm_volume_totals() {
+        let mut v = CommVolume::default();
+        v.add(&CommVolume { alltoall_bytes: 10, stream_bytes: 5, ..Default::default() });
+        v.add(&CommVolume { reduction_bytes: 3, broadcast_bytes: 2, streamed_seeds: 7, ..Default::default() });
+        assert_eq!(v.total_bytes(), 20);
+        assert_eq!(v.streamed_seeds, 7);
+    }
+}

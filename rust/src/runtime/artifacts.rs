@@ -1,0 +1,78 @@
+//! AOT artifact naming and shape-bucket selection.
+//!
+//! The Pallas kernel is lowered for a fixed menu of `(n, w)` shapes
+//! (`python/compile/aot.py` writes one `gains_n{N}_w{W}.hlo.txt` per
+//! bucket). At run time the scorer picks the smallest bucket that fits and
+//! zero-pads — padded rows are masked inactive, padded words are zero, so
+//! results are exact.
+
+use std::path::{Path, PathBuf};
+
+/// One compiled shape bucket: `n` candidate rows × `w` u32 words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShapeBucket {
+    pub n: usize,
+    pub w: usize,
+}
+
+/// The bucket menu. Must match `SHAPE_BUCKETS` in `python/compile/aot.py`
+/// (asserted by the integration test `tests/runtime_xla.rs`).
+pub const BUCKETS: &[ShapeBucket] = &[
+    ShapeBucket { n: 256, w: 32 },
+    ShapeBucket { n: 1024, w: 64 },
+    ShapeBucket { n: 4096, w: 128 },
+    ShapeBucket { n: 16384, w: 512 },
+];
+
+impl ShapeBucket {
+    pub fn file_name(&self) -> String {
+        format!("gains_n{}_w{}.hlo.txt", self.n, self.w)
+    }
+
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(self.file_name())
+    }
+}
+
+/// Smallest bucket covering `(n, w)`, or `None` if it exceeds the menu.
+pub fn bucket_for(n: usize, w: usize) -> Option<ShapeBucket> {
+    BUCKETS
+        .iter()
+        .copied()
+        .filter(|b| b.n >= n && b.w >= w)
+        .min_by_key(|b| (b.n * b.w, b.n))
+}
+
+/// Default artifacts directory: `$GREEDIRIS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("GREEDIRIS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        assert_eq!(bucket_for(100, 10), Some(ShapeBucket { n: 256, w: 32 }));
+        assert_eq!(bucket_for(256, 32), Some(ShapeBucket { n: 256, w: 32 }));
+        assert_eq!(bucket_for(257, 32), Some(ShapeBucket { n: 1024, w: 64 }));
+        assert_eq!(bucket_for(1000, 100), Some(ShapeBucket { n: 4096, w: 128 }));
+    }
+
+    #[test]
+    fn oversized_returns_none() {
+        assert_eq!(bucket_for(1 << 20, 8), None);
+        assert_eq!(bucket_for(8, 1 << 20), None);
+    }
+
+    #[test]
+    fn file_names_stable() {
+        assert_eq!(
+            ShapeBucket { n: 1024, w: 64 }.file_name(),
+            "gains_n1024_w64.hlo.txt"
+        );
+    }
+}

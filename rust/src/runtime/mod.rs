@@ -1,0 +1,12 @@
+//! PJRT/XLA runtime — loads the AOT-compiled Pallas coverage kernel
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and exposes it
+//! as a [`GainScorer`](crate::maxcover::GainScorer) backend for the dense
+//! greedy solver. Python never runs here: the HLO text is the interchange
+//! format (see /opt/xla-example/README.md on why text, not serialized
+//! protos).
+
+pub mod artifacts;
+pub mod scorer;
+
+pub use artifacts::{bucket_for, ShapeBucket, BUCKETS};
+pub use scorer::XlaScorer;

@@ -1,0 +1,131 @@
+//! Random Reverse Reachable (RRR) sampling — the `Sample(.)` step of IMM
+//! (paper §2.1) and step S1 of the GreediRIS workflow (§3.4).
+
+mod rrr;
+
+pub use rrr::{RrrSampler, SampleBatch};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::DiffusionModel;
+    use crate::graph::weights::WeightModel;
+    use crate::graph::Graph;
+
+    fn path_graph(p: f32) -> Graph {
+        // 0 -> 1 -> 2 -> 3
+        Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)], WeightModel::Const(p), 1)
+    }
+
+    #[test]
+    fn ic_rrr_full_probability_is_ancestor_set() {
+        let g = path_graph(1.0);
+        let mut s = RrrSampler::new(&g, DiffusionModel::IC, 42);
+        // With p=1, RRR(v) = all vertices that can reach v.
+        for root in 0..4u32 {
+            let set = s.sample_for_root(root);
+            let expected: Vec<u32> = (0..=root).collect();
+            let mut got = set.clone();
+            got.sort_unstable();
+            assert_eq!(got, expected, "root {root}");
+        }
+    }
+
+    #[test]
+    fn ic_rrr_zero_probability_is_singleton() {
+        let g = path_graph(0.0);
+        let mut s = RrrSampler::new(&g, DiffusionModel::IC, 42);
+        for root in 0..4u32 {
+            assert_eq!(s.sample_for_root(root), vec![root]);
+        }
+    }
+
+    #[test]
+    fn rrr_root_always_included() {
+        let g = path_graph(0.5);
+        for model in [DiffusionModel::IC, DiffusionModel::LT] {
+            let mut s = RrrSampler::new(&g, model, 7);
+            for id in 0..50u32 {
+                let (root, set) = s.sample(id);
+                assert!(set.contains(&root), "{model:?} sample {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn rrr_leapfrog_consistency() {
+        // Same global sample id => identical RRR set, independent of order.
+        let g = path_graph(0.5);
+        let mut s1 = RrrSampler::new(&g, DiffusionModel::IC, 99);
+        let mut s2 = RrrSampler::new(&g, DiffusionModel::IC, 99);
+        let forward: Vec<_> = (0..32u32).map(|i| s1.sample(i)).collect();
+        let backward: Vec<_> = (0..32u32).rev().map(|i| s2.sample(i)).collect();
+        for (i, fwd) in forward.iter().enumerate() {
+            assert_eq!(*fwd, backward[31 - i]);
+        }
+    }
+
+    #[test]
+    fn lt_rrr_is_a_path() {
+        // LT reverse sampling picks at most one in-neighbor per step, so the
+        // RRR set size is bounded by the longest reverse path + 1 and every
+        // vertex appears at most once.
+        let g = path_graph(1.0);
+        let mut s = RrrSampler::new(&g, DiffusionModel::LT, 5);
+        for id in 0..100u32 {
+            let (_, set) = s.sample(id);
+            let mut dedup = set.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), set.len(), "no repeats in an LT walk");
+            assert!(set.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn lt_walk_respects_total_in_weight() {
+        // Vertex 1 has a single in-edge of weight 0.5 under LtNormalized
+        // scale 0.5 => reverse walk from 1 extends with prob 0.5.
+        let g = Graph::from_edges(
+            2,
+            &[(0, 1)],
+            WeightModel::LtNormalized { seed_scale: 0.5 },
+            3,
+        );
+        let mut s = RrrSampler::new(&g, DiffusionModel::LT, 8);
+        let extended = (0..40_000u32)
+            .map(|i| s.sample_for_root_with_id(1, i))
+            .filter(|set| set.len() == 2)
+            .count();
+        let rate = extended as f64 / 40_000.0;
+        assert!((rate - 0.5).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn batch_generation_contiguous_ids() {
+        let g = path_graph(0.5);
+        let mut s = RrrSampler::new(&g, DiffusionModel::IC, 1);
+        let batch = s.batch(10, 5);
+        assert_eq!(batch.first_id, 10);
+        assert_eq!(batch.sets.len(), 5);
+        // Bitwise identical to individually generated samples.
+        let mut s2 = RrrSampler::new(&g, DiffusionModel::IC, 1);
+        for (j, set) in batch.sets.iter().enumerate() {
+            let (_, single) = s2.sample(10 + j as u32);
+            assert_eq!(*set, single);
+        }
+    }
+
+    #[test]
+    fn ic_single_edge_inclusion_rate() {
+        // RRR(1) on edge (0 -> 1, p=0.3) contains 0 with probability 0.3.
+        let g = Graph::from_edges(2, &[(0, 1)], WeightModel::Const(0.3), 1);
+        let mut s = RrrSampler::new(&g, DiffusionModel::IC, 2);
+        let hits = (0..50_000u32)
+            .map(|i| s.sample_for_root_with_id(1, i))
+            .filter(|set| set.len() == 2)
+            .count();
+        let rate = hits as f64 / 50_000.0;
+        assert!((rate - 0.3).abs() < 0.01, "rate {rate}");
+    }
+}

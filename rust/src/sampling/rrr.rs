@@ -1,0 +1,156 @@
+//! RRR-set generation: probabilistic reverse BFS (IC) and reverse
+//! live-edge walk (LT).
+//!
+//! For IC, a random subgraph `g` keeps each edge independently with its
+//! probability; `RRR_g(u)` is everything that reaches `u` in `g` (paper
+//! Def. 2.3) — computed lazily by flipping coins only on the edges the
+//! reverse BFS actually touches (the standard RIS trick).
+//!
+//! For LT, the live-edge distribution picks *at most one* in-edge per vertex
+//! (in-neighbor `v` with probability `w(v,u)`, none with probability
+//! `1 - Σw`), so the reverse traversal is a walk; this is why the paper
+//! observes "shallower BFS traversals (shorter RRR set sizes)" under LT.
+
+use crate::diffusion::DiffusionModel;
+use crate::graph::Graph;
+use crate::rng::{domains, stream_for};
+use crate::{SampleId, Vertex};
+
+/// A batch of RRR sets with contiguous global ids `[first_id, first_id+len)`.
+#[derive(Clone, Debug, Default)]
+pub struct SampleBatch {
+    pub first_id: SampleId,
+    /// `sets[j]` is the RRR set for global sample id `first_id + j`.
+    pub sets: Vec<Vec<Vertex>>,
+    /// Roots (for diagnostics; the root is also contained in its set).
+    pub roots: Vec<Vertex>,
+}
+
+impl SampleBatch {
+    pub fn total_entries(&self) -> usize {
+        self.sets.iter().map(Vec::len).sum()
+    }
+}
+
+/// Reusable sampler holding scratch buffers (visited epochs + BFS queue) so
+/// repeated sampling does not allocate.
+pub struct RrrSampler<'g> {
+    g: &'g Graph,
+    model: DiffusionModel,
+    root_seed: u64,
+    /// Epoch-stamped visited marks (avoids clearing an n-bit array per sample).
+    visited_epoch: Vec<u32>,
+    epoch: u32,
+    queue: Vec<Vertex>,
+}
+
+impl<'g> RrrSampler<'g> {
+    pub fn new(g: &'g Graph, model: DiffusionModel, root_seed: u64) -> Self {
+        Self {
+            g,
+            model,
+            root_seed,
+            visited_epoch: vec![0; g.n()],
+            epoch: 0,
+            queue: Vec::with_capacity(256),
+        }
+    }
+
+    /// Generates the RRR set for global sample id `id`. The root is chosen
+    /// uniformly at random from the id's own stream, so the result is a pure
+    /// function of `(graph, model, root_seed, id)` — the leap-frog property.
+    pub fn sample(&mut self, id: SampleId) -> (Vertex, Vec<Vertex>) {
+        let mut rng = stream_for(self.root_seed, domains::SAMPLE, id as u64);
+        let root = rng.gen_range(self.g.n() as u64) as Vertex;
+        let set = self.walk(root, &mut rng);
+        (root, set)
+    }
+
+    /// Like [`Self::sample`] but with a caller-chosen root (tests/diagnostics).
+    pub fn sample_for_root_with_id(&mut self, root: Vertex, id: SampleId) -> Vec<Vertex> {
+        let mut rng = stream_for(self.root_seed, domains::SAMPLE, id as u64);
+        self.walk(root, &mut rng)
+    }
+
+    /// Single sample from a fresh stream for `root` (tests).
+    pub fn sample_for_root(&mut self, root: Vertex) -> Vec<Vertex> {
+        self.sample_for_root_with_id(root, root)
+    }
+
+    /// Generates `count` samples with ids `[first_id, first_id + count)`.
+    pub fn batch(&mut self, first_id: SampleId, count: usize) -> SampleBatch {
+        let mut sets = Vec::with_capacity(count);
+        let mut roots = Vec::with_capacity(count);
+        for j in 0..count {
+            let (root, set) = self.sample(first_id + j as SampleId);
+            roots.push(root);
+            sets.push(set);
+        }
+        SampleBatch { first_id, sets, roots }
+    }
+
+    fn walk(&mut self, root: Vertex, rng: &mut crate::rng::Xoshiro256pp) -> Vec<Vertex> {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Epoch counter wrapped: reset marks once.
+            self.visited_epoch.fill(0);
+            self.epoch = 1;
+        }
+        let epoch = self.epoch;
+        let mut out: Vec<Vertex> = Vec::with_capacity(8);
+        self.visited_epoch[root as usize] = epoch;
+        out.push(root);
+        match self.model {
+            DiffusionModel::IC => {
+                self.queue.clear();
+                self.queue.push(root);
+                let mut head = 0usize;
+                while head < self.queue.len() {
+                    let u = self.queue[head];
+                    head += 1;
+                    let ns = self.g.rev.neighbors(u);
+                    let ts = self.g.rev.edge_thresholds(u);
+                    for (&v, &t) in ns.iter().zip(ts) {
+                        if rng.coin(t) && self.visited_epoch[v as usize] != epoch {
+                            self.visited_epoch[v as usize] = epoch;
+                            self.queue.push(v);
+                            out.push(v);
+                        }
+                    }
+                }
+            }
+            DiffusionModel::LT => {
+                // Reverse live-edge walk: pick one in-neighbor with
+                // probability proportional to its weight; stop with the
+                // residual probability 1 - sum(w) or on revisits.
+                let mut u = root;
+                loop {
+                    let ns = self.g.rev.neighbors(u);
+                    let ws = self.g.rev.edge_weights(u);
+                    if ns.is_empty() {
+                        break;
+                    }
+                    let r = rng.next_f32();
+                    let mut acc = 0f32;
+                    let mut chosen: Option<Vertex> = None;
+                    for (&v, &w) in ns.iter().zip(ws) {
+                        acc += w;
+                        if r < acc {
+                            chosen = Some(v);
+                            break;
+                        }
+                    }
+                    match chosen {
+                        Some(v) if self.visited_epoch[v as usize] != epoch => {
+                            self.visited_epoch[v as usize] = epoch;
+                            out.push(v);
+                            u = v;
+                        }
+                        _ => break,
+                    }
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,180 @@
+//! Property-based tests over randomized instances (the crate's own RNG
+//! drives case generation — the proptest crate is unavailable offline, so
+//! this implements the same shrink-free randomized-property methodology
+//! with explicit case counts and seeds printed on failure).
+
+use greediris::maxcover::{
+    greedy_max_cover, lazy_greedy_max_cover, CoverSolution, SetSystem, StreamingMaxCover,
+};
+use greediris::rng::Xoshiro256pp;
+
+const CASES: u64 = 60;
+
+fn random_system(seed: u64) -> (SetSystem, usize) {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let theta = 32 + rng.gen_range(480) as usize;
+    let n = 5 + rng.gen_range(80) as usize;
+    let k = 1 + rng.gen_range(12) as usize;
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = 1 + rng.gen_range(24) as usize;
+            let mut v: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect();
+    (
+        SetSystem { theta, vertices: (0..n as u32).collect(), sets },
+        k,
+    )
+}
+
+fn recompute_coverage(sys: &SetSystem, sol: &CoverSolution) -> u64 {
+    sys.coverage_of(&sol.seeds)
+}
+
+/// Property: lazy greedy ≡ standard greedy (same tie-break ⇒ identical
+/// seed sequences and gains) on arbitrary instances.
+#[test]
+fn prop_lazy_equals_greedy() {
+    for seed in 0..CASES {
+        let (sys, k) = random_system(seed);
+        let a = greedy_max_cover(&sys, k);
+        let b = lazy_greedy_max_cover(&sys, k);
+        assert_eq!(a.seeds, b.seeds, "seed {seed}");
+        assert_eq!(a.gains, b.gains, "seed {seed}");
+    }
+}
+
+/// Property: reported coverage equals recomputed coverage of the seed set.
+#[test]
+fn prop_coverage_self_consistent() {
+    for seed in 0..CASES {
+        let (sys, k) = random_system(seed + 1000);
+        for sol in [greedy_max_cover(&sys, k), lazy_greedy_max_cover(&sys, k)] {
+            assert_eq!(sol.coverage, recompute_coverage(&sys, &sol), "seed {seed}");
+            assert_eq!(sol.coverage, sol.gains.iter().map(|&g| g as u64).sum::<u64>());
+        }
+    }
+}
+
+/// Property: greedy gains are non-increasing (submodularity).
+#[test]
+fn prop_gains_monotone() {
+    for seed in 0..CASES {
+        let (sys, k) = random_system(seed + 2000);
+        let sol = greedy_max_cover(&sys, k);
+        for w in sol.gains.windows(2) {
+            assert!(w[0] >= w[1], "seed {seed}: {:?}", sol.gains);
+        }
+    }
+}
+
+/// Property: streaming achieves ≥ (1/2 − δ) of greedy coverage and never
+/// exceeds k seeds.
+#[test]
+fn prop_streaming_guarantee() {
+    let delta = 0.12;
+    for seed in 0..CASES {
+        let (sys, k) = random_system(seed + 3000);
+        let reference = greedy_max_cover(&sys, k);
+        let mut s = StreamingMaxCover::new(sys.theta, k, delta);
+        for (i, ids) in sys.sets.iter().enumerate() {
+            s.offer(sys.vertices[i], ids);
+        }
+        let sol = s.finalize();
+        assert!(sol.seeds.len() <= k, "seed {seed}");
+        assert!(
+            sol.coverage as f64 >= (0.5 - delta) * reference.coverage as f64,
+            "seed {seed}: streaming {} vs greedy {}",
+            sol.coverage,
+            reference.coverage
+        );
+        assert_eq!(sol.coverage, recompute_coverage(&sys, &sol), "seed {seed}");
+    }
+}
+
+/// Property: streaming output is invariant to duplicate re-offers.
+#[test]
+fn prop_streaming_duplicate_invariant() {
+    for seed in 0..20 {
+        let (sys, k) = random_system(seed + 4000);
+        let run = |dups: bool| {
+            let mut s = StreamingMaxCover::new(sys.theta, k, 0.1);
+            for (i, ids) in sys.sets.iter().enumerate() {
+                s.offer(sys.vertices[i], ids);
+                if dups {
+                    s.offer(sys.vertices[i], ids);
+                }
+            }
+            s.finalize()
+        };
+        let once = run(false);
+        let twice = run(true);
+        // Re-offering an element right after itself never helps (zero
+        // marginal), so coverage must match exactly.
+        assert_eq!(once.coverage, twice.coverage, "seed {seed}");
+    }
+}
+
+/// Property: the solution seeds are distinct and drawn from the system.
+#[test]
+fn prop_solution_wellformed() {
+    for seed in 0..CASES {
+        let (sys, k) = random_system(seed + 5000);
+        let sol = lazy_greedy_max_cover(&sys, k);
+        let mut dedup = sol.seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), sol.seeds.len(), "seed {seed}: duplicate seeds");
+        for s in &sol.seeds {
+            assert!(sys.vertices.contains(s), "seed {seed}: foreign vertex {s}");
+        }
+    }
+}
+
+/// Property: partitioning the candidates and combining partial greedy
+/// solutions (RandGreedi-style, best-of local/global) never exceeds the
+/// full greedy coverage by more than the merge can justify, and never
+/// returns an invalid set.
+#[test]
+fn prop_randgreedi_combination_sane() {
+    for seed in 0..30 {
+        let (sys, k) = random_system(seed + 6000);
+        let half_a = sys.filter(|v| v % 2 == 0);
+        let half_b = sys.filter(|v| v % 2 == 1);
+        let sol_a = greedy_max_cover(&half_a, k);
+        let sol_b = greedy_max_cover(&half_b, k);
+        let best_local = if sol_a.coverage >= sol_b.coverage { &sol_a } else { &sol_b };
+        let full = greedy_max_cover(&sys, k);
+        // A local solution can't beat exact greedy by more than the
+        // (1-1/e) slack: coverage(best_local) <= coverage(full)/(1-1/e).
+        assert!(
+            best_local.coverage as f64 <= full.coverage as f64 / (1.0 - 1.0 / std::f64::consts::E) + 1.0,
+            "seed {seed}"
+        );
+    }
+}
+
+/// Property: leap-frog sampling invariance — the RRR universe is a pure
+/// function of (graph, seed), independent of batching layout.
+#[test]
+fn prop_sampling_layout_invariant() {
+    use greediris::diffusion::DiffusionModel;
+    use greediris::graph::{generators, weights::WeightModel, Graph};
+    use greediris::sampling::RrrSampler;
+    for seed in 0..10u64 {
+        let edges = generators::erdos_renyi(120, 600, seed);
+        let g = Graph::from_edges(120, &edges, WeightModel::UniformIc { max: 0.1 }, seed);
+        let mut s1 = RrrSampler::new(&g, DiffusionModel::IC, seed);
+        let mut s2 = RrrSampler::new(&g, DiffusionModel::IC, seed);
+        // Layout A: one batch of 60. Layout B: 6 batches of 10.
+        let a = s1.batch(0, 60);
+        let mut b_sets = Vec::new();
+        for c in 0..6 {
+            b_sets.extend(s2.batch(c * 10, 10).sets);
+        }
+        assert_eq!(a.sets, b_sets, "seed {seed}");
+    }
+}

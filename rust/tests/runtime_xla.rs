@@ -1,0 +1,136 @@
+//! Integration: the AOT-compiled Pallas kernel loaded through PJRT must be
+//! bit-equivalent to the native CPU scorer, and the dense greedy solver
+//! must produce identical solutions on either backend.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise — CI runs
+//! `make test` which builds them first).
+
+use greediris::maxcover::{
+    dense_greedy_max_cover, CpuScorer, GainScorer, PackedCovers, SetSystem,
+};
+use greediris::rng::Xoshiro256pp;
+use greediris::runtime::{bucket_for, XlaScorer, BUCKETS};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    // Tests run from the crate root.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn scorer_or_skip() -> Option<XlaScorer> {
+    let s = XlaScorer::with_dir(artifacts_dir()).expect("PJRT client");
+    if !s.artifacts_present() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(s)
+}
+
+fn random_system(seed: u64, n: usize, theta: usize, max_len: u64) -> SetSystem {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = 1 + rng.gen_range(max_len) as usize;
+            let mut v: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect();
+    SetSystem { theta, vertices: (0..n as u32).collect(), sets }
+}
+
+#[test]
+fn bucket_menu_artifacts_exist() {
+    let Some(s) = scorer_or_skip() else { return };
+    drop(s);
+    for b in BUCKETS {
+        assert!(
+            b.path(&artifacts_dir()).exists(),
+            "missing artifact {} — python/compile/aot.py and \
+             rust/src/runtime/artifacts.rs are out of sync",
+            b.file_name()
+        );
+    }
+}
+
+#[test]
+fn xla_scorer_matches_cpu_scorer_pointwise() {
+    let Some(mut xla) = scorer_or_skip() else { return };
+    for seed in 0..6u64 {
+        let sys = random_system(seed, 100 + seed as usize * 17, 700, 40);
+        let covers = PackedCovers::from_sets(&sys);
+        let mut covered = vec![0u32; covers.w];
+        // Pre-cover a random half of one word to exercise the mask path.
+        covered[0] = 0xAAAA5555;
+        let mut selected = vec![false; covers.n];
+        selected[3] = true;
+        let cpu = CpuScorer.best(&covers, &covered, &selected);
+        let got = xla.best(&covers, &covered, &selected);
+        assert_eq!(got, cpu, "seed {seed}");
+    }
+}
+
+#[test]
+fn xla_dense_greedy_matches_cpu_dense_greedy() {
+    let Some(mut xla) = scorer_or_skip() else { return };
+    for seed in 10..14u64 {
+        let sys = random_system(seed, 200, 900, 30);
+        let covers = PackedCovers::from_sets(&sys);
+        let a = dense_greedy_max_cover(&covers, 12, &mut CpuScorer);
+        let b = dense_greedy_max_cover(&covers, 12, &mut xla);
+        assert_eq!(a.seeds, b.seeds, "seed {seed}");
+        assert_eq!(a.gains, b.gains, "seed {seed}");
+        assert_eq!(a.coverage, b.coverage, "seed {seed}");
+    }
+}
+
+#[test]
+fn xla_scorer_handles_all_selected() {
+    let Some(mut xla) = scorer_or_skip() else { return };
+    let sys = random_system(1, 50, 300, 20);
+    let covers = PackedCovers::from_sets(&sys);
+    let covered = vec![0u32; covers.w];
+    let selected = vec![true; covers.n];
+    let (i, g) = xla.best(&covers, &covered, &selected);
+    assert_eq!(i, usize::MAX);
+    assert_eq!(g, 0);
+}
+
+#[test]
+fn xla_scorer_spans_multiple_buckets() {
+    let Some(mut xla) = scorer_or_skip() else { return };
+    // One instance per bucket size class.
+    for (n, theta) in [(200usize, 900usize), (900, 1800), (3000, 3500)] {
+        let sys = random_system(n as u64, n, theta, 25);
+        let covers = PackedCovers::from_sets(&sys);
+        let b = bucket_for(covers.n, covers.w).expect("bucket");
+        assert!(b.n >= covers.n && b.w >= covers.w);
+        let covered = vec![0u32; covers.w];
+        let selected = vec![false; covers.n];
+        let cpu = CpuScorer.best(&covers, &covered, &selected);
+        let got = xla.best(&covers, &covered, &selected);
+        assert_eq!(got, cpu, "n={n}");
+    }
+}
+
+#[test]
+fn full_pipeline_with_xla_local_solver() {
+    use greediris::coordinator::{run_infmax, run_infmax_with_scorer, Algorithm, Config, LocalSolver};
+    use greediris::diffusion::DiffusionModel;
+    use greediris::graph::{generators, weights::WeightModel, Graph};
+
+    let Some(mut xla) = scorer_or_skip() else { return };
+    let edges = generators::barabasi_albert(240, 4, 3);
+    let g = Graph::from_edges(240, &edges, WeightModel::UniformIc { max: 0.1 }, 3);
+    let cfg = Config::new(6, 3, DiffusionModel::IC, Algorithm::GreediRis).with_theta(256);
+    let cpu = run_infmax(&g, &cfg.clone().with_local_solver(LocalSolver::DenseCpu));
+    let xla_run = run_infmax_with_scorer(
+        &g,
+        &cfg.with_local_solver(LocalSolver::DenseXla),
+        Some(&mut xla),
+    );
+    assert_eq!(cpu.seeds, xla_run.seeds, "backends must agree end-to-end");
+    assert_eq!(cpu.coverage, xla_run.coverage);
+    assert!(xla.calls > 0, "XLA path must actually have been exercised");
+}
