@@ -1,11 +1,16 @@
 //! Micro-benchmarks of the max-k-cover solver family — the L3 hot path.
 //! Drives the §Perf iteration log in EXPERIMENTS.md.
+//!
+//! Includes the pre-PR1 two-pass streaming receiver (separate marginal +
+//! absorb bitmap sweeps) as an A/B against the fused single-pass admission;
+//! the speedup is printed and recorded in the bench JSON for `scripts/ci.sh`.
 use greediris::exp::bench::Bench;
 use greediris::maxcover::{
     dense_greedy_max_cover, greedy_max_cover, lazy_greedy_max_cover, CpuScorer, PackedCovers,
     SetSystem, StreamingMaxCover,
 };
 use greediris::rng::Xoshiro256pp;
+use greediris::{SampleId, Vertex};
 
 fn random_system(seed: u64, n: usize, theta: usize, avg_len: u64) -> SetSystem {
     let mut rng = Xoshiro256pp::seeded(seed);
@@ -18,7 +23,7 @@ fn random_system(seed: u64, n: usize, theta: usize, avg_len: u64) -> SetSystem {
             v
         })
         .collect();
-    SetSystem { theta, vertices: (0..n as u32).collect(), sets }
+    SetSystem::from_sets(theta, (0..n as u32).collect(), &sets)
 }
 
 /// The pre-§Perf-L3-2 scorer (scalar u32 popcounts) kept for the A/B.
@@ -46,15 +51,107 @@ impl greediris::maxcover::GainScorer for LegacyU32Scorer {
     }
 }
 
+/// The pre-PR1 streaming bucket: two full passes over `ids` per admission
+/// test (`marginal` then `absorb`), kept verbatim for the A/B.
+struct LegacyBucket {
+    opt_guess: f64,
+    covered: Vec<u64>,
+    covered_count: u64,
+    seeds: Vec<Vertex>,
+}
+
+impl LegacyBucket {
+    fn new(opt_guess: f64, words: usize) -> Self {
+        Self { opt_guess, covered: vec![0; words], covered_count: 0, seeds: Vec::new() }
+    }
+
+    fn marginal(&self, ids: &[SampleId]) -> u32 {
+        let mut g = 0u32;
+        for &id in ids {
+            g += ((self.covered[(id >> 6) as usize] >> (id & 63)) & 1 == 0) as u32;
+        }
+        g
+    }
+
+    fn absorb(&mut self, ids: &[SampleId]) -> u32 {
+        let mut g = 0u32;
+        for &id in ids {
+            let w = &mut self.covered[(id >> 6) as usize];
+            let bit = 1u64 << (id & 63);
+            if *w & bit == 0 {
+                *w |= bit;
+                g += 1;
+            }
+        }
+        self.covered_count += g as u64;
+        g
+    }
+
+    fn try_admit(&mut self, v: Vertex, ids: &[SampleId], k: usize) -> bool {
+        if self.seeds.len() >= k {
+            return false;
+        }
+        let gain = self.marginal(ids);
+        if (gain as f64) >= self.opt_guess / (2.0 * k as f64) && gain > 0 {
+            self.absorb(ids);
+            self.seeds.push(v);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Pre-PR1 sequential streaming solver (lazy bucket materialization logic
+/// identical to `BucketBank`, buckets running the two-pass admission).
+struct LegacyStreaming {
+    k: usize,
+    delta: f64,
+    words: usize,
+    l_seen: u64,
+    hi: Option<i32>,
+    buckets: Vec<(i32, LegacyBucket)>,
+}
+
+impl LegacyStreaming {
+    fn new(theta: usize, k: usize, delta: f64) -> Self {
+        Self { k, delta, words: theta.div_ceil(64).max(1), l_seen: 0, hi: None, buckets: Vec::new() }
+    }
+
+    fn offer(&mut self, v: Vertex, ids: &[SampleId]) {
+        let s = ids.len().max(1) as u64;
+        if s > self.l_seen {
+            self.l_seen = s;
+            let u = (self.k as u64 * self.l_seen) as f64;
+            let new_hi = (u.ln() / (1.0 + self.delta).ln()).floor() as i32;
+            let start = match self.hi {
+                None => ((self.l_seen as f64).ln() / (1.0 + self.delta).ln()).floor() as i32,
+                Some(h) => h + 1,
+            };
+            for b in start..=new_hi {
+                self.buckets.push((b, LegacyBucket::new((1.0 + self.delta).powi(b), self.words)));
+            }
+            self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
+        }
+        for (_, b) in &mut self.buckets {
+            b.try_admit(v, ids, self.k);
+        }
+    }
+
+    fn best_coverage(&self) -> u64 {
+        self.buckets.iter().map(|(_, b)| b.covered_count).max().unwrap_or(0)
+    }
+}
+
 fn main() {
     let sys = random_system(1, 4000, 16_384, 40);
     let k = 100;
     let b = Bench::new("maxcover");
 
-    b.bench("greedy_n4k_k100", || greedy_max_cover(&sys, k));
-    b.bench("lazy_greedy_n4k_k100", || lazy_greedy_max_cover(&sys, k));
+    b.bench("greedy_n4k_k100", || greedy_max_cover(sys.view(), k));
+    b.bench("lazy_greedy_n4k_k100", || lazy_greedy_max_cover(sys.view(), k));
 
-    let covers = PackedCovers::from_sets(&sys);
+    let covers = PackedCovers::from_sets(sys.view());
     b.bench("dense_cpu_greedy_n4k_k100", || {
         dense_greedy_max_cover(&covers, k, &mut CpuScorer)
     });
@@ -62,19 +159,41 @@ fn main() {
         dense_greedy_max_cover(&covers, k, &mut LegacyU32Scorer)
     });
 
-    b.bench("streaming_n4k_k100_d0.077", || {
+    // ---- A/B: fused vs two-pass streaming admission (S4 hot path). ----
+    let fused = b.bench("streaming_fused_n4k_k100_d0.077", || {
         let mut s = StreamingMaxCover::new(sys.theta, k, 0.077);
-        for (i, ids) in sys.sets.iter().enumerate() {
+        for (i, ids) in sys.iter_sets().enumerate() {
             s.offer(sys.vertices[i], ids);
         }
-        s.finalize()
+        s.finalize().coverage
     });
+    let twopass = b.bench("streaming_twopass_legacy_n4k_k100_d0.077", || {
+        let mut s = LegacyStreaming::new(sys.theta, k, 0.077);
+        for (i, ids) in sys.iter_sets().enumerate() {
+            s.offer(sys.vertices[i], ids);
+        }
+        s.best_coverage()
+    });
+    // Same admissions -> same best coverage; assert the A/B is honest.
+    {
+        let mut a = StreamingMaxCover::new(sys.theta, k, 0.077);
+        let mut l = LegacyStreaming::new(sys.theta, k, 0.077);
+        for (i, ids) in sys.iter_sets().enumerate() {
+            a.offer(sys.vertices[i], ids);
+            l.offer(sys.vertices[i], ids);
+        }
+        assert_eq!(a.finalize().coverage, l.best_coverage(), "fused admission drifted");
+    }
+    println!(
+        "speedup streaming admission: {:.2}x (two-pass median / fused median)",
+        twopass.median / fused.median
+    );
 
     // XLA backend, if artifacts are present.
     if let Ok(mut xla) = greediris::runtime::XlaScorer::new() {
         if xla.artifacts_present() {
             let small = random_system(2, 1000, 2000, 20);
-            let pc = PackedCovers::from_sets(&small);
+            let pc = PackedCovers::from_sets(small.view());
             b.bench("dense_xla_greedy_n1k_k50", || {
                 dense_greedy_max_cover(&pc, 50, &mut xla)
             });
@@ -85,5 +204,7 @@ fn main() {
         } else {
             println!("(skipping XLA benches: run `make artifacts`)");
         }
+    } else {
+        println!("(skipping XLA benches: backend unavailable without the `xla` feature)");
     }
 }

@@ -4,7 +4,7 @@ use greediris::diffusion::{evaluate_spread, DiffusionModel};
 use greediris::exp::bench::Bench;
 use greediris::exp::inputs::{analog, build_analog};
 use greediris::graph::{generators, weights::WeightModel, Graph};
-use greediris::sampling::RrrSampler;
+use greediris::sampling::{batch_parallel, RrrSampler};
 
 fn main() {
     let b = Bench::new("sampling");
@@ -20,6 +20,17 @@ fn main() {
         let mut s = RrrSampler::new(&g_lt, DiffusionModel::LT, 1);
         s.batch(0, 1000).total_entries()
     });
+
+    // Threaded S1 (bit-identical output; scaling bounded by physical cores).
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let mut threads = vec![1usize, 2, cores];
+    threads.sort_unstable();
+    threads.dedup();
+    for t in threads {
+        b.bench(&format!("rrr_ic_pokec_4k_samples_t{t}"), || {
+            batch_parallel(&g_ic, DiffusionModel::IC, 1, 0, 4000, t).total_entries()
+        });
+    }
 
     // The paper's observation: LT samples are shorter than IC.
     let mut si = RrrSampler::new(&g_ic, DiffusionModel::IC, 2);

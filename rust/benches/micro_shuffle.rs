@@ -1,11 +1,55 @@
 //! Micro-benchmarks of the distributed substrate: all-to-all shuffle (S2)
 //! payload assembly + exchange, and collective cost models.
+//!
+//! Includes A/B kernels pitting the pre-PR1 HashMap implementations against
+//! the flat counting-sort/CSR path (same inputs, same wire bytes) — the
+//! speedup is printed and recorded in the bench JSON for `scripts/ci.sh`.
 use greediris::coordinator::config::{Algorithm, Config};
-use greediris::coordinator::sampling::{grow_to, DistState};
+use greediris::coordinator::sampling::{grow_to, invert_batch_to_streams, DistState};
 use greediris::diffusion::DiffusionModel;
 use greediris::distributed::{collectives, Cluster, NetModel};
 use greediris::exp::bench::Bench;
 use greediris::exp::inputs::{analog, build_analog};
+use greediris::maxcover::InvertedIndex;
+use greediris::sampling::{RrrSampler, SampleBatch};
+use greediris::{SampleId, Vertex};
+use std::collections::HashMap;
+
+/// The pre-PR1 sender inversion: per-batch HashMap + sorted-keys emit.
+fn legacy_invert_hashmap(batch: &SampleBatch, owner: &[u32], m: usize) -> Vec<Vec<u32>> {
+    let mut partial: HashMap<Vertex, Vec<SampleId>> = HashMap::new();
+    for (j, set) in batch.iter_sets().enumerate() {
+        let sid = batch.first_id + j as SampleId;
+        for &v in set {
+            partial.entry(v).or_default().push(sid);
+        }
+    }
+    let mut rb: Vec<Vec<u32>> = (0..m).map(|_| Vec::new()).collect();
+    let mut keys: Vec<Vertex> = partial.keys().copied().collect();
+    keys.sort_unstable();
+    for v in keys {
+        let ids = &partial[&v];
+        let buf = &mut rb[owner[v as usize] as usize];
+        buf.push(v);
+        buf.push(ids.len() as u32);
+        buf.extend_from_slice(ids);
+    }
+    rb
+}
+
+/// The pre-PR1 receiver merge: HashMap entry + extend per run.
+fn legacy_merge_hashmap(covers: &mut HashMap<Vertex, Vec<SampleId>>, streams: &[Vec<u32>]) {
+    for s in streams {
+        let mut i = 0usize;
+        while i < s.len() {
+            let v = s[i];
+            let cnt = s[i + 1] as usize;
+            let ids = &s[i + 2..i + 2 + cnt];
+            covers.entry(v).or_default().extend_from_slice(ids);
+            i += 2 + cnt;
+        }
+    }
+}
 
 fn main() {
     let b = Bench::new("shuffle");
@@ -22,6 +66,54 @@ fn main() {
             st.theta
         });
     }
+
+    // ---- A/B: sender-side inversion kernel (S2 hot path #1). ----
+    // One rank's share at m=16, theta=65536 -> a 4096-sample batch.
+    let m = 16usize;
+    let pool: Vec<usize> = (1..m).collect();
+    let st = DistState::new(g.n(), m, &pool, 7, 0, true);
+    let batch = RrrSampler::new(&g, DiffusionModel::IC, 7).batch(0, 4096);
+    println!(
+        "invert input: {} samples, {} entries",
+        batch.len(),
+        batch.total_entries()
+    );
+    let legacy_inv = b.bench("invert_hashmap_legacy_4k_samples", || {
+        legacy_invert_hashmap(&batch, &st.owner, m).len()
+    });
+    let flat_inv = b.bench("invert_csr_flat_4k_samples", || {
+        invert_batch_to_streams(&batch, &st.owner, m).len()
+    });
+    // Same wire bytes, sanity-checked once.
+    assert_eq!(
+        legacy_invert_hashmap(&batch, &st.owner, m),
+        invert_batch_to_streams(&batch, &st.owner, m),
+        "flat inversion must produce identical wire streams"
+    );
+
+    // ---- A/B: receiver-side merge kernel (S2 hot path #2). ----
+    // Two rounds of streams for one destination rank (round 2 ids follow
+    // round 1, matching the martingale-growth pattern).
+    let batch2 = RrrSampler::new(&g, DiffusionModel::IC, 7).batch(4096, 4096);
+    let round1 = invert_batch_to_streams(&batch, &st.owner, m);
+    let round2 = invert_batch_to_streams(&batch2, &st.owner, m);
+    let legacy_merge = b.bench("merge_hashmap_legacy_2rounds", || {
+        let mut covers: HashMap<Vertex, Vec<SampleId>> = HashMap::new();
+        legacy_merge_hashmap(&mut covers, &round1);
+        legacy_merge_hashmap(&mut covers, &round2);
+        covers.len()
+    });
+    let flat_merge = b.bench("merge_csr_flat_2rounds", || {
+        let mut ix = InvertedIndex::new();
+        ix.merge_streams(&round1);
+        ix.merge_streams(&round2);
+        ix.len()
+    });
+    println!(
+        "speedup invert: {:.2}x | merge: {:.2}x (legacy median / flat median)",
+        legacy_inv.median / flat_inv.median,
+        legacy_merge.median / flat_merge.median,
+    );
 
     b.bench("alltoallv_m64_1k_elems_per_pair", || {
         let m = 64;

@@ -24,9 +24,8 @@ pub mod diimm;
 
 use crate::coordinator::sampling::DistState;
 use crate::distributed::Cluster;
-use crate::maxcover::BitCover;
-use crate::{SampleId, Vertex};
-use std::collections::HashMap;
+use crate::maxcover::{BitCover, InvertedIndex};
+use crate::Vertex;
 use std::time::Instant;
 
 /// Charges every rank the *compute* cost of one tree reduction over an
@@ -60,10 +59,12 @@ impl ReduceScratch {
     }
 }
 
-/// Sparse per-rank selection state for the reduction-based baselines.
+/// Sparse per-rank selection state for the reduction-based baselines —
+/// a flat vertex-sorted [`InvertedIndex`] over the rank's local samples
+/// (binary-search lookup; no hashing on the selection hot path).
 pub struct RankSelectState {
-    /// vertex → global ids of *local* samples containing it.
-    pub index: HashMap<Vertex, Vec<SampleId>>,
+    /// vertex → global ids of *local* samples containing it (CSR).
+    pub index: InvertedIndex,
     /// Covered samples (global id space; only local ids ever inserted).
     pub covered: BitCover,
 }
@@ -72,15 +73,11 @@ impl RankSelectState {
     /// Builds rank `p`'s sparse index and accumulates its initial
     /// frequencies into `global` (the reduced n-sized vector).
     pub fn build(state: &DistState, p: usize, global: &mut [u32]) -> Self {
-        let mut index: HashMap<Vertex, Vec<SampleId>> = HashMap::new();
-        for b in &state.local_batches[p] {
-            for (j, set) in b.sets.iter().enumerate() {
-                let sid = b.first_id + j as SampleId;
-                for &v in set {
-                    index.entry(v).or_default().push(sid);
-                    global[v as usize] += 1;
-                }
-            }
+        let batches: Vec<&crate::sampling::SampleBatch> =
+            state.local_batches[p].iter().collect();
+        let index = InvertedIndex::from_batches(&batches);
+        for i in 0..index.len() {
+            global[index.vertices[i] as usize] += index.run(i).len() as u32;
         }
         Self { index, covered: BitCover::new(state.theta as usize) }
     }
@@ -96,7 +93,7 @@ impl RankSelectState {
         seed: Vertex,
         global: &mut [u32],
     ) -> u32 {
-        let Some(sids) = self.index.get(&seed) else { return 0 };
+        let Some(sids) = self.index.ids_for(seed) else { return 0 };
         let mut gain = 0u32;
         for &sid in sids {
             if self.covered.insert(sid) {
@@ -122,20 +119,12 @@ mod tests {
             theta: 4,
             id_base: 0,
             owner: vec![0; 3],
-            covers: vec![HashMap::new(), HashMap::new()],
+            covers: vec![InvertedIndex::new(), InvertedIndex::new()],
             local_batches: vec![Vec::new(), Vec::new()],
             do_shuffle: false,
         };
-        st.local_batches[0].push(SampleBatch {
-            first_id: 0,
-            sets: vec![vec![0, 1], vec![1]],
-            roots: vec![0, 1],
-        });
-        st.local_batches[1].push(SampleBatch {
-            first_id: 2,
-            sets: vec![vec![1, 2], vec![2]],
-            roots: vec![1, 2],
-        });
+        st.local_batches[0].push(SampleBatch::from_sets(0, &[vec![0, 1], vec![1]], vec![0, 1]));
+        st.local_batches[1].push(SampleBatch::from_sets(2, &[vec![1, 2], vec![2]], vec![1, 2]));
         st
     }
 

@@ -116,7 +116,7 @@ mod tests {
         let r = ripples_select(&mut cl, &st, g.n(), cfg.k);
         let batches: Vec<_> = st.local_batches.iter().flatten().collect();
         let sys = SetSystem::invert(g.n(), &batches, st.theta as usize);
-        let reference = greedy_max_cover(&sys, cfg.k);
+        let reference = greedy_max_cover(sys.view(), cfg.k);
         assert_eq!(r.solution.seeds, reference.seeds);
         assert_eq!(r.solution.coverage, reference.coverage);
     }

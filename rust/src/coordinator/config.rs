@@ -84,6 +84,12 @@ pub struct Config {
     /// Divisor modeling intra-node parallelism for the sampling phase
     /// (the paper's nodes run 64–128 OpenMP threads).
     pub node_threads: f64,
+    /// *Real* OS threads used for S1 generation per rank
+    /// ([`crate::sampling::batch_parallel`]); output is bit-identical for
+    /// any value. Default 1 — the simulator already models intra-node
+    /// parallelism through `node_threads`, so raising this only changes
+    /// wall-clock, never results.
+    pub s1_threads: usize,
     /// Skip the martingale estimation and use exactly this many samples
     /// (used by benches that sweep m at fixed work).
     pub theta_override: Option<u64>,
@@ -104,8 +110,16 @@ impl Config {
             seed: 0x5EED,
             net: NetModel::slingshot(),
             node_threads: 64.0,
+            s1_threads: 1,
             theta_override: None,
         }
+    }
+
+    /// Sets the real OS-thread count for S1 generation (bit-identical
+    /// output for any value; see [`crate::sampling::batch_parallel`]).
+    pub fn with_s1_threads(mut self, t: usize) -> Self {
+        self.s1_threads = t.max(1);
+        self
     }
 
     pub fn with_alpha(mut self, alpha: f64) -> Self {

@@ -16,12 +16,15 @@ use crate::coordinator::sampling::DistState;
 use crate::distributed::Cluster;
 use crate::maxcover::dense::{dense_greedy_max_cover_stream, PackedCovers};
 use crate::maxcover::lazy::lazy_greedy_stream;
-use crate::maxcover::{CoverSolution, GainScorer, SetSystem, StreamingMaxCover};
+use crate::maxcover::{CoverSolution, GainScorer, SetSystemView, StreamingMaxCover};
 use crate::metrics::ReceiverBreakdown;
 use std::time::Instant;
 
-/// One sender's timestamped emission trace.
-struct SenderTrace {
+/// One sender's timestamped emission trace. Borrows the rank's accumulated
+/// covering index (a [`SetSystemView`]) — no clone is taken anywhere on the
+/// S3/S4 path; the receiver reads shipped covering subsets straight out of
+/// the sender's CSR.
+struct SenderTrace<'s> {
     /// Sender rank.
     rank: usize,
     /// (relative emit time, index into `system`) for each *shipped* seed.
@@ -30,9 +33,8 @@ struct SenderTrace {
     solution: CoverSolution,
     /// Total local selection compute (relative seconds).
     total: f64,
-    /// The sender's covering system (kept alive so the receiver can read
-    /// the shipped full covering subsets).
-    system: SetSystem,
+    /// Borrowed view of the sender's covering system.
+    system: SetSystemView<'s>,
 }
 
 /// Outcome of one streaming selection round.
@@ -53,24 +55,24 @@ pub struct StreamRound {
 
 /// Runs local selection on one sender's system, returning its trace.
 /// `ship_limit` = ⌈α·k⌉ (or k when not truncating).
-fn run_sender<'a, 'b>(
+fn run_sender<'s, 'a, 'b>(
     rank: usize,
-    system: SetSystem,
+    system: SetSystemView<'s>,
     k: usize,
     ship_limit: usize,
     solver: LocalSolver,
     scorer: Option<&'a mut (dyn GainScorer + 'b)>,
-) -> SenderTrace {
+) -> SenderTrace<'s> {
     let mut emits: Vec<(f64, usize)> = Vec::with_capacity(ship_limit);
     let t0 = Instant::now();
     let solution = match solver {
-        LocalSolver::LazyGreedy => lazy_greedy_stream(&system, k, |e| {
+        LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
             if e.order < ship_limit {
                 emits.push((t0.elapsed().as_secs_f64(), e.idx));
             }
         }),
         LocalSolver::DenseCpu | LocalSolver::DenseXla => {
-            let covers = PackedCovers::from_sets(&system);
+            let covers = PackedCovers::from_sets(system);
             let mut cpu = crate::maxcover::CpuScorer;
             let scorer: &mut dyn GainScorer = match (solver, scorer) {
                 (LocalSolver::DenseXla, Some(s)) => s,
@@ -121,7 +123,7 @@ pub fn streaming_round<'a, 'b>(
 
     // ---- S3: senders run their local solves, recording emission traces. ----
     let senders: Vec<usize> = (1..m).collect();
-    let mut traces: Vec<SenderTrace> = Vec::with_capacity(senders.len());
+    let mut traces: Vec<SenderTrace<'_>> = Vec::with_capacity(senders.len());
     for &p in &senders {
         let system = state.system_at(p);
         // The trace is produced by real execution; the measured per-seed
@@ -138,7 +140,7 @@ pub fn streaming_round<'a, 'b>(
     let mut stream_bytes = 0u64;
     for (ti, tr) in traces.iter().enumerate() {
         for (ei, &(t_rel, idx)) in tr.emits.iter().enumerate() {
-            let bytes = (tr.system.sets[idx].len() as u64 + 2) * 4;
+            let bytes = (tr.system.set(idx).len() as u64 + 2) * 4;
             stream_bytes += bytes;
             let arrival = t0 + t_rel + cluster.net.p2p(bytes);
             events.push((arrival, ti, ei));
@@ -160,11 +162,11 @@ pub fn streaming_round<'a, 'b>(
         }
         let tr = &traces[ti];
         let idx = tr.emits[ei].1;
-        let vertex = tr.system.vertices[idx];
-        let ids = &tr.system.sets[idx];
+        let vertex = tr.system.vertex(idx);
+        let ids = tr.system.set(idx);
         // Communicating thread: enqueue = one copy of the payload.
         let tq = Instant::now();
-        let owned = ids.clone();
+        let owned = ids.to_vec();
         let enq = tq.elapsed().as_secs_f64();
         enqueue_work += enq;
         // Bucketing threads: the B buckets process independently; with
@@ -259,8 +261,7 @@ mod tests {
     fn single_rank_degenerates_to_local_greedy() {
         let (mut cl, st, cfg) = setup(1, 128);
         let r = streaming_round(&mut cl, &st, &cfg, None);
-        let sys = st.system_at(0);
-        let direct = crate::maxcover::lazy_greedy_max_cover(&sys, cfg.k);
+        let direct = crate::maxcover::lazy_greedy_max_cover(st.system_at(0), cfg.k);
         assert_eq!(r.solution.seeds, direct.seeds);
         assert_eq!(r.streamed_seeds, 0);
     }
@@ -286,8 +287,7 @@ mod tests {
         // The output is max(global, best local), so it must be >= any
         // individual sender's local solution.
         for p in 1..5 {
-            let sys = st.system_at(p);
-            let local = crate::maxcover::lazy_greedy_max_cover(&sys, cfg.k);
+            let local = crate::maxcover::lazy_greedy_max_cover(st.system_at(p), cfg.k);
             assert!(r.solution.coverage >= local.coverage);
         }
     }

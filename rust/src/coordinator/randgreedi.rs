@@ -9,7 +9,6 @@ use crate::coordinator::config::Config;
 use crate::coordinator::sampling::DistState;
 use crate::distributed::{collectives, Cluster};
 use crate::maxcover::{lazy_greedy_max_cover, CoverSolution, SetSystem};
-use crate::SampleId;
 
 /// Outcome of one offline RandGreedi round, with the Table-2 timings.
 pub struct OfflineRound {
@@ -36,14 +35,15 @@ pub fn offline_round(cluster: &mut Cluster, state: &DistState, cfg: &Config) -> 
     for p in 0..m {
         let system = state.system_at(p);
         let ((sol, payload), secs) = cluster.run_compute(p, || {
-            let sol = lazy_greedy_max_cover(&system, k);
+            let sol = lazy_greedy_max_cover(system, k);
             // Serialize (vertex, full covering subset) pairs for the gather.
             let mut buf: Vec<u32> = Vec::new();
             for &v in &sol.seeds {
                 let i = system.vertices.binary_search(&v).expect("seed from system");
+                let ids = system.set(i);
                 buf.push(v);
-                buf.push(system.sets[i].len() as u32);
-                buf.extend_from_slice(&system.sets[i]);
+                buf.push(ids.len() as u32);
+                buf.extend_from_slice(ids);
             }
             (sol, buf)
         });
@@ -64,20 +64,17 @@ pub fn offline_round(cluster: &mut Cluster, state: &DistState, cfg: &Config) -> 
 
     // Global lazy greedy over the merged candidates (line 4).
     let (global_sol, global_solve_secs) = cluster.run_compute(0, || {
-        let mut vertices = Vec::new();
-        let mut sets: Vec<Vec<SampleId>> = Vec::new();
+        let mut merged = SetSystem::new(state.theta as usize);
         for buf in &gathered {
             let mut i = 0usize;
             while i < buf.len() {
                 let v = buf[i];
                 let cnt = buf[i + 1] as usize;
-                vertices.push(v);
-                sets.push(buf[i + 2..i + 2 + cnt].to_vec());
+                merged.push_set(v, &buf[i + 2..i + 2 + cnt]);
                 i += 2 + cnt;
             }
         }
-        let merged = SetSystem { theta: state.theta as usize, vertices, sets };
-        lazy_greedy_max_cover(&merged, k)
+        lazy_greedy_max_cover(merged.view(), k)
     });
     let global_time = cluster.now(0) - t_gather_start;
     let _ = global_solve_secs;
@@ -127,8 +124,7 @@ mod tests {
         let (mut cl, st, cfg) = setup(4, 512);
         let r = offline_round(&mut cl, &st, &cfg);
         for p in 0..4 {
-            let sys = st.system_at(p);
-            let local = lazy_greedy_max_cover(&sys, cfg.k);
+            let local = lazy_greedy_max_cover(st.system_at(p), cfg.k);
             assert!(r.solution.coverage >= local.coverage);
         }
     }
@@ -137,7 +133,7 @@ mod tests {
     fn single_rank_equals_sequential() {
         let (mut cl, st, cfg) = setup(1, 128);
         let r = offline_round(&mut cl, &st, &cfg);
-        let direct = lazy_greedy_max_cover(&st.system_at(0), cfg.k);
+        let direct = lazy_greedy_max_cover(st.system_at(0), cfg.k);
         assert_eq!(r.solution.coverage, direct.coverage);
     }
 

@@ -11,7 +11,10 @@
 //! no synchronization because bucket ownership is disjoint, and every
 //! thread sees the identical element order, so the union of the threads'
 //! buckets is bit-identical to the sequential [`StreamingMaxCover`]
-//! (asserted by tests).
+//! (asserted by tests). Bucket admission itself is the fused single-pass
+//! rule of [`crate::maxcover::streaming::Bucket::try_admit`] — marginal
+//! gain and bitmap update in one sweep, staged in a per-bank scratch — so
+//! the threaded and sequential paths share the exact same innermost loop.
 //!
 //! This module proves the concurrency design executes correctly; the
 //! performance *model* of the receiver lives in

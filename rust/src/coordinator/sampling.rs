@@ -7,15 +7,20 @@
 //! When θ̂ doubles between martingale rounds, only the new half is generated
 //! and shuffled (the paper: "we retain the previous batch of samples and
 //! simply add the second half").
+//!
+//! The whole path is flat (see the crate-level data-path invariants):
+//! batches are CSR, sender-side inversion is a counting sort over the owner
+//! partition followed by a flat `(vertex, id)` sort (no hashing), and the
+//! receiver-side merge appends vertex-sorted streams into the accumulated
+//! [`InvertedIndex`] sequentially.
 
 use crate::coordinator::config::Config;
 use crate::distributed::{collectives, Cluster};
-use crate::maxcover::SetSystem;
+use crate::maxcover::{InvertedIndex, SetSystemView};
 use crate::rng::{domains, stream_for};
-use crate::sampling::{RrrSampler, SampleBatch};
+use crate::sampling::{batch_parallel, SampleBatch};
 use crate::graph::Graph;
 use crate::{SampleId, Vertex};
-use std::collections::HashMap;
 
 /// Distributed sampling/shuffle state, persisted across martingale rounds.
 pub struct DistState {
@@ -26,13 +31,15 @@ pub struct DistState {
     /// (the Chen 2018 correction).
     pub id_base: u64,
     /// Owner rank of each vertex (uniform random partition over the sender
-    /// pool, drawn once per phase).
+    /// pool, drawn once per phase from a single sequenced stream).
     pub owner: Vec<u32>,
-    /// Accumulated covering subsets at each owner rank:
-    /// `covers[rank][vertex] -> sorted sample ids`.
-    pub covers: Vec<HashMap<Vertex, Vec<SampleId>>>,
+    /// Accumulated covering subsets at each owner rank: a vertex-sorted CSR
+    /// of sample-id runs (`covers[rank].ids_for(v) -> sorted sample ids`).
+    pub covers: Vec<InvertedIndex>,
     /// Per generating rank, the batches it generated (kept for the
-    /// reduction-based baselines, which never shuffle).
+    /// reduction-based baselines, which never shuffle). Ascending,
+    /// non-overlapping `first_id` — the binary-search invariant of
+    /// [`Self::sample_contents`].
     pub local_batches: Vec<Vec<SampleBatch>>,
     /// Whether S2 runs (baselines skip the shuffle).
     pub do_shuffle: bool,
@@ -52,52 +59,108 @@ impl DistState {
     /// receiver, per §3.4 S2).
     pub fn new(n: usize, m: usize, owner_pool: &[usize], seed: u64, id_base: u64, do_shuffle: bool) -> Self {
         assert!(!owner_pool.is_empty());
+        // One stream per phase, sequenced across vertices — the old code
+        // derived a fresh `stream_for` per vertex, paying O(n) stream
+        // setups (SplitMix chains + xoshiro seeding) on every phase.
+        let mut s = stream_for(seed, domains::PARTITION, id_base);
         let owner = (0..n)
-            .map(|v| {
-                let mut s = stream_for(seed, domains::PARTITION, id_base ^ v as u64);
-                owner_pool[s.gen_range(owner_pool.len() as u64) as usize] as u32
-            })
+            .map(|_| owner_pool[s.gen_range(owner_pool.len() as u64) as usize] as u32)
             .collect();
         Self {
             theta: 0,
             id_base,
             owner,
-            covers: (0..m).map(|_| HashMap::new()).collect(),
+            covers: (0..m).map(|_| InvertedIndex::new()).collect(),
             local_batches: (0..m).map(|_| Vec::new()).collect(),
             do_shuffle,
         }
     }
 
-    /// Materializes rank `p`'s accumulated covering sets as a [`SetSystem`]
-    /// over the current θ̂ universe.
-    pub fn system_at(&self, p: usize) -> SetSystem {
-        let mut vertices: Vec<Vertex> = self.covers[p].keys().copied().collect();
-        vertices.sort_unstable();
-        let sets = vertices
-            .iter()
-            .map(|v| self.covers[p][v].clone())
-            .collect();
-        SetSystem { theta: self.theta as usize, vertices, sets }
+    /// Borrows rank `p`'s accumulated covering sets as a [`SetSystemView`]
+    /// over the current θ̂ universe — no clone; the view is backed by the
+    /// rank's CSR index.
+    pub fn system_at(&self, p: usize) -> SetSystemView<'_> {
+        self.covers[p].as_view(self.theta as usize)
     }
 
     /// Total covering entries at rank `p` (diagnostics).
     pub fn entries_at(&self, p: usize) -> usize {
-        self.covers[p].values().map(Vec::len).sum()
+        self.covers[p].entries()
     }
 
     /// Contents of local sample `sid` held by rank `p` (global id). Batches
-    /// are appended in id order, so a linear scan over the few per-round
-    /// batches suffices.
+    /// are appended in ascending non-overlapping id order, so a binary
+    /// search over the batch id ranges finds the holder.
     pub fn sample_contents(&self, p: usize, sid: SampleId) -> &[Vertex] {
-        for b in &self.local_batches[p] {
-            let lo = b.first_id;
-            let hi = lo + b.sets.len() as SampleId;
-            if sid >= lo && sid < hi {
-                return &b.sets[(sid - lo) as usize];
+        let bs = &self.local_batches[p];
+        // First batch with first_id > sid; the candidate holder precedes it.
+        let i = bs.partition_point(|b| b.first_id <= sid);
+        if i > 0 {
+            let b = &bs[i - 1];
+            let j = (sid - b.first_id) as usize;
+            if j < b.len() {
+                return b.set(j);
             }
         }
         panic!("sample {sid} not held by rank {p}");
     }
+}
+
+/// Inverts one rank's freshly generated batch into per-destination wire
+/// streams (`[v, count, ids...]`, vertex-sorted) — the sender side of S2.
+///
+/// Hash-free: a counting sort over the owner partition groups the
+/// `(vertex, id)` entries by destination rank, then each destination's
+/// packed pairs are sorted flat. Identical wire bytes to the old
+/// `HashMap`-based inversion (vertices ascending, ids ascending per
+/// vertex), at a fraction of the cost.
+pub fn invert_batch_to_streams(batch: &SampleBatch, owner: &[u32], m: usize) -> Vec<Vec<u32>> {
+    // Counting sort, pass 1: entries per destination.
+    let mut starts = vec![0u32; m + 1];
+    for &v in &batch.data {
+        starts[owner[v as usize] as usize + 1] += 1;
+    }
+    for d in 0..m {
+        let s = starts[d];
+        starts[d + 1] += s;
+    }
+    // Pass 2: scatter packed (vertex << 32 | id) pairs into per-destination
+    // contiguous regions.
+    let mut pairs: Vec<u64> = vec![0; batch.data.len()];
+    let mut cursor: Vec<u32> = starts[..m].to_vec();
+    for (j, set) in batch.iter_sets().enumerate() {
+        let sid = batch.first_id + j as SampleId;
+        for &v in set {
+            let d = owner[v as usize] as usize;
+            pairs[cursor[d] as usize] = ((v as u64) << 32) | sid as u64;
+            cursor[d] += 1;
+        }
+    }
+    // Per destination: flat sort by (vertex, id), then emit runs.
+    let mut out: Vec<Vec<u32>> = (0..m).map(|_| Vec::new()).collect();
+    for d in 0..m {
+        let seg = &mut pairs[starts[d] as usize..starts[d + 1] as usize];
+        if seg.is_empty() {
+            continue;
+        }
+        seg.sort_unstable();
+        let buf = &mut out[d];
+        buf.reserve(seg.len() + seg.len() / 4 + 2);
+        let mut i = 0usize;
+        while i < seg.len() {
+            let v = (seg[i] >> 32) as u32;
+            let start = i;
+            while i < seg.len() && (seg[i] >> 32) as u32 == v {
+                i += 1;
+            }
+            buf.push(v);
+            buf.push((i - start) as u32);
+            for &p in &seg[start..i] {
+                buf.push(p as u32);
+            }
+        }
+    }
+    out
 }
 
 /// Grows the global sample pool to `target_theta`: distributed generation
@@ -124,15 +187,18 @@ pub fn grow_to(
         let lo = state.theta + (p as u64) * per_rank;
         let hi = (lo + per_rank).min(target_theta);
         if lo >= hi {
-            new_batches.push(SampleBatch { first_id: lo as SampleId, sets: vec![], roots: vec![] });
+            new_batches.push(SampleBatch::empty(lo as SampleId));
             continue;
         }
         let (batch, _) = cluster.run_compute_scaled(p, cfg.node_threads, || {
-            let mut sampler = RrrSampler::new(graph, cfg.model, cfg.seed ^ state.id_base);
-            let mut b = sampler.batch(lo as SampleId, (hi - lo) as usize);
-            // Store ids relative to the phase-local universe.
-            b.first_id = lo as SampleId;
-            b
+            batch_parallel(
+                graph,
+                cfg.model,
+                cfg.seed ^ state.id_base,
+                lo as SampleId,
+                (hi - lo) as usize,
+                cfg.s1_threads,
+            )
         });
         new_batches.push(batch);
     }
@@ -143,28 +209,8 @@ pub fn grow_to(
         // Build per-(src,dst) flat payloads: [v, count, ids...] streams.
         let mut outbox: Vec<Vec<Vec<u32>>> = Vec::with_capacity(m);
         for (p, batch) in new_batches.iter().enumerate() {
-            let (rankbox, _) = cluster.run_compute(p, || {
-                // Invert this rank's new samples into partial covering sets.
-                let mut partial: HashMap<Vertex, Vec<SampleId>> = HashMap::new();
-                for (j, set) in batch.sets.iter().enumerate() {
-                    let sid = batch.first_id + j as SampleId;
-                    for &v in set {
-                        partial.entry(v).or_default().push(sid);
-                    }
-                }
-                let mut rb: Vec<Vec<u32>> = (0..m).map(|_| Vec::new()).collect();
-                let mut keys: Vec<Vertex> = partial.keys().copied().collect();
-                keys.sort_unstable();
-                for v in keys {
-                    let ids = &partial[&v];
-                    let dst = state.owner[v as usize] as usize;
-                    let buf = &mut rb[dst];
-                    buf.push(v);
-                    buf.push(ids.len() as u32);
-                    buf.extend_from_slice(ids);
-                }
-                rb
-            });
+            let (rankbox, _) =
+                cluster.run_compute(p, || invert_batch_to_streams(batch, &state.owner, m));
             outbox.push(rankbox);
         }
         stats.alltoall_bytes = outbox
@@ -180,21 +226,11 @@ pub fn grow_to(
             .sum();
         let t_pre = cluster.makespan();
         let inbox = collectives::all_to_allv(cluster, outbox, 4);
-        // Merge received partial covers into the accumulated state.
+        // Merge received partial covers into the accumulated state — a
+        // hash-free sequential merge of vertex-sorted streams.
         for (dst, streams) in inbox.into_iter().enumerate() {
             let covers = &mut state.covers[dst];
-            let ((), _) = cluster.run_compute(dst, || {
-                for s in streams {
-                    let mut i = 0usize;
-                    while i < s.len() {
-                        let v = s[i];
-                        let cnt = s[i + 1] as usize;
-                        let ids = &s[i + 2..i + 2 + cnt];
-                        covers.entry(v).or_default().extend_from_slice(ids);
-                        i += 2 + cnt;
-                    }
-                }
-            });
+            let ((), _) = cluster.run_compute(dst, || covers.merge_streams(&streams));
         }
         let t_post = cluster.barrier();
         stats.alltoall_time = t_post - t_pre;
@@ -215,6 +251,7 @@ mod tests {
     use crate::distributed::NetModel;
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
+    use std::collections::HashMap;
 
     fn small_graph() -> Graph {
         let edges = generators::erdos_renyi(200, 1200, 11);
@@ -232,7 +269,7 @@ mod tests {
         let c = cfg(4);
         let mut st = DistState::new(g.n(), 4, &[1, 2, 3], c.seed, 0, true);
         grow_to(&mut cl, &g, &c, &mut st, 100);
-        let total: usize = st.local_batches.iter().flat_map(|bs| bs.iter().map(|b| b.sets.len())).sum();
+        let total: usize = st.local_batches.iter().flat_map(|bs| bs.iter().map(|b| b.len())).sum();
         assert_eq!(total, 100);
         assert_eq!(st.theta, 100);
     }
@@ -248,7 +285,7 @@ mod tests {
         grow_to(&mut cl, &g, &c, &mut st, 100);
         assert_eq!(st.theta, 100);
         assert!(st.entries_at(1) >= entries_before);
-        let total: usize = st.local_batches.iter().flat_map(|bs| bs.iter().map(|b| b.sets.len())).sum();
+        let total: usize = st.local_batches.iter().flat_map(|bs| bs.iter().map(|b| b.len())).sum();
         assert_eq!(total, 100);
     }
 
@@ -263,8 +300,8 @@ mod tests {
         // (receiver) must own nothing.
         assert!(st.covers[0].is_empty());
         for p in 1..4 {
-            for v in st.covers[p].keys() {
-                assert_eq!(st.owner[*v as usize] as usize, p);
+            for &v in &st.covers[p].vertices {
+                assert_eq!(st.owner[v as usize] as usize, p);
             }
         }
         // Union of covering entries equals total sample entries.
@@ -281,7 +318,7 @@ mod tests {
     fn sample_content_invariant_to_m() {
         // Leap-frog: the union of covering sets must be identical for any m.
         let g = small_graph();
-        let mut collect = |m: usize| -> Vec<(Vertex, Vec<SampleId>)> {
+        let collect = |m: usize| -> Vec<(Vertex, Vec<SampleId>)> {
             let mut cl = Cluster::new(m, NetModel::free());
             let c = cfg(m);
             let pool: Vec<usize> = if m == 1 { vec![0] } else { (1..m).collect() };
@@ -289,10 +326,11 @@ mod tests {
             grow_to(&mut cl, &g, &c, &mut st, 64);
             let mut all: Vec<(Vertex, Vec<SampleId>)> = Vec::new();
             for p in 0..m {
-                for (v, ids) in &st.covers[p] {
-                    let mut ids = ids.clone();
+                let ix = &st.covers[p];
+                for i in 0..ix.len() {
+                    let mut ids = ix.run(i).to_vec();
                     ids.sort_unstable();
-                    all.push((*v, ids));
+                    all.push((ix.vertices[i], ids));
                 }
             }
             all.sort();
@@ -324,7 +362,7 @@ mod tests {
         let stats = grow_to(&mut cl, &g, &c, &mut st, 60);
         assert_eq!(stats.alltoall_bytes, 0);
         assert_eq!(stats.alltoall_time, 0.0);
-        assert!(st.covers.iter().all(HashMap::is_empty));
+        assert!(st.covers.iter().all(InvertedIndex::is_empty));
     }
 
     #[test]
@@ -338,5 +376,127 @@ mod tests {
         for &c in &counts[1..] {
             assert!((900..1600).contains(&c), "count {c}");
         }
+    }
+
+    #[test]
+    fn owner_phases_differ_but_runs_repeat() {
+        // Same (seed, id_base) => identical partition; different id_base
+        // => a fresh partition (the per-phase redraw of §3.4 S2).
+        let a = DistState::new(2_000, 4, &[1, 2, 3], 5, 0, true);
+        let b = DistState::new(2_000, 4, &[1, 2, 3], 5, 0, true);
+        let c = DistState::new(2_000, 4, &[1, 2, 3], 5, 1 << 40, true);
+        assert_eq!(a.owner, b.owner);
+        assert_ne!(a.owner, c.owner);
+    }
+
+    #[test]
+    fn flat_inverted_index_matches_hashmap_reference() {
+        // Golden equivalence: the flat counting-sort + merge path must
+        // produce exactly the (vertex -> sorted ids) multiset the old
+        // HashMap path produced, on a seeded Erdős–Rényi instance over
+        // multiple martingale-style growth rounds.
+        let edges = generators::erdos_renyi(150, 900, 23);
+        let g = Graph::from_edges(150, &edges, WeightModel::UniformIc { max: 0.12 }, 23);
+        let m = 5;
+        let mut cl = Cluster::new(m, NetModel::free());
+        let c = cfg(m);
+        let mut st = DistState::new(g.n(), m, &[1, 2, 3, 4], c.seed, 0, true);
+        grow_to(&mut cl, &g, &c, &mut st, 40);
+        grow_to(&mut cl, &g, &c, &mut st, 100);
+        grow_to(&mut cl, &g, &c, &mut st, 230);
+
+        // Reference: HashMap inversion straight from the generated batches.
+        let mut reference: Vec<HashMap<Vertex, Vec<SampleId>>> =
+            (0..m).map(|_| HashMap::new()).collect();
+        for bs in &st.local_batches {
+            for b in bs {
+                for (j, set) in b.iter_sets().enumerate() {
+                    let sid = b.first_id + j as SampleId;
+                    for &v in set {
+                        let dst = st.owner[v as usize] as usize;
+                        reference[dst].entry(v).or_default().push(sid);
+                    }
+                }
+            }
+        }
+        for p in 0..m {
+            let ix = &st.covers[p];
+            assert_eq!(ix.len(), reference[p].len(), "rank {p} vertex count");
+            for i in 0..ix.len() {
+                let v = ix.vertices[i];
+                let mut want = reference[p].get(&v).cloned().unwrap_or_default();
+                want.sort_unstable();
+                let mut got = ix.run(i).to_vec();
+                got.sort_unstable();
+                assert_eq!(got, want, "rank {p} vertex {v}");
+                // The accumulated runs must additionally already BE sorted.
+                assert_eq!(got, ix.run(i), "rank {p} vertex {v} run not sorted");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_contents_binary_search_matches_scan() {
+        // Across batch boundaries (three growth rounds => three batches per
+        // rank), the binary search must agree with a brute-force scan.
+        let g = small_graph();
+        let m = 3;
+        let mut cl = Cluster::new(m, NetModel::free());
+        let c = cfg(m);
+        let mut st = DistState::new(g.n(), m, &[1, 2], c.seed, 0, true);
+        grow_to(&mut cl, &g, &c, &mut st, 30);
+        grow_to(&mut cl, &g, &c, &mut st, 100);
+        grow_to(&mut cl, &g, &c, &mut st, 160);
+        let brute = |p: usize, sid: SampleId| -> Option<&[Vertex]> {
+            for b in &st.local_batches[p] {
+                let lo = b.first_id;
+                let hi = lo + b.len() as SampleId;
+                if sid >= lo && sid < hi {
+                    return Some(b.set((sid - lo) as usize));
+                }
+            }
+            None
+        };
+        let mut checked = 0usize;
+        for p in 0..m {
+            for b in &st.local_batches[p] {
+                for j in 0..b.len() {
+                    let sid = b.first_id + j as SampleId;
+                    assert_eq!(st.sample_contents(p, sid), brute(p, sid).unwrap());
+                    checked += 1;
+                }
+            }
+        }
+        assert_eq!(checked, 160);
+    }
+
+    #[test]
+    fn invert_streams_match_legacy_hashmap_wire_format() {
+        // The wire bytes of the counting-sort inversion must be identical
+        // to the old HashMap + sorted-keys construction.
+        let g = small_graph();
+        let batch = crate::sampling::RrrSampler::new(&g, DiffusionModel::IC, 3).batch(7, 120);
+        let m = 4;
+        let st = DistState::new(g.n(), m, &[1, 2, 3], 9, 0, true);
+        let flat = invert_batch_to_streams(&batch, &st.owner, m);
+
+        let mut partial: HashMap<Vertex, Vec<SampleId>> = HashMap::new();
+        for (j, set) in batch.iter_sets().enumerate() {
+            let sid = batch.first_id + j as SampleId;
+            for &v in set {
+                partial.entry(v).or_default().push(sid);
+            }
+        }
+        let mut legacy: Vec<Vec<u32>> = (0..m).map(|_| Vec::new()).collect();
+        let mut keys: Vec<Vertex> = partial.keys().copied().collect();
+        keys.sort_unstable();
+        for v in keys {
+            let ids = &partial[&v];
+            let buf = &mut legacy[st.owner[v as usize] as usize];
+            buf.push(v);
+            buf.push(ids.len() as u32);
+            buf.extend_from_slice(ids);
+        }
+        assert_eq!(flat, legacy);
     }
 }

@@ -1,0 +1,131 @@
+//! Minimal in-tree error handling (the `anyhow` crate is unavailable
+//! offline — this image has no network access to crates.io).
+//!
+//! Provides the small subset the crate actually uses: a string-backed
+//! [`Error`], a defaulted [`Result`] alias, the [`anyhow!`](crate::anyhow)
+//! and [`bail!`](crate::bail) constructor macros, and a [`Context`]
+//! extension trait for annotating fallible operations. Context is recorded
+//! by prefixing the message (`"open foo: No such file"`), which matches how
+//! the CLI renders errors.
+
+use std::fmt;
+
+/// A string-backed error. Intentionally does **not** implement
+/// `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+/// conversion below coherent (the same trick anyhow needs specialization
+/// for), and `fn main() -> Result<()>` only needs `Debug`.
+pub struct Error(String);
+
+impl Error {
+    /// Creates an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<(), Error>` prints the Debug form on exit;
+        // render the plain message so CLI errors stay readable.
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (anyhow-style defaulted error type).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    /// Wraps the error with a fixed message prefix.
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T>;
+
+    /// Wraps the error with a lazily built message prefix.
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<D: fmt::Display>(self, msg: D) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error(format!("{msg}: {e}"))
+        })
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let e: Error = e.into();
+            Error(format!("{}: {e}", f()))
+        })
+    }
+}
+
+/// Constructs an [`Error`] from a format string (or any displayable
+/// expression), mirroring `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        $crate::error::Error::msg(format!($msg $(, $arg)*))
+    };
+    ($err:expr) => {
+        $crate::error::Error::msg($err)
+    };
+}
+
+/// Early-returns an `Err(anyhow!(...))`, mirroring `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e: Error = io_fail().context("open x").unwrap_err();
+        assert_eq!(format!("{e}"), "open x: gone");
+        let e2: Error = io_fail().with_context(|| format!("line {}", 3)).unwrap_err();
+        assert!(format!("{e2}").starts_with("line 3: "));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let a = crate::anyhow!("bad value {}", 7);
+        assert_eq!(format!("{a}"), "bad value 7");
+        let s = String::from("prebuilt");
+        let b = crate::anyhow!(s);
+        assert_eq!(format!("{b}"), "prebuilt");
+        fn f() -> crate::error::Result<()> {
+            crate::bail!("stop {}", "here")
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "stop here");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn g() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        assert!(g().is_err());
+    }
+}

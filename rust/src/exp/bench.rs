@@ -3,7 +3,13 @@
 //! see Cargo.toml). Provides warmup, adaptive iteration counts, and
 //! mean/median/stddev reporting compatible with `cargo bench` targets
 //! built with `harness = false`.
+//!
+//! When `GREEDIRIS_BENCH_JSON` names a file, every measurement is also
+//! appended to it as one JSON object per line — `scripts/ci.sh` collects
+//! those lines into the repo-level `BENCH_PR1.json` perf-trajectory record.
 
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One benchmark's collected statistics (seconds).
@@ -53,6 +59,8 @@ pub struct Bench {
     pub measurement: Duration,
     /// Max samples per benchmark.
     pub max_samples: usize,
+    /// JSON-lines sink (from `GREEDIRIS_BENCH_JSON`), if configured.
+    json_path: Option<PathBuf>,
 }
 
 impl Bench {
@@ -62,6 +70,23 @@ impl Bench {
             group: group.to_string(),
             measurement: if quick { Duration::from_millis(700) } else { Duration::from_secs(3) },
             max_samples: if quick { 20 } else { 60 },
+            json_path: std::env::var_os("GREEDIRIS_BENCH_JSON").map(PathBuf::from),
+        }
+    }
+
+    fn export_json(&self, name: &str, stats: &Stats) {
+        let Some(path) = &self.json_path else { return };
+        let line = format!(
+            "{{\"group\":\"{}\",\"name\":\"{}\",\"median_s\":{},\"mean_s\":{},\"stddev_s\":{},\"min_s\":{},\"max_s\":{},\"iters\":{}}}\n",
+            self.group, name, stats.median, stats.mean, stats.stddev, stats.min, stats.max, stats.iters,
+        );
+        let res = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .and_then(|mut f| f.write_all(line.as_bytes()));
+        if let Err(e) = res {
+            eprintln!("warning: could not append bench JSON to {}: {e}", path.display());
         }
     }
 
@@ -84,6 +109,7 @@ impl Bench {
             spent += dt;
         }
         let stats = Stats::from_samples(samples);
+        self.export_json(name, &stats);
         println!(
             "bench {}/{name}: {} median ({} mean ± {}, {} iters, range {}..{})",
             self.group,

@@ -8,7 +8,8 @@
 use crate::graph::weights::WeightModel;
 use crate::graph::Graph;
 use crate::Vertex;
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::error::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;

@@ -34,7 +34,34 @@
 //!   regenerate the paper's breakdown figures.
 //! - [`exp`] — the experiment harness that regenerates every table and
 //!   figure of the paper's evaluation section.
+//! - [`error`] — in-tree `anyhow` replacement (no crates.io access).
+//!
+//! ## Flat data-path invariants (PR 1)
+//!
+//! The S1→S2→S4 hot path runs entirely on flat, index-based layouts; every
+//! consumer relies on these invariants:
+//!
+//! - **[`sampling::SampleBatch`] is CSR**: `offsets.len() == len() + 1`,
+//!   `offsets[0] == 0`, sample `j` (global id `first_id + j`) is
+//!   `data[offsets[j]..offsets[j+1]]`. Batches held by a rank are appended
+//!   in ascending, non-overlapping `first_id` order, which is what lets
+//!   `DistState::sample_contents` binary-search instead of scan.
+//! - **Sample content is a pure function of the global id** (leap-frog RNG),
+//!   so S1 generation may be split across any number of OS threads
+//!   ([`sampling::batch_parallel`]) and remains bit-identical to sequential.
+//! - **[`maxcover::SetSystem`] is CSR** (`vertices`/`offsets`/`ids`) with
+//!   `vertices` sorted ascending and each per-vertex id run sorted
+//!   ascending. [`maxcover::SetSystemView`] is the borrowed twin; rank
+//!   state hands out views (`DistState::system_at`) without cloning.
+//! - **Shuffle wire format** is unchanged (`[v, count, ids...]` u32
+//!   streams, vertex-sorted), but both endpoints are hash-free: senders
+//!   invert batches by counting-sort over the owner partition + a flat
+//!   `(vertex, id)` sort, receivers merge streams into the accumulated
+//!   per-rank [`maxcover::InvertedIndex`] with sequential appends. Newly
+//!   shuffled sample ids are always strictly greater than accumulated ones,
+//!   which keeps runs sorted without re-sorting.
 
+pub mod error;
 pub mod rng;
 pub mod graph;
 pub mod diffusion;

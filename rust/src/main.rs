@@ -10,7 +10,8 @@
 //! - `opim`    the OPIM-C variant with a truncation sweep (Table 6 style);
 //! - `inputs`  list the analog catalog (Table 3 stand-ins).
 
-use anyhow::{anyhow, bail, Result};
+use greediris::error::Result;
+use greediris::{anyhow, bail};
 use greediris::coordinator::{run_infmax, run_infmax_with_scorer, run_opim, Algorithm, Config, LocalSolver};
 use greediris::diffusion::{evaluate_spread, DiffusionModel};
 use greediris::exp::inputs::{analog, build_analog, weights_for, ANALOGS};
@@ -28,6 +29,7 @@ USAGE:
   greediris run [--input NAME | --file PATH] [--algorithm A] [--model IC|LT]
                 [--m N] [--k N] [--eps F] [--alpha F] [--theta N]
                 [--solver lazy|dense-cpu|dense-xla] [--sims N] [--seed N]
+                [--s1-threads N]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
   greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
   greediris inputs
@@ -111,7 +113,8 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     let mut cfg = Config::new(k, m, model, algorithm)
         .with_seed(seed)
         .with_eps(flags.get("eps", 0.13)?)
-        .with_alpha(flags.get("alpha", 0.125)?);
+        .with_alpha(flags.get("alpha", 0.125)?)
+        .with_s1_threads(flags.get("s1-threads", 1usize)?);
     if let Some(t) = flags.map.get("theta") {
         cfg = cfg.with_theta(t.parse()?);
     }

@@ -1,5 +1,12 @@
-//! Coverage data structures: the covered-universe bitmap and the covering
-//! set system S = { S(v) } (paper Table 1).
+//! Coverage data structures: the covered-universe bitmap, the covering
+//! set system S = { S(v) } (paper Table 1), and the flat inverted index
+//! that accumulates shuffled covering sets at each owner rank.
+//!
+//! All set-system storage is CSR (`vertices` + `offsets` + flat `ids`):
+//! one allocation per system instead of one `Vec` per covering set, with
+//! `vertices` sorted ascending and each per-vertex id run sorted ascending.
+//! [`SetSystemView`] is the borrowed, `Copy` twin that the solvers consume,
+//! so rank state can hand out its accumulated index without cloning.
 
 use crate::sampling::SampleBatch;
 use crate::{SampleId, Vertex};
@@ -76,21 +83,91 @@ impl BitCover {
     }
 }
 
-/// The covering set system: for each candidate vertex, the sorted list of
-/// sample ids it covers. This is the sparse representation used by all
-/// sparse solvers; [`super::dense::PackedCovers`] is the bitmap twin used by
-/// the XLA path.
-#[derive(Clone, Debug, Default)]
+/// Packs every `(vertex, sample id)` entry of `batches` into sortable
+/// `(vertex << 32) | id` u64s. Shared by [`SetSystem::invert`] and
+/// [`InvertedIndex::from_batches`].
+fn pairs_from_batches(batches: &[&SampleBatch]) -> Vec<u64> {
+    let total: usize = batches.iter().map(|b| b.total_entries()).sum();
+    let mut pairs: Vec<u64> = Vec::with_capacity(total);
+    for b in batches {
+        for (j, set) in b.iter_sets().enumerate() {
+            let sid = b.first_id + j as SampleId;
+            for &v in set {
+                pairs.push(((v as u64) << 32) | sid as u64);
+            }
+        }
+    }
+    pairs
+}
+
+/// Turns a sorted slice of packed `(vertex << 32) | id` pairs into CSR
+/// triples. Shared by [`SetSystem::invert`] and [`InvertedIndex`].
+fn csr_from_sorted_pairs(pairs: &[u64]) -> (Vec<Vertex>, Vec<u32>, Vec<SampleId>) {
+    let mut vertices = Vec::new();
+    let mut offsets = vec![0u32];
+    let mut ids = Vec::with_capacity(pairs.len());
+    let mut i = 0usize;
+    while i < pairs.len() {
+        let v = (pairs[i] >> 32) as Vertex;
+        while i < pairs.len() && (pairs[i] >> 32) as Vertex == v {
+            ids.push(pairs[i] as u32);
+            i += 1;
+        }
+        vertices.push(v);
+        offsets.push(ids.len() as u32);
+    }
+    (vertices, offsets, ids)
+}
+
+/// The covering set system in owned CSR form: for each candidate vertex,
+/// the sorted run of sample ids it covers. This is the sparse
+/// representation used by all sparse solvers (always through
+/// [`SetSystemView`]); [`super::dense::PackedCovers`] is the bitmap twin
+/// used by the XLA path.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SetSystem {
     /// Universe size (number of samples this system refers to).
     pub theta: usize,
-    /// Candidate vertex ids, parallel to `sets`.
+    /// Candidate vertex ids, ascending.
     pub vertices: Vec<Vertex>,
-    /// `sets[i]` = sample ids covered by `vertices[i]`.
-    pub sets: Vec<Vec<SampleId>>,
+    /// CSR offsets into `ids`; always `len() + 1` entries starting at 0.
+    pub offsets: Vec<u32>,
+    /// Concatenated covering runs, sorted within each vertex.
+    pub ids: Vec<SampleId>,
+}
+
+impl Default for SetSystem {
+    fn default() -> Self {
+        Self::new(0)
+    }
 }
 
 impl SetSystem {
+    /// An empty system over a `theta`-sized universe.
+    pub fn new(theta: usize) -> Self {
+        Self { theta, vertices: Vec::new(), offsets: vec![0], ids: Vec::new() }
+    }
+
+    /// Builds a system from per-vertex id vectors (tests / fixtures).
+    pub fn from_sets(theta: usize, vertices: Vec<Vertex>, sets: &[Vec<SampleId>]) -> Self {
+        assert_eq!(vertices.len(), sets.len());
+        let mut sys = Self::new(theta);
+        sys.vertices = vertices;
+        for s in sets {
+            sys.ids.extend_from_slice(s);
+            sys.offsets.push(sys.ids.len() as u32);
+        }
+        sys
+    }
+
+    /// Appends one covering set (callers must keep `vertices` ascending if
+    /// downstream code binary-searches them).
+    pub fn push_set(&mut self, v: Vertex, ids: &[SampleId]) {
+        self.vertices.push(v);
+        self.ids.extend_from_slice(ids);
+        self.offsets.push(self.ids.len() as u32);
+    }
+
     pub fn len(&self) -> usize {
         self.vertices.len()
     }
@@ -100,56 +177,103 @@ impl SetSystem {
     }
 
     pub fn total_entries(&self) -> usize {
-        self.sets.iter().map(Vec::len).sum()
+        self.ids.len()
+    }
+
+    /// The covering run of row `i`.
+    #[inline]
+    pub fn set(&self, i: usize) -> &[SampleId] {
+        &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Iterates the covering runs in row order.
+    pub fn iter_sets(&self) -> impl Iterator<Item = &[SampleId]> + '_ {
+        self.offsets
+            .windows(2)
+            .map(move |w| &self.ids[w[0] as usize..w[1] as usize])
+    }
+
+    /// Borrowed view for the solvers.
+    #[inline]
+    pub fn view(&self) -> SetSystemView<'_> {
+        SetSystemView {
+            theta: self.theta,
+            vertices: &self.vertices,
+            offsets: &self.offsets,
+            ids: &self.ids,
+        }
     }
 
     /// Inverts a batch of RRR samples into per-vertex covering subsets
     /// (the `S_p(v) = { j | v ∈ R_p(j) }` construction, Alg. 3 line 4),
-    /// keeping only vertices that appear in at least one sample.
+    /// keeping only vertices that appear in at least one sample. Flat
+    /// build: pack `(vertex, id)` pairs into u64s, sort, emit runs.
     pub fn invert(n: usize, batches: &[&SampleBatch], theta: usize) -> Self {
-        let mut counts = vec![0u32; n];
-        for b in batches {
-            for set in &b.sets {
-                for &v in set {
-                    counts[v as usize] += 1;
-                }
-            }
-        }
-        let mut vertices = Vec::new();
-        let mut index = vec![u32::MAX; n];
-        for (v, &c) in counts.iter().enumerate() {
-            if c > 0 {
-                index[v] = vertices.len() as u32;
-                vertices.push(v as Vertex);
-            }
-        }
-        let mut sets: Vec<Vec<SampleId>> = vertices
-            .iter()
-            .map(|&v| Vec::with_capacity(counts[v as usize] as usize))
-            .collect();
-        for b in batches {
-            for (j, set) in b.sets.iter().enumerate() {
-                let sid = b.first_id + j as SampleId;
-                for &v in set {
-                    sets[index[v as usize] as usize].push(sid);
-                }
-            }
-        }
-        Self { theta, vertices, sets }
+        let mut pairs = pairs_from_batches(batches);
+        debug_assert!(pairs.iter().all(|&p| ((p >> 32) as usize) < n));
+        pairs.sort_unstable();
+        let (vertices, offsets, ids) = csr_from_sorted_pairs(&pairs);
+        Self { theta, vertices, offsets, ids }
     }
 
     /// Restricts the system to a subset of vertex ids (used by the random
     /// vertex partition of Alg. 3). `keep` must be a predicate on vertex id.
     pub fn filter(&self, keep: impl Fn(Vertex) -> bool) -> Self {
-        let mut vertices = Vec::new();
-        let mut sets = Vec::new();
+        let mut out = Self::new(self.theta);
         for (i, &v) in self.vertices.iter().enumerate() {
             if keep(v) {
-                vertices.push(v);
-                sets.push(self.sets[i].clone());
+                out.push_set(v, self.set(i));
             }
         }
-        Self { theta: self.theta, vertices, sets }
+        out
+    }
+
+    /// Coverage of an explicit seed set (vertex ids) under this system.
+    pub fn coverage_of(&self, seeds: &[Vertex]) -> u64 {
+        self.view().coverage_of(seeds)
+    }
+}
+
+/// Borrowed CSR set-system view — `Copy`, so it is passed by value. The
+/// solver family consumes this type; owned systems go through
+/// [`SetSystem::view`], rank state through
+/// [`crate::coordinator::sampling::DistState::system_at`] (no clone).
+#[derive(Clone, Copy, Debug)]
+pub struct SetSystemView<'a> {
+    pub theta: usize,
+    pub vertices: &'a [Vertex],
+    pub offsets: &'a [u32],
+    pub ids: &'a [SampleId],
+}
+
+impl<'a> SetSystemView<'a> {
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.ids.len()
+    }
+
+    #[inline]
+    pub fn vertex(&self, i: usize) -> Vertex {
+        self.vertices[i]
+    }
+
+    /// The covering run of row `i` (borrow lives as long as the backing
+    /// storage, not the view).
+    #[inline]
+    pub fn set(&self, i: usize) -> &'a [SampleId] {
+        &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Longest covering run (the `d` anchor of threshold greedy).
+    pub fn max_set_len(&self) -> usize {
+        self.offsets.windows(2).map(|w| (w[1] - w[0]) as usize).max().unwrap_or(0)
     }
 
     /// Coverage of an explicit seed set (vertex ids) under this system.
@@ -157,10 +281,141 @@ impl SetSystem {
         let mut cover = BitCover::new(self.theta);
         for &s in seeds {
             if let Some(i) = self.vertices.iter().position(|&v| v == s) {
-                cover.insert_all(&self.sets[i]);
+                cover.insert_all(self.set(i));
             }
         }
         cover.count() as u64
+    }
+}
+
+/// A rank's accumulated inverted index: vertex-sorted CSR of sample-id
+/// runs, the flat replacement for the old `HashMap<Vertex, Vec<SampleId>>`.
+///
+/// Invariants: `vertices` ascending; each run sorted ascending (maintained
+/// for free because every S2 round only contributes sample ids strictly
+/// greater than all accumulated ones, and within a round the sources are
+/// merged in ascending sample-id-block order).
+#[derive(Clone, Debug)]
+pub struct InvertedIndex {
+    pub vertices: Vec<Vertex>,
+    /// CSR offsets into `ids`; always `vertices.len() + 1` entries
+    /// starting at 0 (the [`Default`] impl upholds this too).
+    pub offsets: Vec<u32>,
+    pub ids: Vec<SampleId>,
+}
+
+impl Default for InvertedIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InvertedIndex {
+    pub fn new() -> Self {
+        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new() }
+    }
+
+    /// Number of distinct vertices with a covering run.
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+
+    /// Total covering entries.
+    pub fn entries(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// The id run of the `i`-th vertex.
+    #[inline]
+    pub fn run(&self, i: usize) -> &[SampleId] {
+        &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// The id run of vertex `v`, if present (binary search).
+    pub fn ids_for(&self, v: Vertex) -> Option<&[SampleId]> {
+        self.vertices.binary_search(&v).ok().map(|i| self.run(i))
+    }
+
+    /// Borrowed [`SetSystemView`] over a `theta`-sized universe.
+    #[inline]
+    pub fn as_view(&self, theta: usize) -> SetSystemView<'_> {
+        SetSystemView {
+            theta,
+            vertices: &self.vertices,
+            offsets: &self.offsets,
+            ids: &self.ids,
+        }
+    }
+
+    /// Builds the index of a rank's locally held batches (flat sort-based
+    /// inversion; used by the reduction baselines and tests).
+    pub fn from_batches(batches: &[&SampleBatch]) -> Self {
+        let mut pairs = pairs_from_batches(batches);
+        pairs.sort_unstable();
+        let (vertices, offsets, ids) = csr_from_sorted_pairs(&pairs);
+        Self { vertices, offsets, ids }
+    }
+
+    /// Merges a round of shuffle streams (wire format `[v, count, ids...]`,
+    /// each stream vertex-sorted) into the accumulated index — the hash-free
+    /// S2 merge. Streams must be given in ascending source-rank order so
+    /// that per-vertex runs concatenate in ascending sample-id order.
+    pub fn merge_streams(&mut self, streams: &[Vec<u32>]) {
+        // Decode run descriptors: (vertex, stream, payload start, count).
+        let mut runs: Vec<(Vertex, u32, u32, u32)> = Vec::new();
+        let mut added = 0usize;
+        for (si, s) in streams.iter().enumerate() {
+            let mut i = 0usize;
+            while i < s.len() {
+                let v = s[i];
+                let cnt = s[i + 1] as usize;
+                runs.push((v, si as u32, (i + 2) as u32, cnt as u32));
+                added += cnt;
+                i += 2 + cnt;
+            }
+        }
+        if runs.is_empty() {
+            return;
+        }
+        // Streams are vertex-sorted, so this sort is nearly-sorted input;
+        // the (vertex, stream) key keeps id blocks in ascending order.
+        runs.sort_unstable_by_key(|r| (r.0, r.1));
+
+        // Two-pointer merge of the accumulated CSR with the new runs.
+        let mut vertices = Vec::with_capacity(self.vertices.len() + runs.len());
+        let mut offsets = Vec::with_capacity(self.vertices.len() + runs.len() + 1);
+        offsets.push(0u32);
+        let mut ids = Vec::with_capacity(self.ids.len() + added);
+        let (mut oi, mut ri) = (0usize, 0usize);
+        while oi < self.vertices.len() || ri < runs.len() {
+            let v = match (self.vertices.get(oi), runs.get(ri)) {
+                (Some(&ov), Some(&(nv, ..))) => ov.min(nv),
+                (Some(&ov), None) => ov,
+                (None, Some(&(nv, ..))) => nv,
+                (None, None) => unreachable!(),
+            };
+            if oi < self.vertices.len() && self.vertices[oi] == v {
+                let lo = self.offsets[oi] as usize;
+                let hi = self.offsets[oi + 1] as usize;
+                ids.extend_from_slice(&self.ids[lo..hi]);
+                oi += 1;
+            }
+            while ri < runs.len() && runs[ri].0 == v {
+                let (_, si, start, cnt) = runs[ri];
+                let s = &streams[si as usize];
+                ids.extend_from_slice(&s[start as usize..(start + cnt) as usize]);
+                ri += 1;
+            }
+            vertices.push(v);
+            offsets.push(ids.len() as u32);
+        }
+        self.vertices = vertices;
+        self.offsets = offsets;
+        self.ids = ids;
     }
 }
 
@@ -202,16 +457,12 @@ mod tests {
     #[test]
     fn invert_simple() {
         // Samples: 0 -> {0,1}, 1 -> {1,2}
-        let batch = SampleBatch {
-            first_id: 0,
-            sets: vec![vec![0, 1], vec![1, 2]],
-            roots: vec![0, 1],
-        };
+        let batch = SampleBatch::from_sets(0, &[vec![0, 1], vec![1, 2]], vec![0, 1]);
         let sys = SetSystem::invert(4, &[&batch], 2);
         assert_eq!(sys.vertices, vec![0, 1, 2]);
         // Vertex 1 appears in both samples.
         let i1 = sys.vertices.iter().position(|&v| v == 1).unwrap();
-        assert_eq!(sys.sets[i1], vec![0, 1]);
+        assert_eq!(sys.set(i1), &[0, 1]);
         // Vertex 3 appears nowhere and is dropped.
         assert!(!sys.vertices.contains(&3));
         assert_eq!(sys.total_entries(), 4);
@@ -219,22 +470,18 @@ mod tests {
 
     #[test]
     fn invert_multiple_batches_with_offsets() {
-        let b1 = SampleBatch { first_id: 0, sets: vec![vec![5]], roots: vec![5] };
-        let b2 = SampleBatch { first_id: 1, sets: vec![vec![5, 6]], roots: vec![5] };
+        let b1 = SampleBatch::from_sets(0, &[vec![5]], vec![5]);
+        let b2 = SampleBatch::from_sets(1, &[vec![5, 6]], vec![5]);
         let sys = SetSystem::invert(8, &[&b1, &b2], 2);
         let i5 = sys.vertices.iter().position(|&v| v == 5).unwrap();
-        assert_eq!(sys.sets[i5], vec![0, 1]);
+        assert_eq!(sys.set(i5), &[0, 1]);
         let i6 = sys.vertices.iter().position(|&v| v == 6).unwrap();
-        assert_eq!(sys.sets[i6], vec![1]);
+        assert_eq!(sys.set(i6), &[1]);
     }
 
     #[test]
     fn filter_partitions() {
-        let batch = SampleBatch {
-            first_id: 0,
-            sets: vec![vec![0, 1, 2, 3]],
-            roots: vec![0],
-        };
+        let batch = SampleBatch::from_sets(0, &[vec![0, 1, 2, 3]], vec![0]);
         let sys = SetSystem::invert(4, &[&batch], 1);
         let even = sys.filter(|v| v % 2 == 0);
         let odd = sys.filter(|v| v % 2 == 1);
@@ -243,15 +490,77 @@ mod tests {
 
     #[test]
     fn coverage_of_seed_set() {
-        let batch = SampleBatch {
-            first_id: 0,
-            sets: vec![vec![0, 1], vec![1, 2], vec![2]],
-            roots: vec![0, 1, 2],
-        };
+        let batch = SampleBatch::from_sets(0, &[vec![0, 1], vec![1, 2], vec![2]], vec![0, 1, 2]);
         let sys = SetSystem::invert(3, &[&batch], 3);
         assert_eq!(sys.coverage_of(&[0]), 1); // vertex 0 covers sample 0 only
         assert_eq!(sys.coverage_of(&[1]), 2); // vertex 1 covers samples 0,1
         assert_eq!(sys.coverage_of(&[1, 2]), 3);
         assert_eq!(sys.coverage_of(&[]), 0);
+    }
+
+    #[test]
+    fn view_matches_owned() {
+        let sys = SetSystem::from_sets(10, vec![3, 7], &[vec![0, 1], vec![2]]);
+        let v = sys.view();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.vertex(1), 7);
+        assert_eq!(v.set(0), &[0, 1]);
+        assert_eq!(v.max_set_len(), 2);
+        assert_eq!(v.total_entries(), 3);
+        assert_eq!(v.coverage_of(&[3, 7]), 3);
+    }
+
+    #[test]
+    fn inverted_index_from_batches_and_lookup() {
+        let b = SampleBatch::from_sets(4, &[vec![2, 0], vec![2]], vec![2, 2]);
+        let ix = InvertedIndex::from_batches(&[&b]);
+        assert_eq!(ix.vertices, vec![0, 2]);
+        assert_eq!(ix.ids_for(2), Some(&[4, 5][..]));
+        assert_eq!(ix.ids_for(0), Some(&[4][..]));
+        assert_eq!(ix.ids_for(1), None);
+        assert_eq!(ix.entries(), 3);
+    }
+
+    #[test]
+    fn merge_streams_accumulates_sorted_runs() {
+        let mut ix = InvertedIndex::new();
+        // Round 1: two sources — src 0 holds ids {0,1}, src 1 holds {2}.
+        let r1 = vec![
+            vec![5, 2, 0, 1, 9, 1, 0],   // v5 -> [0,1], v9 -> [0]
+            vec![5, 1, 2],               // v5 -> [2]
+        ];
+        ix.merge_streams(&r1);
+        assert_eq!(ix.vertices, vec![5, 9]);
+        assert_eq!(ix.ids_for(5), Some(&[0, 1, 2][..]));
+        // Round 2: new ids are strictly greater; a new vertex interleaves.
+        let r2 = vec![vec![3, 1, 7, 5, 1, 8], vec![]];
+        ix.merge_streams(&r2);
+        assert_eq!(ix.vertices, vec![3, 5, 9]);
+        assert_eq!(ix.ids_for(5), Some(&[0, 1, 2, 8][..]));
+        assert_eq!(ix.ids_for(3), Some(&[7][..]));
+        assert_eq!(ix.entries(), 6);
+        // Runs stay sorted.
+        for i in 0..ix.len() {
+            let run = ix.run(i);
+            assert!(run.windows(2).all(|w| w[0] < w[1]), "run {run:?}");
+        }
+    }
+
+    #[test]
+    fn merge_empty_streams_is_noop() {
+        let mut ix = InvertedIndex::new();
+        ix.merge_streams(&[vec![], vec![]]);
+        assert!(ix.is_empty());
+        assert_eq!(ix.offsets, vec![0]);
+    }
+
+    #[test]
+    fn as_view_is_a_valid_set_system() {
+        let b = SampleBatch::from_sets(0, &[vec![1, 2], vec![1]], vec![1, 1]);
+        let ix = InvertedIndex::from_batches(&[&b]);
+        let view = ix.as_view(2);
+        assert_eq!(view.theta, 2);
+        assert_eq!(view.len(), 2);
+        assert_eq!(view.coverage_of(&[1]), 2);
     }
 }

@@ -9,7 +9,7 @@
 //! Pallas kernel. The `u32` word width matches the JAX kernel's dtype so the
 //! two backends are bit-compatible.
 
-use super::coverage::SetSystem;
+use super::coverage::SetSystemView;
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
 
@@ -27,17 +27,17 @@ pub struct PackedCovers {
 }
 
 impl PackedCovers {
-    pub fn from_sets(sys: &SetSystem) -> Self {
+    pub fn from_sets(sys: SetSystemView<'_>) -> Self {
         let w = sys.theta.div_ceil(32).max(1);
         let n = sys.len();
         let mut bits = vec![0u32; n * w];
-        for (i, ids) in sys.sets.iter().enumerate() {
+        for i in 0..n {
             let row = &mut bits[i * w..(i + 1) * w];
-            for &id in ids {
+            for &id in sys.set(i) {
                 row[(id >> 5) as usize] |= 1u32 << (id & 31);
             }
         }
-        Self { n, w, bits, vertices: sys.vertices.clone(), theta: sys.theta }
+        Self { n, w, bits, vertices: sys.vertices.to_vec(), theta: sys.theta }
     }
 
     #[inline]
@@ -147,19 +147,20 @@ pub fn pack_mask(theta: usize, ids: &[SampleId]) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::maxcover::SetSystem;
 
     fn tiny_system() -> SetSystem {
         // theta = 40 (crosses one u32 word boundary)
-        SetSystem {
-            theta: 40,
-            vertices: vec![10, 20, 30],
-            sets: vec![vec![0, 1, 2, 33], vec![2, 3], vec![33, 34, 35, 36, 37]],
-        }
+        SetSystem::from_sets(
+            40,
+            vec![10, 20, 30],
+            &[vec![0, 1, 2, 33], vec![2, 3], vec![33, 34, 35, 36, 37]],
+        )
     }
 
     #[test]
     fn packing_sets_expected_bits() {
-        let p = PackedCovers::from_sets(&tiny_system());
+        let p = PackedCovers::from_sets(tiny_system().view());
         assert_eq!(p.w, 2);
         assert_eq!(p.row(0)[0], 0b111);
         assert_eq!(p.row(0)[1], 1 << 1); // id 33 = word 1, bit 1
@@ -168,7 +169,7 @@ mod tests {
 
     #[test]
     fn cpu_scorer_counts_and_argmax() {
-        let p = PackedCovers::from_sets(&tiny_system());
+        let p = PackedCovers::from_sets(tiny_system().view());
         let covered = vec![0u32; p.w];
         let selected = vec![false; p.n];
         let mut s = CpuScorer;
@@ -179,7 +180,7 @@ mod tests {
 
     #[test]
     fn cpu_scorer_respects_covered_mask() {
-        let p = PackedCovers::from_sets(&tiny_system());
+        let p = PackedCovers::from_sets(tiny_system().view());
         let covered = pack_mask(40, &[33, 34, 35, 36, 37]);
         let selected = vec![false; p.n];
         let (i, g) = CpuScorer.best(&p, &covered, &selected);
@@ -189,7 +190,7 @@ mod tests {
 
     #[test]
     fn cpu_scorer_skips_selected() {
-        let p = PackedCovers::from_sets(&tiny_system());
+        let p = PackedCovers::from_sets(tiny_system().view());
         let covered = vec![0u32; p.w];
         let mut selected = vec![false; p.n];
         selected[2] = true;
@@ -201,21 +202,17 @@ mod tests {
     #[test]
     fn dense_greedy_matches_sparse_greedy() {
         let sys = tiny_system();
-        let p = PackedCovers::from_sets(&sys);
+        let p = PackedCovers::from_sets(sys.view());
         let dense = dense_greedy_max_cover(&p, 3, &mut CpuScorer);
-        let sparse = super::super::greedy::greedy_max_cover(&sys, 3);
+        let sparse = super::super::greedy::greedy_max_cover(sys.view(), 3);
         assert_eq!(dense.seeds, sparse.seeds);
         assert_eq!(dense.coverage, sparse.coverage);
     }
 
     #[test]
     fn dense_greedy_stops_at_zero_gain() {
-        let sys = SetSystem {
-            theta: 4,
-            vertices: vec![0, 1],
-            sets: vec![vec![0, 1, 2, 3], vec![0, 1]],
-        };
-        let p = PackedCovers::from_sets(&sys);
+        let sys = SetSystem::from_sets(4, vec![0, 1], &[vec![0, 1, 2, 3], vec![0, 1]]);
+        let p = PackedCovers::from_sets(sys.view());
         let sol = dense_greedy_max_cover(&p, 2, &mut CpuScorer);
         assert_eq!(sol.seeds, vec![0]);
         assert_eq!(sol.coverage, 4);

@@ -2,12 +2,12 @@
 //! O(k · Σ|S(v)|). Kept as the reference implementation the faster solvers
 //! are tested against.
 
-use super::coverage::{BitCover, SetSystem};
+use super::coverage::{BitCover, SetSystemView};
 use super::CoverSolution;
 
 /// Repeatedly selects the covering subset with the largest marginal gain.
 /// Ties break toward the lower row index (deterministic).
-pub fn greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
+pub fn greedy_max_cover(sys: SetSystemView<'_>, k: usize) -> CoverSolution {
     let mut covered = BitCover::new(sys.theta);
     let mut selected = vec![false; sys.len()];
     let mut sol = CoverSolution::default();
@@ -18,7 +18,7 @@ pub fn greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
             if selected[i] {
                 continue;
             }
-            let gain = covered.count_new(&sys.sets[i]);
+            let gain = covered.count_new(sys.set(i));
             if best_i == usize::MAX || gain > best_gain {
                 best_i = i;
                 best_gain = gain;
@@ -28,8 +28,8 @@ pub fn greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
             break;
         }
         selected[best_i] = true;
-        covered.insert_all(&sys.sets[best_i]);
-        sol.push(sys.vertices[best_i], best_gain);
+        covered.insert_all(sys.set(best_i));
+        sol.push(sys.vertex(best_i), best_gain);
     }
     sol
 }
@@ -37,16 +37,17 @@ pub fn greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::maxcover::SetSystem;
 
     fn sys(theta: usize, sets: Vec<Vec<u32>>) -> SetSystem {
         let vertices = (0..sets.len() as u32).collect();
-        SetSystem { theta, vertices, sets }
+        SetSystem::from_sets(theta, vertices, &sets)
     }
 
     #[test]
     fn picks_largest_first() {
         let s = sys(6, vec![vec![0, 1], vec![2, 3, 4], vec![5]]);
-        let sol = greedy_max_cover(&s, 1);
+        let sol = greedy_max_cover(s.view(), 1);
         assert_eq!(sol.seeds, vec![1]);
         assert_eq!(sol.coverage, 3);
     }
@@ -56,7 +57,7 @@ mod tests {
         // Set 0 = {0..3}; set 1 = {0..2, 4}; set 2 = {5,6}.
         // After picking 0, set 1 gains only 1 while set 2 gains 2.
         let s = sys(7, vec![vec![0, 1, 2, 3], vec![0, 1, 2, 4], vec![5, 6]]);
-        let sol = greedy_max_cover(&s, 2);
+        let sol = greedy_max_cover(s.view(), 2);
         assert_eq!(sol.seeds, vec![0, 2]);
         assert_eq!(sol.coverage, 6);
         assert_eq!(sol.gains, vec![4, 2]);
@@ -65,7 +66,7 @@ mod tests {
     #[test]
     fn stops_when_universe_exhausted() {
         let s = sys(2, vec![vec![0, 1], vec![0], vec![1]]);
-        let sol = greedy_max_cover(&s, 3);
+        let sol = greedy_max_cover(s.view(), 3);
         assert_eq!(sol.seeds, vec![0]);
         assert_eq!(sol.coverage, 2);
     }
@@ -73,9 +74,9 @@ mod tests {
     #[test]
     fn k_zero_and_empty_system() {
         let s = sys(4, vec![vec![0]]);
-        assert!(greedy_max_cover(&s, 0).is_empty());
+        assert!(greedy_max_cover(s.view(), 0).is_empty());
         let empty = sys(4, vec![]);
-        assert!(greedy_max_cover(&empty, 3).is_empty());
+        assert!(greedy_max_cover(empty.view(), 3).is_empty());
     }
 
     #[test]
@@ -90,7 +91,7 @@ mod tests {
                 vec![0, 1, 4, 5, 2],  // tempting overlap
             ],
         );
-        let sol = greedy_max_cover(&s, 2);
+        let sol = greedy_max_cover(s.view(), 2);
         assert!(sol.coverage >= 6, "coverage {}", sol.coverage);
     }
 }

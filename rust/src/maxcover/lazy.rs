@@ -10,7 +10,7 @@
 //! [`lazy_greedy_stream`] to emit each seed *as it is identified*, which is
 //! what enables the tandem local/global computation.
 
-use super::coverage::{BitCover, SetSystem};
+use super::coverage::{BitCover, SetSystemView};
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
 use std::cmp::Ordering;
@@ -43,14 +43,14 @@ impl PartialOrd for HeapEntry {
 pub struct SelectEvent<'a> {
     /// 0-based selection order of this seed.
     pub order: usize,
-    /// Row index of the seed within the input [`SetSystem`].
+    /// Row index of the seed within the input system.
     pub idx: usize,
     /// The selected vertex.
     pub vertex: Vertex,
     /// Marginal gain at selection time.
     pub gain: u32,
     /// The *residual* covering subset — the sample ids newly covered by
-    /// this seed. (The full subset is `sys.sets[idx]`; the GreediRIS sender
+    /// this seed. (The full subset is `sys.set(idx)`; the GreediRIS sender
     /// ships the full subset per §3.4 S3, but the residual is what updates
     /// the local covered state.)
     pub residual: &'a [SampleId],
@@ -60,13 +60,13 @@ pub struct SelectEvent<'a> {
 /// hook the GreediRIS senders use to stream seeds to the receiver as they
 /// are identified.
 pub fn lazy_greedy_stream(
-    sys: &SetSystem,
+    sys: SetSystemView<'_>,
     k: usize,
     mut emit: impl FnMut(SelectEvent<'_>),
 ) -> CoverSolution {
     let mut covered = BitCover::new(sys.theta);
     let mut heap: BinaryHeap<HeapEntry> = (0..sys.len())
-        .map(|i| HeapEntry { gain: sys.sets[i].len() as u32, idx: i as u32 })
+        .map(|i| HeapEntry { gain: sys.set(i).len() as u32, idx: i as u32 })
         .collect();
     let mut sol = CoverSolution::default();
     let mut residual: Vec<SampleId> = Vec::new();
@@ -76,7 +76,7 @@ pub fn lazy_greedy_stream(
         // Recompute the true marginal gain (keys in the heap are stale upper
         // bounds thanks to submodularity).
         residual.clear();
-        for &id in &sys.sets[i] {
+        for &id in sys.set(i) {
             if !covered.contains(id) {
                 residual.push(id);
             }
@@ -103,11 +103,11 @@ pub fn lazy_greedy_stream(
             emit(SelectEvent {
                 order: sol.len(),
                 idx: i,
-                vertex: sys.vertices[i],
+                vertex: sys.vertex(i),
                 gain,
                 residual: &residual,
             });
-            sol.push(sys.vertices[i], gain);
+            sol.push(sys.vertex(i), gain);
         } else {
             heap.push(HeapEntry { gain, idx: top.idx });
         }
@@ -116,7 +116,7 @@ pub fn lazy_greedy_stream(
 }
 
 /// Lazy greedy without the streaming callback.
-pub fn lazy_greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
+pub fn lazy_greedy_max_cover(sys: SetSystemView<'_>, k: usize) -> CoverSolution {
     lazy_greedy_stream(sys, k, |_| {})
 }
 
@@ -124,11 +124,12 @@ pub fn lazy_greedy_max_cover(sys: &SetSystem, k: usize) -> CoverSolution {
 mod tests {
     use super::*;
     use crate::maxcover::greedy::greedy_max_cover;
+    use crate::maxcover::SetSystem;
     use crate::rng::Xoshiro256pp;
 
     fn sys(theta: usize, sets: Vec<Vec<u32>>) -> SetSystem {
         let vertices = (0..sets.len() as u32).collect();
-        SetSystem { theta, vertices, sets }
+        SetSystem::from_sets(theta, vertices, &sets)
     }
 
     #[test]
@@ -137,8 +138,8 @@ mod tests {
             10,
             vec![vec![0, 1, 2, 3, 4], vec![3, 4, 5], vec![5, 6, 7, 8], vec![9]],
         );
-        let a = greedy_max_cover(&s, 4);
-        let b = lazy_greedy_max_cover(&s, 4);
+        let a = greedy_max_cover(s.view(), 4);
+        let b = lazy_greedy_max_cover(s.view(), 4);
         assert_eq!(a.seeds, b.seeds);
         assert_eq!(a.coverage, b.coverage);
         assert_eq!(a.gains, b.gains);
@@ -148,7 +149,7 @@ mod tests {
     fn emits_residual_covering_sets() {
         let s = sys(6, vec![vec![0, 1, 2, 3], vec![2, 3, 4, 5]]);
         let mut emitted: Vec<(Vertex, u32, Vec<u32>)> = Vec::new();
-        lazy_greedy_stream(&s, 2, |e| emitted.push((e.vertex, e.gain, e.residual.to_vec())));
+        lazy_greedy_stream(s.view(), 2, |e| emitted.push((e.vertex, e.gain, e.residual.to_vec())));
         assert_eq!(emitted.len(), 2);
         assert_eq!(emitted[0], (0, 4, vec![0, 1, 2, 3]));
         // Second seed's residual excludes the already-covered 2, 3.
@@ -159,7 +160,7 @@ mod tests {
     fn emit_order_and_idx_consistent() {
         let s = sys(6, vec![vec![0], vec![1, 2, 3], vec![4, 5]]);
         let mut orders = Vec::new();
-        lazy_greedy_stream(&s, 3, |e| {
+        lazy_greedy_stream(s.view(), 3, |e| {
             assert_eq!(s.vertices[e.idx], e.vertex);
             orders.push(e.order);
         });
@@ -177,7 +178,7 @@ mod tests {
             })
             .collect();
         let s = sys(theta, sets);
-        let sol = lazy_greedy_max_cover(&s, 20);
+        let sol = lazy_greedy_max_cover(s.view(), 20);
         for w in sol.gains.windows(2) {
             assert!(w[0] >= w[1], "gains must be non-increasing: {:?}", sol.gains);
         }
@@ -201,8 +202,8 @@ mod tests {
                 })
                 .collect();
             let s = sys(theta, sets);
-            let a = greedy_max_cover(&s, 10);
-            let b = lazy_greedy_max_cover(&s, 10);
+            let a = greedy_max_cover(s.view(), 10);
+            let b = lazy_greedy_max_cover(s.view(), 10);
             assert_eq!(a.seeds, b.seeds, "seed {seed}");
             assert_eq!(a.coverage, b.coverage, "seed {seed}");
         }
@@ -211,14 +212,14 @@ mod tests {
     #[test]
     fn stops_on_exhausted_universe() {
         let s = sys(3, vec![vec![0, 1, 2], vec![0], vec![1, 2]]);
-        let sol = lazy_greedy_max_cover(&s, 3);
+        let sol = lazy_greedy_max_cover(s.view(), 3);
         assert_eq!(sol.seeds, vec![0]);
     }
 
     #[test]
     fn k_larger_than_candidates() {
         let s = sys(4, vec![vec![0], vec![1]]);
-        let sol = lazy_greedy_max_cover(&s, 10);
+        let sol = lazy_greedy_max_cover(s.view(), 10);
         assert_eq!(sol.len(), 2);
         assert_eq!(sol.coverage, 2);
     }

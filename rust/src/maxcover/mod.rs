@@ -19,6 +19,11 @@
 //! - [`dense::PackedCovers`] + [`dense::GainScorer`] — the packed-bitmap
 //!   scoring hot path shared by the native CPU backend and the AOT-compiled
 //!   XLA/Pallas backend ([`crate::runtime`]).
+//!
+//! All sparse solvers consume the borrowed CSR view
+//! [`coverage::SetSystemView`]; rank state accumulates shuffled covering
+//! sets in the flat [`coverage::InvertedIndex`] and lends it out without
+//! cloning (see the data-path invariants in [`crate`] docs).
 
 pub mod coverage;
 pub mod dense;
@@ -28,7 +33,7 @@ pub mod stochastic;
 pub mod streaming;
 pub mod threshold;
 
-pub use coverage::{BitCover, SetSystem};
+pub use coverage::{BitCover, InvertedIndex, SetSystem, SetSystemView};
 pub use dense::{dense_greedy_max_cover, dense_greedy_max_cover_stream, CpuScorer, GainScorer, PackedCovers};
 pub use greedy::greedy_max_cover;
 pub use lazy::lazy_greedy_max_cover;

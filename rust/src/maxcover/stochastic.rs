@@ -6,14 +6,14 @@
 //! `(1 − 1/e − ε)`-approximate *in expectation* with O(n·ln(1/ε)) total
 //! evaluations — sublinear in k.
 
-use super::coverage::{BitCover, SetSystem};
+use super::coverage::{BitCover, SetSystemView};
 use super::CoverSolution;
 use crate::rng::Xoshiro256pp;
 
 /// Runs stochastic greedy with accuracy `eps ∈ (0, 1)`; deterministic in
 /// `seed`.
 pub fn stochastic_greedy_max_cover(
-    sys: &SetSystem,
+    sys: SetSystemView<'_>,
     k: usize,
     eps: f64,
     seed: u64,
@@ -44,7 +44,7 @@ pub fn stochastic_greedy_max_cover(
         let mut best_j = usize::MAX;
         let mut best_gain = 0u32;
         for (j, &i) in pool[..take].iter().enumerate() {
-            let gain = covered.count_new(&sys.sets[i as usize]);
+            let gain = covered.count_new(sys.set(i as usize));
             // Ties break toward the lower candidate index so the
             // full-subsample degenerate case is exactly standard greedy.
             let better = best_j == usize::MAX
@@ -65,8 +65,8 @@ pub fn stochastic_greedy_max_cover(
         }
         let i = pool.swap_remove(best_j) as usize;
         selected[i] = true;
-        covered.insert_all(&sys.sets[i]);
-        sol.push(sys.vertices[i], best_gain);
+        covered.insert_all(sys.set(i));
+        sol.push(sys.vertex(i), best_gain);
     }
     sol
 }
@@ -75,6 +75,7 @@ pub fn stochastic_greedy_max_cover(
 mod tests {
     use super::*;
     use crate::maxcover::greedy::greedy_max_cover;
+    use crate::maxcover::SetSystem;
 
     fn random_system(seed: u64, n: usize, theta: usize) -> SetSystem {
         let mut rng = Xoshiro256pp::seeded(seed);
@@ -88,23 +89,23 @@ mod tests {
                 v
             })
             .collect();
-        SetSystem { theta, vertices: (0..n as u32).collect(), sets }
+        SetSystem::from_sets(theta, (0..n as u32).collect(), &sets)
     }
 
     #[test]
     fn deterministic_in_seed() {
         let sys = random_system(1, 60, 300);
-        let a = stochastic_greedy_max_cover(&sys, 8, 0.2, 7);
-        let b = stochastic_greedy_max_cover(&sys, 8, 0.2, 7);
+        let a = stochastic_greedy_max_cover(sys.view(), 8, 0.2, 7);
+        let b = stochastic_greedy_max_cover(sys.view(), 8, 0.2, 7);
         assert_eq!(a.seeds, b.seeds);
-        let c = stochastic_greedy_max_cover(&sys, 8, 0.2, 8);
+        let c = stochastic_greedy_max_cover(sys.view(), 8, 0.2, 8);
         let _ = c; // different seed may differ; only determinism is asserted
     }
 
     #[test]
     fn respects_k_and_no_duplicates() {
         let sys = random_system(2, 80, 400);
-        let sol = stochastic_greedy_max_cover(&sys, 10, 0.3, 1);
+        let sol = stochastic_greedy_max_cover(sys.view(), 10, 0.3, 1);
         assert!(sol.seeds.len() <= 10);
         let mut d = sol.seeds.clone();
         d.sort_unstable();
@@ -118,9 +119,9 @@ mod tests {
         // bound comfortably; individual runs may dip.
         let eps = 0.1;
         let sys = random_system(3, 100, 500);
-        let g = greedy_max_cover(&sys, 10).coverage as f64;
+        let g = greedy_max_cover(sys.view(), 10).coverage as f64;
         let runs: Vec<f64> = (0..20)
-            .map(|s| stochastic_greedy_max_cover(&sys, 10, eps, s).coverage as f64)
+            .map(|s| stochastic_greedy_max_cover(sys.view(), 10, eps, s).coverage as f64)
             .collect();
         let mean = runs.iter().sum::<f64>() / runs.len() as f64;
         let factor = (1.0 - 1.0 / std::f64::consts::E - eps) / (1.0 - 1.0 / std::f64::consts::E);
@@ -132,14 +133,14 @@ mod tests {
         // With eps tiny the subsample is the whole pool, so each step takes
         // a true argmax: coverage must match exact greedy.
         let sys = random_system(4, 40, 200);
-        let g = greedy_max_cover(&sys, 6);
-        let s = stochastic_greedy_max_cover(&sys, 6, 1e-9, 5);
+        let g = greedy_max_cover(sys.view(), 6);
+        let s = stochastic_greedy_max_cover(sys.view(), 6, 1e-9, 5);
         assert_eq!(s.coverage, g.coverage);
     }
 
     #[test]
     fn empty_system() {
-        let empty = SetSystem { theta: 4, vertices: vec![], sets: vec![] };
-        assert!(stochastic_greedy_max_cover(&empty, 3, 0.2, 1).is_empty());
+        let empty = SetSystem::new(4);
+        assert!(stochastic_greedy_max_cover(empty.view(), 3, 0.2, 1).is_empty());
     }
 }

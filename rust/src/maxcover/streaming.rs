@@ -18,6 +18,44 @@
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
 
+/// Shared scratch for the fused admission pass: stages the updated bitmap
+/// words of the element being offered so the marginal gain and the bitmap
+/// update are computed in **one** pass over `ids` (the old code walked the
+/// bitmap twice — `marginal` then `absorb`). Words are staged out-of-place
+/// and written back only on admit, halving memory traffic on the
+/// receiver's innermost loop and making rejects write-free.
+///
+/// One scratch serves every bucket of a [`BucketBank`] (admissions touch
+/// one bucket at a time); epoch stamps avoid clearing per offer.
+#[derive(Clone, Debug)]
+pub struct AdmitScratch {
+    epoch: u32,
+    /// Per-word epoch stamp: "this word is already staged this pass".
+    stamp: Vec<u32>,
+    /// Per-word index into `staged` (valid when stamped).
+    pos: Vec<u32>,
+    /// (word index, staged word value) for the touched words of this pass.
+    staged: Vec<(u32, u64)>,
+}
+
+impl AdmitScratch {
+    pub fn new(words: usize) -> Self {
+        Self { epoch: 0, stamp: vec![0; words], pos: vec![0; words], staged: Vec::new() }
+    }
+
+    /// Starts a fresh staging pass.
+    #[inline]
+    fn begin(&mut self) {
+        self.staged.clear();
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Stamp counter wrapped: reset once.
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+    }
+}
+
 /// State of a single threshold bucket.
 #[derive(Clone, Debug)]
 pub struct Bucket {
@@ -43,42 +81,51 @@ impl Bucket {
         self.covered_count
     }
 
-    /// Marginal gain of `ids` against this bucket's covered set.
-    #[inline]
-    fn marginal(&self, ids: &[SampleId]) -> u32 {
-        let mut g = 0u32;
-        for &id in ids {
-            g += ((self.covered[(id >> 6) as usize] >> (id & 63)) & 1 == 0) as u32;
-        }
-        g
-    }
-
-    #[inline]
-    fn absorb(&mut self, ids: &[SampleId]) -> u32 {
-        let mut g = 0u32;
-        for &id in ids {
-            let w = &mut self.covered[(id >> 6) as usize];
-            let bit = 1u64 << (id & 63);
-            if *w & bit == 0 {
-                *w |= bit;
-                g += 1;
-            }
-        }
-        self.covered_count += g as u64;
-        g
-    }
-
     /// The Alg. 5 admission rule for one element: admits `v` iff the bucket
     /// has room and the marginal gain clears `opt_guess / (2k)`. This is
     /// THE single definition of the rule — the sequential solver and the
-    /// threaded receiver both call it, so they cannot drift apart.
-    pub fn try_admit(&mut self, v: Vertex, ids: &[SampleId], k: usize) -> bool {
+    /// threaded receiver both call it (through [`BucketBank::offer`]), so
+    /// they cannot drift apart.
+    ///
+    /// Fused single-pass form: the gain is computed while the updated words
+    /// are staged in `scratch`; the bucket bitmap is written only on admit.
+    /// (Duplicate ids in `ids` count once — the deduplicating semantics the
+    /// old `absorb` already had.)
+    pub fn try_admit(
+        &mut self,
+        v: Vertex,
+        ids: &[SampleId],
+        k: usize,
+        scratch: &mut AdmitScratch,
+    ) -> bool {
         if self.seeds.len() >= k {
             return false;
         }
-        let gain = self.marginal(ids);
-        if (gain as f64) >= self.opt_guess / (2.0 * k as f64) && gain > 0 {
-            self.absorb(ids);
+        scratch.begin();
+        let epoch = scratch.epoch;
+        let mut gain = 0u32;
+        for &id in ids {
+            let wi = (id >> 6) as usize;
+            let bit = 1u64 << (id & 63);
+            let si = if scratch.stamp[wi] == epoch {
+                scratch.pos[wi] as usize
+            } else {
+                scratch.stamp[wi] = epoch;
+                scratch.pos[wi] = scratch.staged.len() as u32;
+                scratch.staged.push((wi as u32, self.covered[wi]));
+                scratch.staged.len() - 1
+            };
+            let w = &mut scratch.staged[si].1;
+            if *w & bit == 0 {
+                *w |= bit;
+                gain += 1;
+            }
+        }
+        if gain > 0 && (gain as f64) >= self.opt_guess / (2.0 * k as f64) {
+            for &(wi, w) in &scratch.staged {
+                self.covered[wi as usize] = w;
+            }
+            self.covered_count += gain as u64;
             self.seeds.push(v);
             self.gains.push(gain);
             true
@@ -104,21 +151,25 @@ pub struct BucketBank {
     hi: Option<i32>,
     /// (exponent, bucket), ascending by exponent.
     pub buckets: Vec<(i32, Bucket)>,
+    /// Shared staging scratch for the fused admission pass.
+    scratch: AdmitScratch,
 }
 
 impl BucketBank {
     pub fn new(theta: usize, k: usize, delta: f64, residue: usize, modulus: usize) -> Self {
         assert!(delta > 0.0 && delta < 0.5, "delta must be in (0, 1/2)");
         assert!(k >= 1 && modulus >= 1 && residue < modulus);
+        let words = theta.div_ceil(64).max(1);
         Self {
             k,
             delta,
-            words: theta.div_ceil(64).max(1),
+            words,
             residue,
             modulus,
             l_seen: 0,
             hi: None,
             buckets: Vec::new(),
+            scratch: AdmitScratch::new(words),
         }
     }
 
@@ -149,8 +200,10 @@ impl BucketBank {
             self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
         }
         let mut adm = 0;
-        for (_, b) in &mut self.buckets {
-            if b.try_admit(v, ids, self.k) {
+        let k = self.k;
+        let scratch = &mut self.scratch;
+        for (_, b) in self.buckets.iter_mut() {
+            if b.try_admit(v, ids, k, scratch) {
                 adm += 1;
             }
         }
@@ -320,8 +373,8 @@ mod tests {
                     v
                 })
                 .collect();
-            let sys = SetSystem { theta, vertices: (0..60).collect(), sets: sets.clone() };
-            let greedy_cov = greedy_max_cover(&sys, k).coverage as f64;
+            let sys = SetSystem::from_sets(theta, (0..60).collect(), &sets);
+            let greedy_cov = greedy_max_cover(sys.view(), k).coverage as f64;
             let mut s = StreamingMaxCover::new(theta, k, delta);
             for (i, ids) in sets.iter().enumerate() {
                 s.offer(i as u32, ids);

@@ -7,16 +7,16 @@
 //! `(1 − 1/e − ε)`-approximate with O((n/ε)·log(n/ε)) marginal-gain
 //! evaluations — independent of k, which is why it wins for large k.
 
-use super::coverage::{BitCover, SetSystem};
+use super::coverage::{BitCover, SetSystemView};
 use super::CoverSolution;
 
 /// Runs threshold greedy with accuracy parameter `eps ∈ (0, 1)`.
-pub fn threshold_greedy_max_cover(sys: &SetSystem, k: usize, eps: f64) -> CoverSolution {
+pub fn threshold_greedy_max_cover(sys: SetSystemView<'_>, k: usize, eps: f64) -> CoverSolution {
     assert!(eps > 0.0 && eps < 1.0);
     let mut covered = BitCover::new(sys.theta);
     let mut selected = vec![false; sys.len()];
     let mut sol = CoverSolution::default();
-    let d = sys.sets.iter().map(Vec::len).max().unwrap_or(0) as f64;
+    let d = sys.max_set_len() as f64;
     if d == 0.0 {
         return sol;
     }
@@ -28,11 +28,11 @@ pub fn threshold_greedy_max_cover(sys: &SetSystem, k: usize, eps: f64) -> CoverS
             if selected[i] || sol.len() >= k {
                 continue;
             }
-            let gain = covered.count_new(&sys.sets[i]);
+            let gain = covered.count_new(sys.set(i));
             if gain as f64 >= tau && gain > 0 {
                 selected[i] = true;
-                covered.insert_all(&sys.sets[i]);
-                sol.push(sys.vertices[i], gain);
+                covered.insert_all(sys.set(i));
+                sol.push(sys.vertex(i), gain);
             }
         }
         tau *= 1.0 - eps;
@@ -44,6 +44,7 @@ pub fn threshold_greedy_max_cover(sys: &SetSystem, k: usize, eps: f64) -> CoverS
 mod tests {
     use super::*;
     use crate::maxcover::greedy::greedy_max_cover;
+    use crate::maxcover::SetSystem;
     use crate::rng::Xoshiro256pp;
 
     fn random_system(seed: u64, n: usize, theta: usize) -> SetSystem {
@@ -58,15 +59,15 @@ mod tests {
                 v
             })
             .collect();
-        SetSystem { theta, vertices: (0..n as u32).collect(), sets }
+        SetSystem::from_sets(theta, (0..n as u32).collect(), &sets)
     }
 
     #[test]
     fn empty_and_trivial() {
-        let empty = SetSystem { theta: 4, vertices: vec![], sets: vec![] };
-        assert!(threshold_greedy_max_cover(&empty, 3, 0.1).is_empty());
-        let one = SetSystem { theta: 4, vertices: vec![9], sets: vec![vec![0, 1]] };
-        let sol = threshold_greedy_max_cover(&one, 3, 0.1);
+        let empty = SetSystem::new(4);
+        assert!(threshold_greedy_max_cover(empty.view(), 3, 0.1).is_empty());
+        let one = SetSystem::from_sets(4, vec![9], &[vec![0, 1]]);
+        let sol = threshold_greedy_max_cover(one.view(), 3, 0.1);
         assert_eq!(sol.seeds, vec![9]);
         assert_eq!(sol.coverage, 2);
     }
@@ -74,7 +75,7 @@ mod tests {
     #[test]
     fn respects_k() {
         let sys = random_system(1, 50, 400);
-        let sol = threshold_greedy_max_cover(&sys, 5, 0.2);
+        let sol = threshold_greedy_max_cover(sys.view(), 5, 0.2);
         assert!(sol.seeds.len() <= 5);
     }
 
@@ -86,8 +87,8 @@ mod tests {
         let eps = 0.1;
         for seed in 0..25u64 {
             let sys = random_system(seed, 60, 300);
-            let g = greedy_max_cover(&sys, 8).coverage as f64;
-            let t = threshold_greedy_max_cover(&sys, 8, eps).coverage as f64;
+            let g = greedy_max_cover(sys.view(), 8).coverage as f64;
+            let t = threshold_greedy_max_cover(sys.view(), 8, eps).coverage as f64;
             let factor = (1.0 - 1.0 / std::f64::consts::E - eps) / (1.0 - 1.0 / std::f64::consts::E);
             assert!(t >= factor * g, "seed {seed}: {t} vs greedy {g}");
         }
@@ -98,8 +99,8 @@ mod tests {
         let mut worse = 0;
         for seed in 0..20u64 {
             let sys = random_system(seed + 100, 80, 400);
-            let loose = threshold_greedy_max_cover(&sys, 10, 0.5).coverage;
-            let tight = threshold_greedy_max_cover(&sys, 10, 0.05).coverage;
+            let loose = threshold_greedy_max_cover(sys.view(), 10, 0.5).coverage;
+            let tight = threshold_greedy_max_cover(sys.view(), 10, 0.05).coverage;
             if tight < loose {
                 worse += 1;
             }
@@ -112,8 +113,8 @@ mod tests {
         // Selected gains need not be globally sorted, but the first selected
         // element must be within (1-eps) of the max singleton.
         let sys = random_system(7, 60, 300);
-        let d = sys.sets.iter().map(Vec::len).max().unwrap() as f64;
-        let sol = threshold_greedy_max_cover(&sys, 10, 0.2);
+        let d = sys.view().max_set_len() as f64;
+        let sol = threshold_greedy_max_cover(sys.view(), 10, 0.2);
         assert!(sol.gains[0] as f64 >= (1.0 - 0.2) * d);
     }
 }

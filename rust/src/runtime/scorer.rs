@@ -1,5 +1,5 @@
-//! The XLA-backed [`GainScorer`]: executes the AOT-compiled Pallas
-//! coverage kernel through the PJRT CPU client.
+//! The XLA-backed [`GainScorer`](crate::maxcover::GainScorer): executes the
+//! AOT-compiled Pallas coverage kernel through the PJRT CPU client.
 //!
 //! The compiled computation (see `python/compile/model.py`) is
 //! `f(cov: u32[n,w], covered: u32[1,w], active: i32[n]) ->
@@ -7,130 +7,195 @@
 //! `Σ_w popcount(cov[i,w] & ~covered[w])`, masked to −1 on inactive rows,
 //! arg-maxed inside the graph so only two scalars cross the FFI boundary
 //! per greedy iteration.
+//!
+//! The PJRT bindings (`xla` crate) are not vendored in this offline image,
+//! so the real implementation is gated behind the `xla` cargo feature;
+//! without it a stub [`XlaScorer`] compiles whose constructors report the
+//! backend unavailable (callers already handle that path — the CLI bails,
+//! benches and integration tests skip).
 
-use super::artifacts::{artifacts_dir, bucket_for, ShapeBucket};
-use crate::maxcover::{GainScorer, PackedCovers};
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::PathBuf;
+#[cfg(feature = "xla")]
+mod imp {
+    use super::super::artifacts::{artifacts_dir, bucket_for, ShapeBucket};
+    use crate::error::{Context, Result};
+    use crate::maxcover::{GainScorer, PackedCovers};
+    use crate::anyhow;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
 
-/// PJRT-backed scorer. Compiles each shape bucket once on first use and
-/// caches the padded coverage upload per [`PackedCovers`] identity.
-pub struct XlaScorer {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
-    /// Reused padding buffer (re-filled each call — pointer-keyed caching
-    /// is unsound because a freed `PackedCovers` can be reallocated at the
-    /// same address; the copy is negligible next to the PJRT execute).
-    pad_buf: Vec<u32>,
-    /// Total kernel invocations (diagnostics / benches).
-    pub calls: u64,
+    /// PJRT-backed scorer. Compiles each shape bucket once on first use and
+    /// caches the padded coverage upload per [`PackedCovers`] identity.
+    pub struct XlaScorer {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+        /// Reused padding buffer (re-filled each call — pointer-keyed caching
+        /// is unsound because a freed `PackedCovers` can be reallocated at the
+        /// same address; the copy is negligible next to the PJRT execute).
+        pad_buf: Vec<u32>,
+        /// Total kernel invocations (diagnostics / benches).
+        pub calls: u64,
+    }
+
+    impl XlaScorer {
+        /// Creates the scorer against the default artifacts directory.
+        pub fn new() -> Result<Self> {
+            Self::with_dir(artifacts_dir())
+        }
+
+        pub fn with_dir(dir: PathBuf) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Self { client, dir, execs: HashMap::new(), pad_buf: Vec::new(), calls: 0 })
+        }
+
+        /// True if the artifact for at least one bucket exists (used by callers
+        /// to decide whether the XLA backend is available).
+        pub fn artifacts_present(&self) -> bool {
+            super::super::artifacts::BUCKETS.iter().any(|b| b.path(&self.dir).exists())
+        }
+
+        fn exec_for(&mut self, b: ShapeBucket) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.execs.contains_key(&(b.n, b.w)) {
+                let path = b.path(&self.dir);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("load {}: {e:?} (run `make artifacts`)", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+                self.execs.insert((b.n, b.w), exe);
+            }
+            Ok(&self.execs[&(b.n, b.w)])
+        }
+
+        /// Pads `covers` into bucket `b`'s `[n, w]` layout (buffer reused
+        /// across calls, contents re-filled every time).
+        fn padded_covers(&mut self, covers: &PackedCovers, b: ShapeBucket) -> &[u32] {
+            self.pad_buf.clear();
+            self.pad_buf.resize(b.n * b.w, 0);
+            for i in 0..covers.n {
+                self.pad_buf[i * b.w..i * b.w + covers.w].copy_from_slice(covers.row(i));
+            }
+            &self.pad_buf
+        }
+
+        /// Fallible core of [`GainScorer::best`].
+        pub fn try_best(
+            &mut self,
+            covers: &PackedCovers,
+            covered: &[u32],
+            selected: &[bool],
+        ) -> Result<(usize, u32)> {
+            let b = bucket_for(covers.n, covers.w)
+                .ok_or_else(|| anyhow!("no shape bucket for n={} w={}", covers.n, covers.w))?;
+            // Ensure the executable is compiled before borrowing the pad cache.
+            self.exec_for(b)?;
+            let cov_lit = {
+                let padded = self.padded_covers(covers, b);
+                xla::Literal::vec1(padded)
+                    .reshape(&[b.n as i64, b.w as i64])
+                    .map_err(|e| anyhow!("reshape covers: {e:?}"))?
+            };
+            let mut covered_pad = vec![0u32; b.w];
+            covered_pad[..covered.len()].copy_from_slice(covered);
+            let covered_lit = xla::Literal::vec1(&covered_pad)
+                .reshape(&[1, b.w as i64])
+                .map_err(|e| anyhow!("reshape covered: {e:?}"))?;
+            let mut active = vec![0i32; b.n];
+            for i in 0..covers.n {
+                active[i] = !selected[i] as i32;
+            }
+            let active_lit = xla::Literal::vec1(&active);
+
+            let exe = &self.execs[&(b.n, b.w)];
+            let result = exe
+                .execute::<xla::Literal>(&[cov_lit, covered_lit, active_lit])
+                .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch: {e:?}"))?;
+            self.calls += 1;
+            let (idx_lit, gain_lit) = result.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let idx = idx_lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("idx: {e:?}"))?[0];
+            let gain = gain_lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("gain: {e:?}"))?[0];
+            if gain < 0 {
+                // All rows inactive.
+                return Ok((usize::MAX, 0));
+            }
+            Ok((idx as usize, gain as u32))
+        }
+    }
+
+    impl GainScorer for XlaScorer {
+        fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
+            self.try_best(covers, covered, selected)
+                .context("XLA scorer")
+                .expect("XLA scorer failed (are artifacts built? run `make artifacts`)")
+        }
+
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+    }
 }
 
-impl XlaScorer {
-    /// Creates the scorer against the default artifacts directory.
-    pub fn new() -> Result<Self> {
-        Self::with_dir(artifacts_dir())
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use crate::error::Result;
+    use crate::maxcover::{GainScorer, PackedCovers};
+    use crate::anyhow;
+    use std::path::PathBuf;
+
+    /// Stub scorer compiled when the `xla` feature is off: constructors
+    /// fail, so no instance can exist and the scoring methods are
+    /// unreachable. Keeps every caller's API intact.
+    pub struct XlaScorer {
+        /// Total kernel invocations (always 0 for the stub).
+        pub calls: u64,
     }
 
-    pub fn with_dir(dir: PathBuf) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, dir, execs: HashMap::new(), pad_buf: Vec::new(), calls: 0 })
-    }
+    const UNAVAILABLE: &str =
+        "XLA runtime unavailable: built without the `xla` cargo feature \
+         (the PJRT bindings are not vendored in this offline image)";
 
-    /// True if the artifact for at least one bucket exists (used by callers
-    /// to decide whether the XLA backend is available).
-    pub fn artifacts_present(&self) -> bool {
-        super::artifacts::BUCKETS.iter().any(|b| b.path(&self.dir).exists())
-    }
-
-    fn exec_for(&mut self, b: ShapeBucket) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.execs.contains_key(&(b.n, b.w)) {
-            let path = b.path(&self.dir);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("load {}: {e:?} (run `make artifacts`)", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-            self.execs.insert((b.n, b.w), exe);
+    impl XlaScorer {
+        pub fn new() -> Result<Self> {
+            Err(anyhow!(UNAVAILABLE))
         }
-        Ok(&self.execs[&(b.n, b.w)])
+
+        pub fn with_dir(_dir: PathBuf) -> Result<Self> {
+            Self::new()
+        }
+
+        pub fn artifacts_present(&self) -> bool {
+            false
+        }
+
+        pub fn try_best(
+            &mut self,
+            _covers: &PackedCovers,
+            _covered: &[u32],
+            _selected: &[bool],
+        ) -> Result<(usize, u32)> {
+            Err(anyhow!(UNAVAILABLE))
+        }
     }
 
-    /// Pads `covers` into bucket `b`'s `[n, w]` layout (buffer reused
-    /// across calls, contents re-filled every time).
-    fn padded_covers(&mut self, covers: &PackedCovers, b: ShapeBucket) -> &[u32] {
-        self.pad_buf.clear();
-        self.pad_buf.resize(b.n * b.w, 0);
-        for i in 0..covers.n {
-            self.pad_buf[i * b.w..i * b.w + covers.w].copy_from_slice(covers.row(i));
+    impl GainScorer for XlaScorer {
+        fn best(&mut self, _: &PackedCovers, _: &[u32], _: &[bool]) -> (usize, u32) {
+            unreachable!("stub XlaScorer cannot be constructed")
         }
-        &self.pad_buf
-    }
 
-    /// Fallible core of [`GainScorer::best`].
-    pub fn try_best(
-        &mut self,
-        covers: &PackedCovers,
-        covered: &[u32],
-        selected: &[bool],
-    ) -> Result<(usize, u32)> {
-        let b = bucket_for(covers.n, covers.w)
-            .ok_or_else(|| anyhow!("no shape bucket for n={} w={}", covers.n, covers.w))?;
-        // Ensure the executable is compiled before borrowing the pad cache.
-        self.exec_for(b)?;
-        let cov_lit = {
-            let padded = self.padded_covers(covers, b);
-            xla::Literal::vec1(padded)
-                .reshape(&[b.n as i64, b.w as i64])
-                .map_err(|e| anyhow!("reshape covers: {e:?}"))?
-        };
-        let mut covered_pad = vec![0u32; b.w];
-        covered_pad[..covered.len()].copy_from_slice(covered);
-        let covered_lit = xla::Literal::vec1(&covered_pad)
-            .reshape(&[1, b.w as i64])
-            .map_err(|e| anyhow!("reshape covered: {e:?}"))?;
-        let mut active = vec![0i32; b.n];
-        for i in 0..covers.n {
-            active[i] = !selected[i] as i32;
+        fn name(&self) -> &'static str {
+            "xla-stub"
         }
-        let active_lit = xla::Literal::vec1(&active);
-
-        let exe = &self.execs[&(b.n, b.w)];
-        let result = exe
-            .execute::<xla::Literal>(&[cov_lit, covered_lit, active_lit])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        self.calls += 1;
-        let (idx_lit, gain_lit) = result.to_tuple2().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let idx = idx_lit
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("idx: {e:?}"))?[0];
-        let gain = gain_lit
-            .to_vec::<i32>()
-            .map_err(|e| anyhow!("gain: {e:?}"))?[0];
-        if gain < 0 {
-            // All rows inactive.
-            return Ok((usize::MAX, 0));
-        }
-        Ok((idx as usize, gain as u32))
     }
 }
 
-impl GainScorer for XlaScorer {
-    fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
-        self.try_best(covers, covered, selected)
-            .context("XLA scorer")
-            .expect("XLA scorer failed (are artifacts built? run `make artifacts`)")
-    }
-
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-}
+pub use imp::XlaScorer;

@@ -1,9 +1,12 @@
 //! Random Reverse Reachable (RRR) sampling — the `Sample(.)` step of IMM
 //! (paper §2.1) and step S1 of the GreediRIS workflow (§3.4).
+//!
+//! Batches are flat CSR ([`SampleBatch`]); [`batch_parallel`] fans S1 out
+//! over OS threads with bit-identical output (leap-frog RNG).
 
 mod rrr;
 
-pub use rrr::{RrrSampler, SampleBatch};
+pub use rrr::{batch_parallel, RrrSampler, SampleBatch};
 
 #[cfg(test)]
 mod tests {
@@ -107,13 +110,50 @@ mod tests {
         let mut s = RrrSampler::new(&g, DiffusionModel::IC, 1);
         let batch = s.batch(10, 5);
         assert_eq!(batch.first_id, 10);
-        assert_eq!(batch.sets.len(), 5);
+        assert_eq!(batch.len(), 5);
+        assert_eq!(batch.offsets.len(), 6);
+        assert_eq!(batch.total_entries(), batch.data.len());
         // Bitwise identical to individually generated samples.
         let mut s2 = RrrSampler::new(&g, DiffusionModel::IC, 1);
-        for (j, set) in batch.sets.iter().enumerate() {
-            let (_, single) = s2.sample(10 + j as u32);
-            assert_eq!(*set, single);
+        for (j, set) in batch.iter_sets().enumerate() {
+            let (root, single) = s2.sample(10 + j as u32);
+            assert_eq!(set, &single[..]);
+            assert_eq!(root, batch.roots[j]);
         }
+    }
+
+    #[test]
+    fn threaded_batch_identical_to_sequential() {
+        // Golden determinism: the threaded S1 output must be byte-identical
+        // to sequential for any thread count (leap-frog stitching).
+        let edges = crate::graph::generators::erdos_renyi(300, 1800, 5);
+        for model in [DiffusionModel::IC, DiffusionModel::LT] {
+            let g = Graph::from_edges(
+                300,
+                &edges,
+                match model {
+                    DiffusionModel::IC => WeightModel::UniformIc { max: 0.1 },
+                    DiffusionModel::LT => WeightModel::LtNormalized { seed_scale: 1.0 },
+                },
+                5,
+            );
+            let sequential = RrrSampler::new(&g, model, 42).batch(17, 257);
+            for threads in [1usize, 2, 8] {
+                let par = batch_parallel(&g, model, 42, 17, 257, threads);
+                assert_eq!(par, sequential, "{model:?} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_batch_edge_cases() {
+        let g = path_graph(0.5);
+        // More threads than samples, and an empty batch.
+        let seq = RrrSampler::new(&g, DiffusionModel::IC, 9).batch(0, 3);
+        assert_eq!(batch_parallel(&g, DiffusionModel::IC, 9, 0, 3, 16), seq);
+        let empty = batch_parallel(&g, DiffusionModel::IC, 9, 5, 0, 4);
+        assert_eq!(empty.len(), 0);
+        assert_eq!(empty.first_id, 5);
     }
 
     #[test]

@@ -10,25 +10,80 @@
 //! (in-neighbor `v` with probability `w(v,u)`, none with probability
 //! `1 - Σw`), so the reverse traversal is a walk; this is why the paper
 //! observes "shallower BFS traversals (shorter RRR set sizes)" under LT.
+//!
+//! Batches use a flat CSR layout (`offsets` + `data`) so S1 produces one
+//! contiguous allocation per batch instead of one `Vec` per sample; the
+//! sampler appends directly into the batch's flat buffer. Because the
+//! content of sample `i` is a pure function of `(graph, model, root_seed,
+//! i)` (the leap-frog property), [`batch_parallel`] can split a batch
+//! across OS threads and remain bit-identical to sequential generation.
 
 use crate::diffusion::DiffusionModel;
 use crate::graph::Graph;
 use crate::rng::{domains, stream_for};
 use crate::{SampleId, Vertex};
 
-/// A batch of RRR sets with contiguous global ids `[first_id, first_id+len)`.
-#[derive(Clone, Debug, Default)]
+/// A batch of RRR sets with contiguous global ids `[first_id, first_id+len)`,
+/// stored in CSR form: sample `j` is `data[offsets[j]..offsets[j+1]]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SampleBatch {
     pub first_id: SampleId,
-    /// `sets[j]` is the RRR set for global sample id `first_id + j`.
-    pub sets: Vec<Vec<Vertex>>,
+    /// CSR offsets into `data`; always `len() + 1` entries, starting at 0.
+    pub offsets: Vec<u32>,
+    /// Concatenated RRR-set contents (BFS/walk discovery order per sample).
+    pub data: Vec<Vertex>,
     /// Roots (for diagnostics; the root is also contained in its set).
     pub roots: Vec<Vertex>,
 }
 
+impl Default for SampleBatch {
+    fn default() -> Self {
+        Self::empty(0)
+    }
+}
+
 impl SampleBatch {
+    /// An empty batch anchored at `first_id`.
+    pub fn empty(first_id: SampleId) -> Self {
+        Self { first_id, offsets: vec![0], data: Vec::new(), roots: Vec::new() }
+    }
+
+    /// Builds a batch from per-sample vectors (tests / fixtures).
+    pub fn from_sets(first_id: SampleId, sets: &[Vec<Vertex>], roots: Vec<Vertex>) -> Self {
+        let mut b = Self::empty(first_id);
+        for s in sets {
+            b.data.extend_from_slice(s);
+            b.offsets.push(b.data.len() as u32);
+        }
+        b.roots = roots;
+        b
+    }
+
+    /// Number of samples in the batch.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Contents of the `j`-th sample (global id `first_id + j`).
+    #[inline]
+    pub fn set(&self, j: usize) -> &[Vertex] {
+        &self.data[self.offsets[j] as usize..self.offsets[j + 1] as usize]
+    }
+
+    /// Iterates the samples in id order.
+    pub fn iter_sets(&self) -> impl Iterator<Item = &[Vertex]> + '_ {
+        self.offsets
+            .windows(2)
+            .map(move |w| &self.data[w[0] as usize..w[1] as usize])
+    }
+
+    /// Total vertex entries across all samples.
     pub fn total_entries(&self) -> usize {
-        self.sets.iter().map(Vec::len).sum()
+        self.data.len()
     }
 }
 
@@ -62,14 +117,17 @@ impl<'g> RrrSampler<'g> {
     pub fn sample(&mut self, id: SampleId) -> (Vertex, Vec<Vertex>) {
         let mut rng = stream_for(self.root_seed, domains::SAMPLE, id as u64);
         let root = rng.gen_range(self.g.n() as u64) as Vertex;
-        let set = self.walk(root, &mut rng);
-        (root, set)
+        let mut out = Vec::with_capacity(8);
+        self.walk_into(root, &mut rng, &mut out);
+        (root, out)
     }
 
     /// Like [`Self::sample`] but with a caller-chosen root (tests/diagnostics).
     pub fn sample_for_root_with_id(&mut self, root: Vertex, id: SampleId) -> Vec<Vertex> {
         let mut rng = stream_for(self.root_seed, domains::SAMPLE, id as u64);
-        self.walk(root, &mut rng)
+        let mut out = Vec::with_capacity(8);
+        self.walk_into(root, &mut rng, &mut out);
+        out
     }
 
     /// Single sample from a fresh stream for `root` (tests).
@@ -77,19 +135,26 @@ impl<'g> RrrSampler<'g> {
         self.sample_for_root_with_id(root, root)
     }
 
-    /// Generates `count` samples with ids `[first_id, first_id + count)`.
+    /// Generates `count` samples with ids `[first_id, first_id + count)`,
+    /// appending each set directly into the batch's flat CSR buffer.
     pub fn batch(&mut self, first_id: SampleId, count: usize) -> SampleBatch {
-        let mut sets = Vec::with_capacity(count);
-        let mut roots = Vec::with_capacity(count);
+        let mut b = SampleBatch::empty(first_id);
+        b.offsets.reserve(count);
+        b.roots.reserve(count);
+        b.data.reserve(count * 8);
         for j in 0..count {
-            let (root, set) = self.sample(first_id + j as SampleId);
-            roots.push(root);
-            sets.push(set);
+            let id = first_id + j as SampleId;
+            let mut rng = stream_for(self.root_seed, domains::SAMPLE, id as u64);
+            let root = rng.gen_range(self.g.n() as u64) as Vertex;
+            self.walk_into(root, &mut rng, &mut b.data);
+            b.offsets.push(b.data.len() as u32);
+            b.roots.push(root);
         }
-        SampleBatch { first_id, sets, roots }
+        b
     }
 
-    fn walk(&mut self, root: Vertex, rng: &mut crate::rng::Xoshiro256pp) -> Vec<Vertex> {
+    /// Appends the RRR set for `root` to `out` (discovery order, root first).
+    fn walk_into(&mut self, root: Vertex, rng: &mut crate::rng::Xoshiro256pp, out: &mut Vec<Vertex>) {
         self.epoch = self.epoch.wrapping_add(1);
         if self.epoch == 0 {
             // Epoch counter wrapped: reset marks once.
@@ -97,7 +162,6 @@ impl<'g> RrrSampler<'g> {
             self.epoch = 1;
         }
         let epoch = self.epoch;
-        let mut out: Vec<Vertex> = Vec::with_capacity(8);
         self.visited_epoch[root as usize] = epoch;
         out.push(root);
         match self.model {
@@ -151,6 +215,55 @@ impl<'g> RrrSampler<'g> {
                 }
             }
         }
-        out
     }
+}
+
+/// Generates the batch `[first_id, first_id + count)` split across `threads`
+/// OS threads (`std::thread::scope`; zero dependencies). Each thread owns a
+/// contiguous id chunk with its own [`RrrSampler`], and the chunks are
+/// stitched back in id order — because sample content is a pure function of
+/// the global id, the result is **bit-identical** to `RrrSampler::batch`
+/// for any thread count (asserted by `threaded_batch_identical_to_sequential`).
+pub fn batch_parallel(
+    g: &Graph,
+    model: DiffusionModel,
+    root_seed: u64,
+    first_id: SampleId,
+    count: usize,
+    threads: usize,
+) -> SampleBatch {
+    let threads = threads.max(1).min(count.max(1));
+    if threads <= 1 {
+        return RrrSampler::new(g, model, root_seed).batch(first_id, count);
+    }
+    let chunk = count.div_ceil(threads);
+    let parts: Vec<SampleBatch> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(count);
+            handles.push(scope.spawn(move || {
+                if lo >= hi {
+                    return SampleBatch::empty(first_id + lo as SampleId);
+                }
+                RrrSampler::new(g, model, root_seed).batch(first_id + lo as SampleId, hi - lo)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("sampler thread")).collect()
+    });
+    // Stitch the chunk batches back into one CSR batch in id order.
+    let total: usize = parts.iter().map(|b| b.data.len()).sum();
+    let mut out = SampleBatch::empty(first_id);
+    out.offsets.reserve(count);
+    out.data.reserve(total);
+    out.roots.reserve(count);
+    for b in parts {
+        let base = out.data.len() as u32;
+        for &o in &b.offsets[1..] {
+            out.offsets.push(base + o);
+        }
+        out.data.extend_from_slice(&b.data);
+        out.roots.extend_from_slice(&b.roots);
+    }
+    out
 }

@@ -25,7 +25,7 @@ fn random_system(seed: u64) -> (SetSystem, usize) {
         })
         .collect();
     (
-        SetSystem { theta, vertices: (0..n as u32).collect(), sets },
+        SetSystem::from_sets(theta, (0..n as u32).collect(), &sets),
         k,
     )
 }
@@ -40,8 +40,8 @@ fn recompute_coverage(sys: &SetSystem, sol: &CoverSolution) -> u64 {
 fn prop_lazy_equals_greedy() {
     for seed in 0..CASES {
         let (sys, k) = random_system(seed);
-        let a = greedy_max_cover(&sys, k);
-        let b = lazy_greedy_max_cover(&sys, k);
+        let a = greedy_max_cover(sys.view(), k);
+        let b = lazy_greedy_max_cover(sys.view(), k);
         assert_eq!(a.seeds, b.seeds, "seed {seed}");
         assert_eq!(a.gains, b.gains, "seed {seed}");
     }
@@ -52,7 +52,7 @@ fn prop_lazy_equals_greedy() {
 fn prop_coverage_self_consistent() {
     for seed in 0..CASES {
         let (sys, k) = random_system(seed + 1000);
-        for sol in [greedy_max_cover(&sys, k), lazy_greedy_max_cover(&sys, k)] {
+        for sol in [greedy_max_cover(sys.view(), k), lazy_greedy_max_cover(sys.view(), k)] {
             assert_eq!(sol.coverage, recompute_coverage(&sys, &sol), "seed {seed}");
             assert_eq!(sol.coverage, sol.gains.iter().map(|&g| g as u64).sum::<u64>());
         }
@@ -64,7 +64,7 @@ fn prop_coverage_self_consistent() {
 fn prop_gains_monotone() {
     for seed in 0..CASES {
         let (sys, k) = random_system(seed + 2000);
-        let sol = greedy_max_cover(&sys, k);
+        let sol = greedy_max_cover(sys.view(), k);
         for w in sol.gains.windows(2) {
             assert!(w[0] >= w[1], "seed {seed}: {:?}", sol.gains);
         }
@@ -78,9 +78,9 @@ fn prop_streaming_guarantee() {
     let delta = 0.12;
     for seed in 0..CASES {
         let (sys, k) = random_system(seed + 3000);
-        let reference = greedy_max_cover(&sys, k);
+        let reference = greedy_max_cover(sys.view(), k);
         let mut s = StreamingMaxCover::new(sys.theta, k, delta);
-        for (i, ids) in sys.sets.iter().enumerate() {
+        for (i, ids) in sys.iter_sets().enumerate() {
             s.offer(sys.vertices[i], ids);
         }
         let sol = s.finalize();
@@ -102,7 +102,7 @@ fn prop_streaming_duplicate_invariant() {
         let (sys, k) = random_system(seed + 4000);
         let run = |dups: bool| {
             let mut s = StreamingMaxCover::new(sys.theta, k, 0.1);
-            for (i, ids) in sys.sets.iter().enumerate() {
+            for (i, ids) in sys.iter_sets().enumerate() {
                 s.offer(sys.vertices[i], ids);
                 if dups {
                     s.offer(sys.vertices[i], ids);
@@ -123,7 +123,7 @@ fn prop_streaming_duplicate_invariant() {
 fn prop_solution_wellformed() {
     for seed in 0..CASES {
         let (sys, k) = random_system(seed + 5000);
-        let sol = lazy_greedy_max_cover(&sys, k);
+        let sol = lazy_greedy_max_cover(sys.view(), k);
         let mut dedup = sol.seeds.clone();
         dedup.sort_unstable();
         dedup.dedup();
@@ -144,10 +144,10 @@ fn prop_randgreedi_combination_sane() {
         let (sys, k) = random_system(seed + 6000);
         let half_a = sys.filter(|v| v % 2 == 0);
         let half_b = sys.filter(|v| v % 2 == 1);
-        let sol_a = greedy_max_cover(&half_a, k);
-        let sol_b = greedy_max_cover(&half_b, k);
+        let sol_a = greedy_max_cover(half_a.view(), k);
+        let sol_b = greedy_max_cover(half_b.view(), k);
         let best_local = if sol_a.coverage >= sol_b.coverage { &sol_a } else { &sol_b };
-        let full = greedy_max_cover(&sys, k);
+        let full = greedy_max_cover(sys.view(), k);
         // A local solution can't beat exact greedy by more than the
         // (1-1/e) slack: coverage(best_local) <= coverage(full)/(1-1/e).
         assert!(
@@ -171,10 +171,15 @@ fn prop_sampling_layout_invariant() {
         let mut s2 = RrrSampler::new(&g, DiffusionModel::IC, seed);
         // Layout A: one batch of 60. Layout B: 6 batches of 10.
         let a = s1.batch(0, 60);
-        let mut b_sets = Vec::new();
+        let mut b_data = Vec::new();
+        let mut b_offsets = vec![0u32];
         for c in 0..6 {
-            b_sets.extend(s2.batch(c * 10, 10).sets);
+            let part = s2.batch(c * 10, 10);
+            let base = b_data.len() as u32;
+            b_offsets.extend(part.offsets[1..].iter().map(|&o| base + o));
+            b_data.extend_from_slice(&part.data);
         }
-        assert_eq!(a.sets, b_sets, "seed {seed}");
+        assert_eq!(a.data, b_data, "seed {seed}");
+        assert_eq!(a.offsets, b_offsets, "seed {seed}");
     }
 }

@@ -18,7 +18,13 @@ fn artifacts_dir() -> PathBuf {
 }
 
 fn scorer_or_skip() -> Option<XlaScorer> {
-    let s = XlaScorer::with_dir(artifacts_dir()).expect("PJRT client");
+    let s = match XlaScorer::with_dir(artifacts_dir()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: XLA backend unavailable: {e}");
+            return None;
+        }
+    };
     if !s.artifacts_present() {
         eprintln!("SKIP: no artifacts (run `make artifacts`)");
         return None;
@@ -37,7 +43,7 @@ fn random_system(seed: u64, n: usize, theta: usize, max_len: u64) -> SetSystem {
             v
         })
         .collect();
-    SetSystem { theta, vertices: (0..n as u32).collect(), sets }
+    SetSystem::from_sets(theta, (0..n as u32).collect(), &sets)
 }
 
 #[test]
@@ -59,7 +65,7 @@ fn xla_scorer_matches_cpu_scorer_pointwise() {
     let Some(mut xla) = scorer_or_skip() else { return };
     for seed in 0..6u64 {
         let sys = random_system(seed, 100 + seed as usize * 17, 700, 40);
-        let covers = PackedCovers::from_sets(&sys);
+        let covers = PackedCovers::from_sets(sys.view());
         let mut covered = vec![0u32; covers.w];
         // Pre-cover a random half of one word to exercise the mask path.
         covered[0] = 0xAAAA5555;
@@ -76,7 +82,7 @@ fn xla_dense_greedy_matches_cpu_dense_greedy() {
     let Some(mut xla) = scorer_or_skip() else { return };
     for seed in 10..14u64 {
         let sys = random_system(seed, 200, 900, 30);
-        let covers = PackedCovers::from_sets(&sys);
+        let covers = PackedCovers::from_sets(sys.view());
         let a = dense_greedy_max_cover(&covers, 12, &mut CpuScorer);
         let b = dense_greedy_max_cover(&covers, 12, &mut xla);
         assert_eq!(a.seeds, b.seeds, "seed {seed}");
@@ -89,7 +95,7 @@ fn xla_dense_greedy_matches_cpu_dense_greedy() {
 fn xla_scorer_handles_all_selected() {
     let Some(mut xla) = scorer_or_skip() else { return };
     let sys = random_system(1, 50, 300, 20);
-    let covers = PackedCovers::from_sets(&sys);
+    let covers = PackedCovers::from_sets(sys.view());
     let covered = vec![0u32; covers.w];
     let selected = vec![true; covers.n];
     let (i, g) = xla.best(&covers, &covered, &selected);
@@ -103,7 +109,7 @@ fn xla_scorer_spans_multiple_buckets() {
     // One instance per bucket size class.
     for (n, theta) in [(200usize, 900usize), (900, 1800), (3000, 3500)] {
         let sys = random_system(n as u64, n, theta, 25);
-        let covers = PackedCovers::from_sets(&sys);
+        let covers = PackedCovers::from_sets(sys.view());
         let b = bucket_for(covers.n, covers.w).expect("bucket");
         assert!(b.n >= covers.n && b.w >= covers.w);
         let covered = vec![0u32; covers.w];

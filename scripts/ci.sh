@@ -1,0 +1,47 @@
+#!/usr/bin/env bash
+# CI gate + perf-trajectory baseline.
+#
+#   1. tier-1: cargo build --release && cargo test -q
+#   2. quick-scale micro benches (sampling / shuffle / maxcover) through the
+#      in-tree harness (src/exp/bench.rs), each measurement exported as a
+#      JSON line via GREEDIRIS_BENCH_JSON
+#   3. assemble the lines into BENCH_PR1.json at the repo root — the record
+#      future PRs diff their hot-kernel numbers against. The legacy-vs-flat
+#      A/B pairs (invert_hashmap_legacy_* vs invert_csr_flat_*,
+#      merge_hashmap_legacy_* vs merge_csr_flat_*,
+#      streaming_twopass_legacy_* vs streaming_fused_*) carry the PR-1
+#      speedup evidence; the bench binaries also print the ratios.
+#
+# Env: GREEDIRIS_BENCH_SCALE=quick|full (default quick)
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: test =="
+cargo test -q
+
+echo "== micro benches (scale: ${GREEDIRIS_BENCH_SCALE:-quick}) =="
+JSONL="$ROOT/rust/target/bench_pr1.jsonl"
+rm -f "$JSONL"
+export GREEDIRIS_BENCH_JSON="$JSONL"
+export GREEDIRIS_BENCH_SCALE="${GREEDIRIS_BENCH_SCALE:-quick}"
+
+cargo bench --bench micro_sampling
+cargo bench --bench micro_shuffle
+cargo bench --bench micro_maxcover
+
+if [ ! -s "$JSONL" ]; then
+  echo "error: no bench measurements were exported to $JSONL" >&2
+  exit 1
+fi
+OUT="$ROOT/BENCH_PR1.json"
+{
+  echo '['
+  paste -sd, "$JSONL"
+  echo ']'
+} > "$OUT"
+echo "wrote $OUT ($(grep -c . "$JSONL") measurements)"
