@@ -1,12 +1,29 @@
 //! Micro-benchmarks of the max-k-cover solver family — the L3 hot path.
 //! Drives the §Perf iteration log in EXPERIMENTS.md.
 //!
-//! Includes the pre-PR1 two-pass streaming receiver (separate marginal +
-//! absorb bitmap sweeps) as an A/B against the fused single-pass admission;
-//! the speedup is printed and recorded in the bench JSON for `scripts/ci.sh`.
+//! A/B ladder for the streaming admission kernel (S4 hot path), oldest to
+//! newest, all on the same inputs and asserted bit-identical:
+//!   1. `streaming_twopass_legacy_*`  — pre-PR1: separate marginal + absorb
+//!      bitmap sweeps per bucket.
+//!   2. `streaming_pr1_staged_*`      — PR1: fused single-pass admission
+//!      with the per-bucket epoch-stamped staging scratch (the BENCH_PR1
+//!      baseline, kept verbatim here).
+//!   3. `streaming_masked_scalar_*`   — PR2 OfferMask packing (once per
+//!      offer, shared across buckets + distinct-bits early reject), scalar
+//!      kernels.
+//!   4. `streaming_masked_simd_*`     — same, dispatched SIMD kernels
+//!      (AVX2 when detected; the actual backend is printed).
+//! The scalar-vs-SIMD pair (3 vs 4) is the `try_admit` A/B recorded in
+//! BENCH_PR2.json; (2 vs 4) is the cross-PR speedup.
+//!
+//! The dense scorer ladder mirrors it: `dense_cpu_legacy_u32_*` (pre-PR1
+//! u32 popcounts), `dense_cpu_scalar_*` (PR1 u64-pair trick == the scalar
+//! kernel), `dense_cpu_simd_*` (dispatched backend) — the `CpuScorer::best`
+//! A/B pair is scalar vs simd.
 use greediris::exp::bench::Bench;
+use greediris::maxcover::bitset::{self, SCALAR};
 use greediris::maxcover::{
-    dense_greedy_max_cover, greedy_max_cover, lazy_greedy_max_cover, CpuScorer, PackedCovers,
+    dense_greedy_max_cover, greedy_max_cover, lazy_greedy_max_cover, KernelScorer, PackedCovers,
     SetSystem, StreamingMaxCover,
 };
 use greediris::rng::Xoshiro256pp;
@@ -102,24 +119,99 @@ impl LegacyBucket {
     }
 }
 
-/// Pre-PR1 sequential streaming solver (lazy bucket materialization logic
-/// identical to `BucketBank`, buckets running the two-pass admission).
-struct LegacyStreaming {
+/// The PR1 fused single-pass bucket: epoch-stamped out-of-place staging of
+/// the touched words, gain + update in one walk over `ids` — but re-walked
+/// per bucket. This is the scalar baseline BENCH_PR1 recorded; PR2's
+/// OfferMask packs the element once for all buckets instead.
+struct Pr1Scratch {
+    epoch: u32,
+    stamp: Vec<u32>,
+    pos: Vec<u32>,
+    staged: Vec<(u32, u64)>,
+}
+
+impl Pr1Scratch {
+    fn new(words: usize) -> Self {
+        Self { epoch: 0, stamp: vec![0; words], pos: vec![0; words], staged: Vec::new() }
+    }
+
+    fn begin(&mut self) {
+        self.staged.clear();
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+    }
+}
+
+struct Pr1Bucket {
+    opt_guess: f64,
+    covered: Vec<u64>,
+    covered_count: u64,
+    seeds: Vec<Vertex>,
+}
+
+impl Pr1Bucket {
+    fn new(opt_guess: f64, words: usize) -> Self {
+        Self { opt_guess, covered: vec![0; words], covered_count: 0, seeds: Vec::new() }
+    }
+
+    fn try_admit(&mut self, v: Vertex, ids: &[SampleId], k: usize, scratch: &mut Pr1Scratch) -> bool {
+        if self.seeds.len() >= k {
+            return false;
+        }
+        scratch.begin();
+        let epoch = scratch.epoch;
+        let mut gain = 0u32;
+        for &id in ids {
+            let wi = (id >> 6) as usize;
+            let bit = 1u64 << (id & 63);
+            let si = if scratch.stamp[wi] == epoch {
+                scratch.pos[wi] as usize
+            } else {
+                scratch.stamp[wi] = epoch;
+                scratch.pos[wi] = scratch.staged.len() as u32;
+                scratch.staged.push((wi as u32, self.covered[wi]));
+                scratch.staged.len() - 1
+            };
+            let w = &mut scratch.staged[si].1;
+            if *w & bit == 0 {
+                *w |= bit;
+                gain += 1;
+            }
+        }
+        if gain > 0 && (gain as f64) >= self.opt_guess / (2.0 * k as f64) {
+            for &(wi, w) in &scratch.staged {
+                self.covered[wi as usize] = w;
+            }
+            self.covered_count += gain as u64;
+            self.seeds.push(v);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Sequential streaming solver generic over the bucket admission kernel
+/// (lazy bucket materialization logic identical to `BucketBank`).
+struct BaselineStreaming<B> {
     k: usize,
     delta: f64,
     words: usize,
     l_seen: u64,
     hi: Option<i32>,
-    buckets: Vec<(i32, LegacyBucket)>,
+    buckets: Vec<(i32, B)>,
 }
 
-impl LegacyStreaming {
+impl<B> BaselineStreaming<B> {
     fn new(theta: usize, k: usize, delta: f64) -> Self {
         Self { k, delta, words: theta.div_ceil(64).max(1), l_seen: 0, hi: None, buckets: Vec::new() }
     }
 
-    fn offer(&mut self, v: Vertex, ids: &[SampleId]) {
-        let s = ids.len().max(1) as u64;
+    fn grow(&mut self, ids_len: usize, make: impl Fn(f64, usize) -> B) {
+        let s = ids_len.max(1) as u64;
         if s > self.l_seen {
             self.l_seen = s;
             let u = (self.k as u64 * self.l_seen) as f64;
@@ -129,12 +221,19 @@ impl LegacyStreaming {
                 Some(h) => h + 1,
             };
             for b in start..=new_hi {
-                self.buckets.push((b, LegacyBucket::new((1.0 + self.delta).powi(b), self.words)));
+                self.buckets.push((b, make((1.0 + self.delta).powi(b), self.words)));
             }
             self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
         }
+    }
+}
+
+impl BaselineStreaming<LegacyBucket> {
+    fn offer(&mut self, v: Vertex, ids: &[SampleId]) {
+        self.grow(ids.len(), LegacyBucket::new);
+        let k = self.k;
         for (_, b) in &mut self.buckets {
-            b.try_admit(v, ids, self.k);
+            b.try_admit(v, ids, k);
         }
     }
 
@@ -143,50 +242,117 @@ impl LegacyStreaming {
     }
 }
 
+struct Pr1Streaming {
+    inner: BaselineStreaming<Pr1Bucket>,
+    scratch: Pr1Scratch,
+}
+
+impl Pr1Streaming {
+    fn new(theta: usize, k: usize, delta: f64) -> Self {
+        Self {
+            inner: BaselineStreaming::new(theta, k, delta),
+            scratch: Pr1Scratch::new(theta.div_ceil(64).max(1)),
+        }
+    }
+
+    fn offer(&mut self, v: Vertex, ids: &[SampleId]) {
+        self.inner.grow(ids.len(), Pr1Bucket::new);
+        let k = self.inner.k;
+        for (_, b) in &mut self.inner.buckets {
+            b.try_admit(v, ids, k, &mut self.scratch);
+        }
+    }
+
+    fn best_coverage(&self) -> u64 {
+        self.inner.buckets.iter().map(|(_, b)| b.covered_count).max().unwrap_or(0)
+    }
+}
+
 fn main() {
     let sys = random_system(1, 4000, 16_384, 40);
     let k = 100;
     let b = Bench::new("maxcover");
+    let simd = bitset::kernels();
+    println!("dispatched kernel backend: {}", simd.name);
 
     b.bench("greedy_n4k_k100", || greedy_max_cover(sys.view(), k));
     b.bench("lazy_greedy_n4k_k100", || lazy_greedy_max_cover(sys.view(), k));
 
+    // ---- A/B: CpuScorer::best scalar vs dispatched SIMD (sender dense
+    // path). The scalar kernel is exactly the PR1 u64-pair inner loop. ----
     let covers = PackedCovers::from_sets(sys.view());
-    b.bench("dense_cpu_greedy_n4k_k100", || {
-        dense_greedy_max_cover(&covers, k, &mut CpuScorer)
+    let dense_scalar = b.bench("dense_cpu_scalar_n4k_k100", || {
+        dense_greedy_max_cover(&covers, k, &mut KernelScorer::with_kernels(&SCALAR))
+    });
+    let dense_simd = b.bench("dense_cpu_simd_n4k_k100", || {
+        dense_greedy_max_cover(&covers, k, &mut KernelScorer::with_kernels(simd))
     });
     b.bench("dense_cpu_legacy_u32_n4k_k100", || {
         dense_greedy_max_cover(&covers, k, &mut LegacyU32Scorer)
     });
+    {
+        // Golden: scalar and SIMD dispatch are bit-identical on solver output.
+        let a = dense_greedy_max_cover(&covers, k, &mut KernelScorer::with_kernels(&SCALAR));
+        let c = dense_greedy_max_cover(&covers, k, &mut KernelScorer::with_kernels(simd));
+        assert_eq!(a, c, "dense scorer dispatch drifted");
+    }
+    println!(
+        "speedup CpuScorer::best: {:.2}x (scalar median / {} median)",
+        dense_scalar.median / dense_simd.median,
+        simd.name
+    );
 
-    // ---- A/B: fused vs two-pass streaming admission (S4 hot path). ----
-    let fused = b.bench("streaming_fused_n4k_k100_d0.077", || {
-        let mut s = StreamingMaxCover::new(sys.theta, k, 0.077);
+    // ---- A/B ladder: streaming admission (S4 hot path). ----
+    let run_masked = |kern| {
+        let mut s = StreamingMaxCover::with_kernels(sys.theta, k, 0.077, kern);
         for (i, ids) in sys.iter_sets().enumerate() {
             s.offer(sys.vertices[i], ids);
         }
-        s.finalize().coverage
+        s.finalize()
+    };
+    let masked_scalar = b.bench("streaming_masked_scalar_n4k_k100_d0.077", || {
+        run_masked(&SCALAR).coverage
     });
-    let twopass = b.bench("streaming_twopass_legacy_n4k_k100_d0.077", || {
-        let mut s = LegacyStreaming::new(sys.theta, k, 0.077);
+    let masked_simd = b.bench("streaming_masked_simd_n4k_k100_d0.077", || {
+        run_masked(simd).coverage
+    });
+    let pr1 = b.bench("streaming_pr1_staged_n4k_k100_d0.077", || {
+        let mut s = Pr1Streaming::new(sys.theta, k, 0.077);
         for (i, ids) in sys.iter_sets().enumerate() {
             s.offer(sys.vertices[i], ids);
         }
         s.best_coverage()
     });
-    // Same admissions -> same best coverage; assert the A/B is honest.
-    {
-        let mut a = StreamingMaxCover::new(sys.theta, k, 0.077);
-        let mut l = LegacyStreaming::new(sys.theta, k, 0.077);
+    let twopass = b.bench("streaming_twopass_legacy_n4k_k100_d0.077", || {
+        let mut s: BaselineStreaming<LegacyBucket> = BaselineStreaming::new(sys.theta, k, 0.077);
         for (i, ids) in sys.iter_sets().enumerate() {
-            a.offer(sys.vertices[i], ids);
+            s.offer(sys.vertices[i], ids);
+        }
+        s.best_coverage()
+    });
+    // Same admissions across the whole ladder; assert the A/B is honest and
+    // that scalar/SIMD dispatch is bit-identical (seeds + gains + coverage).
+    {
+        let a = run_masked(&SCALAR);
+        let c = run_masked(simd);
+        assert_eq!(a, c, "masked admission dispatch drifted");
+        let mut p = Pr1Streaming::new(sys.theta, k, 0.077);
+        let mut l: BaselineStreaming<LegacyBucket> = BaselineStreaming::new(sys.theta, k, 0.077);
+        for (i, ids) in sys.iter_sets().enumerate() {
+            p.offer(sys.vertices[i], ids);
             l.offer(sys.vertices[i], ids);
         }
-        assert_eq!(a.finalize().coverage, l.best_coverage(), "fused admission drifted");
+        assert_eq!(a.coverage, p.best_coverage(), "masked admission drifted from PR1 staged");
+        assert_eq!(a.coverage, l.best_coverage(), "masked admission drifted from legacy two-pass");
     }
     println!(
-        "speedup streaming admission: {:.2}x (two-pass median / fused median)",
-        twopass.median / fused.median
+        "speedup try_admit: {:.2}x scalar->{} | {:.2}x pr1-staged->{} | {:.2}x twopass->{}",
+        masked_scalar.median / masked_simd.median,
+        simd.name,
+        pr1.median / masked_simd.median,
+        simd.name,
+        twopass.median / masked_simd.median,
+        simd.name,
     );
 
     // XLA backend, if artifacts are present.
@@ -197,9 +363,8 @@ fn main() {
             b.bench("dense_xla_greedy_n1k_k50", || {
                 dense_greedy_max_cover(&pc, 50, &mut xla)
             });
-            let mut cpu = CpuScorer;
             b.bench("dense_cpu_greedy_n1k_k50", || {
-                dense_greedy_max_cover(&pc, 50, &mut cpu)
+                dense_greedy_max_cover(&pc, 50, &mut KernelScorer::auto())
             });
         } else {
             println!("(skipping XLA benches: run `make artifacts`)");

@@ -109,10 +109,37 @@ fn main() {
         ix.merge_streams(&round2);
         ix.len()
     });
+    // ---- A/B: forced k-way run merge vs counting-sort fallback (the
+    // density-dispatched paths behind `merge_streams`; ROADMAP item 4). ----
+    let kway_merge = b.bench("merge_csr_kway_2rounds", || {
+        let mut ix = InvertedIndex::new();
+        ix.merge_streams_kway(&round1);
+        ix.merge_streams_kway(&round2);
+        ix.len()
+    });
+    let counting_merge = b.bench("merge_csr_counting_2rounds", || {
+        let mut ix = InvertedIndex::new();
+        ix.merge_streams_counting(&round1);
+        ix.merge_streams_counting(&round2);
+        ix.len()
+    });
+    // Both paths must produce the identical CSR.
+    {
+        let mut kw = InvertedIndex::new();
+        kw.merge_streams_kway(&round1);
+        kw.merge_streams_kway(&round2);
+        let mut ct = InvertedIndex::new();
+        ct.merge_streams_counting(&round1);
+        ct.merge_streams_counting(&round2);
+        assert_eq!(kw.vertices, ct.vertices, "counting merge drifted (vertices)");
+        assert_eq!(kw.offsets, ct.offsets, "counting merge drifted (offsets)");
+        assert_eq!(kw.ids, ct.ids, "counting merge drifted (ids)");
+    }
     println!(
-        "speedup invert: {:.2}x | merge: {:.2}x (legacy median / flat median)",
+        "speedup invert: {:.2}x | merge: {:.2}x (legacy median / flat median) | counting-vs-kway: {:.2}x",
         legacy_inv.median / flat_inv.median,
         legacy_merge.median / flat_merge.median,
+        kway_merge.median / counting_merge.median,
     );
 
     b.bench("alltoallv_m64_1k_elems_per_pair", || {

@@ -2,19 +2,27 @@
 //!
 //! Structure mirrors the paper exactly: one *communicating thread* drains
 //! the incoming seed stream (here an mpsc channel standing in for the MPI
-//! nonblocking receive) and publishes each `<x, S(x)>` into a shared
-//! append-only slot array `A` of capacity `m·k`, setting a per-slot flag
-//! atomically (a `OnceLock` publish). Each *bucketing thread* owns the
-//! buckets whose exponent falls in its residue class mod `t−1` and scans
-//! the slot array with its own cursor, spinning until the next flag is set
-//! — a lock-free single-writer multi-reader protocol; bucket updates need
-//! no synchronization because bucket ownership is disjoint, and every
-//! thread sees the identical element order, so the union of the threads'
-//! buckets is bit-identical to the sequential [`StreamingMaxCover`]
-//! (asserted by tests). Bucket admission itself is the fused single-pass
-//! rule of [`crate::maxcover::streaming::Bucket::try_admit`] — marginal
-//! gain and bitmap update in one sweep, staged in a per-bank scratch — so
-//! the threaded and sequential paths share the exact same innermost loop.
+//! nonblocking receive) and publishes arrivals into a shared append-only
+//! slot array `A`, setting a per-slot flag atomically (a `OnceLock`
+//! publish). Each *bucketing thread* owns the buckets whose exponent falls
+//! in its residue class mod `t−1` and scans the slot array with its own
+//! cursor, spinning until the next flag is set — a lock-free single-writer
+//! multi-reader protocol; bucket updates need no synchronization because
+//! bucket ownership is disjoint, and every thread sees the identical
+//! element order, so the union of the threads' buckets is bit-identical to
+//! the sequential [`StreamingMaxCover`] (asserted by tests).
+//!
+//! ## Burst publishing (PR 2)
+//!
+//! Sender traces arrive bursty (a sender's lazy greedy emits runs of seeds
+//! back-to-back), so the unit of publication is a [`Burst`]: a CSR arena of
+//! `<x, S(x)>` elements. A [`StreamItem`] no longer owns a per-item
+//! `Vec<u32>` — it *borrows* its covering run out of the burst's arena —
+//! and the slot array releases **one** flag per burst instead of one per
+//! element, amortizing both the release fence and the allocation across
+//! the run. Bucketing threads feed whole bursts into the fused admission
+//! sweep ([`crate::maxcover::streaming::BucketBank::offer`], which packs
+//! each element once into an `OfferMask` shared by all of its buckets).
 //!
 //! This module proves the concurrency design executes correctly; the
 //! performance *model* of the receiver lives in
@@ -27,18 +35,95 @@ use crate::{SampleId, Vertex};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 
-/// One published stream element.
-#[derive(Debug)]
-pub struct StreamItem {
+/// One stream element, borrowing its covering run from the publishing
+/// [`Burst`]'s arena.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamItem<'a> {
     pub vertex: Vertex,
-    pub ids: Vec<SampleId>,
+    pub ids: &'a [SampleId],
+}
+
+/// A burst of stream elements in CSR form — the per-sender arena the
+/// receiver's items borrow from. Senders append with [`Burst::push`]
+/// (one contiguous arena per burst, no per-item allocation) and publish
+/// the whole burst at once.
+#[derive(Clone, Debug)]
+pub struct Burst {
+    vertices: Vec<Vertex>,
+    offsets: Vec<u32>,
+    ids: Vec<SampleId>,
+}
+
+impl Default for Burst {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Burst {
+    pub fn new() -> Self {
+        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new() }
+    }
+
+    /// A single-element burst (convenience for tests and item-at-a-time
+    /// call sites).
+    pub fn from_item(vertex: Vertex, ids: &[SampleId]) -> Self {
+        let mut b = Self::new();
+        b.push(vertex, ids);
+        b
+    }
+
+    /// Appends one `<x, S(x)>` element to the arena.
+    pub fn push(&mut self, vertex: Vertex, ids: &[SampleId]) {
+        self.vertices.push(vertex);
+        self.ids.extend_from_slice(ids);
+        self.offsets.push(self.ids.len() as u32);
+    }
+
+    /// Resets the burst for reuse without freeing the arena.
+    pub fn clear(&mut self) {
+        self.vertices.clear();
+        self.ids.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+    }
+
+    /// Number of elements in the burst.
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+
+    /// Total covering entries across the burst.
+    pub fn total_entries(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// The `i`-th element, borrowing its run from the arena.
+    #[inline]
+    pub fn item(&self, i: usize) -> StreamItem<'_> {
+        StreamItem {
+            vertex: self.vertices[i],
+            ids: &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize],
+        }
+    }
+
+    /// Iterates the elements in publication order.
+    pub fn iter(&self) -> impl Iterator<Item = StreamItem<'_>> + '_ {
+        (0..self.len()).map(move |i| self.item(i))
+    }
 }
 
 /// Shared slot array `A` (paper: "the receiver maintains a shared array A of
-/// maximum size m·k" with atomic per-index flags).
+/// maximum size m·k" with atomic per-index flags). One slot holds one
+/// published burst; `capacity` therefore bounds the number of *bursts*
+/// (≤ the m·k element bound, since every burst holds ≥ 1 element).
 pub struct SlotArray {
-    slots: Vec<OnceLock<StreamItem>>,
-    /// Number of published slots (monotone).
+    slots: Vec<OnceLock<Burst>>,
+    /// Number of published bursts (monotone).
     published: AtomicUsize,
     /// Set once the communicating thread has seen all sender terminations.
     done: AtomicBool,
@@ -53,12 +138,13 @@ impl SlotArray {
         }
     }
 
-    /// Publishes the next item (single writer). Returns its index.
-    pub fn publish(&self, item: StreamItem) -> usize {
+    /// Publishes the next burst (single writer). One release fence covers
+    /// every element of the burst. Returns the slot index.
+    pub fn publish(&self, burst: Burst) -> usize {
         let i = self.published.load(Ordering::Relaxed);
         assert!(i < self.slots.len(), "slot array overflow (capacity m·k)");
-        self.slots[i].set(item).expect("single writer");
-        // Release so readers observing `published > i` see the slot data.
+        self.slots[i].set(burst).expect("single writer");
+        // Release so readers observing `published > i` see the burst data.
         self.published.store(i + 1, Ordering::Release);
         i
     }
@@ -67,9 +153,9 @@ impl SlotArray {
         self.done.store(true, Ordering::Release);
     }
 
-    /// Reader-side: returns the item at `cursor` once available, or `None`
+    /// Reader-side: returns the burst at `cursor` once available, or `None`
     /// if the stream completed before reaching `cursor`.
-    pub fn wait_for(&self, cursor: usize) -> Option<&StreamItem> {
+    pub fn wait_for(&self, cursor: usize) -> Option<&Burst> {
         loop {
             if self.published.load(Ordering::Acquire) > cursor {
                 return Some(self.slots[cursor].get().expect("published"));
@@ -87,55 +173,64 @@ impl SlotArray {
 /// Statistics from a threaded-receiver run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ThreadedStats {
+    /// Stream elements processed (across all bursts).
     pub elements: usize,
+    /// Bursts published.
+    pub bursts: usize,
     pub buckets: usize,
     pub bucket_threads: usize,
 }
 
-/// Runs the full threaded receiver over the `rx` stream with `t` threads
-/// (1 communicating + `t−1` bucketing), `capacity` = m·k slot bound.
-/// Returns the best-bucket solution and stats.
+/// Runs the full threaded receiver over the `rx` burst stream with `t`
+/// threads (1 communicating + `t−1` bucketing), `capacity` = slot bound
+/// (bursts). Returns the best-bucket solution and stats.
 pub fn run_threaded_receiver(
     theta: usize,
     k: usize,
     delta: f64,
     t: usize,
     capacity: usize,
-    rx: mpsc::Receiver<StreamItem>,
+    rx: mpsc::Receiver<Burst>,
 ) -> (CoverSolution, ThreadedStats) {
     let bucket_threads = t.saturating_sub(1).max(1);
     let slots = Arc::new(SlotArray::new(capacity));
 
     std::thread::scope(|scope| {
-        // Communicating thread: drain the channel into the slot array.
+        // Communicating thread: drain the channel into the slot array,
+        // one publish (one release fence) per burst.
         let slots_w = Arc::clone(&slots);
         let comm = scope.spawn(move || {
-            let mut n = 0usize;
-            while let Ok(item) = rx.recv() {
-                slots_w.publish(item);
-                n += 1;
+            let mut elements = 0usize;
+            let mut bursts = 0usize;
+            while let Ok(burst) = rx.recv() {
+                elements += burst.len();
+                bursts += 1;
+                slots_w.publish(burst);
             }
             slots_w.finish();
-            n
+            (elements, bursts)
         });
 
         // Bucketing threads: thread j owns buckets with exponent ≡ j
-        // (mod bucket_threads); all threads scan the same slot order.
+        // (mod bucket_threads); all threads scan the same slot order and
+        // feed whole bursts into the fused admission sweep.
         let mut handles = Vec::new();
         for j in 0..bucket_threads {
             let slots_r = Arc::clone(&slots);
             handles.push(scope.spawn(move || {
                 let mut bank = BucketBank::new(theta, k, delta, j, bucket_threads);
                 let mut cursor = 0usize;
-                while let Some(item) = slots_r.wait_for(cursor) {
+                while let Some(burst) = slots_r.wait_for(cursor) {
                     cursor += 1;
-                    bank.offer(item.vertex, &item.ids);
+                    for item in burst.iter() {
+                        bank.offer(item.vertex, item.ids);
+                    }
                 }
                 bank
             }));
         }
 
-        let elements = comm.join().expect("comm thread");
+        let (elements, bursts) = comm.join().expect("comm thread");
         let mut best = CoverSolution::default();
         let mut buckets = 0usize;
         for h in handles {
@@ -146,7 +241,7 @@ pub fn run_threaded_receiver(
                 best = sol;
             }
         }
-        (best, ThreadedStats { elements, buckets, bucket_threads })
+        (best, ThreadedStats { elements, bursts, buckets, bucket_threads })
     })
 }
 
@@ -156,24 +251,37 @@ mod tests {
     use crate::maxcover::StreamingMaxCover;
     use crate::rng::Xoshiro256pp;
 
-    fn random_stream(seed: u64, n: usize, theta: usize) -> Vec<StreamItem> {
+    /// `n` random elements grouped into bursts of 1..=max_burst items.
+    fn random_bursts(seed: u64, n: usize, theta: usize, max_burst: usize) -> Vec<Burst> {
         let mut rng = Xoshiro256pp::seeded(seed);
-        (0..n)
-            .map(|i| {
-                let len = 1 + rng.gen_range(24) as usize;
-                let mut ids: Vec<u32> =
-                    (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
-                ids.sort_unstable();
-                ids.dedup();
-                StreamItem { vertex: i as u32, ids }
-            })
-            .collect()
+        let mut bursts = Vec::new();
+        let mut current = Burst::new();
+        let mut remaining_in_burst = 1 + rng.gen_range(max_burst as u64) as usize;
+        for i in 0..n {
+            let len = 1 + rng.gen_range(24) as usize;
+            let mut ids: Vec<u32> =
+                (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            current.push(i as u32, &ids);
+            remaining_in_burst -= 1;
+            if remaining_in_burst == 0 {
+                bursts.push(std::mem::take(&mut current));
+                remaining_in_burst = 1 + rng.gen_range(max_burst as u64) as usize;
+            }
+        }
+        if !current.is_empty() {
+            bursts.push(current);
+        }
+        bursts
     }
 
-    fn run_sequential(items: &[StreamItem], theta: usize, k: usize, delta: f64) -> CoverSolution {
+    fn run_sequential(bursts: &[Burst], theta: usize, k: usize, delta: f64) -> CoverSolution {
         let mut s = StreamingMaxCover::new(theta, k, delta);
-        for it in items {
-            s.offer(it.vertex, &it.ids);
+        for b in bursts {
+            for it in b.iter() {
+                s.offer(it.vertex, it.ids);
+            }
         }
         s.finalize()
     }
@@ -184,16 +292,13 @@ mod tests {
         let k = 8;
         let delta = 0.1;
         for seed in 0..5u64 {
-            let items = random_stream(seed, 120, theta);
-            let expected = run_sequential(&items, theta, k, delta);
+            let bursts = random_bursts(seed, 120, theta, 7);
+            let expected = run_sequential(&bursts, theta, k, delta);
             let (tx, rx) = mpsc::channel();
-            let sender_items: Vec<StreamItem> = items
-                .iter()
-                .map(|i| StreamItem { vertex: i.vertex, ids: i.ids.clone() })
-                .collect();
+            let sender_bursts = bursts.clone();
             let h = std::thread::spawn(move || {
-                for it in sender_items {
-                    tx.send(it).unwrap();
+                for b in sender_bursts {
+                    tx.send(b).unwrap();
                 }
             });
             let (got, stats) = run_threaded_receiver(theta, k, delta, 4, 200, rx);
@@ -201,17 +306,47 @@ mod tests {
             assert_eq!(got.coverage, expected.coverage, "seed {seed}");
             assert_eq!(got.seeds, expected.seeds, "seed {seed}");
             assert_eq!(stats.elements, 120);
+            assert!(stats.bursts <= 120);
         }
+    }
+
+    #[test]
+    fn burst_partitioning_is_immaterial() {
+        // The same element sequence grouped into different bursts must
+        // produce the identical solution (publication is only an arena
+        // boundary, not a semantic one).
+        let theta = 256;
+        let coarse = random_bursts(11, 60, theta, 10);
+        let mut fine: Vec<Burst> = Vec::new();
+        for b in &coarse {
+            for it in b.iter() {
+                fine.push(Burst::from_item(it.vertex, it.ids));
+            }
+        }
+        let run = |bursts: Vec<Burst>| {
+            let (tx, rx) = mpsc::channel();
+            for b in bursts {
+                tx.send(b).unwrap();
+            }
+            drop(tx);
+            run_threaded_receiver(theta, 5, 0.15, 4, 128, rx)
+        };
+        let (a, sa) = run(coarse);
+        let (b, sb) = run(fine);
+        assert_eq!(a.coverage, b.coverage);
+        assert_eq!(a.seeds, b.seeds);
+        assert_eq!(sa.elements, sb.elements);
+        assert!(sa.bursts <= sb.bursts);
     }
 
     #[test]
     fn works_with_single_bucketing_thread() {
         let theta = 128;
-        let items = random_stream(9, 40, theta);
-        let expected = run_sequential(&items, theta, 4, 0.2);
+        let bursts = random_bursts(9, 40, theta, 4);
+        let expected = run_sequential(&bursts, theta, 4, 0.2);
         let (tx, rx) = mpsc::channel();
-        for it in items {
-            tx.send(it).unwrap();
+        for b in bursts {
+            tx.send(b).unwrap();
         }
         drop(tx);
         let (got, _) = run_threaded_receiver(theta, 4, 0.2, 2, 64, rx);
@@ -221,11 +356,11 @@ mod tests {
     #[test]
     fn more_threads_than_buckets() {
         let theta = 128;
-        let items = random_stream(3, 30, theta);
-        let expected = run_sequential(&items, theta, 3, 0.3);
+        let bursts = random_bursts(3, 30, theta, 3);
+        let expected = run_sequential(&bursts, theta, 3, 0.3);
         let (tx, rx) = mpsc::channel();
-        for it in items {
-            tx.send(it).unwrap();
+        for b in bursts {
+            tx.send(b).unwrap();
         }
         drop(tx);
         let (got, stats) = run_threaded_receiver(theta, 3, 0.3, 64, 64, rx);
@@ -235,18 +370,41 @@ mod tests {
 
     #[test]
     fn empty_stream_yields_empty_solution() {
-        let (tx, rx) = mpsc::channel::<StreamItem>();
+        let (tx, rx) = mpsc::channel::<Burst>();
         drop(tx);
         let (got, stats) = run_threaded_receiver(64, 4, 0.1, 4, 16, rx);
         assert!(got.is_empty());
         assert_eq!(stats.elements, 0);
+        assert_eq!(stats.bursts, 0);
+    }
+
+    #[test]
+    fn burst_arena_borrows() {
+        let mut b = Burst::new();
+        b.push(7, &[0, 1, 2]);
+        b.push(9, &[3]);
+        b.push(4, &[]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.total_entries(), 4);
+        assert_eq!(b.item(0).vertex, 7);
+        assert_eq!(b.item(0).ids, &[0, 1, 2]);
+        assert_eq!(b.item(1).ids, &[3]);
+        assert_eq!(b.item(2).ids, &[] as &[u32]);
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.total_entries(), 0);
     }
 
     #[test]
     fn slot_array_publish_wait() {
         let a = SlotArray::new(4);
-        a.publish(StreamItem { vertex: 1, ids: vec![0] });
-        assert_eq!(a.wait_for(0).unwrap().vertex, 1);
+        let mut burst = Burst::from_item(1, &[0]);
+        burst.push(2, &[1, 2]);
+        a.publish(burst);
+        let got = a.wait_for(0).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got.item(0).vertex, 1);
+        assert_eq!(got.item(1).ids, &[1, 2]);
         a.finish();
         assert!(a.wait_for(1).is_none());
     }
@@ -255,7 +413,7 @@ mod tests {
     #[should_panic(expected = "overflow")]
     fn slot_array_overflow_panics() {
         let a = SlotArray::new(1);
-        a.publish(StreamItem { vertex: 1, ids: vec![] });
-        a.publish(StreamItem { vertex: 2, ids: vec![] });
+        a.publish(Burst::from_item(1, &[]));
+        a.publish(Burst::from_item(2, &[]));
     }
 }

@@ -57,9 +57,24 @@
 //!   streams, vertex-sorted), but both endpoints are hash-free: senders
 //!   invert batches by counting-sort over the owner partition + a flat
 //!   `(vertex, id)` sort, receivers merge streams into the accumulated
-//!   per-rank [`maxcover::InvertedIndex`] with sequential appends. Newly
-//!   shuffled sample ids are always strictly greater than accumulated ones,
-//!   which keeps runs sorted without re-sorting.
+//!   per-rank [`maxcover::InvertedIndex`] with sequential appends (k-way run
+//!   merge, or a counting-sort fallback for dense rounds — both produce the
+//!   identical CSR). Newly shuffled sample ids are always strictly greater
+//!   than accumulated ones, which keeps runs sorted without re-sorting.
+//!
+//! ## Vectorized kernel layer (PR 2)
+//!
+//! Every popcount inner loop — streaming admission, dense CPU scoring, the
+//! lazy/threshold re-evaluation sweeps — routes through
+//! [`maxcover::bitset`]: a portable scalar reference, an AVX2 path behind
+//! runtime `is_x86_feature_detected!` dispatch, and a portable wide-lane
+//! path behind the `simd` cargo feature (`std::simd` on nightly with
+//! `--cfg greediris_portable_simd`). All backends are bit-identical; the
+//! receiver additionally publishes emission **bursts**
+//! ([`coordinator::receiver::Burst`]) whose items borrow CSR runs from a
+//! per-sender arena instead of owning per-item `Vec`s.
+
+#![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
 
 pub mod error;
 pub mod rng;

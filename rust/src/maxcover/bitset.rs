@@ -1,0 +1,1018 @@
+//! Vectorized bitmap kernels — the shared innermost loops of every popcount
+//! consumer on the hot path (streaming admission, dense CPU scoring, the
+//! lazy/threshold re-evaluation sweeps).
+//!
+//! Three backends implement the same kernel contract over raw word slices:
+//!
+//! - [`scalar`] — the portable reference (also the PR-1 baseline: the u64
+//!   pairing trick for u32 rows lives here), always compiled, always the
+//!   semantic ground truth property tests compare against.
+//! - [`avx2`] — explicit AVX2 intrinsics (`x86_64` only), selected at
+//!   runtime behind `is_x86_feature_detected!("avx2")` + `popcnt`. Popcounts
+//!   use the Mula nibble-shuffle (`vpshufb` lookup + `vpsadbw` fold) since
+//!   AVX2 has no vector popcount; sparse marginals use `vpgatherqq`.
+//! - [`wide`] — a portable fixed-lane path behind the `simd` cargo feature.
+//!   On stable it is a hand-rolled 4×`u64` chunk form the autovectorizer
+//!   maps to whatever the target offers; on nightly with
+//!   `--cfg greediris_portable_simd` it compiles to real `std::simd` types.
+//!
+//! Dispatch is resolved **once** per process ([`kernels`]): explicit
+//! `GREEDIRIS_SIMD=scalar|avx2|wide` env override, else best available
+//! (AVX2 → wide → scalar). All backends are bit-identical on every input —
+//! gains are exact integer popcounts, so there is no tolerance to argue
+//! about; the golden tests in `tests/kernels.rs` pin solver-level equality.
+//!
+//! The sparse side of the layer is [`OfferMask`] / [`MaskedRuns`]: a
+//! covering run pre-packed into `(word index, 64-bit mask)` pairs so a
+//! marginal gain is one gather-AND-NOT-popcount sweep over the *touched
+//! words* instead of a per-id bit probe — and the packing is done once per
+//! offered element, amortized across all ~B buckets of a
+//! [`super::streaming::BucketBank`].
+
+use super::coverage::SetSystemView;
+use crate::SampleId;
+use std::sync::OnceLock;
+
+/// The kernel contract: one function pointer per hot loop. `u64` slices are
+/// the streaming-receiver universe layout ([`super::streaming`]); `u32`
+/// slices are the dense packed layout ([`super::dense::PackedCovers`],
+/// kept 32-bit for bit-compatibility with the JAX/Pallas kernel).
+pub struct Kernels {
+    /// Backend name for reports/benches.
+    pub name: &'static str,
+    /// `Σ popcount(a[i] & !b[i])` — marginal gain of dense set `a` against
+    /// covered mask `b`. Equal lengths required.
+    pub and_not_count: fn(&[u64], &[u64]) -> u64,
+    /// `Σ popcount(a[i] | b[i])` — size of the union of two dense bitmaps.
+    pub or_count: fn(&[u64], &[u64]) -> u64,
+    /// Fused admission staging: `staged[i] = set[i] | covered[i]`, returns
+    /// `Σ popcount(set[i] & !covered[i])` — gain and updated words in one
+    /// pass. Equal lengths required.
+    pub marginal_and_stage: fn(&[u64], &[u64], &mut [u64]) -> u64,
+    /// Commits a staged update: `covered.copy_from_slice(staged)`.
+    pub apply_staged: fn(&mut [u64], &[u64]),
+    /// `Σ popcount(a[i] & !b[i])` over `u32` rows (dense scorer hot loop).
+    pub and_not_count_u32: fn(&[u32], &[u32]) -> u32,
+    /// `dst[i] |= src[i]` over `u32` rows (dense solver covered-update).
+    pub or_assign_u32: fn(&mut [u32], &[u32]),
+    /// Sparse marginal: `Σ popcount(masks[j] & !words[idx[j]])`. Every
+    /// `idx[j]` must be in bounds for `words`.
+    pub gather_marginal: fn(&[u64], &[u32], &[u64]) -> u32,
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference backend.
+// ---------------------------------------------------------------------------
+
+/// Portable reference implementations (and the semantic ground truth the
+/// property tests compare every other backend against).
+pub mod scalar {
+    pub fn and_not_count(a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len());
+        let mut t = 0u64;
+        for (x, y) in a.iter().zip(b) {
+            t += (x & !y).count_ones() as u64;
+        }
+        t
+    }
+
+    pub fn or_count(a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len());
+        let mut t = 0u64;
+        for (x, y) in a.iter().zip(b) {
+            t += (x | y).count_ones() as u64;
+        }
+        t
+    }
+
+    pub fn marginal_and_stage(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+        assert_eq!(set.len(), covered.len());
+        assert_eq!(set.len(), staged.len());
+        let mut gain = 0u64;
+        for i in 0..set.len() {
+            let s = set[i];
+            let c = covered[i];
+            gain += (s & !c).count_ones() as u64;
+            staged[i] = s | c;
+        }
+        gain
+    }
+
+    pub fn apply_staged(covered: &mut [u64], staged: &[u64]) {
+        covered.copy_from_slice(staged);
+    }
+
+    /// The PR-1 `CpuScorer` inner loop: process word pairs as `u64` to halve
+    /// the popcount ops (§Perf L3-2). Kept bit-for-bit so the scalar backend
+    /// is exactly the pre-PR2 baseline.
+    pub fn and_not_count_u32(a: &[u32], b: &[u32]) -> u32 {
+        assert_eq!(a.len(), b.len());
+        let split = a.len() & !1;
+        let (a2, a1) = a.split_at(split);
+        let (b2, b1) = b.split_at(split);
+        let mut gain = 0u32;
+        for (x, y) in a2.chunks_exact(2).zip(b2.chunks_exact(2)) {
+            let aa = (x[0] as u64) | ((x[1] as u64) << 32);
+            let bb = (y[0] as u64) | ((y[1] as u64) << 32);
+            gain += (aa & !bb).count_ones();
+        }
+        if let (Some(x), Some(y)) = (a1.first(), b1.first()) {
+            gain += (x & !y).count_ones();
+        }
+        gain
+    }
+
+    pub fn or_assign_u32(dst: &mut [u32], src: &[u32]) {
+        assert_eq!(dst.len(), src.len());
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d |= *s;
+        }
+    }
+
+    pub fn gather_marginal(words: &[u64], idx: &[u32], masks: &[u64]) -> u32 {
+        assert_eq!(idx.len(), masks.len());
+        let mut g = 0u32;
+        for (&wi, &m) in idx.iter().zip(masks) {
+            g += (m & !words[wi as usize]).count_ones();
+        }
+        g
+    }
+}
+
+/// The scalar backend as a dispatch table.
+pub static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    and_not_count: scalar::and_not_count,
+    or_count: scalar::or_count,
+    marginal_and_stage: scalar::marginal_and_stage,
+    apply_staged: scalar::apply_staged,
+    and_not_count_u32: scalar::and_not_count_u32,
+    or_assign_u32: scalar::or_assign_u32,
+    gather_marginal: scalar::gather_marginal,
+};
+
+// ---------------------------------------------------------------------------
+// AVX2 backend (x86_64, runtime-detected).
+// ---------------------------------------------------------------------------
+
+/// Explicit AVX2 intrinsics. The safe wrappers here are only sound on CPUs
+/// with AVX2 + POPCNT; the dispatcher ([`kernels`] / [`by_name`]) never
+/// hands out this table without a successful `is_x86_feature_detected!`
+/// probe, and the wrappers `debug_assert!` the probe as a test-time guard.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use core::arch::x86_64::*;
+
+    #[inline]
+    fn detected() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+    }
+
+    /// Per-64-bit-lane popcount via the Mula nibble-shuffle: split each byte
+    /// into nibbles, look both up in a 16-entry count table (`vpshufb`), add,
+    /// then fold bytes into the four u64 lanes with `vpsadbw` against zero.
+    #[inline]
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn popcount_epi64(v: __m256i) -> __m256i {
+        let lookup = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt = _mm256_add_epi8(
+            _mm256_shuffle_epi8(lookup, lo),
+            _mm256_shuffle_epi8(lookup, hi),
+        );
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn hsum_epi64(v: __m256i) -> u64 {
+        let hi128 = _mm256_extracti128_si256::<1>(v);
+        let lo128 = _mm256_castsi256_si128(v);
+        let s = _mm_add_epi64(lo128, hi128);
+        let s = _mm_add_epi64(s, _mm_unpackhi_epi64(s, s));
+        _mm_cvtsi128_si64(s) as u64
+    }
+
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn and_not_count_imp(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            // andnot(b, a) computes (!b) & a.
+            acc = _mm256_add_epi64(acc, popcount_epi64(_mm256_andnot_si256(vb, va)));
+            i += 4;
+        }
+        let mut total = hsum_epi64(acc);
+        while i < n {
+            total += (a[i] & !b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn or_count_imp(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcount_epi64(_mm256_or_si256(va, vb)));
+            i += 4;
+        }
+        let mut total = hsum_epi64(acc);
+        while i < n {
+            total += (a[i] | b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn marginal_and_stage_imp(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+        let n = set.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vs = _mm256_loadu_si256(set.as_ptr().add(i) as *const __m256i);
+            let vc = _mm256_loadu_si256(covered.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                staged.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_or_si256(vs, vc),
+            );
+            acc = _mm256_add_epi64(acc, popcount_epi64(_mm256_andnot_si256(vc, vs)));
+            i += 4;
+        }
+        let mut gain = hsum_epi64(acc);
+        while i < n {
+            let s = set[i];
+            let c = covered[i];
+            gain += (s & !c).count_ones() as u64;
+            staged[i] = s | c;
+            i += 1;
+        }
+        gain
+    }
+
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn and_not_count_u32_imp(a: &[u32], b: &[u32]) -> u32 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcount_epi64(_mm256_andnot_si256(vb, va)));
+            i += 8;
+        }
+        let mut total = hsum_epi64(acc);
+        while i < n {
+            total += (a[i] & !b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total as u32
+    }
+
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn or_assign_u32_imp(dst: &mut [u32], src: &[u32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vd = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+            let vs = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(
+                dst.as_mut_ptr().add(i) as *mut __m256i,
+                _mm256_or_si256(vd, vs),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] |= src[i];
+            i += 1;
+        }
+    }
+
+    /// Four touched words per iteration: indices from a `__m128i` of i32,
+    /// covered words fetched with `vpgatherqq` (scale 8).
+    #[target_feature(enable = "avx2,popcnt")]
+    unsafe fn gather_marginal_imp(words: &[u64], idx: &[u32], masks: &[u64]) -> u32 {
+        let n = idx.len();
+        let base = words.as_ptr() as *const i64;
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vi = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            let vw = _mm256_i32gather_epi64::<8>(base, vi);
+            let vm = _mm256_loadu_si256(masks.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcount_epi64(_mm256_andnot_si256(vw, vm)));
+            i += 4;
+        }
+        let mut total = hsum_epi64(acc);
+        while i < n {
+            total += (masks[i] & !words[idx[i] as usize]).count_ones() as u64;
+            i += 1;
+        }
+        total as u32
+    }
+
+    pub fn and_not_count(a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len());
+        debug_assert!(detected());
+        unsafe { and_not_count_imp(a, b) }
+    }
+
+    pub fn or_count(a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len());
+        debug_assert!(detected());
+        unsafe { or_count_imp(a, b) }
+    }
+
+    pub fn marginal_and_stage(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+        assert_eq!(set.len(), covered.len());
+        assert_eq!(set.len(), staged.len());
+        debug_assert!(detected());
+        unsafe { marginal_and_stage_imp(set, covered, staged) }
+    }
+
+    pub fn apply_staged(covered: &mut [u64], staged: &[u64]) {
+        covered.copy_from_slice(staged);
+    }
+
+    pub fn and_not_count_u32(a: &[u32], b: &[u32]) -> u32 {
+        assert_eq!(a.len(), b.len());
+        debug_assert!(detected());
+        unsafe { and_not_count_u32_imp(a, b) }
+    }
+
+    pub fn or_assign_u32(dst: &mut [u32], src: &[u32]) {
+        assert_eq!(dst.len(), src.len());
+        debug_assert!(detected());
+        unsafe { or_assign_u32_imp(dst, src) }
+    }
+
+    pub fn gather_marginal(words: &[u64], idx: &[u32], masks: &[u64]) -> u32 {
+        assert_eq!(idx.len(), masks.len());
+        debug_assert!(detected());
+        // Release-mode bounds validation: the gather reads `words[idx[j]]`
+        // without per-lane checks, so an out-of-range index reachable from
+        // safe callers must panic here (as the scalar backend's slice
+        // indexing does) rather than become an out-of-bounds read. One
+        // predictable linear pass over a short index run — noise next to
+        // the gather itself.
+        let n = words.len();
+        assert!(
+            idx.iter().all(|&wi| (wi as usize) < n),
+            "gather_marginal: word index out of bounds"
+        );
+        unsafe { gather_marginal_imp(words, idx, masks) }
+    }
+}
+
+/// The AVX2 backend as a dispatch table (only handed out after runtime
+/// feature detection).
+#[cfg(target_arch = "x86_64")]
+pub static AVX2: Kernels = Kernels {
+    name: "avx2",
+    and_not_count: avx2::and_not_count,
+    or_count: avx2::or_count,
+    marginal_and_stage: avx2::marginal_and_stage,
+    apply_staged: avx2::apply_staged,
+    and_not_count_u32: avx2::and_not_count_u32,
+    or_assign_u32: avx2::or_assign_u32,
+    gather_marginal: avx2::gather_marginal,
+};
+
+// ---------------------------------------------------------------------------
+// Portable wide-lane backend (`--features simd`).
+// ---------------------------------------------------------------------------
+
+/// Portable wide-lane path behind the `simd` cargo feature. By default this
+/// is a stable-Rust 4×`u64` chunk formulation the autovectorizer lowers to
+/// the target's vector ISA; building on nightly with
+/// `RUSTFLAGS="--cfg greediris_portable_simd"` swaps in real `std::simd`
+/// types (the nibble between the two is an API-stability hedge: `std::simd`
+/// is still unstable and this image pins no nightly).
+#[cfg(feature = "simd")]
+pub mod wide {
+    #[cfg(not(greediris_portable_simd))]
+    mod imp {
+        const LANES: usize = 4;
+
+        pub fn and_not_count(a: &[u64], b: &[u64]) -> u64 {
+            debug_assert_eq!(a.len(), b.len());
+            let split = a.len() - a.len() % LANES;
+            let (ac, at) = a.split_at(split);
+            let (bc, bt) = b.split_at(split);
+            let mut acc = [0u64; LANES];
+            for (ca, cb) in ac.chunks_exact(LANES).zip(bc.chunks_exact(LANES)) {
+                for l in 0..LANES {
+                    acc[l] += (ca[l] & !cb[l]).count_ones() as u64;
+                }
+            }
+            let mut t: u64 = acc.iter().sum();
+            for (x, y) in at.iter().zip(bt) {
+                t += (x & !y).count_ones() as u64;
+            }
+            t
+        }
+
+        pub fn or_count(a: &[u64], b: &[u64]) -> u64 {
+            debug_assert_eq!(a.len(), b.len());
+            let split = a.len() - a.len() % LANES;
+            let (ac, at) = a.split_at(split);
+            let (bc, bt) = b.split_at(split);
+            let mut acc = [0u64; LANES];
+            for (ca, cb) in ac.chunks_exact(LANES).zip(bc.chunks_exact(LANES)) {
+                for l in 0..LANES {
+                    acc[l] += (ca[l] | cb[l]).count_ones() as u64;
+                }
+            }
+            let mut t: u64 = acc.iter().sum();
+            for (x, y) in at.iter().zip(bt) {
+                t += (x | y).count_ones() as u64;
+            }
+            t
+        }
+
+        pub fn marginal_and_stage(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+            debug_assert_eq!(set.len(), covered.len());
+            debug_assert_eq!(set.len(), staged.len());
+            let mut acc = [0u64; LANES];
+            let split = set.len() - set.len() % LANES;
+            let mut i = 0usize;
+            while i < split {
+                for l in 0..LANES {
+                    let s = set[i + l];
+                    let c = covered[i + l];
+                    acc[l] += (s & !c).count_ones() as u64;
+                    staged[i + l] = s | c;
+                }
+                i += LANES;
+            }
+            let mut gain: u64 = acc.iter().sum();
+            while i < set.len() {
+                let s = set[i];
+                let c = covered[i];
+                gain += (s & !c).count_ones() as u64;
+                staged[i] = s | c;
+                i += 1;
+            }
+            gain
+        }
+
+        pub fn and_not_count_u32(a: &[u32], b: &[u32]) -> u32 {
+            debug_assert_eq!(a.len(), b.len());
+            const L32: usize = 8;
+            let split = a.len() - a.len() % L32;
+            let (ac, at) = a.split_at(split);
+            let (bc, bt) = b.split_at(split);
+            let mut acc = [0u32; L32];
+            for (ca, cb) in ac.chunks_exact(L32).zip(bc.chunks_exact(L32)) {
+                for l in 0..L32 {
+                    acc[l] += (ca[l] & !cb[l]).count_ones();
+                }
+            }
+            let mut t: u32 = acc.iter().sum();
+            for (x, y) in at.iter().zip(bt) {
+                t += (x & !y).count_ones();
+            }
+            t
+        }
+    }
+
+    #[cfg(greediris_portable_simd)]
+    mod imp {
+        use std::simd::num::SimdUint;
+        use std::simd::{u32x8, u64x4};
+
+        pub fn and_not_count(a: &[u64], b: &[u64]) -> u64 {
+            debug_assert_eq!(a.len(), b.len());
+            let split = a.len() - a.len() % 4;
+            let (ac, at) = a.split_at(split);
+            let (bc, bt) = b.split_at(split);
+            let mut acc = u64x4::splat(0);
+            for (ca, cb) in ac.chunks_exact(4).zip(bc.chunks_exact(4)) {
+                let va = u64x4::from_slice(ca);
+                let vb = u64x4::from_slice(cb);
+                acc += (va & !vb).count_ones().cast::<u64>();
+            }
+            let mut t = acc.reduce_sum();
+            for (x, y) in at.iter().zip(bt) {
+                t += (x & !y).count_ones() as u64;
+            }
+            t
+        }
+
+        pub fn or_count(a: &[u64], b: &[u64]) -> u64 {
+            debug_assert_eq!(a.len(), b.len());
+            let split = a.len() - a.len() % 4;
+            let (ac, at) = a.split_at(split);
+            let (bc, bt) = b.split_at(split);
+            let mut acc = u64x4::splat(0);
+            for (ca, cb) in ac.chunks_exact(4).zip(bc.chunks_exact(4)) {
+                let va = u64x4::from_slice(ca);
+                let vb = u64x4::from_slice(cb);
+                acc += (va | vb).count_ones().cast::<u64>();
+            }
+            let mut t = acc.reduce_sum();
+            for (x, y) in at.iter().zip(bt) {
+                t += (x | y).count_ones() as u64;
+            }
+            t
+        }
+
+        pub fn marginal_and_stage(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+            debug_assert_eq!(set.len(), covered.len());
+            debug_assert_eq!(set.len(), staged.len());
+            let split = set.len() - set.len() % 4;
+            let mut acc = u64x4::splat(0);
+            let mut i = 0usize;
+            while i < split {
+                let vs = u64x4::from_slice(&set[i..i + 4]);
+                let vc = u64x4::from_slice(&covered[i..i + 4]);
+                acc += (vs & !vc).count_ones().cast::<u64>();
+                (vs | vc).copy_to_slice(&mut staged[i..i + 4]);
+                i += 4;
+            }
+            let mut gain = acc.reduce_sum();
+            while i < set.len() {
+                let s = set[i];
+                let c = covered[i];
+                gain += (s & !c).count_ones() as u64;
+                staged[i] = s | c;
+                i += 1;
+            }
+            gain
+        }
+
+        pub fn and_not_count_u32(a: &[u32], b: &[u32]) -> u32 {
+            debug_assert_eq!(a.len(), b.len());
+            let split = a.len() - a.len() % 8;
+            let (ac, at) = a.split_at(split);
+            let (bc, bt) = b.split_at(split);
+            let mut acc = u32x8::splat(0);
+            for (ca, cb) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
+                let va = u32x8::from_slice(ca);
+                let vb = u32x8::from_slice(cb);
+                acc += (va & !vb).count_ones();
+            }
+            let mut t = acc.reduce_sum();
+            for (x, y) in at.iter().zip(bt) {
+                t += (x & !y).count_ones();
+            }
+            t
+        }
+    }
+
+    pub use imp::{and_not_count, and_not_count_u32, marginal_and_stage, or_count};
+}
+
+/// The portable wide-lane backend as a dispatch table. Gather and the
+/// trivial copy/or-assign loops stay scalar — they either don't
+/// autovectorize (gather) or need no help (memcpy).
+#[cfg(feature = "simd")]
+pub static WIDE: Kernels = Kernels {
+    name: "wide",
+    and_not_count: wide::and_not_count,
+    or_count: wide::or_count,
+    marginal_and_stage: wide::marginal_and_stage,
+    apply_staged: scalar::apply_staged,
+    and_not_count_u32: wide::and_not_count_u32,
+    or_assign_u32: scalar::or_assign_u32,
+    gather_marginal: scalar::gather_marginal,
+};
+
+// ---------------------------------------------------------------------------
+// Dispatch.
+// ---------------------------------------------------------------------------
+
+/// The best backend the running CPU/build supports: AVX2 (runtime-detected)
+/// → wide (`simd` feature) → scalar.
+pub fn best_available() -> &'static Kernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+        {
+            return &AVX2;
+        }
+    }
+    #[cfg(feature = "simd")]
+    {
+        return &WIDE;
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        return &SCALAR;
+    }
+}
+
+/// Looks up a backend by name, returning `None` when it is not compiled in
+/// or the CPU lacks the required features.
+pub fn by_name(name: &str) -> Option<&'static Kernels> {
+    match name {
+        "scalar" => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        "avx2"
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("popcnt") =>
+        {
+            Some(&AVX2)
+        }
+        #[cfg(feature = "simd")]
+        "wide" | "portable" => Some(&WIDE),
+        _ => None,
+    }
+}
+
+/// Every backend usable in this process (for exhaustive property tests).
+pub fn all_available() -> Vec<&'static Kernels> {
+    let mut v = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("popcnt")
+        {
+            v.push(&AVX2);
+        }
+    }
+    #[cfg(feature = "simd")]
+    {
+        v.push(&WIDE);
+    }
+    v
+}
+
+/// The process-wide dispatched backend, resolved once: an explicit
+/// `GREEDIRIS_SIMD=scalar|avx2|wide` env override wins, else
+/// [`best_available`]. Hot structs capture the `&'static Kernels` at
+/// construction, so per-call dispatch is one indirect call, no probing.
+pub fn kernels() -> &'static Kernels {
+    static CHOSEN: OnceLock<&'static Kernels> = OnceLock::new();
+    *CHOSEN.get_or_init(|| match std::env::var("GREEDIRIS_SIMD") {
+        Ok(name) => by_name(&name).unwrap_or_else(|| {
+            let best = best_available();
+            eprintln!(
+                "warning: GREEDIRIS_SIMD={name} not available in this build/CPU; using {}",
+                best.name
+            );
+            best
+        }),
+        Err(_) => best_available(),
+    })
+}
+
+/// Name of the dispatched backend (for bench/CI logs).
+pub fn backend_name() -> &'static str {
+    kernels().name
+}
+
+// Dispatched convenience wrappers (one indirect call through [`kernels`]).
+pub fn and_not_count(a: &[u64], b: &[u64]) -> u64 {
+    (kernels().and_not_count)(a, b)
+}
+pub fn or_count(a: &[u64], b: &[u64]) -> u64 {
+    (kernels().or_count)(a, b)
+}
+pub fn marginal_and_stage(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+    (kernels().marginal_and_stage)(set, covered, staged)
+}
+pub fn apply_staged(covered: &mut [u64], staged: &[u64]) {
+    (kernels().apply_staged)(covered, staged)
+}
+
+// ---------------------------------------------------------------------------
+// Sparse pre-packing: OfferMask / MaskedRuns.
+// ---------------------------------------------------------------------------
+
+/// Groups a word-index-sorted id run into `(word, mask)` pairs appended to
+/// `words`/`masks`. Duplicates collapse into the mask, so downstream
+/// popcounts count each sample id once (the deduplicating semantics the
+/// staged admission always had).
+fn group_sorted(run: &[SampleId], words: &mut Vec<u32>, masks: &mut Vec<u64>) {
+    let mut cur_w = u32::MAX; // word indices are < 2^26, so MAX is a safe sentinel
+    let mut cur_m = 0u64;
+    for &id in run {
+        let wi = id >> 6;
+        let bit = 1u64 << (id & 63);
+        if wi != cur_w {
+            if cur_w != u32::MAX {
+                words.push(cur_w);
+                masks.push(cur_m);
+            }
+            cur_w = wi;
+            cur_m = 0;
+        }
+        cur_m |= bit;
+    }
+    if cur_w != u32::MAX {
+        words.push(cur_w);
+        masks.push(cur_m);
+    }
+}
+
+/// One streamed element's covering set pre-packed for the admission sweep:
+/// either sparse `(word, mask)` pairs (the common case) or, when the set is
+/// dense relative to the universe (≥ 1 id per word on average), a full
+/// dense mask that routes through [`Kernels::marginal_and_stage`] /
+/// [`Kernels::apply_staged`] instead of the gather kernel.
+///
+/// Built **once per offer** and shared across every bucket of a bank —
+/// the packing cost that the old per-bucket `AdmitScratch` staging paid
+/// B times is paid once. `distinct_bits` additionally lets buckets whose
+/// threshold exceeds the whole set's size reject without touching their
+/// bitmap at all.
+#[derive(Clone, Debug, Default)]
+pub struct OfferMask {
+    words: Vec<u32>,
+    masks: Vec<u64>,
+    dense: Vec<u64>,
+    dense_mode: bool,
+    distinct_bits: u32,
+    sort_scratch: Vec<SampleId>,
+}
+
+impl OfferMask {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Packs `ids` (any order, duplicates allowed) over a universe of
+    /// `universe_words`×64 bits. Sorted input takes the linear fast path;
+    /// unsorted input is sorted into an internal scratch first, so the
+    /// resulting masks — and every downstream gain — are order-invariant.
+    pub fn build(&mut self, ids: &[SampleId], universe_words: usize) {
+        self.words.clear();
+        self.masks.clear();
+        self.dense_mode = universe_words > 0 && ids.len() >= universe_words;
+        if self.dense_mode {
+            self.dense.clear();
+            self.dense.resize(universe_words, 0);
+            for &id in ids {
+                self.dense[(id >> 6) as usize] |= 1u64 << (id & 63);
+            }
+            self.distinct_bits = self.dense.iter().map(|w| w.count_ones()).sum();
+        } else {
+            if ids.windows(2).all(|w| w[0] <= w[1]) {
+                group_sorted(ids, &mut self.words, &mut self.masks);
+            } else {
+                self.sort_scratch.clear();
+                self.sort_scratch.extend_from_slice(ids);
+                self.sort_scratch.sort_unstable();
+                group_sorted(&self.sort_scratch, &mut self.words, &mut self.masks);
+            }
+            self.distinct_bits = self.masks.iter().map(|m| m.count_ones()).sum();
+        }
+    }
+
+    /// Number of distinct sample ids in the packed set (an upper bound on
+    /// any marginal gain).
+    #[inline]
+    pub fn distinct_bits(&self) -> u32 {
+        self.distinct_bits
+    }
+
+    #[inline]
+    pub fn is_dense(&self) -> bool {
+        self.dense_mode
+    }
+
+    /// The sparse `(word indices, masks)` pairs (valid when `!is_dense()`).
+    #[inline]
+    pub fn sparse(&self) -> (&[u32], &[u64]) {
+        (self.words.as_slice(), self.masks.as_slice())
+    }
+
+    /// The dense full-universe mask (valid when `is_dense()`).
+    #[inline]
+    pub fn dense_words(&self) -> &[u64] {
+        &self.dense
+    }
+}
+
+/// A whole set system pre-packed into per-row `(word, mask)` runs — the
+/// sparse twin of [`super::dense::PackedCovers`] used by the lazy/threshold
+/// re-evaluation sweeps: a stale candidate's fresh marginal gain is one
+/// [`Kernels::gather_marginal`] call instead of a per-id bit probe.
+#[derive(Clone, Debug)]
+pub struct MaskedRuns {
+    offsets: Vec<u32>,
+    words: Vec<u32>,
+    masks: Vec<u64>,
+}
+
+impl MaskedRuns {
+    pub fn from_view(sys: SetSystemView<'_>) -> Self {
+        let mut out = Self {
+            offsets: Vec::with_capacity(sys.len() + 1),
+            words: Vec::with_capacity(sys.total_entries()),
+            masks: Vec::with_capacity(sys.total_entries()),
+        };
+        out.offsets.push(0);
+        let mut scratch: Vec<SampleId> = Vec::new();
+        for i in 0..sys.len() {
+            let ids = sys.set(i);
+            if ids.windows(2).all(|w| w[0] <= w[1]) {
+                group_sorted(ids, &mut out.words, &mut out.masks);
+            } else {
+                scratch.clear();
+                scratch.extend_from_slice(ids);
+                scratch.sort_unstable();
+                group_sorted(&scratch, &mut out.words, &mut out.masks);
+            }
+            out.offsets.push(out.words.len() as u32);
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row `i`'s packed `(word indices, masks)` run.
+    #[inline]
+    pub fn run(&self, i: usize) -> (&[u32], &[u64]) {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        (&self.words[lo..hi], &self.masks[lo..hi])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ref_and_not(a: &[u64], b: &[u64]) -> u64 {
+        a.iter().zip(b).map(|(x, y)| (x & !y).count_ones() as u64).sum()
+    }
+
+    #[test]
+    fn scalar_kernels_match_naive() {
+        let a = vec![0xdead_beef_0123_4567u64, u64::MAX, 0, 0x8000_0000_0000_0001];
+        let b = vec![0x0123_4567_dead_beefu64, 0, u64::MAX, 1];
+        assert_eq!(scalar::and_not_count(&a, &b), ref_and_not(&a, &b));
+        let or_ref: u64 = a.iter().zip(&b).map(|(x, y)| (x | y).count_ones() as u64).sum();
+        assert_eq!(scalar::or_count(&a, &b), or_ref);
+        let mut staged = vec![0u64; 4];
+        let g = scalar::marginal_and_stage(&a, &b, &mut staged);
+        assert_eq!(g, ref_and_not(&a, &b));
+        for i in 0..4 {
+            assert_eq!(staged[i], a[i] | b[i]);
+        }
+        let mut covered = b.clone();
+        scalar::apply_staged(&mut covered, &staged);
+        assert_eq!(covered, staged);
+    }
+
+    #[test]
+    fn dispatched_backend_matches_scalar_on_all_lengths() {
+        // Includes tails not a multiple of any lane width, empty, and
+        // all-zero/all-one extremes.
+        for kern in all_available() {
+            for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 31, 33] {
+                let a: Vec<u64> = (0..len).map(|i| (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+                let b: Vec<u64> = (0..len).map(|i| !(i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)).collect();
+                assert_eq!((kern.and_not_count)(&a, &b), scalar::and_not_count(&a, &b), "{} len {len}", kern.name);
+                assert_eq!((kern.or_count)(&a, &b), scalar::or_count(&a, &b), "{} len {len}", kern.name);
+                let zeros = vec![0u64; len];
+                let ones = vec![u64::MAX; len];
+                assert_eq!((kern.and_not_count)(&ones, &zeros), 64 * len as u64, "{}", kern.name);
+                assert_eq!((kern.and_not_count)(&zeros, &ones), 0, "{}", kern.name);
+                let mut s1 = vec![0u64; len];
+                let mut s2 = vec![0u64; len];
+                let g1 = (kern.marginal_and_stage)(&a, &b, &mut s1);
+                let g2 = scalar::marginal_and_stage(&a, &b, &mut s2);
+                assert_eq!(g1, g2, "{} len {len}", kern.name);
+                assert_eq!(s1, s2, "{} len {len}", kern.name);
+            }
+        }
+    }
+
+    #[test]
+    fn u32_kernels_agree() {
+        for kern in all_available() {
+            for len in [0usize, 1, 5, 7, 8, 9, 16, 17, 23, 64, 65] {
+                let a: Vec<u32> = (0..len).map(|i| (i as u32).wrapping_mul(0x9E37_79B9)).collect();
+                let b: Vec<u32> = (0..len).map(|i| !(i as u32).wrapping_mul(0x85EB_CA6B)).collect();
+                assert_eq!(
+                    (kern.and_not_count_u32)(&a, &b),
+                    scalar::and_not_count_u32(&a, &b),
+                    "{} len {len}",
+                    kern.name
+                );
+                let mut d1 = b.clone();
+                let mut d2 = b.clone();
+                (kern.or_assign_u32)(&mut d1, &a);
+                scalar::or_assign_u32(&mut d2, &a);
+                assert_eq!(d1, d2, "{} len {len}", kern.name);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_marginal_agrees() {
+        let words: Vec<u64> = (0..50u64).map(|i| i.wrapping_mul(0x2545_F491_4F6C_DD1D)).collect();
+        for kern in all_available() {
+            for len in [0usize, 1, 2, 3, 4, 5, 8, 11, 13] {
+                let idx: Vec<u32> = (0..len).map(|i| ((i * 7 + 3) % 50) as u32).collect();
+                let masks: Vec<u64> = (0..len).map(|i| (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+                assert_eq!(
+                    (kern.gather_marginal)(&words, &idx, &masks),
+                    scalar::gather_marginal(&words, &idx, &masks),
+                    "{} len {len}",
+                    kern.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn offer_mask_sparse_and_dense_agree() {
+        // ids dense enough to trigger dense mode over a 2-word universe.
+        let ids: Vec<u32> = vec![0, 1, 5, 63, 64, 64, 100, 127, 3];
+        let mut dense = OfferMask::new();
+        dense.build(&ids, 2);
+        assert!(dense.is_dense());
+        let mut sparse = OfferMask::new();
+        sparse.build(&ids, 1000); // big universe -> sparse mode
+        assert!(!sparse.is_dense());
+        assert_eq!(dense.distinct_bits(), sparse.distinct_bits());
+        assert_eq!(dense.distinct_bits(), 8); // 9 ids, one duplicate (64)
+        // Gains against a covered mask agree between the two forms.
+        let covered = vec![0b1010u64, 1u64 << 36, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0];
+        let (w, m) = sparse.sparse();
+        let g_sparse = scalar::gather_marginal(&covered, w, m);
+        let mut staged = vec![0u64; 2];
+        let g_dense = scalar::marginal_and_stage(dense.dense_words(), &covered[..2], &mut staged);
+        assert_eq!(g_sparse as u64, g_dense);
+    }
+
+    #[test]
+    fn offer_mask_order_invariant() {
+        let sorted: Vec<u32> = vec![1, 2, 65, 70, 130];
+        let shuffled: Vec<u32> = vec![130, 1, 70, 2, 65];
+        let mut a = OfferMask::new();
+        let mut b = OfferMask::new();
+        a.build(&sorted, 100);
+        b.build(&shuffled, 100);
+        assert_eq!(a.sparse(), b.sparse());
+        assert_eq!(a.distinct_bits(), b.distinct_bits());
+    }
+
+    #[test]
+    fn masked_runs_match_per_id_probe() {
+        use crate::maxcover::SetSystem;
+        let sys = SetSystem::from_sets(
+            200,
+            vec![1, 2, 3],
+            &[vec![0, 1, 64, 65, 199], vec![63, 64], vec![]],
+        );
+        let runs = MaskedRuns::from_view(sys.view());
+        assert_eq!(runs.len(), 3);
+        let covered = vec![1u64, 0, 0, 1u64 << 7]; // ids 0 and 199 covered
+        for i in 0..3 {
+            let (w, m) = runs.run(i);
+            let expect: u32 = sys
+                .set(i)
+                .iter()
+                .filter(|&&id| covered[(id >> 6) as usize] & (1u64 << (id & 63)) == 0)
+                .count() as u32;
+            assert_eq!(scalar::gather_marginal(&covered, w, m), expect, "row {i}");
+        }
+    }
+
+    #[test]
+    fn gather_marginal_rejects_out_of_bounds_indices() {
+        // Every backend must panic (not silently read out of bounds) on a
+        // word index past the covered bitmap — the scalar path via slice
+        // indexing, the AVX2 path via its release-mode validation.
+        for kern in all_available() {
+            let r = std::panic::catch_unwind(|| {
+                let words = vec![0u64; 4];
+                (kern.gather_marginal)(&words, &[10u32], &[1u64])
+            });
+            assert!(r.is_err(), "backend {} accepted an OOB index", kern.name);
+        }
+    }
+
+    #[test]
+    fn dispatch_reports_a_backend() {
+        let k = kernels();
+        assert!(!k.name.is_empty());
+        assert!(all_available().iter().any(|b| b.name == "scalar"));
+    }
+}

@@ -81,6 +81,28 @@ impl BitCover {
     pub fn words(&self) -> &[u64] {
         &self.words
     }
+
+    /// Marginal gain of a pre-packed `(word, mask)` run (see
+    /// [`super::bitset::MaskedRuns`]): distinct uncovered bits, computed by
+    /// the dispatched gather kernel. Equals [`BitCover::count_new`] whenever
+    /// the underlying id run is duplicate-free (the CSR invariant).
+    #[inline]
+    pub fn count_new_masked(&self, run_words: &[u32], run_masks: &[u64]) -> u32 {
+        (super::bitset::kernels().gather_marginal)(&self.words, run_words, run_masks)
+    }
+
+    /// Inserts a pre-packed `(word, mask)` run; returns how many bits were
+    /// newly covered (the masked twin of [`BitCover::insert_all`]).
+    pub fn insert_masked(&mut self, run_words: &[u32], run_masks: &[u64]) -> u32 {
+        let mut new = 0u32;
+        for (&wi, &m) in run_words.iter().zip(run_masks) {
+            let w = &mut self.words[wi as usize];
+            new += (m & !*w).count_ones();
+            *w |= m;
+        }
+        self.count += new as usize;
+        new
+    }
 }
 
 /// Packs every `(vertex, sample id)` entry of `batches` into sortable
@@ -302,6 +324,10 @@ pub struct InvertedIndex {
     /// starting at 0 (the [`Default`] impl upholds this too).
     pub offsets: Vec<u32>,
     pub ids: Vec<SampleId>,
+    /// Reusable per-vertex counter/cursor scratch for the counting-sort
+    /// merge fallback (cleared and regrown per round, never reallocated
+    /// when the vertex span is stable across rounds).
+    merge_scratch: Vec<u32>,
 }
 
 impl Default for InvertedIndex {
@@ -310,9 +336,32 @@ impl Default for InvertedIndex {
     }
 }
 
+/// A decoded shuffle run: `(vertex, source stream, payload start, count)`.
+type RunDesc = (Vertex, u32, u32, u32);
+
+/// Decodes the wire-format streams (`[v, count, ids...]`, vertex-sorted per
+/// stream) into run descriptors; returns `(runs, added entries, max vertex)`.
+fn decode_runs(streams: &[Vec<u32>]) -> (Vec<RunDesc>, usize, Vertex) {
+    let mut runs: Vec<RunDesc> = Vec::new();
+    let mut added = 0usize;
+    let mut max_v: Vertex = 0;
+    for (si, s) in streams.iter().enumerate() {
+        let mut i = 0usize;
+        while i < s.len() {
+            let v = s[i];
+            let cnt = s[i + 1] as usize;
+            runs.push((v, si as u32, (i + 2) as u32, cnt as u32));
+            added += cnt;
+            max_v = max_v.max(v);
+            i += 2 + cnt;
+        }
+    }
+    (runs, added, max_v)
+}
+
 impl InvertedIndex {
     pub fn new() -> Self {
-        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new() }
+        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new(), merge_scratch: Vec::new() }
     }
 
     /// Number of distinct vertices with a covering run.
@@ -357,30 +406,61 @@ impl InvertedIndex {
         let mut pairs = pairs_from_batches(batches);
         pairs.sort_unstable();
         let (vertices, offsets, ids) = csr_from_sorted_pairs(&pairs);
-        Self { vertices, offsets, ids }
+        Self { vertices, offsets, ids, merge_scratch: Vec::new() }
     }
 
     /// Merges a round of shuffle streams (wire format `[v, count, ids...]`,
     /// each stream vertex-sorted) into the accumulated index — the hash-free
     /// S2 merge. Streams must be given in ascending source-rank order so
     /// that per-vertex runs concatenate in ascending sample-id order.
+    ///
+    /// Dispatches between two implementations producing identical CSR
+    /// (pinned by tests): the k-way run merge, and — for dense rounds where
+    /// the entries dominate the vertex span (ROADMAP item: entries ≫ n) —
+    /// a branch-free counting sort over vertex ids with a reusable scratch.
     pub fn merge_streams(&mut self, streams: &[Vec<u32>]) {
-        // Decode run descriptors: (vertex, stream, payload start, count).
-        let mut runs: Vec<(Vertex, u32, u32, u32)> = Vec::new();
-        let mut added = 0usize;
-        for (si, s) in streams.iter().enumerate() {
-            let mut i = 0usize;
-            while i < s.len() {
-                let v = s[i];
-                let cnt = s[i + 1] as usize;
-                runs.push((v, si as u32, (i + 2) as u32, cnt as u32));
-                added += cnt;
-                i += 2 + cnt;
-            }
-        }
+        let (runs, added, max_v) = decode_runs(streams);
         if runs.is_empty() {
             return;
         }
+        let span = self
+            .vertices
+            .last()
+            .copied()
+            .unwrap_or(0)
+            .max(max_v) as usize
+            + 1;
+        // Counting sort is O(span + entries) with perfectly predictable
+        // branches; the k-way merge is O(entries + runs·log runs) but never
+        // touches vertices absent from the round. Prefer counting when the
+        // total entry volume dominates the vertex span.
+        if added + self.ids.len() >= 2 * span {
+            self.merge_runs_counting(streams, &runs, added, span);
+        } else {
+            self.merge_runs_kway(streams, runs, added);
+        }
+    }
+
+    /// Forces the k-way run-merge path (benches/tests).
+    pub fn merge_streams_kway(&mut self, streams: &[Vec<u32>]) {
+        let (runs, added, _) = decode_runs(streams);
+        if runs.is_empty() {
+            return;
+        }
+        self.merge_runs_kway(streams, runs, added);
+    }
+
+    /// Forces the counting-sort path (benches/tests).
+    pub fn merge_streams_counting(&mut self, streams: &[Vec<u32>]) {
+        let (runs, added, max_v) = decode_runs(streams);
+        if runs.is_empty() {
+            return;
+        }
+        let span = self.vertices.last().copied().unwrap_or(0).max(max_v) as usize + 1;
+        self.merge_runs_counting(streams, &runs, added, span);
+    }
+
+    fn merge_runs_kway(&mut self, streams: &[Vec<u32>], mut runs: Vec<RunDesc>, added: usize) {
         // Streams are vertex-sorted, so this sort is nearly-sorted input;
         // the (vertex, stream) key keeps id blocks in ascending order.
         runs.sort_unstable_by_key(|r| (r.0, r.1));
@@ -412,6 +492,71 @@ impl InvertedIndex {
             }
             vertices.push(v);
             offsets.push(ids.len() as u32);
+        }
+        self.vertices = vertices;
+        self.offsets = offsets;
+        self.ids = ids;
+    }
+
+    /// Counting-sort merge: count ids per vertex (existing + new), prefix-sum
+    /// into write cursors, then scatter the accumulated runs followed by the
+    /// stream runs in source order — exactly the concatenation order of the
+    /// k-way merge, so the resulting CSR is identical. `span` must exceed
+    /// every vertex id present in `self` or `runs`.
+    fn merge_runs_counting(
+        &mut self,
+        streams: &[Vec<u32>],
+        runs: &[RunDesc],
+        added: usize,
+        span: usize,
+    ) {
+        let scratch = &mut self.merge_scratch;
+        scratch.clear();
+        scratch.resize(span, 0);
+        for (i, &v) in self.vertices.iter().enumerate() {
+            scratch[v as usize] += self.offsets[i + 1] - self.offsets[i];
+        }
+        for &(v, _, _, cnt) in runs {
+            scratch[v as usize] += cnt;
+        }
+        // Prefix sums -> per-vertex write cursors.
+        let mut acc = 0u32;
+        for c in scratch.iter_mut() {
+            let n = *c;
+            *c = acc;
+            acc += n;
+        }
+        let total = self.ids.len() + added;
+        debug_assert_eq!(acc as usize, total);
+        let mut ids = vec![0u32; total];
+        // Scatter the accumulated runs first (they hold the smaller, older
+        // sample ids), then each stream's runs in ascending source order.
+        for (i, &v) in self.vertices.iter().enumerate() {
+            let run = &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize];
+            let cur = &mut scratch[v as usize];
+            ids[*cur as usize..*cur as usize + run.len()].copy_from_slice(run);
+            *cur += run.len() as u32;
+        }
+        for &(v, si, start, cnt) in runs {
+            let s = &streams[si as usize];
+            let cur = &mut scratch[v as usize];
+            ids[*cur as usize..(*cur + cnt) as usize]
+                .copy_from_slice(&s[start as usize..(start + cnt) as usize]);
+            *cur += cnt;
+        }
+        // After the scatter each cursor sits at its vertex's end offset;
+        // emit the non-empty vertices in ascending order.
+        let mut vertices = Vec::with_capacity(self.vertices.len() + runs.len());
+        let mut offsets = Vec::with_capacity(self.vertices.len() + runs.len() + 1);
+        offsets.push(0u32);
+        let mut prev = 0u32;
+        for v in 0..span {
+            let end = scratch[v];
+            if end > prev {
+                vertices.push(v as Vertex);
+                offsets.push(end);
+                prev = end;
+            }
         }
         self.vertices = vertices;
         self.offsets = offsets;
@@ -544,6 +689,69 @@ mod tests {
             let run = ix.run(i);
             assert!(run.windows(2).all(|w| w[0] < w[1]), "run {run:?}");
         }
+    }
+
+    #[test]
+    fn counting_merge_identical_to_kway() {
+        // Same rounds through both forced paths must yield identical CSR.
+        let r1 = vec![
+            vec![5, 2, 0, 1, 9, 1, 0],
+            vec![2, 1, 1, 5, 1, 2],
+        ];
+        let r2 = vec![vec![3, 1, 7, 5, 1, 8], vec![9, 2, 5, 6]];
+        let mut kway = InvertedIndex::new();
+        kway.merge_streams_kway(&r1);
+        kway.merge_streams_kway(&r2);
+        let mut counting = InvertedIndex::new();
+        counting.merge_streams_counting(&r1);
+        counting.merge_streams_counting(&r2);
+        assert_eq!(kway.vertices, counting.vertices);
+        assert_eq!(kway.offsets, counting.offsets);
+        assert_eq!(kway.ids, counting.ids);
+        // Mixed: counting round on top of a kway round.
+        let mut mixed = InvertedIndex::new();
+        mixed.merge_streams_kway(&r1);
+        mixed.merge_streams_counting(&r2);
+        assert_eq!(mixed.ids, kway.ids);
+        assert_eq!(mixed.vertices, kway.vertices);
+    }
+
+    #[test]
+    fn auto_merge_matches_forced_paths() {
+        // Dense round (entries >> span) routes to counting; sparse to kway —
+        // either way the CSR must match the forced k-way reference.
+        let dense_round = vec![vec![
+            0, 4, 0, 1, 2, 3, //
+            1, 4, 0, 1, 2, 3, //
+            2, 4, 0, 1, 2, 3,
+        ]];
+        let sparse_round = vec![vec![90_000, 2, 10, 11]];
+        let mut auto = InvertedIndex::new();
+        auto.merge_streams(&dense_round);
+        auto.merge_streams(&sparse_round);
+        let mut reference = InvertedIndex::new();
+        reference.merge_streams_kway(&dense_round);
+        reference.merge_streams_kway(&sparse_round);
+        assert_eq!(auto.vertices, reference.vertices);
+        assert_eq!(auto.offsets, reference.offsets);
+        assert_eq!(auto.ids, reference.ids);
+    }
+
+    #[test]
+    fn bitcover_masked_ops_match_per_id() {
+        let mut a = BitCover::new(200);
+        let mut b = BitCover::new(200);
+        let ids = vec![0u32, 1, 64, 65, 130, 199];
+        let words = vec![0u32, 1, 2, 3];
+        let masks = vec![0b11u64, 0b11, 1u64 << 2, 1u64 << 7];
+        assert_eq!(a.count_new(&ids), b.count_new_masked(&words, &masks));
+        let ga = a.insert_all(&ids);
+        let gb = b.insert_masked(&words, &masks);
+        assert_eq!(ga, gb);
+        assert_eq!(a.count(), b.count());
+        // Re-inserting covers nothing new, in both forms.
+        assert_eq!(a.insert_all(&ids), 0);
+        assert_eq!(b.insert_masked(&words, &masks), 0);
     }
 
     #[test]

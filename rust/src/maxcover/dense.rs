@@ -9,6 +9,7 @@
 //! Pallas kernel. The `u32` word width matches the JAX kernel's dtype so the
 //! two backends are bit-compatible.
 
+use super::bitset::{kernels, Kernels};
 use super::coverage::SetSystemView;
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
@@ -56,37 +57,71 @@ pub trait GainScorer {
 
     /// Human-readable backend name for reports.
     fn name(&self) -> &'static str;
+
+    /// The bitmap kernel table this scorer is pinned to, if any. The dense
+    /// solver uses it for the covered-update so a scorer pinned to one
+    /// backend (the scalar-vs-SIMD A/B benches) never mixes in the
+    /// process-wide dispatched kernels.
+    fn pinned_kernels(&self) -> Option<&'static Kernels> {
+        None
+    }
 }
 
-/// Native Rust scalar/autovectorized scorer.
-#[derive(Default)]
-pub struct CpuScorer;
+/// CPU scorer parameterized by an explicit [`Kernels`] backend — the
+/// vectorized row sweep `gains[i] = and_not_count_u32(row_i, covered)`
+/// with first-maximum argmax. [`CpuScorer`] is the auto-dispatched
+/// convenience form; the A/B benches construct this directly with
+/// [`bitset::SCALAR`](super::bitset::SCALAR) vs the dispatched backend.
+pub struct KernelScorer {
+    kern: &'static Kernels,
+}
 
-impl GainScorer for CpuScorer {
+impl KernelScorer {
+    /// Scorer on the process-wide dispatched backend.
+    pub fn auto() -> Self {
+        Self { kern: kernels() }
+    }
+
+    /// Scorer pinned to an explicit backend.
+    pub fn with_kernels(kern: &'static Kernels) -> Self {
+        Self { kern }
+    }
+}
+
+impl GainScorer for KernelScorer {
     fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
         let mut best = (usize::MAX, 0u32);
-        // Process word pairs as u64 (halves the popcount ops; §Perf L3-2).
-        let (cov2, cov1) = covered.split_at(covered.len() & !1);
+        let count = self.kern.and_not_count_u32;
         for i in 0..covers.n {
             if selected[i] {
                 continue;
             }
-            let row = covers.row(i);
-            let (row2, row1) = row.split_at(row.len() & !1);
-            let mut gain = 0u32;
-            for (a, b) in row2.chunks_exact(2).zip(cov2.chunks_exact(2)) {
-                let aa = (a[0] as u64) | ((a[1] as u64) << 32);
-                let bb = (b[0] as u64) | ((b[1] as u64) << 32);
-                gain += (aa & !bb).count_ones();
-            }
-            if let (Some(a), Some(b)) = (row1.first(), cov1.first()) {
-                gain += (a & !b).count_ones();
-            }
+            let gain = count(covers.row(i), covered);
             if best.0 == usize::MAX || gain > best.1 {
                 best = (i, gain);
             }
         }
         best
+    }
+
+    fn name(&self) -> &'static str {
+        self.kern.name
+    }
+
+    fn pinned_kernels(&self) -> Option<&'static Kernels> {
+        Some(self.kern)
+    }
+}
+
+/// Native CPU scorer on the dispatched [`Kernels`] backend (scalar u64-pair
+/// popcounts on the baseline, AVX2 nibble-shuffle popcounts when detected,
+/// the `simd`-feature wide path otherwise).
+#[derive(Default)]
+pub struct CpuScorer;
+
+impl GainScorer for CpuScorer {
+    fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
+        KernelScorer::auto().best(covers, covered, selected)
     }
 
     fn name(&self) -> &'static str {
@@ -117,16 +152,14 @@ pub fn dense_greedy_max_cover_stream(
     let mut covered = vec![0u32; covers.w];
     let mut selected = vec![false; covers.n];
     let mut sol = CoverSolution::default();
+    let kern = scorer.pinned_kernels().unwrap_or_else(kernels);
     for _ in 0..k.min(covers.n) {
         let (i, gain) = scorer.best(covers, &covered, &selected);
         if i == usize::MAX || gain == 0 {
             break;
         }
         selected[i] = true;
-        let row = covers.row(i);
-        for (c, r) in covered.iter_mut().zip(row) {
-            *c |= *r;
-        }
+        (kern.or_assign_u32)(&mut covered, covers.row(i));
         emit(sol.len(), i, gain);
         sol.push(covers.vertices[i], gain);
     }
@@ -216,6 +249,18 @@ mod tests {
         let sol = dense_greedy_max_cover(&p, 2, &mut CpuScorer);
         assert_eq!(sol.seeds, vec![0]);
         assert_eq!(sol.coverage, 4);
+    }
+
+    #[test]
+    fn kernel_scorer_backends_match_cpu() {
+        let p = PackedCovers::from_sets(tiny_system().view());
+        let covered = pack_mask(40, &[2, 3, 33]);
+        let selected = vec![false; p.n];
+        let reference = CpuScorer.best(&p, &covered, &selected);
+        for kern in crate::maxcover::bitset::all_available() {
+            let got = KernelScorer::with_kernels(kern).best(&p, &covered, &selected);
+            assert_eq!(got, reference, "backend {}", kern.name);
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! [`lazy_greedy_stream`] to emit each seed *as it is identified*, which is
 //! what enables the tandem local/global computation.
 
+use super::bitset::MaskedRuns;
 use super::coverage::{BitCover, SetSystemView};
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
@@ -70,18 +71,18 @@ pub fn lazy_greedy_stream(
         .collect();
     let mut sol = CoverSolution::default();
     let mut residual: Vec<SampleId> = Vec::new();
+    // Re-evaluation is the hot loop (a candidate may be re-scored many times
+    // before selection): pre-pack every run once so the fresh marginal gain
+    // is one vectorized gather over the touched words. The residual id list
+    // is only materialized for the ≤ k actually-selected candidates.
+    let runs = MaskedRuns::from_view(sys);
     while sol.len() < k {
         let Some(top) = heap.pop() else { break };
         let i = top.idx as usize;
         // Recompute the true marginal gain (keys in the heap are stale upper
         // bounds thanks to submodularity).
-        residual.clear();
-        for &id in sys.set(i) {
-            if !covered.contains(id) {
-                residual.push(id);
-            }
-        }
-        let gain = residual.len() as u32;
+        let (rw, rm) = runs.run(i);
+        let gain = covered.count_new_masked(rw, rm);
         // Select iff the recomputed gain still dominates the heap. On gain
         // ties we defer to the lower-indexed candidate (matching the
         // standard greedy's first-maximum rule exactly): if the next heap
@@ -99,6 +100,15 @@ pub fn lazy_greedy_stream(
                 // every remaining true gain is 0 too.
                 break;
             }
+            // Materialize the residual ids only now that this candidate is
+            // definitely selected (the emit contract ships explicit ids).
+            residual.clear();
+            for &id in sys.set(i) {
+                if !covered.contains(id) {
+                    residual.push(id);
+                }
+            }
+            debug_assert_eq!(residual.len() as u32, gain);
             covered.insert_all(&residual);
             emit(SelectEvent {
                 order: sol.len(),

@@ -19,12 +19,17 @@
 //! - [`dense::PackedCovers`] + [`dense::GainScorer`] — the packed-bitmap
 //!   scoring hot path shared by the native CPU backend and the AOT-compiled
 //!   XLA/Pallas backend ([`crate::runtime`]).
+//! - [`bitset`] — the shared vectorized bitmap kernel layer (scalar / AVX2
+//!   runtime-dispatch / `simd`-feature wide lanes) every popcount consumer
+//!   above is built on: streaming admission, dense CPU scoring, and the
+//!   lazy/threshold re-evaluation sweeps.
 //!
 //! All sparse solvers consume the borrowed CSR view
 //! [`coverage::SetSystemView`]; rank state accumulates shuffled covering
 //! sets in the flat [`coverage::InvertedIndex`] and lends it out without
 //! cloning (see the data-path invariants in [`crate`] docs).
 
+pub mod bitset;
 pub mod coverage;
 pub mod dense;
 pub mod greedy;
@@ -33,8 +38,12 @@ pub mod stochastic;
 pub mod streaming;
 pub mod threshold;
 
+pub use bitset::{kernels, Kernels, MaskedRuns, OfferMask};
 pub use coverage::{BitCover, InvertedIndex, SetSystem, SetSystemView};
-pub use dense::{dense_greedy_max_cover, dense_greedy_max_cover_stream, CpuScorer, GainScorer, PackedCovers};
+pub use dense::{
+    dense_greedy_max_cover, dense_greedy_max_cover_stream, CpuScorer, GainScorer, KernelScorer,
+    PackedCovers,
+};
 pub use greedy::greedy_max_cover;
 pub use lazy::lazy_greedy_max_cover;
 pub use stochastic::stochastic_greedy_max_cover;

@@ -14,47 +14,25 @@
 //! Since `l` is only known online, buckets are *created lazily* as larger
 //! subsets stream in (the Sieve-Streaming construction); early buckets are
 //! retained — they can only improve the final max.
+//!
+//! ## Admission hot path (PR 2)
+//!
+//! Each offered element is packed **once** into an [`OfferMask`] —
+//! `(word, mask)` pairs (or a dense mask when the set is dense relative to
+//! the universe) — and shared across all ~B buckets of the bank; the old
+//! per-bucket staged-scratch sweep re-walked the raw id list B times.
+//! Per bucket the marginal gain is then a single
+//! [`Kernels::gather_marginal`] (sparse) or
+//! [`Kernels::marginal_and_stage`] (dense) kernel call, vectorized by the
+//! dispatched [`bitset`](super::bitset) backend, and buckets whose
+//! threshold exceeds the whole set's distinct-bit count reject without
+//! touching their bitmap at all. All of this is bit-identical to the
+//! scalar reference — gains are exact popcounts and duplicate ids still
+//! count once (pinned by `tests/kernels.rs`).
 
+use super::bitset::{kernels, Kernels, OfferMask};
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
-
-/// Shared scratch for the fused admission pass: stages the updated bitmap
-/// words of the element being offered so the marginal gain and the bitmap
-/// update are computed in **one** pass over `ids` (the old code walked the
-/// bitmap twice — `marginal` then `absorb`). Words are staged out-of-place
-/// and written back only on admit, halving memory traffic on the
-/// receiver's innermost loop and making rejects write-free.
-///
-/// One scratch serves every bucket of a [`BucketBank`] (admissions touch
-/// one bucket at a time); epoch stamps avoid clearing per offer.
-#[derive(Clone, Debug)]
-pub struct AdmitScratch {
-    epoch: u32,
-    /// Per-word epoch stamp: "this word is already staged this pass".
-    stamp: Vec<u32>,
-    /// Per-word index into `staged` (valid when stamped).
-    pos: Vec<u32>,
-    /// (word index, staged word value) for the touched words of this pass.
-    staged: Vec<(u32, u64)>,
-}
-
-impl AdmitScratch {
-    pub fn new(words: usize) -> Self {
-        Self { epoch: 0, stamp: vec![0; words], pos: vec![0; words], staged: Vec::new() }
-    }
-
-    /// Starts a fresh staging pass.
-    #[inline]
-    fn begin(&mut self) {
-        self.staged.clear();
-        self.epoch = self.epoch.wrapping_add(1);
-        if self.epoch == 0 {
-            // Stamp counter wrapped: reset once.
-            self.stamp.fill(0);
-            self.epoch = 1;
-        }
-    }
-}
 
 /// State of a single threshold bucket.
 #[derive(Clone, Debug)]
@@ -87,43 +65,43 @@ impl Bucket {
     /// threaded receiver both call it (through [`BucketBank::offer`]), so
     /// they cannot drift apart.
     ///
-    /// Fused single-pass form: the gain is computed while the updated words
-    /// are staged in `scratch`; the bucket bitmap is written only on admit.
-    /// (Duplicate ids in `ids` count once — the deduplicating semantics the
-    /// old `absorb` already had.)
+    /// `m` is the element's covering set packed once per offer
+    /// ([`OfferMask`]); `staged` is the bank-shared dense staging buffer
+    /// (used only for dense offers). Rejects are write-free; the cheap
+    /// `distinct_bits` bound short-circuits buckets whose threshold the
+    /// whole set cannot clear.
     pub fn try_admit(
         &mut self,
         v: Vertex,
-        ids: &[SampleId],
+        m: &OfferMask,
         k: usize,
-        scratch: &mut AdmitScratch,
+        kern: &Kernels,
+        staged: &mut Vec<u64>,
     ) -> bool {
         if self.seeds.len() >= k {
             return false;
         }
-        scratch.begin();
-        let epoch = scratch.epoch;
-        let mut gain = 0u32;
-        for &id in ids {
-            let wi = (id >> 6) as usize;
-            let bit = 1u64 << (id & 63);
-            let si = if scratch.stamp[wi] == epoch {
-                scratch.pos[wi] as usize
-            } else {
-                scratch.stamp[wi] = epoch;
-                scratch.pos[wi] = scratch.staged.len() as u32;
-                scratch.staged.push((wi as u32, self.covered[wi]));
-                scratch.staged.len() - 1
-            };
-            let w = &mut scratch.staged[si].1;
-            if *w & bit == 0 {
-                *w |= bit;
-                gain += 1;
-            }
+        let threshold = self.opt_guess / (2.0 * k as f64);
+        // |S| bounds any marginal gain; skip the bitmap sweep entirely when
+        // even a fully-novel set could not clear this bucket's bar.
+        if (m.distinct_bits() as f64) < threshold {
+            return false;
         }
-        if gain > 0 && (gain as f64) >= self.opt_guess / (2.0 * k as f64) {
-            for &(wi, w) in &scratch.staged {
-                self.covered[wi as usize] = w;
+        let gain = if m.is_dense() {
+            staged.resize(self.covered.len(), 0);
+            (kern.marginal_and_stage)(m.dense_words(), &self.covered, staged.as_mut_slice()) as u32
+        } else {
+            let (w, mk) = m.sparse();
+            (kern.gather_marginal)(&self.covered, w, mk)
+        };
+        if gain > 0 && (gain as f64) >= threshold {
+            if m.is_dense() {
+                (kern.apply_staged)(&mut self.covered, staged.as_slice());
+            } else {
+                let (w, mk) = m.sparse();
+                for (&wi, &msk) in w.iter().zip(mk) {
+                    self.covered[wi as usize] |= msk;
+                }
             }
             self.covered_count += gain as u64;
             self.seeds.push(v);
@@ -151,12 +129,29 @@ pub struct BucketBank {
     hi: Option<i32>,
     /// (exponent, bucket), ascending by exponent.
     pub buckets: Vec<(i32, Bucket)>,
-    /// Shared staging scratch for the fused admission pass.
-    scratch: AdmitScratch,
+    /// Dispatched kernel backend (captured once at construction).
+    kern: &'static Kernels,
+    /// Per-offer packed covering set, shared by every bucket of the bank.
+    mask: OfferMask,
+    /// Dense staging buffer for [`Bucket::try_admit`] (dense offers only).
+    staged: Vec<u64>,
 }
 
 impl BucketBank {
     pub fn new(theta: usize, k: usize, delta: f64, residue: usize, modulus: usize) -> Self {
+        Self::with_kernels(theta, k, delta, residue, modulus, kernels())
+    }
+
+    /// Like [`BucketBank::new`] but with an explicit kernel backend —
+    /// the hook the scalar-vs-SIMD A/B benches and golden tests use.
+    pub fn with_kernels(
+        theta: usize,
+        k: usize,
+        delta: f64,
+        residue: usize,
+        modulus: usize,
+        kern: &'static Kernels,
+    ) -> Self {
         assert!(delta > 0.0 && delta < 0.5, "delta must be in (0, 1/2)");
         assert!(k >= 1 && modulus >= 1 && residue < modulus);
         let words = theta.div_ceil(64).max(1);
@@ -169,13 +164,21 @@ impl BucketBank {
             l_seen: 0,
             hi: None,
             buckets: Vec::new(),
-            scratch: AdmitScratch::new(words),
+            kern,
+            mask: OfferMask::new(),
+            staged: Vec::new(),
         }
     }
 
+    /// Name of the kernel backend this bank dispatches to.
+    pub fn backend(&self) -> &'static str {
+        self.kern.name
+    }
+
     /// Processes one streamed element: update `l`, materialize any newly
-    /// justified buckets (guesses up to `k·l`), then run the admission rule
-    /// on every owned bucket. Returns the number of admissions.
+    /// justified buckets (guesses up to `k·l`), pack the covering set once,
+    /// then run the admission rule on every owned bucket. Returns the
+    /// number of admissions.
     pub fn offer(&mut self, v: Vertex, ids: &[SampleId]) -> usize {
         let s = ids.len().max(1) as u64;
         if s > self.l_seen {
@@ -199,11 +202,14 @@ impl BucketBank {
             }
             self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
         }
+        self.mask.build(ids, self.words);
         let mut adm = 0;
         let k = self.k;
-        let scratch = &mut self.scratch;
+        let kern = self.kern;
+        let mask = &self.mask;
+        let staged = &mut self.staged;
         for (_, b) in self.buckets.iter_mut() {
-            if b.try_admit(v, ids, k, scratch) {
+            if b.try_admit(v, mask, k, kern, staged) {
                 adm += 1;
             }
         }
@@ -248,6 +254,12 @@ impl StreamingMaxCover {
         Self { bank: BucketBank::new(theta, k, delta, 0, 1), processed: 0, insertions: 0 }
     }
 
+    /// Like [`StreamingMaxCover::new`] with an explicit kernel backend
+    /// (scalar-vs-SIMD A/B benches and the dispatch golden tests).
+    pub fn with_kernels(theta: usize, k: usize, delta: f64, kern: &'static Kernels) -> Self {
+        Self { bank: BucketBank::with_kernels(theta, k, delta, 0, 1, kern), processed: 0, insertions: 0 }
+    }
+
     /// Nominal concurrently-live bucket count `B = ⌈log_{1+δ} k⌉` — the
     /// figure the paper sizes its receiver thread pool with.
     pub fn bucket_count(k: usize, delta: f64) -> usize {
@@ -268,6 +280,11 @@ impl StreamingMaxCover {
     /// Buckets materialized so far (ascending guess).
     pub fn num_buckets(&self) -> usize {
         self.bank.len()
+    }
+
+    /// Name of the kernel backend the underlying bank dispatches to.
+    pub fn backend(&self) -> &'static str {
+        self.bank.backend()
     }
 
     /// Read access for tests/diagnostics.
@@ -403,6 +420,32 @@ mod tests {
         s.offer(0, &[0, 1, 2, 3, 4, 5, 6, 7]);
         let sol = s.finalize();
         assert_eq!(sol.coverage, 8);
+    }
+
+    #[test]
+    fn duplicate_ids_within_an_offer_count_once() {
+        // Dense and sparse packing both collapse duplicates into the mask.
+        let mut s = StreamingMaxCover::new(32, 3, 0.2);
+        s.offer(0, &[0, 0, 1, 1, 2, 2, 2]);
+        assert_eq!(s.finalize().coverage, 3);
+        let mut d = StreamingMaxCover::new(64, 2, 0.2);
+        // 70 ids over a 1-word... (64-bit ids 0..64) universe -> dense path.
+        let ids: Vec<u32> = (0..35).chain(0..35).collect();
+        d.offer(9, &ids);
+        assert_eq!(d.finalize().coverage, 35);
+    }
+
+    #[test]
+    fn unsorted_offers_match_sorted() {
+        let sorted: Vec<u32> = vec![2, 8, 64, 65, 130, 190];
+        let shuffled: Vec<u32> = vec![190, 8, 65, 2, 130, 64];
+        let mut a = StreamingMaxCover::new(256, 3, 0.15);
+        let mut b = StreamingMaxCover::new(256, 3, 0.15);
+        a.offer(0, &sorted);
+        b.offer(0, &shuffled);
+        a.offer(1, &[1, 2, 3]);
+        b.offer(1, &[3, 1, 2]);
+        assert_eq!(a.finalize(), b.finalize());
     }
 
     #[test]

@@ -7,10 +7,17 @@
 //! `(1 − 1/e − ε)`-approximate with O((n/ε)·log(n/ε)) marginal-gain
 //! evaluations — independent of k, which is why it wins for large k.
 
+use super::bitset::MaskedRuns;
 use super::coverage::{BitCover, SetSystemView};
 use super::CoverSolution;
 
 /// Runs threshold greedy with accuracy parameter `eps ∈ (0, 1)`.
+///
+/// The re-evaluation sweep is the solver's hot loop (every surviving
+/// candidate is re-scored once per τ level), so the covering runs are
+/// pre-packed once into [`MaskedRuns`] and each marginal gain is a single
+/// vectorized gather-AND-NOT-popcount over the touched words instead of a
+/// per-id bit probe.
 pub fn threshold_greedy_max_cover(sys: SetSystemView<'_>, k: usize, eps: f64) -> CoverSolution {
     assert!(eps > 0.0 && eps < 1.0);
     let mut covered = BitCover::new(sys.theta);
@@ -20,6 +27,7 @@ pub fn threshold_greedy_max_cover(sys: SetSystemView<'_>, k: usize, eps: f64) ->
     if d == 0.0 {
         return sol;
     }
+    let runs = MaskedRuns::from_view(sys);
     // Sweep until τ < ε·d/n (the tail contributes ≤ ε·OPT in total).
     let floor = eps * d / sys.len().max(1) as f64;
     let mut tau = d;
@@ -28,10 +36,11 @@ pub fn threshold_greedy_max_cover(sys: SetSystemView<'_>, k: usize, eps: f64) ->
             if selected[i] || sol.len() >= k {
                 continue;
             }
-            let gain = covered.count_new(sys.set(i));
+            let (rw, rm) = runs.run(i);
+            let gain = covered.count_new_masked(rw, rm);
             if gain as f64 >= tau && gain > 0 {
                 selected[i] = true;
-                covered.insert_all(sys.set(i));
+                covered.insert_masked(rw, rm);
                 sol.push(sys.vertex(i), gain);
             }
         }

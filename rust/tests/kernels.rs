@@ -1,0 +1,335 @@
+//! Property tests for the vectorized bitmap kernel layer (PR 2): every
+//! compiled backend must agree with the scalar reference on random word
+//! vectors — including tail lengths not a multiple of any vector lane
+//! width and all-zero/all-one words — and streaming admission must produce
+//! identical `CoverSolution`s under scalar and vectorized dispatch.
+//! (The proptest crate is unavailable offline; this follows the same
+//! shrink-free randomized-property methodology as tests/proptests.rs,
+//! with seeds printed on failure.)
+
+use greediris::maxcover::bitset::{self, scalar, Kernels, MaskedRuns, OfferMask};
+use greediris::maxcover::{
+    dense_greedy_max_cover, greedy_max_cover, InvertedIndex, KernelScorer, PackedCovers,
+    SetSystem, StreamingMaxCover,
+};
+use greediris::rng::Xoshiro256pp;
+
+const CASES: u64 = 40;
+
+/// Lengths straddling every lane width in play (AVX2: 4×u64 / 8×u32; wide:
+/// 4×u64 / 8×u32), plus empty and one-past-boundary tails.
+const LENS: [usize; 16] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 11, 15, 16, 17, 31, 32, 33];
+
+fn rand_words(rng: &mut Xoshiro256pp, len: usize) -> Vec<u64> {
+    (0..len).map(|_| rng.next_u64()).collect()
+}
+
+fn backends() -> Vec<&'static Kernels> {
+    bitset::all_available()
+}
+
+#[test]
+fn prop_dense_u64_kernels_agree_with_scalar() {
+    for kern in backends() {
+        for seed in 0..CASES {
+            let mut rng = Xoshiro256pp::seeded(seed);
+            for len in LENS {
+                let a = rand_words(&mut rng, len);
+                let b = rand_words(&mut rng, len);
+                assert_eq!(
+                    (kern.and_not_count)(&a, &b),
+                    scalar::and_not_count(&a, &b),
+                    "{} seed {seed} len {len}",
+                    kern.name
+                );
+                assert_eq!(
+                    (kern.or_count)(&a, &b),
+                    scalar::or_count(&a, &b),
+                    "{} seed {seed} len {len}",
+                    kern.name
+                );
+                let mut s1 = vec![0u64; len];
+                let mut s2 = vec![0u64; len];
+                let g1 = (kern.marginal_and_stage)(&a, &b, &mut s1);
+                let g2 = scalar::marginal_and_stage(&a, &b, &mut s2);
+                assert_eq!(g1, g2, "{} seed {seed} len {len}", kern.name);
+                assert_eq!(s1, s2, "{} seed {seed} len {len}", kern.name);
+                let mut c1 = b.clone();
+                (kern.apply_staged)(&mut c1, &s1);
+                assert_eq!(c1, s2, "{} seed {seed} len {len}", kern.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernels_handle_extreme_words() {
+    for kern in backends() {
+        for len in LENS {
+            let zeros = vec![0u64; len];
+            let ones = vec![u64::MAX; len];
+            assert_eq!((kern.and_not_count)(&ones, &zeros), 64 * len as u64, "{}", kern.name);
+            assert_eq!((kern.and_not_count)(&zeros, &ones), 0, "{}", kern.name);
+            assert_eq!((kern.and_not_count)(&ones, &ones), 0, "{}", kern.name);
+            assert_eq!((kern.or_count)(&ones, &zeros), 64 * len as u64, "{}", kern.name);
+            assert_eq!((kern.or_count)(&zeros, &zeros), 0, "{}", kern.name);
+        }
+    }
+}
+
+#[test]
+fn prop_dense_u32_kernels_agree_with_scalar() {
+    for kern in backends() {
+        for seed in 0..CASES {
+            let mut rng = Xoshiro256pp::seeded(seed + 500);
+            for len in LENS {
+                let a: Vec<u32> = (0..len).map(|_| rng.next_u64() as u32).collect();
+                let b: Vec<u32> = (0..len).map(|_| rng.next_u64() as u32).collect();
+                assert_eq!(
+                    (kern.and_not_count_u32)(&a, &b),
+                    scalar::and_not_count_u32(&a, &b),
+                    "{} seed {seed} len {len}",
+                    kern.name
+                );
+                let mut d1 = b.clone();
+                let mut d2 = b.clone();
+                (kern.or_assign_u32)(&mut d1, &a);
+                scalar::or_assign_u32(&mut d2, &a);
+                assert_eq!(d1, d2, "{} seed {seed} len {len}", kern.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gather_marginal_agrees_with_scalar() {
+    for kern in backends() {
+        for seed in 0..CASES {
+            let mut rng = Xoshiro256pp::seeded(seed + 1000);
+            let words = rand_words(&mut rng, 64);
+            for len in LENS {
+                let idx: Vec<u32> = (0..len).map(|_| rng.gen_range(64) as u32).collect();
+                let masks = rand_words(&mut rng, len);
+                assert_eq!(
+                    (kern.gather_marginal)(&words, &idx, &masks),
+                    scalar::gather_marginal(&words, &idx, &masks),
+                    "{} seed {seed} len {len}",
+                    kern.name
+                );
+            }
+        }
+    }
+}
+
+fn random_sets(rng: &mut Xoshiro256pp, n: usize, theta: usize, max_len: u64) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|_| {
+            let len = 1 + rng.gen_range(max_len) as usize;
+            let mut v: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect()
+}
+
+/// Streaming admission is bit-identical (seeds, gains, coverage) under the
+/// scalar reference and every vectorized backend — the dispatch golden test
+/// pinning the acceptance criterion. Also exercises unsorted and
+/// duplicate-laden offers, which the OfferMask packing must normalize.
+#[test]
+fn prop_streaming_solution_identical_across_backends() {
+    for seed in 0..25u64 {
+        let mut rng = Xoshiro256pp::seeded(seed + 7000);
+        let theta = 64 + rng.gen_range(700) as usize;
+        let k = 1 + rng.gen_range(10) as usize;
+        let delta = 0.08 + 0.1 * (seed as f64 % 3.0) / 3.0;
+        let n = 30 + rng.gen_range(40) as usize;
+        let mut offers: Vec<Vec<u32>> = random_sets(&mut rng, n, theta, 30);
+        // Mutate a third of the offers: shuffle order, inject duplicates.
+        for (i, ids) in offers.iter_mut().enumerate() {
+            match i % 3 {
+                1 => ids.reverse(),
+                2 => {
+                    let dup = ids[0];
+                    ids.push(dup);
+                }
+                _ => {}
+            }
+        }
+        let reference = {
+            let mut s = StreamingMaxCover::with_kernels(theta, k, delta, &bitset::SCALAR);
+            for (i, ids) in offers.iter().enumerate() {
+                s.offer(i as u32, ids);
+            }
+            s.finalize()
+        };
+        for kern in backends() {
+            let mut s = StreamingMaxCover::with_kernels(theta, k, delta, kern);
+            for (i, ids) in offers.iter().enumerate() {
+                s.offer(i as u32, ids);
+            }
+            let got = s.finalize();
+            assert_eq!(got, reference, "backend {} seed {seed}", kern.name);
+        }
+        // And under the process-wide auto dispatch.
+        let mut auto = StreamingMaxCover::new(theta, k, delta);
+        for (i, ids) in offers.iter().enumerate() {
+            auto.offer(i as u32, ids);
+        }
+        assert_eq!(auto.finalize(), reference, "auto dispatch seed {seed}");
+    }
+}
+
+/// Dense-mode offers (|S| ≥ universe words, routed through
+/// marginal_and_stage/apply_staged) agree with sparse-mode packing of the
+/// same sets over a larger universe, and with the scalar reference.
+#[test]
+fn prop_streaming_dense_offers_identical() {
+    for seed in 0..15u64 {
+        let mut rng = Xoshiro256pp::seeded(seed + 8000);
+        let theta = 96; // 2 words -> sets of >= 2 ids can go dense
+        let k = 1 + rng.gen_range(6) as usize;
+        let offers = random_sets(&mut rng, 40, theta, 40);
+        let reference = {
+            let mut s = StreamingMaxCover::with_kernels(theta, k, 0.1, &bitset::SCALAR);
+            for (i, ids) in offers.iter().enumerate() {
+                s.offer(i as u32, ids);
+            }
+            s.finalize()
+        };
+        for kern in backends() {
+            let mut s = StreamingMaxCover::with_kernels(theta, k, 0.1, kern);
+            for (i, ids) in offers.iter().enumerate() {
+                s.offer(i as u32, ids);
+            }
+            assert_eq!(s.finalize(), reference, "backend {} seed {seed}", kern.name);
+        }
+    }
+}
+
+/// The dense CPU scorer picks the same (row, gain) under every backend and
+/// the full greedy solve is bit-identical.
+#[test]
+fn prop_dense_scorer_identical_across_backends() {
+    for seed in 0..20u64 {
+        let mut rng = Xoshiro256pp::seeded(seed + 9000);
+        let theta = 32 + rng.gen_range(400) as usize;
+        let n = 10 + rng.gen_range(60) as usize;
+        let k = 1 + rng.gen_range(12) as usize;
+        let sets = random_sets(&mut rng, n, theta, 25);
+        let sys = SetSystem::from_sets(theta, (0..n as u32).collect(), &sets);
+        let covers = PackedCovers::from_sets(sys.view());
+        let reference = dense_greedy_max_cover(&covers, k, &mut KernelScorer::with_kernels(&bitset::SCALAR));
+        for kern in backends() {
+            let got = dense_greedy_max_cover(&covers, k, &mut KernelScorer::with_kernels(kern));
+            assert_eq!(got, reference, "backend {} seed {seed}", kern.name);
+        }
+        // The dense path still matches the sparse greedy reference.
+        let sparse = greedy_max_cover(sys.view(), k);
+        assert_eq!(reference.seeds, sparse.seeds, "seed {seed}");
+        assert_eq!(reference.coverage, sparse.coverage, "seed {seed}");
+    }
+}
+
+/// OfferMask packing is order/duplicate-invariant and its distinct-bit
+/// count matches a naive dedup.
+#[test]
+fn prop_offer_mask_normalizes() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256pp::seeded(seed + 11_000);
+        let theta = 64 + rng.gen_range(900) as usize;
+        let words = theta.div_ceil(64);
+        let len = 1 + rng.gen_range(60) as usize;
+        let ids: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        let mut deduped = sorted.clone();
+        deduped.dedup();
+        let mut a = OfferMask::new();
+        let mut b = OfferMask::new();
+        let mut c = OfferMask::new();
+        a.build(&ids, words);
+        b.build(&sorted, words);
+        c.build(&deduped, words);
+        assert_eq!(a.distinct_bits(), deduped.len() as u32, "seed {seed}");
+        assert_eq!(a.distinct_bits(), b.distinct_bits(), "seed {seed}");
+        assert_eq!(b.distinct_bits(), c.distinct_bits(), "seed {seed}");
+        if !a.is_dense() && !b.is_dense() {
+            assert_eq!(a.sparse(), b.sparse(), "seed {seed}");
+        }
+    }
+}
+
+/// MaskedRuns gains equal the per-id probe on CSR-invariant (sorted,
+/// dedup'd) runs, for any covered state.
+#[test]
+fn prop_masked_runs_match_per_id_probe() {
+    use greediris::maxcover::BitCover;
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256pp::seeded(seed + 12_000);
+        let theta = 64 + rng.gen_range(500) as usize;
+        let n = 5 + rng.gen_range(30) as usize;
+        let sets = random_sets(&mut rng, n, theta, 20);
+        let sys = SetSystem::from_sets(theta, (0..n as u32).collect(), &sets);
+        let runs = MaskedRuns::from_view(sys.view());
+        let mut covered = BitCover::new(theta);
+        // Cover a random half of the universe.
+        let pre: Vec<u32> = (0..theta as u32).filter(|_| rng.gen_range(2) == 0).collect();
+        covered.insert_all(&pre);
+        for i in 0..n {
+            let (rw, rm) = runs.run(i);
+            assert_eq!(
+                covered.count_new_masked(rw, rm),
+                covered.count_new(sys.set(i)),
+                "seed {seed} row {i}"
+            );
+        }
+    }
+}
+
+/// The counting-sort merge fallback and the k-way run merge produce the
+/// identical accumulated CSR over multi-round random shuffle streams.
+#[test]
+fn prop_counting_merge_identical_to_kway() {
+    for seed in 0..30u64 {
+        let mut rng = Xoshiro256pp::seeded(seed + 13_000);
+        let m = 2 + rng.gen_range(4) as usize; // streams per round
+        let rounds = 1 + rng.gen_range(3) as usize;
+        let nv = 20 + rng.gen_range(80) as u64; // vertex span
+        let mut next_id = 0u32;
+        let mut kway = InvertedIndex::new();
+        let mut counting = InvertedIndex::new();
+        let mut auto = InvertedIndex::new();
+        for _ in 0..rounds {
+            // Wire format per stream: vertex-sorted runs of ascending ids.
+            let streams: Vec<Vec<u32>> = (0..m)
+                .map(|_| {
+                    let mut s = Vec::new();
+                    let mut vs: Vec<u32> =
+                        (0..1 + rng.gen_range(15)).map(|_| rng.gen_range(nv) as u32).collect();
+                    vs.sort_unstable();
+                    vs.dedup();
+                    for v in vs {
+                        let cnt = 1 + rng.gen_range(6) as u32;
+                        s.push(v);
+                        s.push(cnt);
+                        for _ in 0..cnt {
+                            s.push(next_id);
+                            next_id += 1;
+                        }
+                    }
+                    s
+                })
+                .collect();
+            kway.merge_streams_kway(&streams);
+            counting.merge_streams_counting(&streams);
+            auto.merge_streams(&streams);
+        }
+        assert_eq!(kway.vertices, counting.vertices, "seed {seed}");
+        assert_eq!(kway.offsets, counting.offsets, "seed {seed}");
+        assert_eq!(kway.ids, counting.ids, "seed {seed}");
+        assert_eq!(kway.vertices, auto.vertices, "seed {seed}");
+        assert_eq!(kway.ids, auto.ids, "seed {seed}");
+    }
+}
