@@ -7,7 +7,7 @@
 use greediris::coordinator::config::{Algorithm, Config};
 use greediris::coordinator::sampling::{grow_to, invert_batch_to_streams, DistState};
 use greediris::diffusion::DiffusionModel;
-use greediris::distributed::{collectives, Cluster, NetModel};
+use greediris::distributed::{collectives, NetModel, SimTransport};
 use greediris::exp::bench::Bench;
 use greediris::exp::inputs::{analog, build_analog};
 use greediris::maxcover::InvertedIndex;
@@ -58,7 +58,7 @@ fn main() {
 
     for m in [8usize, 64, 256] {
         b.bench(&format!("grow_shuffle_m{m}_theta4096"), || {
-            let mut cl = Cluster::new(m, NetModel::slingshot());
+            let mut cl = SimTransport::new(m, NetModel::slingshot());
             let cfg = Config::new(50, m, DiffusionModel::IC, Algorithm::GreediRis);
             let pool: Vec<usize> = (1..m).collect();
             let mut st = DistState::new(g.n(), m, &pool, 7, 0, true);
@@ -144,7 +144,7 @@ fn main() {
 
     b.bench("alltoallv_m64_1k_elems_per_pair", || {
         let m = 64;
-        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let mut cl = SimTransport::new(m, NetModel::slingshot());
         let outbox: Vec<Vec<Vec<u32>>> = (0..m)
             .map(|_| (0..m).map(|_| vec![7u32; 1000]).collect())
             .collect();
@@ -152,7 +152,7 @@ fn main() {
     });
 
     b.bench("allreduce_m128_n65536", || {
-        let mut cl = Cluster::new(4, NetModel::slingshot());
+        let mut cl = SimTransport::new(4, NetModel::slingshot());
         let parts: Vec<Vec<u32>> = (0..4).map(|i| vec![i as u32; 65_536]).collect();
         collectives::allreduce_sum_u32(&mut cl, &parts).len()
     });

@@ -1,0 +1,114 @@
+//! Transport/wire A/B micro-benchmarks (PR 3):
+//!
+//! 1. `infmax_sim_*` vs `infmax_threads_*` — the same run under the
+//!    sequential cost model and the rank-per-OS-thread engine. Seed sets
+//!    are asserted bit-identical before any timing is recorded; the JSON
+//!    carries both wall-clock medians and (as `*_makespan` extras) the
+//!    modeled makespans.
+//! 2. `wire_encode_raw` vs `wire_encode_varint` (+ `wire_decode_*`) — the
+//!    codec itself, with the measured byte volumes exported as
+//!    `{"group":"transport","name":"wire_*_bytes","bytes":N}` extras.
+//! 3. Pruned vs unpruned shuffle volume — `stream_bytes` with the
+//!    threshold-floor pruning on/off (seeds asserted equal), exported as
+//!    byte extras.
+//!
+//! `scripts/ci.sh` collects every line into `BENCH_PR3.json`.
+
+use greediris::coordinator::sampling::{invert_batch_to_streams, DistState};
+use greediris::coordinator::{run_infmax, Algorithm, Config};
+use greediris::diffusion::DiffusionModel;
+use greediris::distributed::{wire, TransportKind};
+use greediris::exp::bench::Bench;
+use greediris::exp::inputs::{analog, build_analog};
+use greediris::sampling::RrrSampler;
+use std::io::Write;
+
+/// Appends a non-timing measurement (byte counts, makespans) to the same
+/// JSON-lines sink the harness uses.
+fn export_extra(name: &str, field: &str, value: f64) {
+    let Some(path) = std::env::var_os("GREEDIRIS_BENCH_JSON") else { return };
+    let line = format!("{{\"group\":\"transport\",\"name\":\"{name}\",\"{field}\":{value}}}\n");
+    let _ = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| f.write_all(line.as_bytes()));
+    println!("extra {name}: {field} = {value}");
+}
+
+fn main() {
+    let b = Bench::new("transport");
+    let spec = analog("dblp").expect("catalog");
+    let g = build_analog(spec, DiffusionModel::IC, 4);
+
+    // ---- A/B: sim vs threads execution engine (identical seeds). ----
+    let m = 8usize;
+    let cfg_base = Config::new(25, m, DiffusionModel::IC, Algorithm::GreediRis).with_theta(4096);
+    let sim_ref = run_infmax(&g, &cfg_base.clone().with_transport(TransportKind::Sim));
+    let thr_ref = run_infmax(&g, &cfg_base.clone().with_transport(TransportKind::Threads));
+    assert_eq!(
+        sim_ref.seeds, thr_ref.seeds,
+        "transport backends must select identical seeds"
+    );
+    export_extra("infmax_sim_m8_theta4096", "makespan_s", sim_ref.sim_time);
+    export_extra("infmax_threads_m8_theta4096", "makespan_s", thr_ref.sim_time);
+    let sim_stats = b.bench("infmax_sim_m8_theta4096", || {
+        run_infmax(&g, &cfg_base.clone().with_transport(TransportKind::Sim)).coverage
+    });
+    let thr_stats = b.bench("infmax_threads_m8_theta4096", || {
+        run_infmax(&g, &cfg_base.clone().with_transport(TransportKind::Threads)).coverage
+    });
+    println!(
+        "wall-clock threads-vs-sim: {:.2}x (sim {:.3}s vs threads {:.3}s medians)",
+        sim_stats.median / thr_stats.median,
+        sim_stats.median,
+        thr_stats.median,
+    );
+
+    // ---- A/B: raw vs delta-varint wire bytes on a real shuffle round. ----
+    let st = DistState::new(g.n(), 16, &(1..16).collect::<Vec<_>>(), 7, 0, true);
+    let batch = RrrSampler::new(&g, DiffusionModel::IC, 7).batch(0, 4096);
+    let streams = invert_batch_to_streams(&batch, &st.owner, 16);
+    let raw_bytes: u64 = streams.iter().map(|s| wire::encode_stream(s, false).len() as u64).sum();
+    let varint_bytes: u64 =
+        streams.iter().map(|s| wire::encode_stream(s, true).len() as u64).sum();
+    export_extra("wire_raw_bytes", "bytes", raw_bytes as f64);
+    export_extra("wire_varint_bytes", "bytes", varint_bytes as f64);
+    println!(
+        "wire bytes raw {} vs varint {} ({:.2}x smaller)",
+        raw_bytes,
+        varint_bytes,
+        raw_bytes as f64 / varint_bytes as f64
+    );
+    // Lossless round-trip sanity before timing.
+    for s in &streams {
+        assert_eq!(&wire::decode_stream(&wire::encode_stream(s, true)), s);
+        assert_eq!(&wire::decode_stream(&wire::encode_stream(s, false)), s);
+    }
+    b.bench("wire_encode_raw_4k_samples", || {
+        streams.iter().map(|s| wire::encode_stream(s, false).len()).sum::<usize>()
+    });
+    b.bench("wire_encode_varint_4k_samples", || {
+        streams.iter().map(|s| wire::encode_stream(s, true).len()).sum::<usize>()
+    });
+    let enc_raw: Vec<Vec<u8>> = streams.iter().map(|s| wire::encode_stream(s, false)).collect();
+    let enc_var: Vec<Vec<u8>> = streams.iter().map(|s| wire::encode_stream(s, true)).collect();
+    b.bench("wire_decode_raw_4k_samples", || {
+        enc_raw.iter().map(|e| wire::decode_stream(e).len()).sum::<usize>()
+    });
+    b.bench("wire_decode_varint_4k_samples", || {
+        enc_var.iter().map(|e| wire::decode_stream(e).len()).sum::<usize>()
+    });
+
+    // ---- A/B: pruned vs unpruned stream volume (identical seeds). ----
+    let pruned = run_infmax(&g, &cfg_base.clone().with_floor_prune(true));
+    let unpruned = run_infmax(&g, &cfg_base.clone().with_floor_prune(false));
+    assert_eq!(pruned.seeds, unpruned.seeds, "floor pruning must be lossless");
+    export_extra("stream_bytes_pruned", "bytes", pruned.volumes.stream_bytes as f64);
+    export_extra("stream_bytes_unpruned", "bytes", unpruned.volumes.stream_bytes as f64);
+    export_extra("stream_pruned_seeds", "count", pruned.volumes.pruned_seeds as f64);
+    println!(
+        "stream bytes pruned {} vs unpruned {} ({} emissions dropped)",
+        pruned.volumes.stream_bytes, unpruned.volumes.stream_bytes, pruned.volumes.pruned_seeds
+    );
+}

@@ -10,7 +10,7 @@
 
 use super::RankSelectState;
 use crate::coordinator::sampling::DistState;
-use crate::distributed::{collectives, Cluster};
+use crate::distributed::{collectives, Transport, TransportExt};
 use crate::maxcover::CoverSolution;
 use crate::Vertex;
 use std::cmp::Reverse;
@@ -30,19 +30,19 @@ const MASTER: usize = 0;
 
 /// Charges every rank the reduce-to-root cost for an n-sized vector:
 /// modeled wire time plus the real vector-add compute of the tree.
-fn charge_reduce(cluster: &mut Cluster, bytes: u64, scratch: &mut super::ReduceScratch) {
-    let m = cluster.m;
+fn charge_reduce(cluster: &mut dyn Transport, bytes: u64, scratch: &mut super::ReduceScratch) {
+    let m = cluster.m();
     cluster.barrier();
     for r in 0..m {
-        let cost = cluster.net.reduce(m, bytes);
+        let cost = cluster.net().reduce(m, bytes);
         cluster.charge_comm(r, cost);
     }
     super::charge_reduction_compute(cluster, scratch);
 }
 
 /// Runs the DiIMM master–worker selection.
-pub fn diimm_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usize) -> MasterWorkerSelect {
-    let m = cluster.m;
+pub fn diimm_select(cluster: &mut dyn Transport, state: &DistState, n: usize, k: usize) -> MasterWorkerSelect {
+    let m = cluster.m();
     let t0 = cluster.barrier();
 
     let mut global = vec![0u32; n];
@@ -58,7 +58,7 @@ pub fn diimm_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usize
     // Initial reduce-to-root + master heap of (count, vertex).
     let reduce_bytes = (n * 4) as u64;
     let mut scratch = super::ReduceScratch::new(n);
-    charge_reduce(cluster, reduce_bytes, &mut scratch);
+    charge_reduce(&mut *cluster, reduce_bytes, &mut scratch);
     let mut reduction_bytes = reduce_bytes;
     let (mut heap, _) = cluster.run_compute(MASTER, || {
         let mut h: BinaryHeap<(u32, Reverse<u32>)> = BinaryHeap::with_capacity(n / 2);
@@ -94,14 +94,14 @@ pub fn diimm_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usize
         let Some((gain, seed)) = chosen else { break };
 
         // Broadcast the selected seed to all workers.
-        collectives::broadcast_cost(cluster, MASTER, 8);
+        collectives::broadcast_cost(&mut *cluster, MASTER, 8);
         // Workers update local coverage; master accumulates via reduction.
         for (p, r) in ranks.iter_mut().enumerate() {
             let t = Instant::now();
             r.apply_seed(state, p, seed, &mut global);
             cluster.charge_compute(p, t.elapsed().as_secs_f64());
         }
-        charge_reduce(cluster, reduce_bytes, &mut scratch);
+        charge_reduce(&mut *cluster, reduce_bytes, &mut scratch);
         reduction_bytes += reduce_bytes;
         solution.push(seed, gain);
     }
@@ -118,15 +118,15 @@ mod tests {
     use crate::coordinator::config::{Algorithm, Config};
     use crate::coordinator::sampling::grow_to;
     use crate::diffusion::DiffusionModel;
-    use crate::distributed::NetModel;
+    use crate::distributed::{NetModel, SimTransport};
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
     use crate::graph::Graph;
 
-    fn setup(m: usize, theta: u64) -> (Graph, Cluster, DistState, Config) {
+    fn setup(m: usize, theta: u64) -> (Graph, SimTransport, DistState, Config) {
         let edges = generators::barabasi_albert(250, 4, 5);
         let g = Graph::from_edges(250, &edges, WeightModel::UniformIc { max: 0.1 }, 5);
-        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let mut cl = SimTransport::new(m, NetModel::slingshot());
         let cfg = Config::new(6, m, DiffusionModel::IC, Algorithm::DiImm);
         let mut st = DistState::new(g.n(), m, &[0], cfg.seed, 0, false);
         grow_to(&mut cl, &g, &cfg, &mut st, theta);
@@ -166,6 +166,6 @@ mod tests {
     fn master_comm_charged() {
         let (g, mut cl, st, cfg) = setup(8, 300);
         let _ = diimm_select(&mut cl, &st, g.n(), cfg.k);
-        assert!(cl.clocks[MASTER].comm > 0.0);
+        assert!(cl.clock(MASTER).comm > 0.0);
     }
 }

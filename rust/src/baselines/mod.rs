@@ -23,7 +23,7 @@ pub mod ripples;
 pub mod diimm;
 
 use crate::coordinator::sampling::DistState;
-use crate::distributed::Cluster;
+use crate::distributed::Transport;
 use crate::maxcover::{BitCover, InvertedIndex};
 use crate::Vertex;
 use std::time::Instant;
@@ -34,16 +34,16 @@ use std::time::Instant;
 /// really executed once on scratch buffers and its measured time scaled by
 /// the tree depth — this is the k·O(n·log m) term that makes reduction-based
 /// seed selection hurt at scale (paper §2.1).
-pub fn charge_reduction_compute(cluster: &mut Cluster, scratch: &mut ReduceScratch) {
-    let t = Instant::now();
+pub fn charge_reduction_compute(t: &mut dyn Transport, scratch: &mut ReduceScratch) {
+    let t0 = Instant::now();
     for (a, b) in scratch.acc.iter_mut().zip(&scratch.other) {
         *a = a.wrapping_add(*b);
     }
     std::hint::black_box(&scratch.acc);
-    let depth = (cluster.m as f64).log2().ceil().max(1.0);
-    let dt = t.elapsed().as_secs_f64() * depth;
-    for r in 0..cluster.m {
-        cluster.charge_compute(r, dt);
+    let depth = (t.m() as f64).log2().ceil().max(1.0);
+    let dt = t0.elapsed().as_secs_f64() * depth;
+    for r in 0..t.m() {
+        t.charge_compute(r, dt);
     }
 }
 

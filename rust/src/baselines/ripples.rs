@@ -10,7 +10,7 @@
 
 use super::RankSelectState;
 use crate::coordinator::sampling::DistState;
-use crate::distributed::Cluster;
+use crate::distributed::Transport;
 use crate::maxcover::CoverSolution;
 use crate::Vertex;
 use std::time::Instant;
@@ -26,8 +26,8 @@ pub struct ReduceSelect {
 }
 
 /// Runs the k-reduction selection over the locally held samples.
-pub fn ripples_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usize) -> ReduceSelect {
-    let m = cluster.m;
+pub fn ripples_select(cluster: &mut dyn Transport, state: &DistState, n: usize, k: usize) -> ReduceSelect {
+    let m = cluster.m();
     let t0 = cluster.barrier();
 
     // Build per-rank sparse indexes; `global` is the reduced vector.
@@ -51,10 +51,10 @@ pub fn ripples_select(cluster: &mut Cluster, state: &DistState, n: usize, k: usi
         // summed vector itself is maintained incrementally).
         cluster.barrier();
         for r in 0..m {
-            let cost = cluster.net.allreduce(m, reduce_bytes_per_iter);
+            let cost = cluster.net().allreduce(m, reduce_bytes_per_iter);
             cluster.charge_comm(r, cost);
         }
-        super::charge_reduction_compute(cluster, &mut scratch);
+        super::charge_reduction_compute(&mut *cluster, &mut scratch);
         reduction_bytes += reduce_bytes_per_iter;
         // Replicated argmax: every rank scans the reduced vector. Measure
         // once, charge all ranks the same scan time.
@@ -92,16 +92,16 @@ mod tests {
     use crate::coordinator::config::{Algorithm, Config};
     use crate::coordinator::sampling::grow_to;
     use crate::diffusion::DiffusionModel;
-    use crate::distributed::NetModel;
+    use crate::distributed::{NetModel, SimTransport};
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
     use crate::graph::Graph;
     use crate::maxcover::{greedy_max_cover, SetSystem};
 
-    fn setup(m: usize, theta: u64) -> (Graph, Cluster, DistState, Config) {
+    fn setup(m: usize, theta: u64) -> (Graph, SimTransport, DistState, Config) {
         let edges = generators::barabasi_albert(300, 4, 5);
         let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 5);
-        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let mut cl = SimTransport::new(m, NetModel::slingshot());
         let cfg = Config::new(6, m, DiffusionModel::IC, Algorithm::Ripples);
         let mut st = DistState::new(g.n(), m, &[0], cfg.seed, 0, false);
         grow_to(&mut cl, &g, &cfg, &mut st, theta);

@@ -1,7 +1,7 @@
 //! Run configuration and result types for the coordinator.
 
 use crate::diffusion::DiffusionModel;
-use crate::distributed::NetModel;
+use crate::distributed::{NetModel, TransportKind};
 use crate::imm::bounds;
 use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
 use crate::Vertex;
@@ -93,6 +93,22 @@ pub struct Config {
     /// Skip the martingale estimation and use exactly this many samples
     /// (used by benches that sweep m at fixed work).
     pub theta_override: Option<u64>,
+    /// Execution engine: the sequential cost model or rank-per-OS-thread.
+    /// Defaults to [`TransportKind::Sim`]; the `GREEDIRIS_TRANSPORT` env
+    /// var (`sim` | `threads`) overrides the default so `scripts/ci.sh`
+    /// can run the whole test suite under either backend. Seed sets are
+    /// identical across backends for the same config/seed.
+    pub transport: TransportKind,
+    /// Delta-varint-compress the S2/S3 wire payloads (lossless; `false`
+    /// ships raw little-endian words — the A/B baseline).
+    pub wire_compression: bool,
+    /// Sender-side truncation-aware pruning: drop stream runs whose gain
+    /// upper bound cannot clear the receiver's broadcast live-bucket
+    /// threshold floor. Lossless — seed sets are identical either way.
+    pub floor_prune: bool,
+    /// Streaming elements between threshold-floor refreshes under the
+    /// simulated backend (the thread backend publishes live).
+    pub floor_feedback_every: usize,
 }
 
 impl Config {
@@ -112,7 +128,33 @@ impl Config {
             node_threads: 64.0,
             s1_threads: 1,
             theta_override: None,
+            transport: std::env::var("GREEDIRIS_TRANSPORT")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(TransportKind::Sim),
+            wire_compression: true,
+            floor_prune: true,
+            floor_feedback_every: 16,
         }
+    }
+
+    /// Selects the execution engine (see [`Config::transport`]).
+    pub fn with_transport(mut self, kind: TransportKind) -> Self {
+        self.transport = kind;
+        self
+    }
+
+    /// Toggles delta-varint wire compression (lossless either way).
+    pub fn with_wire_compression(mut self, on: bool) -> Self {
+        self.wire_compression = on;
+        self
+    }
+
+    /// Toggles the threshold-floor sender-side pruning (lossless either
+    /// way; affects wire volume only).
+    pub fn with_floor_prune(mut self, on: bool) -> Self {
+        self.floor_prune = on;
+        self
     }
 
     /// Sets the real OS-thread count for S1 generation (bit-identical
@@ -242,6 +284,18 @@ mod tests {
         let tr = cfg(Algorithm::GreediRisTrunc).with_alpha(0.125).worst_case_ratio();
         assert!(rip > gr, "{rip} vs {gr}");
         assert!(gr > tr, "{gr} vs {tr}");
+    }
+
+    #[test]
+    fn transport_and_wire_builders() {
+        let c = cfg(Algorithm::GreediRis)
+            .with_transport(TransportKind::Threads)
+            .with_wire_compression(false)
+            .with_floor_prune(false);
+        assert_eq!(c.transport, TransportKind::Threads);
+        assert!(!c.wire_compression);
+        assert!(!c.floor_prune);
+        assert!(c.floor_feedback_every >= 1);
     }
 
     #[test]

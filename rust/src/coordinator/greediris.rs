@@ -1,25 +1,76 @@
 //! The GreediRIS streaming selection round — S3 (senders) + S4 (receiver),
-//! paper §3.3–3.4 and Fig. 2.
+//! paper §3.3–3.4 and Fig. 2 — executed on either transport backend.
 //!
-//! Execution model: each sender's lazy greedy runs for real and records a
-//! *timestamped emission trace* (seed identified at local time `t`, shipped
-//! immediately via nonblocking send). The receiver consumes the merged
-//! traces in arrival order, paying its measured bucket-insert cost per
-//! element; its clock therefore advances as
-//! `max(arrival, ready) + insert/(bucketing parallelism)` — exactly the
-//! tandem/masking behaviour the paper's streaming design creates. Truncation
-//! (§3.3.2) simply stops shipping after ⌈α·k⌉ seeds while the local solve
-//! continues to all k (needed for the final local-vs-global comparison).
+//! Execution model: each sender's lazy greedy runs for real and emits its
+//! seeds' covering runs over the wire as they are identified. The stream
+//! is consumed in the **canonical order** (emission ordinal, sender rank):
+//! deterministic, timing-independent, and identical across backends — the
+//! receiver's bucket state is therefore a pure function of config + seed,
+//! which is what lets `ThreadTransport` and `SimTransport` produce
+//! bit-equal seed sets (pinned by `tests/transport.rs`). Under similar
+//! sender speeds the canonical order is also what arrival order would be
+//! (everyone's i-th seed lands before anyone's (i+1)-th), so the simulated
+//! clocks still model the paper's tandem/masking behaviour: the receiver
+//! pays `max(arrival, ready) + insert/(bucketing parallelism)` per burst.
+//!
+//! Truncation (§3.3.2) stops shipping after ⌈α·k⌉ seeds while the local
+//! solve continues to all k. On top of it rides the truncation-aware
+//! compressed wire (PR 3): runs are delta-varint encoded
+//! ([`crate::distributed::wire`]), and senders drop runs whose gain upper
+//! bound cannot clear the receiver's broadcast live-bucket threshold floor
+//! ([`crate::maxcover::streaming::prunable`] — lossless, so pruning never
+//! changes the selected seeds, only the wire volume). The simulated
+//! backend refreshes the floor snapshot every
+//! [`Config::floor_feedback_every`] processed elements; the thread backend
+//! publishes it live through a [`FloorBoard`]. A dropped run still ships a
+//! 2–6 byte tombstone so the receiver can keep the canonical order without
+//! waiting on gaps.
 
 use crate::coordinator::config::{Config, LocalSolver};
-use crate::coordinator::receiver::Burst;
+use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard};
 use crate::coordinator::sampling::DistState;
-use crate::distributed::Cluster;
+use crate::distributed::transport::threads::Fabric;
+use crate::distributed::{wire, Transport, TransportExt, TransportKind};
 use crate::maxcover::dense::{dense_greedy_max_cover_stream, PackedCovers};
 use crate::maxcover::lazy::lazy_greedy_stream;
+use crate::maxcover::streaming::prunable;
 use crate::maxcover::{CoverSolution, GainScorer, SetSystemView, StreamingMaxCover};
 use crate::metrics::ReceiverBreakdown;
+use crate::{SampleId, Vertex};
+use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// S3 wire message tags (first payload byte).
+const MSG_RUN: u8 = 1;
+/// Tombstone for a pruned emission: keeps per-sender ordinals dense so the
+/// canonical merge never waits on a gap. Carries the raw byte count the
+/// run would have cost (varint) for the A/B accounting.
+const MSG_PRUNED: u8 = 2;
+/// Sender termination: carries the full local solution (the §3.4 alert).
+const MSG_DONE: u8 = 3;
+
+fn encode_done(sol: &CoverSolution) -> Vec<u8> {
+    let mut msg = vec![MSG_DONE];
+    wire::put_varint(&mut msg, sol.seeds.len() as u64);
+    for &s in &sol.seeds {
+        wire::put_varint(&mut msg, s as u64);
+    }
+    for &g in &sol.gains {
+        wire::put_varint(&mut msg, g as u64);
+    }
+    wire::put_varint(&mut msg, sol.coverage);
+    msg
+}
+
+fn decode_done(bytes: &[u8]) -> CoverSolution {
+    let mut r = wire::Reader::new(bytes);
+    let n = r.varint() as usize;
+    let seeds: Vec<Vertex> = (0..n).map(|_| r.varint() as Vertex).collect();
+    let gains: Vec<u32> = (0..n).map(|_| r.varint() as u32).collect();
+    let coverage = r.varint();
+    CoverSolution { seeds, gains, coverage }
+}
 
 /// One sender's timestamped emission trace. Borrows the rank's accumulated
 /// covering index (a [`SetSystemView`]) — no clone is taken anywhere on the
@@ -45,8 +96,15 @@ pub struct StreamRound {
     pub select_local_time: f64,
     /// Receiver busy+wait span from round start to final answer.
     pub select_global_time: f64,
+    /// Encoded bytes on the S3 wire (runs + tombstones).
     pub stream_bytes: u64,
+    /// Uncompressed-equivalent bytes of every emission (incl. pruned) —
+    /// the compression/pruning A/B denominator.
+    pub stream_raw_bytes: u64,
+    /// Seeds actually shipped (post-truncation, post-pruning).
     pub streamed_seeds: u64,
+    /// Emissions dropped by the threshold-floor rule.
+    pub pruned_seeds: u64,
     pub receiver: ReceiverBreakdown,
     /// Latest sender finish (absolute cluster time).
     pub sender_end_max: f64,
@@ -92,34 +150,44 @@ fn run_sender<'s, 'a, 'b>(
 
 /// Executes one full streaming round over the current `state`.
 /// Preconditions: `state` holds shuffled covering sets for the sender pool;
-/// cluster clocks are positioned after S2.
+/// transport clocks are positioned after S2.
 pub fn streaming_round<'a, 'b>(
-    cluster: &mut Cluster,
+    t: &mut dyn Transport,
     state: &DistState,
     cfg: &Config,
     mut scorer: Option<&'a mut (dyn GainScorer + 'b)>,
 ) -> StreamRound {
-    let m = cluster.m;
+    let m = t.m();
     let k = cfg.k;
     let ship_limit = cfg.trunc_limit();
-    let t0 = cluster.barrier();
+    let t0 = t.barrier();
 
     // ---- m == 1 degenerate case: plain local lazy greedy. ----
     if m == 1 {
         let system = state.system_at(0);
         let (trace, secs) =
-            cluster.run_compute(0, || run_sender(0, system, k, ship_limit, cfg.local_solver, None));
-        let end = cluster.now(0);
+            t.run_compute(0, || run_sender(0, system, k, ship_limit, cfg.local_solver, None));
+        let end = t.now(0);
         return StreamRound {
             solution: trace.solution,
             select_local_time: secs,
             select_global_time: 0.0,
             stream_bytes: 0,
+            stream_raw_bytes: 0,
             streamed_seeds: 0,
+            pruned_seeds: 0,
             receiver: ReceiverBreakdown::default(),
             sender_end_max: end,
             receiver_end: end,
         };
+    }
+
+    // The rank-parallel engine runs sender threads against the live
+    // threaded receiver. The XLA scorer is a single host handle that
+    // cannot be shared across rank threads, so it pins the simulated
+    // engine.
+    if t.kind() == TransportKind::Threads && scorer.is_none() {
+        return threaded_streaming_round(t, state, cfg, t0);
     }
 
     // ---- S3: senders run their local solves, recording emission traces. ----
@@ -131,78 +199,91 @@ pub fn streaming_round<'a, 'b>(
         // timestamps already advance this rank's clock below.
         let scorer_ref = scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b));
         let trace = run_sender(p, system, k, ship_limit, cfg.local_solver, scorer_ref);
-        cluster.charge_compute(p, trace.total);
+        t.charge_compute(p, trace.total);
         traces.push(trace);
     }
 
-    // ---- S4: receiver consumes the merged emission stream. ----
-    // Build the arrival-ordered event list: (arrival_time, trace#, emit#).
-    let mut events: Vec<(f64, usize, usize)> = Vec::new();
-    let mut stream_bytes = 0u64;
+    // ---- S4: receiver consumes the stream in canonical order. ----
+    // (emit ordinal, trace index): ordinal-major so every sender's i-th
+    // seed precedes anyone's (i+1)-th — deterministic and backend-stable.
+    let mut events: Vec<(usize, usize)> = Vec::new();
     for (ti, tr) in traces.iter().enumerate() {
-        for (ei, &(t_rel, idx)) in tr.emits.iter().enumerate() {
-            let bytes = (tr.system.set(idx).len() as u64 + 2) * 4;
-            stream_bytes += bytes;
-            let arrival = t0 + t_rel + cluster.net.p2p(bytes);
-            events.push((arrival, ti, ei));
+        for ei in 0..tr.emits.len() {
+            events.push((ei, ti));
         }
     }
-    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
-    let streamed_seeds = events.len() as u64;
+    events.sort_unstable();
 
+    let compress = cfg.wire_compression;
+    let net = t.net();
     let mut stream = StreamingMaxCover::new(state.theta as usize, k, cfg.delta);
     let bucketing_threads = cfg.threads.saturating_sub(1).max(1);
     let mut recv_clock = t0;
     let mut wait = 0.0f64;
     let mut enqueue_work = 0.0f64;
     let mut bucket_work = 0.0f64;
-    // Consecutive arrivals from the same sender form one burst (sender
-    // traces are bursty by construction): the communicating thread appends
-    // the run into a reusable CSR arena and publishes it once, so the
-    // per-item `Vec` allocation and release fence are amortized across the
-    // run; the bucketing side then feeds the whole burst into the fused
-    // admission sweep, borrowing each covering run out of the arena. The
-    // clock model stays per-item: each element's (amortized, measured)
-    // enqueue cost is charged at its own arrival — the arena only changes
-    // *how much* an append costs, never *when* it is paid.
+    let mut stream_bytes = 0u64;
+    let mut stream_raw_bytes = 0u64;
+    let mut pruned = 0u64;
+    let mut shipped = 0u64;
+    // Sender-visible threshold-floor snapshot, refreshed every
+    // `floor_feedback_every` processed elements (the modeled broadcast).
+    let mut published = (0.0f64, 0u64);
+    let mut since_refresh = 0usize;
+    // One ordinal sweep = one burst: the communicating thread appends each
+    // run into a reusable CSR arena (measured per element) and publishes
+    // once; the bucketing side then feeds the whole burst into the fused
+    // admission sweep ([`StreamingMaxCover::offer_burst`]), which rejects
+    // bursts below the threshold floor without packing an OfferMask.
     let mut burst = Burst::new();
-    let mut enq_costs: Vec<f64> = Vec::new();
     let mut e = 0usize;
     while e < events.len() {
-        let run_ti = events[e].1;
+        let ordinal = events[e].0;
         let mut run_end = e + 1;
-        while run_end < events.len() && events[run_end].1 == run_ti {
+        while run_end < events.len() && events[run_end].0 == ordinal {
             run_end += 1;
         }
-        // Communicating thread: one arena append per element (measured
-        // individually), one publish per run.
         burst.clear();
-        enq_costs.clear();
-        for &(_, ti, ei) in &events[e..run_end] {
+        for &(ei, ti) in &events[e..run_end] {
             let tr = &traces[ti];
-            let idx = tr.emits[ei].1;
-            let tq = Instant::now();
-            burst.push(tr.system.vertex(idx), tr.system.set(idx));
-            enq_costs.push(tq.elapsed().as_secs_f64());
-        }
-        // Bucketing threads: the B buckets process independently; with
-        // t−1 threads each handles ceil(B/(t−1)) buckets (paper S4).
-        for (bi, &(arrival, _, _)) in events[e..run_end].iter().enumerate() {
+            let (t_rel, idx) = tr.emits[ei];
+            let v = tr.system.vertex(idx);
+            let ids = tr.system.set(idx);
+            let raw = (ids.len() as u64 + 2) * 4;
+            stream_raw_bytes += raw;
+            if cfg.floor_prune && prunable(ids.len(), published.1, published.0) {
+                // Dropped at the sender: only the tombstone hits the wire.
+                stream_bytes += 1 + wire::varint_len(raw) as u64;
+                pruned += 1;
+                continue;
+            }
+            let bytes = (1 + wire::encoded_run_len(v, ids, compress)) as u64;
+            stream_bytes += bytes;
+            shipped += 1;
+            let arrival = t0 + t_rel + net.p2p(bytes);
             if arrival > recv_clock {
                 wait += arrival - recv_clock;
                 recv_clock = arrival;
             }
-            let enq = enq_costs[bi];
+            let tq = Instant::now();
+            burst.push(v, ids);
+            let enq = tq.elapsed().as_secs_f64();
             enqueue_work += enq;
             recv_clock += enq;
-            let item = burst.item(bi);
+        }
+        if !burst.is_empty() {
             let tb = Instant::now();
-            stream.offer(item.vertex, item.ids);
+            stream.offer_burst(&burst);
             let dt = tb.elapsed().as_secs_f64();
             let b = stream.num_buckets().max(1);
             let dt_parallel = dt * (b.div_ceil(bucketing_threads) as f64) / b as f64;
             bucket_work += dt_parallel;
             recv_clock += dt_parallel;
+        }
+        since_refresh += run_end - e;
+        if cfg.floor_prune && since_refresh >= cfg.floor_feedback_every {
+            published = (stream.prune_floor(), stream.l_seen());
+            since_refresh = 0;
         }
         e = run_end;
     }
@@ -214,13 +295,13 @@ pub fn streaming_round<'a, 'b>(
         let end = t0 + tr.total;
         // Alert message: k seed ids + coverage.
         let alert_bytes = (tr.solution.seeds.len() as u64 + 2) * 4;
-        let arrive = end + cluster.net.p2p(alert_bytes);
+        let arrive = end + net.p2p(alert_bytes);
         sender_end_max = sender_end_max.max(end);
         if arrive > recv_clock {
             wait += arrive - recv_clock;
             recv_clock = arrive;
         }
-        cluster.wait_until(tr.rank, end);
+        t.wait_until(tr.rank, end);
         if best_local.map(|b| tr.solution.coverage > b.coverage).unwrap_or(true) {
             best_local = Some(&tr.solution);
         }
@@ -232,7 +313,7 @@ pub fn streaming_round<'a, 'b>(
     let solution = if global.coverage >= local.coverage { global } else { local };
     recv_clock += tc.elapsed().as_secs_f64();
 
-    cluster.wait_until(0, recv_clock);
+    t.wait_until(0, recv_clock);
     let receiver_end = recv_clock;
     let select_local_time = traces.iter().map(|t| t.total).fold(0.0, f64::max);
 
@@ -241,12 +322,225 @@ pub fn streaming_round<'a, 'b>(
         select_local_time,
         select_global_time: receiver_end - t0,
         stream_bytes,
-        streamed_seeds,
+        stream_raw_bytes,
+        streamed_seeds: shipped,
+        pruned_seeds: pruned,
         receiver: ReceiverBreakdown {
             comm_thread_wait: wait,
             comm_thread_work: enqueue_work,
             bucket_thread_work: bucket_work,
             bucket_threads: bucketing_threads,
+        },
+        sender_end_max,
+        receiver_end,
+    }
+}
+
+/// What one sender thread reports back after its solve.
+struct SenderOutcome {
+    rank: usize,
+    total: f64,
+}
+
+/// What the canonical stream merger reports back.
+struct MergeOutcome {
+    locals: Vec<(usize, CoverSolution)>,
+    stream_bytes: u64,
+    stream_raw_bytes: u64,
+    pruned: u64,
+    shipped: u64,
+}
+
+/// The rank-parallel round: every sender is an OS thread emitting encoded
+/// runs over the channel fabric; the merger thread restores the canonical
+/// (ordinal, rank) order and feeds bursts to the live threaded receiver
+/// ([`run_threaded_receiver`]), whose bucketing threads publish the
+/// threshold floor the senders prune against. Seed sets are identical to
+/// the simulated engine by construction (same canonical order, lossless
+/// pruning, bit-identical sharded banks).
+fn threaded_streaming_round(
+    t: &mut dyn Transport,
+    state: &DistState,
+    cfg: &Config,
+    t0: f64,
+) -> StreamRound {
+    let m = t.m();
+    let k = cfg.k;
+    let ship_limit = cfg.trunc_limit();
+    let compress = cfg.wire_compression;
+    let prune = cfg.floor_prune;
+    let theta = state.theta as usize;
+    let delta = cfg.delta;
+    // Residue sharding is bit-identical for any modulus (and `best_across`
+    // unifies the winner tie-break), so the *live* receiver caps its
+    // bucketing threads at the host's parallelism — running the paper's 63
+    // bucketing threads on a 2-core box would only starve the senders.
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let bucket_threads = cfg.threads.saturating_sub(1).clamp(1, host.max(1));
+    let board = Arc::new(FloorBoard::new(bucket_threads));
+    let mut endpoints = Fabric::endpoints(m);
+    let mut ep0 = endpoints.remove(0);
+    let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
+
+    let (sols, merge, senders, recv_secs) = std::thread::scope(|scope| {
+        // S4: the live threaded receiver (comm thread + bucketing threads).
+        let board_r = Arc::clone(&board);
+        let threads = bucket_threads + 1;
+        let recv_handle = scope.spawn(move || {
+            let tr = Instant::now();
+            let out = run_threaded_receiver(
+                theta,
+                k,
+                delta,
+                threads,
+                ship_limit.max(1) + 1,
+                rx_burst,
+                Some(board_r),
+            );
+            (out, tr.elapsed().as_secs_f64())
+        });
+
+        // Canonical merger: one sweep per emission ordinal, senders in
+        // ascending rank order — the same order the simulated engine sorts
+        // events into.
+        let merge_handle = scope.spawn(move || {
+            let mut live: Vec<usize> = (1..m).collect();
+            let mut out = MergeOutcome {
+                locals: Vec::new(),
+                stream_bytes: 0,
+                stream_raw_bytes: 0,
+                pruned: 0,
+                shipped: 0,
+            };
+            let mut burst = Burst::new();
+            while !live.is_empty() {
+                burst.clear();
+                let mut still = Vec::with_capacity(live.len());
+                for &p in &live {
+                    let msg = ep0.recv_from(p);
+                    match msg[0] {
+                        MSG_RUN => {
+                            out.stream_bytes += msg.len() as u64;
+                            let (v, ids) = wire::decode_run(&msg[1..]);
+                            out.stream_raw_bytes += (ids.len() as u64 + 2) * 4;
+                            out.shipped += 1;
+                            burst.push(v, &ids);
+                            still.push(p);
+                        }
+                        MSG_PRUNED => {
+                            out.stream_bytes += msg.len() as u64;
+                            out.stream_raw_bytes += wire::Reader::new(&msg[1..]).varint();
+                            out.pruned += 1;
+                            still.push(p);
+                        }
+                        MSG_DONE => {
+                            out.locals.push((p, decode_done(&msg[1..])));
+                        }
+                        other => panic!("unknown S3 message tag {other}"),
+                    }
+                }
+                live = still;
+                if !burst.is_empty() {
+                    if tx_burst.send(std::mem::take(&mut burst)).is_err() {
+                        break;
+                    }
+                }
+            }
+            drop(tx_burst);
+            out
+        });
+
+        // S3: sender threads.
+        let sender_handles: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                let p = i + 1;
+                let system = state.system_at(p);
+                let board_s = Arc::clone(&board);
+                scope.spawn(move || {
+                    let ts = Instant::now();
+                    let emit = |idx: usize| {
+                        let v = system.vertex(idx);
+                        let ids: &[SampleId] = system.set(idx);
+                        if prune {
+                            let (floor, l) = board_s.read();
+                            if prunable(ids.len(), l, floor) {
+                                let mut msg = vec![MSG_PRUNED];
+                                wire::put_varint(&mut msg, (ids.len() as u64 + 2) * 4);
+                                ep.send(0, msg);
+                                return;
+                            }
+                        }
+                        let mut msg = Vec::with_capacity(2 + ids.len());
+                        msg.push(MSG_RUN);
+                        wire::encode_run_into(&mut msg, v, ids, compress);
+                        ep.send(0, msg);
+                    };
+                    let solution = match cfg.local_solver {
+                        LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
+                            if e.order < ship_limit {
+                                emit(e.idx);
+                            }
+                        }),
+                        LocalSolver::DenseCpu | LocalSolver::DenseXla => {
+                            let covers = PackedCovers::from_sets(system);
+                            let mut cpu = crate::maxcover::CpuScorer;
+                            dense_greedy_max_cover_stream(&covers, k, &mut cpu, |order, idx, _g| {
+                                if order < ship_limit {
+                                    emit(idx);
+                                }
+                            })
+                        }
+                    };
+                    ep.send(0, encode_done(&solution));
+                    SenderOutcome { rank: p, total: ts.elapsed().as_secs_f64() }
+                })
+            })
+            .collect();
+
+        let senders: Vec<SenderOutcome> =
+            sender_handles.into_iter().map(|h| h.join().expect("sender thread")).collect();
+        let merge = merge_handle.join().expect("merge thread");
+        let ((best, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
+        (best, merge, senders, recv_secs)
+    });
+
+    // ---- Clock parity: charge measured per-rank work into the model. ----
+    let mut sender_end_max = t0;
+    let mut select_local_time = 0.0f64;
+    for s in &senders {
+        t.charge_compute(s.rank, s.total);
+        sender_end_max = sender_end_max.max(t0 + s.total);
+        select_local_time = select_local_time.max(s.total);
+    }
+    let receiver_end = t0 + recv_secs;
+    t.wait_until(0, receiver_end);
+
+    // Final compare, same rule and same tie-breaks as the simulated engine
+    // (locals scanned in ascending rank order, strict `>` keeps the
+    // earliest).
+    let mut locals = merge.locals;
+    locals.sort_by_key(|(p, _)| *p);
+    let mut best_local = CoverSolution::default();
+    for (_, sol) in &locals {
+        if best_local.is_empty() || sol.coverage > best_local.coverage {
+            best_local = sol.clone();
+        }
+    }
+    let solution = if sols.coverage >= best_local.coverage { sols } else { best_local };
+
+    StreamRound {
+        solution,
+        select_local_time,
+        select_global_time: receiver_end - t0,
+        stream_bytes: merge.stream_bytes,
+        stream_raw_bytes: merge.stream_raw_bytes,
+        streamed_seeds: merge.shipped,
+        pruned_seeds: merge.pruned,
+        receiver: ReceiverBreakdown {
+            bucket_threads,
+            ..ReceiverBreakdown::default()
         },
         sender_end_max,
         receiver_end,
@@ -259,26 +553,37 @@ mod tests {
     use crate::coordinator::config::Algorithm;
     use crate::coordinator::sampling::{grow_to, DistState};
     use crate::diffusion::DiffusionModel;
-    use crate::distributed::NetModel;
+    use crate::distributed::{NetModel, SimTransport, ThreadTransport};
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
     use crate::graph::Graph;
 
-    fn setup(m: usize, theta: u64) -> (Cluster, DistState, Config) {
+    fn setup_with(
+        m: usize,
+        theta: u64,
+        kind: TransportKind,
+    ) -> (Box<dyn Transport>, DistState, Config) {
         let edges = generators::barabasi_albert(400, 4, 3);
         let g = Graph::from_edges(400, &edges, WeightModel::UniformIc { max: 0.1 }, 3);
-        let mut cl = Cluster::new(m, NetModel::slingshot());
-        let cfg = Config::new(8, m, DiffusionModel::IC, Algorithm::GreediRis);
+        let mut t: Box<dyn Transport> = match kind {
+            TransportKind::Sim => Box::new(SimTransport::new(m, NetModel::slingshot())),
+            TransportKind::Threads => Box::new(ThreadTransport::new(m, NetModel::slingshot())),
+        };
+        let cfg = Config::new(8, m, DiffusionModel::IC, Algorithm::GreediRis).with_transport(kind);
         let pool: Vec<usize> = if m == 1 { vec![0] } else { (1..m).collect() };
         let mut st = DistState::new(g.n(), m, &pool, cfg.seed, 0, true);
-        grow_to(&mut cl, &g, &cfg, &mut st, theta);
-        (cl, st, cfg)
+        grow_to(t.as_mut(), &g, &cfg, &mut st, theta);
+        (t, st, cfg)
+    }
+
+    fn setup(m: usize, theta: u64) -> (Box<dyn Transport>, DistState, Config) {
+        setup_with(m, theta, TransportKind::Sim)
     }
 
     #[test]
     fn round_produces_k_seeds() {
         let (mut cl, st, cfg) = setup(4, 256);
-        let r = streaming_round(&mut cl, &st, &cfg, None);
+        let r = streaming_round(cl.as_mut(), &st, &cfg, None);
         assert!(!r.solution.seeds.is_empty());
         assert!(r.solution.seeds.len() <= cfg.k);
         assert!(r.solution.coverage > 0);
@@ -287,7 +592,7 @@ mod tests {
     #[test]
     fn single_rank_degenerates_to_local_greedy() {
         let (mut cl, st, cfg) = setup(1, 128);
-        let r = streaming_round(&mut cl, &st, &cfg, None);
+        let r = streaming_round(cl.as_mut(), &st, &cfg, None);
         let direct = crate::maxcover::lazy_greedy_max_cover(st.system_at(0), cfg.k);
         assert_eq!(r.solution.seeds, direct.seeds);
         assert_eq!(r.streamed_seeds, 0);
@@ -296,21 +601,65 @@ mod tests {
     #[test]
     fn truncation_reduces_stream_volume() {
         let (mut cl, st, cfg) = setup(4, 256);
-        let full = streaming_round(&mut cl, &st, &cfg, None);
+        let full = streaming_round(cl.as_mut(), &st, &cfg, None);
         let (mut cl2, st2, mut cfg2) = setup(4, 256);
         cfg2.algorithm = Algorithm::GreediRisTrunc;
         cfg2.alpha = 0.25;
-        let trunc = streaming_round(&mut cl2, &st2, &cfg2, None);
-        assert!(trunc.streamed_seeds < full.streamed_seeds);
+        let trunc = streaming_round(cl2.as_mut(), &st2, &cfg2, None);
+        assert!(trunc.streamed_seeds + trunc.pruned_seeds < full.streamed_seeds + full.pruned_seeds);
         assert!(trunc.stream_bytes < full.stream_bytes);
         // Quality degrades at most moderately on this easy instance.
         assert!(trunc.solution.coverage as f64 >= 0.5 * full.solution.coverage as f64);
     }
 
     #[test]
+    fn floor_pruning_is_lossless_and_saves_bytes() {
+        let (mut a, st_a, cfg_a) = setup(5, 512);
+        let with_prune = streaming_round(a.as_mut(), &st_a, &cfg_a, None);
+        let (mut b, st_b, cfg_b) = setup(5, 512);
+        let without = streaming_round(b.as_mut(), &st_b, &cfg_b.with_floor_prune(false), None);
+        assert_eq!(with_prune.solution.seeds, without.solution.seeds);
+        assert_eq!(with_prune.solution.coverage, without.solution.coverage);
+        assert_eq!(without.pruned_seeds, 0);
+        assert!(with_prune.stream_bytes <= without.stream_bytes);
+        assert_eq!(
+            with_prune.streamed_seeds + with_prune.pruned_seeds,
+            without.streamed_seeds
+        );
+    }
+
+    #[test]
+    fn wire_compression_shrinks_stream_bytes() {
+        let (mut a, st_a, cfg_a) = setup(4, 512);
+        let packed = streaming_round(a.as_mut(), &st_a, &cfg_a.clone().with_floor_prune(false), None);
+        let (mut b, st_b, cfg_b) = setup(4, 512);
+        let raw = streaming_round(
+            b.as_mut(),
+            &st_b,
+            &cfg_b.with_floor_prune(false).with_wire_compression(false),
+            None,
+        );
+        assert_eq!(packed.solution.seeds, raw.solution.seeds);
+        assert!(packed.stream_bytes < raw.stream_bytes, "{} vs {}", packed.stream_bytes, raw.stream_bytes);
+        assert_eq!(packed.stream_raw_bytes, raw.stream_raw_bytes);
+    }
+
+    #[test]
+    fn threaded_round_matches_sim_round() {
+        for m in [2usize, 4] {
+            let (mut sim, st_sim, cfg_sim) = setup_with(m, 384, TransportKind::Sim);
+            let a = streaming_round(sim.as_mut(), &st_sim, &cfg_sim, None);
+            let (mut thr, st_thr, cfg_thr) = setup_with(m, 384, TransportKind::Threads);
+            let b = streaming_round(thr.as_mut(), &st_thr, &cfg_thr, None);
+            assert_eq!(a.solution.seeds, b.solution.seeds, "m={m}");
+            assert_eq!(a.solution.coverage, b.solution.coverage, "m={m}");
+        }
+    }
+
+    #[test]
     fn global_at_least_best_local_coverage() {
         let (mut cl, st, cfg) = setup(5, 512);
-        let r = streaming_round(&mut cl, &st, &cfg, None);
+        let r = streaming_round(cl.as_mut(), &st, &cfg, None);
         // The output is max(global, best local), so it must be >= any
         // individual sender's local solution.
         for p in 1..5 {
@@ -324,7 +673,7 @@ mod tests {
         // The paper's Fig. 4b finding: the communicating thread is dominated
         // by the nonblocking receive (waiting), showing high availability.
         let (mut cl, st, cfg) = setup(4, 512);
-        let r = streaming_round(&mut cl, &st, &cfg, None);
+        let r = streaming_round(cl.as_mut(), &st, &cfg, None);
         assert!(
             r.receiver.comm_thread_wait > r.receiver.bucket_thread_work,
             "wait {} vs bucket work {}",
@@ -336,10 +685,10 @@ mod tests {
     #[test]
     fn dense_cpu_solver_matches_lazy_coverage() {
         let (mut cl, st, cfg) = setup(3, 256);
-        let lazy = streaming_round(&mut cl, &st, &cfg, None);
+        let lazy = streaming_round(cl.as_mut(), &st, &cfg, None);
         let (mut cl2, st2, cfg2) = setup(3, 256);
         let cfg2 = cfg2.with_local_solver(LocalSolver::DenseCpu);
-        let dense = streaming_round(&mut cl2, &st2, &cfg2, None);
+        let dense = streaming_round(cl2.as_mut(), &st2, &cfg2, None);
         assert_eq!(lazy.solution.coverage, dense.solution.coverage);
     }
 
@@ -347,8 +696,16 @@ mod tests {
     fn clocks_advance() {
         let (mut cl, st, cfg) = setup(4, 256);
         let before = cl.makespan();
-        let r = streaming_round(&mut cl, &st, &cfg, None);
+        let r = streaming_round(cl.as_mut(), &st, &cfg, None);
         assert!(cl.makespan() >= before);
         assert!(r.receiver_end >= r.sender_end_max - 1e-12 || r.streamed_seeds == 0);
+    }
+
+    #[test]
+    fn done_message_roundtrip() {
+        let sol = CoverSolution { seeds: vec![3, 99, 7], gains: vec![40, 12, 5], coverage: 57 };
+        let msg = encode_done(&sol);
+        assert_eq!(msg[0], MSG_DONE);
+        assert_eq!(decode_done(&msg[1..]), sol);
     }
 }

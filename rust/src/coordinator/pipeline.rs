@@ -7,7 +7,7 @@ use crate::coordinator::config::{Algorithm, Config, RunResult};
 use crate::coordinator::greediris::streaming_round;
 use crate::coordinator::randgreedi::offline_round;
 use crate::coordinator::sampling::{grow_to, DistState};
-use crate::distributed::{collectives, Cluster};
+use crate::distributed::{collectives, make_transport, Transport};
 use crate::graph::Graph;
 use crate::imm::math::ImmParams;
 use crate::imm::opim::{OpimBound, OpimParams};
@@ -25,7 +25,9 @@ struct SelectOutcome {
     select_local: f64,
     select_global: f64,
     stream_bytes: u64,
+    stream_raw_bytes: u64,
     streamed_seeds: u64,
+    pruned_seeds: u64,
     reduction_bytes: u64,
     receiver: ReceiverBreakdown,
     sender_end_max: f64,
@@ -33,7 +35,7 @@ struct SelectOutcome {
 }
 
 fn select<'a, 'b>(
-    cluster: &mut Cluster,
+    t: &mut dyn Transport,
     state: &DistState,
     graph: &Graph,
     cfg: &Config,
@@ -41,13 +43,15 @@ fn select<'a, 'b>(
 ) -> SelectOutcome {
     match cfg.algorithm {
         Algorithm::GreediRis | Algorithm::GreediRisTrunc => {
-            let r = streaming_round(cluster, state, cfg, scorer);
+            let r = streaming_round(t, state, cfg, scorer);
             SelectOutcome {
                 solution: r.solution,
                 select_local: r.select_local_time,
                 select_global: (r.receiver_end - r.sender_end_max).max(0.0),
                 stream_bytes: r.stream_bytes,
+                stream_raw_bytes: r.stream_raw_bytes,
                 streamed_seeds: r.streamed_seeds,
+                pruned_seeds: r.pruned_seeds,
                 reduction_bytes: 0,
                 receiver: r.receiver,
                 sender_end_max: r.sender_end_max,
@@ -55,13 +59,15 @@ fn select<'a, 'b>(
             }
         }
         Algorithm::RandGreediOffline => {
-            let r = offline_round(cluster, state, cfg);
+            let r = offline_round(t, state, cfg);
             SelectOutcome {
                 solution: r.solution,
                 select_local: r.local_time,
                 select_global: r.global_time,
                 stream_bytes: r.gather_bytes,
+                stream_raw_bytes: 0,
                 streamed_seeds: 0,
+                pruned_seeds: 0,
                 reduction_bytes: 0,
                 receiver: ReceiverBreakdown::default(),
                 sender_end_max: 0.0,
@@ -69,13 +75,15 @@ fn select<'a, 'b>(
             }
         }
         Algorithm::Ripples => {
-            let r = ripples_select(cluster, state, graph.n(), cfg.k);
+            let r = ripples_select(t, state, graph.n(), cfg.k);
             SelectOutcome {
                 solution: r.solution,
                 select_local: r.build_time,
                 select_global: r.select_time,
                 stream_bytes: 0,
+                stream_raw_bytes: 0,
                 streamed_seeds: 0,
+                pruned_seeds: 0,
                 reduction_bytes: r.reduction_bytes,
                 receiver: ReceiverBreakdown::default(),
                 sender_end_max: 0.0,
@@ -83,13 +91,15 @@ fn select<'a, 'b>(
             }
         }
         Algorithm::DiImm => {
-            let r = diimm_select(cluster, state, graph.n(), cfg.k);
+            let r = diimm_select(t, state, graph.n(), cfg.k);
             SelectOutcome {
                 solution: r.solution,
                 select_local: r.build_time,
                 select_global: r.select_time,
                 stream_bytes: 0,
+                stream_raw_bytes: 0,
                 streamed_seeds: 0,
+                pruned_seeds: 0,
                 reduction_bytes: r.reduction_bytes,
                 receiver: ReceiverBreakdown::default(),
                 sender_end_max: 0.0,
@@ -121,7 +131,8 @@ pub fn run_infmax_with_scorer<'a, 'b>(
     mut scorer: Option<&'a mut (dyn GainScorer + 'b)>,
 ) -> RunResult {
     let wall0 = Instant::now();
-    let mut cluster = Cluster::new(cfg.m, cfg.net).with_compute_scale(1.0);
+    let mut transport = make_transport(cfg.transport, cfg.m, cfg.net);
+    let cluster = transport.as_mut();
     let (pool, do_shuffle) = owner_pool(cfg);
     let mut breakdown = Breakdown::default();
     let mut volumes = CommVolume::default();
@@ -137,18 +148,21 @@ pub fn run_infmax_with_scorer<'a, 'b>(
         loop {
             rounds += 1;
             let target = driver.theta_hat();
-            let gs = grow_to(&mut cluster, graph, cfg, &mut state, target);
+            let gs = grow_to(cluster, graph, cfg, &mut state, target);
             breakdown.sampling += gs.sampling_time;
             breakdown.alltoall += gs.alltoall_time;
             volumes.alltoall_bytes += gs.alltoall_bytes;
-            let out = select(&mut cluster, &state, graph, cfg, scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)));
+            volumes.alltoall_raw_bytes += gs.alltoall_raw_bytes;
+            let out = select(cluster, &state, graph, cfg, scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)));
             breakdown.select_local += out.select_local;
             breakdown.select_global += out.select_global;
             volumes.stream_bytes += out.stream_bytes;
+            volumes.stream_raw_bytes += out.stream_raw_bytes;
             volumes.reduction_bytes += out.reduction_bytes;
             volumes.streamed_seeds += out.streamed_seeds;
+            volumes.pruned_seeds += out.pruned_seeds;
             // Broadcast of the round's utility (Alg. 4 epilogue).
-            collectives::broadcast_cost(&mut cluster, 0, 8);
+            collectives::broadcast_cost(cluster, 0, 8);
             volumes.broadcast_bytes += 8;
             match driver.report(out.solution.coverage) {
                 RoundDecision::Continue { .. } => continue,
@@ -159,18 +173,21 @@ pub fn run_infmax_with_scorer<'a, 'b>(
 
     // ---- Final phase: fresh samples, final selection. ----
     let mut state = DistState::new(graph.n(), cfg.m, &pool, cfg.seed, FINAL_PHASE_BASE, do_shuffle);
-    let gs = grow_to(&mut cluster, graph, cfg, &mut state, theta);
+    let gs = grow_to(cluster, graph, cfg, &mut state, theta);
     breakdown.sampling += gs.sampling_time;
     breakdown.alltoall += gs.alltoall_time;
     volumes.alltoall_bytes += gs.alltoall_bytes;
+    volumes.alltoall_raw_bytes += gs.alltoall_raw_bytes;
     let t_before_final = cluster.makespan();
-    let out = select(&mut cluster, &state, graph, cfg, scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)));
+    let out = select(cluster, &state, graph, cfg, scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)));
     breakdown.select_local += out.select_local;
     breakdown.select_global += out.select_global;
     volumes.stream_bytes += out.stream_bytes;
+    volumes.stream_raw_bytes += out.stream_raw_bytes;
     volumes.reduction_bytes += out.reduction_bytes;
     volumes.streamed_seeds += out.streamed_seeds;
-    collectives::broadcast_cost(&mut cluster, 0, (cfg.k as u64 + 1) * 4);
+    volumes.pruned_seeds += out.pruned_seeds;
+    collectives::broadcast_cost(cluster, 0, (cfg.k as u64 + 1) * 4);
     volumes.broadcast_bytes += (cfg.k as u64 + 1) * 4;
     breakdown.coordination = (cluster.makespan() - breakdown.total()).max(0.0);
 
@@ -221,7 +238,8 @@ pub fn run_opim(
     theta_max: u64,
     target_guarantee: f64,
 ) -> OpimResult {
-    let mut cluster = Cluster::new(cfg.m, cfg.net);
+    let mut transport = make_transport(cfg.transport, cfg.m, cfg.net);
+    let cluster = transport.as_mut();
     let (pool, do_shuffle) = owner_pool(cfg);
     // R1 and R2 live in disjoint id spaces.
     let mut r1 = DistState::new(graph.n(), cfg.m, &pool, cfg.seed, 0, do_shuffle);
@@ -241,10 +259,10 @@ pub fn run_opim(
     let mut last: Option<(CoverSolution, OpimBound)> = None;
     loop {
         rounds += 1;
-        grow_to(&mut cluster, graph, cfg, &mut r1, theta);
-        grow_to(&mut cluster, graph, cfg, &mut r2, theta);
+        grow_to(cluster, graph, cfg, &mut r1, theta);
+        grow_to(cluster, graph, cfg, &mut r2, theta);
         let t0 = cluster.makespan();
-        let out = select(&mut cluster, &r1, graph, cfg, None);
+        let out = select(cluster, &r1, graph, cfg, None);
         seed_select_time += cluster.makespan() - t0;
         // Validate on R2: coverage of the chosen seeds over the R2 samples.
         let batches: Vec<_> = r2.local_batches.iter().flatten().collect();
@@ -343,7 +361,12 @@ mod tests {
         let edges = crate::graph::generators::rmat(15, 150_000, (0.57, 0.19, 0.19, 0.05), 7);
         let g = Graph::from_edges(1 << 15, &edges, crate::graph::weights::WeightModel::UniformIc { max: 0.05 }, 7);
         let mk = |algo| {
-            let mut c = base_cfg(algo).with_theta(2048);
+            // Pinned to the cost-model engine: this asserts a *modeled*
+            // phenomenon at m = 256, which real 256-thread execution on a
+            // small CI host would only add noise to.
+            let mut c = base_cfg(algo)
+                .with_theta(2048)
+                .with_transport(crate::distributed::TransportKind::Sim);
             c.m = 256;
             c.k = 50;
             run_infmax(&g, &c).sim_time

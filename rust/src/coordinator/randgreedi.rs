@@ -7,7 +7,7 @@
 
 use crate::coordinator::config::Config;
 use crate::coordinator::sampling::DistState;
-use crate::distributed::{collectives, Cluster};
+use crate::distributed::{collectives, Transport, TransportExt};
 use crate::maxcover::{lazy_greedy_max_cover, CoverSolution, SetSystem};
 
 /// Outcome of one offline RandGreedi round, with the Table-2 timings.
@@ -23,8 +23,8 @@ pub struct OfflineRound {
 /// Runs Algorithm 4 over the current shuffled state. Every rank (including
 /// rank 0) owns a partition and computes a local solution; rank 0 is the
 /// global machine.
-pub fn offline_round(cluster: &mut Cluster, state: &DistState, cfg: &Config) -> OfflineRound {
-    let m = cluster.m;
+pub fn offline_round(cluster: &mut dyn Transport, state: &DistState, cfg: &Config) -> OfflineRound {
+    let m = cluster.m();
     let k = cfg.k;
     let t0 = cluster.barrier();
 
@@ -60,7 +60,7 @@ pub fn offline_round(cluster: &mut Cluster, state: &DistState, cfg: &Config) -> 
         .map(|(_, b)| b.len() as u64 * 4)
         .sum();
     let t_gather_start = cluster.makespan();
-    let gathered = collectives::gather_at(cluster, 0, payloads, 4);
+    let gathered = collectives::gather_at(&mut *cluster, 0, payloads, 4);
 
     // Global lazy greedy over the merged candidates (line 4).
     let (global_sol, global_solve_secs) = cluster.run_compute(0, || {
@@ -82,7 +82,7 @@ pub fn offline_round(cluster: &mut Cluster, state: &DistState, cfg: &Config) -> 
     // Final compare: best local vs global (lines 5-6), then broadcast.
     let best_local = locals.into_iter().max_by_key(|s| s.coverage).unwrap_or_default();
     let solution = if global_sol.coverage >= best_local.coverage { global_sol } else { best_local };
-    collectives::broadcast_cost(cluster, 0, (cfg.k as u64 + 1) * 4);
+    collectives::broadcast_cost(&mut *cluster, 0, (cfg.k as u64 + 1) * 4);
     let _ = t0;
 
     OfflineRound { solution, local_time, global_time, gather_bytes }
@@ -94,15 +94,15 @@ mod tests {
     use crate::coordinator::config::Algorithm;
     use crate::coordinator::sampling::grow_to;
     use crate::diffusion::DiffusionModel;
-    use crate::distributed::NetModel;
+    use crate::distributed::{NetModel, SimTransport};
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
     use crate::graph::Graph;
 
-    fn setup(m: usize, theta: u64) -> (Cluster, DistState, Config) {
+    fn setup(m: usize, theta: u64) -> (SimTransport, DistState, Config) {
         let edges = generators::barabasi_albert(300, 4, 3);
         let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 3);
-        let mut cl = Cluster::new(m, NetModel::slingshot());
+        let mut cl = SimTransport::new(m, NetModel::slingshot());
         let cfg = Config::new(6, m, DiffusionModel::IC, Algorithm::RandGreediOffline);
         let pool: Vec<usize> = (0..m).collect();
         let mut st = DistState::new(g.n(), m, &pool, cfg.seed, 0, true);

@@ -1,121 +1,52 @@
 //! The real threaded, lock-free streaming receiver (paper §3.4 S4).
 //!
 //! Structure mirrors the paper exactly: one *communicating thread* drains
-//! the incoming seed stream (here an mpsc channel standing in for the MPI
-//! nonblocking receive) and publishes arrivals into a shared append-only
-//! slot array `A`, setting a per-slot flag atomically (a `OnceLock`
-//! publish). Each *bucketing thread* owns the buckets whose exponent falls
-//! in its residue class mod `t−1` and scans the slot array with its own
-//! cursor, spinning until the next flag is set — a lock-free single-writer
-//! multi-reader protocol; bucket updates need no synchronization because
-//! bucket ownership is disjoint, and every thread sees the identical
-//! element order, so the union of the threads' buckets is bit-identical to
-//! the sequential [`StreamingMaxCover`] (asserted by tests).
+//! the incoming seed stream (an mpsc channel standing in for the MPI
+//! nonblocking receive — under the thread transport it is fed live from
+//! the wire by the canonical stream merger in
+//! [`crate::coordinator::greediris`]) and publishes arrivals into a shared
+//! append-only slot array `A`, setting a per-slot flag atomically (a
+//! `OnceLock` publish). Each *bucketing thread* owns the buckets whose
+//! exponent falls in its residue class mod `t−1` and scans the slot array
+//! with its own cursor, spinning until the next flag is set — a lock-free
+//! single-writer multi-reader protocol; bucket updates need no
+//! synchronization because bucket ownership is disjoint, and every thread
+//! sees the identical element order, so the union of the threads' buckets
+//! is bit-identical to the sequential
+//! [`StreamingMaxCover`](crate::maxcover::StreamingMaxCover) (asserted by
+//! tests; the cross-bank winner is picked through
+//! [`crate::maxcover::streaming::best_across`], the same tie-break the
+//! sequential bank uses).
 //!
-//! ## Burst publishing (PR 2)
+//! ## Burst publishing (PR 2) and fused admission (PR 3)
 //!
-//! Sender traces arrive bursty (a sender's lazy greedy emits runs of seeds
-//! back-to-back), so the unit of publication is a [`Burst`]: a CSR arena of
-//! `<x, S(x)>` elements. A [`StreamItem`] no longer owns a per-item
-//! `Vec<u32>` — it *borrows* its covering run out of the burst's arena —
-//! and the slot array releases **one** flag per burst instead of one per
-//! element, amortizing both the release fence and the allocation across
-//! the run. Bucketing threads feed whole bursts into the fused admission
-//! sweep ([`crate::maxcover::streaming::BucketBank::offer`], which packs
-//! each element once into an `OfferMask` shared by all of its buckets).
+//! The unit of publication is a [`Burst`]: a CSR arena of `<x, S(x)>`
+//! elements whose [`StreamItem`]s borrow their covering runs from the
+//! arena; the slot array releases **one** flag per burst, amortizing the
+//! release fence and allocation across the run. Bucketing threads feed
+//! whole bursts into [`BucketBank::offer_burst`], which pre-filters the
+//! burst against the live threshold floor before packing any `OfferMask` —
+//! a rejected burst never touches a bucket.
+//!
+//! ## Threshold-floor feedback (PR 3)
+//!
+//! When a [`FloorBoard`] is supplied, every bucketing thread publishes its
+//! bank's `(prune_floor, l_seen)` after each burst. Senders read the
+//! board's conservative minimum to drop runs *before* they are shipped
+//! (the truncation-aware compressed shuffle); staleness is safe because
+//! both quantities are monotone (see [`crate::maxcover::streaming`]).
 //!
 //! This module proves the concurrency design executes correctly; the
 //! performance *model* of the receiver lives in
 //! [`crate::coordinator::greediris`] (DESIGN.md §3 explains why timing is
 //! simulated rather than measured on this 1-core host).
 
-use crate::maxcover::streaming::BucketBank;
+use crate::maxcover::streaming::{best_across, BucketBank};
 use crate::maxcover::CoverSolution;
-use crate::{SampleId, Vertex};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, OnceLock};
 
-/// One stream element, borrowing its covering run from the publishing
-/// [`Burst`]'s arena.
-#[derive(Clone, Copy, Debug)]
-pub struct StreamItem<'a> {
-    pub vertex: Vertex,
-    pub ids: &'a [SampleId],
-}
-
-/// A burst of stream elements in CSR form — the per-sender arena the
-/// receiver's items borrow from. Senders append with [`Burst::push`]
-/// (one contiguous arena per burst, no per-item allocation) and publish
-/// the whole burst at once.
-#[derive(Clone, Debug)]
-pub struct Burst {
-    vertices: Vec<Vertex>,
-    offsets: Vec<u32>,
-    ids: Vec<SampleId>,
-}
-
-impl Default for Burst {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Burst {
-    pub fn new() -> Self {
-        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new() }
-    }
-
-    /// A single-element burst (convenience for tests and item-at-a-time
-    /// call sites).
-    pub fn from_item(vertex: Vertex, ids: &[SampleId]) -> Self {
-        let mut b = Self::new();
-        b.push(vertex, ids);
-        b
-    }
-
-    /// Appends one `<x, S(x)>` element to the arena.
-    pub fn push(&mut self, vertex: Vertex, ids: &[SampleId]) {
-        self.vertices.push(vertex);
-        self.ids.extend_from_slice(ids);
-        self.offsets.push(self.ids.len() as u32);
-    }
-
-    /// Resets the burst for reuse without freeing the arena.
-    pub fn clear(&mut self) {
-        self.vertices.clear();
-        self.ids.clear();
-        self.offsets.clear();
-        self.offsets.push(0);
-    }
-
-    /// Number of elements in the burst.
-    pub fn len(&self) -> usize {
-        self.vertices.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.vertices.is_empty()
-    }
-
-    /// Total covering entries across the burst.
-    pub fn total_entries(&self) -> usize {
-        self.ids.len()
-    }
-
-    /// The `i`-th element, borrowing its run from the arena.
-    #[inline]
-    pub fn item(&self, i: usize) -> StreamItem<'_> {
-        StreamItem {
-            vertex: self.vertices[i],
-            ids: &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize],
-        }
-    }
-
-    /// Iterates the elements in publication order.
-    pub fn iter(&self) -> impl Iterator<Item = StreamItem<'_>> + '_ {
-        (0..self.len()).map(move |i| self.item(i))
-    }
-}
+pub use crate::maxcover::streaming::{Burst, StreamItem};
 
 /// Shared slot array `A` (paper: "the receiver maintains a shared array A of
 /// maximum size m·k" with atomic per-index flags). One slot holds one
@@ -165,8 +96,50 @@ impl SlotArray {
             {
                 return None;
             }
+            // Spin, but give the scheduler a chance: on hosts with fewer
+            // cores than bucketing threads a pure spin starves the
+            // communicating thread (and, under the thread transport, the
+            // senders feeding it).
             std::hint::spin_loop();
+            std::thread::yield_now();
         }
+    }
+}
+
+/// Live `(threshold floor, l_seen)` published by each bucketing thread and
+/// read by senders for the truncation-aware pruning. Reads take the
+/// minimum across banks, which is a *lower bound* on the true global floor
+/// regardless of how far individual banks have progressed — exactly the
+/// staleness the lossless drop rule tolerates.
+pub struct FloorBoard {
+    /// Per-bank `(floor bits, l_seen)`.
+    slots: Vec<(AtomicU64, AtomicU64)>,
+}
+
+impl FloorBoard {
+    pub fn new(banks: usize) -> Self {
+        Self {
+            slots: (0..banks.max(1))
+                .map(|_| (AtomicU64::new(0f64.to_bits()), AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    /// Publishes bank `j`'s current floor and `l_seen` (relaxed; monotone).
+    pub fn publish(&self, j: usize, floor: f64, l_seen: u64) {
+        self.slots[j].0.store(floor.to_bits(), Ordering::Relaxed);
+        self.slots[j].1.store(l_seen, Ordering::Relaxed);
+    }
+
+    /// Conservative `(floor, l_seen)`: the minimum across all banks.
+    pub fn read(&self) -> (f64, u64) {
+        let mut floor = f64::INFINITY;
+        let mut l = u64::MAX;
+        for (f, lv) in &self.slots {
+            floor = floor.min(f64::from_bits(f.load(Ordering::Relaxed)));
+            l = l.min(lv.load(Ordering::Relaxed));
+        }
+        (floor, l)
     }
 }
 
@@ -183,7 +156,9 @@ pub struct ThreadedStats {
 
 /// Runs the full threaded receiver over the `rx` burst stream with `t`
 /// threads (1 communicating + `t−1` bucketing), `capacity` = slot bound
-/// (bursts). Returns the best-bucket solution and stats.
+/// (bursts). When `board` is supplied, bucketing threads publish their
+/// bank's threshold floor after every burst (sender-side pruning feedback).
+/// Returns the best-bucket solution and stats.
 pub fn run_threaded_receiver(
     theta: usize,
     k: usize,
@@ -191,6 +166,7 @@ pub fn run_threaded_receiver(
     t: usize,
     capacity: usize,
     rx: mpsc::Receiver<Burst>,
+    board: Option<Arc<FloorBoard>>,
 ) -> (CoverSolution, ThreadedStats) {
     let bucket_threads = t.saturating_sub(1).max(1);
     let slots = Arc::new(SlotArray::new(capacity));
@@ -217,13 +193,15 @@ pub fn run_threaded_receiver(
         let mut handles = Vec::new();
         for j in 0..bucket_threads {
             let slots_r = Arc::clone(&slots);
+            let board_j = board.clone();
             handles.push(scope.spawn(move || {
                 let mut bank = BucketBank::new(theta, k, delta, j, bucket_threads);
                 let mut cursor = 0usize;
                 while let Some(burst) = slots_r.wait_for(cursor) {
                     cursor += 1;
-                    for item in burst.iter() {
-                        bank.offer(item.vertex, item.ids);
+                    bank.offer_burst(burst);
+                    if let Some(b) = &board_j {
+                        b.publish(j, bank.prune_floor(), bank.l_seen());
                     }
                 }
                 bank
@@ -231,16 +209,10 @@ pub fn run_threaded_receiver(
         }
 
         let (elements, bursts) = comm.join().expect("comm thread");
-        let mut best = CoverSolution::default();
-        let mut buckets = 0usize;
-        for h in handles {
-            let bank = h.join().expect("bucket thread");
-            buckets += bank.len();
-            let sol = bank.best();
-            if sol.coverage > best.coverage || best.is_empty() {
-                best = sol;
-            }
-        }
+        let banks: Vec<BucketBank> =
+            handles.into_iter().map(|h| h.join().expect("bucket thread")).collect();
+        let buckets = banks.iter().map(|b| b.len()).sum();
+        let best = best_across(banks.iter().flat_map(|b| b.buckets.iter()));
         (best, ThreadedStats { elements, bursts, buckets, bucket_threads })
     })
 }
@@ -301,7 +273,7 @@ mod tests {
                     tx.send(b).unwrap();
                 }
             });
-            let (got, stats) = run_threaded_receiver(theta, k, delta, 4, 200, rx);
+            let (got, stats) = run_threaded_receiver(theta, k, delta, 4, 200, rx, None);
             h.join().unwrap();
             assert_eq!(got.coverage, expected.coverage, "seed {seed}");
             assert_eq!(got.seeds, expected.seeds, "seed {seed}");
@@ -329,7 +301,7 @@ mod tests {
                 tx.send(b).unwrap();
             }
             drop(tx);
-            run_threaded_receiver(theta, 5, 0.15, 4, 128, rx)
+            run_threaded_receiver(theta, 5, 0.15, 4, 128, rx, None)
         };
         let (a, sa) = run(coarse);
         let (b, sb) = run(fine);
@@ -349,7 +321,7 @@ mod tests {
             tx.send(b).unwrap();
         }
         drop(tx);
-        let (got, _) = run_threaded_receiver(theta, 4, 0.2, 2, 64, rx);
+        let (got, _) = run_threaded_receiver(theta, 4, 0.2, 2, 64, rx, None);
         assert_eq!(got.coverage, expected.coverage);
     }
 
@@ -363,7 +335,7 @@ mod tests {
             tx.send(b).unwrap();
         }
         drop(tx);
-        let (got, stats) = run_threaded_receiver(theta, 3, 0.3, 64, 64, rx);
+        let (got, stats) = run_threaded_receiver(theta, 3, 0.3, 64, 64, rx, None);
         assert_eq!(got.coverage, expected.coverage);
         assert!(stats.bucket_threads >= stats.buckets);
     }
@@ -372,27 +344,42 @@ mod tests {
     fn empty_stream_yields_empty_solution() {
         let (tx, rx) = mpsc::channel::<Burst>();
         drop(tx);
-        let (got, stats) = run_threaded_receiver(64, 4, 0.1, 4, 16, rx);
+        let (got, stats) = run_threaded_receiver(64, 4, 0.1, 4, 16, rx, None);
         assert!(got.is_empty());
         assert_eq!(stats.elements, 0);
         assert_eq!(stats.bursts, 0);
     }
 
     #[test]
-    fn burst_arena_borrows() {
-        let mut b = Burst::new();
-        b.push(7, &[0, 1, 2]);
-        b.push(9, &[3]);
-        b.push(4, &[]);
-        assert_eq!(b.len(), 3);
-        assert_eq!(b.total_entries(), 4);
-        assert_eq!(b.item(0).vertex, 7);
-        assert_eq!(b.item(0).ids, &[0, 1, 2]);
-        assert_eq!(b.item(1).ids, &[3]);
-        assert_eq!(b.item(2).ids, &[] as &[u32]);
-        b.clear();
-        assert!(b.is_empty());
-        assert_eq!(b.total_entries(), 0);
+    fn floor_board_publishes_and_reads_min() {
+        let b = FloorBoard::new(3);
+        assert_eq!(b.read(), (0.0, 0));
+        b.publish(0, 4.0, 10);
+        b.publish(1, 2.5, 12);
+        // Bank 2 never published: min stays at its zeros.
+        assert_eq!(b.read(), (0.0, 0));
+        b.publish(2, 9.0, 30);
+        assert_eq!(b.read(), (2.5, 10));
+    }
+
+    #[test]
+    fn receiver_publishes_floor_feedback() {
+        let theta = 256;
+        let bursts = random_bursts(7, 50, theta, 5);
+        let expected = run_sequential(&bursts, theta, 5, 0.15);
+        let board = Arc::new(FloorBoard::new(3));
+        let (tx, rx) = mpsc::channel();
+        for b in bursts {
+            tx.send(b).unwrap();
+        }
+        drop(tx);
+        let (got, _) =
+            run_threaded_receiver(theta, 5, 0.15, 4, 64, rx, Some(Arc::clone(&board)));
+        assert_eq!(got.coverage, expected.coverage);
+        assert_eq!(got.seeds, expected.seeds);
+        let (floor, l) = board.read();
+        assert!(floor > 0.0, "floor must be live after a non-empty stream");
+        assert!(l >= 1);
     }
 
     #[test]

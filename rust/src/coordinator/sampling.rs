@@ -13,14 +13,25 @@
 //! partition followed by a flat `(vertex, id)` sort (no hashing), and the
 //! receiver-side merge appends vertex-sorted streams into the accumulated
 //! [`InvertedIndex`] sequentially.
+//!
+//! Execution is transport-generic (PR 3): under the simulated backend the
+//! ranks run sequentially with modeled clocks; under the thread backend
+//! every rank is an OS thread that inverts, encodes, and exchanges its wire
+//! payloads over real channels ([`Fabric`]). Either way the S2 wire carries
+//! [`wire`]-encoded bytes (delta-varint by default, raw for the A/B
+//! baseline) and the receiving merge consumes streams in ascending
+//! source-rank order, so the accumulated CSR is byte-for-byte identical
+//! across backends and wire formats.
 
 use crate::coordinator::config::Config;
-use crate::distributed::{collectives, Cluster};
+use crate::distributed::transport::threads::Fabric;
+use crate::distributed::{collectives, wire, Transport, TransportExt, TransportKind};
 use crate::maxcover::{InvertedIndex, SetSystemView};
 use crate::rng::{domains, stream_for};
 use crate::sampling::{batch_parallel, SampleBatch};
 use crate::graph::Graph;
 use crate::{SampleId, Vertex};
+use std::time::Instant;
 
 /// Distributed sampling/shuffle state, persisted across martingale rounds.
 pub struct DistState {
@@ -50,7 +61,11 @@ pub struct DistState {
 pub struct GrowStats {
     pub sampling_time: f64,
     pub alltoall_time: f64,
+    /// Bytes on the S2 wire (encoded; excludes self-destined payloads).
     pub alltoall_bytes: u64,
+    /// Raw (uncompressed-equivalent) bytes of the same payloads — the
+    /// compression A/B denominator.
+    pub alltoall_raw_bytes: u64,
 }
 
 impl DistState {
@@ -163,76 +178,228 @@ pub fn invert_batch_to_streams(batch: &SampleBatch, owner: &[u32], m: usize) -> 
     out
 }
 
+/// Per-(src,dst) id-range of the new samples each rank generates.
+fn rank_ranges(m: usize, from: u64, to: u64) -> Vec<(SampleId, usize)> {
+    let per_rank = (to - from).div_ceil(m as u64);
+    (0..m)
+        .map(|p| {
+            let lo = from + (p as u64) * per_rank;
+            let hi = (lo + per_rank).min(to);
+            (lo as SampleId, hi.saturating_sub(lo) as usize)
+        })
+        .collect()
+}
+
+/// Adds encoded/raw byte volumes of one rank's outbox (self pair excluded
+/// from the off-node counters, like the historical accounting).
+fn wire_volumes(
+    src: usize,
+    streams: &[Vec<u32>],
+    payloads: &[Vec<u8>],
+) -> (u64 /*encoded off-node*/, u64 /*raw off-node*/) {
+    let mut enc = 0u64;
+    let mut raw = 0u64;
+    for (dst, (s, p)) in streams.iter().zip(payloads).enumerate() {
+        if dst != src {
+            enc += p.len() as u64;
+            raw += s.len() as u64 * 4;
+        }
+    }
+    (enc, raw)
+}
+
+/// One rank's measured outcome of the threaded grow round.
+struct RankGrow {
+    batch: SampleBatch,
+    s1_secs: f64,
+    invert_secs: f64,
+    merge_secs: f64,
+    /// Total encoded bytes sent (incl. self pair — the all-to-all formula's
+    /// send term matches the historical accounting).
+    send_bytes: u64,
+    /// Encoded bytes received from other ranks.
+    recv_bytes: u64,
+    enc_off_node: u64,
+    raw_off_node: u64,
+}
+
+/// Rank-parallel S1 + S2: every rank is an OS thread generating its batch,
+/// inverting/encoding it, and exchanging wire payloads over the channel
+/// fabric; each rank merges its received streams in ascending source order,
+/// so the accumulated CSR is identical to the sequential engine.
+fn grow_threaded(
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    m: usize,
+    from: u64,
+    to: u64,
+) -> Vec<RankGrow> {
+    let ranges = rank_ranges(m, from, to);
+    let do_shuffle = state.do_shuffle;
+    let id_base = state.id_base;
+    let owner: &[u32] = &state.owner;
+    let covers: &mut [InvertedIndex] = &mut state.covers;
+    let compress = cfg.wire_compression;
+    let endpoints = Fabric::endpoints(m);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .zip(covers.iter_mut())
+            .zip(ranges.iter().copied())
+            .enumerate()
+            .map(|(p, ((mut ep, cover), (lo, len)))| {
+                scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let batch = if len > 0 {
+                        batch_parallel(graph, cfg.model, cfg.seed ^ id_base, lo, len, cfg.s1_threads)
+                    } else {
+                        SampleBatch::empty(lo)
+                    };
+                    let s1_secs = t0.elapsed().as_secs_f64();
+                    let mut out = RankGrow {
+                        batch,
+                        s1_secs,
+                        invert_secs: 0.0,
+                        merge_secs: 0.0,
+                        send_bytes: 0,
+                        recv_bytes: 0,
+                        enc_off_node: 0,
+                        raw_off_node: 0,
+                    };
+                    if !do_shuffle {
+                        return out;
+                    }
+                    let t1 = Instant::now();
+                    let streams = invert_batch_to_streams(&out.batch, owner, m);
+                    let payloads: Vec<Vec<u8>> =
+                        streams.iter().map(|s| wire::encode_stream(s, compress)).collect();
+                    out.send_bytes = payloads.iter().map(|b| b.len() as u64).sum();
+                    let (enc, raw) = wire_volumes(p, &streams, &payloads);
+                    out.enc_off_node = enc;
+                    out.raw_off_node = raw;
+                    for (dst, payload) in payloads.into_iter().enumerate() {
+                        ep.send(dst, payload);
+                    }
+                    out.invert_secs = t1.elapsed().as_secs_f64();
+                    let t2 = Instant::now();
+                    let mut inbox: Vec<Vec<u32>> = Vec::with_capacity(m);
+                    for src in 0..m {
+                        let bytes = ep.recv_from(src);
+                        if src != p {
+                            out.recv_bytes += bytes.len() as u64;
+                        }
+                        inbox.push(wire::decode_stream(&bytes));
+                    }
+                    cover.merge_streams(&inbox);
+                    out.merge_secs = t2.elapsed().as_secs_f64();
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    })
+}
+
 /// Grows the global sample pool to `target_theta`: distributed generation
 /// (S1) followed by the shuffle of the new samples (S2). Returns the phase
-/// stats; rank clocks inside `cluster` are advanced as a side effect.
+/// stats; rank clocks inside the transport are advanced as a side effect.
 pub fn grow_to(
-    cluster: &mut Cluster,
+    t: &mut dyn Transport,
     graph: &Graph,
     cfg: &Config,
     state: &mut DistState,
     target_theta: u64,
 ) -> GrowStats {
-    let m = cluster.m;
+    let m = t.m();
     let mut stats = GrowStats::default();
     if target_theta <= state.theta {
         return stats;
     }
-    let new_total = target_theta - state.theta;
-    // Block-partition the new ids across ranks.
-    let per_rank = new_total.div_ceil(m as u64);
+    let t_before = t.makespan();
+
+    if t.kind() == TransportKind::Threads && m > 1 {
+        // ---- Rank-parallel engine: real threads, real channels. ----
+        let from = state.theta;
+        let outcomes = grow_threaded(graph, cfg, state, m, from, target_theta);
+        for (p, o) in outcomes.iter().enumerate() {
+            t.charge_compute(p, o.s1_secs / cfg.node_threads);
+        }
+        let t_sampled = t.barrier();
+        stats.sampling_time = t_sampled - t_before;
+        if state.do_shuffle {
+            for (p, o) in outcomes.iter().enumerate() {
+                t.charge_compute(p, o.invert_secs);
+            }
+            let t_pre = t.makespan();
+            t.barrier();
+            for (r, o) in outcomes.iter().enumerate() {
+                let cost = t.net().all_to_all(m, o.send_bytes, o.recv_bytes);
+                t.charge_comm(r, cost);
+            }
+            for (p, o) in outcomes.iter().enumerate() {
+                t.charge_compute(p, o.merge_secs);
+                stats.alltoall_bytes += o.enc_off_node;
+                stats.alltoall_raw_bytes += o.raw_off_node;
+            }
+            let t_post = t.barrier();
+            stats.alltoall_time = t_post - t_pre;
+        }
+        for (p, o) in outcomes.into_iter().enumerate() {
+            state.local_batches[p].push(o.batch);
+        }
+        state.theta = target_theta;
+        return stats;
+    }
+
+    // ---- Sequential engine under the cost model. ----
+    let ranges = rank_ranges(m, state.theta, target_theta);
     let mut new_batches: Vec<SampleBatch> = Vec::with_capacity(m);
-    let t_before = cluster.makespan();
-    for p in 0..m {
-        let lo = state.theta + (p as u64) * per_rank;
-        let hi = (lo + per_rank).min(target_theta);
-        if lo >= hi {
-            new_batches.push(SampleBatch::empty(lo as SampleId));
+    for (p, &(lo, len)) in ranges.iter().enumerate() {
+        if len == 0 {
+            new_batches.push(SampleBatch::empty(lo));
             continue;
         }
-        let (batch, _) = cluster.run_compute_scaled(p, cfg.node_threads, || {
-            batch_parallel(
-                graph,
-                cfg.model,
-                cfg.seed ^ state.id_base,
-                lo as SampleId,
-                (hi - lo) as usize,
-                cfg.s1_threads,
-            )
+        let (batch, _) = t.run_compute_scaled(p, cfg.node_threads, || {
+            batch_parallel(graph, cfg.model, cfg.seed ^ state.id_base, lo, len, cfg.s1_threads)
         });
         new_batches.push(batch);
     }
-    let t_sampled = cluster.barrier();
+    let t_sampled = t.barrier();
     stats.sampling_time = t_sampled - t_before;
 
     if state.do_shuffle {
-        // Build per-(src,dst) flat payloads: [v, count, ids...] streams.
-        let mut outbox: Vec<Vec<Vec<u32>>> = Vec::with_capacity(m);
+        // Invert + encode per source rank: `[v, count, ids...]` streams
+        // packed into wire bytes (delta-varint unless disabled).
+        let compress = cfg.wire_compression;
+        let mut outbox: Vec<Vec<Vec<u8>>> = Vec::with_capacity(m);
         for (p, batch) in new_batches.iter().enumerate() {
-            let (rankbox, _) =
-                cluster.run_compute(p, || invert_batch_to_streams(batch, &state.owner, m));
-            outbox.push(rankbox);
+            let owner = &state.owner;
+            let ((streams, payloads), _) = t.run_compute(p, || {
+                let streams = invert_batch_to_streams(batch, owner, m);
+                let payloads: Vec<Vec<u8>> =
+                    streams.iter().map(|s| wire::encode_stream(s, compress)).collect();
+                (streams, payloads)
+            });
+            let (enc, raw) = wire_volumes(p, &streams, &payloads);
+            stats.alltoall_bytes += enc;
+            stats.alltoall_raw_bytes += raw;
+            outbox.push(payloads);
         }
-        stats.alltoall_bytes = outbox
-            .iter()
-            .enumerate()
-            .map(|(src, row)| {
-                row.iter()
-                    .enumerate()
-                    .filter(|(dst, _)| *dst != src)
-                    .map(|(_, v)| v.len() as u64 * 4)
-                    .sum::<u64>()
-            })
-            .sum();
-        let t_pre = cluster.makespan();
-        let inbox = collectives::all_to_allv(cluster, outbox, 4);
-        // Merge received partial covers into the accumulated state — a
-        // hash-free sequential merge of vertex-sorted streams.
-        for (dst, streams) in inbox.into_iter().enumerate() {
+        let t_pre = t.makespan();
+        let inbox = collectives::exchange_bytes(t, outbox);
+        // Decode and merge received partial covers into the accumulated
+        // state — a hash-free sequential merge of vertex-sorted streams in
+        // ascending source order.
+        for (dst, payloads) in inbox.into_iter().enumerate() {
             let covers = &mut state.covers[dst];
-            let ((), _) = cluster.run_compute(dst, || covers.merge_streams(&streams));
+            let ((), _) = t.run_compute(dst, || {
+                let streams: Vec<Vec<u32>> =
+                    payloads.iter().map(|b| wire::decode_stream(b)).collect();
+                covers.merge_streams(&streams)
+            });
         }
-        let t_post = cluster.barrier();
+        let t_post = t.barrier();
         stats.alltoall_time = t_post - t_pre;
     }
 
@@ -248,7 +415,7 @@ mod tests {
     use super::*;
     use crate::coordinator::config::Algorithm;
     use crate::diffusion::DiffusionModel;
-    use crate::distributed::NetModel;
+    use crate::distributed::{NetModel, SimTransport, ThreadTransport};
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
     use std::collections::HashMap;
@@ -260,12 +427,13 @@ mod tests {
 
     fn cfg(m: usize) -> Config {
         Config::new(10, m, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_transport(TransportKind::Sim)
     }
 
     #[test]
     fn grow_generates_exactly_theta_samples() {
         let g = small_graph();
-        let mut cl = Cluster::new(4, NetModel::free());
+        let mut cl = SimTransport::new(4, NetModel::free());
         let c = cfg(4);
         let mut st = DistState::new(g.n(), 4, &[1, 2, 3], c.seed, 0, true);
         grow_to(&mut cl, &g, &c, &mut st, 100);
@@ -277,7 +445,7 @@ mod tests {
     #[test]
     fn incremental_growth_only_adds_new() {
         let g = small_graph();
-        let mut cl = Cluster::new(2, NetModel::free());
+        let mut cl = SimTransport::new(2, NetModel::free());
         let c = cfg(2);
         let mut st = DistState::new(g.n(), 2, &[1], c.seed, 0, true);
         grow_to(&mut cl, &g, &c, &mut st, 50);
@@ -292,7 +460,7 @@ mod tests {
     #[test]
     fn shuffle_routes_every_entry_to_owner() {
         let g = small_graph();
-        let mut cl = Cluster::new(4, NetModel::free());
+        let mut cl = SimTransport::new(4, NetModel::free());
         let c = cfg(4);
         let mut st = DistState::new(g.n(), 4, &[1, 2, 3], c.seed, 0, true);
         grow_to(&mut cl, &g, &c, &mut st, 200);
@@ -319,7 +487,7 @@ mod tests {
         // Leap-frog: the union of covering sets must be identical for any m.
         let g = small_graph();
         let collect = |m: usize| -> Vec<(Vertex, Vec<SampleId>)> {
-            let mut cl = Cluster::new(m, NetModel::free());
+            let mut cl = SimTransport::new(m, NetModel::free());
             let c = cfg(m);
             let pool: Vec<usize> = if m == 1 { vec![0] } else { (1..m).collect() };
             let mut st = DistState::new(g.n(), m, &pool, c.seed, 0, true);
@@ -340,9 +508,65 @@ mod tests {
     }
 
     #[test]
+    fn threaded_grow_produces_identical_covers() {
+        // The rank-parallel engine must accumulate the byte-for-byte
+        // identical CSR, across multiple growth rounds and either wire
+        // format.
+        let g = small_graph();
+        let m = 5;
+        for compress in [true, false] {
+            let c = cfg(m).with_wire_compression(compress);
+            let mut sim = SimTransport::new(m, NetModel::free());
+            let mut st_sim = DistState::new(g.n(), m, &[1, 2, 3, 4], c.seed, 0, true);
+            grow_to(&mut sim, &g, &c, &mut st_sim, 60);
+            grow_to(&mut sim, &g, &c, &mut st_sim, 150);
+
+            let ct = c.clone().with_transport(TransportKind::Threads);
+            let mut thr = ThreadTransport::new(m, NetModel::free());
+            let mut st_thr = DistState::new(g.n(), m, &[1, 2, 3, 4], ct.seed, 0, true);
+            grow_to(&mut thr, &g, &ct, &mut st_thr, 60);
+            grow_to(&mut thr, &g, &ct, &mut st_thr, 150);
+
+            assert_eq!(st_sim.theta, st_thr.theta);
+            for p in 0..m {
+                assert_eq!(st_sim.covers[p].vertices, st_thr.covers[p].vertices, "rank {p}");
+                assert_eq!(st_sim.covers[p].offsets, st_thr.covers[p].offsets, "rank {p}");
+                assert_eq!(st_sim.covers[p].ids, st_thr.covers[p].ids, "rank {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn compression_reduces_wire_bytes_losslessly() {
+        let g = small_graph();
+        let m = 4;
+        let run = |compress: bool| {
+            let c = cfg(m).with_wire_compression(compress);
+            let mut cl = SimTransport::new(m, NetModel::free());
+            let mut st = DistState::new(g.n(), m, &[1, 2, 3], c.seed, 0, true);
+            let stats = grow_to(&mut cl, &g, &c, &mut st, 300);
+            (stats, st)
+        };
+        let (packed, st_packed) = run(true);
+        let (raw, st_raw) = run(false);
+        assert!(
+            packed.alltoall_bytes < raw.alltoall_bytes,
+            "varint {} vs raw {}",
+            packed.alltoall_bytes,
+            raw.alltoall_bytes
+        );
+        assert_eq!(packed.alltoall_raw_bytes, raw.alltoall_raw_bytes);
+        for p in 0..m {
+            assert_eq!(st_packed.covers[p].vertices, st_raw.covers[p].vertices);
+            assert_eq!(st_packed.covers[p].offsets, st_raw.covers[p].offsets);
+            assert_eq!(st_packed.covers[p].ids, st_raw.covers[p].ids);
+        }
+    }
+
+    #[test]
     fn fresh_id_base_gives_different_samples() {
         let g = small_graph();
-        let mut cl = Cluster::new(2, NetModel::free());
+        let mut cl = SimTransport::new(2, NetModel::free());
         let c = cfg(2);
         let mut a = DistState::new(g.n(), 2, &[1], c.seed, 0, true);
         let mut b = DistState::new(g.n(), 2, &[1], c.seed, 1 << 32, true);
@@ -356,7 +580,7 @@ mod tests {
     #[test]
     fn baselines_skip_shuffle() {
         let g = small_graph();
-        let mut cl = Cluster::new(3, NetModel::slingshot());
+        let mut cl = SimTransport::new(3, NetModel::slingshot());
         let c = cfg(3);
         let mut st = DistState::new(g.n(), 3, &[0, 1, 2], c.seed, 0, false);
         let stats = grow_to(&mut cl, &g, &c, &mut st, 60);
@@ -398,7 +622,7 @@ mod tests {
         let edges = generators::erdos_renyi(150, 900, 23);
         let g = Graph::from_edges(150, &edges, WeightModel::UniformIc { max: 0.12 }, 23);
         let m = 5;
-        let mut cl = Cluster::new(m, NetModel::free());
+        let mut cl = SimTransport::new(m, NetModel::free());
         let c = cfg(m);
         let mut st = DistState::new(g.n(), m, &[1, 2, 3, 4], c.seed, 0, true);
         grow_to(&mut cl, &g, &c, &mut st, 40);
@@ -441,7 +665,7 @@ mod tests {
         // rank), the binary search must agree with a brute-force scan.
         let g = small_graph();
         let m = 3;
-        let mut cl = Cluster::new(m, NetModel::free());
+        let mut cl = SimTransport::new(m, NetModel::free());
         let c = cfg(m);
         let mut st = DistState::new(g.n(), m, &[1, 2], c.seed, 0, true);
         grow_to(&mut cl, &g, &c, &mut st, 30);

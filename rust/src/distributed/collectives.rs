@@ -1,18 +1,26 @@
-//! Collective operations over the virtual cluster: real data movement plus
-//! modeled wire time, with bulk-synchronous timing semantics (all ranks
-//! enter, synchronize, then each pays its own cost).
+//! Collective operations, generic over the [`Transport`] fabric: real data
+//! movement plus modeled wire time, with bulk-synchronous timing semantics
+//! (all ranks enter, synchronize, then each pays its own cost).
+//!
+//! Typed collectives ([`all_to_allv`], [`allreduce_sum_u32`], [`gather_at`])
+//! move their payloads in-process and charge the Thakur-style cost formula
+//! through the transport's clock surface. [`exchange_bytes`] is the
+//! byte-wire twin the S2 shuffle uses: payloads actually traverse the
+//! transport's point-to-point streams ([`Transport::send`] /
+//! [`Transport::recv`]), so the thread backend can carry them on real
+//! channels.
 
-use super::cluster::Cluster;
+use super::transport::Transport;
 
 /// Personalized all-to-all ("MPI_Alltoallv"): `outbox[src][dst]` becomes
 /// `inbox[dst][src]`. Charges each rank the α-β all-to-all cost for its own
 /// send+receive volume (`elem_bytes` per element).
 pub fn all_to_allv<T>(
-    cluster: &mut Cluster,
+    t: &mut dyn Transport,
     outbox: Vec<Vec<Vec<T>>>,
     elem_bytes: u64,
 ) -> Vec<Vec<Vec<T>>> {
-    let m = cluster.m;
+    let m = t.m();
     assert_eq!(outbox.len(), m);
     for row in &outbox {
         assert_eq!(row.len(), m);
@@ -31,10 +39,10 @@ pub fn all_to_allv<T>(
         }
     }
     // Barrier: the exchange starts when the last rank arrives.
-    cluster.barrier();
+    t.barrier();
     for r in 0..m {
-        let cost = cluster.net.all_to_all(m, send_bytes[r], recv_bytes[r]);
-        cluster.charge_comm(r, cost);
+        let cost = t.net().all_to_all(m, send_bytes[r], recv_bytes[r]);
+        t.charge_comm(r, cost);
     }
     // Transpose: inbox[dst][src].
     let mut inbox: Vec<Vec<Vec<T>>> = (0..m).map(|_| Vec::with_capacity(m)).collect();
@@ -53,18 +61,56 @@ pub fn all_to_allv<T>(
     inbox
 }
 
+/// Byte-wire all-to-all: ships every `outbox[src][dst]` payload through the
+/// transport's point-to-point streams and collects `inbox[dst][src]`.
+/// Charges the same all-to-all formula as [`all_to_allv`] with
+/// `elem_bytes = 1`.
+pub fn exchange_bytes(t: &mut dyn Transport, outbox: Vec<Vec<Vec<u8>>>) -> Vec<Vec<Vec<u8>>> {
+    let m = t.m();
+    assert_eq!(outbox.len(), m);
+    let send_bytes: Vec<u64> = outbox
+        .iter()
+        .map(|row| row.iter().map(|v| v.len() as u64).sum())
+        .collect();
+    let mut recv_bytes = vec![0u64; m];
+    for (src, row) in outbox.iter().enumerate() {
+        for (dst, v) in row.iter().enumerate() {
+            if dst != src {
+                recv_bytes[dst] += v.len() as u64;
+            }
+        }
+    }
+    t.barrier();
+    for r in 0..m {
+        let cost = t.net().all_to_all(m, send_bytes[r], recv_bytes[r]);
+        t.charge_comm(r, cost);
+    }
+    for (src, row) in outbox.into_iter().enumerate() {
+        for (dst, payload) in row.into_iter().enumerate() {
+            t.send(src, dst, payload);
+        }
+    }
+    (0..m)
+        .map(|dst| {
+            (0..m)
+                .map(|src| t.recv(dst, src).expect("exchange delivered every pair"))
+                .collect()
+        })
+        .collect()
+}
+
 /// Allreduce-sum of per-rank `u32` vectors (the Ripples baseline's
 /// k-iteration frequency reduction). Returns the elementwise sum, charging
 /// every rank the Rabenseifner cost.
-pub fn allreduce_sum_u32(cluster: &mut Cluster, contributions: &[Vec<u32>]) -> Vec<u32> {
-    let m = cluster.m;
+pub fn allreduce_sum_u32(t: &mut dyn Transport, contributions: &[Vec<u32>]) -> Vec<u32> {
+    let m = t.m();
     assert_eq!(contributions.len(), m);
     let len = contributions[0].len();
     let bytes = (len * 4) as u64;
-    cluster.barrier();
+    t.barrier();
     for r in 0..m {
-        let cost = cluster.net.allreduce(m, bytes);
-        cluster.charge_comm(r, cost);
+        let cost = t.net().allreduce(m, bytes);
+        t.charge_comm(r, cost);
     }
     let mut out = vec![0u32; len];
     for c in contributions {
@@ -79,32 +125,38 @@ pub fn allreduce_sum_u32(cluster: &mut Cluster, contributions: &[Vec<u32>]) -> V
 /// Gather variable-sized payloads at `root`; returns them indexed by source
 /// rank. Charges the root the full-volume gather cost and each sender a
 /// point-to-point cost.
-pub fn gather_at<T>(cluster: &mut Cluster, root: usize, payloads: Vec<Vec<T>>, elem_bytes: u64) -> Vec<Vec<T>> {
-    let m = cluster.m;
+pub fn gather_at<T>(
+    t: &mut dyn Transport,
+    root: usize,
+    payloads: Vec<Vec<T>>,
+    elem_bytes: u64,
+) -> Vec<Vec<T>> {
+    let m = t.m();
     assert_eq!(payloads.len(), m);
-    cluster.barrier();
+    t.barrier();
     let mut total = 0u64;
     for (r, p) in payloads.iter().enumerate() {
         if r != root {
             let b = p.len() as u64 * elem_bytes;
             total += b;
-            let cost = cluster.net.p2p(b);
-            cluster.charge_comm(r, cost);
+            let cost = t.net().p2p(b);
+            t.charge_comm(r, cost);
         }
     }
-    let root_cost = cluster.net.tau * ((m as f64).log2().ceil()) + cluster.net.mu * total as f64;
-    cluster.charge_comm(root, root_cost);
+    let net = t.net();
+    let root_cost = net.tau * ((m as f64).log2().ceil()) + net.mu * total as f64;
+    t.charge_comm(root, root_cost);
     payloads
 }
 
 /// Broadcast `bytes` from `root` to everyone (charging only; the caller
 /// already holds the value — in-process there is nothing to move).
-pub fn broadcast_cost(cluster: &mut Cluster, _root: usize, bytes: u64) {
-    let m = cluster.m;
-    cluster.barrier();
+pub fn broadcast_cost(t: &mut dyn Transport, _root: usize, bytes: u64) {
+    let m = t.m();
+    t.barrier();
     for r in 0..m {
-        let cost = cluster.net.broadcast(m, bytes);
-        cluster.charge_comm(r, cost);
+        let cost = t.net().broadcast(m, bytes);
+        t.charge_comm(r, cost);
     }
 }
 
@@ -112,10 +164,11 @@ pub fn broadcast_cost(cluster: &mut Cluster, _root: usize, bytes: u64) {
 mod tests {
     use super::*;
     use crate::distributed::netmodel::NetModel;
+    use crate::distributed::transport::SimTransport;
 
     #[test]
     fn all_to_all_transposes() {
-        let mut c = Cluster::new(3, NetModel::free());
+        let mut c = SimTransport::new(3, NetModel::free());
         // outbox[src][dst] = vec![src*10 + dst]
         let outbox: Vec<Vec<Vec<u32>>> = (0..3)
             .map(|s| (0..3).map(|d| vec![(s * 10 + d) as u32]).collect())
@@ -130,19 +183,41 @@ mod tests {
 
     #[test]
     fn all_to_all_charges_time() {
-        let mut c = Cluster::new(4, NetModel::slingshot());
+        let mut c = SimTransport::new(4, NetModel::slingshot());
         let outbox: Vec<Vec<Vec<u32>>> = (0..4)
             .map(|_| (0..4).map(|_| vec![0u32; 1000]).collect())
             .collect();
         let _ = all_to_allv(&mut c, outbox, 4);
         for r in 0..4 {
-            assert!(c.clocks[r].comm > 0.0);
+            assert!(c.clock(r).comm > 0.0);
+        }
+    }
+
+    #[test]
+    fn exchange_bytes_transposes_and_charges_like_all_to_all() {
+        let mk_outbox = || -> Vec<Vec<Vec<u8>>> {
+            (0..3)
+                .map(|s| (0..3).map(|d| vec![(s * 10 + d) as u8; 100]).collect())
+                .collect()
+        };
+        let mut a = SimTransport::new(3, NetModel::slingshot());
+        let inbox = exchange_bytes(&mut a, mk_outbox());
+        for dst in 0..3 {
+            for src in 0..3 {
+                assert_eq!(inbox[dst][src], vec![(src * 10 + dst) as u8; 100]);
+            }
+        }
+        // Identical charge to the typed collective at elem_bytes = 1.
+        let mut b = SimTransport::new(3, NetModel::slingshot());
+        let _ = all_to_allv(&mut b, mk_outbox(), 1);
+        for r in 0..3 {
+            assert_eq!(a.clock(r).comm, b.clock(r).comm);
         }
     }
 
     #[test]
     fn allreduce_sums_elementwise() {
-        let mut c = Cluster::new(3, NetModel::free());
+        let mut c = SimTransport::new(3, NetModel::free());
         let parts = vec![vec![1u32, 2, 3], vec![10, 20, 30], vec![100, 200, 300]];
         let sum = allreduce_sum_u32(&mut c, &parts);
         assert_eq!(sum, vec![111, 222, 333]);
@@ -150,8 +225,8 @@ mod tests {
 
     #[test]
     fn allreduce_cost_grows_with_m() {
-        let mut c2 = Cluster::new(2, NetModel::slingshot());
-        let mut c128 = Cluster::new(128, NetModel::slingshot());
+        let mut c2 = SimTransport::new(2, NetModel::slingshot());
+        let mut c128 = SimTransport::new(128, NetModel::slingshot());
         let v = vec![0u32; 100_000];
         let _ = allreduce_sum_u32(&mut c2, &vec![v.clone(); 2]);
         let _ = allreduce_sum_u32(&mut c128, &vec![v; 128]);
@@ -160,22 +235,22 @@ mod tests {
 
     #[test]
     fn gather_keeps_payloads_and_charges_root_most() {
-        let mut c = Cluster::new(4, NetModel::slingshot());
+        let mut c = SimTransport::new(4, NetModel::slingshot());
         let payloads: Vec<Vec<u8>> = (0..4).map(|r| vec![r as u8; 1 << 16]).collect();
         let got = gather_at(&mut c, 0, payloads, 1);
         assert_eq!(got[2], vec![2u8; 1 << 16]);
         // Root receives from 3 senders; its comm exceeds any single sender's.
-        assert!(c.clocks[0].comm > c.clocks[1].comm);
+        assert!(c.clock(0).comm > c.clock(1).comm);
     }
 
     #[test]
     fn barrier_semantics_sync_before_exchange() {
-        let mut c = Cluster::new(2, NetModel::free());
+        let mut c = SimTransport::new(2, NetModel::free());
         c.charge_compute(0, 10.0);
         let outbox: Vec<Vec<Vec<u32>>> = vec![vec![vec![], vec![]], vec![vec![], vec![]]];
         let _ = all_to_allv(&mut c, outbox, 4);
         // Rank 1 must have waited for rank 0.
         assert_eq!(c.now(1), 10.0);
-        assert_eq!(c.clocks[1].idle, 10.0);
+        assert_eq!(c.clock(1).idle, 10.0);
     }
 }

@@ -1,24 +1,37 @@
-//! The virtual distributed cluster — this repository's substitute for the
+//! The distributed substrate — this repository's substitute for the
 //! paper's 512-node Perlmutter testbed (DESIGN.md §3).
 //!
 //! The *algorithms* run for real: every rank executes the actual Rust code
 //! on its actual shard of samples/vertices, producing bit-exact outputs
 //! (leap-frog RNG guarantees seed sets are independent of `m`'s layout).
-//! Only the *wire* is modeled: each communication primitive charges an α-β
-//! cost (`τ` latency + `μ` seconds/byte) to per-rank simulated clocks, and
-//! per-rank compute is measured wall-clock and added to the same clocks.
-//! The reported "parallel runtime" of an experiment is the resulting
-//! critical-path makespan — the standard LogP-style methodology.
+//! Execution is pluggable behind the [`transport::Transport`] trait:
+//!
+//! - [`transport::SimTransport`] runs ranks sequentially and *models* the
+//!   wire: each communication primitive charges an α-β cost (`τ` latency +
+//!   `μ` seconds/byte) to per-rank simulated clocks, and per-rank compute
+//!   is measured wall-clock and added to the same clocks. The reported
+//!   "parallel runtime" is the critical-path makespan — the standard
+//!   LogP-style methodology.
+//! - [`transport::ThreadTransport`] runs every rank as a real OS thread
+//!   over channels, feeding the live threaded receiver straight from the
+//!   wire, with the same per-rank clock accounting for comparability.
 //!
 //! Why this preserves the paper's phenomena: the quantities the evaluation
 //! hinges on (per-rank work θ/m, shuffle volume, the m·k candidate stream
 //! converging on the receiver, k reductions of n-sized vectors for the
 //! baselines) are all *produced by the real implementation*; the network
-//! model only converts their byte counts into time.
+//! model only converts their byte counts into time. The [`wire`] codec
+//! additionally delta-varint-compresses the byte streams themselves (the
+//! §3.3.2 communication-optimized variant), losslessly.
 
 pub mod netmodel;
 pub mod cluster;
 pub mod collectives;
+pub mod transport;
+pub mod wire;
 
 pub use cluster::{Cluster, RankClock};
 pub use netmodel::NetModel;
+pub use transport::{
+    make_transport, SimTransport, ThreadTransport, Transport, TransportExt, TransportKind,
+};

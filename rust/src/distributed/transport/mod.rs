@@ -1,0 +1,181 @@
+//! Pluggable rank-to-rank transport — the execution engine behind the
+//! distributed pipeline.
+//!
+//! ## Backend contract
+//!
+//! A [`Transport`] is the fabric connecting `m` ranks. It carries two
+//! orthogonal responsibilities:
+//!
+//! 1. **Point-to-point byte streams** ([`Transport::send`] /
+//!    [`Transport::recv`]): FIFO per `(src, dst)` pair, payloads are the
+//!    [`wire`](crate::distributed::wire)-encoded bytes. The S2 shuffle and
+//!    the S3 seed stream ride this surface.
+//! 2. **Clock accounting**: every backend owns per-rank [`RankClock`]s and
+//!    the α-β [`NetModel`]. Phase code charges *measured* compute and
+//!    *modeled* wire time through the trait, so the reported makespan is
+//!    comparable across backends.
+//!
+//! Two backends exist:
+//!
+//! - [`SimTransport`] — the virtual-cluster cost model (the repository's
+//!   historical execution mode). Ranks execute sequentially on the calling
+//!   thread; `send`/`recv` are in-process mailboxes. Bit-identical results
+//!   and cost formulas to the pre-transport `Cluster` path.
+//! - [`ThreadTransport`] — every rank is a real OS thread; the byte wire is
+//!   mpsc channels ([`threads::Fabric`]), and the S4 receiver is the live
+//!   lock-free threaded receiver
+//!   ([`crate::coordinator::receiver::run_threaded_receiver`]) fed straight
+//!   from the wire. Produces seed sets identical to [`SimTransport`] for
+//!   the same config/seed (pinned by `tests/transport.rs`).
+//!
+//! ## When costs are charged
+//!
+//! The collectives ([`super::collectives`]) are written generically over
+//! `dyn Transport`: they synchronize (`barrier`), move payloads, and charge
+//! each rank the Thakur-style collective formula from [`NetModel`] — for
+//! both backends, so modeled time stays comparable. Compute is charged
+//! where it is measured: sequentially under `SimTransport` (the measurement
+//! *is* the execution), and after join under `ThreadTransport` (each rank
+//! thread measures its own span; wall-clock overlap is the real win, the
+//! clocks still record per-rank work). `send`/`recv` themselves never
+//! charge — wire time is charged explicitly by the phase or collective that
+//! knows which cost formula applies (p2p for streams, all-to-all for the
+//! shuffle), keeping the charging policy in exactly one place per phase.
+//!
+//! Determinism note: result-bearing state never depends on arrival timing.
+//! The S2 merge consumes streams in ascending source-rank order and the S4
+//! receiver consumes the seed stream in the canonical
+//! (emission-ordinal, sender-rank) order, so both backends evolve identical
+//! algorithm state; only the clocks differ in how honestly they can model
+//! overlap.
+
+pub mod sim;
+pub mod threads;
+
+pub use sim::SimTransport;
+pub use threads::{Fabric, RankEndpoint, ThreadTransport};
+
+use super::cluster::RankClock;
+use super::netmodel::NetModel;
+use std::time::Instant;
+
+/// Which execution engine backs a [`Transport`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Sequential virtual-cluster cost model ([`SimTransport`]).
+    Sim,
+    /// Rank-per-OS-thread engine over channels ([`ThreadTransport`]).
+    Threads,
+}
+
+impl TransportKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Threads => "threads",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" => Ok(TransportKind::Sim),
+            "threads" | "thread" => Ok(TransportKind::Threads),
+            other => Err(format!("unknown transport '{other}' (sim | threads)")),
+        }
+    }
+}
+
+/// The rank fabric: point-to-point byte streams plus the per-rank clock
+/// surface. Object-safe; see the module docs for the backend contract.
+pub trait Transport: Send {
+    fn kind(&self) -> TransportKind;
+    fn m(&self) -> usize;
+    fn net(&self) -> NetModel;
+
+    /// Charges `secs` of compute to `rank`'s clock.
+    fn charge_compute(&mut self, rank: usize, secs: f64);
+    /// Charges `secs` of communication to `rank`'s clock.
+    fn charge_comm(&mut self, rank: usize, secs: f64);
+    /// Advances `rank` to at least `t`, accounting the gap as idle.
+    fn wait_until(&mut self, rank: usize, t: f64);
+    /// Synchronizes all ranks to the latest clock; returns the barrier time.
+    fn barrier(&mut self) -> f64;
+    fn now(&self, rank: usize) -> f64;
+    /// Current critical-path time.
+    fn makespan(&self) -> f64;
+    /// Snapshot of `rank`'s clock breakdown.
+    fn clock(&self, rank: usize) -> RankClock;
+    /// Total compute seconds across ranks.
+    fn total_compute(&self) -> f64;
+
+    /// Enqueues `payload` on the `(src, dst)` byte stream (FIFO per pair).
+    /// Pure data movement — wire time is charged by the caller.
+    fn send(&mut self, src: usize, dst: usize, payload: Vec<u8>);
+    /// Dequeues the next payload of the `(src, dst)` stream, if any.
+    fn recv(&mut self, dst: usize, src: usize) -> Option<Vec<u8>>;
+}
+
+/// Measured-compute conveniences over any [`Transport`] (generic methods
+/// can't live on the object-safe trait itself).
+pub trait TransportExt: Transport {
+    /// Runs `f` as `rank`'s compute, measuring wall-clock and charging the
+    /// rank's clock. Returns `f`'s result and the charged seconds.
+    fn run_compute<R>(&mut self, rank: usize, f: impl FnOnce() -> R) -> (R, f64) {
+        self.run_compute_scaled(rank, 1.0, f)
+    }
+
+    /// Like [`TransportExt::run_compute`] with an explicit intra-node
+    /// parallelism divisor (the paper's 64-thread OpenMP phases).
+    fn run_compute_scaled<R>(&mut self, rank: usize, scale: f64, f: impl FnOnce() -> R) -> (R, f64) {
+        let t0 = Instant::now();
+        let r = f();
+        let secs = t0.elapsed().as_secs_f64() / scale;
+        self.charge_compute(rank, secs);
+        (r, secs)
+    }
+}
+
+impl<T: Transport + ?Sized> TransportExt for T {}
+
+/// Builds the transport a [`Config`](crate::coordinator::Config) asks for.
+pub fn make_transport(kind: TransportKind, m: usize, net: NetModel) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Sim => Box::new(SimTransport::new(m, net)),
+        TransportKind::Threads => Box::new(ThreadTransport::new(m, net)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [TransportKind::Sim, TransportKind::Threads] {
+            assert_eq!(k.as_str().parse::<TransportKind>().unwrap(), k);
+        }
+        assert!("mpi".parse::<TransportKind>().is_err());
+    }
+
+    #[test]
+    fn make_transport_dispatches() {
+        let t = make_transport(TransportKind::Sim, 4, NetModel::free());
+        assert_eq!(t.kind(), TransportKind::Sim);
+        assert_eq!(t.m(), 4);
+        let t = make_transport(TransportKind::Threads, 2, NetModel::free());
+        assert_eq!(t.kind(), TransportKind::Threads);
+    }
+
+    #[test]
+    fn ext_charges_measured_compute() {
+        let mut t = SimTransport::new(2, NetModel::free());
+        let (v, secs) = t.run_compute(1, || 7u32);
+        assert_eq!(v, 7);
+        assert!(secs >= 0.0);
+        assert_eq!(t.now(1), t.clock(1).compute);
+        assert_eq!(t.now(0), 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! The simulated backend: sequential execution under the virtual-cluster
+//! cost model ([`Cluster`] demoted to this transport's clock store).
+//!
+//! `send`/`recv` are in-process mailboxes (FIFO per `(src, dst)` pair);
+//! data never leaves the address space, and wire time is charged by the
+//! caller through the [`Transport`] clock surface — exactly the charging
+//! discipline of the pre-transport code, so costs are bit-identical to the
+//! historical `Cluster` path.
+
+use super::{Transport, TransportKind};
+use crate::distributed::cluster::{Cluster, RankClock};
+use crate::distributed::netmodel::NetModel;
+use std::collections::VecDeque;
+
+/// Sequential cost-model transport. See module docs.
+pub struct SimTransport {
+    cluster: Cluster,
+    /// `mail[dst][src]` — FIFO payload queues.
+    mail: Vec<Vec<VecDeque<Vec<u8>>>>,
+}
+
+impl SimTransport {
+    pub fn new(m: usize, net: NetModel) -> Self {
+        Self::from_cluster(Cluster::new(m, net))
+    }
+
+    /// Wraps an existing cluster (benches that pre-position clocks).
+    pub fn from_cluster(cluster: Cluster) -> Self {
+        let m = cluster.m;
+        Self {
+            cluster,
+            mail: (0..m).map(|_| (0..m).map(|_| VecDeque::new()).collect()).collect(),
+        }
+    }
+
+    /// Read access to the underlying clock store.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+impl Transport for SimTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Sim
+    }
+
+    fn m(&self) -> usize {
+        self.cluster.m
+    }
+
+    fn net(&self) -> NetModel {
+        self.cluster.net
+    }
+
+    fn charge_compute(&mut self, rank: usize, secs: f64) {
+        self.cluster.charge_compute(rank, secs);
+    }
+
+    fn charge_comm(&mut self, rank: usize, secs: f64) {
+        self.cluster.charge_comm(rank, secs);
+    }
+
+    fn wait_until(&mut self, rank: usize, t: f64) {
+        self.cluster.wait_until(rank, t);
+    }
+
+    fn barrier(&mut self) -> f64 {
+        self.cluster.barrier()
+    }
+
+    fn now(&self, rank: usize) -> f64 {
+        self.cluster.now(rank)
+    }
+
+    fn makespan(&self) -> f64 {
+        self.cluster.makespan()
+    }
+
+    fn clock(&self, rank: usize) -> RankClock {
+        self.cluster.clocks[rank]
+    }
+
+    fn total_compute(&self) -> f64 {
+        self.cluster.total_compute()
+    }
+
+    fn send(&mut self, src: usize, dst: usize, payload: Vec<u8>) {
+        self.mail[dst][src].push_back(payload);
+    }
+
+    fn recv(&mut self, dst: usize, src: usize) -> Option<Vec<u8>> {
+        self.mail[dst][src].pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mailboxes_are_fifo_per_pair() {
+        let mut t = SimTransport::new(3, NetModel::free());
+        t.send(0, 2, vec![1]);
+        t.send(0, 2, vec![2]);
+        t.send(1, 2, vec![3]);
+        assert_eq!(t.recv(2, 0), Some(vec![1]));
+        assert_eq!(t.recv(2, 1), Some(vec![3]));
+        assert_eq!(t.recv(2, 0), Some(vec![2]));
+        assert_eq!(t.recv(2, 0), None);
+        assert_eq!(t.recv(0, 2), None);
+    }
+
+    #[test]
+    fn clock_surface_matches_cluster_semantics() {
+        let mut t = SimTransport::new(3, NetModel::free());
+        t.charge_compute(0, 5.0);
+        t.charge_comm(1, 2.0);
+        assert_eq!(t.makespan(), 5.0);
+        let bt = t.barrier();
+        assert_eq!(bt, 5.0);
+        assert_eq!(t.clock(2).idle, 5.0);
+        assert_eq!(t.clock(1).comm, 2.0);
+        assert_eq!(t.total_compute(), 5.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! The rank-parallel backend: every rank is a real OS thread and the byte
+//! wire is mpsc channels.
+//!
+//! [`ThreadTransport`] carries the same clock store as the simulated
+//! backend (per-rank compute is measured inside each rank thread and
+//! charged after join; wire time uses the same [`NetModel`] formulas), so
+//! reported makespans stay comparable — the *wall-clock* win of running
+//! ranks concurrently is what this backend exists to demonstrate.
+//!
+//! The channel fabric is separable from the transport object: phase code
+//! calls [`Fabric::endpoints`] to mint one [`RankEndpoint`] per rank,
+//! moves each endpoint into its rank's thread, and lets ranks exchange
+//! wire payloads directly. Arrival order across sources is raced, so
+//! endpoints buffer out-of-order messages and deliver per-source FIFO —
+//! result-bearing consumers always iterate sources in deterministic order
+//! (see the module docs of [`super`]).
+
+use super::sim::SimTransport;
+use super::{Transport, TransportKind};
+use crate::distributed::cluster::RankClock;
+use crate::distributed::netmodel::NetModel;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+/// Rank-per-OS-thread transport. The coordinator-side trait surface
+/// (clocks + sequential mailboxes) is exactly the simulated backend's — it
+/// delegates to an inner [`SimTransport`] so the two cannot drift — while
+/// the rank-parallel phases build a [`Fabric`] and run on real channels.
+pub struct ThreadTransport {
+    inner: SimTransport,
+}
+
+impl ThreadTransport {
+    pub fn new(m: usize, net: NetModel) -> Self {
+        Self { inner: SimTransport::new(m, net) }
+    }
+}
+
+impl Transport for ThreadTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Threads
+    }
+
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn net(&self) -> NetModel {
+        self.inner.net()
+    }
+
+    fn charge_compute(&mut self, rank: usize, secs: f64) {
+        self.inner.charge_compute(rank, secs);
+    }
+
+    fn charge_comm(&mut self, rank: usize, secs: f64) {
+        self.inner.charge_comm(rank, secs);
+    }
+
+    fn wait_until(&mut self, rank: usize, t: f64) {
+        self.inner.wait_until(rank, t);
+    }
+
+    fn barrier(&mut self) -> f64 {
+        self.inner.barrier()
+    }
+
+    fn now(&self, rank: usize) -> f64 {
+        self.inner.now(rank)
+    }
+
+    fn makespan(&self) -> f64 {
+        self.inner.makespan()
+    }
+
+    fn clock(&self, rank: usize) -> RankClock {
+        self.inner.clock(rank)
+    }
+
+    fn total_compute(&self) -> f64 {
+        self.inner.total_compute()
+    }
+
+    fn send(&mut self, src: usize, dst: usize, payload: Vec<u8>) {
+        self.inner.send(src, dst, payload);
+    }
+
+    fn recv(&mut self, dst: usize, src: usize) -> Option<Vec<u8>> {
+        self.inner.recv(dst, src)
+    }
+}
+
+/// A source-tagged wire message.
+type Tagged = (usize, Vec<u8>);
+
+/// Mints the per-rank channel endpoints of an `m`-rank fabric.
+pub struct Fabric;
+
+impl Fabric {
+    /// One [`RankEndpoint`] per rank; endpoint `r` can send to every rank
+    /// (including itself) and receives from every rank.
+    pub fn endpoints(m: usize) -> Vec<RankEndpoint> {
+        let mut txs = Vec::with_capacity(m);
+        let mut rxs = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = mpsc::channel::<Tagged>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(rank, rx)| RankEndpoint {
+                rank,
+                txs: txs.clone(),
+                rx,
+                pending: (0..m).map(|_| VecDeque::new()).collect(),
+            })
+            .collect()
+    }
+}
+
+/// One rank's handle on the channel fabric. FIFO per source; messages from
+/// different sources race, so [`RankEndpoint::recv_from`] buffers strays
+/// until the requested source's next message arrives.
+pub struct RankEndpoint {
+    rank: usize,
+    txs: Vec<mpsc::Sender<Tagged>>,
+    rx: mpsc::Receiver<Tagged>,
+    pending: Vec<VecDeque<Vec<u8>>>,
+}
+
+impl RankEndpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn m(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Ships `payload` to `dst`. Never blocks (unbounded channel).
+    pub fn send(&self, dst: usize, payload: Vec<u8>) {
+        // A send can only fail if the destination endpoint was dropped,
+        // which legitimately happens when a receiver finishes early (e.g.
+        // after an early-terminating round); the payload is then dead.
+        let _ = self.txs[dst].send((self.rank, payload));
+    }
+
+    /// Blocks until the next payload *from `src`* is available, preserving
+    /// per-source FIFO order. Panics if every sender hung up first.
+    pub fn recv_from(&mut self, src: usize) -> Vec<u8> {
+        loop {
+            if let Some(p) = self.pending[src].pop_front() {
+                return p;
+            }
+            let (s, p) = self
+                .rx
+                .recv()
+                .expect("fabric hung up with a receive outstanding");
+            self.pending[s].push_back(p);
+        }
+    }
+
+    /// Drops this endpoint's senders so peers' `recv` can observe hangup.
+    pub fn close(self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_routes_point_to_point() {
+        let mut eps = Fabric::endpoints(3);
+        let e2 = eps.pop().unwrap();
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let h1 = std::thread::spawn(move || {
+            e1.send(0, vec![11]);
+            e1.send(0, vec![12]);
+        });
+        let h2 = std::thread::spawn(move || {
+            e2.send(0, vec![21]);
+        });
+        // Per-source FIFO even with racing senders.
+        assert_eq!(e0.recv_from(2), vec![21]);
+        assert_eq!(e0.recv_from(1), vec![11]);
+        assert_eq!(e0.recv_from(1), vec![12]);
+        h1.join().unwrap();
+        h2.join().unwrap();
+    }
+
+    #[test]
+    fn self_send_is_delivered() {
+        let mut eps = Fabric::endpoints(2);
+        let mut e0 = eps.remove(0);
+        e0.send(0, vec![7, 8]);
+        assert_eq!(e0.recv_from(0), vec![7, 8]);
+    }
+
+    #[test]
+    fn all_to_all_exchange_terminates() {
+        let m = 4;
+        let eps = Fabric::endpoints(m);
+        let outs: Vec<Vec<Vec<u8>>> = std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .into_iter()
+                .map(|mut ep| {
+                    s.spawn(move || {
+                        let me = ep.rank() as u8;
+                        for d in 0..m {
+                            ep.send(d, vec![me, d as u8]);
+                        }
+                        (0..m).map(|src| ep.recv_from(src)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (dst, inbox) in outs.iter().enumerate() {
+            for (src, msg) in inbox.iter().enumerate() {
+                assert_eq!(msg, &vec![src as u8, dst as u8]);
+            }
+        }
+    }
+}

@@ -1,0 +1,300 @@
+//! Shuffle/stream wire codec — the truncation-aware compressed wire of the
+//! communication-optimized GreediRIS variant (paper §3.3.2; ROADMAP
+//! "Truncation-aware shuffle compression").
+//!
+//! Both hot wires carry *sorted sample-id runs*:
+//!
+//! - **S2** (all-to-all shuffle): `[v, count, ids...]` streams, vertices
+//!   strictly ascending per stream, ids strictly ascending per run;
+//! - **S3** (sender → receiver seed stream): one `<x, S(x)>` run per
+//!   shipped seed.
+//!
+//! Sortedness is what makes the wire compressible: every vertex and id is
+//! delta-encoded against its predecessor and the (small) deltas are
+//! LEB128-varint packed. The codec is **lossless** — `decode(encode(s)) ==
+//! s` exactly, so the receiver-side [`InvertedIndex`] CSR is byte-for-byte
+//! identical to the uncompressed path (pinned by `tests/transport.rs`).
+//!
+//! Every payload starts with a one-byte format tag so raw and compressed
+//! senders can interoperate and the A/B benches can measure both forms on
+//! the same wire:
+//!
+//! | tag | format |
+//! |-----|--------|
+//! | 0   | raw little-endian `u32` words |
+//! | 1   | delta-varint (vertices delta-chained across runs, ids within) |
+//!
+//! [`InvertedIndex`]: crate::maxcover::InvertedIndex
+
+use crate::{SampleId, Vertex};
+
+/// Format tag: raw little-endian u32 words.
+pub const FMT_RAW: u8 = 0;
+/// Format tag: delta-varint.
+pub const FMT_DELTA_VARINT: u8 = 1;
+
+/// Appends `x` as a LEB128 varint.
+#[inline]
+pub fn put_varint(buf: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+/// Encoded length of `x` as a LEB128 varint.
+#[inline]
+pub fn varint_len(x: u64) -> usize {
+    (((64 - (x | 1).leading_zeros() as usize) + 6) / 7).max(1)
+}
+
+/// Byte-cursor reader for the decode paths.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    #[inline]
+    pub fn byte(&mut self) -> u8 {
+        let b = self.buf[self.pos];
+        self.pos += 1;
+        b
+    }
+
+    #[inline]
+    pub fn varint(&mut self) -> u64 {
+        let mut x = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.byte();
+            x |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return x;
+            }
+            shift += 7;
+        }
+    }
+
+    #[inline]
+    pub fn u32_le(&mut self) -> u32 {
+        let w = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        w
+    }
+}
+
+/// Encodes one S2 shuffle stream (`[v, count, ids...]`, vertices strictly
+/// ascending, ids sorted ascending per run) into wire bytes.
+pub fn encode_stream(stream: &[u32], compress: bool) -> Vec<u8> {
+    if !compress {
+        let mut out = Vec::with_capacity(1 + stream.len() * 4);
+        out.push(FMT_RAW);
+        for &w in stream {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        return out;
+    }
+    let mut out = Vec::with_capacity(1 + stream.len());
+    out.push(FMT_DELTA_VARINT);
+    let mut prev_v = 0u32;
+    let mut i = 0usize;
+    while i < stream.len() {
+        let v = stream[i];
+        let cnt = stream[i + 1] as usize;
+        put_varint(&mut out, (v - prev_v) as u64);
+        prev_v = v;
+        put_varint(&mut out, cnt as u64);
+        let mut prev_id = 0u32;
+        for &id in &stream[i + 2..i + 2 + cnt] {
+            put_varint(&mut out, (id - prev_id) as u64);
+            prev_id = id;
+        }
+        i += 2 + cnt;
+    }
+    out
+}
+
+/// Decodes a wire payload produced by [`encode_stream`] back into the flat
+/// `[v, count, ids...]` u32 stream. Exact inverse for both formats.
+pub fn decode_stream(bytes: &[u8]) -> Vec<u32> {
+    let mut r = Reader::new(bytes);
+    let fmt = r.byte();
+    let mut out = Vec::new();
+    match fmt {
+        FMT_RAW => {
+            while !r.is_empty() {
+                out.push(r.u32_le());
+            }
+        }
+        FMT_DELTA_VARINT => {
+            let mut prev_v = 0u32;
+            while !r.is_empty() {
+                let v = prev_v + r.varint() as u32;
+                prev_v = v;
+                let cnt = r.varint() as u32;
+                out.push(v);
+                out.push(cnt);
+                let mut prev_id = 0u32;
+                for _ in 0..cnt {
+                    let id = prev_id + r.varint() as u32;
+                    prev_id = id;
+                    out.push(id);
+                }
+            }
+        }
+        other => panic!("unknown wire format tag {other}"),
+    }
+    out
+}
+
+/// Encodes one `<x, S(x)>` covering run (S3 stream element).
+pub fn encode_run(vertex: Vertex, ids: &[SampleId], compress: bool) -> Vec<u8> {
+    let mut out = Vec::with_capacity(if compress { 2 + ids.len() } else { 1 + (ids.len() + 2) * 4 });
+    encode_run_into(&mut out, vertex, ids, compress);
+    out
+}
+
+/// Appends one encoded `<x, S(x)>` run to `out` — the allocation-free form
+/// the thread-transport senders use to frame messages in place.
+pub fn encode_run_into(out: &mut Vec<u8>, vertex: Vertex, ids: &[SampleId], compress: bool) {
+    if !compress {
+        out.reserve(1 + (ids.len() + 2) * 4);
+        out.push(FMT_RAW);
+        out.extend_from_slice(&vertex.to_le_bytes());
+        out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for &id in ids {
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+        return;
+    }
+    out.push(FMT_DELTA_VARINT);
+    put_varint(out, vertex as u64);
+    put_varint(out, ids.len() as u64);
+    let mut prev = 0u32;
+    for &id in ids {
+        put_varint(out, (id - prev) as u64);
+        prev = id;
+    }
+}
+
+/// Decodes a payload produced by [`encode_run`].
+pub fn decode_run(bytes: &[u8]) -> (Vertex, Vec<SampleId>) {
+    let mut r = Reader::new(bytes);
+    let fmt = r.byte();
+    match fmt {
+        FMT_RAW => {
+            let v = r.u32_le();
+            let cnt = r.u32_le() as usize;
+            let ids = (0..cnt).map(|_| r.u32_le()).collect();
+            (v, ids)
+        }
+        FMT_DELTA_VARINT => {
+            let v = r.varint() as Vertex;
+            let cnt = r.varint() as usize;
+            let mut ids = Vec::with_capacity(cnt);
+            let mut prev = 0u32;
+            for _ in 0..cnt {
+                prev += r.varint() as u32;
+                ids.push(prev);
+            }
+            (v, ids)
+        }
+        other => panic!("unknown wire format tag {other}"),
+    }
+}
+
+/// Wire length of [`encode_run`] output without allocating (the simulated
+/// backend charges byte costs without materializing payloads).
+pub fn encoded_run_len(vertex: Vertex, ids: &[SampleId], compress: bool) -> usize {
+    if !compress {
+        return 1 + (ids.len() + 2) * 4;
+    }
+    let mut len = 1 + varint_len(vertex as u64) + varint_len(ids.len() as u64);
+    let mut prev = 0u32;
+    for &id in ids {
+        len += varint_len((id - prev) as u64);
+        prev = id;
+    }
+    len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        for x in [0u64, 1, 127, 128, 129, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, x);
+            assert_eq!(buf.len(), varint_len(x), "len of {x}");
+            assert_eq!(Reader::new(&buf).varint(), x);
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_both_formats() {
+        let stream = vec![5, 2, 0, 1, 9, 1, 0, 300, 3, 7, 8, 1000];
+        for compress in [false, true] {
+            assert_eq!(decode_stream(&encode_stream(&stream, compress)), stream);
+        }
+    }
+
+    #[test]
+    fn empty_stream_is_one_tag_byte() {
+        for compress in [false, true] {
+            let enc = encode_stream(&[], compress);
+            assert_eq!(enc.len(), 1);
+            assert!(decode_stream(&enc).is_empty());
+        }
+    }
+
+    #[test]
+    fn golden_bytes_pinned() {
+        // v5 -> [0,1], v9 -> [0]: deltas v: 5, 4; ids: (0,1), (0).
+        let enc = encode_stream(&[5, 2, 0, 1, 9, 1, 0], true);
+        assert_eq!(enc, vec![1, 5, 2, 0, 1, 4, 1, 0]);
+        // Multi-byte varints: v 300 -> 0xAC 0x02; id 1000 -> 0xE8 0x07.
+        let enc = encode_stream(&[300, 1, 1000], true);
+        assert_eq!(enc, vec![1, 0xAC, 0x02, 1, 0xE8, 0x07]);
+    }
+
+    #[test]
+    fn run_roundtrip_and_len() {
+        let cases: Vec<(Vertex, Vec<SampleId>)> = vec![
+            (0, vec![]),
+            (7, vec![0]),
+            (42, vec![1, 2, 3, 64, 65, 4096]),
+            (u32::MAX - 1, vec![0, u32::MAX - 2, u32::MAX - 1]),
+        ];
+        for (v, ids) in cases {
+            for compress in [false, true] {
+                let enc = encode_run(v, &ids, compress);
+                assert_eq!(enc.len(), encoded_run_len(v, &ids, compress));
+                assert_eq!(decode_run(&enc), (v, ids.clone()));
+            }
+        }
+    }
+
+    #[test]
+    fn compression_shrinks_dense_sorted_runs() {
+        let ids: Vec<u32> = (0..1000u32).map(|i| i * 3).collect();
+        let raw = encode_run(5, &ids, false).len();
+        let packed = encode_run(5, &ids, true).len();
+        assert!(packed * 3 < raw, "raw {raw} vs varint {packed}");
+    }
+}

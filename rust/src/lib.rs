@@ -19,9 +19,11 @@
 //!   truncated variant (§3.3.2).
 //! - [`imm`] — the IMM estimation machinery (martingale rounds, λ*, Chen'18
 //!   correction) and the OPIM-C extension.
-//! - [`distributed`] — the virtual cluster: m simulated ranks, collectives,
-//!   and an α-β network-cost model replacing the paper's 512-node Perlmutter
-//!   testbed (see DESIGN.md §3 for the substitution argument).
+//! - [`distributed`] — the rank substrate: the pluggable
+//!   [`distributed::transport`] fabric (sequential α-β cost model or
+//!   rank-per-OS-thread channels) replacing the paper's 512-node Perlmutter
+//!   testbed (see DESIGN.md §3 for the substitution argument), generic
+//!   collectives, and the delta-varint [`distributed::wire`] codec.
 //! - [`coordinator`] — the paper's contribution: the GreediRIS pipeline
 //!   (S1 sampling → S2 all-to-all → S3 senders → S4 streaming receiver),
 //!   the offline RandGreedi template, and truncation.
@@ -73,6 +75,22 @@
 //! receiver additionally publishes emission **bursts**
 //! ([`coordinator::receiver::Burst`]) whose items borrow CSR runs from a
 //! per-sender arena instead of owning per-item `Vec`s.
+//!
+//! ## Rank-parallel transport & compressed wire (PR 3)
+//!
+//! Execution is pluggable behind [`distributed::Transport`]: `sim` runs
+//! ranks sequentially under the historical cost model; `threads` runs
+//! every rank as an OS thread over channels, feeding the live threaded
+//! receiver straight from the wire. The S4 stream is consumed in the
+//! canonical (emission ordinal, sender rank) order, so **seed sets are
+//! bit-identical across backends** for the same config/seed. Both hot
+//! wires (S2 shuffle, S3 seed stream) carry delta-varint-encoded sorted
+//! runs ([`distributed::wire`], lossless — the decoded CSR is
+//! byte-for-byte today's), senders truncate at ⌈α·k⌉ and drop runs that
+//! cannot clear the receiver's broadcast live-bucket threshold floor
+//! ([`maxcover::streaming::prunable`] — lossless, volume-only), and the
+//! receiver pre-filters whole bursts against the same floor before packing
+//! any `OfferMask` (burst-level admission fusion).
 
 #![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
 

@@ -13,6 +13,7 @@
 use greediris::error::Result;
 use greediris::{anyhow, bail};
 use greediris::coordinator::{run_infmax, run_infmax_with_scorer, run_opim, Algorithm, Config, LocalSolver};
+use greediris::distributed::TransportKind;
 use greediris::diffusion::{evaluate_spread, DiffusionModel};
 use greediris::exp::inputs::{analog, build_analog, weights_for, ANALOGS};
 use greediris::exp::tables::{self, BenchScale, GraphCache};
@@ -29,13 +30,17 @@ USAGE:
   greediris run [--input NAME | --file PATH] [--algorithm A] [--model IC|LT]
                 [--m N] [--k N] [--eps F] [--alpha F] [--theta N]
                 [--solver lazy|dense-cpu|dense-xla] [--sims N] [--seed N]
-                [--s1-threads N]
+                [--s1-threads N] [--transport sim|threads]
+                [--wire varint|raw] [--prune on|off]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
   greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
   greediris inputs
 
 Algorithms: greediris | greediris-trunc | randgreedi | ripples | diimm
-Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort.";
+Transports: sim (sequential cost model) | threads (rank-per-OS-thread);
+seed sets are identical across transports for the same config/seed.
+Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
+     GREEDIRIS_TRANSPORT=sim|threads sets the default transport.";
 
 /// Minimal --flag value parser.
 struct Flags {
@@ -115,9 +120,23 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         .with_eps(flags.get("eps", 0.13)?)
         .with_alpha(flags.get("alpha", 0.125)?)
         .with_s1_threads(flags.get("s1-threads", 1usize)?);
+    if let Some(tr) = flags.map.get("transport") {
+        cfg = cfg.with_transport(tr.parse::<TransportKind>().map_err(|e| anyhow!(e))?);
+    }
+    match flags.get_str("wire", "varint").as_str() {
+        "varint" => cfg = cfg.with_wire_compression(true),
+        "raw" => cfg = cfg.with_wire_compression(false),
+        other => bail!("unknown wire format '{other}' (varint | raw)"),
+    }
+    match flags.get_str("prune", "on").as_str() {
+        "on" => cfg = cfg.with_floor_prune(true),
+        "off" => cfg = cfg.with_floor_prune(false),
+        other => bail!("unknown prune setting '{other}' (on | off)"),
+    }
     if let Some(t) = flags.map.get("theta") {
         cfg = cfg.with_theta(t.parse()?);
     }
+    let transport_kind = cfg.transport;
     let solver = flags.get_str("solver", "lazy");
     let result = match solver.as_str() {
         "lazy" => run_infmax(&g, &cfg),
@@ -132,8 +151,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         other => bail!("unknown solver '{other}'"),
     };
     println!(
-        "{} | m = {m} | theta = {} | rounds = {} | modeled time = {:.4}s (wall {:.2}s)",
+        "{} | transport = {} | m = {m} | theta = {} | rounds = {} | modeled time = {:.4}s (wall {:.2}s)",
         algorithm.as_str(),
+        transport_kind.as_str(),
         result.theta,
         result.rounds,
         result.sim_time,
@@ -141,10 +161,13 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     );
     println!("breakdown: {}", result.breakdown);
     println!(
-        "comm: all-to-all {} B | stream {} B ({} seeds) | reductions {} B",
+        "comm: all-to-all {} B (raw {} B) | stream {} B (raw {} B, {} seeds, {} pruned) | reductions {} B",
         result.volumes.alltoall_bytes,
+        result.volumes.alltoall_raw_bytes,
         result.volumes.stream_bytes,
+        result.volumes.stream_raw_bytes,
         result.volumes.streamed_seeds,
+        result.volumes.pruned_seeds,
         result.volumes.reduction_bytes
     );
     println!("worst-case approx ratio (in expectation): {:.3}", result.worst_case_ratio);

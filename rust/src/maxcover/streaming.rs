@@ -30,9 +30,131 @@
 //! scalar reference — gains are exact popcounts and duplicate ids still
 //! count once (pinned by `tests/kernels.rs`).
 
+//! ## Threshold floor & truncation-aware pruning (PR 3)
+//!
+//! [`BucketBank::prune_floor`] exports the *live-bucket threshold floor*:
+//! the largest gain bound `f` such that any element whose covering run is
+//! no longer than `l_seen` and strictly smaller than `f` is provably a
+//! no-op for this bank — every existing non-full bucket's admission
+//! threshold exceeds it, and (because the floor also caps at the next
+//! materializable bucket's threshold) so does every bucket the bank could
+//! ever create while the element is in flight. [`prunable`] packages the
+//! rule; senders use a (possibly stale) broadcast of `(floor, l_seen)` to
+//! drop runs *before* they touch the wire, and [`BucketBank::offer_burst`]
+//! uses the live values to reject a whole [`Burst`] before packing any
+//! [`OfferMask`] (the burst-level admission fusion). Both uses are
+//! lossless: the final bucket state is bit-identical to the unpruned
+//! stream (pinned by tests here and in `tests/transport.rs`).
+
 use super::bitset::{kernels, Kernels, OfferMask};
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
+
+/// One stream element, borrowing its covering run from the publishing
+/// [`Burst`]'s arena.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamItem<'a> {
+    pub vertex: Vertex,
+    pub ids: &'a [SampleId],
+}
+
+/// A burst of stream elements in CSR form — the per-sender arena the
+/// receiver's items borrow from. Senders append with [`Burst::push`]
+/// (one contiguous arena per burst, no per-item allocation) and publish
+/// the whole burst at once.
+#[derive(Clone, Debug)]
+pub struct Burst {
+    vertices: Vec<Vertex>,
+    offsets: Vec<u32>,
+    ids: Vec<SampleId>,
+    /// Longest run in the burst — the upper bound any item's marginal gain
+    /// can reach, maintained incrementally for the fused admission check.
+    max_run: usize,
+}
+
+impl Default for Burst {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Burst {
+    pub fn new() -> Self {
+        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new(), max_run: 0 }
+    }
+
+    /// A single-element burst (convenience for tests and item-at-a-time
+    /// call sites).
+    pub fn from_item(vertex: Vertex, ids: &[SampleId]) -> Self {
+        let mut b = Self::new();
+        b.push(vertex, ids);
+        b
+    }
+
+    /// Appends one `<x, S(x)>` element to the arena.
+    pub fn push(&mut self, vertex: Vertex, ids: &[SampleId]) {
+        self.vertices.push(vertex);
+        self.ids.extend_from_slice(ids);
+        self.offsets.push(self.ids.len() as u32);
+        self.max_run = self.max_run.max(ids.len());
+    }
+
+    /// Resets the burst for reuse without freeing the arena.
+    pub fn clear(&mut self) {
+        self.vertices.clear();
+        self.ids.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.max_run = 0;
+    }
+
+    /// Number of elements in the burst.
+    pub fn len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vertices.is_empty()
+    }
+
+    /// Total covering entries across the burst.
+    pub fn total_entries(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Longest covering run in the burst (0 when empty).
+    pub fn max_run_len(&self) -> usize {
+        self.max_run
+    }
+
+    /// The `i`-th element, borrowing its run from the arena.
+    #[inline]
+    pub fn item(&self, i: usize) -> StreamItem<'_> {
+        StreamItem {
+            vertex: self.vertices[i],
+            ids: &self.ids[self.offsets[i] as usize..self.offsets[i + 1] as usize],
+        }
+    }
+
+    /// Iterates the elements in publication order.
+    pub fn iter(&self) -> impl Iterator<Item = StreamItem<'_>> + '_ {
+        (0..self.len()).map(move |i| self.item(i))
+    }
+}
+
+/// The lossless sender-side drop rule: an element whose covering run has
+/// `run_len` entries can never change a bank's state — now or later — when
+/// `run_len ≤ l_seen` (it cannot raise the online OPT lower bound, so it
+/// materializes no bucket) and `run_len < floor` (its gain upper bound
+/// clears no live non-full bucket, and every future bucket's threshold is
+/// at least the floor's next-bucket cap). Safe with *stale* `(floor,
+/// l_seen)` snapshots because both quantities are monotone nondecreasing.
+#[inline]
+pub fn prunable(run_len: usize, l_seen: u64, floor: f64) -> bool {
+    // `s` mirrors the bank's effective size (`ids.len().max(1)`).
+    let s = run_len.max(1);
+    s as u64 <= l_seen && (s as f64) < floor
+}
 
 /// State of a single threshold bucket.
 #[derive(Clone, Debug)]
@@ -218,15 +340,7 @@ impl BucketBank {
 
     /// Best bucket's solution.
     pub fn best(&self) -> CoverSolution {
-        self.buckets
-            .iter()
-            .max_by(|a, b| a.1.coverage().cmp(&b.1.coverage()).then(b.0.cmp(&a.0)))
-            .map(|(_, b)| CoverSolution {
-                seeds: b.seeds.clone(),
-                gains: b.gains.clone(),
-                coverage: b.coverage(),
-            })
-            .unwrap_or_default()
+        best_across(self.buckets.iter())
     }
 
     pub fn len(&self) -> usize {
@@ -236,6 +350,66 @@ impl BucketBank {
     pub fn is_empty(&self) -> bool {
         self.buckets.is_empty()
     }
+
+    /// The online OPT lower bound `l` (largest subset size seen so far).
+    pub fn l_seen(&self) -> u64 {
+        self.l_seen
+    }
+
+    /// The live-bucket threshold floor (see the module docs): the minimum
+    /// of every owned non-full bucket's admission threshold and the
+    /// threshold of the next bucket that could ever be materialized
+    /// (`(1+δ)^(hi+1) / 2k`). `0.0` before any element has been processed —
+    /// nothing may be pruned against an uninitialized bank.
+    pub fn prune_floor(&self) -> f64 {
+        let Some(hi) = self.hi else { return 0.0 };
+        let next = (1.0 + self.delta).powi(hi + 1) / (2.0 * self.k as f64);
+        let k = self.k;
+        self.buckets
+            .iter()
+            .filter(|(_, b)| b.seeds.len() < k)
+            .map(|(_, b)| b.opt_guess / (2.0 * k as f64))
+            .fold(next, f64::min)
+    }
+
+    /// Burst-level admission fusion: rejects a whole [`Burst`] against the
+    /// live threshold floor before packing any [`OfferMask`] — when even
+    /// the burst's longest run is [`prunable`], no element can be admitted
+    /// anywhere and no bucket (nor the shared mask) is touched. Otherwise
+    /// falls through to per-element [`BucketBank::offer`]. Bit-identical to
+    /// offering every element individually.
+    pub fn offer_burst(&mut self, burst: &Burst) -> usize {
+        if burst.is_empty() {
+            return 0;
+        }
+        if prunable(burst.max_run_len(), self.l_seen, self.prune_floor()) {
+            return 0;
+        }
+        let mut adm = 0;
+        for item in burst.iter() {
+            adm += self.offer(item.vertex, item.ids);
+        }
+        adm
+    }
+}
+
+/// Picks the best bucket across any collection of `(exponent, bucket)`
+/// pairs with the exact tie-break of the sequential bank (max coverage,
+/// then the ascending-exponent iteration order of a single bank). Sorting
+/// by exponent first makes the result identical whether the buckets come
+/// from one bank or from residue-sharded banks — the threaded receiver
+/// aggregates through this same function so the two engines cannot drift.
+pub fn best_across<'a>(buckets: impl Iterator<Item = &'a (i32, Bucket)>) -> CoverSolution {
+    let mut all: Vec<&(i32, Bucket)> = buckets.collect();
+    all.sort_by_key(|b| b.0);
+    all.into_iter()
+        .max_by(|a, b| a.1.coverage().cmp(&b.1.coverage()).then(b.0.cmp(&a.0)))
+        .map(|(_, b)| CoverSolution {
+            seeds: b.seeds.clone(),
+            gains: b.gains.clone(),
+            coverage: b.coverage(),
+        })
+        .unwrap_or_default()
 }
 
 /// One-pass streaming max-k-cover solver (sequential form — the threaded
@@ -270,6 +444,25 @@ impl StreamingMaxCover {
     pub fn offer(&mut self, v: Vertex, ids: &[SampleId]) {
         self.processed += 1;
         self.insertions += self.bank.offer(v, ids);
+    }
+
+    /// Processes a whole [`Burst`] through the fused admission sweep
+    /// ([`BucketBank::offer_burst`]) — bit-identical to offering each
+    /// element, but a burst whose longest run cannot clear the threshold
+    /// floor never touches a bucket.
+    pub fn offer_burst(&mut self, burst: &Burst) {
+        self.processed += burst.len();
+        self.insertions += self.bank.offer_burst(burst);
+    }
+
+    /// The online OPT lower bound `l` (see [`BucketBank::l_seen`]).
+    pub fn l_seen(&self) -> u64 {
+        self.bank.l_seen()
+    }
+
+    /// The live-bucket threshold floor (see [`BucketBank::prune_floor`]).
+    pub fn prune_floor(&self) -> f64 {
+        self.bank.prune_floor()
     }
 
     /// Returns the solution of the best bucket (`b* = argmax_b |C_b|`).
@@ -446,6 +639,140 @@ mod tests {
         a.offer(1, &[1, 2, 3]);
         b.offer(1, &[3, 1, 2]);
         assert_eq!(a.finalize(), b.finalize());
+    }
+
+    fn random_items(seed: u64, n: usize, theta: usize, max_len: u64) -> Vec<Vec<u32>> {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let len = 1 + rng.gen_range(max_len) as usize;
+                let mut v: Vec<u32> =
+                    (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_burst_offer_is_bit_identical_to_per_item() {
+        for seed in 0..8u64 {
+            let theta = 400;
+            let k = 6;
+            let items = random_items(seed, 80, theta, 30);
+            let mut per_item = StreamingMaxCover::new(theta, k, 0.12);
+            for (i, ids) in items.iter().enumerate() {
+                per_item.offer(i as u32, ids);
+            }
+            let mut fused = StreamingMaxCover::new(theta, k, 0.12);
+            // Group into bursts of 5.
+            let mut i = 0usize;
+            let mut burst = Burst::new();
+            while i < items.len() {
+                burst.clear();
+                for j in i..(i + 5).min(items.len()) {
+                    burst.push(j as u32, &items[j]);
+                }
+                fused.offer_burst(&burst);
+                i += 5;
+            }
+            let a = per_item.finalize();
+            let b = fused.finalize();
+            assert_eq!(a.seeds, b.seeds, "seed {seed}");
+            assert_eq!(a.coverage, b.coverage, "seed {seed}");
+            assert_eq!(per_item.num_buckets(), fused.num_buckets(), "seed {seed}");
+            // Every bucket's internal state must agree, not just the best.
+            for (x, y) in per_item.buckets().zip(fused.buckets()) {
+                assert_eq!(x.seeds, y.seeds, "seed {seed}");
+                assert_eq!(x.coverage(), y.coverage(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn floor_and_l_are_monotone_nondecreasing() {
+        let items = random_items(5, 120, 512, 40);
+        let mut s = StreamingMaxCover::new(512, 4, 0.1);
+        assert_eq!(s.prune_floor(), 0.0, "uninitialized bank must prune nothing");
+        assert_eq!(s.l_seen(), 0);
+        let (mut floor, mut l) = (0.0f64, 0u64);
+        for (i, ids) in items.iter().enumerate() {
+            s.offer(i as u32, ids);
+            let (f2, l2) = (s.prune_floor(), s.l_seen());
+            assert!(f2 >= floor, "floor regressed: {f2} < {floor}");
+            assert!(l2 >= l);
+            floor = f2;
+            l = l2;
+        }
+        assert!(floor > 0.0);
+    }
+
+    #[test]
+    fn stale_floor_pruning_is_lossless() {
+        // Dropping every element that a *stale* (floor, l) snapshot marks
+        // prunable must leave the final bank state bit-identical.
+        for seed in 0..8u64 {
+            let theta = 400;
+            let k = 5;
+            let items = random_items(seed.wrapping_mul(77).wrapping_add(3), 150, theta, 35);
+            let mut full = StreamingMaxCover::new(theta, k, 0.1);
+            for (i, ids) in items.iter().enumerate() {
+                full.offer(i as u32, ids);
+            }
+            let mut pruned = StreamingMaxCover::new(theta, k, 0.1);
+            let mut snapshot = (0.0f64, 0u64);
+            let mut dropped = 0usize;
+            for (i, ids) in items.iter().enumerate() {
+                if prunable(ids.len(), snapshot.1, snapshot.0) {
+                    dropped += 1;
+                } else {
+                    pruned.offer(i as u32, ids);
+                }
+                // Refresh the snapshot only every 7 elements — senders see
+                // stale state, which must still be safe.
+                if i % 7 == 6 {
+                    snapshot = (pruned.prune_floor(), pruned.l_seen());
+                }
+            }
+            let a = full.finalize();
+            let b = pruned.finalize();
+            assert_eq!(a.seeds, b.seeds, "seed {seed} (dropped {dropped})");
+            assert_eq!(a.coverage, b.coverage, "seed {seed}");
+            assert_eq!(full.num_buckets(), pruned.num_buckets(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn best_across_matches_single_bank_tiebreak() {
+        let items = random_items(9, 60, 256, 25);
+        let mut seq = StreamingMaxCover::new(256, 5, 0.15);
+        let t = 4;
+        let mut banks: Vec<BucketBank> =
+            (0..t).map(|j| BucketBank::new(256, 5, 0.15, j, t)).collect();
+        for (i, ids) in items.iter().enumerate() {
+            seq.offer(i as u32, ids);
+            for b in &mut banks {
+                b.offer(i as u32, ids);
+            }
+        }
+        let sharded = best_across(banks.iter().flat_map(|b| b.buckets.iter()));
+        let sequential = seq.finalize();
+        assert_eq!(sequential.seeds, sharded.seeds);
+        assert_eq!(sequential.coverage, sharded.coverage);
+    }
+
+    #[test]
+    fn burst_arena_tracks_max_run() {
+        let mut b = Burst::new();
+        assert_eq!(b.max_run_len(), 0);
+        b.push(7, &[0, 1, 2]);
+        b.push(9, &[3]);
+        assert_eq!(b.max_run_len(), 3);
+        assert_eq!(b.item(0).ids, &[0, 1, 2]);
+        b.clear();
+        assert_eq!(b.max_run_len(), 0);
+        assert!(b.is_empty());
     }
 
     #[test]

@@ -58,12 +58,20 @@ impl fmt::Display for Breakdown {
 /// Communication-volume counters (bytes on the modeled wire).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CommVolume {
+    /// S2 shuffle bytes actually on the wire (encoded).
     pub alltoall_bytes: u64,
+    /// Uncompressed-equivalent S2 bytes (the compression A/B denominator).
+    pub alltoall_raw_bytes: u64,
+    /// S3 stream bytes actually on the wire (encoded runs + tombstones).
     pub stream_bytes: u64,
+    /// Uncompressed-equivalent S3 bytes including pruned emissions.
+    pub stream_raw_bytes: u64,
     pub reduction_bytes: u64,
     pub broadcast_bytes: u64,
     /// Number of seeds shipped sender→receiver (streaming path).
     pub streamed_seeds: u64,
+    /// Emissions dropped by the threshold-floor rule (never on the wire).
+    pub pruned_seeds: u64,
 }
 
 impl CommVolume {
@@ -73,10 +81,13 @@ impl CommVolume {
 
     pub fn add(&mut self, o: &CommVolume) {
         self.alltoall_bytes += o.alltoall_bytes;
+        self.alltoall_raw_bytes += o.alltoall_raw_bytes;
         self.stream_bytes += o.stream_bytes;
+        self.stream_raw_bytes += o.stream_raw_bytes;
         self.reduction_bytes += o.reduction_bytes;
         self.broadcast_bytes += o.broadcast_bytes;
         self.streamed_seeds += o.streamed_seeds;
+        self.pruned_seeds += o.pruned_seeds;
     }
 }
 

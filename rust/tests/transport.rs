@@ -1,0 +1,236 @@
+//! End-to-end guarantees of the PR-3 execution engine:
+//!
+//! - the delta-varint wire codec round-trips every stream (property +
+//!   golden bytes);
+//! - the compressed S2 wire decodes to the uncompressed `InvertedIndex`
+//!   CSR byte-for-byte;
+//! - `run_infmax` under `ThreadTransport` selects seed sets identical to
+//!   `SimTransport` for the same config/seed (m ∈ {1, 2, 8});
+//! - threshold-floor pruning and wire compression never change seeds;
+//! - truncated runs respect the `greediris_trunc_ratio` quality bound.
+
+use greediris::coordinator::sampling::{grow_to, DistState};
+use greediris::coordinator::{run_infmax, Algorithm, Config};
+use greediris::diffusion::DiffusionModel;
+use greediris::distributed::{wire, NetModel, TransportKind};
+use greediris::graph::weights::WeightModel;
+use greediris::graph::{generators, Graph};
+use greediris::imm::bounds;
+use greediris::maxcover::lazy_greedy_max_cover;
+use greediris::maxcover::SetSystem;
+use greediris::rng::Xoshiro256pp;
+
+fn graph() -> Graph {
+    let edges = generators::barabasi_albert(600, 5, 13);
+    Graph::from_edges(600, &edges, WeightModel::UniformIc { max: 0.1 }, 13)
+}
+
+fn cfg(algo: Algorithm, m: usize, kind: TransportKind) -> Config {
+    Config::new(10, m, DiffusionModel::IC, algo)
+        .with_theta(1024)
+        .with_transport(kind)
+}
+
+// ---------------------------------------------------------------- codec --
+
+#[test]
+fn varint_roundtrip_property() {
+    // Random streams incl. empty stream, empty-ish runs (singleton),
+    // sparse runs, and dense runs over a small id space.
+    let mut rng = Xoshiro256pp::seeded(0xC0DEC);
+    for case in 0..200 {
+        let n_runs = (rng.gen_range(8)) as usize; // 0..8 runs, incl. empty stream
+        let mut stream: Vec<u32> = Vec::new();
+        let mut v = 0u32;
+        for _ in 0..n_runs {
+            v += 1 + rng.gen_range(1000) as u32;
+            let dense = rng.gen_range(3) == 0;
+            let len = if dense {
+                64 + rng.gen_range(192) as usize
+            } else {
+                1 + rng.gen_range(5) as usize
+            };
+            let space = if dense { 1024 } else { 1 << 20 };
+            let mut ids: Vec<u32> = (0..len).map(|_| rng.gen_range(space) as u32).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            stream.push(v);
+            stream.push(ids.len() as u32);
+            stream.extend_from_slice(&ids);
+        }
+        for compress in [false, true] {
+            let enc = wire::encode_stream(&stream, compress);
+            assert_eq!(wire::decode_stream(&enc), stream, "case {case} compress {compress}");
+        }
+        // Single-run framing too.
+        if n_runs > 0 {
+            let cnt = stream[1] as usize;
+            let (rv, rids) = (stream[0], stream[2..2 + cnt].to_vec());
+            for compress in [false, true] {
+                let enc = wire::encode_run(rv, &rids, compress);
+                assert_eq!(enc.len(), wire::encoded_run_len(rv, &rids, compress));
+                assert_eq!(wire::decode_run(&enc), (rv, rids.clone()));
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_bytes_for_pinned_stream() {
+    // v5 -> [0, 1, 129], v9 -> [300]:
+    //   tag 1,
+    //   Δv = 5, count 2+1... runs: (5, 3, Δids 0,1,128=0x80 0x01), (Δ4, 1, Δ300).
+    let stream = vec![5, 3, 0, 1, 129, 9, 1, 300];
+    let enc = wire::encode_stream(&stream, true);
+    assert_eq!(enc, vec![1, 5, 3, 0, 1, 0x80, 0x01, 4, 1, 0xAC, 0x02]);
+    assert_eq!(wire::decode_stream(&enc), stream);
+    // Raw form: 1 tag byte + LE words.
+    let raw = wire::encode_stream(&stream, false);
+    assert_eq!(raw.len(), 1 + stream.len() * 4);
+    assert_eq!(raw[0], 0);
+    assert_eq!(&raw[1..5], &5u32.to_le_bytes());
+}
+
+// ------------------------------------------------------------- S2 wire --
+
+#[test]
+fn compressed_shuffle_decodes_to_identical_csr() {
+    // α=1, pruning off: the compressed wire must reproduce the raw wire's
+    // accumulated InvertedIndex byte-for-byte, across growth rounds and
+    // both transports.
+    let g = graph();
+    let m = 6;
+    let build = |kind: TransportKind, compress: bool| {
+        let c = cfg(Algorithm::GreediRis, m, kind)
+            .with_wire_compression(compress)
+            .with_floor_prune(false);
+        let mut t = greediris::distributed::make_transport(kind, m, NetModel::free());
+        let mut st = DistState::new(g.n(), m, &(1..m).collect::<Vec<_>>(), c.seed, 0, true);
+        grow_to(t.as_mut(), &g, &c, &mut st, 300);
+        grow_to(t.as_mut(), &g, &c, &mut st, 700);
+        st
+    };
+    let reference = build(TransportKind::Sim, false);
+    for kind in [TransportKind::Sim, TransportKind::Threads] {
+        for compress in [true, false] {
+            let st = build(kind, compress);
+            for p in 0..m {
+                assert_eq!(
+                    st.covers[p].vertices, reference.covers[p].vertices,
+                    "{kind:?} compress={compress} rank {p}"
+                );
+                assert_eq!(st.covers[p].offsets, reference.covers[p].offsets);
+                assert_eq!(st.covers[p].ids, reference.covers[p].ids);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- end-to-end equality --
+
+#[test]
+fn thread_transport_seeds_equal_sim_transport() {
+    let g = graph();
+    for m in [1usize, 2, 8] {
+        let sim = run_infmax(&g, &cfg(Algorithm::GreediRis, m, TransportKind::Sim));
+        let thr = run_infmax(&g, &cfg(Algorithm::GreediRis, m, TransportKind::Threads));
+        assert_eq!(sim.seeds, thr.seeds, "m={m}");
+        assert_eq!(sim.coverage, thr.coverage, "m={m}");
+        assert_eq!(sim.theta, thr.theta, "m={m}");
+    }
+}
+
+#[test]
+fn thread_transport_matches_sim_under_truncation() {
+    let g = graph();
+    let sim = run_infmax(
+        &g,
+        &cfg(Algorithm::GreediRisTrunc, 6, TransportKind::Sim).with_alpha(0.5),
+    );
+    let thr = run_infmax(
+        &g,
+        &cfg(Algorithm::GreediRisTrunc, 6, TransportKind::Threads).with_alpha(0.5),
+    );
+    assert_eq!(sim.seeds, thr.seeds);
+    assert_eq!(sim.coverage, thr.coverage);
+}
+
+#[test]
+fn thread_transport_matches_sim_with_martingale_rounds() {
+    // No θ override: the martingale driver's round decisions must also
+    // agree (they depend only on per-round coverage, which is equal).
+    let edges = generators::barabasi_albert(300, 4, 7);
+    let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 7);
+    let mk = |kind| {
+        let mut c = Config::new(6, 4, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_transport(kind);
+        c.eps = 0.3;
+        run_infmax(&g, &c)
+    };
+    let sim = mk(TransportKind::Sim);
+    let thr = mk(TransportKind::Threads);
+    assert_eq!(sim.seeds, thr.seeds);
+    assert_eq!(sim.rounds, thr.rounds);
+    assert_eq!(sim.theta, thr.theta);
+}
+
+#[test]
+fn pruning_and_compression_never_change_seeds() {
+    let g = graph();
+    for kind in [TransportKind::Sim, TransportKind::Threads] {
+        let base = run_infmax(
+            &g,
+            &cfg(Algorithm::GreediRis, 5, kind).with_floor_prune(false).with_wire_compression(false),
+        );
+        for (prune, compress) in [(true, false), (false, true), (true, true)] {
+            let r = run_infmax(
+                &g,
+                &cfg(Algorithm::GreediRis, 5, kind)
+                    .with_floor_prune(prune)
+                    .with_wire_compression(compress),
+            );
+            assert_eq!(r.seeds, base.seeds, "{kind:?} prune={prune} compress={compress}");
+            assert_eq!(r.coverage, base.coverage);
+            if compress {
+                assert!(r.volumes.alltoall_bytes < base.volumes.alltoall_bytes);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ quality bounds --
+
+#[test]
+fn truncated_runs_respect_trunc_ratio_bound() {
+    let g = graph();
+    for alpha in [0.5, 1.0] {
+        let c = cfg(Algorithm::GreediRisTrunc, 6, TransportKind::Sim).with_alpha(alpha);
+        let r = run_infmax(&g, &c);
+        // Reference: sequential greedy over the union of all samples — a
+        // lower bound on OPT's coverage, so `ratio · reference` is an
+        // easier target than `ratio · OPT`; the configuration's worst-case
+        // ratio must clear it comfortably on these generator graphs.
+        let sim_state = {
+            let mut t = greediris::distributed::make_transport(
+                TransportKind::Sim,
+                c.m,
+                NetModel::free(),
+            );
+            let mut st =
+                DistState::new(g.n(), c.m, &(1..c.m).collect::<Vec<_>>(), c.seed, 1 << 40, false);
+            grow_to(t.as_mut(), &g, &c, &mut st, r.theta);
+            st
+        };
+        let batches: Vec<_> = sim_state.local_batches.iter().flatten().collect();
+        let sys = SetSystem::invert(g.n(), &batches, r.theta as usize);
+        let reference = lazy_greedy_max_cover(sys.view(), c.k).coverage as f64;
+        let bound = bounds::greediris_trunc_ratio(alpha, c.delta, c.eps);
+        assert!(
+            r.coverage as f64 >= bound * reference,
+            "alpha={alpha}: coverage {} below bound {bound:.3} x reference {reference}",
+            r.coverage
+        );
+        // Sanity: the bound itself must order correctly.
+        assert!(bound <= bounds::greediris_ratio(c.delta, c.eps) + 1e-12);
+    }
+}

@@ -1,51 +1,69 @@
 #!/usr/bin/env bash
 # CI gate + perf-trajectory record.
 #
-#   1. tier-1 (default features): cargo build --release && cargo test -q
-#   2. tier-1 (simd feature):     cargo build --release --features simd &&
-#      cargo test -q --features simd — both passes must be green; a failure
-#      in either fails the gate.
-#   3. quick-scale micro benches (sampling / shuffle / maxcover) through the
-#      in-tree harness (src/exp/bench.rs), each measurement exported as a
-#      JSON line via GREEDIRIS_BENCH_JSON.
-#   4. assemble the lines into BENCH_PR2.json at the repo root — the current
-#      perf record, carrying the scalar-vs-SIMD A/B pairs for the PR-2
-#      kernels (streaming_masked_scalar_* vs streaming_masked_simd_* for
-#      Bucket::try_admit, dense_cpu_scalar_* vs dense_cpu_simd_* for
-#      CpuScorer::best, merge_csr_kway_* vs merge_csr_counting_* for the
-#      shuffle merge) next to the PR-1 ladder entries
-#      (streaming_pr1_staged_*, streaming_twopass_legacy_*,
-#      invert_hashmap_legacy_*, merge_hashmap_legacy_*). The bench binaries
-#      also print the ratios and assert all variants bit-identical.
-#   5. BENCH_PR1.json: the PR-1 baseline future PRs diff against. PR 1's
-#      container had no Rust toolchain, so the repo carries a marked
-#      placeholder; the first run on a toolchain-equipped host replaces it
-#      with the measured array (the *_legacy_* / *_pr1_* / *_scalar_*
-#      entries inside it are the baseline series). An already-measured
-#      BENCH_PR1.json is never overwritten.
+#   1. tier-1 crossed matrix: {default, --features simd} x {sim, threads}
+#      transports — `cargo build --release` once per feature set, then
+#      `cargo test -q` with GREEDIRIS_TRANSPORT set to each backend. All
+#      four passes must be green; a failure in any fails the gate.
+#   2. transport seed-divergence gate: the same `greediris run` executed
+#      under --transport sim and --transport threads must print identical
+#      seed sets (the rank-parallel engine is bit-equal by design; this
+#      catches drift at the CLI level on top of tests/transport.rs).
+#   3. quick-scale micro benches (sampling / shuffle / maxcover /
+#      transport) through the in-tree harness (src/exp/bench.rs), each
+#      measurement exported as a JSON line via GREEDIRIS_BENCH_JSON.
+#   4. assemble the lines into BENCH_PR3.json at the repo root — the
+#      current perf record. New PR-3 A/B pairs (see scripts/README.md):
+#      infmax_sim_* vs infmax_threads_* (wall medians + makespan extras),
+#      wire_raw_bytes vs wire_varint_bytes, wire_{encode,decode}_{raw,
+#      varint}_*, and stream_bytes_pruned vs stream_bytes_unpruned —
+#      next to the PR-2 scalar-vs-SIMD pairs and PR-1 ladder entries.
+#   5. BENCH_PR1.json / BENCH_PR2.json: earlier baselines future PRs diff
+#      against. The authoring containers had no Rust toolchain, so the
+#      repo may carry marked placeholders; the first run on a
+#      toolchain-equipped host replaces a placeholder (or missing file)
+#      with this run's measured array. An already-measured baseline is
+#      never overwritten.
 #
 # Env: GREEDIRIS_BENCH_SCALE=quick|full (default quick)
 #      GREEDIRIS_SIMD=scalar|avx2|wide to pin the dispatched backend
+#      GREEDIRIS_TRANSPORT=sim|threads default transport (the matrix below
+#      sets it explicitly)
 #      (see scripts/README.md)
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 
-echo "== tier-1: build (default features) =="
-cargo build --release
+for FEATURES in "" "--features simd"; do
+  echo "== tier-1: build (${FEATURES:-default features}) =="
+  # shellcheck disable=SC2086
+  cargo build --release $FEATURES
 
-echo "== tier-1: test (default features) =="
-cargo test -q
+  for TRANSPORT in sim threads; do
+    echo "== tier-1: test (${FEATURES:-default features}, transport=$TRANSPORT) =="
+    # shellcheck disable=SC2086
+    GREEDIRIS_TRANSPORT=$TRANSPORT cargo test -q $FEATURES
+  done
+done
 
-echo "== tier-1: build (--features simd) =="
-cargo build --release --features simd
-
-echo "== tier-1: test (--features simd) =="
-cargo test -q --features simd
+echo "== transport seed-divergence gate =="
+BIN="$ROOT/rust/target/release/greediris"
+# k <= 20: the CLI prints at most 20 seeds, and the gate must compare the
+# full selected set.
+RUN_ARGS=(run --input dblp --m 8 --k 20 --theta 2048 --sims 0)
+SIM_SEEDS="$("$BIN" "${RUN_ARGS[@]}" --transport sim | grep '^seeds:')"
+THR_SEEDS="$("$BIN" "${RUN_ARGS[@]}" --transport threads | grep '^seeds:')"
+if [ "$SIM_SEEDS" != "$THR_SEEDS" ]; then
+  echo "error: transport seed sets diverged" >&2
+  echo "  sim:     $SIM_SEEDS" >&2
+  echo "  threads: $THR_SEEDS" >&2
+  exit 1
+fi
+echo "seed sets identical across transports"
 
 echo "== micro benches (scale: ${GREEDIRIS_BENCH_SCALE:-quick}) =="
-JSONL="$ROOT/rust/target/bench_pr2.jsonl"
+JSONL="$ROOT/rust/target/bench_pr3.jsonl"
 rm -f "$JSONL"
 export GREEDIRIS_BENCH_JSON="$JSONL"
 export GREEDIRIS_BENCH_SCALE="${GREEDIRIS_BENCH_SCALE:-quick}"
@@ -53,12 +71,13 @@ export GREEDIRIS_BENCH_SCALE="${GREEDIRIS_BENCH_SCALE:-quick}"
 cargo bench --bench micro_sampling
 cargo bench --bench micro_shuffle
 cargo bench --bench micro_maxcover
+cargo bench --bench micro_transport
 
 if [ ! -s "$JSONL" ]; then
   echo "error: no bench measurements were exported to $JSONL" >&2
   exit 1
 fi
-OUT="$ROOT/BENCH_PR2.json"
+OUT="$ROOT/BENCH_PR3.json"
 {
   echo '['
   paste -sd, "$JSONL"
@@ -66,10 +85,11 @@ OUT="$ROOT/BENCH_PR2.json"
 } > "$OUT"
 echo "wrote $OUT ($(grep -c . "$JSONL") measurements)"
 
-BASE="$ROOT/BENCH_PR1.json"
-if [ ! -f "$BASE" ] || grep -q '"provenance"' "$BASE"; then
-  cp "$OUT" "$BASE"
-  echo "bootstrapped $BASE from this run (baseline series: *_legacy_* / *_pr1_* / *_scalar_* entries)"
-else
-  echo "kept existing $BASE baseline"
-fi
+for BASE in "$ROOT/BENCH_PR1.json" "$ROOT/BENCH_PR2.json"; do
+  if [ ! -f "$BASE" ] || grep -q '"provenance"' "$BASE"; then
+    cp "$OUT" "$BASE"
+    echo "bootstrapped $BASE from this run"
+  else
+    echo "kept existing $BASE baseline"
+  fi
+done
