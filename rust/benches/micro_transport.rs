@@ -11,8 +11,11 @@
 //! 3. Pruned vs unpruned shuffle volume — `stream_bytes` with the
 //!    threshold-floor pruning on/off (seeds asserted equal), exported as
 //!    byte extras.
+//! 4. PR-4 overlap A/B — `infmax_overlap_on_*` vs `infmax_overlap_off_*`
+//!    on the threads backend (wall medians + `makespan_s` extras), seeds
+//!    asserted bit-identical before timing.
 //!
-//! `scripts/ci.sh` collects every line into `BENCH_PR3.json`.
+//! `scripts/ci.sh` collects every line into `BENCH_PR4.json`.
 
 use greediris::coordinator::sampling::{invert_batch_to_streams, DistState};
 use greediris::coordinator::{run_infmax, Algorithm, Config};
@@ -82,8 +85,8 @@ fn main() {
     );
     // Lossless round-trip sanity before timing.
     for s in &streams {
-        assert_eq!(&wire::decode_stream(&wire::encode_stream(s, true)), s);
-        assert_eq!(&wire::decode_stream(&wire::encode_stream(s, false)), s);
+        assert_eq!(&wire::decode_stream(&wire::encode_stream(s, true)).unwrap(), s);
+        assert_eq!(&wire::decode_stream(&wire::encode_stream(s, false)).unwrap(), s);
     }
     b.bench("wire_encode_raw_4k_samples", || {
         streams.iter().map(|s| wire::encode_stream(s, false).len()).sum::<usize>()
@@ -94,10 +97,10 @@ fn main() {
     let enc_raw: Vec<Vec<u8>> = streams.iter().map(|s| wire::encode_stream(s, false)).collect();
     let enc_var: Vec<Vec<u8>> = streams.iter().map(|s| wire::encode_stream(s, true)).collect();
     b.bench("wire_decode_raw_4k_samples", || {
-        enc_raw.iter().map(|e| wire::decode_stream(e).len()).sum::<usize>()
+        enc_raw.iter().map(|e| wire::decode_stream(e).unwrap().len()).sum::<usize>()
     });
     b.bench("wire_decode_varint_4k_samples", || {
-        enc_var.iter().map(|e| wire::decode_stream(e).len()).sum::<usize>()
+        enc_var.iter().map(|e| wire::decode_stream(e).unwrap().len()).sum::<usize>()
     });
 
     // ---- A/B: pruned vs unpruned stream volume (identical seeds). ----
@@ -110,5 +113,42 @@ fn main() {
     println!(
         "stream bytes pruned {} vs unpruned {} ({} emissions dropped)",
         pruned.volumes.stream_bytes, unpruned.volumes.stream_bytes, pruned.volumes.pruned_seeds
+    );
+
+    // ---- A/B (PR 4): overlapped vs phase-stepped round on the threads
+    // backend — the fused S1→S4 pipeline vs barrier-separated stages.
+    // Seeds and raw-byte counters must be bit-identical; wall and modeled
+    // makespan are the win.
+    let cfg_thr = cfg_base.clone().with_transport(TransportKind::Threads);
+    let on_ref = run_infmax(&g, &cfg_thr.clone().with_overlap(true));
+    let off_ref = run_infmax(&g, &cfg_thr.clone().with_overlap(false));
+    assert_eq!(on_ref.seeds, off_ref.seeds, "overlap must not change seeds");
+    assert_eq!(
+        on_ref.volumes.alltoall_raw_bytes, off_ref.volumes.alltoall_raw_bytes,
+        "raw-byte counters must be chunking-invariant"
+    );
+    export_extra("infmax_overlap_on_m8_theta4096", "makespan_s", on_ref.sim_time);
+    export_extra("infmax_overlap_off_m8_theta4096", "makespan_s", off_ref.sim_time);
+    export_extra("overlap_chunks", "count", on_ref.breakdown.overlap.chunks as f64);
+    export_extra(
+        "overlap_inflight_bytes_at_s3",
+        "bytes",
+        on_ref.breakdown.overlap.inflight_bytes_at_s3 as f64,
+    );
+    let on_stats = b.bench("infmax_overlap_on_m8_theta4096", || {
+        run_infmax(&g, &cfg_thr.clone().with_overlap(true)).coverage
+    });
+    let off_stats = b.bench("infmax_overlap_off_m8_theta4096", || {
+        run_infmax(&g, &cfg_thr.clone().with_overlap(false)).coverage
+    });
+    println!(
+        "threads overlap on-vs-off: wall {:.2}x (off {:.3}s vs on {:.3}s medians), \
+         makespan {:.2}x (off {:.4}s vs on {:.4}s)",
+        off_stats.median / on_stats.median,
+        off_stats.median,
+        on_stats.median,
+        off_ref.sim_time / on_ref.sim_time,
+        off_ref.sim_time,
+        on_ref.sim_time,
     );
 }

@@ -122,6 +122,7 @@ mod tests {
             covers: vec![InvertedIndex::new(), InvertedIndex::new()],
             local_batches: vec![Vec::new(), Vec::new()],
             do_shuffle: false,
+            ready: vec![0.0; 2],
         };
         st.local_batches[0].push(SampleBatch::from_sets(0, &[vec![0, 1], vec![1]], vec![0, 1]));
         st.local_batches[1].push(SampleBatch::from_sets(2, &[vec![1, 2], vec![2]], vec![1, 2]));

@@ -109,6 +109,19 @@ pub struct Config {
     /// Streaming elements between threshold-floor refreshes under the
     /// simulated backend (the thread backend publishes live).
     pub floor_feedback_every: usize,
+    /// Chunked overlapped pipeline (PR 4): when on, each rank's S1 quota is
+    /// split into sample chunks that are inverted, encoded, and handed to
+    /// the transport while the next chunk samples; decoded runs merge into
+    /// the accumulated index as they arrive and S3 senders start as soon as
+    /// their own index is complete — no stage barriers. Seed sets and
+    /// raw-byte counters are bit-identical to the phase-stepped engine
+    /// (`false` pins the old path for the divergence gate).
+    pub overlap: bool,
+    /// Samples per pipeline chunk; `0` picks automatically (≈ 8 chunks per
+    /// rank per round, at least [`Config::MIN_AUTO_CHUNK`] samples each so
+    /// tiny rounds degenerate to a single chunk). Results are identical
+    /// for every chunk size.
+    pub chunk: usize,
 }
 
 impl Config {
@@ -135,7 +148,34 @@ impl Config {
             wire_compression: true,
             floor_prune: true,
             floor_feedback_every: 16,
+            overlap: true,
+            chunk: 0,
         }
+    }
+
+    /// Smallest automatic chunk size (samples) — rounds smaller than this
+    /// per rank run as a single chunk.
+    pub const MIN_AUTO_CHUNK: usize = 32;
+
+    /// Toggles the chunked overlapped pipeline (bit-identical results
+    /// either way; see [`Config::overlap`]).
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Sets the pipeline chunk size in samples (`0` = automatic).
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk;
+        self
+    }
+
+    /// The effective chunk size for a per-rank quota of `quota` samples.
+    pub fn chunk_size(&self, quota: usize) -> usize {
+        if self.chunk > 0 {
+            return self.chunk;
+        }
+        quota.div_ceil(8).max(Self::MIN_AUTO_CHUNK)
     }
 
     /// Selects the execution engine (see [`Config::transport`]).
@@ -296,6 +336,20 @@ mod tests {
         assert!(!c.wire_compression);
         assert!(!c.floor_prune);
         assert!(c.floor_feedback_every >= 1);
+    }
+
+    #[test]
+    fn overlap_and_chunk_builders() {
+        let c = cfg(Algorithm::GreediRis);
+        assert!(c.overlap, "overlap defaults on");
+        assert_eq!(c.chunk, 0);
+        let c = c.with_overlap(false).with_chunk(7);
+        assert!(!c.overlap);
+        assert_eq!(c.chunk_size(10_000), 7);
+        let auto = cfg(Algorithm::GreediRis);
+        assert_eq!(auto.chunk_size(0), Config::MIN_AUTO_CHUNK);
+        assert_eq!(auto.chunk_size(8), Config::MIN_AUTO_CHUNK);
+        assert_eq!(auto.chunk_size(80_000), 10_000);
     }
 
     #[test]

@@ -28,9 +28,12 @@
 
 use crate::coordinator::config::{Config, LocalSolver};
 use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard};
-use crate::coordinator::sampling::DistState;
-use crate::distributed::transport::threads::Fabric;
+use crate::coordinator::sampling::{
+    apply_overlap_timeline, run_rank_chunk_stages, ChunkGrow, ChunkPlan, DistState, GrowStats,
+};
+use crate::distributed::transport::threads::{Fabric, RankEndpoint};
 use crate::distributed::{wire, Transport, TransportExt, TransportKind};
+use crate::graph::Graph;
 use crate::maxcover::dense::{dense_greedy_max_cover_stream, PackedCovers};
 use crate::maxcover::lazy::lazy_greedy_stream;
 use crate::maxcover::streaming::prunable;
@@ -64,11 +67,13 @@ fn encode_done(sol: &CoverSolution) -> Vec<u8> {
 }
 
 fn decode_done(bytes: &[u8]) -> CoverSolution {
+    // In-process wire: a malformed DONE frame is a bug, not an input.
     let mut r = wire::Reader::new(bytes);
-    let n = r.varint() as usize;
-    let seeds: Vec<Vertex> = (0..n).map(|_| r.varint() as Vertex).collect();
-    let gains: Vec<u32> = (0..n).map(|_| r.varint() as u32).collect();
-    let coverage = r.varint();
+    let mut next = move || r.varint().expect("DONE frame decodes");
+    let n = next() as usize;
+    let seeds: Vec<Vertex> = (0..n).map(|_| next() as Vertex).collect();
+    let gains: Vec<u32> = (0..n).map(|_| next() as u32).collect();
+    let coverage = next();
     CoverSolution { seeds, gains, coverage }
 }
 
@@ -160,10 +165,10 @@ pub fn streaming_round<'a, 'b>(
     let m = t.m();
     let k = cfg.k;
     let ship_limit = cfg.trunc_limit();
-    let t0 = t.barrier();
 
     // ---- m == 1 degenerate case: plain local lazy greedy. ----
     if m == 1 {
+        t.barrier();
         let system = state.system_at(0);
         let (trace, secs) =
             t.run_compute(0, || run_sender(0, system, k, ship_limit, cfg.local_solver, None));
@@ -185,10 +190,28 @@ pub fn streaming_round<'a, 'b>(
     // The rank-parallel engine runs sender threads against the live
     // threaded receiver. The XLA scorer is a single host handle that
     // cannot be shared across rank threads, so it pins the simulated
-    // engine.
+    // engine. (The fully fused overlapped round in
+    // [`overlapped_round_threaded`] is dispatched by the pipeline driver;
+    // a direct call lands here and synchronizes first.)
     if t.kind() == TransportKind::Threads && scorer.is_none() {
+        let t0 = t.barrier();
         return threaded_streaming_round(t, state, cfg, t0);
     }
+
+    // Per-sender S3 start times (the prefix-emission half of the
+    // overlapped pipeline under the cost model): with overlap on, each
+    // sender starts its solve at its own S2-ready clock — no barrier —
+    // while the phase-stepped engine starts everyone at the barrier. The
+    // stream is still consumed in the canonical (emission ordinal, sender
+    // rank) order, so start-time skew moves only the clocks, never the
+    // seeds.
+    let starts: Vec<f64> = if cfg.overlap {
+        (0..m).map(|p| t.now(p)).collect()
+    } else {
+        let tb = t.barrier();
+        vec![tb; m]
+    };
+    let t0 = starts[0];
 
     // ---- S3: senders run their local solves, recording emission traces. ----
     let senders: Vec<usize> = (1..m).collect();
@@ -260,7 +283,7 @@ pub fn streaming_round<'a, 'b>(
             let bytes = (1 + wire::encoded_run_len(v, ids, compress)) as u64;
             stream_bytes += bytes;
             shipped += 1;
-            let arrival = t0 + t_rel + net.p2p(bytes);
+            let arrival = starts[tr.rank] + t_rel + net.p2p(bytes);
             if arrival > recv_clock {
                 wait += arrival - recv_clock;
                 recv_clock = arrival;
@@ -292,7 +315,7 @@ pub fn streaming_round<'a, 'b>(
     let mut sender_end_max = t0;
     let mut best_local: Option<&CoverSolution> = None;
     for tr in &traces {
-        let end = t0 + tr.total;
+        let end = starts[tr.rank] + tr.total;
         // Alert message: k seed ids + coverage.
         let alert_bytes = (tr.solution.seeds.len() as u64 + 2) * 4;
         let arrive = end + net.p2p(alert_bytes);
@@ -342,6 +365,60 @@ struct SenderOutcome {
     total: f64,
 }
 
+/// One sender's S3 body on the wire: run the local solve, emit each
+/// shipped seed's covering run to rank 0 (dropping runs the threshold
+/// floor proves dead, tombstoning so ordinals stay dense), then the DONE
+/// alert. Returns the local solution and the measured solve seconds.
+/// Shared by the phase-stepped threaded round and the fused overlapped
+/// round.
+fn run_wire_sender(
+    ep: &RankEndpoint,
+    system: SetSystemView<'_>,
+    cfg: &Config,
+    ship_limit: usize,
+    board: &FloorBoard,
+) -> (CoverSolution, f64) {
+    let k = cfg.k;
+    let compress = cfg.wire_compression;
+    let prune = cfg.floor_prune;
+    let ts = Instant::now();
+    let emit = |idx: usize| {
+        let v = system.vertex(idx);
+        let ids: &[SampleId] = system.set(idx);
+        if prune {
+            let (floor, l) = board.read();
+            if prunable(ids.len(), l, floor) {
+                let mut msg = vec![MSG_PRUNED];
+                wire::put_varint(&mut msg, (ids.len() as u64 + 2) * 4);
+                ep.send(0, msg);
+                return;
+            }
+        }
+        let mut msg = Vec::with_capacity(2 + ids.len());
+        msg.push(MSG_RUN);
+        wire::encode_run_into(&mut msg, v, ids, compress);
+        ep.send(0, msg);
+    };
+    let solution = match cfg.local_solver {
+        LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
+            if e.order < ship_limit {
+                emit(e.idx);
+            }
+        }),
+        LocalSolver::DenseCpu | LocalSolver::DenseXla => {
+            let covers = PackedCovers::from_sets(system);
+            let mut cpu = crate::maxcover::CpuScorer;
+            dense_greedy_max_cover_stream(&covers, k, &mut cpu, |order, idx, _g| {
+                if order < ship_limit {
+                    emit(idx);
+                }
+            })
+        }
+    };
+    ep.send(0, encode_done(&solution));
+    (solution, ts.elapsed().as_secs_f64())
+}
+
 /// What the canonical stream merger reports back.
 struct MergeOutcome {
     locals: Vec<(usize, CoverSolution)>,
@@ -349,6 +426,72 @@ struct MergeOutcome {
     stream_raw_bytes: u64,
     pruned: u64,
     shipped: u64,
+}
+
+/// The canonical stream merger: one sweep per emission ordinal, senders in
+/// ascending rank order — the same order the simulated engine sorts events
+/// into, so the receiver's bucket state cannot depend on arrival timing.
+/// Zero-copy (PR 4): each RUN payload is validated in place as a
+/// [`wire::RunView`] and decoded straight into the burst arena — no
+/// `Vec<SampleId>` is ever materialized for a wire-delivered run (pinned
+/// by `wire::run_decode_allocs` in `tests/overlap.rs`).
+fn run_canonical_merger(
+    mut ep0: RankEndpoint,
+    m: usize,
+    tx_burst: mpsc::Sender<Burst>,
+) -> MergeOutcome {
+    let mut live: Vec<usize> = (1..m).collect();
+    let mut out = MergeOutcome {
+        locals: Vec::new(),
+        stream_bytes: 0,
+        stream_raw_bytes: 0,
+        pruned: 0,
+        shipped: 0,
+    };
+    let mut burst = Burst::new();
+    while !live.is_empty() {
+        burst.clear();
+        let mut still = Vec::with_capacity(live.len());
+        for &p in &live {
+            let msg = ep0.recv_from(p);
+            match msg[0] {
+                MSG_RUN => {
+                    out.stream_bytes += msg.len() as u64;
+                    let run = wire::RunView::parse(&msg[1..]).expect("S3 run payload decodes");
+                    out.stream_raw_bytes += (run.len() as u64 + 2) * 4;
+                    out.shipped += 1;
+                    burst.push_decoded(&run);
+                    still.push(p);
+                }
+                MSG_PRUNED => {
+                    out.stream_bytes += msg.len() as u64;
+                    out.stream_raw_bytes +=
+                        wire::Reader::new(&msg[1..]).varint().expect("tombstone decodes");
+                    out.pruned += 1;
+                    still.push(p);
+                }
+                MSG_DONE => {
+                    out.locals.push((p, decode_done(&msg[1..])));
+                }
+                other => panic!("unknown S3 message tag {other}"),
+            }
+        }
+        live = still;
+        if !burst.is_empty() && tx_burst.send(std::mem::take(&mut burst)).is_err() {
+            break;
+        }
+    }
+    drop(tx_burst);
+    out
+}
+
+/// Residue sharding is bit-identical for any modulus (and `best_across`
+/// unifies the winner tie-break), so the *live* receiver caps its
+/// bucketing threads at the host's parallelism — running the paper's 63
+/// bucketing threads on a 2-core box would only starve the senders.
+fn live_bucket_threads(cfg: &Config) -> usize {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    cfg.threads.saturating_sub(1).clamp(1, host.max(1))
 }
 
 /// The rank-parallel round: every sender is an OS thread emitting encoded
@@ -367,19 +510,12 @@ fn threaded_streaming_round(
     let m = t.m();
     let k = cfg.k;
     let ship_limit = cfg.trunc_limit();
-    let compress = cfg.wire_compression;
-    let prune = cfg.floor_prune;
     let theta = state.theta as usize;
     let delta = cfg.delta;
-    // Residue sharding is bit-identical for any modulus (and `best_across`
-    // unifies the winner tie-break), so the *live* receiver caps its
-    // bucketing threads at the host's parallelism — running the paper's 63
-    // bucketing threads on a 2-core box would only starve the senders.
-    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let bucket_threads = cfg.threads.saturating_sub(1).clamp(1, host.max(1));
+    let bucket_threads = live_bucket_threads(cfg);
     let board = Arc::new(FloorBoard::new(bucket_threads));
     let mut endpoints = Fabric::endpoints(m);
-    let mut ep0 = endpoints.remove(0);
+    let ep0 = endpoints.remove(0);
     let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
 
     let (sols, merge, senders, recv_secs) = std::thread::scope(|scope| {
@@ -400,55 +536,8 @@ fn threaded_streaming_round(
             (out, tr.elapsed().as_secs_f64())
         });
 
-        // Canonical merger: one sweep per emission ordinal, senders in
-        // ascending rank order — the same order the simulated engine sorts
-        // events into.
-        let merge_handle = scope.spawn(move || {
-            let mut live: Vec<usize> = (1..m).collect();
-            let mut out = MergeOutcome {
-                locals: Vec::new(),
-                stream_bytes: 0,
-                stream_raw_bytes: 0,
-                pruned: 0,
-                shipped: 0,
-            };
-            let mut burst = Burst::new();
-            while !live.is_empty() {
-                burst.clear();
-                let mut still = Vec::with_capacity(live.len());
-                for &p in &live {
-                    let msg = ep0.recv_from(p);
-                    match msg[0] {
-                        MSG_RUN => {
-                            out.stream_bytes += msg.len() as u64;
-                            let (v, ids) = wire::decode_run(&msg[1..]);
-                            out.stream_raw_bytes += (ids.len() as u64 + 2) * 4;
-                            out.shipped += 1;
-                            burst.push(v, &ids);
-                            still.push(p);
-                        }
-                        MSG_PRUNED => {
-                            out.stream_bytes += msg.len() as u64;
-                            out.stream_raw_bytes += wire::Reader::new(&msg[1..]).varint();
-                            out.pruned += 1;
-                            still.push(p);
-                        }
-                        MSG_DONE => {
-                            out.locals.push((p, decode_done(&msg[1..])));
-                        }
-                        other => panic!("unknown S3 message tag {other}"),
-                    }
-                }
-                live = still;
-                if !burst.is_empty() {
-                    if tx_burst.send(std::mem::take(&mut burst)).is_err() {
-                        break;
-                    }
-                }
-            }
-            drop(tx_burst);
-            out
-        });
+        // Canonical merger (shared with the fused overlapped round).
+        let merge_handle = scope.spawn(move || run_canonical_merger(ep0, m, tx_burst));
 
         // S3: sender threads.
         let sender_handles: Vec<_> = endpoints
@@ -459,42 +548,8 @@ fn threaded_streaming_round(
                 let system = state.system_at(p);
                 let board_s = Arc::clone(&board);
                 scope.spawn(move || {
-                    let ts = Instant::now();
-                    let emit = |idx: usize| {
-                        let v = system.vertex(idx);
-                        let ids: &[SampleId] = system.set(idx);
-                        if prune {
-                            let (floor, l) = board_s.read();
-                            if prunable(ids.len(), l, floor) {
-                                let mut msg = vec![MSG_PRUNED];
-                                wire::put_varint(&mut msg, (ids.len() as u64 + 2) * 4);
-                                ep.send(0, msg);
-                                return;
-                            }
-                        }
-                        let mut msg = Vec::with_capacity(2 + ids.len());
-                        msg.push(MSG_RUN);
-                        wire::encode_run_into(&mut msg, v, ids, compress);
-                        ep.send(0, msg);
-                    };
-                    let solution = match cfg.local_solver {
-                        LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
-                            if e.order < ship_limit {
-                                emit(e.idx);
-                            }
-                        }),
-                        LocalSolver::DenseCpu | LocalSolver::DenseXla => {
-                            let covers = PackedCovers::from_sets(system);
-                            let mut cpu = crate::maxcover::CpuScorer;
-                            dense_greedy_max_cover_stream(&covers, k, &mut cpu, |order, idx, _g| {
-                                if order < ship_limit {
-                                    emit(idx);
-                                }
-                            })
-                        }
-                    };
-                    ep.send(0, encode_done(&solution));
-                    SenderOutcome { rank: p, total: ts.elapsed().as_secs_f64() }
+                    let (_, total) = run_wire_sender(&ep, system, cfg, ship_limit, &board_s);
+                    SenderOutcome { rank: p, total }
                 })
             })
             .collect();
@@ -518,17 +573,8 @@ fn threaded_streaming_round(
     t.wait_until(0, receiver_end);
 
     // Final compare, same rule and same tie-breaks as the simulated engine
-    // (locals scanned in ascending rank order, strict `>` keeps the
-    // earliest).
-    let mut locals = merge.locals;
-    locals.sort_by_key(|(p, _)| *p);
-    let mut best_local = CoverSolution::default();
-    for (_, sol) in &locals {
-        if best_local.is_empty() || sol.coverage > best_local.coverage {
-            best_local = sol.clone();
-        }
-    }
-    let solution = if sols.coverage >= best_local.coverage { sols } else { best_local };
+    // (see [`fuse_solution`]).
+    let solution = fuse_solution(sols, merge.locals);
 
     StreamRound {
         solution,
@@ -545,6 +591,171 @@ fn threaded_streaming_round(
         sender_end_max,
         receiver_end,
     }
+}
+
+/// The final compare rule shared by every engine: receiver's best bucket
+/// vs best local, locals scanned in ascending rank order with strict `>`
+/// so the earliest rank wins ties — identical tie-breaks to the simulated
+/// event walk.
+fn fuse_solution(
+    receiver_best: CoverSolution,
+    mut locals: Vec<(usize, CoverSolution)>,
+) -> CoverSolution {
+    locals.sort_by_key(|(p, _)| *p);
+    let mut best_local = CoverSolution::default();
+    for (_, sol) in &locals {
+        if best_local.is_empty() || sol.coverage > best_local.coverage {
+            best_local = sol.clone();
+        }
+    }
+    if receiver_best.coverage >= best_local.coverage {
+        receiver_best
+    } else {
+        best_local
+    }
+}
+
+/// What one fused rank thread reports back.
+struct FusedOutcome {
+    grow: ChunkGrow,
+    /// Measured S3 solve+stream seconds (0 for the receiver rank).
+    solve_secs: f64,
+}
+
+/// The fully fused overlapped round (tentpole of PR 4, threads backend):
+/// S1→S2→S3→S4 in **one thread scope with no stage barriers**. Every rank
+/// runs a two-stage chunk pipeline — a sampler thread shipping inverted,
+/// encoded chunks through the split [`crate::distributed::transport::threads::RankSender`]
+/// while the rank's main thread merges its inbox in true arrival order
+/// (the order-invariant keyed merge keeps the CSR canonical) — and the
+/// moment a sender's own index is complete it starts its local solve,
+/// emitting seed-stream runs to the live threaded receiver while other
+/// ranks' chunks are still in flight. The canonical merger restores the
+/// (emission ordinal, sender rank) order, so seed sets are bit-identical
+/// to the phase-stepped engine and to the simulated backend.
+///
+/// Returns the grow stats and the stream round, exactly as a
+/// `grow_to` + `streaming_round` pair would, so the pipeline driver can
+/// account them identically.
+pub fn overlapped_round_threaded(
+    t: &mut dyn Transport,
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    target_theta: u64,
+) -> (GrowStats, StreamRound) {
+    let m = t.m();
+    debug_assert!(m > 1 && t.kind() == TransportKind::Threads);
+    let k = cfg.k;
+    let ship_limit = cfg.trunc_limit();
+    let delta = cfg.delta;
+    let theta_target = target_theta as usize;
+    let t0 = t.barrier();
+    let from = state.theta;
+    let plan = ChunkPlan::new(m, from, target_theta, cfg);
+    let plan_ref = &plan;
+    let id_base = state.id_base;
+    let owner: &[u32] = &state.owner;
+    let covers: &mut [crate::maxcover::InvertedIndex] = &mut state.covers;
+
+    let bucket_threads = live_bucket_threads(cfg);
+    let board = Arc::new(FloorBoard::new(bucket_threads));
+    let s2_eps = Fabric::endpoints(m);
+    let mut s3_eps = Fabric::endpoints(m);
+    let ep0 = s3_eps.remove(0);
+    let mut s3_iter = s3_eps.into_iter();
+    let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
+
+    let (outcomes, merge, sols, recv_secs) = std::thread::scope(|scope| {
+        // S4: the live threaded receiver consumes from round start.
+        let board_r = Arc::clone(&board);
+        let recv_handle = scope.spawn(move || {
+            let tr = Instant::now();
+            let out = run_threaded_receiver(
+                theta_target,
+                k,
+                delta,
+                bucket_threads + 1,
+                ship_limit.max(1) + 1,
+                rx_burst,
+                Some(board_r),
+            );
+            (out, tr.elapsed().as_secs_f64())
+        });
+        let merge_handle = scope.spawn(move || run_canonical_merger(ep0, m, tx_burst));
+
+        // Rank threads: chunked S1/S2 pipeline, then (senders) S3.
+        let rank_handles: Vec<_> = s2_eps
+            .into_iter()
+            .zip(covers.iter_mut())
+            .enumerate()
+            .map(|(p, (mut ep, cover))| {
+                let s3 = if p == 0 { None } else { s3_iter.next() };
+                let board_s = Arc::clone(&board);
+                scope.spawn(move || {
+                    let grow = run_rank_chunk_stages(
+                        &mut ep, &mut *cover, graph, cfg, id_base, owner, m, p, plan_ref,
+                    );
+                    // My covers are complete: start S3 immediately — other
+                    // ranks' chunks may still be in flight.
+                    let mut solve_secs = 0.0;
+                    if let Some(s3_ep) = s3 {
+                        let system = cover.as_view(theta_target);
+                        let (_, secs) = run_wire_sender(&s3_ep, system, cfg, ship_limit, &board_s);
+                        solve_secs = secs;
+                    }
+                    FusedOutcome { grow, solve_secs }
+                })
+            })
+            .collect();
+
+        let outcomes: Vec<FusedOutcome> =
+            rank_handles.into_iter().map(|h| h.join().expect("rank thread")).collect();
+        let merge = merge_handle.join().expect("merge thread");
+        let ((best, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
+        (outcomes, merge, best, recv_secs)
+    });
+
+    // ---- Clocks + grow stats through the shared pipeline model. ----
+    let mut grows = Vec::with_capacity(m);
+    let mut solve_secs = Vec::with_capacity(m);
+    for o in outcomes {
+        grows.push(o.grow);
+        solve_secs.push(o.solve_secs);
+    }
+    let mut gstats = GrowStats::default();
+    apply_overlap_timeline(t, state, &mut gstats, t0, &grows);
+    for (p, g) in grows.into_iter().enumerate() {
+        state.local_batches[p].extend(g.sampler.batches);
+    }
+    state.theta = target_theta;
+
+    // ---- S3/S4 accounting: senders start at their own ready time. ----
+    let mut sender_end_max = t0;
+    let mut select_local_time = 0.0f64;
+    for p in 1..m {
+        t.charge_compute(p, solve_secs[p]);
+        let end = state.ready[p] + solve_secs[p];
+        sender_end_max = sender_end_max.max(end);
+        select_local_time = select_local_time.max(solve_secs[p]);
+    }
+    let receiver_end = (t0 + recv_secs).max(sender_end_max);
+    t.wait_until(0, receiver_end);
+    let solution = fuse_solution(sols, merge.locals);
+
+    let round = StreamRound {
+        solution,
+        select_local_time,
+        select_global_time: receiver_end - t0,
+        stream_bytes: merge.stream_bytes,
+        stream_raw_bytes: merge.stream_raw_bytes,
+        streamed_seeds: merge.shipped,
+        pruned_seeds: merge.pruned,
+        receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
+        sender_end_max,
+        receiver_end,
+    };
+    (gstats, round)
 }
 
 #[cfg(test)]

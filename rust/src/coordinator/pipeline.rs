@@ -4,10 +4,10 @@
 
 use crate::baselines::{diimm::diimm_select, ripples::ripples_select};
 use crate::coordinator::config::{Algorithm, Config, RunResult};
-use crate::coordinator::greediris::streaming_round;
+use crate::coordinator::greediris::{overlapped_round_threaded, streaming_round, StreamRound};
 use crate::coordinator::randgreedi::offline_round;
-use crate::coordinator::sampling::{grow_to, DistState};
-use crate::distributed::{collectives, make_transport, Transport};
+use crate::coordinator::sampling::{grow_to, DistState, GrowStats};
+use crate::distributed::{collectives, make_transport, Transport, TransportKind};
 use crate::graph::Graph;
 use crate::imm::math::ImmParams;
 use crate::imm::opim::{OpimBound, OpimParams};
@@ -34,6 +34,37 @@ struct SelectOutcome {
     receiver_end: f64,
 }
 
+/// Maps a streaming round onto the algorithm-agnostic outcome record.
+fn stream_outcome(r: StreamRound) -> SelectOutcome {
+    SelectOutcome {
+        solution: r.solution,
+        select_local: r.select_local_time,
+        select_global: (r.receiver_end - r.sender_end_max).max(0.0),
+        stream_bytes: r.stream_bytes,
+        stream_raw_bytes: r.stream_raw_bytes,
+        streamed_seeds: r.streamed_seeds,
+        pruned_seeds: r.pruned_seeds,
+        reduction_bytes: 0,
+        receiver: r.receiver,
+        sender_end_max: r.sender_end_max,
+        receiver_end: r.receiver_end,
+    }
+}
+
+/// Folds one grow round's stats into the run-level breakdown and volumes
+/// (including the PR-4 overlap metrics; in-flight bytes are a peak).
+fn fold_grow(breakdown: &mut Breakdown, volumes: &mut CommVolume, gs: &GrowStats) {
+    breakdown.sampling += gs.sampling_time;
+    breakdown.alltoall += gs.alltoall_time;
+    breakdown.overlap.chunks += gs.chunks;
+    breakdown.overlap.sampler_idle += gs.sampler_idle;
+    breakdown.overlap.wire_idle += gs.wire_idle;
+    breakdown.overlap.inflight_bytes_at_s3 =
+        breakdown.overlap.inflight_bytes_at_s3.max(gs.inflight_bytes_at_s3);
+    volumes.alltoall_bytes += gs.alltoall_bytes;
+    volumes.alltoall_raw_bytes += gs.alltoall_raw_bytes;
+}
+
 fn select<'a, 'b>(
     t: &mut dyn Transport,
     state: &DistState,
@@ -43,20 +74,7 @@ fn select<'a, 'b>(
 ) -> SelectOutcome {
     match cfg.algorithm {
         Algorithm::GreediRis | Algorithm::GreediRisTrunc => {
-            let r = streaming_round(t, state, cfg, scorer);
-            SelectOutcome {
-                solution: r.solution,
-                select_local: r.select_local_time,
-                select_global: (r.receiver_end - r.sender_end_max).max(0.0),
-                stream_bytes: r.stream_bytes,
-                stream_raw_bytes: r.stream_raw_bytes,
-                streamed_seeds: r.streamed_seeds,
-                pruned_seeds: r.pruned_seeds,
-                reduction_bytes: 0,
-                receiver: r.receiver,
-                sender_end_max: r.sender_end_max,
-                receiver_end: r.receiver_end,
-            }
+            stream_outcome(streaming_round(t, state, cfg, scorer))
         }
         Algorithm::RandGreediOffline => {
             let r = offline_round(t, state, cfg);
@@ -137,6 +155,15 @@ pub fn run_infmax_with_scorer<'a, 'b>(
     let mut breakdown = Breakdown::default();
     let mut volumes = CommVolume::default();
     let mut rounds = 0u32;
+    // The fully fused overlapped round (S1→S4 in one thread scope) applies
+    // to the streaming algorithms on the thread backend; everything else
+    // overlaps within `grow_to` (chunked clock model) and per-sender
+    // starts inside `streaming_round`. The XLA scorer pins the simulated
+    // engine, so it never fuses.
+    let fused = cfg.overlap
+        && cluster.kind() == TransportKind::Threads
+        && cfg.m > 1
+        && matches!(cfg.algorithm, Algorithm::GreediRis | Algorithm::GreediRisTrunc);
 
     // ---- Estimation phase (martingale rounds), unless θ is overridden. ----
     let (theta, lower_bound) = if let Some(t) = cfg.theta_override {
@@ -148,12 +175,21 @@ pub fn run_infmax_with_scorer<'a, 'b>(
         loop {
             rounds += 1;
             let target = driver.theta_hat();
-            let gs = grow_to(cluster, graph, cfg, &mut state, target);
-            breakdown.sampling += gs.sampling_time;
-            breakdown.alltoall += gs.alltoall_time;
-            volumes.alltoall_bytes += gs.alltoall_bytes;
-            volumes.alltoall_raw_bytes += gs.alltoall_raw_bytes;
-            let out = select(cluster, &state, graph, cfg, scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)));
+            let (gs, out) = if fused && scorer.is_none() {
+                let (gs, r) = overlapped_round_threaded(cluster, graph, cfg, &mut state, target);
+                (gs, stream_outcome(r))
+            } else {
+                let gs = grow_to(cluster, graph, cfg, &mut state, target);
+                let out = select(
+                    cluster,
+                    &state,
+                    graph,
+                    cfg,
+                    scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
+                );
+                (gs, out)
+            };
+            fold_grow(&mut breakdown, &mut volumes, &gs);
             breakdown.select_local += out.select_local;
             breakdown.select_global += out.select_global;
             volumes.stream_bytes += out.stream_bytes;
@@ -173,13 +209,25 @@ pub fn run_infmax_with_scorer<'a, 'b>(
 
     // ---- Final phase: fresh samples, final selection. ----
     let mut state = DistState::new(graph.n(), cfg.m, &pool, cfg.seed, FINAL_PHASE_BASE, do_shuffle);
-    let gs = grow_to(cluster, graph, cfg, &mut state, theta);
-    breakdown.sampling += gs.sampling_time;
-    breakdown.alltoall += gs.alltoall_time;
-    volumes.alltoall_bytes += gs.alltoall_bytes;
-    volumes.alltoall_raw_bytes += gs.alltoall_raw_bytes;
-    let t_before_final = cluster.makespan();
-    let out = select(cluster, &state, graph, cfg, scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)));
+    let (t_before_final, gs, out) = if fused && scorer.is_none() {
+        // The fused round has no S2/S3 boundary: sender/receiver spans are
+        // measured from the round's start.
+        let tb = cluster.makespan();
+        let (gs, r) = overlapped_round_threaded(cluster, graph, cfg, &mut state, theta);
+        (tb, gs, stream_outcome(r))
+    } else {
+        let gs = grow_to(cluster, graph, cfg, &mut state, theta);
+        let tb = cluster.makespan();
+        let out = select(
+            cluster,
+            &state,
+            graph,
+            cfg,
+            scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
+        );
+        (tb, gs, out)
+    };
+    fold_grow(&mut breakdown, &mut volumes, &gs);
     breakdown.select_local += out.select_local;
     breakdown.select_global += out.select_global;
     volumes.stream_bytes += out.stream_bytes;

@@ -36,6 +36,20 @@
 //! (the truncation-aware compressed shuffle); staleness is safe because
 //! both quantities are monotone (see [`crate::maxcover::streaming`]).
 //!
+//! ## Overlapped feeding (PR 4)
+//!
+//! Under the fused overlapped round
+//! ([`crate::coordinator::greediris::overlapped_round_threaded`]) this
+//! receiver is live from *round start*: senders begin streaming the moment
+//! their own S2 merge completes, so early bursts are admitted while other
+//! ranks' sample chunks are still in flight. The canonical merger fills
+//! each [`Burst`] arena straight from the wire via
+//! [`Burst::push_decoded`](crate::maxcover::streaming::Burst::push_decoded)
+//! (zero-copy `RunView` decode — no per-run `Vec<SampleId>`), and nothing
+//! in this module changes: publication order is still the canonical
+//! (emission ordinal, sender rank) order, so bucket state stays
+//! bit-identical to the phase-stepped engine.
+//!
 //! This module proves the concurrency design executes correctly; the
 //! performance *model* of the receiver lives in
 //! [`crate::coordinator::greediris`] (DESIGN.md §3 explains why timing is

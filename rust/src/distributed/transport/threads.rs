@@ -129,6 +129,28 @@ pub struct RankEndpoint {
     pending: Vec<VecDeque<Vec<u8>>>,
 }
 
+/// The clone-able send half of a [`RankEndpoint`] — lets one rank split
+/// its pipeline across stage threads (PR 4): the sampler stage ships chunk
+/// payloads through a `RankSender` while the rank's main thread blocks in
+/// [`RankEndpoint::recv_any`] merging its inbox. Sends from the two halves
+/// interleave on the same per-source FIFO streams.
+pub struct RankSender {
+    rank: usize,
+    txs: Vec<mpsc::Sender<Tagged>>,
+}
+
+impl RankSender {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Ships `payload` to `dst`. Never blocks (unbounded channel); see
+    /// [`RankEndpoint::send`] for the hangup semantics.
+    pub fn send(&self, dst: usize, payload: Vec<u8>) {
+        let _ = self.txs[dst].send((self.rank, payload));
+    }
+}
+
 impl RankEndpoint {
     pub fn rank(&self) -> usize {
         self.rank
@@ -138,12 +160,32 @@ impl RankEndpoint {
         self.txs.len()
     }
 
+    /// Splits off a clone-able send half (the receive half stays here).
+    pub fn sender(&self) -> RankSender {
+        RankSender { rank: self.rank, txs: self.txs.clone() }
+    }
+
     /// Ships `payload` to `dst`. Never blocks (unbounded channel).
     pub fn send(&self, dst: usize, payload: Vec<u8>) {
         // A send can only fail if the destination endpoint was dropped,
         // which legitimately happens when a receiver finishes early (e.g.
         // after an early-terminating round); the payload is then dead.
         let _ = self.txs[dst].send((self.rank, payload));
+    }
+
+    /// Blocks until the next payload from *any* source is available,
+    /// returning `(src, payload)` in arrival order (per-source FIFO is
+    /// still preserved). Strays buffered by an earlier
+    /// [`RankEndpoint::recv_from`] are drained first, lowest source rank
+    /// first. Panics if every sender hung up while a receive was
+    /// outstanding.
+    pub fn recv_any(&mut self) -> (usize, Vec<u8>) {
+        for (src, q) in self.pending.iter_mut().enumerate() {
+            if let Some(p) = q.pop_front() {
+                return (src, p);
+            }
+        }
+        self.rx.recv().expect("fabric hung up with a receive outstanding")
     }
 
     /// Blocks until the next payload *from `src`* is available, preserving
@@ -196,6 +238,34 @@ mod tests {
         let mut e0 = eps.remove(0);
         e0.send(0, vec![7, 8]);
         assert_eq!(e0.recv_from(0), vec![7, 8]);
+    }
+
+    #[test]
+    fn split_sender_and_recv_any() {
+        let mut eps = Fabric::endpoints(2);
+        let e1 = eps.pop().unwrap();
+        let mut e0 = eps.pop().unwrap();
+        let tx = e0.sender();
+        // The split send half ships while the receive half drains — the
+        // rank-pipeline pattern of the chunked engine.
+        let h = std::thread::spawn(move || {
+            tx.send(1, vec![1]);
+            tx.send(1, vec![2]);
+        });
+        let mut e1_got = Vec::new();
+        let mut e1 = e1;
+        for _ in 0..2 {
+            let (src, p) = e1.recv_any();
+            assert_eq!(src, 0);
+            e1_got.push(p[0]);
+        }
+        assert_eq!(e1_got, vec![1, 2], "per-source FIFO preserved");
+        h.join().unwrap();
+        // recv_any interoperates with recv_from on the same endpoint.
+        e0.send(0, vec![9]);
+        e0.send(0, vec![10]);
+        assert_eq!(e0.recv_from(0), vec![9]);
+        assert_eq!(e0.recv_any(), (0, vec![10]));
     }
 
     #[test]

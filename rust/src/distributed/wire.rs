@@ -24,14 +24,68 @@
 //! | 0   | raw little-endian `u32` words |
 //! | 1   | delta-varint (vertices delta-chained across runs, ids within) |
 //!
+//! ## Bounds checking (PR 4)
+//!
+//! Every decode path is bounds-checked: truncated or corrupt buffers
+//! return a [`DecodeError`] instead of panicking on a slice overrun, and
+//! varints that overflow their value domain (or per-run counts that exceed
+//! the remaining payload) are rejected before any allocation is sized from
+//! them. Mutated-byte property tests live in this module and in
+//! `tests/transport.rs`.
+//!
+//! ## Zero-copy run views (PR 4)
+//!
+//! [`RunView`] is the borrowed-slice decode API for S3 runs: it validates
+//! an encoded `<x, S(x)>` payload **in place** and exposes the sample ids
+//! as an iterator decoding straight off the wire bytes — no intermediate
+//! `Vec<SampleId>` is ever materialized. The streaming receiver packs
+//! burst arenas (and therefore `OfferMask`s) directly from these views;
+//! [`run_decode_allocs`] counts the allocating [`decode_run`] fallback so
+//! tests can pin the hot path at zero allocations.
+//!
 //! [`InvertedIndex`]: crate::maxcover::InvertedIndex
 
 use crate::{SampleId, Vertex};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Format tag: raw little-endian u32 words.
 pub const FMT_RAW: u8 = 0;
 /// Format tag: delta-varint.
 pub const FMT_DELTA_VARINT: u8 = 1;
+
+/// Why a wire payload failed to decode. All decode paths return this
+/// instead of panicking, so corrupt or truncated buffers are survivable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The buffer ended in the middle of a value or run.
+    Truncated,
+    /// The leading format tag is not a known format.
+    BadTag(u8),
+    /// A varint exceeded its value domain (64-bit chain or u32 field), or
+    /// a delta chain overflowed u32.
+    Overflow,
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Truncated => write!(f, "wire payload truncated"),
+            DecodeError::BadTag(t) => write!(f, "unknown wire format tag {t}"),
+            DecodeError::Overflow => write!(f, "wire varint overflow"),
+        }
+    }
+}
+
+/// Allocating run decodes performed so far ([`decode_run`] calls). The
+/// zero-copy S3 offer path must leave this counter untouched — pinned by
+/// `tests/overlap.rs`.
+static RUN_DECODE_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of allocating [`decode_run`] calls (see module docs).
+pub fn run_decode_allocs() -> u64 {
+    RUN_DECODE_ALLOCS.load(Ordering::Relaxed)
+}
 
 /// Appends `x` as a LEB128 varint.
 #[inline]
@@ -53,7 +107,9 @@ pub fn varint_len(x: u64) -> usize {
     (((64 - (x | 1).leading_zeros() as usize) + 6) / 7).max(1)
 }
 
-/// Byte-cursor reader for the decode paths.
+/// Bounds-checked byte-cursor reader for the decode paths. Every accessor
+/// returns [`DecodeError::Truncated`] past the end of the buffer instead
+/// of panicking.
 pub struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -68,32 +124,48 @@ impl<'a> Reader<'a> {
         self.pos >= self.buf.len()
     }
 
-    #[inline]
-    pub fn byte(&mut self) -> u8 {
-        let b = self.buf[self.pos];
-        self.pos += 1;
-        b
+    /// Bytes left in the buffer.
+    pub fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
     }
 
     #[inline]
-    pub fn varint(&mut self) -> u64 {
+    pub fn byte(&mut self) -> Result<u8, DecodeError> {
+        let b = *self.buf.get(self.pos).ok_or(DecodeError::Truncated)?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    #[inline]
+    pub fn varint(&mut self) -> Result<u64, DecodeError> {
         let mut x = 0u64;
         let mut shift = 0u32;
         loop {
-            let b = self.byte();
+            let b = self.byte()?;
+            if shift >= 64 || (shift == 63 && b & 0x7e != 0) {
+                return Err(DecodeError::Overflow);
+            }
             x |= ((b & 0x7f) as u64) << shift;
             if b & 0x80 == 0 {
-                return x;
+                return Ok(x);
             }
             shift += 7;
         }
     }
 
+    /// A varint that must fit in 32 bits (vertex ids, counts, deltas).
     #[inline]
-    pub fn u32_le(&mut self) -> u32 {
-        let w = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
-        self.pos += 4;
-        w
+    pub fn varint_u32(&mut self) -> Result<u32, DecodeError> {
+        let x = self.varint()?;
+        u32::try_from(x).map_err(|_| DecodeError::Overflow)
+    }
+
+    #[inline]
+    pub fn u32_le(&mut self) -> Result<u32, DecodeError> {
+        let end = self.pos.checked_add(4).ok_or(DecodeError::Truncated)?;
+        let bytes = self.buf.get(self.pos..end).ok_or(DecodeError::Truncated)?;
+        self.pos = end;
+        Ok(u32::from_le_bytes(bytes.try_into().expect("4-byte slice")))
     }
 }
 
@@ -129,41 +201,58 @@ pub fn encode_stream(stream: &[u32], compress: bool) -> Vec<u8> {
 }
 
 /// Decodes a wire payload produced by [`encode_stream`] back into the flat
-/// `[v, count, ids...]` u32 stream. Exact inverse for both formats.
-pub fn decode_stream(bytes: &[u8]) -> Vec<u32> {
-    let mut r = Reader::new(bytes);
-    let fmt = r.byte();
+/// `[v, count, ids...]` u32 stream. Exact inverse for both formats;
+/// truncated or corrupt input returns a [`DecodeError`].
+pub fn decode_stream(bytes: &[u8]) -> Result<Vec<u32>, DecodeError> {
     let mut out = Vec::new();
+    decode_stream_into(bytes, &mut out)?;
+    Ok(out)
+}
+
+/// Like [`decode_stream`] but appends into a caller-owned buffer, so the
+/// chunked S2 merge can reuse one allocation across chunk decodes. `out`
+/// is cleared first; on error its contents are unspecified.
+pub fn decode_stream_into(bytes: &[u8], out: &mut Vec<u32>) -> Result<(), DecodeError> {
+    out.clear();
+    let mut r = Reader::new(bytes);
+    let fmt = r.byte()?;
     match fmt {
         FMT_RAW => {
             while !r.is_empty() {
-                out.push(r.u32_le());
+                out.push(r.u32_le()?);
             }
         }
         FMT_DELTA_VARINT => {
             let mut prev_v = 0u32;
             while !r.is_empty() {
-                let v = prev_v + r.varint() as u32;
+                let v = prev_v.checked_add(r.varint_u32()?).ok_or(DecodeError::Overflow)?;
                 prev_v = v;
-                let cnt = r.varint() as u32;
+                let cnt = r.varint_u32()?;
+                // Each id takes at least one byte on the wire; reject counts
+                // the remaining payload cannot possibly hold before sizing
+                // anything from them.
+                if cnt as usize > r.remaining() {
+                    return Err(DecodeError::Truncated);
+                }
                 out.push(v);
                 out.push(cnt);
                 let mut prev_id = 0u32;
                 for _ in 0..cnt {
-                    let id = prev_id + r.varint() as u32;
+                    let id = prev_id.checked_add(r.varint_u32()?).ok_or(DecodeError::Overflow)?;
                     prev_id = id;
                     out.push(id);
                 }
             }
         }
-        other => panic!("unknown wire format tag {other}"),
+        other => return Err(DecodeError::BadTag(other)),
     }
-    out
+    Ok(())
 }
 
 /// Encodes one `<x, S(x)>` covering run (S3 stream element).
 pub fn encode_run(vertex: Vertex, ids: &[SampleId], compress: bool) -> Vec<u8> {
-    let mut out = Vec::with_capacity(if compress { 2 + ids.len() } else { 1 + (ids.len() + 2) * 4 });
+    let cap = if compress { 2 + ids.len() } else { 1 + (ids.len() + 2) * 4 };
+    let mut out = Vec::with_capacity(cap);
     encode_run_into(&mut out, vertex, ids, compress);
     out
 }
@@ -191,31 +280,138 @@ pub fn encode_run_into(out: &mut Vec<u8>, vertex: Vertex, ids: &[SampleId], comp
     }
 }
 
-/// Decodes a payload produced by [`encode_run`].
-pub fn decode_run(bytes: &[u8]) -> (Vertex, Vec<SampleId>) {
-    let mut r = Reader::new(bytes);
-    let fmt = r.byte();
-    match fmt {
-        FMT_RAW => {
-            let v = r.u32_le();
-            let cnt = r.u32_le() as usize;
-            let ids = (0..cnt).map(|_| r.u32_le()).collect();
-            (v, ids)
-        }
-        FMT_DELTA_VARINT => {
-            let v = r.varint() as Vertex;
-            let cnt = r.varint() as usize;
-            let mut ids = Vec::with_capacity(cnt);
-            let mut prev = 0u32;
-            for _ in 0..cnt {
-                prev += r.varint() as u32;
-                ids.push(prev);
+/// Decodes a payload produced by [`encode_run`] into an owned id vector.
+/// Prefer [`RunView::parse`] on hot paths — this form allocates (counted
+/// by [`run_decode_allocs`]) and exists for tests, benches, and cold call
+/// sites.
+pub fn decode_run(bytes: &[u8]) -> Result<(Vertex, Vec<SampleId>), DecodeError> {
+    RUN_DECODE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    let view = RunView::parse(bytes)?;
+    Ok((view.vertex(), view.ids().collect()))
+}
+
+/// A validated, borrowed view of one encoded `<x, S(x)>` run — the
+/// zero-copy decode API. [`RunView::parse`] bounds-checks the whole
+/// payload once (including delta-chain overflow), after which
+/// [`RunView::ids`] yields the sample ids by decoding straight off the
+/// wire bytes with no intermediate allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct RunView<'a> {
+    vertex: Vertex,
+    len: usize,
+    /// Encoded id payload (LE words or varint deltas), tag and header
+    /// already stripped.
+    payload: &'a [u8],
+    raw: bool,
+}
+
+impl<'a> RunView<'a> {
+    /// Validates `bytes` as one encoded run and borrows it.
+    pub fn parse(bytes: &'a [u8]) -> Result<Self, DecodeError> {
+        let mut r = Reader::new(bytes);
+        match r.byte()? {
+            FMT_RAW => {
+                let vertex = r.u32_le()?;
+                let len = r.u32_le()? as usize;
+                let payload = &bytes[9..];
+                if payload.len() != len * 4 {
+                    return Err(DecodeError::Truncated);
+                }
+                Ok(Self { vertex, len, payload, raw: true })
             }
-            (v, ids)
+            FMT_DELTA_VARINT => {
+                let vertex = r.varint_u32()?;
+                let len = r.varint_u32()? as usize;
+                let start = bytes.len() - r.remaining();
+                // Validate the whole delta chain now so iteration is
+                // infallible.
+                let mut prev = 0u32;
+                for _ in 0..len {
+                    prev = prev.checked_add(r.varint_u32()?).ok_or(DecodeError::Overflow)?;
+                }
+                if !r.is_empty() {
+                    return Err(DecodeError::Truncated);
+                }
+                Ok(Self { vertex, len, payload: &bytes[start..], raw: false })
+            }
+            other => Err(DecodeError::BadTag(other)),
         }
-        other => panic!("unknown wire format tag {other}"),
+    }
+
+    #[inline]
+    pub fn vertex(&self) -> Vertex {
+        self.vertex
+    }
+
+    /// Number of sample ids in the run.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Iterates the sample ids, decoding in place (no allocation). The
+    /// payload was fully validated by [`RunView::parse`], so the iterator
+    /// is infallible and exact-sized.
+    #[inline]
+    pub fn ids(&self) -> RunIds<'a> {
+        RunIds { payload: self.payload, pos: 0, remaining: self.len, prev: 0, raw: self.raw }
     }
 }
+
+/// Iterator over a [`RunView`]'s sample ids, decoding off the wire bytes.
+pub struct RunIds<'a> {
+    payload: &'a [u8],
+    pos: usize,
+    remaining: usize,
+    prev: u32,
+    raw: bool,
+}
+
+impl<'a> Iterator for RunIds<'a> {
+    type Item = SampleId;
+
+    #[inline]
+    fn next(&mut self) -> Option<SampleId> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        if self.raw {
+            let w = u32::from_le_bytes(
+                self.payload[self.pos..self.pos + 4].try_into().expect("validated"),
+            );
+            self.pos += 4;
+            return Some(w);
+        }
+        // Varint delta, validated by parse. Accumulate in u64: parse only
+        // guarantees the *value* fits u32 — a non-canonical zero-padded
+        // encoding can still run its shift past 31, which must not panic.
+        let mut x = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.payload[self.pos];
+            self.pos += 1;
+            x |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+        }
+        self.prev += x as u32;
+        Some(self.prev)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for RunIds<'_> {}
 
 /// Wire length of [`encode_run`] output without allocating (the simulated
 /// backend charges byte costs without materializing payloads).
@@ -235,6 +431,7 @@ pub fn encoded_run_len(vertex: Vertex, ids: &[SampleId], compress: bool) -> usiz
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Xoshiro256pp;
 
     #[test]
     fn varint_roundtrip_edges() {
@@ -242,7 +439,7 @@ mod tests {
             let mut buf = Vec::new();
             put_varint(&mut buf, x);
             assert_eq!(buf.len(), varint_len(x), "len of {x}");
-            assert_eq!(Reader::new(&buf).varint(), x);
+            assert_eq!(Reader::new(&buf).varint(), Ok(x));
         }
     }
 
@@ -250,7 +447,7 @@ mod tests {
     fn stream_roundtrip_both_formats() {
         let stream = vec![5, 2, 0, 1, 9, 1, 0, 300, 3, 7, 8, 1000];
         for compress in [false, true] {
-            assert_eq!(decode_stream(&encode_stream(&stream, compress)), stream);
+            assert_eq!(decode_stream(&encode_stream(&stream, compress)).unwrap(), stream);
         }
     }
 
@@ -259,7 +456,7 @@ mod tests {
         for compress in [false, true] {
             let enc = encode_stream(&[], compress);
             assert_eq!(enc.len(), 1);
-            assert!(decode_stream(&enc).is_empty());
+            assert!(decode_stream(&enc).unwrap().is_empty());
         }
     }
 
@@ -285,7 +482,7 @@ mod tests {
             for compress in [false, true] {
                 let enc = encode_run(v, &ids, compress);
                 assert_eq!(enc.len(), encoded_run_len(v, &ids, compress));
-                assert_eq!(decode_run(&enc), (v, ids.clone()));
+                assert_eq!(decode_run(&enc).unwrap(), (v, ids.clone()));
             }
         }
     }
@@ -296,5 +493,143 @@ mod tests {
         let raw = encode_run(5, &ids, false).len();
         let packed = encode_run(5, &ids, true).len();
         assert!(packed * 3 < raw, "raw {raw} vs varint {packed}");
+    }
+
+    #[test]
+    fn reader_is_bounds_checked() {
+        let mut r = Reader::new(&[]);
+        assert_eq!(r.byte(), Err(DecodeError::Truncated));
+        assert_eq!(r.varint(), Err(DecodeError::Truncated));
+        assert_eq!(r.u32_le(), Err(DecodeError::Truncated));
+        // A varint whose continuation bit never clears.
+        let mut r = Reader::new(&[0x80, 0x80, 0x80]);
+        assert_eq!(r.varint(), Err(DecodeError::Truncated));
+        // An 11-byte varint overflows 64 bits.
+        let mut r = Reader::new(&[0x80; 11]);
+        assert_eq!(r.varint(), Err(DecodeError::Overflow));
+        // u64::MAX is the largest valid 10-byte chain; one more high bit
+        // in the last byte overflows.
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX);
+        *buf.last_mut().unwrap() |= 0x02;
+        assert_eq!(Reader::new(&buf).varint(), Err(DecodeError::Overflow));
+    }
+
+    #[test]
+    fn truncated_and_corrupt_payloads_error_not_panic() {
+        let stream = vec![5, 3, 0, 1, 129, 9, 1, 300];
+        for compress in [false, true] {
+            let enc = encode_stream(&stream, compress);
+            // Raw truncation at a word boundary is a valid shorter stream;
+            // all we require is "no panic" (Ok or Err both acceptable).
+            for cut in 0..enc.len() {
+                let _ = decode_stream(&enc[..cut]);
+            }
+            let run = encode_run(7, &[1, 5, 900], compress);
+            for cut in 0..run.len() {
+                let _ = decode_run(&run[..cut]);
+                let _ = RunView::parse(&run[..cut]);
+            }
+        }
+        assert_eq!(decode_stream(&[9, 1, 2]), Err(DecodeError::BadTag(9)));
+        assert_eq!(decode_run(&[77]).unwrap_err(), DecodeError::BadTag(77));
+        // A count that exceeds the remaining payload must be rejected
+        // before any allocation is sized from it.
+        let mut huge = vec![FMT_DELTA_VARINT, 0];
+        put_varint(&mut huge, u32::MAX as u64);
+        assert!(decode_stream(&huge).is_err());
+    }
+
+    #[test]
+    fn mutated_bytes_fuzz_never_panics() {
+        let mut rng = Xoshiro256pp::seeded(0xF422);
+        for case in 0..400u64 {
+            let n = rng.gen_range(6) as usize;
+            let mut stream = Vec::new();
+            let mut v = 0u32;
+            for _ in 0..n {
+                v += 1 + rng.gen_range(500) as u32;
+                let len = 1 + rng.gen_range(6) as usize;
+                let mut ids: Vec<u32> =
+                    (0..len).map(|_| rng.gen_range(1 << 16) as u32).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                stream.push(v);
+                stream.push(ids.len() as u32);
+                stream.extend_from_slice(&ids);
+            }
+            let compress = case % 2 == 0;
+            let mut enc = encode_stream(&stream, compress);
+            // Flip up to three random bytes, then try to decode. The result
+            // may be Ok (a different valid stream) or Err — never a panic.
+            for _ in 0..3 {
+                if enc.is_empty() {
+                    break;
+                }
+                let i = rng.gen_range(enc.len() as u64) as usize;
+                enc[i] ^= 1 << rng.gen_range(8);
+            }
+            let _ = decode_stream(&enc);
+            if let Ok(view) = RunView::parse(&enc) {
+                // Iteration must be panic-free for anything parse accepts.
+                let _covered: usize = view.ids().count();
+            }
+            let _ = decode_run(&enc);
+        }
+    }
+
+    #[test]
+    fn run_view_matches_owned_decode() {
+        let cases: Vec<(Vertex, Vec<SampleId>)> = vec![
+            (0, vec![]),
+            (3, vec![7]),
+            (1000, vec![0, 1, 2, 64, 1 << 20]),
+            (u32::MAX, vec![5, u32::MAX - 1]),
+        ];
+        for (v, ids) in cases {
+            for compress in [false, true] {
+                let enc = encode_run(v, &ids, compress);
+                let view = RunView::parse(&enc).unwrap();
+                assert_eq!(view.vertex(), v);
+                assert_eq!(view.len(), ids.len());
+                assert_eq!(view.ids().len(), ids.len());
+                let got: Vec<SampleId> = view.ids().collect();
+                assert_eq!(got, ids);
+            }
+        }
+    }
+
+    #[test]
+    fn run_view_survives_non_canonical_zero_padded_varints() {
+        // A corrupt-but-parseable payload: the single id delta is encoded
+        // as six zero-padded continuation bytes (value 0, shift past 31).
+        // parse accepts it (value fits u32) and ids() must decode it
+        // without panicking — the no-panic contract covers iteration too.
+        let bytes = [FMT_DELTA_VARINT, 1, 1, 0x80, 0x80, 0x80, 0x80, 0x80, 0x00];
+        let view = RunView::parse(&bytes).unwrap();
+        assert_eq!(view.vertex(), 1);
+        assert_eq!(view.ids().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn decode_run_bumps_alloc_counter_run_view_does_not() {
+        let enc = encode_run(9, &[1, 2, 3], true);
+        let before = run_decode_allocs();
+        let view = RunView::parse(&enc).unwrap();
+        let _sum: u64 = view.ids().map(u64::from).sum();
+        assert_eq!(run_decode_allocs(), before, "RunView must not allocate-decode");
+        let _ = decode_run(&enc).unwrap();
+        assert_eq!(run_decode_allocs(), before + 1);
+    }
+
+    #[test]
+    fn decode_stream_into_reuses_buffer() {
+        let a = vec![5, 2, 0, 1];
+        let b = vec![9, 1, 3, 20, 2, 4, 5];
+        let mut buf = Vec::new();
+        decode_stream_into(&encode_stream(&a, true), &mut buf).unwrap();
+        assert_eq!(buf, a);
+        decode_stream_into(&encode_stream(&b, false), &mut buf).unwrap();
+        assert_eq!(buf, b);
     }
 }

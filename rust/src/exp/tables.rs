@@ -343,6 +343,8 @@ pub struct Fig4Row {
     pub comm_thread_wait: f64,
     pub comm_thread_work: f64,
     pub bucket_thread_work: f64,
+    /// Chunked-pipeline overlap metrics (PR 4; zero under `--overlap off`).
+    pub overlap: crate::metrics::OverlapStats,
 }
 
 pub struct Fig4 {
@@ -365,6 +367,7 @@ pub fn fig4(scale: BenchScale, ms: &[usize], cache: &mut GraphCache) -> Fig4 {
             comm_thread_wait: r.receiver.comm_thread_wait,
             comm_thread_work: r.receiver.comm_thread_work,
             bucket_thread_work: r.receiver.bucket_thread_work,
+            overlap: r.breakdown.overlap,
         });
     }
     Fig4 { rows }
@@ -393,6 +396,23 @@ impl Fig4 {
                 s,
                 "{:>6} {:>12.4} {:>12.4} {:>12.4}",
                 r.m, r.comm_thread_wait, r.comm_thread_work, r.bucket_thread_work
+            );
+        }
+        let _ = writeln!(s, "Fig 4c: chunked-pipeline overlap (chunks, starvation, S3 in-flight)");
+        let _ = writeln!(
+            s,
+            "{:>6} {:>8} {:>14} {:>12} {:>16}",
+            "m", "chunks", "sampler-idle", "wire-idle", "inflight@S3 (B)"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                s,
+                "{:>6} {:>8} {:>14.4} {:>12.4} {:>16}",
+                r.m,
+                r.overlap.chunks,
+                r.overlap.sampler_idle,
+                r.overlap.wire_idle,
+                r.overlap.inflight_bytes_at_s3
             );
         }
         s

@@ -91,8 +91,50 @@
 //! ([`maxcover::streaming::prunable`] — lossless, volume-only), and the
 //! receiver pre-filters whole bursts against the same floor before packing
 //! any `OfferMask` (burst-level admission fusion).
+//!
+//! ## Overlapped pipeline engine (PR 4)
+//!
+//! Round execution is no longer phase-stepped: with
+//! [`coordinator::Config::overlap`] on (default), each rank's S1 quota is
+//! split into sample **chunks** that are inverted, delta-varint encoded,
+//! and handed to the transport while the next chunk samples; receivers
+//! merge decoded chunk runs into the accumulated `InvertedIndex` as they
+//! arrive (order-invariant keyed merge — every chunk owns a disjoint
+//! sample-id range, so the CSR is byte-identical to the phase-stepped
+//! engine for any arrival order and any `--chunk` size); and S3 senders
+//! begin emitting seed-stream runs the moment *their own* index is
+//! complete, feeding the live threaded receiver while later chunks are
+//! still in flight. The **prefix-emission rule**: a sender may emit only
+//! once its accumulated prefix covers its whole quota (its index is
+//! complete — local greedy needs every covering set), and the receiver
+//! still consumes the stream in the canonical (emission ordinal, sender
+//! rank) order, so start-time skew moves clocks, never seeds — `--overlap
+//! on|off` and both transports select **bit-identical seed sets** with
+//! bit-identical raw-byte counters (pinned by `tests/overlap.rs` and the
+//! ci.sh divergence gate). `SimTransport` models the overlap honestly:
+//! per chunk step the clock pays `max(compute, comm)` instead of summed
+//! phases. The S3 offer path is zero-copy for wire-delivered runs: the
+//! canonical merger validates each run in place ([`distributed::wire::RunView`])
+//! and decodes it straight into the burst arena — no `Vec<SampleId>` is
+//! materialized (pinned by `distributed::wire::run_decode_allocs`). All
+//! wire decodes are bounds-checked: corrupt or truncated payloads return
+//! a [`distributed::wire::DecodeError`] instead of panicking.
 
 #![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
+// Style lints that conflict with this crate's deliberate idiom (explicit
+// index loops over parallel CSR arrays, long-but-flat phase functions,
+// measured-tuple returns). Correctness lints stay denied via `cargo clippy
+// -- -D warnings` in scripts/ci.sh tier-1.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_div_ceil,
+    clippy::len_without_is_empty,
+    clippy::new_without_default,
+    clippy::collapsible_else_if,
+    clippy::comparison_chain
+)]
 
 pub mod error;
 pub mod rng;

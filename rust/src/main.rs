@@ -32,6 +32,7 @@ USAGE:
                 [--solver lazy|dense-cpu|dense-xla] [--sims N] [--seed N]
                 [--s1-threads N] [--transport sim|threads]
                 [--wire varint|raw] [--prune on|off]
+                [--overlap on|off] [--chunk N]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
   greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
   greediris inputs
@@ -39,6 +40,11 @@ USAGE:
 Algorithms: greediris | greediris-trunc | randgreedi | ripples | diimm
 Transports: sim (sequential cost model) | threads (rank-per-OS-thread);
 seed sets are identical across transports for the same config/seed.
+--overlap on (default) runs the chunked overlapped pipeline (S1 chunks
+stream through S2 while sampling continues; S3 starts per sender);
+--overlap off pins the phase-stepped engine. Seed sets and raw-byte
+counters are bit-identical either way. --chunk N sets the chunk size in
+samples (0 = auto).
 Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
      GREEDIRIS_TRANSPORT=sim|threads sets the default transport.";
 
@@ -133,6 +139,12 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         "off" => cfg = cfg.with_floor_prune(false),
         other => bail!("unknown prune setting '{other}' (on | off)"),
     }
+    match flags.get_str("overlap", "on").as_str() {
+        "on" => cfg = cfg.with_overlap(true),
+        "off" => cfg = cfg.with_overlap(false),
+        other => bail!("unknown overlap setting '{other}' (on | off)"),
+    }
+    cfg = cfg.with_chunk(flags.get("chunk", 0usize)?);
     if let Some(t) = flags.map.get("theta") {
         cfg = cfg.with_theta(t.parse()?);
     }
@@ -160,6 +172,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         result.wall_time
     );
     println!("breakdown: {}", result.breakdown);
+    if result.breakdown.overlap.chunks > 0 {
+        println!("overlap: {}", result.breakdown.overlap);
+    }
     println!(
         "comm: all-to-all {} B (raw {} B) | stream {} B (raw {} B, {} seeds, {} pruned) | reductions {} B",
         result.volumes.alltoall_bytes,

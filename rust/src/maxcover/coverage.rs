@@ -498,6 +498,86 @@ impl InvertedIndex {
         self.ids = ids;
     }
 
+    /// Merges a round's worth of `(key, stream)` wire streams where `key`
+    /// orders each stream's disjoint sample-id range (ascending key ⇒
+    /// ascending ids — the chunked pipeline uses the chunk's first sample
+    /// id). Unlike [`InvertedIndex::merge_streams`], the call is
+    /// **arrival-order-invariant**: streams may be supplied in any order
+    /// and across any number of calls, and newly supplied ranges may
+    /// interleave with ranges merged earlier — per-vertex runs are rebuilt
+    /// by splicing the key-ordered blocks into the accumulated sorted run,
+    /// so the resulting CSR is byte-identical to merging the same streams
+    /// in canonical (ascending-id) order (pinned by tests and by the
+    /// overlap determinism suite).
+    ///
+    /// Correctness relies on ranges being *disjoint*: an accumulated id is
+    /// never strictly inside a new block's id range, so whole blocks can be
+    /// spliced on a single boundary comparison.
+    pub fn merge_streams_keyed(&mut self, streams: &[(u32, Vec<u32>)]) {
+        // Decode run descriptors carrying their stream's key.
+        // (vertex, key, stream index, payload start, count)
+        let mut runs: Vec<(Vertex, u32, u32, u32, u32)> = Vec::new();
+        let mut added = 0usize;
+        for (si, (key, s)) in streams.iter().enumerate() {
+            let mut i = 0usize;
+            while i < s.len() {
+                let v = s[i];
+                let cnt = s[i + 1] as usize;
+                if cnt > 0 {
+                    runs.push((v, *key, si as u32, (i + 2) as u32, cnt as u32));
+                }
+                added += cnt;
+                i += 2 + cnt;
+            }
+        }
+        if runs.is_empty() {
+            return;
+        }
+        runs.sort_unstable_by_key(|r| (r.0, r.1));
+
+        let mut vertices = Vec::with_capacity(self.vertices.len() + runs.len());
+        let mut offsets = Vec::with_capacity(self.vertices.len() + runs.len() + 1);
+        offsets.push(0u32);
+        let mut ids = Vec::with_capacity(self.ids.len() + added);
+        let (mut oi, mut ri) = (0usize, 0usize);
+        while oi < self.vertices.len() || ri < runs.len() {
+            let v = match (self.vertices.get(oi), runs.get(ri)) {
+                (Some(&ov), Some(&(nv, ..))) => ov.min(nv),
+                (Some(&ov), None) => ov,
+                (None, Some(&(nv, ..))) => nv,
+                (None, None) => unreachable!(),
+            };
+            let old: &[SampleId] = if oi < self.vertices.len() && self.vertices[oi] == v {
+                let lo = self.offsets[oi] as usize;
+                let hi = self.offsets[oi + 1] as usize;
+                oi += 1;
+                &self.ids[lo..hi]
+            } else {
+                &[]
+            };
+            // Splice the key-ordered new blocks into the accumulated run:
+            // blocks cover disjoint id ranges, so every accumulated id is
+            // strictly before or strictly after each whole block.
+            let mut cursor = 0usize;
+            while ri < runs.len() && runs[ri].0 == v {
+                let (_, _, si, start, cnt) = runs[ri];
+                let seg = &streams[si as usize].1[start as usize..(start + cnt) as usize];
+                while cursor < old.len() && old[cursor] < seg[0] {
+                    ids.push(old[cursor]);
+                    cursor += 1;
+                }
+                ids.extend_from_slice(seg);
+                ri += 1;
+            }
+            ids.extend_from_slice(&old[cursor..]);
+            vertices.push(v);
+            offsets.push(ids.len() as u32);
+        }
+        self.vertices = vertices;
+        self.offsets = offsets;
+        self.ids = ids;
+    }
+
     /// Counting-sort merge: count ids per vertex (existing + new), prefix-sum
     /// into write cursors, then scatter the accumulated runs followed by the
     /// stream runs in source order — exactly the concatenation order of the
@@ -752,6 +832,66 @@ mod tests {
         // Re-inserting covers nothing new, in both forms.
         assert_eq!(a.insert_all(&ids), 0);
         assert_eq!(b.insert_masked(&words, &masks), 0);
+    }
+
+    #[test]
+    fn keyed_merge_is_arrival_order_invariant() {
+        // Three "chunks" with disjoint id ranges keyed by their first id:
+        //   key 0:  v5 -> [0,1],  v9 -> [2]
+        //   key 10: v5 -> [10],   v3 -> [12]
+        //   key 20: v9 -> [20,21]
+        let c0 = (0u32, vec![5, 2, 0, 1, 9, 1, 2]);
+        let c1 = (10u32, vec![3, 1, 12, 5, 1, 10]);
+        let c2 = (20u32, vec![9, 2, 20, 21]);
+        // Canonical reference: ascending-key order through the plain merge.
+        let mut reference = InvertedIndex::new();
+        reference.merge_streams(&[c0.1.clone(), c1.1.clone(), c2.1.clone()]);
+        // Every arrival permutation, as one call and as chunk-at-a-time
+        // calls (interleaving new ranges with already-merged ones).
+        let perms: [[&(u32, Vec<u32>); 3]; 6] = [
+            [&c0, &c1, &c2],
+            [&c0, &c2, &c1],
+            [&c1, &c0, &c2],
+            [&c1, &c2, &c0],
+            [&c2, &c0, &c1],
+            [&c2, &c1, &c0],
+        ];
+        for perm in &perms {
+            let batch: Vec<(u32, Vec<u32>)> = perm.iter().map(|c| (*c).clone()).collect();
+            let mut one_call = InvertedIndex::new();
+            one_call.merge_streams_keyed(&batch);
+            assert_eq!(one_call.vertices, reference.vertices);
+            assert_eq!(one_call.offsets, reference.offsets);
+            assert_eq!(one_call.ids, reference.ids);
+            let mut incremental = InvertedIndex::new();
+            for c in perm {
+                incremental.merge_streams_keyed(std::slice::from_ref(*c));
+            }
+            assert_eq!(incremental.ids, reference.ids);
+            assert_eq!(incremental.vertices, reference.vertices);
+            assert_eq!(incremental.offsets, reference.offsets);
+        }
+    }
+
+    #[test]
+    fn keyed_merge_on_top_of_plain_rounds() {
+        // A prior (phase-stepped) round followed by out-of-order keyed
+        // chunks of the next round must equal two plain in-order rounds.
+        let round1 = vec![vec![5, 2, 0, 1, 9, 1, 0], vec![2, 1, 1]];
+        let round2_canonical = vec![vec![5, 1, 7, 9, 1, 8], vec![2, 1, 9, 5, 1, 11]];
+        let mut reference = InvertedIndex::new();
+        reference.merge_streams(&round1);
+        reference.merge_streams(&round2_canonical);
+        // Round 2 as keyed chunks, arriving out of order. Stream 0 of the
+        // canonical round holds ids {7, 8} (key 7), stream 1 ids {9, 11}
+        // (key 9).
+        let mut keyed = InvertedIndex::new();
+        keyed.merge_streams(&round1);
+        keyed.merge_streams_keyed(&[(9, round2_canonical[1].clone())]);
+        keyed.merge_streams_keyed(&[(7, round2_canonical[0].clone())]);
+        assert_eq!(keyed.vertices, reference.vertices);
+        assert_eq!(keyed.offsets, reference.offsets);
+        assert_eq!(keyed.ids, reference.ids);
     }
 
     #[test]

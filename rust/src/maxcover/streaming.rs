@@ -99,6 +99,20 @@ impl Burst {
         self.max_run = self.max_run.max(ids.len());
     }
 
+    /// Appends one wire-delivered run, decoding straight from the borrowed
+    /// [`wire::RunView`](crate::distributed::wire::RunView) into the arena
+    /// — the zero-copy twin of [`Burst::push`]: no intermediate
+    /// `Vec<SampleId>` is ever materialized, so downstream `OfferMask`s are
+    /// packed from ids that went wire buffer → arena directly (pinned by
+    /// the `wire::run_decode_allocs` counter in `tests/overlap.rs`).
+    pub fn push_decoded(&mut self, run: &crate::distributed::wire::RunView<'_>) {
+        self.vertices.push(run.vertex());
+        self.ids.reserve(run.len());
+        self.ids.extend(run.ids());
+        self.offsets.push(self.ids.len() as u32);
+        self.max_run = self.max_run.max(run.len());
+    }
+
     /// Resets the burst for reuse without freeing the arena.
     pub fn clear(&mut self) {
         self.vertices.clear();
@@ -760,6 +774,29 @@ mod tests {
         let sequential = seq.finalize();
         assert_eq!(sequential.seeds, sharded.seeds);
         assert_eq!(sequential.coverage, sharded.coverage);
+    }
+
+    #[test]
+    fn burst_push_decoded_matches_push() {
+        use crate::distributed::wire;
+        let elements: Vec<(Vertex, Vec<SampleId>)> =
+            vec![(3, vec![0, 5, 9]), (7, vec![]), (12, vec![2, 64, 4096])];
+        for compress in [false, true] {
+            let mut direct = Burst::new();
+            let mut decoded = Burst::new();
+            for (v, ids) in &elements {
+                direct.push(*v, ids);
+                let enc = wire::encode_run(*v, ids, compress);
+                let view = wire::RunView::parse(&enc).unwrap();
+                decoded.push_decoded(&view);
+            }
+            assert_eq!(direct.len(), decoded.len());
+            assert_eq!(direct.max_run_len(), decoded.max_run_len());
+            for i in 0..direct.len() {
+                assert_eq!(direct.item(i).vertex, decoded.item(i).vertex);
+                assert_eq!(direct.item(i).ids, decoded.item(i).ids);
+            }
+        }
     }
 
     #[test]

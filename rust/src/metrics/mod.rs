@@ -3,15 +3,57 @@
 
 use std::fmt;
 
+/// Per-stage metrics of the chunked overlapped pipeline (PR 4). Zero when
+/// the phase-stepped engine ran (`--overlap off` or shuffle-free
+/// baselines).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlapStats {
+    /// Sample chunks processed (summed across ranks and rounds).
+    pub chunks: u64,
+    /// Merge-side starvation: seconds the per-rank merge stage spent
+    /// waiting on chunk deliveries (summed across ranks and rounds).
+    pub sampler_idle: f64,
+    /// Wire-side starvation: seconds the per-chunk exchange steps spent
+    /// waiting for sampler/invert stages to produce payloads.
+    pub wire_idle: f64,
+    /// Encoded bytes in flight (sent but not yet merged) at the moment the
+    /// earliest S3 sender starts — peak across rounds.
+    pub inflight_bytes_at_s3: u64,
+}
+
+impl OverlapStats {
+    pub fn add(&mut self, o: &OverlapStats) {
+        self.chunks += o.chunks;
+        self.sampler_idle += o.sampler_idle;
+        self.wire_idle += o.wire_idle;
+        self.inflight_bytes_at_s3 = self.inflight_bytes_at_s3.max(o.inflight_bytes_at_s3);
+    }
+}
+
+impl fmt::Display for OverlapStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} chunks | sampler-idle {:.3}s | wire-idle {:.3}s | {} B in flight at S3",
+            self.chunks, self.sampler_idle, self.wire_idle, self.inflight_bytes_at_s3
+        )
+    }
+}
+
 /// Simulated-time breakdown of one InfMax run (accumulated across
 /// martingale rounds). All values are seconds of *critical-path* time
 /// attributable to the phase, per the paper's Fig. 4 methodology:
-/// sender-side times are taken from the longest-running sender.
+/// sender-side times are taken from the longest-running sender. Under the
+/// overlapped engine the stages are attributed by *exposed* time (the span
+/// a stage adds to the critical path after overlap), so the total still
+/// tracks the makespan.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Breakdown {
-    /// S1 — distributed RRR sampling.
+    /// S1 — distributed RRR sampling (overlapped engine: the send-side
+    /// sample+invert pipeline of the slowest rank).
     pub sampling: f64,
-    /// S2 — all-to-all shuffle of partial covering sets.
+    /// S2 — all-to-all shuffle of partial covering sets (overlapped
+    /// engine: the exposed wire+merge tail past the sampling pipeline).
     pub alltoall: f64,
     /// S3 — local max-k-cover at the senders (longest sender).
     pub select_local: f64,
@@ -20,6 +62,8 @@ pub struct Breakdown {
     pub select_global: f64,
     /// Final solution broadcast + martingale bookkeeping.
     pub coordination: f64,
+    /// Chunked-pipeline overlap metrics (PR 4).
+    pub overlap: OverlapStats,
 }
 
 impl Breakdown {
@@ -42,6 +86,7 @@ impl Breakdown {
         self.select_local += other.select_local;
         self.select_global += other.select_global;
         self.coordination += other.coordination;
+        self.overlap.add(&other.overlap);
     }
 }
 
@@ -117,6 +162,7 @@ mod tests {
             select_local: 3.0,
             select_global: 4.0,
             coordination: 0.0,
+            ..Default::default()
         };
         assert_eq!(b.total(), 10.0);
         assert!((b.seed_selection_fraction() - 0.7).abs() < 1e-12);
@@ -133,6 +179,30 @@ mod tests {
         a.add(&Breakdown { sampling: 2.0, alltoall: 3.0, ..Default::default() });
         assert_eq!(a.sampling, 3.0);
         assert_eq!(a.alltoall, 3.0);
+    }
+
+    #[test]
+    fn overlap_stats_accumulate() {
+        let mut a = OverlapStats {
+            chunks: 2,
+            sampler_idle: 1.0,
+            wire_idle: 0.5,
+            inflight_bytes_at_s3: 100,
+        };
+        a.add(&OverlapStats {
+            chunks: 3,
+            sampler_idle: 0.5,
+            wire_idle: 1.0,
+            inflight_bytes_at_s3: 40,
+        });
+        assert_eq!(a.chunks, 5);
+        assert_eq!(a.sampler_idle, 1.5);
+        assert_eq!(a.wire_idle, 1.5);
+        assert_eq!(a.inflight_bytes_at_s3, 100, "in-flight is a peak, not a sum");
+        let mut b = Breakdown::default();
+        b.add(&Breakdown { overlap: a, ..Default::default() });
+        assert_eq!(b.overlap.chunks, 5);
+        assert_eq!(b.total(), 0.0, "overlap metrics do not inflate the phase total");
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! End-to-end guarantees of the PR-4 chunked overlapped pipeline:
+//!
+//! - `--overlap on|off` selects **bit-identical seed sets** with
+//!   bit-identical `CommVolume` raw-byte counters, across both transports
+//!   and chunk sizes {1, 7, quota}, including the m = 1 degenerate case;
+//! - martingale round decisions (and therefore θ) are unaffected;
+//! - the overlapped engine reports its per-stage metrics;
+//! - the S3 offer path performs **zero** allocating run decodes for
+//!   wire-delivered runs (borrowed `RunView` end-to-end), pinned by the
+//!   `wire::run_decode_allocs` counter.
+//!
+//! NOTE: no test in this binary may call `wire::decode_run` (the counter
+//! is process-wide) — the zero-copy pin below relies on that.
+
+use greediris::coordinator::{run_infmax, Algorithm, Config};
+use greediris::diffusion::DiffusionModel;
+use greediris::distributed::{wire, TransportKind};
+use greediris::graph::weights::WeightModel;
+use greediris::graph::{generators, Graph};
+
+fn graph() -> Graph {
+    let edges = generators::barabasi_albert(500, 5, 17);
+    Graph::from_edges(500, &edges, WeightModel::UniformIc { max: 0.1 }, 17)
+}
+
+fn cfg(m: usize, kind: TransportKind) -> Config {
+    Config::new(10, m, DiffusionModel::IC, Algorithm::GreediRis)
+        .with_theta(768)
+        .with_transport(kind)
+}
+
+#[test]
+fn overlap_on_off_bit_identical_across_transports_and_chunks() {
+    let g = graph();
+    for m in [1usize, 4] {
+        for kind in [TransportKind::Sim, TransportKind::Threads] {
+            let reference = run_infmax(&g, &cfg(m, kind).with_overlap(false));
+            // quota per rank is 768/m; include it explicitly as a chunk size
+            // so the "one chunk = whole quota" degenerate case is pinned.
+            let quota = 768 / m.max(1);
+            for chunk in [1usize, 7, quota, 0] {
+                let r = run_infmax(&g, &cfg(m, kind).with_overlap(true).with_chunk(chunk));
+                assert_eq!(r.seeds, reference.seeds, "m={m} {kind:?} chunk={chunk}");
+                assert_eq!(r.coverage, reference.coverage, "m={m} {kind:?} chunk={chunk}");
+                assert_eq!(
+                    r.volumes.alltoall_raw_bytes, reference.volumes.alltoall_raw_bytes,
+                    "S2 raw counter must be chunking-invariant (m={m} {kind:?} chunk={chunk})"
+                );
+                assert_eq!(
+                    r.volumes.stream_raw_bytes, reference.volumes.stream_raw_bytes,
+                    "S3 raw counter must be overlap-invariant (m={m} {kind:?} chunk={chunk})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_preserves_martingale_rounds_and_theta() {
+    // No θ override: the round decisions depend only on per-round
+    // coverage, which the overlapped engine must reproduce exactly.
+    let edges = generators::barabasi_albert(300, 4, 7);
+    let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 7);
+    let mk = |overlap: bool, kind: TransportKind| {
+        let mut c = Config::new(6, 4, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_transport(kind)
+            .with_overlap(overlap)
+            .with_chunk(7);
+        c.eps = 0.3;
+        run_infmax(&g, &c)
+    };
+    let reference = mk(false, TransportKind::Sim);
+    for kind in [TransportKind::Sim, TransportKind::Threads] {
+        let r = mk(true, kind);
+        assert_eq!(r.seeds, reference.seeds, "{kind:?}");
+        assert_eq!(r.rounds, reference.rounds, "{kind:?}");
+        assert_eq!(r.theta, reference.theta, "{kind:?}");
+    }
+}
+
+#[test]
+fn overlap_holds_under_truncation_and_wire_variants() {
+    let g = graph();
+    for kind in [TransportKind::Sim, TransportKind::Threads] {
+        for (compress, prune) in [(true, true), (false, true), (true, false)] {
+            let mut base = cfg(5, kind)
+                .with_wire_compression(compress)
+                .with_floor_prune(prune)
+                .with_alpha(0.5);
+            base.algorithm = Algorithm::GreediRisTrunc;
+            let off = run_infmax(&g, &base.clone().with_overlap(false));
+            let on = run_infmax(&g, &base.clone().with_overlap(true).with_chunk(13));
+            assert_eq!(on.seeds, off.seeds, "{kind:?} compress={compress} prune={prune}");
+            assert_eq!(on.volumes.alltoall_raw_bytes, off.volumes.alltoall_raw_bytes);
+        }
+    }
+}
+
+#[test]
+fn overlap_metrics_are_reported() {
+    let g = graph();
+    let r = run_infmax(&g, &cfg(4, TransportKind::Sim).with_overlap(true).with_chunk(32));
+    assert!(r.breakdown.overlap.chunks > 0, "chunk counter must be live");
+    assert!(r.breakdown.overlap.sampler_idle >= 0.0);
+    assert!(r.breakdown.overlap.wire_idle >= 0.0);
+    let off = run_infmax(&g, &cfg(4, TransportKind::Sim).with_overlap(false));
+    assert_eq!(off.breakdown.overlap.chunks, 0, "phase-stepped path reports no chunks");
+}
+
+#[test]
+fn wire_delivered_runs_never_materialize_id_vectors() {
+    // The zero-copy acceptance gate: a full fused overlapped round on the
+    // threads backend (S3 runs really crossing the wire into the live
+    // receiver) must not perform a single allocating run decode —
+    // `RunView` is borrowed end-to-end into the burst arena.
+    let g = graph();
+    let before = wire::run_decode_allocs();
+    let r = run_infmax(&g, &cfg(6, TransportKind::Threads).with_overlap(true));
+    assert!(r.volumes.streamed_seeds > 0, "runs must actually cross the wire");
+    assert_eq!(
+        wire::run_decode_allocs(),
+        before,
+        "S3 offer path must be zero-copy (no Vec<SampleId> decode allocations)"
+    );
+    // The phase-stepped threads round shares the same merger, so it is
+    // zero-copy too.
+    let r2 = run_infmax(&g, &cfg(6, TransportKind::Threads).with_overlap(false));
+    assert!(r2.volumes.streamed_seeds > 0);
+    assert_eq!(wire::run_decode_allocs(), before);
+}

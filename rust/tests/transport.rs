@@ -60,16 +60,32 @@ fn varint_roundtrip_property() {
         }
         for compress in [false, true] {
             let enc = wire::encode_stream(&stream, compress);
-            assert_eq!(wire::decode_stream(&enc), stream, "case {case} compress {compress}");
+            assert_eq!(
+                wire::decode_stream(&enc).unwrap(),
+                stream,
+                "case {case} compress {compress}"
+            );
+            // Bounds checking: every truncation of a valid payload decodes
+            // to Ok (a shorter valid stream) or a clean error — no panic.
+            for cut in 0..enc.len() {
+                let _ = wire::decode_stream(&enc[..cut]);
+            }
         }
-        // Single-run framing too.
+        // Single-run framing too, plus the zero-copy view.
         if n_runs > 0 {
             let cnt = stream[1] as usize;
             let (rv, rids) = (stream[0], stream[2..2 + cnt].to_vec());
             for compress in [false, true] {
                 let enc = wire::encode_run(rv, &rids, compress);
                 assert_eq!(enc.len(), wire::encoded_run_len(rv, &rids, compress));
-                assert_eq!(wire::decode_run(&enc), (rv, rids.clone()));
+                assert_eq!(wire::decode_run(&enc).unwrap(), (rv, rids.clone()));
+                let view = wire::RunView::parse(&enc).unwrap();
+                assert_eq!(view.vertex(), rv);
+                assert_eq!(view.ids().collect::<Vec<_>>(), rids);
+                for cut in 0..enc.len() {
+                    let _ = wire::RunView::parse(&enc[..cut]);
+                    let _ = wire::decode_run(&enc[..cut]);
+                }
             }
         }
     }
@@ -83,7 +99,7 @@ fn golden_bytes_for_pinned_stream() {
     let stream = vec![5, 3, 0, 1, 129, 9, 1, 300];
     let enc = wire::encode_stream(&stream, true);
     assert_eq!(enc, vec![1, 5, 3, 0, 1, 0x80, 0x01, 4, 1, 0xAC, 0x02]);
-    assert_eq!(wire::decode_stream(&enc), stream);
+    assert_eq!(wire::decode_stream(&enc).unwrap(), stream);
     // Raw form: 1 tag byte + LE words.
     let raw = wire::encode_stream(&stream, false);
     assert_eq!(raw.len(), 1 + stream.len() * 4);
