@@ -14,8 +14,14 @@
 //! 4. PR-4 overlap A/B — `infmax_overlap_on_*` vs `infmax_overlap_off_*`
 //!    on the threads backend (wall medians + `makespan_s` extras), seeds
 //!    asserted bit-identical before timing.
+//! 5. PR-5 socket-backend leg — `infmax_process_*`: the same run with
+//!    every rank a real OS process over checksummed socket frames (wall
+//!    median + `makespan_s` and wire-byte extras), seeds AND raw-byte
+//!    counters asserted identical to both in-process backends before any
+//!    timing. Worker processes are forked from the `greediris` binary
+//!    (`CARGO_BIN_EXE_greediris`, resolved at compile time).
 //!
-//! `scripts/ci.sh` collects every line into `BENCH_PR4.json`.
+//! `scripts/ci.sh` collects every line into `BENCH_PR5.json`.
 
 use greediris::coordinator::sampling::{invert_batch_to_streams, DistState};
 use greediris::coordinator::{run_infmax, Algorithm, Config};
@@ -66,6 +72,40 @@ fn main() {
         sim_stats.median / thr_stats.median,
         sim_stats.median,
         thr_stats.median,
+    );
+
+    // ---- PR-5: the socket backend (every rank a real OS process). ----
+    std::env::set_var("GREEDIRIS_WORKER_BIN", env!("CARGO_BIN_EXE_greediris"));
+    let cfg_prc = cfg_base.clone().with_transport(TransportKind::Process);
+    let prc_ref = run_infmax(&g, &cfg_prc);
+    assert_eq!(
+        sim_ref.seeds, prc_ref.seeds,
+        "process backend must select identical seeds"
+    );
+    assert_eq!(
+        sim_ref.volumes.alltoall_raw_bytes, prc_ref.volumes.alltoall_raw_bytes,
+        "S2 raw counter must be engine-invariant"
+    );
+    assert_eq!(
+        sim_ref.volumes.stream_raw_bytes, prc_ref.volumes.stream_raw_bytes,
+        "S3 raw counter must be engine-invariant"
+    );
+    export_extra("infmax_process_m8_theta4096", "makespan_s", prc_ref.sim_time);
+    export_extra(
+        "process_alltoall_bytes",
+        "bytes",
+        prc_ref.volumes.alltoall_bytes as f64,
+    );
+    export_extra("process_stream_bytes", "bytes", prc_ref.volumes.stream_bytes as f64);
+    let prc_stats = b.bench("infmax_process_m8_theta4096", || {
+        run_infmax(&g, &cfg_prc).coverage
+    });
+    println!(
+        "wall-clock process-vs-threads: {:.2}x (threads {:.3}s vs process {:.3}s medians; \
+         per-iteration worker-pool spawn included)",
+        thr_stats.median / prc_stats.median,
+        thr_stats.median,
+        prc_stats.median,
     );
 
     // ---- A/B: raw vs delta-varint wire bytes on a real shuffle round. ----

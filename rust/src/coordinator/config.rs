@@ -93,11 +93,14 @@ pub struct Config {
     /// Skip the martingale estimation and use exactly this many samples
     /// (used by benches that sweep m at fixed work).
     pub theta_override: Option<u64>,
-    /// Execution engine: the sequential cost model or rank-per-OS-thread.
-    /// Defaults to [`TransportKind::Sim`]; the `GREEDIRIS_TRANSPORT` env
-    /// var (`sim` | `threads`) overrides the default so `scripts/ci.sh`
-    /// can run the whole test suite under either backend. Seed sets are
-    /// identical across backends for the same config/seed.
+    /// Execution engine: the sequential cost model, rank-per-OS-thread,
+    /// or rank-per-OS-process. Defaults to [`TransportKind::Sim`]; the
+    /// `GREEDIRIS_TRANSPORT` env var (`sim` | `threads` | `process`)
+    /// overrides the default so `scripts/ci.sh` can run the test suite
+    /// under any backend. An unknown env value is a hard error (panic
+    /// here, a clean CLI error in `main` — never a silent fallback to the
+    /// default). Seed sets are identical across backends for the same
+    /// config/seed.
     pub transport: TransportKind,
     /// Delta-varint-compress the S2/S3 wire payloads (lossless; `false`
     /// ships raw little-endian words — the A/B baseline).
@@ -141,9 +144,8 @@ impl Config {
             node_threads: 64.0,
             s1_threads: 1,
             theta_override: None,
-            transport: std::env::var("GREEDIRIS_TRANSPORT")
-                .ok()
-                .and_then(|s| s.parse().ok())
+            transport: TransportKind::from_env()
+                .unwrap_or_else(|e| panic!("{e}"))
                 .unwrap_or(TransportKind::Sim),
             wire_compression: true,
             floor_prune: true,

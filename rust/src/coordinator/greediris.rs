@@ -27,11 +27,12 @@
 //! waiting on gaps.
 
 use crate::coordinator::config::{Config, LocalSolver};
-use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard};
+use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard, FloorSource};
 use crate::coordinator::sampling::{
     apply_overlap_timeline, run_rank_chunk_stages, ChunkGrow, ChunkPlan, DistState, GrowStats,
 };
-use crate::distributed::transport::threads::{Fabric, RankEndpoint};
+use crate::distributed::transport::threads::Fabric;
+use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{wire, Transport, TransportExt, TransportKind};
 use crate::graph::Graph;
 use crate::maxcover::dense::{dense_greedy_max_cover_stream, PackedCovers};
@@ -196,6 +197,18 @@ pub fn streaming_round<'a, 'b>(
     if t.kind() == TransportKind::Threads && scorer.is_none() {
         let t0 = t.barrier();
         return threaded_streaming_round(t, state, cfg, t0);
+    }
+
+    // The multi-process engine: workers hold this phase's covers (the
+    // process grow left the parent's DistState senders empty), so the sim
+    // path below cannot stand in — S3 must run worker-side.
+    if t.kind() == TransportKind::Process {
+        assert!(
+            scorer.is_none(),
+            "--transport process does not support the XLA scorer (single host handle)"
+        );
+        let t0 = t.barrier();
+        return crate::coordinator::process::select_process(t, state, cfg, t0);
     }
 
     // Per-sender S3 start times (the prefix-emission half of the
@@ -369,14 +382,15 @@ struct SenderOutcome {
 /// shipped seed's covering run to rank 0 (dropping runs the threshold
 /// floor proves dead, tombstoning so ordinals stay dense), then the DONE
 /// alert. Returns the local solution and the measured solve seconds.
-/// Shared by the phase-stepped threaded round and the fused overlapped
-/// round.
-fn run_wire_sender(
-    ep: &RankEndpoint,
+/// Fabric-agnostic ([`PeerSender`]/[`FloorSource`]): shared by the
+/// phase-stepped threaded round, the fused overlapped round, and the
+/// process-transport rank workers ([`crate::coordinator::process`]).
+pub(crate) fn run_wire_sender(
+    ep: &dyn PeerSender,
     system: SetSystemView<'_>,
     cfg: &Config,
     ship_limit: usize,
-    board: &FloorBoard,
+    board: &dyn FloorSource,
 ) -> (CoverSolution, f64) {
     let k = cfg.k;
     let compress = cfg.wire_compression;
@@ -386,18 +400,18 @@ fn run_wire_sender(
         let v = system.vertex(idx);
         let ids: &[SampleId] = system.set(idx);
         if prune {
-            let (floor, l) = board.read();
+            let (floor, l) = board.read_floor();
             if prunable(ids.len(), l, floor) {
                 let mut msg = vec![MSG_PRUNED];
                 wire::put_varint(&mut msg, (ids.len() as u64 + 2) * 4);
-                ep.send(0, msg);
+                ep.send_to(0, msg);
                 return;
             }
         }
         let mut msg = Vec::with_capacity(2 + ids.len());
         msg.push(MSG_RUN);
         wire::encode_run_into(&mut msg, v, ids, compress);
-        ep.send(0, msg);
+        ep.send_to(0, msg);
     };
     let solution = match cfg.local_solver {
         LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
@@ -415,17 +429,17 @@ fn run_wire_sender(
             })
         }
     };
-    ep.send(0, encode_done(&solution));
+    ep.send_to(0, encode_done(&solution));
     (solution, ts.elapsed().as_secs_f64())
 }
 
 /// What the canonical stream merger reports back.
-struct MergeOutcome {
-    locals: Vec<(usize, CoverSolution)>,
-    stream_bytes: u64,
-    stream_raw_bytes: u64,
-    pruned: u64,
-    shipped: u64,
+pub(crate) struct MergeOutcome {
+    pub(crate) locals: Vec<(usize, CoverSolution)>,
+    pub(crate) stream_bytes: u64,
+    pub(crate) stream_raw_bytes: u64,
+    pub(crate) pruned: u64,
+    pub(crate) shipped: u64,
 }
 
 /// The canonical stream merger: one sweep per emission ordinal, senders in
@@ -434,11 +448,17 @@ struct MergeOutcome {
 /// Zero-copy (PR 4): each RUN payload is validated in place as a
 /// [`wire::RunView`] and decoded straight into the burst arena — no
 /// `Vec<SampleId>` is ever materialized for a wire-delivered run (pinned
-/// by `wire::run_decode_allocs` in `tests/overlap.rs`).
-fn run_canonical_merger(
-    mut ep0: RankEndpoint,
+/// by `wire::run_decode_allocs` in `tests/overlap.rs`). Fabric-agnostic
+/// (PR 5): the thread engine hands it an mpsc endpoint, the process engine
+/// a socket inbox plus a `floor_push` hook that broadcasts the receiver's
+/// threshold floor to the still-live sender ranks after every ordinal
+/// sweep (the cross-process replacement for shared [`FloorBoard`]
+/// atomics).
+pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
+    ep0: &mut R,
     m: usize,
     tx_burst: mpsc::Sender<Burst>,
+    mut floor_push: Option<F>,
 ) -> MergeOutcome {
     let mut live: Vec<usize> = (1..m).collect();
     let mut out = MergeOutcome {
@@ -480,6 +500,9 @@ fn run_canonical_merger(
         if !burst.is_empty() && tx_burst.send(std::mem::take(&mut burst)).is_err() {
             break;
         }
+        if let Some(push) = floor_push.as_mut() {
+            push(&live);
+        }
     }
     drop(tx_burst);
     out
@@ -489,7 +512,7 @@ fn run_canonical_merger(
 /// unifies the winner tie-break), so the *live* receiver caps its
 /// bucketing threads at the host's parallelism — running the paper's 63
 /// bucketing threads on a 2-core box would only starve the senders.
-fn live_bucket_threads(cfg: &Config) -> usize {
+pub(crate) fn live_bucket_threads(cfg: &Config) -> usize {
     let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     cfg.threads.saturating_sub(1).clamp(1, host.max(1))
 }
@@ -537,7 +560,10 @@ fn threaded_streaming_round(
         });
 
         // Canonical merger (shared with the fused overlapped round).
-        let merge_handle = scope.spawn(move || run_canonical_merger(ep0, m, tx_burst));
+        let merge_handle = scope.spawn(move || {
+            let mut ep0 = ep0;
+            run_canonical_merger(&mut ep0, m, tx_burst, None::<fn(&[usize])>)
+        });
 
         // S3: sender threads.
         let sender_handles: Vec<_> = endpoints
@@ -548,7 +574,7 @@ fn threaded_streaming_round(
                 let system = state.system_at(p);
                 let board_s = Arc::clone(&board);
                 scope.spawn(move || {
-                    let (_, total) = run_wire_sender(&ep, system, cfg, ship_limit, &board_s);
+                    let (_, total) = run_wire_sender(&ep, system, cfg, ship_limit, &*board_s);
                     SenderOutcome { rank: p, total }
                 })
             })
@@ -597,7 +623,7 @@ fn threaded_streaming_round(
 /// vs best local, locals scanned in ascending rank order with strict `>`
 /// so the earliest rank wins ties — identical tie-breaks to the simulated
 /// event walk.
-fn fuse_solution(
+pub(crate) fn fuse_solution(
     receiver_best: CoverSolution,
     mut locals: Vec<(usize, CoverSolution)>,
 ) -> CoverSolution {
@@ -682,7 +708,10 @@ pub fn overlapped_round_threaded(
             );
             (out, tr.elapsed().as_secs_f64())
         });
-        let merge_handle = scope.spawn(move || run_canonical_merger(ep0, m, tx_burst));
+        let merge_handle = scope.spawn(move || {
+            let mut ep0 = ep0;
+            run_canonical_merger(&mut ep0, m, tx_burst, None::<fn(&[usize])>)
+        });
 
         // Rank threads: chunked S1/S2 pipeline, then (senders) S3.
         let rank_handles: Vec<_> = s2_eps
@@ -693,15 +722,17 @@ pub fn overlapped_round_threaded(
                 let s3 = if p == 0 { None } else { s3_iter.next() };
                 let board_s = Arc::clone(&board);
                 scope.spawn(move || {
+                    let sender = ep.sender();
                     let grow = run_rank_chunk_stages(
-                        &mut ep, &mut *cover, graph, cfg, id_base, owner, m, p, plan_ref,
+                        sender, &mut ep, &mut *cover, graph, cfg, id_base, owner, m, p, plan_ref,
                     );
                     // My covers are complete: start S3 immediately — other
                     // ranks' chunks may still be in flight.
                     let mut solve_secs = 0.0;
                     if let Some(s3_ep) = s3 {
                         let system = cover.as_view(theta_target);
-                        let (_, secs) = run_wire_sender(&s3_ep, system, cfg, ship_limit, &board_s);
+                        let (_, secs) =
+                            run_wire_sender(&s3_ep, system, cfg, ship_limit, &*board_s);
                         solve_secs = secs;
                     }
                     FusedOutcome { grow, solve_secs }
@@ -764,7 +795,7 @@ mod tests {
     use crate::coordinator::config::Algorithm;
     use crate::coordinator::sampling::{grow_to, DistState};
     use crate::diffusion::DiffusionModel;
-    use crate::distributed::{NetModel, SimTransport, ThreadTransport};
+    use crate::distributed::NetModel;
     use crate::graph::generators;
     use crate::graph::weights::WeightModel;
     use crate::graph::Graph;
@@ -776,10 +807,8 @@ mod tests {
     ) -> (Box<dyn Transport>, DistState, Config) {
         let edges = generators::barabasi_albert(400, 4, 3);
         let g = Graph::from_edges(400, &edges, WeightModel::UniformIc { max: 0.1 }, 3);
-        let mut t: Box<dyn Transport> = match kind {
-            TransportKind::Sim => Box::new(SimTransport::new(m, NetModel::slingshot())),
-            TransportKind::Threads => Box::new(ThreadTransport::new(m, NetModel::slingshot())),
-        };
+        let mut t: Box<dyn Transport> =
+            crate::distributed::make_transport(kind, m, NetModel::slingshot());
         let cfg = Config::new(8, m, DiffusionModel::IC, Algorithm::GreediRis).with_transport(kind);
         let pool: Vec<usize> = if m == 1 { vec![0] } else { (1..m).collect() };
         let mut st = DistState::new(g.n(), m, &pool, cfg.seed, 0, true);

@@ -9,11 +9,14 @@
 //! - the offline RandGreedi template used to motivate streaming
 //!   ([`randgreedi`], paper Table 2);
 //! - the real lock-free threaded receiver ([`receiver`], §3.4 S4);
+//! - the multi-process round protocol and rank-worker loop ([`process`],
+//!   the `--transport process` engine);
 //! - the martingale/OPIM drivers gluing rounds together ([`pipeline`]).
 
 pub mod config;
 pub mod sampling;
 pub mod greediris;
+pub mod process;
 pub mod randgreedi;
 pub mod receiver;
 pub mod pipeline;

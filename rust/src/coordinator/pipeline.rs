@@ -127,6 +127,24 @@ fn select<'a, 'b>(
     }
 }
 
+/// Dispatches the fully fused overlapped round (S1→S4, no stage barriers)
+/// to the rank-parallel engine behind the transport: real threads or real
+/// processes. Both produce bit-identical seed sets and raw-byte counters
+/// to the phase-stepped engines (tests/overlap.rs, tests/transport.rs).
+fn fused_round(
+    t: &mut dyn Transport,
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    target: u64,
+) -> (GrowStats, StreamRound) {
+    if t.kind() == TransportKind::Process {
+        crate::coordinator::process::overlapped_round_process(t, graph, cfg, state, target)
+    } else {
+        overlapped_round_threaded(t, graph, cfg, state, target)
+    }
+}
+
 fn owner_pool(cfg: &Config) -> (Vec<usize>, bool) {
     match cfg.algorithm {
         Algorithm::GreediRis | Algorithm::GreediRisTrunc => {
@@ -155,13 +173,13 @@ pub fn run_infmax_with_scorer<'a, 'b>(
     let mut breakdown = Breakdown::default();
     let mut volumes = CommVolume::default();
     let mut rounds = 0u32;
-    // The fully fused overlapped round (S1→S4 in one thread scope) applies
-    // to the streaming algorithms on the thread backend; everything else
-    // overlaps within `grow_to` (chunked clock model) and per-sender
-    // starts inside `streaming_round`. The XLA scorer pins the simulated
-    // engine, so it never fuses.
+    // The fully fused overlapped round (S1→S4 in one rank-parallel scope)
+    // applies to the streaming algorithms on the thread and process
+    // backends; everything else overlaps within `grow_to` (chunked clock
+    // model) and per-sender starts inside `streaming_round`. The XLA
+    // scorer pins the simulated engine, so it never fuses.
     let fused = cfg.overlap
-        && cluster.kind() == TransportKind::Threads
+        && matches!(cluster.kind(), TransportKind::Threads | TransportKind::Process)
         && cfg.m > 1
         && matches!(cfg.algorithm, Algorithm::GreediRis | Algorithm::GreediRisTrunc);
 
@@ -176,7 +194,7 @@ pub fn run_infmax_with_scorer<'a, 'b>(
             rounds += 1;
             let target = driver.theta_hat();
             let (gs, out) = if fused && scorer.is_none() {
-                let (gs, r) = overlapped_round_threaded(cluster, graph, cfg, &mut state, target);
+                let (gs, r) = fused_round(cluster, graph, cfg, &mut state, target);
                 (gs, stream_outcome(r))
             } else {
                 let gs = grow_to(cluster, graph, cfg, &mut state, target);
@@ -213,7 +231,7 @@ pub fn run_infmax_with_scorer<'a, 'b>(
         // The fused round has no S2/S3 boundary: sender/receiver spans are
         // measured from the round's start.
         let tb = cluster.makespan();
-        let (gs, r) = overlapped_round_threaded(cluster, graph, cfg, &mut state, theta);
+        let (gs, r) = fused_round(cluster, graph, cfg, &mut state, theta);
         (tb, gs, stream_outcome(r))
     } else {
         let gs = grow_to(cluster, graph, cfg, &mut state, theta);

@@ -1,0 +1,1026 @@
+//! The multi-process round protocol — GreediRIS over real OS processes
+//! (PR 5 tentpole).
+//!
+//! The socket fabric (frames, hub routing, process lifecycle) lives in
+//! [`crate::distributed::transport::process`]; this module is the
+//! *algorithm* side: what the supervisor (rank 0) and the rank workers say
+//! to each other, and how the shared rank bodies
+//! ([`run_rank_chunk_stages`], [`run_wire_sender`],
+//! [`run_canonical_merger`]) are driven across the process boundary.
+//!
+//! ## Protocol
+//!
+//! One opaque control payload per step, over the fabric's `K_CTRL` lane:
+//!
+//! - **HELLO** (supervisor → worker, once at join): `[m][cfg blob][graph
+//!   blob]`. The graph ships bit-exactly (weights *and* the integer
+//!   Bernoulli thresholds), so worker-side S1 sampling is byte-identical
+//!   to every in-process engine — the leap-frog RNG needs nothing else.
+//! - **ROUND** (supervisor → workers): `[id_base][from θ][to θ][overlap]
+//!   [fused]`. `from == 0` resets the worker's accumulated covers (a new
+//!   phase); an `id_base` change redraws the owner partition (both sides
+//!   call [`draw_owner_partition`], a pure function, so no partition ever
+//!   crosses the wire). With `overlap` the worker runs its two-stage chunk
+//!   pipeline; with `fused` it rolls straight into S3 the moment its own
+//!   index is complete — per-chunk S2 exchanges genuinely overlap *across
+//!   processes*.
+//! - **SELECT** (supervisor → workers): run S3 over the covers
+//!   accumulated by earlier ROUNDs (the phase-stepped engine's separate
+//!   selection step, and OPIM's grow-then-select shape).
+//! - **STATS** (worker → supervisor): measured per-chunk compute seconds,
+//!   wire byte counters, merge flush records, and S3 solve seconds — the
+//!   inputs [`apply_overlap_timeline`] and the phase-stepped clock loop
+//!   need so `metrics::Breakdown`/`CommVolume` are aggregated at rank 0
+//!   from every rank's real measurements (Fig. 4c and the bench tables
+//!   stay truthful). Seed-bearing data never rides STATS: local solutions
+//!   travel in-band as S3 `DONE` messages, exactly as on the thread
+//!   fabric.
+//!
+//! ## Determinism
+//!
+//! Nothing timing-dependent is result-bearing: S1 is a pure function of
+//! global sample ids, the chunked S2 merge is order-invariant
+//! ([`crate::maxcover::InvertedIndex::merge_streams_keyed`]), the S3
+//! stream is re-sequenced into the canonical (emission ordinal, sender
+//! rank) order by the shared merger, and floor pruning is lossless for
+//! any stale snapshot. Seed sets and raw-byte counters are therefore
+//! bit-identical across `sim | threads | process` for the same
+//! config/seed — pinned by `tests/transport.rs` and the `scripts/ci.sh`
+//! three-way divergence gate.
+//!
+//! ## What stays on the workers
+//!
+//! Sender covers and sample batches live *only* in the worker processes
+//! (the parent's `DistState` keeps rank 0's). That is the point of
+//! leaving the process — and why the reduction baselines, which read
+//! covers out of the parent state, fall back to the sequential engine
+//! under `--transport process` (their seeds are engine-invariant).
+
+use crate::coordinator::config::{Algorithm, Config, LocalSolver};
+use crate::coordinator::greediris::{
+    fuse_solution, live_bucket_threads, run_canonical_merger, run_wire_sender, StreamRound,
+};
+use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard};
+use crate::coordinator::sampling::{
+    apply_overlap_timeline, draw_owner_partition, invert_batch_to_streams, rank_ranges,
+    run_rank_chunk_stages, wire_volumes, ChunkGrow, ChunkPlan, DistState, GrowStats, MergeOut,
+    SamplerOut,
+};
+use crate::diffusion::DiffusionModel;
+use crate::distributed::transport::process::{
+    decode_graph, encode_graph, get_f64, put_f64, worker_binary, WorkerLink, K_S2, K_S3,
+};
+use crate::distributed::{wire, Transport, TransportKind};
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+use crate::maxcover::InvertedIndex;
+use crate::metrics::ReceiverBreakdown;
+use crate::sampling::{batch_parallel, SampleBatch};
+use crate::{anyhow, bail};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+// Control opcodes (first byte of a K_CTRL payload after HELLO).
+const OP_ROUND: u8 = 1;
+const OP_SELECT: u8 = 2;
+const OP_STATS_CHUNK: u8 = 3;
+const OP_STATS_PHASED: u8 = 4;
+const OP_STATS_SELECT: u8 = 5;
+
+fn derr(e: wire::DecodeError) -> Error {
+    Error::msg(format!("process control payload: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Control payload codecs.
+// ---------------------------------------------------------------------------
+
+fn model_tag(m: DiffusionModel) -> u8 {
+    match m {
+        DiffusionModel::IC => 0,
+        DiffusionModel::LT => 1,
+    }
+}
+
+fn model_from(t: u8) -> Result<DiffusionModel> {
+    match t {
+        0 => Ok(DiffusionModel::IC),
+        1 => Ok(DiffusionModel::LT),
+        other => bail!("bad diffusion-model tag {other}"),
+    }
+}
+
+fn algo_tag(a: Algorithm) -> u8 {
+    match a {
+        Algorithm::GreediRis => 0,
+        Algorithm::GreediRisTrunc => 1,
+        Algorithm::RandGreediOffline => 2,
+        Algorithm::Ripples => 3,
+        Algorithm::DiImm => 4,
+    }
+}
+
+fn algo_from(t: u8) -> Result<Algorithm> {
+    match t {
+        0 => Ok(Algorithm::GreediRis),
+        1 => Ok(Algorithm::GreediRisTrunc),
+        2 => Ok(Algorithm::RandGreediOffline),
+        3 => Ok(Algorithm::Ripples),
+        4 => Ok(Algorithm::DiImm),
+        other => bail!("bad algorithm tag {other}"),
+    }
+}
+
+fn solver_tag(s: LocalSolver) -> u8 {
+    match s {
+        LocalSolver::LazyGreedy => 0,
+        LocalSolver::DenseCpu => 1,
+        LocalSolver::DenseXla => 2,
+    }
+}
+
+fn solver_from(t: u8) -> Result<LocalSolver> {
+    match t {
+        0 => Ok(LocalSolver::LazyGreedy),
+        1 => Ok(LocalSolver::DenseCpu),
+        2 => Ok(LocalSolver::DenseXla),
+        other => bail!("bad solver tag {other}"),
+    }
+}
+
+fn encode_config(cfg: &Config) -> Vec<u8> {
+    let mut b = Vec::new();
+    wire::put_varint(&mut b, cfg.k as u64);
+    wire::put_varint(&mut b, cfg.m as u64);
+    wire::put_varint(&mut b, cfg.threads as u64);
+    wire::put_varint(&mut b, cfg.s1_threads as u64);
+    wire::put_varint(&mut b, cfg.floor_feedback_every as u64);
+    wire::put_varint(&mut b, cfg.chunk as u64);
+    wire::put_varint(&mut b, cfg.seed);
+    put_f64(&mut b, cfg.eps);
+    put_f64(&mut b, cfg.delta);
+    put_f64(&mut b, cfg.alpha);
+    put_f64(&mut b, cfg.node_threads);
+    b.push(model_tag(cfg.model));
+    b.push(algo_tag(cfg.algorithm));
+    b.push(solver_tag(cfg.local_solver));
+    b.push(cfg.wire_compression as u8);
+    b.push(cfg.floor_prune as u8);
+    b.push(cfg.overlap as u8);
+    b
+}
+
+fn decode_config(bytes: &[u8]) -> Result<Config> {
+    let mut r = wire::Reader::new(bytes);
+    let k = r.varint().map_err(derr)? as usize;
+    let m = r.varint().map_err(derr)? as usize;
+    let threads = r.varint().map_err(derr)? as usize;
+    let s1_threads = r.varint().map_err(derr)? as usize;
+    let floor_feedback_every = r.varint().map_err(derr)? as usize;
+    let chunk = r.varint().map_err(derr)? as usize;
+    let seed = r.varint().map_err(derr)?;
+    let eps = get_f64(&mut r).map_err(derr)?;
+    let delta = get_f64(&mut r).map_err(derr)?;
+    let alpha = get_f64(&mut r).map_err(derr)?;
+    let node_threads = get_f64(&mut r).map_err(derr)?;
+    let model = model_from(r.byte().map_err(derr)?)?;
+    let algorithm = algo_from(r.byte().map_err(derr)?)?;
+    let local_solver = solver_from(r.byte().map_err(derr)?)?;
+    let wire_compression = r.byte().map_err(derr)? != 0;
+    let floor_prune = r.byte().map_err(derr)? != 0;
+    let overlap = r.byte().map_err(derr)? != 0;
+    let mut c = Config::new(k, m, model, algorithm);
+    c.threads = threads;
+    c.s1_threads = s1_threads;
+    c.floor_feedback_every = floor_feedback_every;
+    c.chunk = chunk;
+    c.seed = seed;
+    c.eps = eps;
+    c.delta = delta;
+    c.alpha = alpha;
+    c.node_threads = node_threads;
+    c.local_solver = local_solver;
+    c.wire_compression = wire_compression;
+    c.floor_prune = floor_prune;
+    c.overlap = overlap;
+    // Workers never dispatch on the transport; pin the field so an
+    // inherited GREEDIRIS_TRANSPORT can't confuse diagnostics.
+    c.transport = TransportKind::Sim;
+    Ok(c)
+}
+
+fn hello_payload(m: usize, cfg: &Config, graph: &Graph) -> Vec<u8> {
+    let mut b = Vec::new();
+    wire::put_varint(&mut b, m as u64);
+    let cb = encode_config(cfg);
+    wire::put_varint(&mut b, cb.len() as u64);
+    b.extend_from_slice(&cb);
+    b.extend_from_slice(&encode_graph(graph));
+    b
+}
+
+fn decode_hello(bytes: &[u8]) -> Result<(usize, Config, Graph)> {
+    let mut r = wire::Reader::new(bytes);
+    let m = r.varint().map_err(derr)? as usize;
+    let clen = r.varint().map_err(derr)? as usize;
+    let pos = bytes.len() - r.remaining();
+    if clen > bytes.len() - pos {
+        bail!("HELLO config blob truncated");
+    }
+    let cfg = decode_config(&bytes[pos..pos + clen])?;
+    let graph = decode_graph(&bytes[pos + clen..]).map_err(derr)?;
+    Ok((m, cfg, graph))
+}
+
+fn enc_round(id_base: u64, from: u64, to: u64, overlap: bool, fused: bool) -> Vec<u8> {
+    let mut b = vec![OP_ROUND];
+    wire::put_varint(&mut b, id_base);
+    wire::put_varint(&mut b, from);
+    wire::put_varint(&mut b, to);
+    b.push(overlap as u8);
+    b.push(fused as u8);
+    b
+}
+
+fn enc_stats_chunk(g: &ChunkGrow, solve_secs: f64) -> Vec<u8> {
+    let mut b = vec![OP_STATS_CHUNK];
+    let s = &g.sampler;
+    wire::put_varint(&mut b, s.chunk_compute.len() as u64);
+    for &c in &s.chunk_compute {
+        put_f64(&mut b, c);
+    }
+    for &x in &s.chunk_send_bytes {
+        wire::put_varint(&mut b, x);
+    }
+    wire::put_varint(&mut b, s.enc_off_node);
+    wire::put_varint(&mut b, s.raw_off_node);
+    let mg = &g.merge;
+    wire::put_varint(&mut b, mg.recv_step_bytes.len() as u64);
+    for &x in &mg.recv_step_bytes {
+        wire::put_varint(&mut b, x);
+    }
+    wire::put_varint(&mut b, mg.flushes.len() as u64);
+    for &(step, secs, bytes) in &mg.flushes {
+        wire::put_varint(&mut b, step as u64);
+        put_f64(&mut b, secs);
+        wire::put_varint(&mut b, bytes);
+    }
+    put_f64(&mut b, solve_secs);
+    b
+}
+
+/// Decodes [`enc_stats_chunk`] (opcode already consumed). The sample
+/// batches themselves stay on the worker — only their measurements cross.
+fn dec_stats_chunk(r: &mut wire::Reader<'_>) -> Result<(ChunkGrow, f64)> {
+    let nchunks = r.varint().map_err(derr)? as usize;
+    let mut chunk_compute = Vec::with_capacity(nchunks);
+    for _ in 0..nchunks {
+        chunk_compute.push(get_f64(r).map_err(derr)?);
+    }
+    let mut chunk_send_bytes = Vec::with_capacity(nchunks);
+    for _ in 0..nchunks {
+        chunk_send_bytes.push(r.varint().map_err(derr)?);
+    }
+    let enc_off_node = r.varint().map_err(derr)?;
+    let raw_off_node = r.varint().map_err(derr)?;
+    let nsteps = r.varint().map_err(derr)? as usize;
+    let mut recv_step_bytes = Vec::with_capacity(nsteps);
+    for _ in 0..nsteps {
+        recv_step_bytes.push(r.varint().map_err(derr)?);
+    }
+    let nflush = r.varint().map_err(derr)? as usize;
+    let mut flushes = Vec::with_capacity(nflush);
+    for _ in 0..nflush {
+        let step = r.varint().map_err(derr)? as usize;
+        let secs = get_f64(r).map_err(derr)?;
+        let bytes = r.varint().map_err(derr)?;
+        flushes.push((step, secs, bytes));
+    }
+    let solve = get_f64(r).map_err(derr)?;
+    Ok((
+        ChunkGrow {
+            sampler: SamplerOut {
+                batches: Vec::new(),
+                chunk_compute,
+                chunk_send_bytes,
+                enc_off_node,
+                raw_off_node,
+            },
+            merge: MergeOut { recv_step_bytes, flushes },
+        },
+        solve,
+    ))
+}
+
+/// Phase-stepped grow measurements (the thread backend's `RankGrow`
+/// numbers, minus the batch).
+struct PhasedStats {
+    s1: f64,
+    invert: f64,
+    merge: f64,
+    send_bytes: u64,
+    recv_bytes: u64,
+    enc: u64,
+    raw: u64,
+}
+
+fn enc_stats_phased(p: &PhasedStats) -> Vec<u8> {
+    let mut b = vec![OP_STATS_PHASED];
+    put_f64(&mut b, p.s1);
+    put_f64(&mut b, p.invert);
+    put_f64(&mut b, p.merge);
+    wire::put_varint(&mut b, p.send_bytes);
+    wire::put_varint(&mut b, p.recv_bytes);
+    wire::put_varint(&mut b, p.enc);
+    wire::put_varint(&mut b, p.raw);
+    b
+}
+
+fn dec_stats_phased(r: &mut wire::Reader<'_>) -> Result<PhasedStats> {
+    Ok(PhasedStats {
+        s1: get_f64(r).map_err(derr)?,
+        invert: get_f64(r).map_err(derr)?,
+        merge: get_f64(r).map_err(derr)?,
+        send_bytes: r.varint().map_err(derr)?,
+        recv_bytes: r.varint().map_err(derr)?,
+        enc: r.varint().map_err(derr)?,
+        raw: r.varint().map_err(derr)?,
+    })
+}
+
+fn enc_stats_select(solve: f64) -> Vec<u8> {
+    let mut b = vec![OP_STATS_SELECT];
+    put_f64(&mut b, solve);
+    b
+}
+
+// ---------------------------------------------------------------------------
+// Supervisor-side round drivers.
+// ---------------------------------------------------------------------------
+
+/// Whether `grow_to` should hand this round to the process engine. The
+/// reduction baselines (and the offline template) read covers out of the
+/// parent's `DistState`, so they stay on the sequential engine.
+pub(crate) fn process_growable(t: &mut dyn Transport, cfg: &Config, state: &DistState) -> bool {
+    t.kind() == TransportKind::Process
+        && t.m() > 1
+        && state.do_shuffle
+        && matches!(cfg.algorithm, Algorithm::GreediRis | Algorithm::GreediRisTrunc)
+}
+
+/// The fully fused overlapped round across processes: the supervisor runs
+/// rank 0's chunk pipeline, the canonical merger, and the live threaded
+/// receiver; every worker runs its chunk pipeline and rolls into S3 the
+/// moment its own index completes — chunks from slower ranks are still in
+/// flight on the sockets while earlier senders stream seeds. Mirrors
+/// [`crate::coordinator::greediris::overlapped_round_threaded`] result-
+/// and clock-wise.
+pub fn overlapped_round_process(
+    t: &mut dyn Transport,
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    target_theta: u64,
+) -> (GrowStats, StreamRound) {
+    let m = t.m();
+    debug_assert!(m > 1 && t.kind() == TransportKind::Process);
+    let k = cfg.k;
+    let ship_limit = cfg.trunc_limit();
+    let delta = cfg.delta;
+    let theta_target = target_theta as usize;
+    let t0 = t.barrier();
+    let from = state.theta;
+    let id_base = state.id_base;
+    let plan = ChunkPlan::new(m, from, target_theta, cfg);
+    let bucket_threads = live_bucket_threads(cfg);
+    let board = Arc::new(FloorBoard::new(bucket_threads));
+
+    let pt = t.as_process().expect("process transport");
+    let pc = pt.ensure_cluster(|| hello_payload(m, cfg, graph));
+    pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, true, true));
+    let hub_s2 = pc.s2_sender();
+    let mut s3_inbox = pc.take_s3_inbox();
+    let floor_out = pc.floor_pusher();
+    let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
+    let owner: &[u32] = &state.owner;
+    let cover0: &mut InvertedIndex = &mut state.covers[0];
+
+    let (grow0, worker_stats, merge, sols, recv_secs, s3_back) = std::thread::scope(|scope| {
+        // S4: the live threaded receiver consumes from round start.
+        let board_r = Arc::clone(&board);
+        let recv_handle = scope.spawn(move || {
+            let tr = Instant::now();
+            let out = run_threaded_receiver(
+                theta_target,
+                k,
+                delta,
+                bucket_threads + 1,
+                ship_limit.max(1) + 1,
+                rx_burst,
+                Some(board_r),
+            );
+            (out, tr.elapsed().as_secs_f64())
+        });
+        // Canonical merger, broadcasting the threshold floor to the live
+        // senders after every ordinal sweep (cross-process FloorBoard).
+        let board_m = Arc::clone(&board);
+        let merge_handle = scope.spawn(move || {
+            let push = move |live: &[usize]| {
+                let (floor, l) = board_m.read();
+                floor_out.push(floor, l, live);
+            };
+            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push));
+            (out, s3_inbox)
+        });
+        // Rank 0's chunk pipeline, inline: the sampler stage ships chunks
+        // to the workers while this thread merges rank 0's (empty-owner)
+        // inbox in arrival order.
+        let grow0 = run_rank_chunk_stages(
+            hub_s2,
+            pc.s2_inbox(),
+            cover0,
+            graph,
+            cfg,
+            id_base,
+            owner,
+            m,
+            0,
+            &plan,
+        );
+        // Worker measurements (each arrives after that worker's S3 DONE).
+        let mut stats: Vec<Option<(ChunkGrow, f64)>> = (1..m).map(|_| None).collect();
+        for _ in 1..m {
+            let (src, body) = pc.ctrl_recv();
+            let mut r = wire::Reader::new(&body);
+            let op = r.byte().expect("stats opcode");
+            assert_eq!(op, OP_STATS_CHUNK, "unexpected ctrl opcode {op} from rank {src}");
+            stats[src - 1] = Some(dec_stats_chunk(&mut r).expect("worker stats decode"));
+        }
+        let (merge, s3_back) = merge_handle.join().expect("merge thread");
+        let ((sols, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
+        (grow0, stats, merge, sols, recv_secs, s3_back)
+    });
+    pc.put_s3_inbox(s3_back);
+
+    // ---- Clocks + grow stats through the shared pipeline model. ----
+    let mut grows: Vec<ChunkGrow> = Vec::with_capacity(m);
+    let mut solve_secs = vec![0.0f64; m];
+    grows.push(grow0);
+    for (i, s) in worker_stats.into_iter().enumerate() {
+        let (g, solve) = s.expect("every worker reported");
+        grows.push(g);
+        solve_secs[i + 1] = solve;
+    }
+    let mut gstats = GrowStats::default();
+    apply_overlap_timeline(t, state, &mut gstats, t0, &grows);
+    for (p, g) in grows.into_iter().enumerate() {
+        // Worker batches stay on the workers; rank 0's are the only ones
+        // repatriated (the streaming pipeline never reads sender batches
+        // from the parent state).
+        state.local_batches[p].extend(g.sampler.batches);
+    }
+    state.theta = target_theta;
+
+    // ---- S3/S4 accounting: senders start at their own ready time. ----
+    let mut sender_end_max = t0;
+    let mut select_local_time = 0.0f64;
+    for p in 1..m {
+        t.charge_compute(p, solve_secs[p]);
+        let end = state.ready[p] + solve_secs[p];
+        sender_end_max = sender_end_max.max(end);
+        select_local_time = select_local_time.max(solve_secs[p]);
+    }
+    let receiver_end = (t0 + recv_secs).max(sender_end_max);
+    t.wait_until(0, receiver_end);
+    let solution = fuse_solution(sols, merge.locals);
+
+    let round = StreamRound {
+        solution,
+        select_local_time,
+        select_global_time: receiver_end - t0,
+        stream_bytes: merge.stream_bytes,
+        stream_raw_bytes: merge.stream_raw_bytes,
+        streamed_seeds: merge.shipped,
+        pruned_seeds: merge.pruned,
+        receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
+        sender_end_max,
+        receiver_end,
+    };
+    (gstats, round)
+}
+
+/// The process engine's grow round (no S3): chunked overlapped pipeline
+/// when `cfg.overlap`, the phase-stepped engine otherwise. Called from
+/// [`crate::coordinator::sampling::grow_to`]; used by the unfused paths
+/// (`--overlap off`, and OPIM's grow-then-select shape).
+pub(crate) fn grow_process(
+    t: &mut dyn Transport,
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    target_theta: u64,
+) -> GrowStats {
+    let m = t.m();
+    let mut stats = GrowStats::default();
+    let from = state.theta;
+    let id_base = state.id_base;
+    let t_before = t.makespan();
+
+    if cfg.overlap {
+        let t0 = t.barrier();
+        let plan = ChunkPlan::new(m, from, target_theta, cfg);
+        let pt = t.as_process().expect("process transport");
+        let pc = pt.ensure_cluster(|| hello_payload(m, cfg, graph));
+        pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, true, false));
+        let hub_s2 = pc.s2_sender();
+        let owner: &[u32] = &state.owner;
+        let cover0: &mut InvertedIndex = &mut state.covers[0];
+        let grow0 = run_rank_chunk_stages(
+            hub_s2,
+            pc.s2_inbox(),
+            cover0,
+            graph,
+            cfg,
+            id_base,
+            owner,
+            m,
+            0,
+            &plan,
+        );
+        let mut rest: Vec<Option<ChunkGrow>> = (1..m).map(|_| None).collect();
+        for _ in 1..m {
+            let (src, body) = pc.ctrl_recv();
+            let mut r = wire::Reader::new(&body);
+            let op = r.byte().expect("stats opcode");
+            assert_eq!(op, OP_STATS_CHUNK, "unexpected ctrl opcode {op} from rank {src}");
+            let (g, _solve) = dec_stats_chunk(&mut r).expect("worker stats decode");
+            rest[src - 1] = Some(g);
+        }
+        let mut grows: Vec<ChunkGrow> = Vec::with_capacity(m);
+        grows.push(grow0);
+        grows.extend(rest.into_iter().map(|g| g.expect("every worker reported")));
+        apply_overlap_timeline(t, state, &mut stats, t0, &grows);
+        for (p, g) in grows.into_iter().enumerate() {
+            state.local_batches[p].extend(g.sampler.batches);
+        }
+        state.theta = target_theta;
+        return stats;
+    }
+
+    // ---- Phase-stepped engine over processes (same clock discipline as
+    // the thread backend's phase-stepped grow). ----
+    let pt = t.as_process().expect("process transport");
+    let pc = pt.ensure_cluster(|| hello_payload(m, cfg, graph));
+    pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, false, false));
+    let hub_s2 = pc.s2_sender();
+    // Rank 0's body, inline; the workers run theirs concurrently.
+    let owner: &[u32] = &state.owner;
+    let (lo, len) = rank_ranges(m, from, target_theta)[0];
+    let ts = Instant::now();
+    let batch = if len > 0 {
+        batch_parallel(graph, cfg.model, cfg.seed ^ id_base, lo, len, cfg.s1_threads)
+    } else {
+        SampleBatch::empty(lo)
+    };
+    let s1_secs0 = ts.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let streams = invert_batch_to_streams(&batch, owner, m);
+    let compress = cfg.wire_compression;
+    let payloads: Vec<Vec<u8>> =
+        streams.iter().map(|s| wire::encode_stream(s, compress)).collect();
+    let send_bytes0: u64 = payloads.iter().map(|b| b.len() as u64).sum();
+    let (enc0, raw0) = wire_volumes(0, &streams, &payloads);
+    for (dst, pl) in payloads.into_iter().enumerate() {
+        hub_s2.send_to(dst, pl);
+    }
+    let invert_secs0 = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let mut recv_bytes0 = 0u64;
+    let mut inbox: Vec<Vec<u32>> = Vec::with_capacity(m);
+    for src in 0..m {
+        let bytes = pc.s2_inbox().recv_from(src);
+        if src != 0 {
+            recv_bytes0 += bytes.len() as u64;
+        }
+        inbox.push(wire::decode_stream(&bytes).expect("S2 wire payload decodes"));
+    }
+    state.covers[0].merge_streams(&inbox);
+    let merge_secs0 = t2.elapsed().as_secs_f64();
+
+    let mut phased: Vec<Option<PhasedStats>> = (1..m).map(|_| None).collect();
+    for _ in 1..m {
+        let (src, body) = pc.ctrl_recv();
+        let mut r = wire::Reader::new(&body);
+        let op = r.byte().expect("stats opcode");
+        assert_eq!(op, OP_STATS_PHASED, "unexpected ctrl opcode {op} from rank {src}");
+        phased[src - 1] = Some(dec_stats_phased(&mut r).expect("worker stats decode"));
+    }
+    let rank0 = PhasedStats {
+        s1: s1_secs0,
+        invert: invert_secs0,
+        merge: merge_secs0,
+        send_bytes: send_bytes0,
+        recv_bytes: recv_bytes0,
+        enc: enc0,
+        raw: raw0,
+    };
+    let all: Vec<PhasedStats> = std::iter::once(rank0)
+        .chain(phased.into_iter().map(|s| s.expect("every worker reported")))
+        .collect();
+
+    for (p, o) in all.iter().enumerate() {
+        t.charge_compute(p, o.s1 / cfg.node_threads);
+    }
+    let t_sampled = t.barrier();
+    stats.sampling_time = t_sampled - t_before;
+    for (p, o) in all.iter().enumerate() {
+        t.charge_compute(p, o.invert);
+    }
+    let t_pre = t.makespan();
+    t.barrier();
+    for (r, o) in all.iter().enumerate() {
+        let cost = t.net().all_to_all(m, o.send_bytes, o.recv_bytes);
+        t.charge_comm(r, cost);
+    }
+    for (p, o) in all.iter().enumerate() {
+        t.charge_compute(p, o.merge);
+        stats.alltoall_bytes += o.enc;
+        stats.alltoall_raw_bytes += o.raw;
+    }
+    let t_post = t.barrier();
+    stats.alltoall_time = t_post - t_pre;
+    state.local_batches[0].push(batch);
+    state.theta = target_theta;
+    let tb = t.barrier();
+    state.ready = vec![tb; m];
+    stats
+}
+
+/// The process engine's selection round: workers run S3 over their
+/// accumulated covers, the supervisor runs the canonical merger + live
+/// threaded receiver. Mirrors the thread backend's phase-stepped
+/// `threaded_streaming_round` result- and clock-wise.
+pub(crate) fn select_process(
+    t: &mut dyn Transport,
+    state: &DistState,
+    cfg: &Config,
+    t0: f64,
+) -> StreamRound {
+    let m = t.m();
+    let k = cfg.k;
+    let ship_limit = cfg.trunc_limit();
+    let theta = state.theta as usize;
+    let delta = cfg.delta;
+    let bucket_threads = live_bucket_threads(cfg);
+    let board = Arc::new(FloorBoard::new(bucket_threads));
+    let pt = t.as_process().expect("process transport");
+    let pc = pt
+        .cluster_mut()
+        .expect("process select requires a preceding process grow round");
+    pc.ctrl_broadcast(&[OP_SELECT]);
+    let mut s3_inbox = pc.take_s3_inbox();
+    let floor_out = pc.floor_pusher();
+    let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
+
+    let (sols, merge, solves, recv_secs, s3_back) = std::thread::scope(|scope| {
+        let board_r = Arc::clone(&board);
+        let threads = bucket_threads + 1;
+        let recv_handle = scope.spawn(move || {
+            let tr = Instant::now();
+            let out = run_threaded_receiver(
+                theta,
+                k,
+                delta,
+                threads,
+                ship_limit.max(1) + 1,
+                rx_burst,
+                Some(board_r),
+            );
+            (out, tr.elapsed().as_secs_f64())
+        });
+        let board_m = Arc::clone(&board);
+        let merge_handle = scope.spawn(move || {
+            let push = move |live: &[usize]| {
+                let (floor, l) = board_m.read();
+                floor_out.push(floor, l, live);
+            };
+            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push));
+            (out, s3_inbox)
+        });
+        let mut solves = vec![0.0f64; m];
+        for _ in 1..m {
+            let (src, body) = pc.ctrl_recv();
+            let mut r = wire::Reader::new(&body);
+            let op = r.byte().expect("stats opcode");
+            assert_eq!(op, OP_STATS_SELECT, "unexpected ctrl opcode {op} from rank {src}");
+            solves[src] = get_f64(&mut r).expect("solve seconds decode");
+        }
+        let (merge, s3_back) = merge_handle.join().expect("merge thread");
+        let ((sols, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
+        (sols, merge, solves, recv_secs, s3_back)
+    });
+    pc.put_s3_inbox(s3_back);
+
+    // ---- Clock parity: charge measured per-rank work into the model. ----
+    let mut sender_end_max = t0;
+    let mut select_local_time = 0.0f64;
+    for p in 1..m {
+        t.charge_compute(p, solves[p]);
+        sender_end_max = sender_end_max.max(t0 + solves[p]);
+        select_local_time = select_local_time.max(solves[p]);
+    }
+    let receiver_end = t0 + recv_secs;
+    t.wait_until(0, receiver_end);
+    let solution = fuse_solution(sols, merge.locals);
+
+    StreamRound {
+        solution,
+        select_local_time,
+        select_global_time: receiver_end - t0,
+        stream_bytes: merge.stream_bytes,
+        stream_raw_bytes: merge.stream_raw_bytes,
+        streamed_seeds: merge.shipped,
+        pruned_seeds: merge.pruned,
+        receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
+        sender_end_max,
+        receiver_end,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The rank worker.
+// ---------------------------------------------------------------------------
+
+/// True when this process was started as a rank worker (the env-join
+/// protocol: both vars set).
+pub fn worker_env_present() -> bool {
+    std::env::var_os("GREEDIRIS_RANK").is_some()
+        && std::env::var_os("GREEDIRIS_FABRIC_ADDR").is_some()
+}
+
+/// Runs S3 over the worker's accumulated covers, streaming runs to rank 0
+/// and pruning against the pushed threshold floor. The floor cell is
+/// reset first: each round starts a fresh receiver, and pruning is only
+/// lossless against a floor that lower-bounds the *current* receiver's
+/// (see [`crate::distributed::transport::process::SocketFloor::reset`]).
+fn run_s3(link: &WorkerLink, cover: &InvertedIndex, cfg: &Config, theta: u64) -> f64 {
+    let system = cover.as_view(theta as usize);
+    let floor = link.floor();
+    floor.reset();
+    let sender = link.sender(K_S3);
+    let (_sol, secs) = run_wire_sender(&sender, system, cfg, cfg.trunc_limit(), &*floor);
+    secs
+}
+
+/// The worker's phase-stepped grow body (the thread backend's `RankGrow`
+/// closure, over the socket fabric). Returns the encoded STATS payload.
+#[allow(clippy::too_many_arguments)]
+fn phase_grow(
+    link: &mut WorkerLink,
+    cover: &mut InvertedIndex,
+    graph: &Graph,
+    cfg: &Config,
+    owner: &[u32],
+    m: usize,
+    rank: usize,
+    id_base: u64,
+    from: u64,
+    to: u64,
+) -> Vec<u8> {
+    let (lo, len) = rank_ranges(m, from, to)[rank];
+    let ts = Instant::now();
+    let batch = if len > 0 {
+        batch_parallel(graph, cfg.model, cfg.seed ^ id_base, lo, len, cfg.s1_threads)
+    } else {
+        SampleBatch::empty(lo)
+    };
+    let s1 = ts.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let streams = invert_batch_to_streams(&batch, owner, m);
+    let payloads: Vec<Vec<u8>> =
+        streams.iter().map(|s| wire::encode_stream(s, cfg.wire_compression)).collect();
+    let send_bytes: u64 = payloads.iter().map(|b| b.len() as u64).sum();
+    let (enc, raw) = wire_volumes(rank, &streams, &payloads);
+    let sender = link.sender(K_S2);
+    for (dst, pl) in payloads.into_iter().enumerate() {
+        sender.send_to(dst, pl);
+    }
+    let invert = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let mut recv_bytes = 0u64;
+    let mut inbox: Vec<Vec<u32>> = Vec::with_capacity(m);
+    for src in 0..m {
+        let bytes = link.data().recv_from(src);
+        if src != rank {
+            recv_bytes += bytes.len() as u64;
+        }
+        inbox.push(wire::decode_stream(&bytes).expect("S2 wire payload decodes"));
+    }
+    cover.merge_streams(&inbox);
+    let merge = t2.elapsed().as_secs_f64();
+    enc_stats_phased(&PhasedStats { s1, invert, merge, send_bytes, recv_bytes, enc, raw })
+}
+
+/// The rank-worker main loop: join the fabric, receive HELLO
+/// (config + graph), then serve ROUND/SELECT control messages until the
+/// supervisor shuts the fabric down. Invoked by `main` when
+/// `GREEDIRIS_RANK`/`GREEDIRIS_FABRIC_ADDR` are set.
+pub fn run_rank_worker() -> Result<()> {
+    let rank: usize = std::env::var("GREEDIRIS_RANK")
+        .map_err(|_| anyhow!("GREEDIRIS_RANK not set"))?
+        .parse()
+        .map_err(|e| anyhow!("bad GREEDIRIS_RANK: {e}"))?;
+    let addr =
+        std::env::var("GREEDIRIS_FABRIC_ADDR").map_err(|_| anyhow!("GREEDIRIS_FABRIC_ADDR not set"))?;
+    if rank == 0 {
+        bail!("rank 0 is the supervisor, not a worker");
+    }
+    let (mut link, hello) = WorkerLink::connect(&addr, rank)?;
+    let (m, cfg, graph) = decode_hello(&hello)?;
+    if rank >= m {
+        bail!("rank {rank} out of range for m = {m}");
+    }
+    let n = graph.n();
+    // Streaming owner pool: rank 0 is a pure receiver.
+    let pool: Vec<usize> = (1..m).collect();
+    let mut cover = InvertedIndex::new();
+    let mut owner: Vec<u32> = Vec::new();
+    let mut cur_base = u64::MAX;
+    let mut theta = 0u64;
+
+    while let Some(body) = link.ctrl_recv() {
+        let mut r = wire::Reader::new(&body);
+        match r.byte().map_err(derr)? {
+            OP_ROUND => {
+                let id_base = r.varint().map_err(derr)?;
+                let from = r.varint().map_err(derr)?;
+                let to = r.varint().map_err(derr)?;
+                let overlap = r.byte().map_err(derr)? != 0;
+                let fused = r.byte().map_err(derr)? != 0;
+                if from == 0 {
+                    // A fresh phase (estimation restart / final selection /
+                    // OPIM half): drop the accumulated covers.
+                    cover = InvertedIndex::new();
+                }
+                if id_base != cur_base {
+                    owner = draw_owner_partition(n, &pool, cfg.seed, id_base);
+                    cur_base = id_base;
+                }
+                theta = to;
+                let stats = if overlap {
+                    let plan = ChunkPlan::new(m, from, to, &cfg);
+                    let sender = link.sender(K_S2);
+                    let grow = run_rank_chunk_stages(
+                        sender,
+                        link.data(),
+                        &mut cover,
+                        &graph,
+                        &cfg,
+                        id_base,
+                        &owner,
+                        m,
+                        rank,
+                        &plan,
+                    );
+                    let solve = if fused { run_s3(&link, &cover, &cfg, theta) } else { 0.0 };
+                    enc_stats_chunk(&grow, solve)
+                } else {
+                    phase_grow(
+                        &mut link, &mut cover, &graph, &cfg, &owner, m, rank, id_base, from, to,
+                    )
+                };
+                link.ctrl_send(&stats);
+            }
+            OP_SELECT => {
+                let solve = run_s3(&link, &cover, &cfg, theta);
+                link.ctrl_send(&enc_stats_select(solve));
+            }
+            other => bail!("unknown control opcode {other}"),
+        }
+    }
+    Ok(())
+}
+
+/// Fails fast (with the resolution hint) when the worker binary cannot be
+/// located — called by the CLI before a process run so the error surfaces
+/// as a clean message instead of a mid-round panic.
+pub fn check_worker_binary() -> Result<()> {
+    worker_binary().map(|_| ()).map_err(|e| anyhow!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::weights::WeightModel;
+
+    #[test]
+    fn config_blob_roundtrips() {
+        let mut cfg = Config::new(25, 6, DiffusionModel::LT, Algorithm::GreediRisTrunc)
+            .with_alpha(0.25)
+            .with_seed(0xABCD)
+            .with_wire_compression(false)
+            .with_floor_prune(false)
+            .with_overlap(false)
+            .with_chunk(17)
+            .with_s1_threads(3);
+        cfg.threads = 9;
+        cfg.eps = 0.21;
+        cfg.delta = 0.061;
+        cfg.node_threads = 17.0;
+        cfg.floor_feedback_every = 5;
+        cfg.local_solver = LocalSolver::DenseCpu;
+        let back = decode_config(&encode_config(&cfg)).unwrap();
+        assert_eq!(back.k, cfg.k);
+        assert_eq!(back.m, cfg.m);
+        assert_eq!(back.threads, cfg.threads);
+        assert_eq!(back.s1_threads, cfg.s1_threads);
+        assert_eq!(back.floor_feedback_every, cfg.floor_feedback_every);
+        assert_eq!(back.chunk, cfg.chunk);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.eps.to_bits(), cfg.eps.to_bits());
+        assert_eq!(back.delta.to_bits(), cfg.delta.to_bits());
+        assert_eq!(back.alpha.to_bits(), cfg.alpha.to_bits());
+        assert_eq!(back.node_threads.to_bits(), cfg.node_threads.to_bits());
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.algorithm, cfg.algorithm);
+        assert_eq!(back.local_solver, cfg.local_solver);
+        assert_eq!(back.wire_compression, cfg.wire_compression);
+        assert_eq!(back.floor_prune, cfg.floor_prune);
+        assert_eq!(back.overlap, cfg.overlap);
+    }
+
+    #[test]
+    fn hello_blob_roundtrips() {
+        let edges = generators::erdos_renyi(80, 300, 3);
+        let g = Graph::from_edges(80, &edges, WeightModel::UniformIc { max: 0.1 }, 3)
+            .with_name("hello");
+        let cfg = Config::new(5, 4, DiffusionModel::IC, Algorithm::GreediRis);
+        let hello = hello_payload(4, &cfg, &g);
+        let (m, c, gg) = decode_hello(&hello).unwrap();
+        assert_eq!(m, 4);
+        assert_eq!(c.k, 5);
+        assert_eq!(gg.n(), 80);
+        assert_eq!(gg.name, "hello");
+        assert!(decode_hello(&hello[..hello.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn round_and_stats_codecs_roundtrip() {
+        let msg = enc_round(1 << 40, 128, 512, true, false);
+        let mut r = wire::Reader::new(&msg);
+        assert_eq!(r.byte().unwrap(), OP_ROUND);
+        assert_eq!(r.varint().unwrap(), 1 << 40);
+        assert_eq!(r.varint().unwrap(), 128);
+        assert_eq!(r.varint().unwrap(), 512);
+        assert_eq!(r.byte().unwrap(), 1);
+        assert_eq!(r.byte().unwrap(), 0);
+
+        let g = ChunkGrow {
+            sampler: SamplerOut {
+                batches: Vec::new(),
+                chunk_compute: vec![0.25, 0.5],
+                chunk_send_bytes: vec![100, 0],
+                enc_off_node: 90,
+                raw_off_node: 400,
+            },
+            merge: MergeOut {
+                recv_step_bytes: vec![10, 20, 30],
+                flushes: vec![(2, 0.125, 60)],
+            },
+        };
+        let b = enc_stats_chunk(&g, 1.5);
+        let mut r = wire::Reader::new(&b);
+        assert_eq!(r.byte().unwrap(), OP_STATS_CHUNK);
+        let (back, solve) = dec_stats_chunk(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(solve.to_bits(), 1.5f64.to_bits());
+        assert_eq!(back.sampler.chunk_compute, g.sampler.chunk_compute);
+        assert_eq!(back.sampler.chunk_send_bytes, g.sampler.chunk_send_bytes);
+        assert_eq!(back.sampler.enc_off_node, 90);
+        assert_eq!(back.sampler.raw_off_node, 400);
+        assert_eq!(back.merge.recv_step_bytes, g.merge.recv_step_bytes);
+        assert_eq!(back.merge.flushes, g.merge.flushes);
+
+        let p = PhasedStats {
+            s1: 1.0,
+            invert: 2.0,
+            merge: 3.0,
+            send_bytes: 11,
+            recv_bytes: 22,
+            enc: 33,
+            raw: 44,
+        };
+        let b = enc_stats_phased(&p);
+        let mut r = wire::Reader::new(&b);
+        assert_eq!(r.byte().unwrap(), OP_STATS_PHASED);
+        let back = dec_stats_phased(&mut r).unwrap();
+        assert_eq!(back.send_bytes, 11);
+        assert_eq!(back.recv_bytes, 22);
+        assert_eq!(back.enc, 33);
+        assert_eq!(back.raw, 44);
+        assert_eq!(back.s1, 1.0);
+        assert_eq!(back.invert, 2.0);
+        assert_eq!(back.merge, 3.0);
+    }
+}

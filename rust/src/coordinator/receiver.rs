@@ -120,6 +120,28 @@ impl SlotArray {
     }
 }
 
+/// A sender-visible threshold-floor feed, independent of how the floor
+/// crosses the rank boundary: shared-memory atomics on the thread backend
+/// ([`FloorBoard`]), pushed socket frames on the process backend
+/// ([`crate::distributed::transport::process::SocketFloor`]). Both
+/// quantities are monotone, so any staleness is tolerated by the lossless
+/// pruning rule ([`crate::maxcover::streaming::prunable`]).
+pub trait FloorSource: Sync {
+    fn read_floor(&self) -> (f64, u64);
+}
+
+impl FloorSource for FloorBoard {
+    fn read_floor(&self) -> (f64, u64) {
+        self.read()
+    }
+}
+
+impl FloorSource for crate::distributed::transport::process::SocketFloor {
+    fn read_floor(&self) -> (f64, u64) {
+        self.read()
+    }
+}
+
 /// Live `(threshold floor, l_seen)` published by each bucketing thread and
 /// read by senders for the truncation-aware pruning. Reads take the
 /// minimum across banks, which is a *lower bound* on the true global floor

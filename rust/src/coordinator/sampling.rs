@@ -47,7 +47,8 @@
 //! critical-path spans (so breakdown totals still track the makespan).
 
 use crate::coordinator::config::Config;
-use crate::distributed::transport::threads::{Fabric, RankEndpoint};
+use crate::distributed::transport::threads::Fabric;
+use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{collectives, wire, NetModel, Transport, TransportExt, TransportKind};
 use crate::maxcover::{InvertedIndex, SetSystemView};
 use crate::rng::{domains, stream_for};
@@ -121,14 +122,7 @@ impl DistState {
     /// offline RandGreedi; ranks `1..m` for streaming so rank 0 stays a pure
     /// receiver, per §3.4 S2).
     pub fn new(n: usize, m: usize, owner_pool: &[usize], seed: u64, id_base: u64, do_shuffle: bool) -> Self {
-        assert!(!owner_pool.is_empty());
-        // One stream per phase, sequenced across vertices — the old code
-        // derived a fresh `stream_for` per vertex, paying O(n) stream
-        // setups (SplitMix chains + xoshiro seeding) on every phase.
-        let mut s = stream_for(seed, domains::PARTITION, id_base);
-        let owner = (0..n)
-            .map(|_| owner_pool[s.gen_range(owner_pool.len() as u64) as usize] as u32)
-            .collect();
+        let owner = draw_owner_partition(n, owner_pool, seed, id_base);
         Self {
             theta: 0,
             id_base,
@@ -168,6 +162,20 @@ impl DistState {
         }
         panic!("sample {sid} not held by rank {p}");
     }
+}
+
+/// Draws the per-phase owner partition — a pure function of
+/// `(n, pool, seed, id_base)`, shared by [`DistState::new`] and the
+/// process-transport rank workers so every side of a process boundary
+/// materializes the identical partition. One stream per phase, sequenced
+/// across vertices (the old code derived a fresh `stream_for` per vertex,
+/// paying O(n) stream setups on every phase).
+pub fn draw_owner_partition(n: usize, owner_pool: &[usize], seed: u64, id_base: u64) -> Vec<u32> {
+    assert!(!owner_pool.is_empty());
+    let mut s = stream_for(seed, domains::PARTITION, id_base);
+    (0..n)
+        .map(|_| owner_pool[s.gen_range(owner_pool.len() as u64) as usize] as u32)
+        .collect()
 }
 
 /// Inverts one rank's freshly generated batch into per-destination wire
@@ -228,7 +236,7 @@ pub fn invert_batch_to_streams(batch: &SampleBatch, owner: &[u32], m: usize) -> 
 }
 
 /// Per-(src,dst) id-range of the new samples each rank generates.
-fn rank_ranges(m: usize, from: u64, to: u64) -> Vec<(SampleId, usize)> {
+pub(crate) fn rank_ranges(m: usize, from: u64, to: u64) -> Vec<(SampleId, usize)> {
     let per_rank = (to - from).div_ceil(m as u64);
     (0..m)
         .map(|p| {
@@ -256,7 +264,7 @@ fn stream_entries(s: &[u32]) -> u64 {
 /// from the off-node counters, like the historical accounting). Raw counts
 /// 4 bytes per entry, headers excluded, so splitting a round into chunks
 /// never changes it.
-fn wire_volumes(
+pub(crate) fn wire_volumes(
     src: usize,
     streams: &[Vec<u32>],
     payloads: &[Vec<u8>],
@@ -564,12 +572,14 @@ impl<'a> ChunkMerger<'a> {
     }
 }
 
-/// The thread backend's receive stage: consume every expected chunk from
-/// the fabric **in arrival order** ([`RankEndpoint::recv_any`]) and merge
+/// The rank-parallel receive stage: consume every expected chunk from the
+/// fabric **in arrival order** ([`PeerReceiver::recv_any`]) and merge
 /// incrementally. The chunk's step index is its per-source arrival ordinal
-/// (per-source FIFO), so no extra wire framing is needed.
-pub(crate) fn run_chunk_merge(
-    ep: &mut RankEndpoint,
+/// (per-source FIFO), so no extra wire framing is needed. Fabric-agnostic:
+/// the thread engine feeds it mpsc channels, the process engine framed
+/// sockets.
+pub(crate) fn run_chunk_merge<R: PeerReceiver + ?Sized>(
+    ep: &mut R,
     plan: &ChunkPlan,
     p: usize,
     cover: &mut InvertedIndex,
@@ -592,15 +602,18 @@ pub(crate) fn run_chunk_merge(
     MergeOut { recv_step_bytes, flushes: merger.finish() }
 }
 
-/// One rank's complete two-stage chunk pipeline on the thread backend:
-/// spawns the sampler stage (sampling, inverting, encoding, and shipping
-/// chunks through the split sender half) while the calling thread merges
-/// its inbox in true arrival order. Shared by `grow_threaded_overlapped`
-/// and the fused overlapped round in
-/// [`crate::coordinator::greediris::overlapped_round_threaded`], so the
-/// two engines cannot drift.
-pub(crate) fn run_rank_chunk_stages(
-    ep: &mut RankEndpoint,
+/// One rank's complete two-stage chunk pipeline: spawns the sampler stage
+/// (sampling, inverting, encoding, and shipping chunks through the split
+/// `sender` half) while the calling thread merges its inbox in true
+/// arrival order. Fabric-agnostic and shared by `grow_threaded_overlapped`,
+/// the fused overlapped round in
+/// [`crate::coordinator::greediris::overlapped_round_threaded`], and the
+/// process-transport rank workers
+/// ([`crate::coordinator::process`]), so the engines cannot drift.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_rank_chunk_stages<S: PeerSender, R: PeerReceiver + ?Sized>(
+    sender: S,
+    rx: &mut R,
     cover: &mut InvertedIndex,
     graph: &Graph,
     cfg: &Config,
@@ -610,14 +623,13 @@ pub(crate) fn run_rank_chunk_stages(
     p: usize,
     plan: &ChunkPlan,
 ) -> ChunkGrow {
-    let sender = ep.sender();
     let (sampler, merge) = std::thread::scope(|stage| {
         let s1 = stage.spawn(move || {
             run_chunk_sampler(graph, cfg, id_base, owner, m, p, &plan.lists[p], |dst, pl| {
-                sender.send(dst, pl)
+                sender.send_to(dst, pl)
             })
         });
-        let merge = run_chunk_merge(ep, plan, p, &mut *cover);
+        let merge = run_chunk_merge(rx, plan, p, &mut *cover);
         (s1.join().expect("sampler stage"), merge)
     });
     ChunkGrow { sampler, merge }
@@ -886,8 +898,9 @@ fn grow_threaded_overlapped(
             .enumerate()
             .map(|(p, (mut ep, cover))| {
                 scope.spawn(move || {
+                    let sender = ep.sender();
                     run_rank_chunk_stages(
-                        &mut ep, cover, graph, cfg, id_base, owner, m, p, plan_ref,
+                        sender, &mut ep, cover, graph, cfg, id_base, owner, m, p, plan_ref,
                     )
                 })
             })
@@ -916,6 +929,15 @@ pub fn grow_to(
         return stats;
     }
     let t_before = t.makespan();
+
+    // ---- Multi-process engine (PR 5): rank workers over the socket
+    // fabric, both overlap modes. Streaming algorithms only — the
+    // reduction baselines read covers out of the parent's DistState, which
+    // the process engine deliberately leaves on the workers; they fall
+    // through to the sequential engine below (seeds are engine-invariant).
+    if crate::coordinator::process::process_growable(t, cfg, state) {
+        return crate::coordinator::process::grow_process(t, graph, cfg, state, target_theta);
+    }
 
     // ---- Chunked overlapped pipeline (default; see module docs). ----
     if cfg.overlap && state.do_shuffle {

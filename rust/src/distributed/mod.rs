@@ -15,6 +15,11 @@
 //! - [`transport::ThreadTransport`] runs every rank as a real OS thread
 //!   over channels, feeding the live threaded receiver straight from the
 //!   wire, with the same per-rank clock accounting for comparability.
+//! - [`transport::ProcessTransport`] runs every rank as a real OS
+//!   *process* over checksummed socket frames routed through a
+//!   self-launching supervisor hub (no external launcher) — the wire
+//!   really leaves the address space, with the same per-rank clock
+//!   accounting aggregated back at rank 0 from worker-measured stats.
 //!
 //! Why this preserves the paper's phenomena: the quantities the evaluation
 //! hinges on (per-rank work θ/m, shuffle volume, the m·k candidate stream
@@ -33,5 +38,6 @@ pub mod wire;
 pub use cluster::{Cluster, RankClock};
 pub use netmodel::NetModel;
 pub use transport::{
-    make_transport, SimTransport, ThreadTransport, Transport, TransportExt, TransportKind,
+    make_transport, ProcessTransport, SimTransport, ThreadTransport, Transport, TransportExt,
+    TransportKind,
 };

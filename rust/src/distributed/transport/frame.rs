@@ -1,0 +1,466 @@
+//! Length-prefixed, checksummed frame layer — the byte-stream framing
+//! shared by every fabric that is not message-oriented (the socket backend
+//! of [`super::process`]; the mpsc channel fabric of [`super::threads`]
+//! carries whole `Vec<u8>` messages and needs no framing, but the tests
+//! below drive the same codec over in-memory pipes so the two backends
+//! share one wire discipline).
+//!
+//! ## Format
+//!
+//! ```text
+//! [payload_len: u32 LE][fnv1a32(payload): u32 LE][payload bytes]
+//! ```
+//!
+//! The checksum is what turns "length-prefixed" into "corruption is an
+//! error": a mutated payload or checksum byte yields
+//! [`DecodeError::Corrupt`] (FNV-1a detects every single-byte change of a
+//! fixed-length payload — xor-then-multiply-by-odd-prime is injective per
+//! step), a length that exceeds [`FrameReader::max_frame`] yields
+//! [`DecodeError::Overflow`] before any allocation is sized from it, and a
+//! stream that ends mid-frame is reported by [`FrameReader::finish`] as
+//! [`DecodeError::Truncated`] — never a panic, never a short silent read.
+//!
+//! ## Resumption and backpressure
+//!
+//! Both halves are resumable state machines, usable over nonblocking
+//! sockets:
+//!
+//! - [`FrameReader::push`] accepts byte chunks cut at **arbitrary
+//!   boundaries** (a TCP read returns whatever prefix is buffered) and
+//!   surfaces complete frames through [`FrameReader::next_frame`];
+//!   [`FrameReader::read_frame`] is the blocking convenience that drives
+//!   `push` from any [`io::Read`].
+//! - [`FrameWriter::push`] queues frames and [`FrameWriter::flush_into`]
+//!   resumes after short writes and `WouldBlock`, reporting the queued
+//!   byte depth through [`FrameWriter::pending`] so producers can apply
+//!   backpressure (stop queueing) instead of growing without bound.
+//!   [`write_frame`] is the blocking convenience (vectored parts, one
+//!   streaming checksum pass, no payload concatenation).
+
+use crate::distributed::wire::DecodeError;
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+
+/// Header bytes preceding every payload.
+pub const HEADER_LEN: usize = 8;
+
+/// Default per-frame payload cap (wire payloads are chunk/stream sized;
+/// anything larger is a corrupt length, not a message).
+pub const DEFAULT_MAX_FRAME: usize = 1 << 30;
+
+const FNV_OFFSET: u32 = 0x811c_9dc5;
+const FNV_PRIME: u32 = 0x0100_0193;
+
+/// Streaming FNV-1a over byte chunks.
+#[inline]
+fn fnv1a_fold(mut h: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        h = (h ^ b as u32).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a of a whole payload.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    fnv1a_fold(FNV_OFFSET, bytes)
+}
+
+/// Encodes the 8-byte header for a payload of `len` bytes with checksum
+/// `crc`.
+#[inline]
+fn header(len: usize, crc: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    h[4..].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+/// Frames `parts` (treated as one concatenated payload) and writes them to
+/// `w` with `write_all` — the blocking send path. One streaming checksum
+/// pass; the parts are never copied into a contiguous buffer.
+pub fn write_frame(w: &mut impl Write, parts: &[&[u8]]) -> io::Result<()> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
+    let mut crc = FNV_OFFSET;
+    for p in parts {
+        crc = fnv1a_fold(crc, p);
+    }
+    w.write_all(&header(len, crc))?;
+    for p in parts {
+        w.write_all(p)?;
+    }
+    Ok(())
+}
+
+/// Frames one payload into an owned buffer (header + payload).
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&header(payload.len(), fnv1a(payload)));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Resumable frame decoder. Feed it byte chunks cut anywhere; pull
+/// complete, checksum-verified payloads. After an error the reader is
+/// poisoned (the connection it was draining is dead anyway).
+pub struct FrameReader {
+    buf: Vec<u8>,
+    start: usize,
+    ready: VecDeque<Vec<u8>>,
+    max_frame: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::with_max(DEFAULT_MAX_FRAME)
+    }
+
+    /// A reader rejecting payloads larger than `max_frame` bytes.
+    pub fn with_max(max_frame: usize) -> Self {
+        Self { buf: Vec::new(), start: 0, ready: VecDeque::new(), max_frame }
+    }
+
+    /// Feeds `bytes` (any split of the stream) and parses as many complete
+    /// frames as they finish. Completed payloads queue for
+    /// [`FrameReader::next_frame`].
+    pub fn push(&mut self, bytes: &[u8]) -> Result<(), DecodeError> {
+        self.buf.extend_from_slice(bytes);
+        loop {
+            let avail = self.buf.len() - self.start;
+            if avail < HEADER_LEN {
+                break;
+            }
+            let h = &self.buf[self.start..self.start + HEADER_LEN];
+            let len = u32::from_le_bytes(h[..4].try_into().expect("4 bytes")) as usize;
+            let crc = u32::from_le_bytes(h[4..].try_into().expect("4 bytes"));
+            if len > self.max_frame {
+                return Err(DecodeError::Overflow);
+            }
+            if avail < HEADER_LEN + len {
+                break;
+            }
+            let lo = self.start + HEADER_LEN;
+            let payload = &self.buf[lo..lo + len];
+            if fnv1a(payload) != crc {
+                return Err(DecodeError::Corrupt);
+            }
+            self.ready.push_back(payload.to_vec());
+            self.start = lo + len;
+        }
+        // Reclaim consumed prefix once it dominates the buffer.
+        if self.start > 4096 && self.start * 2 >= self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(())
+    }
+
+    /// Next complete payload, if any.
+    pub fn next_frame(&mut self) -> Option<Vec<u8>> {
+        self.ready.pop_front()
+    }
+
+    /// True when no partial frame is buffered (a clean stream boundary).
+    pub fn is_idle(&self) -> bool {
+        self.start == self.buf.len()
+    }
+
+    /// End-of-stream check: a stream that ends mid-frame was truncated.
+    pub fn finish(&self) -> Result<(), DecodeError> {
+        if self.is_idle() {
+            Ok(())
+        } else {
+            Err(DecodeError::Truncated)
+        }
+    }
+
+    /// Blocking convenience: reads from `r` until one complete frame is
+    /// available (returning queued frames first). `Ok(None)` on clean EOF
+    /// at a frame boundary; mid-frame EOF and codec errors surface as
+    /// `InvalidData`/`UnexpectedEof` IO errors. `WouldBlock` from a
+    /// nonblocking source is passed through for the caller to retry.
+    pub fn read_frame(&mut self, r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some(f) = self.next_frame() {
+                return Ok(Some(f));
+            }
+            match r.read(&mut chunk) {
+                Ok(0) => {
+                    return match self.finish() {
+                        Ok(()) => Ok(None),
+                        Err(e) => Err(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            format!("stream ended mid-frame: {e}"),
+                        )),
+                    };
+                }
+                Ok(n) => self
+                    .push(&chunk[..n])
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Resumable frame encoder: queue frames with [`FrameWriter::push`], drain
+/// with [`FrameWriter::flush_into`] (short writes and `WouldBlock` leave
+/// the remainder queued). [`FrameWriter::pending`] is the backpressure
+/// signal.
+#[derive(Default)]
+pub struct FrameWriter {
+    queue: VecDeque<u8>,
+}
+
+impl FrameWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queues one framed payload.
+    pub fn push(&mut self, payload: &[u8]) {
+        self.queue.extend(header(payload.len(), fnv1a(payload)));
+        self.queue.extend(payload.iter().copied());
+    }
+
+    /// Bytes queued but not yet written.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Writes as much of the queue as `w` accepts. Returns `Ok(true)` when
+    /// fully flushed, `Ok(false)` when the sink pushed back (`WouldBlock`
+    /// or a zero-length write) — call again when writable.
+    pub fn flush_into(&mut self, w: &mut impl Write) -> io::Result<bool> {
+        while !self.queue.is_empty() {
+            let (head, _) = self.queue.as_slices();
+            debug_assert!(!head.is_empty());
+            match w.write(head) {
+                Ok(0) => return Ok(false),
+                Ok(n) => {
+                    self.queue.drain(..n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn sample_frames(seed: u64, n: usize) -> Vec<Vec<u8>> {
+        let mut rng = Xoshiro256pp::seeded(seed);
+        (0..n)
+            .map(|_| {
+                let len = rng.gen_range(200) as usize;
+                (0..len).map(|_| rng.gen_range(256) as u8).collect()
+            })
+            .collect()
+    }
+
+    fn stream_of(frames: &[Vec<u8>]) -> Vec<u8> {
+        frames.iter().flat_map(|f| encode_frame(f)).collect()
+    }
+
+    #[test]
+    fn roundtrip_at_arbitrary_split_boundaries() {
+        let frames = sample_frames(0xF8A3E, 12);
+        let stream = stream_of(&frames);
+        let mut rng = Xoshiro256pp::seeded(7);
+        for _ in 0..50 {
+            let mut r = FrameReader::new();
+            let mut pos = 0usize;
+            let mut got = Vec::new();
+            while pos < stream.len() {
+                let step = 1 + rng.gen_range(13) as usize;
+                let end = (pos + step).min(stream.len());
+                r.push(&stream[pos..end]).unwrap();
+                while let Some(f) = r.next_frame() {
+                    got.push(f);
+                }
+                pos = end;
+            }
+            assert!(r.finish().is_ok());
+            assert_eq!(got, frames);
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let frames = sample_frames(3, 3);
+        let stream = stream_of(&frames);
+        // Byte offsets that are clean frame boundaries (0 included).
+        let boundaries: Vec<usize> =
+            (0..=frames.len()).map(|k| stream_of(&frames[..k]).len()).collect();
+        for cut in 0..=stream.len() {
+            let mut r = FrameReader::new();
+            r.push(&stream[..cut]).unwrap();
+            // Frames fully contained in the prefix parse; nothing more.
+            let whole = boundaries.iter().skip(1).filter(|&&b| b <= cut).count();
+            let mut got = 0usize;
+            while r.next_frame().is_some() {
+                got += 1;
+            }
+            assert_eq!(got, whole, "cut {cut}: complete frames only");
+            // finish() errors exactly when the cut is mid-frame.
+            assert_eq!(r.finish().is_ok(), boundaries.contains(&cut), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn payload_and_checksum_mutations_error_never_panic() {
+        let frames = sample_frames(11, 2);
+        let stream = stream_of(&frames);
+        // Offsets occupied by some frame's 4-byte length field.
+        let mut len_field = vec![false; stream.len()];
+        let mut off = 0usize;
+        for f in &frames {
+            for b in len_field.iter_mut().skip(off).take(4) {
+                *b = true;
+            }
+            off += HEADER_LEN + f.len();
+        }
+        for i in 0..stream.len() {
+            for bit in [0u8, 3, 7] {
+                let mut bad = stream.clone();
+                bad[i] ^= 1 << bit;
+                let mut r = FrameReader::new();
+                let res = r.push(&bad);
+                if !len_field[i] {
+                    // Flips outside length fields corrupt a checksum or a
+                    // payload: FNV-1a detects them deterministically.
+                    assert!(
+                        res.is_err() || r.finish().is_err(),
+                        "byte {i} bit {bit} silently accepted"
+                    );
+                } else {
+                    // A mutated length re-segments the stream; all that is
+                    // guaranteed is no panic and no silent identical read.
+                    if res.is_ok() && r.finish().is_ok() {
+                        let mut got = Vec::new();
+                        while let Some(f) = r.next_frame() {
+                            got.push(f);
+                        }
+                        assert_ne!(got, frames, "byte {i} bit {bit}: silent short read");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_allocation() {
+        let mut bad = encode_frame(&[1, 2, 3]);
+        bad[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = FrameReader::new();
+        assert_eq!(r.push(&bad), Err(DecodeError::Overflow));
+        let mut small = FrameReader::with_max(2);
+        assert_eq!(small.push(&encode_frame(&[1, 2, 3])), Err(DecodeError::Overflow));
+    }
+
+    #[test]
+    fn empty_payload_frames_roundtrip() {
+        let stream = [encode_frame(&[]), encode_frame(b"x".as_ref())].concat();
+        let mut r = FrameReader::new();
+        r.push(&stream).unwrap();
+        assert_eq!(r.next_frame(), Some(vec![]));
+        assert_eq!(r.next_frame(), Some(b"x".to_vec()));
+        assert!(r.finish().is_ok());
+    }
+
+    /// A sink that accepts at most `cap` bytes per call and interleaves
+    /// `WouldBlock` — the nonblocking-socket shape.
+    struct Choppy {
+        out: Vec<u8>,
+        cap: usize,
+        tick: usize,
+    }
+
+    impl Write for Choppy {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.tick += 1;
+            if self.tick % 3 == 0 {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "try later"));
+            }
+            let n = buf.len().min(self.cap);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn writer_resumes_after_short_writes_and_wouldblock() {
+        let frames = sample_frames(21, 5);
+        let mut w = FrameWriter::new();
+        for f in &frames {
+            w.push(f);
+        }
+        let total = w.pending();
+        assert!(total > 0);
+        let mut sink = Choppy { out: Vec::new(), cap: 5, tick: 0 };
+        let mut spins = 0usize;
+        while !w.flush_into(&mut sink).unwrap() {
+            spins += 1;
+            assert!(spins < 10_000, "writer failed to make progress");
+        }
+        assert_eq!(w.pending(), 0);
+        assert_eq!(sink.out.len(), total);
+        let mut r = FrameReader::new();
+        r.push(&sink.out).unwrap();
+        let mut got = Vec::new();
+        while let Some(f) = r.next_frame() {
+            got.push(f);
+        }
+        assert_eq!(got, frames);
+        assert!(r.finish().is_ok());
+    }
+
+    #[test]
+    fn write_frame_matches_encode_frame() {
+        let payload = b"hello frames";
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[&payload[..5], &payload[5..]]).unwrap();
+        assert_eq!(buf, encode_frame(payload));
+    }
+
+    #[test]
+    fn read_frame_blocking_convenience() {
+        let frames = sample_frames(31, 4);
+        let stream = stream_of(&frames);
+        let mut src = io::Cursor::new(stream);
+        let mut r = FrameReader::new();
+        for f in &frames {
+            assert_eq!(r.read_frame(&mut src).unwrap().as_deref(), Some(f.as_slice()));
+        }
+        assert_eq!(r.read_frame(&mut src).unwrap(), None);
+        // Mid-frame EOF is an UnexpectedEof error, not a silent None.
+        let cut = stream_of(&frames);
+        let mut src = io::Cursor::new(cut[..cut.len() - 3].to_vec());
+        let mut r = FrameReader::new();
+        let mut last = Ok(Some(vec![]));
+        for _ in 0..=frames.len() {
+            last = r.read_frame(&mut src);
+            if last.is_err() {
+                break;
+            }
+        }
+        assert_eq!(last.unwrap_err().kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

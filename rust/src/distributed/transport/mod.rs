@@ -15,7 +15,7 @@
 //!    *modeled* wire time through the trait, so the reported makespan is
 //!    comparable across backends.
 //!
-//! Two backends exist:
+//! Three backends exist:
 //!
 //! - [`SimTransport`] — the virtual-cluster cost model (the repository's
 //!   historical execution mode). Ranks execute sequentially on the calling
@@ -27,6 +27,19 @@
 //!   ([`crate::coordinator::receiver::run_threaded_receiver`]) fed straight
 //!   from the wire. Produces seed sets identical to [`SimTransport`] for
 //!   the same config/seed (pinned by `tests/transport.rs`).
+//! - [`ProcessTransport`] — every rank is a real OS **process**; the byte
+//!   wire is length-prefixed, checksummed frames ([`frame`]) over TCP
+//!   sockets routed through a self-launching supervisor hub ([`process`]).
+//!   The supervisor is rank 0; it forks the rank processes itself (workers
+//!   join via `GREEDIRIS_RANK`/`GREEDIRIS_FABRIC_ADDR`), so no external
+//!   launcher is needed. Seed sets and raw-byte counters are bit-identical
+//!   to both in-process backends (the three-way gate in
+//!   `tests/transport.rs` + `scripts/ci.sh`).
+//!
+//! The rank-parallel phases of the coordinator are written against the
+//! fabric-agnostic [`PeerSender`]/[`PeerReceiver`] traits, so the thread
+//! and process engines execute the *same* rank bodies over different
+//! wires.
 //!
 //! ## When costs are charged
 //!
@@ -49,9 +62,12 @@
 //! algorithm state; only the clocks differ in how honestly they can model
 //! overlap.
 
+pub mod frame;
+pub mod process;
 pub mod sim;
 pub mod threads;
 
+pub use process::ProcessTransport;
 pub use sim::SimTransport;
 pub use threads::{Fabric, RankEndpoint, ThreadTransport};
 
@@ -66,6 +82,8 @@ pub enum TransportKind {
     Sim,
     /// Rank-per-OS-thread engine over channels ([`ThreadTransport`]).
     Threads,
+    /// Rank-per-OS-process engine over sockets ([`ProcessTransport`]).
+    Process,
 }
 
 impl TransportKind {
@@ -73,6 +91,21 @@ impl TransportKind {
         match self {
             TransportKind::Sim => "sim",
             TransportKind::Threads => "threads",
+            TransportKind::Process => "process",
+        }
+    }
+
+    /// Reads `GREEDIRIS_TRANSPORT`. `Ok(None)` when unset; an unknown
+    /// value is a hard configuration error (never a silent fallback to the
+    /// default backend — the `DecodeError`-style contract of the wire
+    /// layer applied to config).
+    pub fn from_env() -> Result<Option<TransportKind>, String> {
+        match std::env::var("GREEDIRIS_TRANSPORT") {
+            Ok(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| format!("invalid GREEDIRIS_TRANSPORT: {e}")),
+            Err(_) => Ok(None),
         }
     }
 }
@@ -83,9 +116,33 @@ impl std::str::FromStr for TransportKind {
         match s.to_ascii_lowercase().as_str() {
             "sim" => Ok(TransportKind::Sim),
             "threads" | "thread" => Ok(TransportKind::Threads),
-            other => Err(format!("unknown transport '{other}' (sim | threads)")),
+            "process" | "processes" => Ok(TransportKind::Process),
+            other => Err(format!("unknown transport '{other}' (sim | threads | process)")),
         }
     }
+}
+
+/// The send half a rank's pipeline stages use to reach peers, independent
+/// of the fabric behind it (threads: mpsc channels; process: framed
+/// sockets through the supervisor hub). `send_to` never blocks the
+/// algorithm on a slow peer: channel fabrics are unbounded and the socket
+/// fabric's hub always drains (see [`process`]).
+pub trait PeerSender: Send {
+    fn send_to(&self, dst: usize, payload: Vec<u8>);
+}
+
+/// The receive half: per-source FIFO delivery with arrival-order and
+/// by-source access, independent of the fabric behind it.
+pub trait PeerReceiver {
+    /// Next payload from any source, in arrival order — except that
+    /// strays buffered by an earlier [`PeerReceiver::recv_from`] are
+    /// drained first, lowest source rank first (per-source FIFO is always
+    /// preserved, which is the only ordering result-bearing consumers
+    /// rely on). Blocks; panics if the fabric hung up mid-receive.
+    fn recv_any(&mut self) -> (usize, Vec<u8>);
+    /// Next payload from `src`, buffering strays. Blocks; panics if the
+    /// fabric hung up mid-receive.
+    fn recv_from(&mut self, src: usize) -> Vec<u8>;
 }
 
 /// The rank fabric: point-to-point byte streams plus the per-rank clock
@@ -116,6 +173,13 @@ pub trait Transport: Send {
     fn send(&mut self, src: usize, dst: usize, payload: Vec<u8>);
     /// Dequeues the next payload of the `(src, dst)` stream, if any.
     fn recv(&mut self, dst: usize, src: usize) -> Option<Vec<u8>>;
+
+    /// Downcast hook for the socket backend (the process round drivers
+    /// need the worker pool behind the trait object). `None` for every
+    /// other backend.
+    fn as_process(&mut self) -> Option<&mut ProcessTransport> {
+        None
+    }
 }
 
 /// Measured-compute conveniences over any [`Transport`] (generic methods
@@ -145,6 +209,7 @@ pub fn make_transport(kind: TransportKind, m: usize, net: NetModel) -> Box<dyn T
     match kind {
         TransportKind::Sim => Box::new(SimTransport::new(m, net)),
         TransportKind::Threads => Box::new(ThreadTransport::new(m, net)),
+        TransportKind::Process => Box::new(ProcessTransport::new(m, net)),
     }
 }
 
@@ -154,10 +219,15 @@ mod tests {
 
     #[test]
     fn kind_parse_roundtrip() {
-        for k in [TransportKind::Sim, TransportKind::Threads] {
+        for k in [TransportKind::Sim, TransportKind::Threads, TransportKind::Process] {
             assert_eq!(k.as_str().parse::<TransportKind>().unwrap(), k);
         }
-        assert!("mpi".parse::<TransportKind>().is_err());
+        // Unknown values are a typed error (never a silent default), and
+        // the message names every accepted backend.
+        let err = "mpi".parse::<TransportKind>().unwrap_err();
+        for name in ["sim", "threads", "process"] {
+            assert!(err.contains(name), "{err}");
+        }
     }
 
     #[test]
@@ -167,6 +237,12 @@ mod tests {
         assert_eq!(t.m(), 4);
         let t = make_transport(TransportKind::Threads, 2, NetModel::free());
         assert_eq!(t.kind(), TransportKind::Threads);
+        // Process transport constructs lazily: no workers are spawned
+        // until a round actually crosses the process boundary.
+        let mut t = make_transport(TransportKind::Process, 3, NetModel::free());
+        assert_eq!(t.kind(), TransportKind::Process);
+        assert_eq!(t.m(), 3);
+        assert!(t.as_process().is_some());
     }
 
     #[test]

@@ -1,0 +1,964 @@
+//! The multi-process backend: every rank is a real OS process and the byte
+//! wire is checksummed length-prefixed frames ([`super::frame`]) over TCP
+//! loopback sockets.
+//!
+//! ## Topology: a self-launching supervisor hub
+//!
+//! Rank 0 *is* the supervisor: the process that owns the
+//! [`ProcessTransport`] binds a loopback listener, forks one worker
+//! process per sender rank (re-executing its own binary — see
+//! [`worker_binary`]), and runs the hub. Workers join by connecting to
+//! `GREEDIRIS_FABRIC_ADDR` and identifying themselves with the rank from
+//! `GREEDIRIS_RANK`, so **no external launcher (mpirun/srun) is needed**;
+//! `greediris run --transport process` is self-contained, and a rank can
+//! equally be started by any outside orchestrator that sets the two env
+//! vars.
+//!
+//! Every worker holds exactly one socket — to the hub. Rank-to-rank
+//! payloads carry a destination tag; the hub routes them. Per `(src, dst)`
+//! FIFO order is preserved end to end (each hop is a FIFO byte stream or a
+//! FIFO queue), which is the only ordering the engines rely on — the S2
+//! merge is order-invariant and the S3 stream is re-sequenced into the
+//! canonical (emission ordinal, sender rank) order by the merger, exactly
+//! as on the thread fabric.
+//!
+//! ## Deadlock freedom
+//!
+//! The hub never blocks a read on a write: each worker connection gets a
+//! dedicated reader thread (which only parses and enqueues) and a
+//! dedicated writer thread draining an unbounded outbound queue. A slow
+//! rank therefore back-pressures its own TCP window without stalling
+//! traffic between other ranks. Worker-side, one reader thread demuxes the
+//! socket into data / control / floor lanes so algorithm code never races
+//! the wire.
+//!
+//! ## What lives where
+//!
+//! This module owns the fabric: sockets, frames, routing, process
+//! lifecycle, and the [`PeerSender`]/[`PeerReceiver`] faces. The rank
+//! *algorithm* bodies and the round protocol (HELLO/ROUND/SELECT control
+//! payloads) live in [`crate::coordinator::process`], which drives this
+//! fabric exactly as the thread engine drives
+//! [`super::threads::Fabric`].
+
+use super::frame::{self, FrameReader};
+use super::sim::SimTransport;
+use super::{PeerReceiver, PeerSender, Transport, TransportKind};
+use crate::distributed::cluster::RankClock;
+use crate::distributed::netmodel::NetModel;
+use crate::distributed::wire::{self, DecodeError};
+use crate::graph::{Csr, Graph};
+use std::collections::VecDeque;
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Message kinds carried inside frames (first routed-header byte after the
+/// rank tag).
+pub const K_S2: u8 = 1;
+/// S3 seed-stream messages (sender → rank 0).
+pub const K_S3: u8 = 2;
+/// Control payloads (HELLO/ROUND/SELECT/STATS — owned by
+/// [`crate::coordinator::process`]).
+pub const K_CTRL: u8 = 3;
+/// Threshold-floor feedback pushed by the supervisor to live senders.
+pub const K_FLOOR: u8 = 4;
+/// Worker identification, first frame on every connection.
+pub const K_JOIN: u8 = 5;
+/// Fabric teardown (sent by the supervisor's `Drop`).
+pub const K_SHUTDOWN: u8 = 6;
+
+/// Seconds the supervisor waits for all workers to connect before giving
+/// up (covers slow cold starts of the re-executed binary).
+const JOIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Builds a routed message: `[tag varint][kind u8][body]`. `tag` is the
+/// destination on the worker→hub direction and the source on the
+/// hub→worker direction.
+pub fn routed_msg(tag: usize, kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(6 + body.len());
+    wire::put_varint(&mut p, tag as u64);
+    p.push(kind);
+    p.extend_from_slice(body);
+    p
+}
+
+/// Splits a routed message into `(tag, kind, body)`.
+pub fn parse_routed(msg: &[u8]) -> Result<(usize, u8, Vec<u8>), DecodeError> {
+    let mut r = wire::Reader::new(msg);
+    let tag = r.varint()? as usize;
+    let kind = r.byte()?;
+    let body = msg[msg.len() - r.remaining()..].to_vec();
+    Ok((tag, kind, body))
+}
+
+// ---------------------------------------------------------------------------
+// Blob codec primitives (shared by the coordinator's control payloads).
+// ---------------------------------------------------------------------------
+
+/// Appends `x` as 8 raw little-endian bytes (bit-exact across processes).
+pub fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+/// Reads an [`put_f64`]-encoded value.
+pub fn get_f64(r: &mut wire::Reader<'_>) -> Result<f64, DecodeError> {
+    let lo = r.u32_le()? as u64;
+    let hi = r.u32_le()? as u64;
+    Ok(f64::from_bits(lo | (hi << 32)))
+}
+
+fn put_csr(buf: &mut Vec<u8>, c: &Csr) {
+    wire::put_varint(buf, c.offsets.len() as u64);
+    let mut prev = 0u64;
+    for &o in &c.offsets {
+        wire::put_varint(buf, o - prev);
+        prev = o;
+    }
+    wire::put_varint(buf, c.targets.len() as u64);
+    for &t in &c.targets {
+        wire::put_varint(buf, t as u64);
+    }
+    for &w in &c.weights {
+        buf.extend_from_slice(&w.to_bits().to_le_bytes());
+    }
+    for &t in &c.thresholds {
+        wire::put_varint(buf, t);
+    }
+}
+
+fn get_csr(r: &mut wire::Reader<'_>) -> Result<Csr, DecodeError> {
+    let no = r.varint()? as usize;
+    let mut offsets = Vec::with_capacity(no.min(1 << 24));
+    let mut prev = 0u64;
+    for _ in 0..no {
+        prev = prev.checked_add(r.varint()?).ok_or(DecodeError::Overflow)?;
+        offsets.push(prev);
+    }
+    let ne = r.varint()? as usize;
+    if ne > (1 << 40) {
+        return Err(DecodeError::Overflow);
+    }
+    let mut targets = Vec::with_capacity(ne.min(1 << 24));
+    for _ in 0..ne {
+        targets.push(r.varint_u32()?);
+    }
+    let mut weights = Vec::with_capacity(ne.min(1 << 24));
+    for _ in 0..ne {
+        weights.push(f32::from_bits(r.u32_le()?));
+    }
+    let mut thresholds = Vec::with_capacity(ne.min(1 << 24));
+    for _ in 0..ne {
+        thresholds.push(r.varint()?);
+    }
+    Ok(Csr { offsets, targets, weights, thresholds })
+}
+
+/// Serializes a graph bit-exactly (weights and the integer Bernoulli
+/// thresholds ship verbatim, so worker-side sampling is byte-identical to
+/// the supervisor's).
+pub fn encode_graph(g: &Graph) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let name = g.name.as_bytes();
+    wire::put_varint(&mut buf, name.len() as u64);
+    buf.extend_from_slice(name);
+    put_csr(&mut buf, &g.fwd);
+    put_csr(&mut buf, &g.rev);
+    buf
+}
+
+/// Inverse of [`encode_graph`].
+pub fn decode_graph(bytes: &[u8]) -> Result<Graph, DecodeError> {
+    let mut r = wire::Reader::new(bytes);
+    let nlen = r.varint()? as usize;
+    if nlen > r.remaining() {
+        return Err(DecodeError::Truncated);
+    }
+    let mut name_bytes = Vec::with_capacity(nlen);
+    for _ in 0..nlen {
+        name_bytes.push(r.byte()?);
+    }
+    let name = String::from_utf8(name_bytes).map_err(|_| DecodeError::Corrupt)?;
+    let fwd = get_csr(&mut r)?;
+    let rev = get_csr(&mut r)?;
+    if !r.is_empty() {
+        return Err(DecodeError::Truncated);
+    }
+    Ok(Graph { fwd, rev, name })
+}
+
+// ---------------------------------------------------------------------------
+// Fabric faces.
+// ---------------------------------------------------------------------------
+
+/// A per-source-FIFO inbox over a demuxed `(src, payload)` channel — the
+/// socket fabric's twin of [`super::threads::RankEndpoint`]'s receive
+/// half.
+pub struct TaggedInbox {
+    rx: mpsc::Receiver<(usize, Vec<u8>)>,
+    pending: Vec<VecDeque<Vec<u8>>>,
+}
+
+impl TaggedInbox {
+    pub fn new(rx: mpsc::Receiver<(usize, Vec<u8>)>, m: usize) -> Self {
+        Self { rx, pending: (0..m).map(|_| VecDeque::new()).collect() }
+    }
+}
+
+impl PeerReceiver for TaggedInbox {
+    fn recv_any(&mut self) -> (usize, Vec<u8>) {
+        for (src, q) in self.pending.iter_mut().enumerate() {
+            if let Some(p) = q.pop_front() {
+                return (src, p);
+            }
+        }
+        self.rx.recv().expect("process fabric hung up with a receive outstanding")
+    }
+
+    fn recv_from(&mut self, src: usize) -> Vec<u8> {
+        loop {
+            if let Some(p) = self.pending[src].pop_front() {
+                return p;
+            }
+            let (s, p) =
+                self.rx.recv().expect("process fabric hung up with a receive outstanding");
+            self.pending[s].push_back(p);
+        }
+    }
+}
+
+/// Latest `(threshold floor, l_seen)` pushed by the supervisor — the
+/// cross-process stand-in for the shared-memory
+/// [`FloorBoard`](crate::coordinator::receiver::FloorBoard). Staleness is
+/// harmless: the pruning rule is lossless for any lagging snapshot.
+#[derive(Default)]
+pub struct SocketFloor {
+    bits: AtomicU64,
+    l: AtomicU64,
+}
+
+impl SocketFloor {
+    pub fn new() -> Self {
+        Self { bits: AtomicU64::new(0f64.to_bits()), l: AtomicU64::new(0) }
+    }
+
+    pub fn store(&self, floor: f64, l: u64) {
+        self.bits.store(floor.to_bits(), Ordering::Relaxed);
+        self.l.store(l, Ordering::Relaxed);
+    }
+
+    /// Forgets the previous round's floor. A stale floor is only safe
+    /// while it *lower-bounds* the live receiver's — floors are monotone
+    /// within a round, not across rounds (each round starts a fresh
+    /// receiver), so senders must reset before a new S3. The hub→worker
+    /// stream is FIFO, so every previous-round push has already been
+    /// applied by the time the control message starting the new round
+    /// arrives; anything stored after the reset is current-round.
+    pub fn reset(&self) {
+        self.store(0.0, 0);
+    }
+
+    pub fn read(&self) -> (f64, u64) {
+        (f64::from_bits(self.bits.load(Ordering::Relaxed)), self.l.load(Ordering::Relaxed))
+    }
+}
+
+/// The worker-side send half: frames `[dst][kind][payload]` onto the hub
+/// socket; self-addressed payloads short-circuit into the local inbox
+/// without touching the wire.
+#[derive(Clone)]
+pub struct SocketSender {
+    rank: usize,
+    kind: u8,
+    stream: Arc<Mutex<TcpStream>>,
+    local: mpsc::Sender<(usize, Vec<u8>)>,
+}
+
+impl PeerSender for SocketSender {
+    fn send_to(&self, dst: usize, payload: Vec<u8>) {
+        if dst == self.rank {
+            let _ = self.local.send((self.rank, payload));
+            return;
+        }
+        let mut hdr = Vec::with_capacity(6);
+        wire::put_varint(&mut hdr, dst as u64);
+        hdr.push(self.kind);
+        // A write can only fail when the supervisor is gone; the round is
+        // dead either way and the worker will observe hangup on its inbox.
+        let mut s = self.stream.lock().expect("socket writer lock");
+        let _ = frame::write_frame(&mut *s, &[&hdr, &payload]);
+    }
+}
+
+/// The supervisor-side (rank 0) send half: self-addressed payloads go to
+/// the local inbox, worker-addressed ones to that worker's outbound queue.
+#[derive(Clone)]
+pub struct HubSender {
+    kind: u8,
+    local: mpsc::Sender<(usize, Vec<u8>)>,
+    /// Outbound queue of worker rank `p` at index `p - 1`.
+    out: Vec<mpsc::Sender<Vec<u8>>>,
+}
+
+impl PeerSender for HubSender {
+    fn send_to(&self, dst: usize, payload: Vec<u8>) {
+        if dst == 0 {
+            let _ = self.local.send((0, payload));
+        } else {
+            let _ = self.out[dst - 1].send(routed_msg(0, self.kind, &payload));
+        }
+    }
+}
+
+/// Pushes threshold-floor snapshots to live sender ranks (held by the
+/// canonical merger thread during S3).
+pub struct FloorPusher {
+    out: Vec<mpsc::Sender<Vec<u8>>>,
+}
+
+impl FloorPusher {
+    pub fn push(&self, floor: f64, l: u64, live: &[usize]) {
+        let mut body = Vec::with_capacity(14);
+        put_f64(&mut body, floor);
+        wire::put_varint(&mut body, l);
+        for &p in live {
+            let _ = self.out[p - 1].send(routed_msg(0, K_FLOOR, &body));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker binary resolution + worker link.
+// ---------------------------------------------------------------------------
+
+/// Resolves the binary to re-execute as a rank worker:
+///
+/// 1. `GREEDIRIS_WORKER_BIN` (tests and benches point this at the built
+///    CLI via `env!("CARGO_BIN_EXE_greediris")`);
+/// 2. the current executable, when it *is* the `greediris` CLI;
+/// 3. a `greediris` binary next to (or one directory above) the current
+///    executable — the cargo `target/<profile>/deps/` layout.
+///
+/// Never falls back to re-executing an arbitrary binary: a test harness
+/// respawning itself would run the whole suite per rank.
+pub fn worker_binary() -> io::Result<PathBuf> {
+    if let Some(p) = std::env::var_os("GREEDIRIS_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe()?;
+    if exe.file_stem().is_some_and(|s| s == "greediris") {
+        return Ok(exe);
+    }
+    let parents = [exe.parent(), exe.parent().and_then(|d| d.parent())];
+    for dir in parents.into_iter().flatten() {
+        for name in ["greediris", "greediris.exe"] {
+            let cand = dir.join(name);
+            if cand.is_file() {
+                return Ok(cand);
+            }
+        }
+    }
+    Err(io::Error::new(
+        io::ErrorKind::NotFound,
+        "cannot locate the greediris worker binary for --transport process; \
+         set GREEDIRIS_WORKER_BIN",
+    ))
+}
+
+/// A worker process's handle on the fabric: one socket to the hub, demuxed
+/// by a reader thread into data (S2), control, and floor lanes.
+pub struct WorkerLink {
+    rank: usize,
+    m: usize,
+    stream: Arc<Mutex<TcpStream>>,
+    data: TaggedInbox,
+    local_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    ctrl: mpsc::Receiver<Vec<u8>>,
+    floor: Arc<SocketFloor>,
+    _reader: JoinHandle<()>,
+}
+
+impl WorkerLink {
+    /// Connects to the hub at `addr`, identifies as `rank`, and blocks for
+    /// the HELLO control payload (whose first varint is `m` — the rest is
+    /// opaque to this layer). Returns the link plus the full HELLO body.
+    pub fn connect(addr: &str, rank: usize) -> io::Result<(Self, Vec<u8>)> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let mut join = Vec::with_capacity(4);
+        wire::put_varint(&mut join, rank as u64);
+        {
+            let mut w = &stream;
+            frame::write_frame(&mut w, &[&routed_msg(0, K_JOIN, &join)])?;
+        }
+        // First inbound frame is HELLO; read it synchronously so `m` is
+        // known before the demux reader (and its inbox) exists.
+        let mut fr = FrameReader::new();
+        let mut read_half = stream.try_clone()?;
+        let hello = loop {
+            let msg = fr.read_frame(&mut read_half)?.ok_or_else(|| {
+                io::Error::new(io::ErrorKind::UnexpectedEof, "hub closed before HELLO")
+            })?;
+            let (_, kind, body) = parse_routed(&msg)
+                .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+            match kind {
+                K_CTRL => break body,
+                K_SHUTDOWN => {
+                    return Err(io::Error::new(io::ErrorKind::Other, "shut down before HELLO"))
+                }
+                _ => continue,
+            }
+        };
+        let m = wire::Reader::new(&hello)
+            .varint()
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+            as usize;
+
+        let (data_tx, data_rx) = mpsc::channel();
+        let (ctrl_tx, ctrl_rx) = mpsc::channel();
+        let floor = Arc::new(SocketFloor::new());
+        let floor_r = Arc::clone(&floor);
+        let local_tx = data_tx.clone();
+        let reader = std::thread::spawn(move || {
+            worker_reader(read_half, fr, data_tx, ctrl_tx, floor_r)
+        });
+        Ok((
+            Self {
+                rank,
+                m,
+                stream: Arc::new(Mutex::new(stream)),
+                data: TaggedInbox::new(data_rx, m),
+                local_tx,
+                ctrl: ctrl_rx,
+                floor,
+                _reader: reader,
+            },
+            hello,
+        ))
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// A clone-able send half shipping `kind`-tagged payloads.
+    pub fn sender(&self, kind: u8) -> SocketSender {
+        SocketSender {
+            rank: self.rank,
+            kind,
+            stream: Arc::clone(&self.stream),
+            local: self.local_tx.clone(),
+        }
+    }
+
+    /// The S2 data inbox (per-source FIFO).
+    pub fn data(&mut self) -> &mut TaggedInbox {
+        &mut self.data
+    }
+
+    /// Next control payload; `None` once the hub hung up or shut down.
+    pub fn ctrl_recv(&self) -> Option<Vec<u8>> {
+        self.ctrl.recv().ok()
+    }
+
+    /// Ships a control payload (STATS) to the supervisor.
+    pub fn ctrl_send(&self, body: &[u8]) {
+        let mut s = self.stream.lock().expect("socket writer lock");
+        let _ = frame::write_frame(&mut *s, &[&routed_msg(0, K_CTRL, body)]);
+    }
+
+    /// The live threshold-floor cell fed by the hub's K_FLOOR pushes.
+    pub fn floor(&self) -> Arc<SocketFloor> {
+        Arc::clone(&self.floor)
+    }
+}
+
+fn worker_reader(
+    mut stream: TcpStream,
+    mut fr: FrameReader,
+    data_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    ctrl_tx: mpsc::Sender<Vec<u8>>,
+    floor: Arc<SocketFloor>,
+) {
+    loop {
+        let msg = match fr.read_frame(&mut stream) {
+            Ok(Some(m)) => m,
+            _ => return,
+        };
+        let Ok((src, kind, body)) = parse_routed(&msg) else { return };
+        match kind {
+            K_S2 => {
+                if data_tx.send((src, body)).is_err() {
+                    return;
+                }
+            }
+            K_CTRL => {
+                if ctrl_tx.send(body).is_err() {
+                    return;
+                }
+            }
+            K_FLOOR => {
+                let mut r = wire::Reader::new(&body);
+                if let (Ok(f), Ok(l)) = (get_f64(&mut r), r.varint()) {
+                    floor.store(f, l);
+                }
+            }
+            K_SHUTDOWN => return,
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervisor: the hub + worker pool.
+// ---------------------------------------------------------------------------
+
+struct WorkerHandle {
+    child: Child,
+    out_tx: Option<mpsc::Sender<Vec<u8>>>,
+    writer: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// The supervisor's view of a running worker pool (hub + children).
+/// Spawned lazily by the first round that crosses the process boundary;
+/// torn down (SHUTDOWN + reap) on drop.
+pub struct ProcessCluster {
+    m: usize,
+    workers: Vec<WorkerHandle>,
+    s2_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    s2_rx: TaggedInbox,
+    s3_rx: Option<TaggedInbox>,
+    ctrl_rx: mpsc::Receiver<(usize, Vec<u8>)>,
+}
+
+impl ProcessCluster {
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Rank 0's S2 send half.
+    pub fn s2_sender(&self) -> HubSender {
+        HubSender {
+            kind: K_S2,
+            local: self.s2_tx.clone(),
+            out: self.workers.iter().map(|w| w.out_tx.clone().expect("live")).collect(),
+        }
+    }
+
+    /// Rank 0's S2 inbox.
+    pub fn s2_inbox(&mut self) -> &mut TaggedInbox {
+        &mut self.s2_rx
+    }
+
+    /// Detaches the S3 inbox for the merger thread ([`Self::put_s3_inbox`]
+    /// returns it).
+    pub fn take_s3_inbox(&mut self) -> TaggedInbox {
+        self.s3_rx.take().expect("S3 inbox already taken")
+    }
+
+    pub fn put_s3_inbox(&mut self, inbox: TaggedInbox) {
+        self.s3_rx = Some(inbox);
+    }
+
+    /// A floor-push handle for the merger thread.
+    pub fn floor_pusher(&self) -> FloorPusher {
+        FloorPusher {
+            out: self.workers.iter().map(|w| w.out_tx.clone().expect("live")).collect(),
+        }
+    }
+
+    /// Ships a control payload to worker `dst`.
+    pub fn ctrl_send(&self, dst: usize, body: &[u8]) {
+        let tx = self.workers[dst - 1].out_tx.as_ref().expect("live");
+        let _ = tx.send(routed_msg(0, K_CTRL, body));
+    }
+
+    /// Broadcasts a control payload to every worker.
+    pub fn ctrl_broadcast(&self, body: &[u8]) {
+        for p in 1..self.m {
+            self.ctrl_send(p, body);
+        }
+    }
+
+    /// Next `(src rank, payload)` control message from any worker.
+    pub fn ctrl_recv(&mut self) -> (usize, Vec<u8>) {
+        self.ctrl_rx.recv().expect("a rank worker hung up mid-round")
+    }
+}
+
+impl Drop for ProcessCluster {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            if let Some(tx) = w.out_tx.take() {
+                let _ = tx.send(routed_msg(0, K_SHUTDOWN, &[]));
+                // Dropping the sender lets the writer thread drain and exit.
+            }
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.writer.take() {
+                let _ = h.join();
+            }
+            let _ = w.child.wait();
+            if let Some(h) = w.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn hub_writer(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
+    for payload in rx {
+        if frame::write_frame(&mut stream, &[&payload]).is_err() {
+            return;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn hub_reader(
+    src_rank: usize,
+    mut stream: TcpStream,
+    mut fr: FrameReader,
+    s2_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    s3_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    ctrl_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    forwards: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+) {
+    loop {
+        let msg = match fr.read_frame(&mut stream) {
+            Ok(Some(m)) => m,
+            _ => return,
+        };
+        let Ok((dst, kind, body)) = parse_routed(&msg) else { return };
+        if dst == 0 {
+            let gone = match kind {
+                K_S2 => s2_tx.send((src_rank, body)).is_err(),
+                K_S3 => s3_tx.send((src_rank, body)).is_err(),
+                K_CTRL => ctrl_tx.send((src_rank, body)).is_err(),
+                _ => false,
+            };
+            if gone {
+                return;
+            }
+        } else if let Some(Some(tx)) = forwards.get(dst) {
+            // Worker-to-worker traffic: re-tag with the source and relay.
+            if tx.send(routed_msg(src_rank, kind, &body)).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+/// Forks the worker pool and builds the hub. `hello` is the opaque control
+/// payload sent to every worker right after it joins (its first varint
+/// must be `m`; see [`WorkerLink::connect`]).
+fn spawn_cluster(m: usize, hello: &[u8]) -> io::Result<ProcessCluster> {
+    assert!(m > 1, "a process cluster needs at least one worker rank");
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let bin = worker_binary()?;
+    let mut children: Vec<Option<Child>> = Vec::with_capacity(m - 1);
+    for p in 1..m {
+        let child = Command::new(&bin)
+            .env("GREEDIRIS_RANK", p.to_string())
+            .env("GREEDIRIS_FABRIC_ADDR", addr.to_string())
+            .stdin(Stdio::null())
+            .spawn()?;
+        children.push(Some(child));
+    }
+
+    // Accept + identify every worker, with a deadline so a dead child
+    // cannot hang the supervisor.
+    let mut joined: Vec<Option<(TcpStream, FrameReader)>> = (1..m).map(|_| None).collect();
+    let deadline = Instant::now() + JOIN_TIMEOUT;
+    let mut pending = m - 1;
+    while pending > 0 {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nodelay(true)?;
+                stream.set_nonblocking(false)?;
+                let mut fr = FrameReader::new();
+                let mut read_half = stream.try_clone()?;
+                let msg = fr.read_frame(&mut read_half)?.ok_or_else(|| {
+                    io::Error::new(io::ErrorKind::UnexpectedEof, "worker closed before JOIN")
+                })?;
+                let (_, kind, body) = parse_routed(&msg)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+                if kind != K_JOIN {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("expected JOIN, got kind {kind}"),
+                    ));
+                }
+                let rank = wire::Reader::new(&body)
+                    .varint()
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
+                    as usize;
+                if rank == 0 || rank >= m || joined[rank - 1].is_some() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("bad or duplicate worker rank {rank}"),
+                    ));
+                }
+                joined[rank - 1] = Some((stream, fr));
+                pending -= 1;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "rank workers did not all join in time",
+                    ));
+                }
+                for (i, slot) in children.iter_mut().enumerate() {
+                    if let Some(c) = slot {
+                        if let Ok(Some(status)) = c.try_wait() {
+                            return Err(io::Error::new(
+                                io::ErrorKind::Other,
+                                format!("rank {} worker exited before joining: {status}", i + 1),
+                            ));
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+
+    let (s2_tx, s2_rx) = mpsc::channel();
+    let (s3_tx, s3_rx) = mpsc::channel();
+    let (ctrl_tx, ctrl_rx) = mpsc::channel();
+
+    // Writer threads first, so reader threads can forward to any rank.
+    let mut streams: Vec<(TcpStream, FrameReader)> =
+        joined.into_iter().map(|s| s.expect("joined")).collect();
+    let mut out_txs: Vec<mpsc::Sender<Vec<u8>>> = Vec::with_capacity(m - 1);
+    let mut writers: Vec<JoinHandle<()>> = Vec::with_capacity(m - 1);
+    for (stream, _) in &streams {
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let write_half = stream.try_clone()?;
+        writers.push(std::thread::spawn(move || hub_writer(write_half, rx)));
+        out_txs.push(tx);
+    }
+    // forwards[dst] for dst in 0..m (0 unused).
+    let forwards: Vec<Option<mpsc::Sender<Vec<u8>>>> = std::iter::once(None)
+        .chain(out_txs.iter().cloned().map(Some))
+        .collect();
+
+    let mut workers: Vec<WorkerHandle> = Vec::with_capacity(m - 1);
+    for (i, (stream, fr)) in streams.drain(..).enumerate() {
+        let rank = i + 1;
+        let reader = {
+            let s2 = s2_tx.clone();
+            let s3 = s3_tx.clone();
+            let ctrl = ctrl_tx.clone();
+            let fwd = forwards.clone();
+            std::thread::spawn(move || hub_reader(rank, stream, fr, s2, s3, ctrl, fwd))
+        };
+        workers.push(WorkerHandle {
+            child: children[i].take().expect("spawned"),
+            out_tx: Some(out_txs[i].clone()),
+            writer: Some(writers.remove(0)),
+            reader: Some(reader),
+        });
+    }
+
+    let cluster = ProcessCluster {
+        m,
+        workers,
+        s2_tx,
+        s2_rx: TaggedInbox::new(s2_rx, m),
+        s3_rx: Some(TaggedInbox::new(s3_rx, m)),
+        ctrl_rx,
+    };
+    for p in 1..m {
+        cluster.ctrl_send(p, hello);
+    }
+    Ok(cluster)
+}
+
+// ---------------------------------------------------------------------------
+// The Transport impl.
+// ---------------------------------------------------------------------------
+
+/// Rank-per-OS-process transport. The coordinator-side trait surface
+/// (clocks + sequential mailboxes) delegates to an inner [`SimTransport`],
+/// exactly like the thread backend — modeled makespans stay comparable
+/// across all three engines — while the rank-parallel phases run on the
+/// socket fabric through [`ProcessCluster`].
+pub struct ProcessTransport {
+    inner: SimTransport,
+    cluster: Option<ProcessCluster>,
+}
+
+impl ProcessTransport {
+    pub fn new(m: usize, net: NetModel) -> Self {
+        Self { inner: SimTransport::new(m, net), cluster: None }
+    }
+
+    /// The running worker pool, spawning it on first use. `hello` builds
+    /// the one-time join payload (config + graph blobs; see
+    /// [`crate::coordinator::process`]). Panics on launch failure — a
+    /// mis-deployed worker binary is an environment error, not a runtime
+    /// condition to limp through.
+    pub fn ensure_cluster(&mut self, hello: impl FnOnce() -> Vec<u8>) -> &mut ProcessCluster {
+        if self.cluster.is_none() {
+            let payload = hello();
+            let c = spawn_cluster(self.inner.m(), &payload)
+                .unwrap_or_else(|e| panic!("failed to launch --transport process workers: {e}"));
+            self.cluster = Some(c);
+        }
+        self.cluster.as_mut().expect("just ensured")
+    }
+
+    /// The running pool, if any (`None` before the first process round).
+    pub fn cluster_mut(&mut self) -> Option<&mut ProcessCluster> {
+        self.cluster.as_mut()
+    }
+}
+
+impl Transport for ProcessTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Process
+    }
+
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+
+    fn net(&self) -> NetModel {
+        self.inner.net()
+    }
+
+    fn charge_compute(&mut self, rank: usize, secs: f64) {
+        self.inner.charge_compute(rank, secs);
+    }
+
+    fn charge_comm(&mut self, rank: usize, secs: f64) {
+        self.inner.charge_comm(rank, secs);
+    }
+
+    fn wait_until(&mut self, rank: usize, t: f64) {
+        self.inner.wait_until(rank, t);
+    }
+
+    fn barrier(&mut self) -> f64 {
+        self.inner.barrier()
+    }
+
+    fn now(&self, rank: usize) -> f64 {
+        self.inner.now(rank)
+    }
+
+    fn makespan(&self) -> f64 {
+        self.inner.makespan()
+    }
+
+    fn clock(&self, rank: usize) -> RankClock {
+        self.inner.clock(rank)
+    }
+
+    fn total_compute(&self) -> f64 {
+        self.inner.total_compute()
+    }
+
+    fn send(&mut self, src: usize, dst: usize, payload: Vec<u8>) {
+        self.inner.send(src, dst, payload);
+    }
+
+    fn recv(&mut self, dst: usize, src: usize) -> Option<Vec<u8>> {
+        self.inner.recv(dst, src)
+    }
+
+    fn as_process(&mut self) -> Option<&mut ProcessTransport> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::weights::WeightModel;
+
+    #[test]
+    fn routed_message_roundtrip() {
+        let msg = routed_msg(300, K_S3, &[9, 8, 7]);
+        let (tag, kind, body) = parse_routed(&msg).unwrap();
+        assert_eq!(tag, 300);
+        assert_eq!(kind, K_S3);
+        assert_eq!(body, vec![9, 8, 7]);
+        assert!(parse_routed(&[]).is_err());
+    }
+
+    #[test]
+    fn f64_codec_is_bit_exact() {
+        for x in [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NAN, 1e-300] {
+            let mut buf = Vec::new();
+            put_f64(&mut buf, x);
+            let got = get_f64(&mut wire::Reader::new(&buf)).unwrap();
+            assert_eq!(got.to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn graph_blob_roundtrips_bit_exactly() {
+        let edges = generators::barabasi_albert(120, 3, 5);
+        let g = Graph::from_edges(120, &edges, WeightModel::UniformIc { max: 0.1 }, 5)
+            .with_name("blob-test");
+        let blob = encode_graph(&g);
+        let back = decode_graph(&blob).unwrap();
+        assert_eq!(back.name, g.name);
+        for (a, b) in [(&back.fwd, &g.fwd), (&back.rev, &g.rev)] {
+            assert_eq!(a.offsets, b.offsets);
+            assert_eq!(a.targets, b.targets);
+            assert_eq!(a.thresholds, b.thresholds);
+            assert_eq!(
+                a.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                b.weights.iter().map(|w| w.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // Truncated blobs error instead of panicking.
+        for cut in [0, 1, blob.len() / 2, blob.len() - 1] {
+            assert!(decode_graph(&blob[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn tagged_inbox_buffers_per_source() {
+        let (tx, rx) = mpsc::channel();
+        let mut inbox = TaggedInbox::new(rx, 3);
+        tx.send((2, vec![21])).unwrap();
+        tx.send((1, vec![11])).unwrap();
+        tx.send((1, vec![12])).unwrap();
+        assert_eq!(inbox.recv_from(1), vec![11]);
+        // The stray from source 2 was buffered; arrival order preserved.
+        assert_eq!(inbox.recv_any(), (2, vec![21]));
+        assert_eq!(inbox.recv_from(1), vec![12]);
+    }
+
+    #[test]
+    fn socket_floor_updates_and_resets() {
+        let f = SocketFloor::new();
+        assert_eq!(f.read(), (0.0, 0));
+        f.store(3.5, 12);
+        assert_eq!(f.read(), (3.5, 12));
+        // A fresh round must not inherit the previous round's floor (the
+        // cross-round staleness would make pruning lossy).
+        f.reset();
+        assert_eq!(f.read(), (0.0, 0));
+    }
+}

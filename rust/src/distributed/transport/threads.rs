@@ -16,7 +16,7 @@
 //! (see the module docs of [`super`]).
 
 use super::sim::SimTransport;
-use super::{Transport, TransportKind};
+use super::{PeerReceiver, PeerSender, Transport, TransportKind};
 use crate::distributed::cluster::RankClock;
 use crate::distributed::netmodel::NetModel;
 use std::collections::VecDeque;
@@ -205,6 +205,30 @@ impl RankEndpoint {
 
     /// Drops this endpoint's senders so peers' `recv` can observe hangup.
     pub fn close(self) {}
+}
+
+// Fabric-agnostic faces (the coordinator's rank bodies are generic over
+// these, so the thread and process engines share one implementation).
+impl PeerSender for RankSender {
+    fn send_to(&self, dst: usize, payload: Vec<u8>) {
+        self.send(dst, payload);
+    }
+}
+
+impl PeerSender for RankEndpoint {
+    fn send_to(&self, dst: usize, payload: Vec<u8>) {
+        self.send(dst, payload);
+    }
+}
+
+impl PeerReceiver for RankEndpoint {
+    fn recv_any(&mut self) -> (usize, Vec<u8>) {
+        RankEndpoint::recv_any(self)
+    }
+
+    fn recv_from(&mut self, src: usize) -> Vec<u8> {
+        RankEndpoint::recv_from(self, src)
+    }
 }
 
 #[cfg(test)]

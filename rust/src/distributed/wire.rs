@@ -65,6 +65,9 @@ pub enum DecodeError {
     /// A varint exceeded its value domain (64-bit chain or u32 field), or
     /// a delta chain overflowed u32.
     Overflow,
+    /// A framed payload failed its integrity check (socket frame layer,
+    /// see [`crate::distributed::transport::frame`]).
+    Corrupt,
 }
 
 impl fmt::Display for DecodeError {
@@ -73,6 +76,7 @@ impl fmt::Display for DecodeError {
             DecodeError::Truncated => write!(f, "wire payload truncated"),
             DecodeError::BadTag(t) => write!(f, "unknown wire format tag {t}"),
             DecodeError::Overflow => write!(f, "wire varint overflow"),
+            DecodeError::Corrupt => write!(f, "frame checksum mismatch"),
         }
     }
 }

@@ -119,6 +119,36 @@
 //! materialized (pinned by `distributed::wire::run_decode_allocs`). All
 //! wire decodes are bounds-checked: corrupt or truncated payloads return
 //! a [`distributed::wire::DecodeError`] instead of panicking.
+//!
+//! ## Multi-process socket transport (PR 5)
+//!
+//! The third [`distributed::Transport`] backend leaves the process:
+//! `--transport process` runs every rank as a real OS process over
+//! checksummed, length-prefixed socket frames
+//! ([`distributed::transport::frame`] — resumable across arbitrary
+//! read/write boundaries, corruption is a `DecodeError`, never a panic).
+//! The CLI is its own rank supervisor: rank 0 forks the worker processes
+//! (re-executing the `greediris` binary) and runs a deadlock-free hub;
+//! workers join via the `GREEDIRIS_RANK`/`GREEDIRIS_FABRIC_ADDR` env
+//! protocol, so no mpirun-style launcher exists anywhere
+//! ([`distributed::transport::process`]). The rank bodies are the *same
+//! code* the thread engine runs — [`coordinator::sampling`]'s chunk
+//! pipeline and [`coordinator::greediris`]'s wire sender/canonical merger
+//! are generic over the fabric ([`distributed::transport::PeerSender`] /
+//! [`distributed::transport::PeerReceiver`]) — driven by the round
+//! protocol in [`coordinator::process`]: HELLO ships the config and a
+//! bit-exact graph blob, ROUND runs the fused overlapped S1→S4 round
+//! (per-chunk S2 exchanges overlap **across processes**, S3 streams into
+//! the live receiver while chunks are in flight, threshold floors are
+//! pushed back to senders over the wire), and STATS returns every rank's
+//! measured timings so `metrics::Breakdown`/`CommVolume` aggregate at
+//! rank 0. Seed sets and raw-byte counters are **bit-identical across
+//! `sim | threads | process`** for the same config/seed (pinned by
+//! `tests/transport.rs` and the ci.sh three-way divergence gate). The
+//! kernel layer also gains the AVX-512 `VPOPCNTDQ` tier
+//! ([`maxcover::bitset::avx512`] on `x86_64`): native `vpopcntq` over
+//! 8×u64 lanes behind a runtime probe, bit-identical, pinned by
+//! `tests/kernels.rs`.
 
 #![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
 // Style lints that conflict with this crate's deliberate idiom (explicit

@@ -30,7 +30,7 @@ USAGE:
   greediris run [--input NAME | --file PATH] [--algorithm A] [--model IC|LT]
                 [--m N] [--k N] [--eps F] [--alpha F] [--theta N]
                 [--solver lazy|dense-cpu|dense-xla] [--sims N] [--seed N]
-                [--s1-threads N] [--transport sim|threads]
+                [--s1-threads N] [--transport sim|threads|process]
                 [--wire varint|raw] [--prune on|off]
                 [--overlap on|off] [--chunk N]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
@@ -38,15 +38,22 @@ USAGE:
   greediris inputs
 
 Algorithms: greediris | greediris-trunc | randgreedi | ripples | diimm
-Transports: sim (sequential cost model) | threads (rank-per-OS-thread);
-seed sets are identical across transports for the same config/seed.
+Transports: sim (sequential cost model) | threads (rank-per-OS-thread) |
+process (rank-per-OS-process over checksummed socket frames; the CLI is
+its own rank supervisor — it forks the rank processes, no mpirun needed —
+and a process started with GREEDIRIS_RANK + GREEDIRIS_FABRIC_ADDR set
+joins an existing fabric as that rank instead of parsing a command).
+Seed sets and raw-byte counters are bit-identical across all three
+transports for the same config/seed.
 --overlap on (default) runs the chunked overlapped pipeline (S1 chunks
 stream through S2 while sampling continues; S3 starts per sender);
 --overlap off pins the phase-stepped engine. Seed sets and raw-byte
 counters are bit-identical either way. --chunk N sets the chunk size in
 samples (0 = auto).
 Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
-     GREEDIRIS_TRANSPORT=sim|threads sets the default transport.";
+     GREEDIRIS_TRANSPORT=sim|threads|process sets the default transport
+     (unknown values are an error, never a silent fallback);
+     GREEDIRIS_WORKER_BIN overrides the rank-worker binary.";
 
 /// Minimal --flag value parser.
 struct Flags {
@@ -149,11 +156,20 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         cfg = cfg.with_theta(t.parse()?);
     }
     let transport_kind = cfg.transport;
+    if transport_kind == TransportKind::Process {
+        // Surface a missing worker binary as a clean error before any
+        // round starts forking.
+        greediris::coordinator::process::check_worker_binary()?;
+    }
     let solver = flags.get_str("solver", "lazy");
     let result = match solver.as_str() {
         "lazy" => run_infmax(&g, &cfg),
         "dense-cpu" => run_infmax(&g, &cfg.with_local_solver(LocalSolver::DenseCpu)),
         "dense-xla" => {
+            if transport_kind == TransportKind::Process {
+                bail!("--solver dense-xla is not supported with --transport process \
+                       (the XLA scorer is a single host handle)");
+            }
             let mut scorer = XlaScorer::new()?;
             if !scorer.artifacts_present() {
                 bail!("no AOT artifacts found — run `make artifacts` first");
@@ -270,6 +286,17 @@ fn cmd_opim(flags: &Flags) -> Result<()> {
 }
 
 fn main() -> Result<()> {
+    // Env-join protocol: a process launched with GREEDIRIS_RANK +
+    // GREEDIRIS_FABRIC_ADDR is a rank worker of an existing fabric (the
+    // supervisor forks these itself for --transport process).
+    if greediris::coordinator::process::worker_env_present() {
+        return greediris::coordinator::process::run_rank_worker();
+    }
+    // Validate the env-default transport up front so a typo is a clean CLI
+    // error instead of a panic inside Config::new.
+    if let Err(e) = TransportKind::from_env() {
+        bail!("{e}");
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
         println!("{USAGE}");

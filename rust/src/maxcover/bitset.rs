@@ -2,7 +2,7 @@
 //! consumer on the hot path (streaming admission, dense CPU scoring, the
 //! lazy/threshold re-evaluation sweeps).
 //!
-//! Three backends implement the same kernel contract over raw word slices:
+//! Four backends implement the same kernel contract over raw word slices:
 //!
 //! - [`scalar`] — the portable reference (also the PR-1 baseline: the u64
 //!   pairing trick for u32 rows lives here), always compiled, always the
@@ -11,14 +11,19 @@
 //!   runtime behind `is_x86_feature_detected!("avx2")` + `popcnt`. Popcounts
 //!   use the Mula nibble-shuffle (`vpshufb` lookup + `vpsadbw` fold) since
 //!   AVX2 has no vector popcount; sparse marginals use `vpgatherqq`.
+//! - [`avx512`] — the VPOPCNTDQ tier (`x86_64` only), selected at runtime
+//!   behind `avx512f` + `avx512vpopcntdq`: the **native** `vpopcntq`
+//!   vector popcount over 8 × u64 lanes, no nibble-shuffle emulation —
+//!   the Sapphire-Rapids-class hosts the paper targets.
 //! - [`wide`] — a portable fixed-lane path behind the `simd` cargo feature.
 //!   On stable it is a hand-rolled 4×`u64` chunk form the autovectorizer
 //!   maps to whatever the target offers; on nightly with
 //!   `--cfg greediris_portable_simd` it compiles to real `std::simd` types.
 //!
 //! Dispatch is resolved **once** per process ([`kernels`]): explicit
-//! `GREEDIRIS_SIMD=scalar|avx2|wide` env override, else best available
-//! (AVX2 → wide → scalar). All backends are bit-identical on every input —
+//! `GREEDIRIS_SIMD=scalar|avx2|avx512|wide` env override, else best
+//! available (AVX-512 → AVX2 → wide → scalar). All backends are
+//! bit-identical on every input —
 //! gains are exact integer popcounts, so there is no tolerance to argue
 //! about; the golden tests in `tests/kernels.rs` pin solver-level equality.
 //!
@@ -393,6 +398,186 @@ pub static AVX2: Kernels = Kernels {
 };
 
 // ---------------------------------------------------------------------------
+// AVX-512 VPOPCNTDQ backend (x86_64, runtime-detected).
+// ---------------------------------------------------------------------------
+
+/// AVX-512 intrinsics with the **native vector popcount**
+/// (`vpopcntq` / `_mm512_popcnt_epi64`, the VPOPCNTDQ extension of
+/// Ice-Lake/Sapphire-Rapids-class hosts the paper targets) — no
+/// nibble-shuffle emulation anywhere in this tier; 8 × u64 lanes per
+/// iteration, twice the AVX2 width with one popcount instruction instead
+/// of four. The dispatcher only hands this table out after a successful
+/// `avx512f` + `avx512vpopcntdq` probe; the wrappers `debug_assert!` the
+/// probe as a test-time guard. The sparse gather stays on the AVX2
+/// `vpgatherqq` path (gathers are port-bound — the VPOPCNTDQ win is the
+/// dense popcount loops).
+#[cfg(target_arch = "x86_64")]
+pub mod avx512 {
+    use core::arch::x86_64::*;
+
+    #[inline]
+    fn detected() -> bool {
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+    }
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    unsafe fn and_not_count_imp(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i) as *const i64);
+            let vb = _mm512_loadu_epi64(b.as_ptr().add(i) as *const i64);
+            // andnot(b, a) computes (!b) & a.
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_andnot_si512(vb, va)));
+            i += 8;
+        }
+        let mut total = _mm512_reduce_add_epi64(acc) as u64;
+        while i < n {
+            total += (a[i] & !b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    unsafe fn or_count_imp(a: &[u64], b: &[u64]) -> u64 {
+        let n = a.len();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i) as *const i64);
+            let vb = _mm512_loadu_epi64(b.as_ptr().add(i) as *const i64);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_or_si512(va, vb)));
+            i += 8;
+        }
+        let mut total = _mm512_reduce_add_epi64(acc) as u64;
+        while i < n {
+            total += (a[i] | b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    unsafe fn marginal_and_stage_imp(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+        let n = set.len();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vs = _mm512_loadu_epi64(set.as_ptr().add(i) as *const i64);
+            let vc = _mm512_loadu_epi64(covered.as_ptr().add(i) as *const i64);
+            _mm512_storeu_epi64(staged.as_mut_ptr().add(i) as *mut i64, _mm512_or_si512(vs, vc));
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_andnot_si512(vc, vs)));
+            i += 8;
+        }
+        let mut gain = _mm512_reduce_add_epi64(acc) as u64;
+        while i < n {
+            let s = set[i];
+            let c = covered[i];
+            gain += (s & !c).count_ones() as u64;
+            staged[i] = s | c;
+            i += 1;
+        }
+        gain
+    }
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    unsafe fn and_not_count_u32_imp(a: &[u32], b: &[u32]) -> u32 {
+        let n = a.len();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i) as *const i64);
+            let vb = _mm512_loadu_epi64(b.as_ptr().add(i) as *const i64);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_andnot_si512(vb, va)));
+            i += 16;
+        }
+        let mut total = _mm512_reduce_add_epi64(acc) as u64;
+        while i < n {
+            total += (a[i] & !b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total as u32
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn or_assign_u32_imp(dst: &mut [u32], src: &[u32]) {
+        let n = dst.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let vd = _mm512_loadu_epi64(dst.as_ptr().add(i) as *const i64);
+            let vs = _mm512_loadu_epi64(src.as_ptr().add(i) as *const i64);
+            _mm512_storeu_epi64(dst.as_mut_ptr().add(i) as *mut i64, _mm512_or_si512(vd, vs));
+            i += 16;
+        }
+        while i < n {
+            dst[i] |= src[i];
+            i += 1;
+        }
+    }
+
+    pub fn and_not_count(a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len());
+        debug_assert!(detected());
+        unsafe { and_not_count_imp(a, b) }
+    }
+
+    pub fn or_count(a: &[u64], b: &[u64]) -> u64 {
+        assert_eq!(a.len(), b.len());
+        debug_assert!(detected());
+        unsafe { or_count_imp(a, b) }
+    }
+
+    pub fn marginal_and_stage(set: &[u64], covered: &[u64], staged: &mut [u64]) -> u64 {
+        assert_eq!(set.len(), covered.len());
+        assert_eq!(set.len(), staged.len());
+        debug_assert!(detected());
+        unsafe { marginal_and_stage_imp(set, covered, staged) }
+    }
+
+    pub fn apply_staged(covered: &mut [u64], staged: &[u64]) {
+        covered.copy_from_slice(staged);
+    }
+
+    pub fn and_not_count_u32(a: &[u32], b: &[u32]) -> u32 {
+        assert_eq!(a.len(), b.len());
+        debug_assert!(detected());
+        unsafe { and_not_count_u32_imp(a, b) }
+    }
+
+    pub fn or_assign_u32(dst: &mut [u32], src: &[u32]) {
+        assert_eq!(dst.len(), src.len());
+        debug_assert!(detected());
+        unsafe { or_assign_u32_imp(dst, src) }
+    }
+}
+
+/// The AVX-512 VPOPCNTDQ backend as a dispatch table (only handed out
+/// after runtime feature detection; a CPU with VPOPCNTDQ always has AVX2,
+/// so the gather reuses that tier's `vpgatherqq` kernel).
+#[cfg(target_arch = "x86_64")]
+pub static AVX512: Kernels = Kernels {
+    name: "avx512",
+    and_not_count: avx512::and_not_count,
+    or_count: avx512::or_count,
+    marginal_and_stage: avx512::marginal_and_stage,
+    apply_staged: avx512::apply_staged,
+    and_not_count_u32: avx512::and_not_count_u32,
+    or_assign_u32: avx512::or_assign_u32,
+    gather_marginal: avx2::gather_marginal,
+};
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+        && std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("popcnt")
+}
+
+// ---------------------------------------------------------------------------
 // Portable wide-lane backend (`--features simd`).
 // ---------------------------------------------------------------------------
 
@@ -596,11 +781,15 @@ pub static WIDE: Kernels = Kernels {
 // Dispatch.
 // ---------------------------------------------------------------------------
 
-/// The best backend the running CPU/build supports: AVX2 (runtime-detected)
-/// → wide (`simd` feature) → scalar.
+/// The best backend the running CPU/build supports: AVX-512 VPOPCNTDQ
+/// (runtime-detected) → AVX2 (runtime-detected) → wide (`simd` feature) →
+/// scalar.
 pub fn best_available() -> &'static Kernels {
     #[cfg(target_arch = "x86_64")]
     {
+        if avx512_detected() {
+            return &AVX512;
+        }
         if std::arch::is_x86_feature_detected!("avx2")
             && std::arch::is_x86_feature_detected!("popcnt")
         {
@@ -622,6 +811,8 @@ pub fn best_available() -> &'static Kernels {
 pub fn by_name(name: &str) -> Option<&'static Kernels> {
     match name {
         "scalar" => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        "avx512" | "vpopcntdq" if avx512_detected() => Some(&AVX512),
         #[cfg(target_arch = "x86_64")]
         "avx2"
             if std::arch::is_x86_feature_detected!("avx2")
@@ -645,6 +836,9 @@ pub fn all_available() -> Vec<&'static Kernels> {
         {
             v.push(&AVX2);
         }
+        if avx512_detected() {
+            v.push(&AVX512);
+        }
     }
     #[cfg(feature = "simd")]
     {
@@ -654,7 +848,7 @@ pub fn all_available() -> Vec<&'static Kernels> {
 }
 
 /// The process-wide dispatched backend, resolved once: an explicit
-/// `GREEDIRIS_SIMD=scalar|avx2|wide` env override wins, else
+/// `GREEDIRIS_SIMD=scalar|avx2|avx512|wide` env override wins, else
 /// [`best_available`]. Hot structs capture the `&'static Kernels` at
 /// construction, so per-call dispatch is one indirect call, no probing.
 pub fn kernels() -> &'static Kernels {
@@ -1014,5 +1208,18 @@ mod tests {
         let k = kernels();
         assert!(!k.name.is_empty());
         assert!(all_available().iter().any(|b| b.name == "scalar"));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_tier_registered_exactly_when_probed() {
+        let want = avx512_detected();
+        assert_eq!(by_name("avx512").is_some(), want);
+        assert_eq!(by_name("vpopcntdq").is_some(), want);
+        assert_eq!(all_available().iter().any(|b| b.name == "avx512"), want);
+        if want {
+            // VPOPCNTDQ outranks every other tier once probed.
+            assert_eq!(best_available().name, "avx512");
+        }
     }
 }

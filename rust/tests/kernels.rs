@@ -16,9 +16,26 @@ use greediris::rng::Xoshiro256pp;
 
 const CASES: u64 = 40;
 
-/// Lengths straddling every lane width in play (AVX2: 4×u64 / 8×u32; wide:
-/// 4×u64 / 8×u32), plus empty and one-past-boundary tails.
+/// Lengths straddling every lane width in play (AVX2: 4×u64 / 8×u32;
+/// AVX-512: 8×u64 / 16×u32; wide: 4×u64 / 8×u32), plus empty and
+/// one-past-boundary tails.
 const LENS: [usize; 16] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 11, 15, 16, 17, 31, 32, 33];
+
+/// The AVX-512 VPOPCNTDQ tier (PR 5 satellite): registered exactly when
+/// the CPU probes `avx512f` + `avx512vpopcntdq`, selectable via
+/// `GREEDIRIS_SIMD=avx512`, and — through `backends()` below — pinned
+/// bit-identical to scalar by every property test in this file.
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn avx512_vpopcntdq_tier_registration() {
+    let probed = std::arch::is_x86_feature_detected!("avx512f")
+        && std::arch::is_x86_feature_detected!("avx512vpopcntdq");
+    assert_eq!(bitset::by_name("avx512").is_some(), probed);
+    assert_eq!(backends().iter().any(|k| k.name == "avx512"), probed);
+    if probed {
+        assert_eq!(bitset::best_available().name, "avx512");
+    }
+}
 
 fn rand_words(rng: &mut Xoshiro256pp, len: usize) -> Vec<u64> {
     (0..len).map(|_| rng.next_u64()).collect()

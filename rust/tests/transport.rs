@@ -1,4 +1,5 @@
-//! End-to-end guarantees of the PR-3 execution engine:
+//! End-to-end guarantees of the PR-3 execution engine (and the PR-5
+//! multi-process one):
 //!
 //! - the delta-varint wire codec round-trips every stream (property +
 //!   golden bytes);
@@ -6,6 +7,14 @@
 //!   CSR byte-for-byte;
 //! - `run_infmax` under `ThreadTransport` selects seed sets identical to
 //!   `SimTransport` for the same config/seed (m ∈ {1, 2, 8});
+//! - `run_infmax` under `ProcessTransport` — every rank a real OS process
+//!   over checksummed socket frames — selects **bit-identical seed sets
+//!   and raw-byte counters** to both in-process backends, for
+//!   m ∈ {1, 2, 8} × overlap on|off, under truncation/wire variants, and
+//!   across martingale rounds (the PR-5 three-way gate);
+//! - the socket frame layer resumes across arbitrary read boundaries and
+//!   rejects corruption with a `DecodeError`, never a panic or a short
+//!   silent read;
 //! - threshold-floor pruning and wire compression never change seeds;
 //! - truncated runs respect the `greediris_trunc_ratio` quality bound.
 
@@ -210,6 +219,170 @@ fn pruning_and_compression_never_change_seeds() {
             if compress {
                 assert!(r.volumes.alltoall_bytes < base.volumes.alltoall_bytes);
             }
+        }
+    }
+}
+
+// ---------------------------------------------------- process transport --
+
+/// Points the process backend's worker resolution at the built CLI binary.
+/// Required: re-executing the *test* binary as a rank worker would run the
+/// whole suite per rank (the library's resolution refuses to, but would
+/// then have to guess at cargo's layout — the env override is exact).
+fn set_worker_bin() {
+    std::env::set_var("GREEDIRIS_WORKER_BIN", env!("CARGO_BIN_EXE_greediris"));
+}
+
+#[test]
+fn process_transport_seeds_and_raw_bytes_equal_sim_and_threads() {
+    // The PR-5 acceptance gate: bit-identical seed sets AND raw-byte
+    // counters across sim | threads | process, m ∈ {1, 2, 8}, overlap
+    // on|off. (Encoded byte counters may legitimately differ: chunk
+    // framing restarts delta chains and the live floor races; the raw
+    // counters are defined to be engine-invariant.)
+    set_worker_bin();
+    let g = graph();
+    for m in [1usize, 2, 8] {
+        for overlap in [true, false] {
+            let mk = |kind: TransportKind| {
+                run_infmax(&g, &cfg(Algorithm::GreediRis, m, kind).with_overlap(overlap))
+            };
+            let sim = mk(TransportKind::Sim);
+            let thr = mk(TransportKind::Threads);
+            let prc = mk(TransportKind::Process);
+            let tag = format!("m={m} overlap={overlap}");
+            assert_eq!(prc.seeds, sim.seeds, "process vs sim ({tag})");
+            assert_eq!(prc.seeds, thr.seeds, "process vs threads ({tag})");
+            assert_eq!(prc.coverage, sim.coverage, "{tag}");
+            assert_eq!(prc.theta, sim.theta, "{tag}");
+            assert_eq!(
+                prc.volumes.alltoall_raw_bytes, sim.volumes.alltoall_raw_bytes,
+                "S2 raw counter must be engine-invariant ({tag})"
+            );
+            assert_eq!(
+                prc.volumes.stream_raw_bytes, sim.volumes.stream_raw_bytes,
+                "S3 raw counter must be engine-invariant ({tag})"
+            );
+            if m > 1 {
+                assert!(prc.volumes.streamed_seeds > 0, "runs must cross the sockets ({tag})");
+            }
+        }
+    }
+}
+
+#[test]
+fn process_transport_matches_sim_under_truncation_and_wire_variants() {
+    set_worker_bin();
+    let g = graph();
+    for (compress, prune) in [(true, true), (false, false)] {
+        let mk = |kind: TransportKind| {
+            run_infmax(
+                &g,
+                &cfg(Algorithm::GreediRisTrunc, 5, kind)
+                    .with_alpha(0.5)
+                    .with_wire_compression(compress)
+                    .with_floor_prune(prune),
+            )
+        };
+        let sim = mk(TransportKind::Sim);
+        let prc = mk(TransportKind::Process);
+        assert_eq!(sim.seeds, prc.seeds, "compress={compress} prune={prune}");
+        assert_eq!(sim.coverage, prc.coverage);
+        assert_eq!(sim.volumes.stream_raw_bytes, prc.volumes.stream_raw_bytes);
+    }
+}
+
+#[test]
+fn process_transport_matches_sim_with_martingale_rounds() {
+    // No θ override: workers persist across martingale rounds (incremental
+    // cover growth) and across the fresh final phase (cover reset +
+    // owner-partition redraw) — the round decisions, driven only by
+    // per-round coverage, must agree with the sequential engine.
+    set_worker_bin();
+    let edges = generators::barabasi_albert(300, 4, 7);
+    let g = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 7);
+    let mk = |kind| {
+        let mut c = Config::new(6, 4, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_transport(kind);
+        c.eps = 0.3;
+        run_infmax(&g, &c)
+    };
+    let sim = mk(TransportKind::Sim);
+    let prc = mk(TransportKind::Process);
+    assert_eq!(sim.seeds, prc.seeds);
+    assert_eq!(sim.rounds, prc.rounds);
+    assert_eq!(sim.theta, prc.theta);
+}
+
+// -------------------------------------------------------- socket frames --
+
+#[test]
+fn socket_frames_resume_and_reject_corruption() {
+    use greediris::distributed::transport::frame::{encode_frame, FrameReader, HEADER_LEN};
+    // Wire-shaped payloads (encoded S2 streams) through the frame layer at
+    // random split boundaries — the PR-4 mutated-byte fuzz discipline
+    // extended to the socket framing.
+    let mut rng = Xoshiro256pp::seeded(0xF4A3);
+    for case in 0..40u64 {
+        let n = 1 + rng.gen_range(4) as usize;
+        let frames: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let mut stream = Vec::new();
+                let mut v = 0u32;
+                for _ in 0..rng.gen_range(5) {
+                    v += 1 + rng.gen_range(100) as u32;
+                    let len = 1 + rng.gen_range(4) as usize;
+                    let mut ids: Vec<u32> =
+                        (0..len).map(|_| rng.gen_range(1 << 12) as u32).collect();
+                    ids.sort_unstable();
+                    ids.dedup();
+                    stream.push(v);
+                    stream.push(ids.len() as u32);
+                    stream.extend_from_slice(&ids);
+                }
+                wire::encode_stream(&stream, case % 2 == 0)
+            })
+            .collect();
+        let bytes: Vec<u8> = frames.iter().flat_map(|f| encode_frame(f)).collect();
+        // Resumption across arbitrary boundaries reproduces every payload.
+        let mut r = FrameReader::new();
+        let mut pos = 0usize;
+        let mut got = Vec::new();
+        while pos < bytes.len() {
+            let step = 1 + rng.gen_range(17) as usize;
+            let end = (pos + step).min(bytes.len());
+            r.push(&bytes[pos..end]).unwrap();
+            while let Some(f) = r.next_frame() {
+                got.push(f);
+            }
+            pos = end;
+        }
+        assert!(r.finish().is_ok(), "case {case}");
+        assert_eq!(got, frames, "case {case}");
+        // A truncated stream is detected at EOF, never silently short:
+        // finish() is Ok exactly at clean frame boundaries.
+        let mut boundaries = vec![0usize];
+        for f in &frames {
+            boundaries.push(boundaries.last().unwrap() + HEADER_LEN + f.len());
+        }
+        if bytes.len() > 1 {
+            let cut = 1 + rng.gen_range(bytes.len() as u64 - 1) as usize;
+            let mut r = FrameReader::new();
+            r.push(&bytes[..cut]).unwrap();
+            while r.next_frame().is_some() {}
+            assert_eq!(r.finish().is_ok(), boundaries.contains(&cut), "case {case} cut {cut}");
+        }
+        // A flipped payload byte is a DecodeError, never a panic or a
+        // silent wrong read (header length fields are covered by the unit
+        // fuzz in transport::frame).
+        let mut bad = bytes.clone();
+        let first_payload_byte =
+            HEADER_LEN + rng.gen_range(frames[0].len().max(1) as u64) as usize;
+        if first_payload_byte < bad.len() {
+            bad[first_payload_byte] ^= 0x10;
+            let mut r = FrameReader::new();
+            let res = r.push(&bad);
+            assert!(res.is_err() || r.finish().is_err(), "case {case}: corruption accepted");
         }
     }
 }

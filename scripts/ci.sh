@@ -7,31 +7,38 @@
 #   2. tier-1 crossed matrix: {default, --features simd} x {sim, threads}
 #      transports — `cargo build --release` once per feature set, then
 #      `cargo test -q` with GREEDIRIS_TRANSPORT set to each backend. All
-#      four passes must be green; a failure in any fails the gate.
+#      four passes must be green; a failure in any fails the gate. The
+#      process backend additionally gets a targeted pass of the transport
+#      integration suite under GREEDIRIS_TRANSPORT=process (the full suite
+#      under a process *default* would fork worker pools from hundreds of
+#      unrelated unit tests for no added coverage — tests/transport.rs
+#      exercises the backend explicitly either way).
 #   3. divergence gates: the same `greediris run` must print identical
-#      seed sets under --transport sim vs threads AND under
-#      --overlap on vs off (the chunked overlapped engine is bit-equal by
-#      design; this catches drift at the CLI level on top of
-#      tests/transport.rs and tests/overlap.rs).
+#      seed sets under --transport sim vs threads vs process (the PR-5
+#      three-way matrix) AND under --overlap on vs off (the chunked
+#      overlapped engine is bit-equal by design; this catches drift at the
+#      CLI level on top of tests/transport.rs and tests/overlap.rs).
 #   4. quick-scale micro benches (sampling / shuffle / maxcover /
-#      transport) through the in-tree harness (src/exp/bench.rs), each
-#      measurement exported as a JSON line via GREEDIRIS_BENCH_JSON.
-#   5. assemble the lines into BENCH_PR4.json at the repo root — the
+#      transport, incl. the socket-backend leg) through the in-tree
+#      harness (src/exp/bench.rs), each measurement exported as a JSON
+#      line via GREEDIRIS_BENCH_JSON.
+#   5. assemble the lines into BENCH_PR5.json at the repo root — the
 #      current perf record, stamped with the git SHA and the flag matrix
 #      the benches ran (transport/wire/prune/overlap A/B pairs live in
 #      the same array; see scripts/README.md). A record is only written
 #      when this run actually measured something: an existing measured
-#      BENCH_PR4.json is never replaced by a placeholder or an empty run.
-#   6. BENCH_PR1-3.json: earlier baselines future PRs diff against. The
+#      BENCH_PR5.json is never replaced by a placeholder or an empty run.
+#   6. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
 #      authoring containers had no Rust toolchain, so the repo may carry
 #      marked placeholders; the first run on a toolchain-equipped host
 #      replaces a placeholder (or missing file) with this run's measured
 #      array. An already-measured baseline is never overwritten.
 #
 # Env: GREEDIRIS_BENCH_SCALE=quick|full (default quick)
-#      GREEDIRIS_SIMD=scalar|avx2|wide to pin the dispatched backend
-#      GREEDIRIS_TRANSPORT=sim|threads default transport (the matrix below
-#      sets it explicitly)
+#      GREEDIRIS_SIMD=scalar|avx2|avx512|wide to pin the dispatched backend
+#      GREEDIRIS_TRANSPORT=sim|threads|process default transport (the
+#      matrix below sets it explicitly; unknown values are a hard error)
+#      GREEDIRIS_WORKER_BIN to override the process backend's rank binary
 #      (see scripts/README.md)
 set -euo pipefail
 
@@ -66,6 +73,10 @@ for FEATURES in "" "--features simd"; do
     # shellcheck disable=SC2086
     GREEDIRIS_TRANSPORT=$TRANSPORT cargo test -q $FEATURES
   done
+
+  echo "== tier-1: test (${FEATURES:-default features}, transport=process, targeted) =="
+  # shellcheck disable=SC2086
+  GREEDIRIS_TRANSPORT=process cargo test -q $FEATURES --test transport
 done
 
 echo "== seed-divergence gates =="
@@ -75,13 +86,25 @@ BIN="$ROOT/rust/target/release/greediris"
 RUN_ARGS=(run --input dblp --m 8 --k 20 --theta 2048 --sims 0)
 SIM_SEEDS="$("$BIN" "${RUN_ARGS[@]}" --transport sim | grep '^seeds:')"
 THR_SEEDS="$("$BIN" "${RUN_ARGS[@]}" --transport threads | grep '^seeds:')"
-if [ "$SIM_SEEDS" != "$THR_SEEDS" ]; then
+PRC_SEEDS="$("$BIN" "${RUN_ARGS[@]}" --transport process | grep '^seeds:')"
+if [ "$SIM_SEEDS" != "$THR_SEEDS" ] || [ "$SIM_SEEDS" != "$PRC_SEEDS" ]; then
   echo "error: transport seed sets diverged" >&2
   echo "  sim:     $SIM_SEEDS" >&2
   echo "  threads: $THR_SEEDS" >&2
+  echo "  process: $PRC_SEEDS" >&2
   exit 1
 fi
-echo "seed sets identical across transports"
+echo "seed sets identical across {sim, threads, process}"
+# The process gate again with the phase-stepped engine (overlap off), so
+# both process code paths cross the CLI gate.
+PRC_OFF="$("$BIN" "${RUN_ARGS[@]}" --transport process --overlap off | grep '^seeds:')"
+if [ "$SIM_SEEDS" != "$PRC_OFF" ]; then
+  echo "error: process --overlap off diverged from sim" >&2
+  echo "  sim:           $SIM_SEEDS" >&2
+  echo "  process (off): $PRC_OFF" >&2
+  exit 1
+fi
+echo "seed sets identical for process --overlap off"
 # Overlap gate: the chunked overlapped pipeline vs the phase-stepped
 # engine, on the backend where the fused round actually runs.
 OVL_ON="$("$BIN" "${RUN_ARGS[@]}" --transport threads --overlap on | grep '^seeds:')"
@@ -95,7 +118,7 @@ fi
 echo "seed sets identical across overlap on/off"
 
 echo "== micro benches (scale: ${GREEDIRIS_BENCH_SCALE:-quick}) =="
-JSONL="$ROOT/rust/target/bench_pr4.jsonl"
+JSONL="$ROOT/rust/target/bench_pr5.jsonl"
 rm -f "$JSONL"
 export GREEDIRIS_BENCH_JSON="$JSONL"
 export GREEDIRIS_BENCH_SCALE="${GREEDIRIS_BENCH_SCALE:-quick}"
@@ -105,7 +128,7 @@ cargo bench --bench micro_shuffle
 cargo bench --bench micro_maxcover
 cargo bench --bench micro_transport
 
-OUT="$ROOT/BENCH_PR4.json"
+OUT="$ROOT/BENCH_PR5.json"
 if [ ! -s "$JSONL" ]; then
   # Never clobber a real record with nothing: fail loudly instead.
   echo "error: no bench measurements were exported to $JSONL" >&2
@@ -115,7 +138,7 @@ if [ ! -s "$JSONL" ]; then
   exit 1
 fi
 GIT_SHA="$(git -C "$ROOT" rev-parse HEAD 2>/dev/null || echo unknown)"
-STAMP="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\":\"$GREEDIRIS_BENCH_SCALE\",\"transports\":\"sim,threads\",\"wire\":\"varint+raw A/B\",\"prune\":\"on+off A/B\",\"overlap\":\"on+off A/B\"}"
+STAMP="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\":\"$GREEDIRIS_BENCH_SCALE\",\"transports\":\"sim,threads,process\",\"wire\":\"varint+raw A/B\",\"prune\":\"on+off A/B\",\"overlap\":\"on+off A/B\",\"simd\":\"${GREEDIRIS_SIMD:-auto}\"}"
 {
   echo '['
   { echo "$STAMP"; cat "$JSONL"; } | paste -sd,
@@ -123,7 +146,7 @@ STAMP="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\
 } > "$OUT"
 echo "wrote $OUT ($(grep -c . "$JSONL") measurements, sha $GIT_SHA)"
 
-for BASE in "$ROOT/BENCH_PR1.json" "$ROOT/BENCH_PR2.json" "$ROOT/BENCH_PR3.json"; do
+for BASE in "$ROOT/BENCH_PR1.json" "$ROOT/BENCH_PR2.json" "$ROOT/BENCH_PR3.json" "$ROOT/BENCH_PR4.json"; do
   if [ ! -f "$BASE" ] || grep -q '"provenance"' "$BASE"; then
     cp "$OUT" "$BASE"
     echo "bootstrapped $BASE from this run"
