@@ -1,6 +1,7 @@
 //! Run configuration and result types for the coordinator.
 
 use crate::diffusion::DiffusionModel;
+use crate::distributed::fault::{env_fabric_timeout_ms, FaultSpec, LossPolicy};
 use crate::distributed::{NetModel, TransportKind};
 use crate::imm::bounds;
 use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
@@ -125,6 +126,21 @@ pub struct Config {
     /// tiny rounds degenerate to a single chunk). Results are identical
     /// for every chunk size.
     pub chunk: usize,
+    /// Process-fabric deadline in milliseconds (`--fabric-timeout`,
+    /// default from `GREEDIRIS_FABRIC_TIMEOUT_MS` or 60 s): bounds every
+    /// hub/worker receive, connect handshake, and heartbeat-staleness
+    /// sweep. Irrelevant to the in-memory transports.
+    pub fabric_timeout_ms: u64,
+    /// What the supervisor does when a worker rank is lost mid-round
+    /// (`--on-rank-loss`): fail with a typed per-rank diagnostic
+    /// (default), or deterministically redistribute the lost rank's
+    /// remaining S1 quota to the survivors and finish the round.
+    pub on_rank_loss: LossPolicy,
+    /// Deterministic fault injection (`GREEDIRIS_FAULT`, testing only):
+    /// armed in the matching rank worker at the matching phase entry.
+    /// Never part of the wire config blob — each worker reads only its
+    /// own environment.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Config {
@@ -152,6 +168,9 @@ impl Config {
             floor_feedback_every: 16,
             overlap: true,
             chunk: 0,
+            fabric_timeout_ms: env_fabric_timeout_ms(),
+            on_rank_loss: LossPolicy::Fail,
+            fault: None,
         }
     }
 
@@ -203,6 +222,25 @@ impl Config {
     /// output for any value; see [`crate::sampling::batch_parallel`]).
     pub fn with_s1_threads(mut self, t: usize) -> Self {
         self.s1_threads = t.max(1);
+        self
+    }
+
+    /// Sets the process-fabric deadline (milliseconds; see
+    /// [`Config::fabric_timeout_ms`]).
+    pub fn with_fabric_timeout(mut self, ms: u64) -> Self {
+        self.fabric_timeout_ms = ms;
+        self
+    }
+
+    /// Sets the mid-round rank-loss policy (see [`Config::on_rank_loss`]).
+    pub fn with_on_rank_loss(mut self, policy: LossPolicy) -> Self {
+        self.on_rank_loss = policy;
+        self
+    }
+
+    /// Arms a deterministic injected fault (testing; see [`Config::fault`]).
+    pub fn with_fault(mut self, spec: FaultSpec) -> Self {
+        self.fault = Some(spec);
         self
     }
 

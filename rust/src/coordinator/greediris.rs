@@ -28,6 +28,9 @@
 
 use crate::coordinator::config::{Config, LocalSolver};
 use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard, FloorSource};
+use crate::distributed::fault::{
+    FabricError, FabricErrorKind, FabricPhase, LossPolicy, NoRecovery,
+};
 use crate::coordinator::sampling::{
     apply_overlap_timeline, run_rank_chunk_stages, ChunkGrow, ChunkPlan, DistState, GrowStats,
 };
@@ -157,12 +160,29 @@ fn run_sender<'s, 'a, 'b>(
 /// Executes one full streaming round over the current `state`.
 /// Preconditions: `state` holds shuffled covering sets for the sender pool;
 /// transport clocks are positioned after S2.
+///
+/// Panicking facade over [`streaming_round_checked`] for callers
+/// predating the fault-tolerant process fabric (the in-memory engines
+/// have no recoverable failure modes, so the panic is unreachable there).
 pub fn streaming_round<'a, 'b>(
     t: &mut dyn Transport,
     state: &DistState,
     cfg: &Config,
-    mut scorer: Option<&'a mut (dyn GainScorer + 'b)>,
+    scorer: Option<&'a mut (dyn GainScorer + 'b)>,
 ) -> StreamRound {
+    streaming_round_checked(t, state, cfg, scorer).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible streaming round: on the process transport a rank loss,
+/// deadline expiry, or corrupt frame surfaces here as a typed error with
+/// per-rank diagnostics (or, under `--on-rank-loss redistribute`, the
+/// round completes over the surviving senders).
+pub fn streaming_round_checked<'a, 'b>(
+    t: &mut dyn Transport,
+    state: &DistState,
+    cfg: &Config,
+    mut scorer: Option<&'a mut (dyn GainScorer + 'b)>,
+) -> crate::error::Result<StreamRound> {
     let m = t.m();
     let k = cfg.k;
     let ship_limit = cfg.trunc_limit();
@@ -174,7 +194,7 @@ pub fn streaming_round<'a, 'b>(
         let (trace, secs) =
             t.run_compute(0, || run_sender(0, system, k, ship_limit, cfg.local_solver, None));
         let end = t.now(0);
-        return StreamRound {
+        return Ok(StreamRound {
             solution: trace.solution,
             select_local_time: secs,
             select_global_time: 0.0,
@@ -185,7 +205,7 @@ pub fn streaming_round<'a, 'b>(
             receiver: ReceiverBreakdown::default(),
             sender_end_max: end,
             receiver_end: end,
-        };
+        });
     }
 
     // The rank-parallel engine runs sender threads against the live
@@ -196,7 +216,7 @@ pub fn streaming_round<'a, 'b>(
     // a direct call lands here and synchronizes first.)
     if t.kind() == TransportKind::Threads && scorer.is_none() {
         let t0 = t.barrier();
-        return threaded_streaming_round(t, state, cfg, t0);
+        return Ok(threaded_streaming_round(t, state, cfg, t0));
     }
 
     // The multi-process engine: workers hold this phase's covers (the
@@ -353,7 +373,7 @@ pub fn streaming_round<'a, 'b>(
     let receiver_end = recv_clock;
     let select_local_time = traces.iter().map(|t| t.total).fold(0.0, f64::max);
 
-    StreamRound {
+    Ok(StreamRound {
         solution,
         select_local_time,
         select_global_time: receiver_end - t0,
@@ -369,7 +389,7 @@ pub fn streaming_round<'a, 'b>(
         },
         sender_end_max,
         receiver_end,
-    }
+    })
 }
 
 /// What one sender thread reports back after its solve.
@@ -454,12 +474,23 @@ pub(crate) struct MergeOutcome {
 /// threshold floor to the still-live sender ranks after every ordinal
 /// sweep (the cross-process replacement for shared [`FloorBoard`]
 /// atomics).
+///
+/// Failure semantics (PR 6): a fabric error naming a lost rank is handled
+/// per `policy` — under [`LossPolicy::Redistribute`] the dead sender is
+/// dropped from the sweep (it contributes no further runs and no local
+/// solution; a kill at phase entry means it contributed nothing at all,
+/// keeping the surviving stream deterministic), under
+/// [`LossPolicy::Fail`] (and for every non-loss error: deadline expiry,
+/// teardown, undecodable payload) the typed error propagates. Malformed
+/// RUN/tombstone payloads and unknown tags are decode/protocol errors
+/// attributed to the sending rank — never panics.
 pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
     ep0: &mut R,
     m: usize,
     tx_burst: mpsc::Sender<Burst>,
     mut floor_push: Option<F>,
-) -> MergeOutcome {
+    policy: LossPolicy,
+) -> Result<MergeOutcome, FabricError> {
     let mut live: Vec<usize> = (1..m).collect();
     let mut out = MergeOutcome {
         locals: Vec::new(),
@@ -468,16 +499,46 @@ pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
         pruned: 0,
         shipped: 0,
     };
+    let bad = |p: usize, what: String| {
+        FabricError::new(FabricErrorKind::Decode, FabricPhase::Select, Some(p), what)
+    };
     let mut burst = Burst::new();
     while !live.is_empty() {
         burst.clear();
         let mut still = Vec::with_capacity(live.len());
-        for &p in &live {
-            let msg = ep0.recv_from(p);
-            match msg[0] {
+        let mut i = 0;
+        while i < live.len() {
+            let p = live[i];
+            let msg = match ep0.recv_from(p) {
+                Ok(msg) => msg,
+                Err(e) => match e.lost_rank() {
+                    Some(l) if policy == LossPolicy::Redistribute => {
+                        // Drop the dead rank from this and all later
+                        // sweeps. When the loss names a rank other than
+                        // the one being awaited, keep waiting on `p` (its
+                        // own messages still flow through the hub).
+                        still.retain(|&q| q != l);
+                        if l == p {
+                            i += 1;
+                        } else if let Some(pos) = live.iter().position(|&q| q == l) {
+                            live.remove(pos);
+                            if pos < i {
+                                i -= 1;
+                            }
+                        }
+                        continue;
+                    }
+                    _ => return Err(e),
+                },
+            };
+            let Some(&tag) = msg.first() else {
+                return Err(bad(p, "empty S3 message".into()));
+            };
+            match tag {
                 MSG_RUN => {
                     out.stream_bytes += msg.len() as u64;
-                    let run = wire::RunView::parse(&msg[1..]).expect("S3 run payload decodes");
+                    let run = wire::RunView::parse(&msg[1..])
+                        .map_err(|e| bad(p, format!("S3 run payload: {e}")))?;
                     out.stream_raw_bytes += (run.len() as u64 + 2) * 4;
                     out.shipped += 1;
                     burst.push_decoded(&run);
@@ -485,16 +546,18 @@ pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
                 }
                 MSG_PRUNED => {
                     out.stream_bytes += msg.len() as u64;
-                    out.stream_raw_bytes +=
-                        wire::Reader::new(&msg[1..]).varint().expect("tombstone decodes");
+                    out.stream_raw_bytes += wire::Reader::new(&msg[1..])
+                        .varint()
+                        .map_err(|e| bad(p, format!("S3 tombstone: {e}")))?;
                     out.pruned += 1;
                     still.push(p);
                 }
                 MSG_DONE => {
                     out.locals.push((p, decode_done(&msg[1..])));
                 }
-                other => panic!("unknown S3 message tag {other}"),
+                other => return Err(bad(p, format!("unknown S3 message tag {other}"))),
             }
+            i += 1;
         }
         live = still;
         if !burst.is_empty() && tx_burst.send(std::mem::take(&mut burst)).is_err() {
@@ -505,7 +568,7 @@ pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
         }
     }
     drop(tx_burst);
-    out
+    Ok(out)
 }
 
 /// Residue sharding is bit-identical for any modulus (and `best_across`
@@ -559,10 +622,13 @@ fn threaded_streaming_round(
             (out, tr.elapsed().as_secs_f64())
         });
 
-        // Canonical merger (shared with the fused overlapped round).
+        // Canonical merger (shared with the fused overlapped round). The
+        // thread fabric cannot lose a single rank, so the only fabric
+        // error is teardown — kept as a panic, reported at join.
         let merge_handle = scope.spawn(move || {
             let mut ep0 = ep0;
-            run_canonical_merger(&mut ep0, m, tx_burst, None::<fn(&[usize])>)
+            run_canonical_merger(&mut ep0, m, tx_burst, None::<fn(&[usize])>, LossPolicy::Fail)
+                .unwrap_or_else(|e| panic!("{e}"))
         });
 
         // S3: sender threads.
@@ -708,9 +774,12 @@ pub fn overlapped_round_threaded(
             );
             (out, tr.elapsed().as_secs_f64())
         });
+        // Thread ranks cannot be individually lost — fabric errors here
+        // mean teardown after a rank panic, kept as panics at join.
         let merge_handle = scope.spawn(move || {
             let mut ep0 = ep0;
-            run_canonical_merger(&mut ep0, m, tx_burst, None::<fn(&[usize])>)
+            run_canonical_merger(&mut ep0, m, tx_burst, None::<fn(&[usize])>, LossPolicy::Fail)
+                .unwrap_or_else(|e| panic!("{e}"))
         });
 
         // Rank threads: chunked S1/S2 pipeline, then (senders) S3.
@@ -725,7 +794,9 @@ pub fn overlapped_round_threaded(
                     let sender = ep.sender();
                     let grow = run_rank_chunk_stages(
                         sender, &mut ep, &mut *cover, graph, cfg, id_base, owner, m, p, plan_ref,
-                    );
+                        &mut NoRecovery,
+                    )
+                    .unwrap_or_else(|e| panic!("{e}"));
                     // My covers are complete: start S3 immediately — other
                     // ranks' chunks may still be in flight.
                     let mut solve_secs = 0.0;

@@ -22,4 +22,7 @@ pub mod receiver;
 pub mod pipeline;
 
 pub use config::{Algorithm, Config, LocalSolver, RunResult};
-pub use pipeline::{run_infmax, run_infmax_with_scorer, run_opim, OpimResult};
+pub use pipeline::{
+    run_infmax, run_infmax_checked, run_infmax_with_scorer, run_infmax_with_scorer_checked,
+    run_opim, OpimResult,
+};

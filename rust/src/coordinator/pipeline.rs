@@ -4,10 +4,13 @@
 
 use crate::baselines::{diimm::diimm_select, ripples::ripples_select};
 use crate::coordinator::config::{Algorithm, Config, RunResult};
-use crate::coordinator::greediris::{overlapped_round_threaded, streaming_round, StreamRound};
+use crate::coordinator::greediris::{
+    overlapped_round_threaded, streaming_round_checked, StreamRound,
+};
 use crate::coordinator::randgreedi::offline_round;
-use crate::coordinator::sampling::{grow_to, DistState, GrowStats};
+use crate::coordinator::sampling::{grow_to, grow_to_checked, DistState, GrowStats};
 use crate::distributed::{collectives, make_transport, Transport, TransportKind};
+use crate::error::Result;
 use crate::graph::Graph;
 use crate::imm::math::ImmParams;
 use crate::imm::opim::{OpimBound, OpimParams};
@@ -71,10 +74,10 @@ fn select<'a, 'b>(
     graph: &Graph,
     cfg: &Config,
     scorer: Option<&'a mut (dyn GainScorer + 'b)>,
-) -> SelectOutcome {
-    match cfg.algorithm {
+) -> Result<SelectOutcome> {
+    Ok(match cfg.algorithm {
         Algorithm::GreediRis | Algorithm::GreediRisTrunc => {
-            stream_outcome(streaming_round(t, state, cfg, scorer))
+            stream_outcome(streaming_round_checked(t, state, cfg, scorer)?)
         }
         Algorithm::RandGreediOffline => {
             let r = offline_round(t, state, cfg);
@@ -124,7 +127,7 @@ fn select<'a, 'b>(
                 receiver_end: 0.0,
             }
         }
-    }
+    })
 }
 
 /// Dispatches the fully fused overlapped round (S1→S4, no stage barriers)
@@ -137,11 +140,11 @@ fn fused_round(
     cfg: &Config,
     state: &mut DistState,
     target: u64,
-) -> (GrowStats, StreamRound) {
+) -> Result<(GrowStats, StreamRound)> {
     if t.kind() == TransportKind::Process {
         crate::coordinator::process::overlapped_round_process(t, graph, cfg, state, target)
     } else {
-        overlapped_round_threaded(t, graph, cfg, state, target)
+        Ok(overlapped_round_threaded(t, graph, cfg, state, target))
     }
 }
 
@@ -161,11 +164,27 @@ fn owner_pool(cfg: &Config) -> (Vec<usize>, bool) {
 
 /// Runs the full distributed IMM pipeline. See [`run_infmax`] for the
 /// scorer-free entry point.
+///
+/// Panicking facade over [`run_infmax_with_scorer_checked`] — the
+/// in-memory engines have no recoverable failure modes, so callers that
+/// never configure `--transport process` keep their infallible signature.
 pub fn run_infmax_with_scorer<'a, 'b>(
     graph: &Graph,
     cfg: &Config,
-    mut scorer: Option<&'a mut (dyn GainScorer + 'b)>,
+    scorer: Option<&'a mut (dyn GainScorer + 'b)>,
 ) -> RunResult {
+    run_infmax_with_scorer_checked(graph, cfg, scorer).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible pipeline driver: on the process transport a rank loss,
+/// deadline expiry, or corrupt frame surfaces here as a typed error with
+/// per-rank diagnostics attached (under `--on-rank-loss redistribute` a
+/// single lost worker degrades the round instead of failing the run).
+pub fn run_infmax_with_scorer_checked<'a, 'b>(
+    graph: &Graph,
+    cfg: &Config,
+    mut scorer: Option<&'a mut (dyn GainScorer + 'b)>,
+) -> Result<RunResult> {
     let wall0 = Instant::now();
     let mut transport = make_transport(cfg.transport, cfg.m, cfg.net);
     let cluster = transport.as_mut();
@@ -194,17 +213,17 @@ pub fn run_infmax_with_scorer<'a, 'b>(
             rounds += 1;
             let target = driver.theta_hat();
             let (gs, out) = if fused && scorer.is_none() {
-                let (gs, r) = fused_round(cluster, graph, cfg, &mut state, target);
+                let (gs, r) = fused_round(cluster, graph, cfg, &mut state, target)?;
                 (gs, stream_outcome(r))
             } else {
-                let gs = grow_to(cluster, graph, cfg, &mut state, target);
+                let gs = grow_to_checked(cluster, graph, cfg, &mut state, target)?;
                 let out = select(
                     cluster,
                     &state,
                     graph,
                     cfg,
                     scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
-                );
+                )?;
                 (gs, out)
             };
             fold_grow(&mut breakdown, &mut volumes, &gs);
@@ -231,10 +250,10 @@ pub fn run_infmax_with_scorer<'a, 'b>(
         // The fused round has no S2/S3 boundary: sender/receiver spans are
         // measured from the round's start.
         let tb = cluster.makespan();
-        let (gs, r) = fused_round(cluster, graph, cfg, &mut state, theta);
+        let (gs, r) = fused_round(cluster, graph, cfg, &mut state, theta)?;
         (tb, gs, stream_outcome(r))
     } else {
-        let gs = grow_to(cluster, graph, cfg, &mut state, theta);
+        let gs = grow_to_checked(cluster, graph, cfg, &mut state, theta)?;
         let tb = cluster.makespan();
         let out = select(
             cluster,
@@ -242,7 +261,7 @@ pub fn run_infmax_with_scorer<'a, 'b>(
             graph,
             cfg,
             scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
-        );
+        )?;
         (tb, gs, out)
     };
     fold_grow(&mut breakdown, &mut volumes, &gs);
@@ -256,9 +275,12 @@ pub fn run_infmax_with_scorer<'a, 'b>(
     collectives::broadcast_cost(cluster, 0, (cfg.k as u64 + 1) * 4);
     volumes.broadcast_bytes += (cfg.k as u64 + 1) * 4;
     breakdown.coordination = (cluster.makespan() - breakdown.total()).max(0.0);
+    // Fabric robustness counters (process transport only; all-zero — and
+    // unprinted — elsewhere).
+    breakdown.fabric = cluster.fault_stats();
 
     let _ = lower_bound;
-    RunResult {
+    Ok(RunResult {
         seeds: out.solution.seeds.clone(),
         coverage: out.solution.coverage,
         theta,
@@ -271,13 +293,20 @@ pub fn run_infmax_with_scorer<'a, 'b>(
         receiver_time: (out.receiver_end - t_before_final).max(0.0),
         wall_time: wall0.elapsed().as_secs_f64(),
         worst_case_ratio: cfg.worst_case_ratio(),
-    }
+    })
 }
 
 /// Runs the full distributed IMM pipeline with the configured local solver
 /// (CPU backends only; use [`run_infmax_with_scorer`] to plug the XLA one).
 pub fn run_infmax(graph: &Graph, cfg: &Config) -> RunResult {
     run_infmax_with_scorer(graph, cfg, None)
+}
+
+/// Fallible variant of [`run_infmax`] — the CLI entry point: fabric
+/// failures come back as typed messages (rank, phase, cause, per-rank
+/// diagnostics) instead of panics.
+pub fn run_infmax_checked(graph: &Graph, cfg: &Config) -> Result<RunResult> {
+    run_infmax_with_scorer_checked(graph, cfg, None)
 }
 
 /// Result of an OPIM-C run (per-round bounds included).
@@ -328,7 +357,9 @@ pub fn run_opim(
         grow_to(cluster, graph, cfg, &mut r1, theta);
         grow_to(cluster, graph, cfg, &mut r2, theta);
         let t0 = cluster.makespan();
-        let out = select(cluster, &r1, graph, cfg, None);
+        // OPIM stays on the panicking facade (it never configures the
+        // process transport's loss policies in practice).
+        let out = select(cluster, &r1, graph, cfg, None).unwrap_or_else(|e| panic!("{e}"));
         seed_select_time += cluster.makespan() - t0;
         // Validate on R2: coverage of the chosen seeds over the R2 samples.
         let batches: Vec<_> = r2.local_batches.iter().flatten().collect();

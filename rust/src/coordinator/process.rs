@@ -55,6 +55,34 @@
 //! leaving the process — and why the reduction baselines, which read
 //! covers out of the parent state, fall back to the sequential engine
 //! under `--transport process` (their seeds are engine-invariant).
+//!
+//! ## Failure semantics (PR 6)
+//!
+//! Every wait in this module is bounded by the fabric deadline
+//! (`--fabric-timeout` / `GREEDIRIS_FABRIC_TIMEOUT_MS`), and every
+//! failure is a typed [`FabricError`] carrying rank + phase + cause —
+//! the round drivers never panic on a lost or misbehaving worker.
+//! When the hub declares a rank lost (EOF, corrupt stream, heartbeat
+//! silence, child exit), the behaviour is governed by `--on-rank-loss`:
+//!
+//! - **fail** (default): the round aborts cleanly with a per-rank
+//!   diagnostic ([`ProcessCluster::diagnose`]) attached to the error.
+//! - **redistribute**: the supervisor *adopts* the lost rank's remaining
+//!   S1 work — chunks are a pure function of the global sample ids, so
+//!   [`ChunkAdopter`]/[`PhasedAdopter`] regenerate them at rank 0 and
+//!   inject exactly the suffix the hub's relay ledger says never crossed
+//!   (per destination), while the lost rank's S3 stream is dropped from
+//!   the canonical merge. The surviving ranks complete the round and the
+//!   resulting seed set is a pure function of (config, seed, loss
+//!   point) — rerunning with the same injected fault reproduces it
+//!   bit-identically.
+//!
+//! The no-fault path is untouched: seeds, θ schedule, and raw-byte
+//! counters stay bit-identical across `sim | threads | process`.
+//! Deterministic fault injection for tests/CI rides in
+//! `GREEDIRIS_FAULT=<rank>:<phase>:<kind>[:<ms>]` (phases
+//! `hello|round|select`, kinds `kill|hang|corrupt|slow`); workers arm
+//! the fault at the matching phase entry (see [`fire_fault`]).
 
 use crate::coordinator::config::{Algorithm, Config, LocalSolver};
 use crate::coordinator::greediris::{
@@ -67,9 +95,15 @@ use crate::coordinator::sampling::{
     SamplerOut,
 };
 use crate::diffusion::DiffusionModel;
-use crate::distributed::transport::process::{
-    decode_graph, encode_graph, get_f64, put_f64, worker_binary, WorkerLink, K_S2, K_S3,
+use crate::distributed::fault::{
+    env_fabric_timeout_ms, FabricError, FabricErrorKind, FabricPhase, FabricTimeouts, FaultKind,
+    FaultPhase, FaultSpec, LossPolicy, LossRecovery, NoRecovery,
 };
+use crate::distributed::transport::process::{
+    decode_graph, encode_graph, get_f64, put_f64, worker_binary, FabricOptions, HubFeeder,
+    ProcessCluster, WorkerLink, K_S2, K_S3,
+};
+use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{wire, Transport, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::Graph;
@@ -204,8 +238,12 @@ fn decode_config(bytes: &[u8]) -> Result<Config> {
     c.floor_prune = floor_prune;
     c.overlap = overlap;
     // Workers never dispatch on the transport; pin the field so an
-    // inherited GREEDIRIS_TRANSPORT can't confuse diagnostics.
+    // inherited GREEDIRIS_TRANSPORT can't confuse diagnostics. The fault
+    // spec never rides the config blob either: a worker arms only the
+    // fault addressed to it via its own GREEDIRIS_FAULT env (set
+    // per-child by the spawner), so pin it out of the decoded config.
     c.transport = TransportKind::Sim;
+    c.fault = None;
     Ok(c)
 }
 
@@ -355,6 +393,209 @@ fn enc_stats_select(solve: f64) -> Vec<u8> {
 }
 
 // ---------------------------------------------------------------------------
+// Fault tolerance: fabric options, loss-aware stats collection, adoption.
+// ---------------------------------------------------------------------------
+
+/// The fabric knobs a process round runs under, lifted off the config
+/// (`--fabric-timeout`, `--on-rank-loss`, and the injection harness).
+pub(crate) fn fabric_options(cfg: &Config) -> FabricOptions {
+    FabricOptions {
+        timeouts: FabricTimeouts::from_millis(cfg.fabric_timeout_ms),
+        policy: cfg.on_rank_loss,
+        fault: cfg.fault,
+    }
+}
+
+/// Flattens a fabric failure into the crate error with the cluster's
+/// per-rank post-mortem attached — the diagnostic the CLI prints.
+fn fab_err(pc: &mut ProcessCluster, e: FabricError) -> Error {
+    Error::msg(e.with_diagnostic(pc.diagnose()))
+}
+
+/// Collects one STATS report per surviving worker over the control lane,
+/// opcode-checked. `bodies[r - 1]` is the payload past the opcode byte
+/// for rank `r`, or `None` for a rank that was lost (reported nothing)
+/// under `--on-rank-loss redistribute`; under the fail policy any loss
+/// or deadline aborts with the full diagnostic.
+fn collect_stats(pc: &mut ProcessCluster, expect_op: u8) -> Result<Vec<Option<Vec<u8>>>> {
+    let m = pc.m();
+    let mut bodies: Vec<Option<Vec<u8>>> = (1..m).map(|_| None).collect();
+    let mut reported = vec![false; m];
+    let mut need = m - 1;
+    while need > 0 {
+        match pc.ctrl_recv() {
+            Ok((src, body)) => {
+                if src == 0 || src >= m || reported[src] {
+                    bail!("process fabric: unexpected STATS sender rank {src}");
+                }
+                if body.first().copied() != Some(expect_op) {
+                    bail!(
+                        "process fabric: unexpected ctrl opcode {:?} from rank {src} \
+                         (wanted {expect_op})",
+                        body.first()
+                    );
+                }
+                reported[src] = true;
+                bodies[src - 1] = Some(body[1..].to_vec());
+                need -= 1;
+            }
+            Err(e) => match (pc.policy(), e.lost_rank()) {
+                // A lost rank reports nothing; its measurement is
+                // substituted with zeros by the caller. A rank that
+                // reported *before* dying already counted.
+                (LossPolicy::Redistribute, Some(l)) if l > 0 && l < m => {
+                    if !reported[l] {
+                        reported[l] = true;
+                        need -= 1;
+                    }
+                }
+                _ => return Err(fab_err(pc, e)),
+            },
+        }
+    }
+    Ok(bodies)
+}
+
+/// A lost rank's substitute measurement: zero chunks, zero bytes. Safe to
+/// feed [`apply_overlap_timeline`] — the pipeline model is defensive
+/// against short per-chunk vectors.
+fn empty_chunk_grow() -> ChunkGrow {
+    ChunkGrow {
+        sampler: SamplerOut {
+            batches: Vec::new(),
+            chunk_compute: Vec::new(),
+            chunk_send_bytes: Vec::new(),
+            enc_off_node: 0,
+            raw_off_node: 0,
+        },
+        merge: MergeOut { recv_step_bytes: Vec::new(), flushes: Vec::new() },
+    }
+}
+
+/// Supervisor-side adoption of a lost rank's S1 chunks (the chunked
+/// engines, `--on-rank-loss redistribute`). Chunks are a pure function
+/// of the global sample ids, so rank 0 regenerates the lost rank's batch
+/// chunk by chunk and injects, per destination, exactly the suffix the
+/// hub's relay ledger says never crossed the wire — survivors' merges
+/// (and rank 0's own) complete with byte-identical payloads, in the
+/// per-source FIFO order the merge is invariant to.
+struct ChunkAdopter<'a> {
+    graph: &'a Graph,
+    cfg: &'a Config,
+    plan: &'a ChunkPlan,
+    owner: &'a [u32],
+    id_base: u64,
+    m: usize,
+    policy: LossPolicy,
+    feeder: HubFeeder,
+    adopted: Vec<bool>,
+}
+
+impl<'a> ChunkAdopter<'a> {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        graph: &'a Graph,
+        cfg: &'a Config,
+        plan: &'a ChunkPlan,
+        owner: &'a [u32],
+        id_base: u64,
+        m: usize,
+        policy: LossPolicy,
+        feeder: HubFeeder,
+    ) -> Self {
+        ChunkAdopter { graph, cfg, plan, owner, id_base, m, policy, feeder, adopted: vec![false; m] }
+    }
+}
+
+impl LossRecovery for ChunkAdopter<'_> {
+    fn redistribute(&mut self, rank: usize) -> bool {
+        if self.policy != LossPolicy::Redistribute || rank == 0 || rank >= self.m {
+            return false;
+        }
+        if self.adopted[rank] {
+            // Already injected this round (the loss surfaces once per
+            // inbox); nothing more to regenerate.
+            return true;
+        }
+        self.adopted[rank] = true;
+        // Ledger snapshot first: it counts every frame the hub relayed
+        // for (rank → dst) this round, including frames still queued in
+        // the destination channels — injection starts exactly past them.
+        let done: Vec<u64> = (0..self.m).map(|d| self.feeder.relayed(rank, d)).collect();
+        for (c, &(clo, clen)) in self.plan.lists[rank].iter().enumerate() {
+            let needed: Vec<usize> = (0..self.m)
+                .filter(|&d| d != rank && (c as u64) >= done[d])
+                .collect();
+            if needed.is_empty() {
+                continue;
+            }
+            let batch = batch_parallel(
+                self.graph,
+                self.cfg.model,
+                self.cfg.seed ^ self.id_base,
+                clo,
+                clen,
+                self.cfg.s1_threads,
+            );
+            let streams = invert_batch_to_streams(&batch, self.owner, self.m);
+            for d in needed {
+                let payload = wire::encode_stream(&streams[d], self.cfg.wire_compression);
+                self.feeder.inject_s2(rank, d, payload);
+            }
+        }
+        true
+    }
+}
+
+/// [`ChunkAdopter`]'s phase-stepped sibling: one whole-batch payload per
+/// destination instead of a chunk list.
+struct PhasedAdopter<'a> {
+    graph: &'a Graph,
+    cfg: &'a Config,
+    owner: &'a [u32],
+    id_base: u64,
+    from: u64,
+    to: u64,
+    m: usize,
+    policy: LossPolicy,
+    feeder: HubFeeder,
+    adopted: Vec<bool>,
+}
+
+impl LossRecovery for PhasedAdopter<'_> {
+    fn redistribute(&mut self, rank: usize) -> bool {
+        if self.policy != LossPolicy::Redistribute || rank == 0 || rank >= self.m {
+            return false;
+        }
+        if self.adopted[rank] {
+            return true;
+        }
+        self.adopted[rank] = true;
+        let (lo, len) = rank_ranges(self.m, self.from, self.to)[rank];
+        let batch = if len > 0 {
+            batch_parallel(
+                self.graph,
+                self.cfg.model,
+                self.cfg.seed ^ self.id_base,
+                lo,
+                len,
+                self.cfg.s1_threads,
+            )
+        } else {
+            SampleBatch::empty(lo)
+        };
+        let streams = invert_batch_to_streams(&batch, self.owner, self.m);
+        for d in 0..self.m {
+            if d != rank && self.feeder.relayed(rank, d) == 0 {
+                let payload = wire::encode_stream(&streams[d], self.cfg.wire_compression);
+                self.feeder.inject_s2(rank, d, payload);
+            }
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Supervisor-side round drivers.
 // ---------------------------------------------------------------------------
 
@@ -374,14 +615,15 @@ pub(crate) fn process_growable(t: &mut dyn Transport, cfg: &Config, state: &Dist
 /// moment its own index completes — chunks from slower ranks are still in
 /// flight on the sockets while earlier senders stream seeds. Mirrors
 /// [`crate::coordinator::greediris::overlapped_round_threaded`] result-
-/// and clock-wise.
+/// and clock-wise. Fails typed on a lost rank (or completes without it
+/// under `--on-rank-loss redistribute`) — see the module docs.
 pub fn overlapped_round_process(
     t: &mut dyn Transport,
     graph: &Graph,
     cfg: &Config,
     state: &mut DistState,
     target_theta: u64,
-) -> (GrowStats, StreamRound) {
+) -> Result<(GrowStats, StreamRound)> {
     let m = t.m();
     debug_assert!(m > 1 && t.kind() == TransportKind::Process);
     let k = cfg.k;
@@ -396,16 +638,23 @@ pub fn overlapped_round_process(
     let board = Arc::new(FloorBoard::new(bucket_threads));
 
     let pt = t.as_process().expect("process transport");
-    let pc = pt.ensure_cluster(|| hello_payload(m, cfg, graph));
+    let pc = pt.ensure_cluster(&fabric_options(cfg), || hello_payload(m, cfg, graph))?;
+    pc.begin_round(FabricPhase::Round);
     pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, true, true));
+    let policy = pc.policy();
     let hub_s2 = pc.s2_sender();
-    let mut s3_inbox = pc.take_s3_inbox();
+    let mut s3_inbox = match pc.take_s3_inbox() {
+        Ok(i) => i,
+        Err(e) => return Err(fab_err(pc, e)),
+    };
     let floor_out = pc.floor_pusher();
+    let feeder = pc.feeder();
     let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
     let owner: &[u32] = &state.owner;
     let cover0: &mut InvertedIndex = &mut state.covers[0];
+    let mut adopter = ChunkAdopter::new(graph, cfg, &plan, owner, id_base, m, policy, feeder);
 
-    let (grow0, worker_stats, merge, sols, recv_secs, s3_back) = std::thread::scope(|scope| {
+    let (grow0, stats_res, merge_res, sols, recv_secs, s3_back) = std::thread::scope(|scope| {
         // S4: the live threaded receiver consumes from round start.
         let board_r = Arc::clone(&board);
         let recv_handle = scope.spawn(move || {
@@ -429,12 +678,13 @@ pub fn overlapped_round_process(
                 let (floor, l) = board_m.read();
                 floor_out.push(floor, l, live);
             };
-            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push));
+            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push), policy);
             (out, s3_inbox)
         });
         // Rank 0's chunk pipeline, inline: the sampler stage ships chunks
         // to the workers while this thread merges rank 0's (empty-owner)
-        // inbox in arrival order.
+        // inbox in arrival order. A rank lost mid-merge is adopted (or
+        // surfaced typed) by the ChunkAdopter.
         let grow0 = run_rank_chunk_stages(
             hub_s2,
             pc.s2_inbox(),
@@ -446,28 +696,37 @@ pub fn overlapped_round_process(
             m,
             0,
             &plan,
+            &mut adopter,
         );
         // Worker measurements (each arrives after that worker's S3 DONE).
-        let mut stats: Vec<Option<(ChunkGrow, f64)>> = (1..m).map(|_| None).collect();
-        for _ in 1..m {
-            let (src, body) = pc.ctrl_recv();
-            let mut r = wire::Reader::new(&body);
-            let op = r.byte().expect("stats opcode");
-            assert_eq!(op, OP_STATS_CHUNK, "unexpected ctrl opcode {op} from rank {src}");
-            stats[src - 1] = Some(dec_stats_chunk(&mut r).expect("worker stats decode"));
-        }
-        let (merge, s3_back) = merge_handle.join().expect("merge thread");
+        // Skipped when rank 0's own pipeline failed — the round is
+        // aborting and the merger/receiver unwind on their own deadlines.
+        let stats_res =
+            if grow0.is_ok() { Some(collect_stats(pc, OP_STATS_CHUNK)) } else { None };
+        let (merge_res, s3_back) = merge_handle.join().expect("merge thread");
         let ((sols, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
-        (grow0, stats, merge, sols, recv_secs, s3_back)
+        (grow0, stats_res, merge_res, sols, recv_secs, s3_back)
     });
     pc.put_s3_inbox(s3_back);
+    let grow0 = match grow0 {
+        Ok(g) => g,
+        Err(e) => return Err(fab_err(pc, e)),
+    };
+    let merge = match merge_res {
+        Ok(out) => out,
+        Err(e) => return Err(fab_err(pc, e)),
+    };
+    let worker_stats = stats_res.expect("stats collected when rank 0 grew")?;
 
     // ---- Clocks + grow stats through the shared pipeline model. ----
     let mut grows: Vec<ChunkGrow> = Vec::with_capacity(m);
     let mut solve_secs = vec![0.0f64; m];
     grows.push(grow0);
-    for (i, s) in worker_stats.into_iter().enumerate() {
-        let (g, solve) = s.expect("every worker reported");
+    for (i, body) in worker_stats.into_iter().enumerate() {
+        let (g, solve) = match body {
+            Some(b) => dec_stats_chunk(&mut wire::Reader::new(&b))?,
+            None => (empty_chunk_grow(), 0.0),
+        };
         grows.push(g);
         solve_secs[i + 1] = solve;
     }
@@ -506,7 +765,7 @@ pub fn overlapped_round_process(
         sender_end_max,
         receiver_end,
     };
-    (gstats, round)
+    Ok((gstats, round))
 }
 
 /// The process engine's grow round (no S3): chunked overlapped pipeline
@@ -519,7 +778,7 @@ pub(crate) fn grow_process(
     cfg: &Config,
     state: &mut DistState,
     target_theta: u64,
-) -> GrowStats {
+) -> Result<GrowStats> {
     let m = t.m();
     let mut stats = GrowStats::default();
     let from = state.theta;
@@ -530,12 +789,17 @@ pub(crate) fn grow_process(
         let t0 = t.barrier();
         let plan = ChunkPlan::new(m, from, target_theta, cfg);
         let pt = t.as_process().expect("process transport");
-        let pc = pt.ensure_cluster(|| hello_payload(m, cfg, graph));
+        let pc = pt.ensure_cluster(&fabric_options(cfg), || hello_payload(m, cfg, graph))?;
+        pc.begin_round(FabricPhase::Round);
         pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, true, false));
+        let policy = pc.policy();
         let hub_s2 = pc.s2_sender();
+        let feeder = pc.feeder();
         let owner: &[u32] = &state.owner;
         let cover0: &mut InvertedIndex = &mut state.covers[0];
-        let grow0 = run_rank_chunk_stages(
+        let mut adopter =
+            ChunkAdopter::new(graph, cfg, &plan, owner, id_base, m, policy, feeder);
+        let grow0 = match run_rank_chunk_stages(
             hub_s2,
             pc.s2_inbox(),
             cover0,
@@ -546,33 +810,37 @@ pub(crate) fn grow_process(
             m,
             0,
             &plan,
-        );
-        let mut rest: Vec<Option<ChunkGrow>> = (1..m).map(|_| None).collect();
-        for _ in 1..m {
-            let (src, body) = pc.ctrl_recv();
-            let mut r = wire::Reader::new(&body);
-            let op = r.byte().expect("stats opcode");
-            assert_eq!(op, OP_STATS_CHUNK, "unexpected ctrl opcode {op} from rank {src}");
-            let (g, _solve) = dec_stats_chunk(&mut r).expect("worker stats decode");
-            rest[src - 1] = Some(g);
-        }
+            &mut adopter,
+        ) {
+            Ok(g) => g,
+            Err(e) => return Err(fab_err(pc, e)),
+        };
+        let bodies = collect_stats(pc, OP_STATS_CHUNK)?;
         let mut grows: Vec<ChunkGrow> = Vec::with_capacity(m);
         grows.push(grow0);
-        grows.extend(rest.into_iter().map(|g| g.expect("every worker reported")));
+        for body in bodies {
+            grows.push(match body {
+                Some(b) => dec_stats_chunk(&mut wire::Reader::new(&b))?.0,
+                None => empty_chunk_grow(),
+            });
+        }
         apply_overlap_timeline(t, state, &mut stats, t0, &grows);
         for (p, g) in grows.into_iter().enumerate() {
             state.local_batches[p].extend(g.sampler.batches);
         }
         state.theta = target_theta;
-        return stats;
+        return Ok(stats);
     }
 
     // ---- Phase-stepped engine over processes (same clock discipline as
     // the thread backend's phase-stepped grow). ----
     let pt = t.as_process().expect("process transport");
-    let pc = pt.ensure_cluster(|| hello_payload(m, cfg, graph));
+    let pc = pt.ensure_cluster(&fabric_options(cfg), || hello_payload(m, cfg, graph))?;
+    pc.begin_round(FabricPhase::Round);
     pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, false, false));
+    let policy = pc.policy();
     let hub_s2 = pc.s2_sender();
+    let feeder = pc.feeder();
     // Rank 0's body, inline; the workers run theirs concurrently.
     let owner: &[u32] = &state.owner;
     let (lo, len) = rank_ranges(m, from, target_theta)[0];
@@ -595,26 +863,44 @@ pub(crate) fn grow_process(
     }
     let invert_secs0 = t1.elapsed().as_secs_f64();
     let t2 = Instant::now();
+    let mut adopter = PhasedAdopter {
+        graph,
+        cfg,
+        owner,
+        id_base,
+        from,
+        to: target_theta,
+        m,
+        policy,
+        feeder,
+        adopted: vec![false; m],
+    };
     let mut recv_bytes0 = 0u64;
     let mut inbox: Vec<Vec<u32>> = Vec::with_capacity(m);
     for src in 0..m {
-        let bytes = pc.s2_inbox().recv_from(src);
+        // The inbox surfaces losses of *any* rank while we wait on `src`;
+        // a redistributable loss is adopted in place and the wait resumes.
+        let bytes = loop {
+            match pc.s2_inbox().recv_from(src) {
+                Ok(b) => break b,
+                Err(e) => match e.lost_rank() {
+                    Some(l) if adopter.redistribute(l) => continue,
+                    _ => return Err(fab_err(pc, e)),
+                },
+            }
+        };
         if src != 0 {
             recv_bytes0 += bytes.len() as u64;
         }
-        inbox.push(wire::decode_stream(&bytes).expect("S2 wire payload decodes"));
+        inbox.push(
+            wire::decode_stream(&bytes)
+                .map_err(|e| anyhow!("S2 wire payload from rank {src}: {e}"))?,
+        );
     }
     state.covers[0].merge_streams(&inbox);
     let merge_secs0 = t2.elapsed().as_secs_f64();
 
-    let mut phased: Vec<Option<PhasedStats>> = (1..m).map(|_| None).collect();
-    for _ in 1..m {
-        let (src, body) = pc.ctrl_recv();
-        let mut r = wire::Reader::new(&body);
-        let op = r.byte().expect("stats opcode");
-        assert_eq!(op, OP_STATS_PHASED, "unexpected ctrl opcode {op} from rank {src}");
-        phased[src - 1] = Some(dec_stats_phased(&mut r).expect("worker stats decode"));
-    }
+    let bodies = collect_stats(pc, OP_STATS_PHASED)?;
     let rank0 = PhasedStats {
         s1: s1_secs0,
         invert: invert_secs0,
@@ -624,9 +910,22 @@ pub(crate) fn grow_process(
         enc: enc0,
         raw: raw0,
     };
-    let all: Vec<PhasedStats> = std::iter::once(rank0)
-        .chain(phased.into_iter().map(|s| s.expect("every worker reported")))
-        .collect();
+    let mut all: Vec<PhasedStats> = vec![rank0];
+    for body in bodies {
+        all.push(match body {
+            Some(b) => dec_stats_phased(&mut wire::Reader::new(&b))?,
+            // A lost rank's substitute: zero measured work, zero bytes.
+            None => PhasedStats {
+                s1: 0.0,
+                invert: 0.0,
+                merge: 0.0,
+                send_bytes: 0,
+                recv_bytes: 0,
+                enc: 0,
+                raw: 0,
+            },
+        });
+    }
 
     for (p, o) in all.iter().enumerate() {
         t.charge_compute(p, o.s1 / cfg.node_threads);
@@ -653,7 +952,7 @@ pub(crate) fn grow_process(
     state.theta = target_theta;
     let tb = t.barrier();
     state.ready = vec![tb; m];
-    stats
+    Ok(stats)
 }
 
 /// The process engine's selection round: workers run S3 over their
@@ -665,7 +964,7 @@ pub(crate) fn select_process(
     state: &DistState,
     cfg: &Config,
     t0: f64,
-) -> StreamRound {
+) -> Result<StreamRound> {
     let m = t.m();
     let k = cfg.k;
     let ship_limit = cfg.trunc_limit();
@@ -676,13 +975,18 @@ pub(crate) fn select_process(
     let pt = t.as_process().expect("process transport");
     let pc = pt
         .cluster_mut()
-        .expect("process select requires a preceding process grow round");
+        .ok_or_else(|| anyhow!("process select requires a preceding process grow round"))?;
+    pc.begin_round(FabricPhase::Select);
     pc.ctrl_broadcast(&[OP_SELECT]);
-    let mut s3_inbox = pc.take_s3_inbox();
+    let policy = pc.policy();
+    let mut s3_inbox = match pc.take_s3_inbox() {
+        Ok(i) => i,
+        Err(e) => return Err(fab_err(pc, e)),
+    };
     let floor_out = pc.floor_pusher();
     let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
 
-    let (sols, merge, solves, recv_secs, s3_back) = std::thread::scope(|scope| {
+    let (sols, merge_res, stats_res, recv_secs, s3_back) = std::thread::scope(|scope| {
         let board_r = Arc::clone(&board);
         let threads = bucket_threads + 1;
         let recv_handle = scope.spawn(move || {
@@ -704,22 +1008,25 @@ pub(crate) fn select_process(
                 let (floor, l) = board_m.read();
                 floor_out.push(floor, l, live);
             };
-            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push));
+            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push), policy);
             (out, s3_inbox)
         });
-        let mut solves = vec![0.0f64; m];
-        for _ in 1..m {
-            let (src, body) = pc.ctrl_recv();
-            let mut r = wire::Reader::new(&body);
-            let op = r.byte().expect("stats opcode");
-            assert_eq!(op, OP_STATS_SELECT, "unexpected ctrl opcode {op} from rank {src}");
-            solves[src] = get_f64(&mut r).expect("solve seconds decode");
-        }
-        let (merge, s3_back) = merge_handle.join().expect("merge thread");
+        let stats_res = collect_stats(pc, OP_STATS_SELECT);
+        let (merge_res, s3_back) = merge_handle.join().expect("merge thread");
         let ((sols, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
-        (sols, merge, solves, recv_secs, s3_back)
+        (sols, merge_res, stats_res, recv_secs, s3_back)
     });
     pc.put_s3_inbox(s3_back);
+    let merge = match merge_res {
+        Ok(out) => out,
+        Err(e) => return Err(fab_err(pc, e)),
+    };
+    let mut solves = vec![0.0f64; m];
+    for (i, body) in stats_res?.into_iter().enumerate() {
+        if let Some(b) = body {
+            solves[i + 1] = get_f64(&mut wire::Reader::new(&b)).map_err(derr)?;
+        }
+    }
 
     // ---- Clock parity: charge measured per-rank work into the model. ----
     let mut sender_end_max = t0;
@@ -733,7 +1040,7 @@ pub(crate) fn select_process(
     t.wait_until(0, receiver_end);
     let solution = fuse_solution(sols, merge.locals);
 
-    StreamRound {
+    Ok(StreamRound {
         solution,
         select_local_time,
         select_global_time: receiver_end - t0,
@@ -744,7 +1051,7 @@ pub(crate) fn select_process(
         receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
         sender_end_max,
         receiver_end,
-    }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -773,7 +1080,9 @@ fn run_s3(link: &WorkerLink, cover: &InvertedIndex, cfg: &Config, theta: u64) ->
 }
 
 /// The worker's phase-stepped grow body (the thread backend's `RankGrow`
-/// closure, over the socket fabric). Returns the encoded STATS payload.
+/// closure, over the socket fabric). Returns the encoded STATS payload;
+/// fails typed when the hub vanishes mid-exchange or a peer's payload
+/// does not decode (attributed to the sending rank, not this worker).
 #[allow(clippy::too_many_arguments)]
 fn phase_grow(
     link: &mut WorkerLink,
@@ -786,7 +1095,7 @@ fn phase_grow(
     id_base: u64,
     from: u64,
     to: u64,
-) -> Vec<u8> {
+) -> Result<Vec<u8>, FabricError> {
     let (lo, len) = rank_ranges(m, from, to)[rank];
     let ts = Instant::now();
     let batch = if len > 0 {
@@ -810,21 +1119,58 @@ fn phase_grow(
     let mut recv_bytes = 0u64;
     let mut inbox: Vec<Vec<u32>> = Vec::with_capacity(m);
     for src in 0..m {
-        let bytes = link.data().recv_from(src);
+        // Workers never adopt (the supervisor regenerates lost ranks'
+        // payloads and injects them hub-side); any loss surfacing here
+        // means the hub itself died — propagate and exit.
+        let bytes = link.data().recv_from(src)?;
         if src != rank {
             recv_bytes += bytes.len() as u64;
         }
-        inbox.push(wire::decode_stream(&bytes).expect("S2 wire payload decodes"));
+        inbox.push(wire::decode_stream(&bytes).map_err(|e| {
+            FabricError::new(
+                FabricErrorKind::Decode,
+                FabricPhase::Round,
+                Some(src),
+                format!("S2 wire payload: {e}"),
+            )
+        })?);
     }
     cover.merge_streams(&inbox);
     let merge = t2.elapsed().as_secs_f64();
-    enc_stats_phased(&PhasedStats { s1, invert, merge, send_bytes, recv_bytes, enc, raw })
+    Ok(enc_stats_phased(&PhasedStats { s1, invert, merge, send_bytes, recv_bytes, enc, raw }))
+}
+
+/// Fires an injected fault (`GREEDIRIS_FAULT`) at its phase entry. Kill
+/// and corrupt never return (exit code 17 marks an injected death); hang
+/// parks the process without touching the socket, leaving its fate to
+/// the hub's deadline; slow sleeps `millis` and resumes normally.
+fn fire_fault(spec: FaultSpec, link: Option<&WorkerLink>) {
+    match spec.kind {
+        FaultKind::Kill => std::process::exit(17),
+        FaultKind::Hang => loop {
+            std::thread::sleep(std::time::Duration::from_millis(250));
+        },
+        FaultKind::Slow => std::thread::sleep(std::time::Duration::from_millis(spec.millis)),
+        FaultKind::Corrupt => {
+            if let Some(link) = link {
+                let _ = link.send_corrupt_frame();
+                // Let the bad frame flush before dying.
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            std::process::exit(17);
+        }
+    }
 }
 
 /// The rank-worker main loop: join the fabric, receive HELLO
 /// (config + graph), then serve ROUND/SELECT control messages until the
 /// supervisor shuts the fabric down. Invoked by `main` when
 /// `GREEDIRIS_RANK`/`GREEDIRIS_FABRIC_ADDR` are set.
+///
+/// All waits are bounded (connect retries under capped backoff, receive
+/// deadlines at 3x the hub's — the supervisor always gives up first, so
+/// a worker never outlives its verdict). A hub loss is a typed error;
+/// a clean SHUTDOWN exits 0.
 pub fn run_rank_worker() -> Result<()> {
     let rank: usize = std::env::var("GREEDIRIS_RANK")
         .map_err(|_| anyhow!("GREEDIRIS_RANK not set"))?
@@ -835,7 +1181,27 @@ pub fn run_rank_worker() -> Result<()> {
     if rank == 0 {
         bail!("rank 0 is the supervisor, not a worker");
     }
-    let (mut link, hello) = WorkerLink::connect(&addr, rank)?;
+    let timeouts = FabricTimeouts::from_millis(env_fabric_timeout_ms());
+    // A malformed GREEDIRIS_FAULT is a hard error: a typo'd harness must
+    // never silently run fault-free.
+    let fault = FaultSpec::from_env().map_err(Error::msg)?;
+    let hello_fault = fault.filter(|f| f.hits(rank, FaultPhase::Hello));
+    if let Some(f) = hello_fault {
+        if f.kind != FaultKind::Corrupt {
+            // Kill/hang fire before the fabric ever sees this rank; slow
+            // pushes the connect into the hub's retry/deadline window.
+            fire_fault(f, None);
+        }
+    }
+    let (mut link, hello) = WorkerLink::connect(&addr, rank, timeouts)?;
+    if let Some(f) = hello_fault {
+        if f.kind == FaultKind::Corrupt {
+            // Corrupt needs a connected socket to ship its bad frame on.
+            fire_fault(f, Some(&link));
+        }
+    }
+    let mut round_fault = fault.filter(|f| f.hits(rank, FaultPhase::Round));
+    let mut select_fault = fault.filter(|f| f.hits(rank, FaultPhase::Select));
     let (m, cfg, graph) = decode_hello(&hello)?;
     if rank >= m {
         bail!("rank {rank} out of range for m = {m}");
@@ -852,6 +1218,9 @@ pub fn run_rank_worker() -> Result<()> {
         let mut r = wire::Reader::new(&body);
         match r.byte().map_err(derr)? {
             OP_ROUND => {
+                if let Some(f) = round_fault.take() {
+                    fire_fault(f, Some(&link));
+                }
                 let id_base = r.varint().map_err(derr)?;
                 let from = r.varint().map_err(derr)?;
                 let to = r.varint().map_err(derr)?;
@@ -870,7 +1239,10 @@ pub fn run_rank_worker() -> Result<()> {
                 let stats = if overlap {
                     let plan = ChunkPlan::new(m, from, to, &cfg);
                     let sender = link.sender(K_S2);
-                    let grow = run_rank_chunk_stages(
+                    // Workers never adopt lost peers' quotas (only the
+                    // supervisor regenerates and injects hub-side); a loss
+                    // surfacing here means the hub itself died.
+                    let grow = match run_rank_chunk_stages(
                         sender,
                         link.data(),
                         &mut cover,
@@ -881,17 +1253,29 @@ pub fn run_rank_worker() -> Result<()> {
                         m,
                         rank,
                         &plan,
-                    );
+                        &mut NoRecovery,
+                    ) {
+                        Ok(g) => g,
+                        Err(e) if e.kind == FabricErrorKind::Shutdown => return Ok(()),
+                        Err(e) => return Err(Error::msg(format!("worker rank {rank}: {e}"))),
+                    };
                     let solve = if fused { run_s3(&link, &cover, &cfg, theta) } else { 0.0 };
                     enc_stats_chunk(&grow, solve)
                 } else {
-                    phase_grow(
+                    match phase_grow(
                         &mut link, &mut cover, &graph, &cfg, &owner, m, rank, id_base, from, to,
-                    )
+                    ) {
+                        Ok(b) => b,
+                        Err(e) if e.kind == FabricErrorKind::Shutdown => return Ok(()),
+                        Err(e) => return Err(Error::msg(format!("worker rank {rank}: {e}"))),
+                    }
                 };
                 link.ctrl_send(&stats);
             }
             OP_SELECT => {
+                if let Some(f) = select_fault.take() {
+                    fire_fault(f, Some(&link));
+                }
                 let solve = run_s3(&link, &cover, &cfg, theta);
                 link.ctrl_send(&enc_stats_select(solve));
             }

@@ -47,6 +47,7 @@
 //! critical-path spans (so breakdown totals still track the makespan).
 
 use crate::coordinator::config::Config;
+use crate::distributed::fault::{FabricError, LossRecovery, NoRecovery};
 use crate::distributed::transport::threads::Fabric;
 use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{collectives, wire, NetModel, Transport, TransportExt, TransportKind};
@@ -578,20 +579,35 @@ impl<'a> ChunkMerger<'a> {
 /// (per-source FIFO), so no extra wire framing is needed. Fabric-agnostic:
 /// the thread engine feeds it mpsc channels, the process engine framed
 /// sockets.
+///
+/// A fabric error that identifies a lost rank is offered to `recovery`
+/// ([`LossRecovery::redistribute`]); when the recovery adopts the loss
+/// (injecting the dead rank's remaining chunk payloads upstream), the
+/// merge keeps waiting for the now-guaranteed arrivals. Otherwise the
+/// error propagates — the merge never substitutes partial covers.
 pub(crate) fn run_chunk_merge<R: PeerReceiver + ?Sized>(
     ep: &mut R,
     plan: &ChunkPlan,
     p: usize,
     cover: &mut InvertedIndex,
-) -> MergeOut {
+    recovery: &mut dyn LossRecovery,
+) -> Result<MergeOut, FabricError> {
     let counts = plan.counts();
     let steps = plan.steps();
     let expected: usize = counts.iter().sum();
     let mut seen = vec![0usize; counts.len()];
     let mut recv_step_bytes = vec![0u64; steps];
     let mut merger = ChunkMerger::new(cover);
-    for _ in 0..expected {
-        let (src, payload) = ep.recv_any();
+    let mut got = 0usize;
+    while got < expected {
+        let (src, payload) = match ep.recv_any() {
+            Ok(msg) => msg,
+            Err(e) => match e.lost_rank() {
+                Some(l) if recovery.redistribute(l) => continue,
+                _ => return Err(e),
+            },
+        };
+        got += 1;
         let c = seen[src];
         seen[src] += 1;
         let (clo, _) = plan.lists[src][c];
@@ -599,7 +615,7 @@ pub(crate) fn run_chunk_merge<R: PeerReceiver + ?Sized>(
         recv_step_bytes[c] += off;
         merger.push_payload(clo, &payload, c, off);
     }
-    MergeOut { recv_step_bytes, flushes: merger.finish() }
+    Ok(MergeOut { recv_step_bytes, flushes: merger.finish() })
 }
 
 /// One rank's complete two-stage chunk pipeline: spawns the sampler stage
@@ -622,17 +638,21 @@ pub(crate) fn run_rank_chunk_stages<S: PeerSender, R: PeerReceiver + ?Sized>(
     m: usize,
     p: usize,
     plan: &ChunkPlan,
-) -> ChunkGrow {
+    recovery: &mut dyn LossRecovery,
+) -> Result<ChunkGrow, FabricError> {
     let (sampler, merge) = std::thread::scope(|stage| {
         let s1 = stage.spawn(move || {
             run_chunk_sampler(graph, cfg, id_base, owner, m, p, &plan.lists[p], |dst, pl| {
                 sender.send_to(dst, pl)
             })
         });
-        let merge = run_chunk_merge(rx, plan, p, &mut *cover);
+        // The sampler stage never receives, so it cannot wedge on a fabric
+        // failure — always join it (even on a merge error) so the scope
+        // exits cleanly and the error propagates instead of deadlocking.
+        let merge = run_chunk_merge(rx, plan, p, &mut *cover, recovery);
         (s1.join().expect("sampler stage"), merge)
     });
-    ChunkGrow { sampler, merge }
+    Ok(ChunkGrow { sampler, merge: merge? })
 }
 
 /// The modeled clock of one overlapped round.
@@ -899,9 +919,14 @@ fn grow_threaded_overlapped(
             .map(|(p, (mut ep, cover))| {
                 scope.spawn(move || {
                     let sender = ep.sender();
+                    // Thread ranks cannot lose a peer (a dropped endpoint
+                    // means a rank body panicked, reported at join) — the
+                    // only fabric error is teardown, kept as a panic.
                     run_rank_chunk_stages(
                         sender, &mut ep, cover, graph, cfg, id_base, owner, m, p, plan_ref,
+                        &mut NoRecovery,
                     )
+                    .unwrap_or_else(|e| panic!("{e}"))
                 })
             })
             .collect();
@@ -916,6 +941,10 @@ fn grow_threaded_overlapped(
 /// Grows the global sample pool to `target_theta`: distributed generation
 /// (S1) followed by the shuffle of the new samples (S2). Returns the phase
 /// stats; rank clocks inside the transport are advanced as a side effect.
+///
+/// Panicking facade over [`grow_to_checked`] for callers predating the
+/// fault-tolerant process fabric (the in-memory engines have no
+/// recoverable failure modes, so the panic is unreachable there).
 pub fn grow_to(
     t: &mut dyn Transport,
     graph: &Graph,
@@ -923,10 +952,25 @@ pub fn grow_to(
     state: &mut DistState,
     target_theta: u64,
 ) -> GrowStats {
+    grow_to_checked(t, graph, cfg, state, target_theta).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible grow: on the process transport a rank loss, deadline expiry,
+/// or corrupt frame surfaces here as a typed error (with per-rank
+/// diagnostics attached) instead of a panic; under
+/// `--on-rank-loss redistribute` the supervisor adopts the lost rank's
+/// remaining quota and the round still completes.
+pub fn grow_to_checked(
+    t: &mut dyn Transport,
+    graph: &Graph,
+    cfg: &Config,
+    state: &mut DistState,
+    target_theta: u64,
+) -> crate::error::Result<GrowStats> {
     let m = t.m();
     let mut stats = GrowStats::default();
     if target_theta <= state.theta {
-        return stats;
+        return Ok(stats);
     }
     let t_before = t.makespan();
 
@@ -948,7 +992,7 @@ pub fn grow_to(
             grow_sim_overlapped(t, graph, cfg, state, m, from, target_theta, &mut stats);
         }
         state.theta = target_theta;
-        return stats;
+        return Ok(stats);
     }
 
     if t.kind() == TransportKind::Threads && m > 1 {
@@ -984,7 +1028,7 @@ pub fn grow_to(
         state.theta = target_theta;
         let tb = t.barrier();
         state.ready = vec![tb; m];
-        return stats;
+        return Ok(stats);
     }
 
     // ---- Sequential engine under the cost model. ----
@@ -1046,7 +1090,7 @@ pub fn grow_to(
     state.theta = target_theta;
     let tb = t.barrier();
     state.ready = vec![tb; m];
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]

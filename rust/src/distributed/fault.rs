@@ -1,0 +1,553 @@
+//! Fault-tolerance vocabulary for the process fabric (PR 6).
+//!
+//! The socket transport is the only backend where a rank can *actually*
+//! die — a worker process can be killed, hang, or corrupt its stream —
+//! so this module defines the shared language every layer speaks when
+//! that happens:
+//!
+//! - [`FabricError`] — the typed error carried up from the transport
+//!   through the round drivers to the CLI, tagging **which rank**, in
+//!   **which phase**, failed **how**. It implements `std::error::Error`,
+//!   so the crate-wide blanket `From` in [`crate::error`] converts it
+//!   with `?` everywhere.
+//! - [`RankLoss`] — the hub's liveness verdict for one rank (recorded
+//!   once, first cause wins), and [`LossPolicy`] — what the round driver
+//!   does about it: fail the round with a per-rank diagnostic, or
+//!   deterministically redistribute the lost rank's remaining work.
+//! - [`FaultSpec`] — the deterministic fault-injection grammar
+//!   (`GREEDIRIS_FAULT=<rank>:<phase>:<kind>[:<ms>]`) CI uses to prove
+//!   the detection/degradation paths actually fire. Runtime checks, no
+//!   `#[cfg]` walls: the release binary under test is the binary that
+//!   ships.
+//! - [`FabricTimeouts`] + [`backoff_delay`] — the deadline/retry policy:
+//!   every blocking fabric wait has a configurable deadline
+//!   (`--fabric-timeout` / `GREEDIRIS_FABRIC_TIMEOUT_MS`), and workers
+//!   joining the hub retry `connect` under capped exponential backoff
+//!   with deterministic per-rank jitter.
+//!
+//! Failure-semantics contract (see also `scripts/README.md`): a rank is
+//! *lost* when the hub sees its socket EOF, a checksum/parse failure on
+//! its stream, or no traffic (heartbeats included) within the deadline.
+//! Loss during **join** means the worker never entered the round;
+//! during **round** (S1/S2) its unsent sample chunks can be regenerated
+//! at the supervisor (pure function of the global sample ids); during
+//! **select** (S3) its candidate stream is dropped from the canonical
+//! merge. The no-fault path is bit-identical to the pre-fault fabric.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Default deadline for fabric waits (connect, round, recv), in ms.
+pub const DEFAULT_FABRIC_TIMEOUT_MS: u64 = 60_000;
+
+/// Where in the rank lifecycle an error or loss happened.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricPhase {
+    /// Spawning worker processes / binding the hub socket.
+    Launch,
+    /// Worker connect + JOIN/HELLO handshake.
+    Join,
+    /// A grow round: S1 sampling + S2 shuffle (+ fused S3).
+    Round,
+    /// The selection round: S3 streaming + S4 merge.
+    Select,
+    /// Teardown.
+    Shutdown,
+}
+
+impl FabricPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FabricPhase::Launch => "launch",
+            FabricPhase::Join => "join",
+            FabricPhase::Round => "round",
+            FabricPhase::Select => "select",
+            FabricPhase::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl fmt::Display for FabricPhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// How a [`FabricError`] failed (the coarse class drives recovery:
+/// `RankLost` is recoverable under [`LossPolicy::Redistribute`],
+/// `Shutdown` is a clean teardown, everything else aborts the round).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricErrorKind {
+    /// Socket / process-spawn I/O failure.
+    Io,
+    /// Frame or payload failed to decode (checksum, truncation, grammar).
+    Decode,
+    /// A deadline expired with the peer still formally alive.
+    Timeout,
+    /// A rank was declared lost (EOF, corrupt stream, heartbeat silence).
+    RankLost,
+    /// A well-formed message violated the round protocol.
+    Protocol,
+    /// The fabric was torn down underneath a blocked wait.
+    Shutdown,
+}
+
+impl FabricErrorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FabricErrorKind::Io => "io",
+            FabricErrorKind::Decode => "decode",
+            FabricErrorKind::Timeout => "timeout",
+            FabricErrorKind::RankLost => "rank-lost",
+            FabricErrorKind::Protocol => "protocol",
+            FabricErrorKind::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// The typed process-fabric error: rank + phase + cause. Converts into
+/// the crate [`Error`](crate::error::Error) via the blanket
+/// `From<E: std::error::Error>` impl, so round drivers propagate it
+/// with `?` without stringly-typed plumbing in between.
+#[derive(Clone, Debug)]
+pub struct FabricError {
+    /// The rank the failure is attributed to (`None` when the fabric as
+    /// a whole failed, e.g. the hub socket died or a launch error).
+    pub rank: Option<usize>,
+    pub phase: FabricPhase,
+    pub kind: FabricErrorKind,
+    /// Human-readable cause detail (underlying io/decode message).
+    pub detail: String,
+}
+
+impl FabricError {
+    pub fn new(
+        kind: FabricErrorKind,
+        phase: FabricPhase,
+        rank: Option<usize>,
+        detail: impl fmt::Display,
+    ) -> Self {
+        FabricError { rank, phase, kind, detail: detail.to_string() }
+    }
+
+    /// A loss verdict surfaced as an error (recoverable under
+    /// [`LossPolicy::Redistribute`]).
+    pub fn rank_lost(loss: &RankLoss) -> Self {
+        FabricError {
+            rank: Some(loss.rank),
+            phase: loss.phase,
+            kind: FabricErrorKind::RankLost,
+            detail: loss.cause.clone(),
+        }
+    }
+
+    pub fn timeout(phase: FabricPhase, waited: Duration, what: impl fmt::Display) -> Self {
+        FabricError {
+            rank: None,
+            phase,
+            kind: FabricErrorKind::Timeout,
+            detail: format!("{what} after {:.1}s", waited.as_secs_f64()),
+        }
+    }
+
+    /// The lost rank, when this error is a recoverable rank loss.
+    pub fn lost_rank(&self) -> Option<usize> {
+        if self.kind == FabricErrorKind::RankLost {
+            self.rank
+        } else {
+            None
+        }
+    }
+
+    /// Appends a multi-line diagnostic (the per-rank cluster post-mortem)
+    /// to the error text.
+    pub fn with_diagnostic(mut self, diag: impl fmt::Display) -> Self {
+        let d = diag.to_string();
+        if !d.is_empty() {
+            self.detail.push_str("\n");
+            self.detail.push_str(&d);
+        }
+        self
+    }
+}
+
+impl fmt::Display for FabricError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.rank {
+            Some(r) => write!(
+                f,
+                "process fabric: rank {r} {} in phase {}: {}",
+                self.kind.as_str(),
+                self.phase,
+                self.detail
+            ),
+            None => write!(
+                f,
+                "process fabric: {} in phase {}: {}",
+                self.kind.as_str(),
+                self.phase,
+                self.detail
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+/// The hub's liveness verdict for one rank: recorded once by whichever
+/// detector fires first (reader EOF, checksum failure, heartbeat
+/// silence, child exit), then surfaced exactly once per consumer.
+#[derive(Clone, Debug)]
+pub struct RankLoss {
+    pub rank: usize,
+    /// The phase the fabric was in when the loss was recorded.
+    pub phase: FabricPhase,
+    pub cause: String,
+}
+
+impl fmt::Display for RankLoss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank {} lost in phase {}: {}", self.rank, self.phase, self.cause)
+    }
+}
+
+/// What the round drivers do when a rank is lost mid-round
+/// (`--on-rank-loss`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LossPolicy {
+    /// Fail the round cleanly with a full per-rank diagnostic.
+    #[default]
+    Fail,
+    /// Deterministically reassign the lost rank's remaining work and
+    /// complete the round (S1 chunks are regenerated at the supervisor —
+    /// they are a pure function of the global sample ids — and the lost
+    /// rank's S3 stream is dropped from the canonical merge).
+    Redistribute,
+}
+
+impl LossPolicy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LossPolicy::Fail => "fail",
+            LossPolicy::Redistribute => "redistribute",
+        }
+    }
+}
+
+impl std::str::FromStr for LossPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fail" => Ok(LossPolicy::Fail),
+            "redistribute" | "drop" => Ok(LossPolicy::Redistribute),
+            other => Err(format!("unknown rank-loss policy '{other}' (fail | redistribute)")),
+        }
+    }
+}
+
+/// Recovery hook threaded through the S2 merge loops: when a receive
+/// surfaces a lost rank, the merge asks its recovery to make the lost
+/// rank's remaining payloads appear (the supervisor regenerates and
+/// injects them), then retries the receive. Backends without a
+/// supervisor (threads) and worker ranks use [`NoRecovery`].
+pub trait LossRecovery {
+    /// Attempts to replace the lost `rank`'s outstanding payloads.
+    /// Returns `true` when the merge can retry its receive, `false` to
+    /// propagate the loss as an error.
+    fn redistribute(&mut self, rank: usize) -> bool;
+}
+
+/// The null recovery: every loss propagates.
+pub struct NoRecovery;
+
+impl LossRecovery for NoRecovery {
+    fn redistribute(&mut self, _rank: usize) -> bool {
+        false
+    }
+}
+
+/// Which worker-lifecycle point an injected fault arms at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// Before connecting / during the JOIN handshake.
+    Hello,
+    /// On receipt of the first OP_ROUND of the run.
+    Round,
+    /// On receipt of OP_SELECT.
+    Select,
+}
+
+impl FaultPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultPhase::Hello => "hello",
+            FaultPhase::Round => "round",
+            FaultPhase::Select => "select",
+        }
+    }
+}
+
+/// What the armed fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `exit(17)` on the spot (crash).
+    Kill,
+    /// Sleep forever (livelock — caught by the recv deadline, since the
+    /// heartbeat thread keeps the process formally alive).
+    Hang,
+    /// Emit a frame with a deliberately bad checksum, then exit.
+    Corrupt,
+    /// Sleep `millis`, then continue normally (tests that slow ≠ lost
+    /// under a generous deadline).
+    Slow,
+}
+
+impl FaultKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Hang => "hang",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Slow => "slow",
+        }
+    }
+}
+
+/// A deterministic injected fault: `<rank>:<phase>:<kind>[:<ms>]`, e.g.
+/// `GREEDIRIS_FAULT=2:round:kill` or `1:round:slow:250`. Parsed by the
+/// CLI into [`Config::fault`](crate::coordinator::Config) and handed to
+/// spawned workers explicitly via their environment, so concurrent
+/// clusters in one test binary never race on ambient state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub rank: usize,
+    pub phase: FaultPhase,
+    pub kind: FaultKind,
+    /// Delay for `slow` (default 1000 ms); ignored by other kinds.
+    pub millis: u64,
+}
+
+impl FaultSpec {
+    /// Parses the `<rank>:<phase>:<kind>[:<ms>]` grammar.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut it = s.split(':');
+        let rank = it
+            .next()
+            .filter(|t| !t.is_empty())
+            .ok_or_else(|| format!("empty fault spec '{s}'"))?
+            .parse::<usize>()
+            .map_err(|e| format!("fault rank in '{s}': {e}"))?;
+        let phase = match it.next() {
+            Some("hello") => FaultPhase::Hello,
+            Some("round") => FaultPhase::Round,
+            Some("select") => FaultPhase::Select,
+            other => {
+                return Err(format!(
+                    "fault phase '{}' in '{s}' (hello | round | select)",
+                    other.unwrap_or("")
+                ))
+            }
+        };
+        let kind = match it.next() {
+            Some("kill") => FaultKind::Kill,
+            Some("hang") => FaultKind::Hang,
+            Some("corrupt") => FaultKind::Corrupt,
+            Some("slow") => FaultKind::Slow,
+            other => {
+                return Err(format!(
+                    "fault kind '{}' in '{s}' (kill | hang | corrupt | slow)",
+                    other.unwrap_or("")
+                ))
+            }
+        };
+        let millis = match it.next() {
+            Some(ms) => ms.parse::<u64>().map_err(|e| format!("fault ms in '{s}': {e}"))?,
+            None => 1000,
+        };
+        if it.next().is_some() {
+            return Err(format!("trailing fields in fault spec '{s}'"));
+        }
+        Ok(FaultSpec { rank, phase, kind, millis })
+    }
+
+    /// Reads `GREEDIRIS_FAULT`. `Ok(None)` when unset; a malformed value
+    /// is a hard configuration error (never silently ignored — a fault
+    /// gate that thinks it injected a fault but didn't proves nothing).
+    pub fn from_env() -> Result<Option<FaultSpec>, String> {
+        match std::env::var("GREEDIRIS_FAULT") {
+            Ok(v) if v.is_empty() => Ok(None),
+            Ok(v) => FaultSpec::parse(&v).map(Some).map_err(|e| format!("invalid GREEDIRIS_FAULT: {e}")),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// The env-var form (what the supervisor hands to spawned workers).
+    pub fn to_env(self) -> String {
+        format!("{}:{}:{}:{}", self.rank, self.phase.as_str(), self.kind.as_str(), self.millis)
+    }
+
+    /// Whether this fault arms at (`rank`, `phase`).
+    pub fn hits(&self, rank: usize, phase: FaultPhase) -> bool {
+        self.rank == rank && self.phase == phase
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_env())
+    }
+}
+
+/// Deadlines for the fabric's blocking waits. One knob
+/// (`--fabric-timeout` / `GREEDIRIS_FABRIC_TIMEOUT_MS`) drives both: the
+/// connect/join deadline and the per-wait receive deadline. Workers run
+/// their own receive deadline at 3× the hub's, so the supervisor always
+/// detects (and under redistribute, repairs) a loss before any surviving
+/// worker gives up on the stalled stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FabricTimeouts {
+    /// Hub join-window / worker connect-retry deadline.
+    pub connect: Duration,
+    /// Deadline for any single blocking receive at the hub.
+    pub recv: Duration,
+}
+
+impl FabricTimeouts {
+    pub fn from_millis(ms: u64) -> Self {
+        let ms = ms.max(1);
+        FabricTimeouts {
+            connect: Duration::from_millis(ms),
+            recv: Duration::from_millis(ms),
+        }
+    }
+
+    /// The worker-side receive deadline (3× the hub's — see type docs).
+    pub fn worker_recv(&self) -> Duration {
+        self.recv.saturating_mul(3)
+    }
+}
+
+impl Default for FabricTimeouts {
+    fn default() -> Self {
+        FabricTimeouts::from_millis(DEFAULT_FABRIC_TIMEOUT_MS)
+    }
+}
+
+/// Reads `GREEDIRIS_FABRIC_TIMEOUT_MS` (workers inherit it from the
+/// supervisor); falls back to [`DEFAULT_FABRIC_TIMEOUT_MS`]. A
+/// malformed value falls back too — the env var is an internal
+/// supervisor→worker channel, validated at the CLI boundary.
+pub fn env_fabric_timeout_ms() -> u64 {
+    std::env::var("GREEDIRIS_FABRIC_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .unwrap_or(DEFAULT_FABRIC_TIMEOUT_MS)
+}
+
+/// Connect-retry backoff: capped exponential (10 ms · 2^attempt, capped
+/// at 500 ms) plus deterministic per-(rank, attempt) jitter so a pool of
+/// workers restarting together doesn't reconnect in lockstep. Pure —
+/// reproducible run to run.
+pub fn backoff_delay(attempt: u32, rank: usize) -> Duration {
+    let base = 10u64.saturating_mul(1u64 << attempt.min(6));
+    let capped = base.min(500);
+    // Knuth multiplicative hash over (rank, attempt) — spread, not rng.
+    let h = (rank as u64 ^ ((attempt as u64) << 32)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let jitter = h >> 58; // 0..64 ms
+    Duration::from_millis(capped + jitter % (capped / 2 + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_spec_grammar_roundtrips() {
+        let f = FaultSpec::parse("2:round:kill").unwrap();
+        assert_eq!(f.rank, 2);
+        assert_eq!(f.phase, FaultPhase::Round);
+        assert_eq!(f.kind, FaultKind::Kill);
+        assert_eq!(f.millis, 1000, "default delay");
+        let f = FaultSpec::parse("1:select:slow:250").unwrap();
+        assert_eq!(f.kind, FaultKind::Slow);
+        assert_eq!(f.millis, 250);
+        assert_eq!(FaultSpec::parse(&f.to_env()).unwrap(), f, "to_env roundtrips");
+        assert!(f.hits(1, FaultPhase::Select));
+        assert!(!f.hits(1, FaultPhase::Round));
+        assert!(!f.hits(2, FaultPhase::Select));
+    }
+
+    #[test]
+    fn fault_spec_rejects_malformed() {
+        for bad in ["", "x:round:kill", "1:boot:kill", "1:round:melt", "1:round:kill:9:9", "1:round:slow:x"] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn loss_policy_parses() {
+        assert_eq!("fail".parse::<LossPolicy>().unwrap(), LossPolicy::Fail);
+        assert_eq!("redistribute".parse::<LossPolicy>().unwrap(), LossPolicy::Redistribute);
+        let err = "retry".parse::<LossPolicy>().unwrap_err();
+        assert!(err.contains("fail") && err.contains("redistribute"), "{err}");
+    }
+
+    #[test]
+    fn backoff_caps_and_jitters_deterministically() {
+        assert!(backoff_delay(0, 1) < Duration::from_millis(100));
+        for attempt in 0..12 {
+            for rank in 0..8 {
+                let d = backoff_delay(attempt, rank);
+                assert!(d >= Duration::from_millis(10));
+                assert!(d <= Duration::from_millis(500 + 250 + 64), "{d:?}");
+                assert_eq!(d, backoff_delay(attempt, rank), "deterministic");
+            }
+        }
+        // The exponential actually grows before the cap.
+        assert!(backoff_delay(4, 0) > backoff_delay(0, 0));
+    }
+
+    #[test]
+    fn fabric_error_display_carries_rank_phase_cause() {
+        let loss = RankLoss {
+            rank: 3,
+            phase: FabricPhase::Round,
+            cause: "socket closed (EOF)".into(),
+        };
+        let e = FabricError::rank_lost(&loss);
+        let s = format!("{e}");
+        assert!(s.contains("rank 3"), "{s}");
+        assert!(s.contains("round"), "{s}");
+        assert!(s.contains("EOF"), "{s}");
+        assert_eq!(e.lost_rank(), Some(3));
+        let t = FabricError::timeout(FabricPhase::Select, Duration::from_secs(2), "no stats");
+        assert_eq!(t.lost_rank(), None);
+        assert!(format!("{t}").contains("2.0s"));
+        let d = e.with_diagnostic("rank 0: supervisor (ok)");
+        assert!(format!("{d}").contains("supervisor"));
+    }
+
+    #[test]
+    fn fabric_error_converts_to_crate_error() {
+        fn f() -> crate::error::Result<()> {
+            Err(FabricError::new(
+                FabricErrorKind::Protocol,
+                FabricPhase::Round,
+                Some(1),
+                "unexpected opcode",
+            ))?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("rank 1"));
+    }
+
+    #[test]
+    fn timeouts_scale_for_workers() {
+        let t = FabricTimeouts::from_millis(2_000);
+        assert_eq!(t.recv, Duration::from_millis(2_000));
+        assert_eq!(t.worker_recv(), Duration::from_millis(6_000));
+        assert_eq!(FabricTimeouts::default().recv.as_millis() as u64, DEFAULT_FABRIC_TIMEOUT_MS);
+    }
+}

@@ -32,10 +32,12 @@
 pub mod netmodel;
 pub mod cluster;
 pub mod collectives;
+pub mod fault;
 pub mod transport;
 pub mod wire;
 
 pub use cluster::{Cluster, RankClock};
+pub use fault::{FabricError, FabricTimeouts, FaultSpec, LossPolicy};
 pub use netmodel::NetModel;
 pub use transport::{
     make_transport, ProcessTransport, SimTransport, ThreadTransport, Transport, TransportExt,

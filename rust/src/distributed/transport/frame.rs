@@ -92,6 +92,26 @@ pub fn write_frame(w: &mut impl Write, parts: &[&[u8]]) -> io::Result<()> {
     Ok(())
 }
 
+/// Frames `parts` like [`write_frame`] but with a deliberately wrong
+/// checksum — the fault-injection harness's `corrupt` kind
+/// (`GREEDIRIS_FAULT=<rank>:<phase>:corrupt`). The receiving
+/// [`FrameReader`] must reject the frame as [`DecodeError::Corrupt`]; a
+/// hub that forwards it anyway has lost its integrity gate. Runtime
+/// code, no `#[cfg(test)]` wall: the CI fault gate drives the release
+/// binary.
+pub fn write_corrupt_frame(w: &mut impl Write, parts: &[&[u8]]) -> io::Result<()> {
+    let len: usize = parts.iter().map(|p| p.len()).sum();
+    let mut crc = FNV_OFFSET;
+    for p in parts {
+        crc = fnv1a_fold(crc, p);
+    }
+    w.write_all(&header(len, crc ^ 0xA5A5_A5A5))?;
+    for p in parts {
+        w.write_all(p)?;
+    }
+    Ok(())
+}
+
 /// Frames one payload into an owned buffer (header + payload).
 pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
@@ -360,6 +380,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn corrupt_frame_writer_is_rejected_by_the_reader() {
+        let mut wire = Vec::new();
+        write_corrupt_frame(&mut wire, &[b"poison".as_ref(), b"ed".as_ref()]).unwrap();
+        let mut r = FrameReader::new();
+        assert_eq!(r.push(&wire), Err(DecodeError::Corrupt));
+        // Same parts through the honest writer parse fine — the *only*
+        // difference is the checksum.
+        let mut good = Vec::new();
+        write_frame(&mut good, &[b"poison".as_ref(), b"ed".as_ref()]).unwrap();
+        assert_eq!(wire.len(), good.len());
+        let mut r = FrameReader::new();
+        r.push(&good).unwrap();
+        assert_eq!(r.next_frame().unwrap(), b"poisoned");
     }
 
     #[test]

@@ -72,7 +72,9 @@ pub use sim::SimTransport;
 pub use threads::{Fabric, RankEndpoint, ThreadTransport};
 
 use super::cluster::RankClock;
+use super::fault::FabricError;
 use super::netmodel::NetModel;
+use crate::metrics::FaultStats;
 use std::time::Instant;
 
 /// Which execution engine backs a [`Transport`].
@@ -133,16 +135,24 @@ pub trait PeerSender: Send {
 
 /// The receive half: per-source FIFO delivery with arrival-order and
 /// by-source access, independent of the fabric behind it.
+///
+/// Both receives are fallible (PR 6): a hung-up thread fabric, a lost
+/// worker process, or an expired deadline surfaces as a typed
+/// [`FabricError`] instead of a panic deep in a merge loop. A
+/// `RankLost` error is surfaced **once per lost rank per round** and
+/// leaves the receiver usable — callers with a
+/// [`LossRecovery`](crate::distributed::fault::LossRecovery) can repair
+/// and retry the same receive; callers without one propagate.
 pub trait PeerReceiver {
     /// Next payload from any source, in arrival order — except that
     /// strays buffered by an earlier [`PeerReceiver::recv_from`] are
     /// drained first, lowest source rank first (per-source FIFO is always
     /// preserved, which is the only ordering result-bearing consumers
-    /// rely on). Blocks; panics if the fabric hung up mid-receive.
-    fn recv_any(&mut self) -> (usize, Vec<u8>);
-    /// Next payload from `src`, buffering strays. Blocks; panics if the
-    /// fabric hung up mid-receive.
-    fn recv_from(&mut self, src: usize) -> Vec<u8>;
+    /// rely on). Blocks up to the fabric deadline.
+    fn recv_any(&mut self) -> Result<(usize, Vec<u8>), FabricError>;
+    /// Next payload from `src`, buffering strays. Blocks up to the
+    /// fabric deadline.
+    fn recv_from(&mut self, src: usize) -> Result<Vec<u8>, FabricError>;
 }
 
 /// The rank fabric: point-to-point byte streams plus the per-rank clock
@@ -179,6 +189,13 @@ pub trait Transport: Send {
     /// other backend.
     fn as_process(&mut self) -> Option<&mut ProcessTransport> {
         None
+    }
+
+    /// Fault-tolerance counters accumulated by the fabric (connect
+    /// retries, lost ranks, timeouts, corrupt frames, adopted payloads).
+    /// Zero for the in-process backends, which cannot lose a rank.
+    fn fault_stats(&self) -> FaultStats {
+        FaultStats::default()
     }
 }
 

@@ -32,29 +32,71 @@
 //! socket into data / control / floor lanes so algorithm code never races
 //! the wire.
 //!
+//! ## Fault tolerance (PR 6)
+//!
+//! The fabric is the only backend where a rank can actually die, so it
+//! carries the liveness machinery of
+//! [`crate::distributed::fault`]:
+//!
+//! - **Detection.** Each hub reader marks its rank *seen* on every frame
+//!   (workers heartbeat [`K_HB`] frames while idle) and marks it **lost**
+//!   on socket EOF, a checksum/parse failure, or a malformed routed
+//!   frame — first cause wins, recorded in [`FabricHealth`]. Blocked
+//!   receives poll with a deadline ([`FabricTimeouts`]) and sweep for
+//!   heartbeat silence, so the supervisor can never wedge on a dead or
+//!   wedged worker.
+//! - **Surfacing.** [`TaggedInbox`] and [`ProcessCluster::ctrl_recv`]
+//!   surface each loss exactly once per round as a typed
+//!   [`FabricError`] (`RankLost`), leaving the inbox usable — a round
+//!   driver running `--on-rank-loss redistribute` repairs via
+//!   [`HubFeeder`] (regenerate + inject the lost rank's outstanding S2
+//!   payloads, guided by the [`RelayLedger`]'s per-`(src, dst)` relay
+//!   counts) and retries the same receive.
+//! - **Joining.** Workers retry `connect` under capped exponential
+//!   backoff with deterministic jitter
+//!   ([`backoff_delay`](crate::distributed::fault::backoff_delay)) and
+//!   report the retry count in their JOIN frame; the supervisor's join
+//!   window is bounded by the same configurable deadline.
+//! - **Teardown.** `Drop` flags shutdown first (so any blocked receive
+//!   unblocks within one poll tick), queues SHUTDOWN frames, then reaps
+//!   every child — waiting a short grace for a clean exit before
+//!   killing — *before* joining hub threads, because hub readers only
+//!   exit on EOF (which requires the children dead).
+//!
+//! All counters feed [`FaultStats`] and ride the run's
+//! [`Breakdown`](crate::metrics::Breakdown) without touching modeled
+//! time; the no-fault hot path is byte-identical to the pre-fault
+//! fabric, which is what keeps the three-way seed gate pinned.
+//!
 //! ## What lives where
 //!
 //! This module owns the fabric: sockets, frames, routing, process
-//! lifecycle, and the [`PeerSender`]/[`PeerReceiver`] faces. The rank
-//! *algorithm* bodies and the round protocol (HELLO/ROUND/SELECT control
-//! payloads) live in [`crate::coordinator::process`], which drives this
-//! fabric exactly as the thread engine drives
-//! [`super::threads::Fabric`].
+//! lifecycle, liveness, and the [`PeerSender`]/[`PeerReceiver`] faces.
+//! The rank *algorithm* bodies and the round protocol
+//! (HELLO/ROUND/SELECT control payloads) live in
+//! [`crate::coordinator::process`], which drives this fabric exactly as
+//! the thread engine drives [`super::threads::Fabric`].
 
 use super::frame::{self, FrameReader};
 use super::sim::SimTransport;
 use super::{PeerReceiver, PeerSender, Transport, TransportKind};
 use crate::distributed::cluster::RankClock;
+use crate::distributed::fault::{
+    backoff_delay, FabricError, FabricErrorKind, FabricPhase, FabricTimeouts, FaultSpec,
+    LossPolicy, RankLoss,
+};
 use crate::distributed::netmodel::NetModel;
 use crate::distributed::wire::{self, DecodeError};
 use crate::graph::{Csr, Graph};
+use crate::metrics::FaultStats;
 use std::collections::VecDeque;
 use std::io;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -68,14 +110,22 @@ pub const K_S3: u8 = 2;
 pub const K_CTRL: u8 = 3;
 /// Threshold-floor feedback pushed by the supervisor to live senders.
 pub const K_FLOOR: u8 = 4;
-/// Worker identification, first frame on every connection.
+/// Worker identification, first frame on every connection
+/// (`[rank varint][connect-retries varint]`).
 pub const K_JOIN: u8 = 5;
 /// Fabric teardown (sent by the supervisor's `Drop`).
 pub const K_SHUTDOWN: u8 = 6;
+/// Worker liveness beacon (empty body, worker → hub only). Consumed by
+/// the hub reader — it refreshes the rank's last-seen stamp and is never
+/// forwarded or enqueued.
+pub const K_HB: u8 = 7;
 
-/// Seconds the supervisor waits for all workers to connect before giving
-/// up (covers slow cold starts of the re-executed binary).
-const JOIN_TIMEOUT: Duration = Duration::from_secs(60);
+/// Granularity of deadline-aware blocking waits: a blocked receive wakes
+/// this often to check the shutdown flag, surfaced losses, and heartbeat
+/// staleness. Coarse enough to stay off the hot path (a receive only
+/// polls while starved), fine enough that teardown and loss surfacing
+/// feel immediate.
+const POLL: Duration = Duration::from_millis(25);
 
 /// Builds a routed message: `[tag varint][kind u8][body]`. `tag` is the
 /// destination on the worker→hub direction and the source on the
@@ -193,41 +243,353 @@ pub fn decode_graph(bytes: &[u8]) -> Result<Graph, DecodeError> {
 }
 
 // ---------------------------------------------------------------------------
+// Liveness bookkeeping.
+// ---------------------------------------------------------------------------
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // A poisoning panic on another thread must not cascade into the
+    // fabric: the protected state (a TcpStream, a loss table) stays
+    // structurally valid mid-operation, so recover the guard.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Shared liveness state of one fabric: per-rank loss verdicts, last-seen
+/// stamps, the current phase, the shutdown latch, and the fault counters
+/// reported as [`FaultStats`].
+///
+/// One instance lives on the supervisor (written by hub readers and the
+/// deadline sweeps, read by the round drivers) and an independent one on
+/// each worker (where only the shutdown latch and the hub-death verdict
+/// matter — workers never observe individual peer losses, the hub
+/// repairs or fails the round first).
+pub struct FabricHealth {
+    m: usize,
+    losses: Mutex<Vec<Option<RankLoss>>>,
+    /// Milliseconds since `epoch` at the last frame from each rank;
+    /// `u64::MAX` = never seen (join logic owns pre-join liveness).
+    last_seen_ms: Vec<AtomicU64>,
+    epoch: Instant,
+    phase: Mutex<FabricPhase>,
+    shutdown: AtomicBool,
+    pub connect_retries: AtomicU64,
+    pub ranks_lost: AtomicU64,
+    pub timeouts: AtomicU64,
+    pub corrupt_frames: AtomicU64,
+    pub injected_faults: AtomicU64,
+    pub adopted_payloads: AtomicU64,
+}
+
+impl FabricHealth {
+    pub fn new(m: usize) -> Self {
+        FabricHealth {
+            m,
+            losses: Mutex::new(vec![None; m]),
+            last_seen_ms: (0..m).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            epoch: Instant::now(),
+            phase: Mutex::new(FabricPhase::Launch),
+            shutdown: AtomicBool::new(false),
+            connect_retries: AtomicU64::new(0),
+            ranks_lost: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            corrupt_frames: AtomicU64::new(0),
+            injected_faults: AtomicU64::new(0),
+            adopted_payloads: AtomicU64::new(0),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn set_phase(&self, p: FabricPhase) {
+        *lock_unpoisoned(&self.phase) = p;
+    }
+
+    pub fn phase(&self) -> FabricPhase {
+        *lock_unpoisoned(&self.phase)
+    }
+
+    /// Refreshes `rank`'s last-seen stamp (any frame counts, heartbeats
+    /// included).
+    pub fn mark_seen(&self, rank: usize) {
+        let now = self.epoch.elapsed().as_millis() as u64;
+        self.last_seen_ms[rank].store(now, Ordering::Relaxed);
+    }
+
+    /// Records a loss verdict for `rank` — first cause wins, and nothing
+    /// is recorded once teardown began (hub readers EOF-ing during a
+    /// normal shutdown are not losses). Returns whether the verdict was
+    /// newly recorded.
+    pub fn mark_lost(&self, rank: usize, cause: impl std::fmt::Display) -> bool {
+        if self.is_shutdown() {
+            return false;
+        }
+        let mut losses = lock_unpoisoned(&self.losses);
+        if losses[rank].is_some() {
+            return false;
+        }
+        losses[rank] =
+            Some(RankLoss { rank, phase: self.phase(), cause: cause.to_string() });
+        self.ranks_lost.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Worker-side verdict when the hub socket itself dies: every peer is
+    /// unreachable at once.
+    pub fn mark_all_lost(&self, cause: impl std::fmt::Display) {
+        let cause = cause.to_string();
+        for rank in 0..self.m {
+            self.mark_lost(rank, &cause);
+        }
+    }
+
+    pub fn is_lost(&self, rank: usize) -> bool {
+        lock_unpoisoned(&self.losses)[rank].is_some()
+    }
+
+    pub fn loss(&self, rank: usize) -> Option<RankLoss> {
+        lock_unpoisoned(&self.losses)[rank].clone()
+    }
+
+    /// Ranks with a recorded loss verdict, ascending.
+    pub fn lost_ranks(&self) -> Vec<usize> {
+        lock_unpoisoned(&self.losses)
+            .iter()
+            .enumerate()
+            .filter_map(|(r, l)| l.as_ref().map(|_| r))
+            .collect()
+    }
+
+    /// Latches teardown: blocked receives surface `Shutdown` on their
+    /// next poll tick and later loss verdicts are suppressed.
+    pub fn mark_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Declares lost every joined, not-yet-lost rank silent for longer
+    /// than `deadline` (heartbeats keep a live-but-idle worker off this
+    /// path). Called from blocked receives' poll ticks; idempotent and
+    /// safe to race.
+    pub fn scan_stale(&self, deadline: Duration) {
+        if self.is_shutdown() {
+            return;
+        }
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let limit_ms = deadline.as_millis() as u64;
+        for rank in 1..self.m {
+            let seen = self.last_seen_ms[rank].load(Ordering::Relaxed);
+            if seen == u64::MAX {
+                continue;
+            }
+            let silent = now_ms.saturating_sub(seen);
+            if silent > limit_ms
+                && self.mark_lost(
+                    rank,
+                    format!("no traffic (heartbeats included) for {silent}ms"),
+                )
+            {
+                self.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn fault_stats(&self) -> FaultStats {
+        FaultStats {
+            connect_retries: self.connect_retries.load(Ordering::Relaxed),
+            ranks_lost: self.ranks_lost.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            corrupt_frames: self.corrupt_frames.load(Ordering::Relaxed),
+            injected_faults: self.injected_faults.load(Ordering::Relaxed),
+            adopted_payloads: self.adopted_payloads.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-`(src, dst)` counts of K_S2 payloads the hub has relayed this
+/// round (destination 0 included). When a rank is lost mid-round, the
+/// ledger tells the redistribution path exactly which of the lost rank's
+/// chunk payloads already reached each destination — the supervisor
+/// regenerates only the missing tail, so no destination ever sees a
+/// payload twice.
+pub struct RelayLedger {
+    m: usize,
+    counts: Vec<AtomicU64>,
+}
+
+impl RelayLedger {
+    pub fn new(m: usize) -> Self {
+        RelayLedger { m, counts: (0..m * m).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn inc(&self, src: usize, dst: usize) {
+        self.counts[src * self.m + dst].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn relayed(&self, src: usize, dst: usize) -> u64 {
+        self.counts[src * self.m + dst].load(Ordering::Relaxed)
+    }
+
+    /// Forgets the previous round (called from
+    /// [`ProcessCluster::begin_round`]).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fabric faces.
 // ---------------------------------------------------------------------------
 
 /// A per-source-FIFO inbox over a demuxed `(src, payload)` channel — the
 /// socket fabric's twin of [`super::threads::RankEndpoint`]'s receive
-/// half.
+/// half, plus the deadline/liveness discipline of PR 6: a blocked
+/// receive polls, sweeps for heartbeat staleness, surfaces each recorded
+/// rank loss exactly once per round (the `acked` latch, reset by
+/// [`ProcessCluster::begin_round`]), and gives up with a typed timeout
+/// at the fabric deadline. Without an attached [`FabricHealth`] (unit
+/// tests, pre-fault callers) only the deadline applies.
 pub struct TaggedInbox {
     rx: mpsc::Receiver<(usize, Vec<u8>)>,
     pending: Vec<VecDeque<Vec<u8>>>,
+    health: Option<Arc<FabricHealth>>,
+    deadline: Duration,
+    acked: Vec<bool>,
 }
 
 impl TaggedInbox {
     pub fn new(rx: mpsc::Receiver<(usize, Vec<u8>)>, m: usize) -> Self {
-        Self { rx, pending: (0..m).map(|_| VecDeque::new()).collect() }
+        Self {
+            rx,
+            pending: (0..m).map(|_| VecDeque::new()).collect(),
+            health: None,
+            deadline: FabricTimeouts::default().recv,
+            acked: vec![false; m],
+        }
+    }
+
+    /// Attaches liveness state and a receive deadline.
+    pub fn with_health(mut self, health: Arc<FabricHealth>, deadline: Duration) -> Self {
+        self.health = Some(health);
+        self.deadline = deadline;
+        self
+    }
+
+    /// Re-arms once-per-round loss surfacing (a loss already handled last
+    /// round — redistributed or diagnosed — must not fail the next one).
+    pub fn reset_acks(&mut self) {
+        for a in &mut self.acked {
+            *a = false;
+        }
+    }
+
+    fn phase(&self) -> FabricPhase {
+        self.health.as_ref().map(|h| h.phase()).unwrap_or(FabricPhase::Round)
+    }
+
+    /// The next not-yet-surfaced fabric condition: teardown first (a
+    /// shutdown is never a loss), then the lowest-rank unacked loss.
+    /// Acking leaves the inbox usable so a recovery can repair and retry.
+    fn surface_loss(&mut self) -> Option<FabricError> {
+        let health = self.health.as_ref()?;
+        if health.is_shutdown() {
+            return Some(FabricError::new(
+                FabricErrorKind::Shutdown,
+                FabricPhase::Shutdown,
+                None,
+                "fabric torn down with a receive outstanding",
+            ));
+        }
+        for rank in 0..self.acked.len() {
+            if !self.acked[rank] {
+                if let Some(loss) = health.loss(rank) {
+                    self.acked[rank] = true;
+                    return Some(FabricError::rank_lost(&loss));
+                }
+            }
+        }
+        None
+    }
+
+    fn starve_tick(&mut self, waited: &mut Duration, what: &str) -> Option<FabricError> {
+        if let Some(h) = &self.health {
+            h.scan_stale(self.deadline);
+        }
+        *waited += POLL;
+        if *waited >= self.deadline {
+            if let Some(h) = &self.health {
+                h.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some(FabricError::timeout(self.phase(), *waited, what));
+        }
+        None
+    }
+
+    fn hangup(&self) -> FabricError {
+        FabricError::new(
+            FabricErrorKind::Shutdown,
+            self.phase(),
+            None,
+            "process fabric hung up with a receive outstanding",
+        )
     }
 }
 
 impl PeerReceiver for TaggedInbox {
-    fn recv_any(&mut self) -> (usize, Vec<u8>) {
+    fn recv_any(&mut self) -> Result<(usize, Vec<u8>), FabricError> {
         for (src, q) in self.pending.iter_mut().enumerate() {
             if let Some(p) = q.pop_front() {
-                return (src, p);
+                return Ok((src, p));
             }
         }
-        self.rx.recv().expect("process fabric hung up with a receive outstanding")
+        let mut waited = Duration::ZERO;
+        loop {
+            if let Some(e) = self.surface_loss() {
+                return Err(e);
+            }
+            match self.rx.recv_timeout(POLL) {
+                Ok(t) => return Ok(t),
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(e) =
+                        self.starve_tick(&mut waited, "receive starved (no traffic from any rank)")
+                    {
+                        return Err(e);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(self.hangup()),
+            }
+        }
     }
 
-    fn recv_from(&mut self, src: usize) -> Vec<u8> {
+    fn recv_from(&mut self, src: usize) -> Result<Vec<u8>, FabricError> {
+        let mut waited = Duration::ZERO;
         loop {
             if let Some(p) = self.pending[src].pop_front() {
-                return p;
+                return Ok(p);
             }
-            let (s, p) =
-                self.rx.recv().expect("process fabric hung up with a receive outstanding");
-            self.pending[s].push_back(p);
+            if let Some(e) = self.surface_loss() {
+                return Err(e);
+            }
+            match self.rx.recv_timeout(POLL) {
+                Ok((s, p)) => {
+                    self.pending[s].push_back(p);
+                    // A stray is progress: only charge the deadline
+                    // against true silence.
+                    waited = Duration::ZERO;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let what = format!("receive starved waiting on rank {src}");
+                    if let Some(e) = self.starve_tick(&mut waited, &what) {
+                        return Err(e);
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(self.hangup()),
+            }
         }
     }
 }
@@ -289,14 +651,18 @@ impl PeerSender for SocketSender {
         wire::put_varint(&mut hdr, dst as u64);
         hdr.push(self.kind);
         // A write can only fail when the supervisor is gone; the round is
-        // dead either way and the worker will observe hangup on its inbox.
-        let mut s = self.stream.lock().expect("socket writer lock");
+        // dead either way and the worker will observe the loss on its
+        // inbox. A poisoned lock is recovered, not propagated — the frame
+        // boundary is intact (writes hold the lock for the whole frame).
+        let mut s = lock_unpoisoned(&self.stream);
         let _ = frame::write_frame(&mut *s, &[&hdr, &payload]);
     }
 }
 
 /// The supervisor-side (rank 0) send half: self-addressed payloads go to
-/// the local inbox, worker-addressed ones to that worker's outbound queue.
+/// the local inbox, worker-addressed ones to that worker's outbound queue
+/// (a dead rank's queue drops payloads on the floor — see
+/// [`dead_tx`]).
 #[derive(Clone)]
 pub struct HubSender {
     kind: u8,
@@ -328,6 +694,48 @@ impl FloorPusher {
         wire::put_varint(&mut body, l);
         for &p in live {
             let _ = self.out[p - 1].send(routed_msg(0, K_FLOOR, &body));
+        }
+    }
+}
+
+/// A sender whose receiver is already gone: sends succeed-by-discard.
+/// Stands in for the outbound queue of a rank that was lost (or never
+/// joined), so every send path stays infallible without `expect`ing on
+/// liveness.
+fn dead_tx() -> mpsc::Sender<Vec<u8>> {
+    let (tx, _rx) = mpsc::channel();
+    tx
+}
+
+/// The supervisor-side injection face of `--on-rank-loss redistribute`:
+/// lets the round driver stand in for a lost rank by feeding regenerated
+/// S2 payloads into exactly the queues the hub would have relayed them
+/// to. Injections enqueue *behind* everything the hub already relayed
+/// for that `(src, dst)` pair (the driver consults [`HubFeeder::relayed`]
+/// and skips what already arrived), preserving per-pair FIFO.
+pub struct HubFeeder {
+    s2_tx: mpsc::Sender<(usize, Vec<u8>)>,
+    /// Outbound queue of worker rank `p` at index `p - 1` (dead queues
+    /// for lost ranks).
+    out: Vec<mpsc::Sender<Vec<u8>>>,
+    ledger: Arc<RelayLedger>,
+    health: Arc<FabricHealth>,
+}
+
+impl HubFeeder {
+    /// How many K_S2 payloads the hub relayed from `src` to `dst` this
+    /// round.
+    pub fn relayed(&self, src: usize, dst: usize) -> u64 {
+        self.ledger.relayed(src, dst)
+    }
+
+    /// Injects a regenerated payload as if `src` had sent it to `dst`.
+    pub fn inject_s2(&self, src: usize, dst: usize, payload: Vec<u8>) {
+        self.health.adopted_payloads.fetch_add(1, Ordering::Relaxed);
+        if dst == 0 {
+            let _ = self.s2_tx.send((src, payload));
+        } else {
+            let _ = self.out[dst - 1].send(routed_msg(src, K_S2, &payload));
         }
     }
 }
@@ -371,7 +779,9 @@ pub fn worker_binary() -> io::Result<PathBuf> {
 }
 
 /// A worker process's handle on the fabric: one socket to the hub, demuxed
-/// by a reader thread into data (S2), control, and floor lanes.
+/// by a reader thread into data (S2), control, and floor lanes, plus a
+/// heartbeat thread that keeps the hub's last-seen stamp fresh while the
+/// worker computes.
 pub struct WorkerLink {
     rank: usize,
     m: usize,
@@ -380,30 +790,84 @@ pub struct WorkerLink {
     local_tx: mpsc::Sender<(usize, Vec<u8>)>,
     ctrl: mpsc::Receiver<Vec<u8>>,
     floor: Arc<SocketFloor>,
+    health: Arc<FabricHealth>,
+    retries: u64,
     _reader: JoinHandle<()>,
+    _heartbeat: JoinHandle<()>,
 }
 
 impl WorkerLink {
-    /// Connects to the hub at `addr`, identifies as `rank`, and blocks for
-    /// the HELLO control payload (whose first varint is `m` — the rest is
-    /// opaque to this layer). Returns the link plus the full HELLO body.
-    pub fn connect(addr: &str, rank: usize) -> io::Result<(Self, Vec<u8>)> {
-        let stream = TcpStream::connect(addr)?;
+    /// Connects to the hub at `addr` — retrying refused/failed connects
+    /// under capped exponential backoff with deterministic per-rank
+    /// jitter until `timeouts.connect` elapses — identifies as `rank`
+    /// (JOIN carries the retry count so the hub can aggregate it), and
+    /// blocks for the HELLO control payload (whose first varint is `m` —
+    /// the rest is opaque to this layer) under the same deadline.
+    /// Returns the link plus the full HELLO body.
+    pub fn connect(
+        addr: &str,
+        rank: usize,
+        timeouts: FabricTimeouts,
+    ) -> io::Result<(Self, Vec<u8>)> {
+        let started = Instant::now();
+        let mut attempt: u32 = 0;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if started.elapsed() >= timeouts.connect {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!(
+                                "connect to hub at {addr} failed after {attempt} retries \
+                                 ({:.1}s): {e}",
+                                started.elapsed().as_secs_f64()
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(backoff_delay(attempt, rank));
+                    attempt += 1;
+                }
+            }
+        };
+        let retries = attempt as u64;
         stream.set_nodelay(true)?;
-        let mut join = Vec::with_capacity(4);
+        let mut join = Vec::with_capacity(8);
         wire::put_varint(&mut join, rank as u64);
+        wire::put_varint(&mut join, retries);
         {
             let mut w = &stream;
             frame::write_frame(&mut w, &[&routed_msg(0, K_JOIN, &join)])?;
         }
-        // First inbound frame is HELLO; read it synchronously so `m` is
-        // known before the demux reader (and its inbox) exists.
+        // First inbound frame is HELLO; read it synchronously — and under
+        // a read deadline, so a worker whose supervisor died at join
+        // exits instead of leaking — so `m` is known before the demux
+        // reader (and its inbox) exists.
+        stream.set_read_timeout(Some(timeouts.connect))?;
         let mut fr = FrameReader::new();
         let mut read_half = stream.try_clone()?;
         let hello = loop {
-            let msg = fr.read_frame(&mut read_half)?.ok_or_else(|| {
-                io::Error::new(io::ErrorKind::UnexpectedEof, "hub closed before HELLO")
-            })?;
+            let msg = match fr.read_frame(&mut read_half) {
+                Ok(Some(m)) => m,
+                Ok(None) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "hub closed before HELLO",
+                    ))
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "hub sent no HELLO within the connect deadline",
+                    ))
+                }
+                Err(e) => return Err(e),
+            };
             let (_, kind, body) = parse_routed(&msg)
                 .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
             match kind {
@@ -414,29 +878,55 @@ impl WorkerLink {
                 _ => continue,
             }
         };
+        // The demux reader blocks indefinitely between frames: clear the
+        // handshake deadline or it would misread idle gaps as EOF.
+        stream.set_read_timeout(None)?;
         let m = wire::Reader::new(&hello)
             .varint()
             .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
             as usize;
 
+        let health = Arc::new(FabricHealth::new(m));
+        health.set_phase(FabricPhase::Round);
         let (data_tx, data_rx) = mpsc::channel();
         let (ctrl_tx, ctrl_rx) = mpsc::channel();
         let floor = Arc::new(SocketFloor::new());
         let floor_r = Arc::clone(&floor);
         let local_tx = data_tx.clone();
+        let health_r = Arc::clone(&health);
         let reader = std::thread::spawn(move || {
-            worker_reader(read_half, fr, data_tx, ctrl_tx, floor_r)
+            worker_reader(read_half, fr, data_tx, ctrl_tx, floor_r, health_r)
+        });
+        let stream = Arc::new(Mutex::new(stream));
+        // Heartbeat: a quarter of the hub's receive deadline keeps a
+        // compute-bound worker comfortably inside the staleness sweep.
+        let hb_every = (timeouts.recv / 4).clamp(Duration::from_millis(50), Duration::from_secs(5));
+        let hb_stream = Arc::clone(&stream);
+        let hb_health = Arc::clone(&health);
+        let heartbeat = std::thread::spawn(move || loop {
+            std::thread::sleep(hb_every);
+            if hb_health.is_shutdown() {
+                return;
+            }
+            let mut s = lock_unpoisoned(&hb_stream);
+            if frame::write_frame(&mut *s, &[&routed_msg(0, K_HB, &[])]).is_err() {
+                return;
+            }
         });
         Ok((
             Self {
                 rank,
                 m,
-                stream: Arc::new(Mutex::new(stream)),
-                data: TaggedInbox::new(data_rx, m),
+                stream,
+                data: TaggedInbox::new(data_rx, m)
+                    .with_health(Arc::clone(&health), timeouts.worker_recv()),
                 local_tx,
                 ctrl: ctrl_rx,
                 floor,
+                health,
+                retries,
                 _reader: reader,
+                _heartbeat: heartbeat,
             },
             hello,
         ))
@@ -448,6 +938,16 @@ impl WorkerLink {
 
     pub fn m(&self) -> usize {
         self.m
+    }
+
+    /// Connect attempts beyond the first (also reported in JOIN).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// This worker's liveness view (shutdown latch + hub-death verdicts).
+    pub fn health(&self) -> Arc<FabricHealth> {
+        Arc::clone(&self.health)
     }
 
     /// A clone-able send half shipping `kind`-tagged payloads.
@@ -472,8 +972,15 @@ impl WorkerLink {
 
     /// Ships a control payload (STATS) to the supervisor.
     pub fn ctrl_send(&self, body: &[u8]) {
-        let mut s = self.stream.lock().expect("socket writer lock");
+        let mut s = lock_unpoisoned(&self.stream);
         let _ = frame::write_frame(&mut *s, &[&routed_msg(0, K_CTRL, body)]);
+    }
+
+    /// Fault injection (`corrupt`): ships a frame whose checksum is
+    /// deliberately wrong, exercising the hub's corrupt-stream verdict.
+    pub fn send_corrupt_frame(&self) -> io::Result<()> {
+        let mut s = lock_unpoisoned(&self.stream);
+        frame::write_corrupt_frame(&mut *s, &[&routed_msg(0, K_S2, b"injected corruption")])
     }
 
     /// The live threshold-floor cell fed by the hub's K_FLOOR pushes.
@@ -488,13 +995,27 @@ fn worker_reader(
     data_tx: mpsc::Sender<(usize, Vec<u8>)>,
     ctrl_tx: mpsc::Sender<Vec<u8>>,
     floor: Arc<SocketFloor>,
+    health: Arc<FabricHealth>,
 ) {
     loop {
         let msg = match fr.read_frame(&mut stream) {
             Ok(Some(m)) => m,
-            _ => return,
+            Ok(None) => {
+                health.mark_all_lost("hub socket closed (EOF)");
+                return;
+            }
+            Err(e) => {
+                health.mark_all_lost(format!("hub stream failed: {e}"));
+                return;
+            }
         };
-        let Ok((src, kind, body)) = parse_routed(&msg) else { return };
+        let (src, kind, body) = match parse_routed(&msg) {
+            Ok(t) => t,
+            Err(e) => {
+                health.mark_all_lost(format!("malformed frame from hub: {e}"));
+                return;
+            }
+        };
         match kind {
             K_S2 => {
                 if data_tx.send((src, body)).is_err() {
@@ -512,7 +1033,12 @@ fn worker_reader(
                     floor.store(f, l);
                 }
             }
-            K_SHUTDOWN => return,
+            K_SHUTDOWN => {
+                // A clean teardown, not a loss: latch it so blocked
+                // receives and the heartbeat thread wind down.
+                health.mark_shutdown();
+                return;
+            }
             _ => {}
         }
     }
@@ -522,16 +1048,42 @@ fn worker_reader(
 // Supervisor: the hub + worker pool.
 // ---------------------------------------------------------------------------
 
+/// Knobs the round drivers hand the fabric at spawn time (built from the
+/// run [`Config`](crate::coordinator::Config)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FabricOptions {
+    pub timeouts: FabricTimeouts,
+    pub policy: LossPolicy,
+    /// Deterministic fault to arm in the workers' environment
+    /// (`GREEDIRIS_FAULT` is set/removed *explicitly* per child, so
+    /// concurrent clusters in one test binary never race on ambient
+    /// state).
+    pub fault: Option<FaultSpec>,
+}
+
 struct WorkerHandle {
     child: Child,
+    /// `None` once shutdown was queued, or for a rank that never joined.
     out_tx: Option<mpsc::Sender<Vec<u8>>>,
     writer: Option<JoinHandle<()>>,
     reader: Option<JoinHandle<()>>,
 }
 
+/// The lanes one hub reader demuxes into (cloned per reader thread).
+#[derive(Clone)]
+struct HubLanes {
+    s2: mpsc::Sender<(usize, Vec<u8>)>,
+    s3: mpsc::Sender<(usize, Vec<u8>)>,
+    ctrl: mpsc::Sender<(usize, Vec<u8>)>,
+    /// `forwards[dst]` for dst in 0..m (0 and lost ranks: `None`).
+    forwards: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    health: Arc<FabricHealth>,
+    ledger: Arc<RelayLedger>,
+}
+
 /// The supervisor's view of a running worker pool (hub + children).
 /// Spawned lazily by the first round that crosses the process boundary;
-/// torn down (SHUTDOWN + reap) on drop.
+/// torn down (SHUTDOWN + grace + reap) on drop.
 pub struct ProcessCluster {
     m: usize,
     workers: Vec<WorkerHandle>,
@@ -539,6 +1091,11 @@ pub struct ProcessCluster {
     s2_rx: TaggedInbox,
     s3_rx: Option<TaggedInbox>,
     ctrl_rx: mpsc::Receiver<(usize, Vec<u8>)>,
+    ctrl_acked: Vec<bool>,
+    health: Arc<FabricHealth>,
+    ledger: Arc<RelayLedger>,
+    timeouts: FabricTimeouts,
+    policy: LossPolicy,
 }
 
 impl ProcessCluster {
@@ -546,12 +1103,33 @@ impl ProcessCluster {
         self.m
     }
 
+    pub fn policy(&self) -> LossPolicy {
+        self.policy
+    }
+
+    pub fn timeouts(&self) -> FabricTimeouts {
+        self.timeouts
+    }
+
+    /// The fabric's shared liveness state.
+    pub fn health(&self) -> Arc<FabricHealth> {
+        Arc::clone(&self.health)
+    }
+
+    pub fn fault_stats(&self) -> FaultStats {
+        self.health.fault_stats()
+    }
+
+    fn out_or_dead(&self, i: usize) -> mpsc::Sender<Vec<u8>> {
+        self.workers[i].out_tx.clone().unwrap_or_else(dead_tx)
+    }
+
     /// Rank 0's S2 send half.
     pub fn s2_sender(&self) -> HubSender {
         HubSender {
             kind: K_S2,
             local: self.s2_tx.clone(),
-            out: self.workers.iter().map(|w| w.out_tx.clone().expect("live")).collect(),
+            out: (0..self.m - 1).map(|i| self.out_or_dead(i)).collect(),
         }
     }
 
@@ -561,9 +1139,17 @@ impl ProcessCluster {
     }
 
     /// Detaches the S3 inbox for the merger thread ([`Self::put_s3_inbox`]
-    /// returns it).
-    pub fn take_s3_inbox(&mut self) -> TaggedInbox {
-        self.s3_rx.take().expect("S3 inbox already taken")
+    /// returns it). Taking it twice is a driver protocol bug, surfaced as
+    /// a typed error rather than a panic.
+    pub fn take_s3_inbox(&mut self) -> Result<TaggedInbox, FabricError> {
+        self.s3_rx.take().ok_or_else(|| {
+            FabricError::new(
+                FabricErrorKind::Protocol,
+                self.health.phase(),
+                None,
+                "S3 inbox already taken",
+            )
+        })
     }
 
     pub fn put_s3_inbox(&mut self, inbox: TaggedInbox) {
@@ -572,15 +1158,25 @@ impl ProcessCluster {
 
     /// A floor-push handle for the merger thread.
     pub fn floor_pusher(&self) -> FloorPusher {
-        FloorPusher {
-            out: self.workers.iter().map(|w| w.out_tx.clone().expect("live")).collect(),
+        FloorPusher { out: (0..self.m - 1).map(|i| self.out_or_dead(i)).collect() }
+    }
+
+    /// The redistribution injection face (see [`HubFeeder`]).
+    pub fn feeder(&self) -> HubFeeder {
+        HubFeeder {
+            s2_tx: self.s2_tx.clone(),
+            out: (0..self.m - 1).map(|i| self.out_or_dead(i)).collect(),
+            ledger: Arc::clone(&self.ledger),
+            health: Arc::clone(&self.health),
         }
     }
 
-    /// Ships a control payload to worker `dst`.
+    /// Ships a control payload to worker `dst` (dropped if `dst` never
+    /// joined or is being torn down).
     pub fn ctrl_send(&self, dst: usize, body: &[u8]) {
-        let tx = self.workers[dst - 1].out_tx.as_ref().expect("live");
-        let _ = tx.send(routed_msg(0, K_CTRL, body));
+        if let Some(tx) = self.workers[dst - 1].out_tx.as_ref() {
+            let _ = tx.send(routed_msg(0, K_CTRL, body));
+        }
     }
 
     /// Broadcasts a control payload to every worker.
@@ -590,25 +1186,134 @@ impl ProcessCluster {
         }
     }
 
-    /// Next `(src rank, payload)` control message from any worker.
-    pub fn ctrl_recv(&mut self) -> (usize, Vec<u8>) {
-        self.ctrl_rx.recv().expect("a rank worker hung up mid-round")
+    /// Arms a new round: stamps the phase, forgets the previous round's
+    /// relay counts, and re-arms once-per-round loss surfacing on every
+    /// inbox (data, S3, control).
+    pub fn begin_round(&mut self, phase: FabricPhase) {
+        self.health.set_phase(phase);
+        self.ledger.reset();
+        self.s2_rx.reset_acks();
+        if let Some(s3) = self.s3_rx.as_mut() {
+            s3.reset_acks();
+        }
+        for a in &mut self.ctrl_acked {
+            *a = false;
+        }
+    }
+
+    /// Next `(src rank, payload)` control message from any worker —
+    /// deadline-bounded and loss-aware, mirroring [`TaggedInbox`]'s
+    /// discipline (each loss surfaces once per round; the channel stays
+    /// usable so the driver can keep collecting from survivors).
+    pub fn ctrl_recv(&mut self) -> Result<(usize, Vec<u8>), FabricError> {
+        let mut waited = Duration::ZERO;
+        loop {
+            if self.health.is_shutdown() {
+                return Err(FabricError::new(
+                    FabricErrorKind::Shutdown,
+                    FabricPhase::Shutdown,
+                    None,
+                    "fabric torn down with a control receive outstanding",
+                ));
+            }
+            for rank in 0..self.m {
+                if !self.ctrl_acked[rank] {
+                    if let Some(loss) = self.health.loss(rank) {
+                        self.ctrl_acked[rank] = true;
+                        return Err(FabricError::rank_lost(&loss));
+                    }
+                }
+            }
+            match self.ctrl_rx.recv_timeout(POLL) {
+                Ok(t) => return Ok(t),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.health.scan_stale(self.timeouts.recv);
+                    waited += POLL;
+                    if waited >= self.timeouts.recv {
+                        self.health.timeouts.fetch_add(1, Ordering::Relaxed);
+                        return Err(FabricError::timeout(
+                            self.health.phase(),
+                            waited,
+                            "control receive starved",
+                        ));
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(FabricError::new(
+                        FabricErrorKind::Shutdown,
+                        self.health.phase(),
+                        None,
+                        "control channel hung up",
+                    ))
+                }
+            }
+        }
+    }
+
+    /// The per-rank post-mortem attached to fail-mode errors: child exit
+    /// status, loss verdict, and the fabric counters.
+    pub fn diagnose(&mut self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "cluster diagnostic (m = {}):", self.m);
+        let _ = writeln!(out, "  rank 0: supervisor (this process)");
+        for i in 0..self.workers.len() {
+            let rank = i + 1;
+            let status = match self.workers[i].child.try_wait() {
+                Ok(Some(st)) => format!("exited ({st})"),
+                Ok(None) => "running".to_string(),
+                Err(e) => format!("status unknown ({e})"),
+            };
+            let verdict = match self.health.loss(rank) {
+                Some(l) => format!("lost in phase {}: {}", l.phase, l.cause),
+                None => "healthy".to_string(),
+            };
+            let _ = writeln!(out, "  rank {rank}: {status}; {verdict}");
+        }
+        let _ = write!(out, "  fabric: {}", self.fault_stats());
+        out
     }
 }
 
 impl Drop for ProcessCluster {
     fn drop(&mut self) {
+        // Latch shutdown first: blocked receives unblock within one poll
+        // tick and late reader EOFs are not recorded as losses.
+        self.health.mark_shutdown();
         for w in &mut self.workers {
             if let Some(tx) = w.out_tx.take() {
                 let _ = tx.send(routed_msg(0, K_SHUTDOWN, &[]));
                 // Dropping the sender lets the writer thread drain and exit.
             }
         }
+        // Reap children — short grace for a clean exit, then kill —
+        // BEFORE joining hub threads: readers hold forward clones of
+        // every writer queue and only exit on socket EOF, which requires
+        // the children dead. Joining writers first would deadlock on a
+        // hung child.
+        for w in &mut self.workers {
+            let grace = Instant::now() + Duration::from_secs(2);
+            loop {
+                match w.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) => {
+                        if Instant::now() >= grace {
+                            let _ = w.child.kill();
+                            let _ = w.child.wait();
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
         for w in &mut self.workers {
             if let Some(h) = w.writer.take() {
                 let _ = h.join();
             }
-            let _ = w.child.wait();
+        }
+        for w in &mut self.workers {
             if let Some(h) = w.reader.take() {
                 let _ = h.join();
             }
@@ -624,155 +1329,348 @@ fn hub_writer(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn hub_reader(
-    src_rank: usize,
-    mut stream: TcpStream,
-    mut fr: FrameReader,
-    s2_tx: mpsc::Sender<(usize, Vec<u8>)>,
-    s3_tx: mpsc::Sender<(usize, Vec<u8>)>,
-    ctrl_tx: mpsc::Sender<(usize, Vec<u8>)>,
-    forwards: Vec<Option<mpsc::Sender<Vec<u8>>>>,
-) {
+fn hub_reader(src_rank: usize, mut stream: TcpStream, mut fr: FrameReader, lanes: HubLanes) {
     loop {
         let msg = match fr.read_frame(&mut stream) {
             Ok(Some(m)) => m,
-            _ => return,
+            Ok(None) => {
+                lanes.health.mark_lost(src_rank, "socket closed (EOF)");
+                return;
+            }
+            Err(e) => {
+                let cause = match e.kind() {
+                    io::ErrorKind::InvalidData => {
+                        lanes.health.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+                        format!("corrupt frame: {e}")
+                    }
+                    io::ErrorKind::UnexpectedEof => format!("stream truncated: {e}"),
+                    _ => format!("socket error: {e}"),
+                };
+                lanes.health.mark_lost(src_rank, cause);
+                return;
+            }
         };
-        let Ok((dst, kind, body)) = parse_routed(&msg) else { return };
+        lanes.health.mark_seen(src_rank);
+        let (dst, kind, body) = match parse_routed(&msg) {
+            Ok(t) => t,
+            Err(e) => {
+                // Satellite 1: a malformed routed frame identifies its
+                // *source* — the hub records the verdict and keeps every
+                // other rank flowing instead of panicking.
+                lanes.health.mark_lost(src_rank, format!("malformed routed frame: {e}"));
+                return;
+            }
+        };
+        if kind == K_HB {
+            continue;
+        }
         if dst == 0 {
             let gone = match kind {
-                K_S2 => s2_tx.send((src_rank, body)).is_err(),
-                K_S3 => s3_tx.send((src_rank, body)).is_err(),
-                K_CTRL => ctrl_tx.send((src_rank, body)).is_err(),
+                K_S2 => {
+                    lanes.ledger.inc(src_rank, 0);
+                    lanes.s2.send((src_rank, body)).is_err()
+                }
+                K_S3 => lanes.s3.send((src_rank, body)).is_err(),
+                K_CTRL => lanes.ctrl.send((src_rank, body)).is_err(),
                 _ => false,
             };
             if gone {
                 return;
             }
-        } else if let Some(Some(tx)) = forwards.get(dst) {
-            // Worker-to-worker traffic: re-tag with the source and relay.
-            if tx.send(routed_msg(src_rank, kind, &body)).is_err() {
-                return;
+        } else if let Some(Some(tx)) = lanes.forwards.get(dst) {
+            if kind == K_S2 {
+                lanes.ledger.inc(src_rank, dst);
             }
+            // Worker-to-worker traffic: re-tag with the source and relay.
+            // A dead destination queue does not make the *source* dead —
+            // drop the payload and keep this reader draining.
+            let _ = tx.send(routed_msg(src_rank, kind, &body));
         }
     }
 }
 
+/// Kills and reaps every spawned child — the cleanup on every early-error
+/// path out of [`spawn_cluster`], so a failed launch never leaks worker
+/// processes.
+fn reap_children(children: &mut [Option<Child>]) {
+    for c in children.iter_mut().flatten() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+fn launch_io(rank: Option<usize>, e: io::Error) -> FabricError {
+    FabricError::new(FabricErrorKind::Io, FabricPhase::Launch, rank, e)
+}
+
+/// Reads and validates one JOIN handshake off a freshly accepted
+/// connection. Per-connection failures are typed `Join` errors the caller
+/// resolves by policy (fail the launch, or drop the connection and keep
+/// waiting).
+fn read_join(
+    stream: TcpStream,
+    join_read_timeout: Duration,
+) -> Result<(usize, u64, TcpStream, FrameReader), FabricError> {
+    let jerr = |kind, e: String| FabricError::new(kind, FabricPhase::Join, None, e);
+    stream
+        .set_nodelay(true)
+        .and_then(|_| stream.set_nonblocking(false))
+        // Bound the JOIN read: a connect-and-stall client must not wedge
+        // the accept loop for the whole join window.
+        .and_then(|_| stream.set_read_timeout(Some(join_read_timeout)))
+        .map_err(|e| jerr(FabricErrorKind::Io, e.to_string()))?;
+    let mut fr = FrameReader::new();
+    let mut read_half =
+        stream.try_clone().map_err(|e| jerr(FabricErrorKind::Io, e.to_string()))?;
+    let msg = match fr.read_frame(&mut read_half) {
+        Ok(Some(m)) => m,
+        Ok(None) => {
+            return Err(jerr(FabricErrorKind::Io, "worker closed before JOIN".into()))
+        }
+        Err(e) => return Err(jerr(FabricErrorKind::Decode, format!("JOIN frame: {e}"))),
+    };
+    stream
+        .set_read_timeout(None)
+        .map_err(|e| jerr(FabricErrorKind::Io, e.to_string()))?;
+    let (_, kind, body) =
+        parse_routed(&msg).map_err(|e| jerr(FabricErrorKind::Decode, e.to_string()))?;
+    if kind != K_JOIN {
+        return Err(jerr(FabricErrorKind::Protocol, format!("expected JOIN, got kind {kind}")));
+    }
+    let mut r = wire::Reader::new(&body);
+    let rank = r
+        .varint()
+        .map_err(|e| jerr(FabricErrorKind::Decode, format!("JOIN rank: {e}")))?
+        as usize;
+    // Retry count is optional on the wire (an orchestrator-launched
+    // worker speaking the pre-PR6 JOIN omits it).
+    let retries = r.varint().unwrap_or(0);
+    Ok((rank, retries, stream, fr))
+}
+
 /// Forks the worker pool and builds the hub. `hello` is the opaque control
 /// payload sent to every worker right after it joins (its first varint
-/// must be `m`; see [`WorkerLink::connect`]).
-fn spawn_cluster(m: usize, hello: &[u8]) -> io::Result<ProcessCluster> {
+/// must be `m`; see [`WorkerLink::connect`]). Join-phase failures resolve
+/// by `opts.policy`: `Fail` reaps everything and returns the typed error;
+/// `Redistribute` records the loss and brings the cluster up around the
+/// hole (bad/duplicate ranks are always hard errors — they mean a foreign
+/// client, not a lost worker).
+fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<ProcessCluster, FabricError> {
     assert!(m > 1, "a process cluster needs at least one worker rank");
-    let listener = TcpListener::bind(("127.0.0.1", 0))?;
-    let addr = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
-    let bin = worker_binary()?;
+    let health = Arc::new(FabricHealth::new(m));
+    if opts.fault.is_some() {
+        // "Armed", not "fired": the worker that fires usually dies before
+        // it could report, so the supervisor counts the arming.
+        health.injected_faults.store(1, Ordering::Relaxed);
+    }
+    let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| launch_io(None, e))?;
+    let addr = listener.local_addr().map_err(|e| launch_io(None, e))?;
+    listener.set_nonblocking(true).map_err(|e| launch_io(None, e))?;
+    let bin = worker_binary().map_err(|e| launch_io(None, e))?;
     let mut children: Vec<Option<Child>> = Vec::with_capacity(m - 1);
     for p in 1..m {
-        let child = Command::new(&bin)
-            .env("GREEDIRIS_RANK", p.to_string())
+        let mut cmd = Command::new(&bin);
+        cmd.env("GREEDIRIS_RANK", p.to_string())
             .env("GREEDIRIS_FABRIC_ADDR", addr.to_string())
-            .stdin(Stdio::null())
-            .spawn()?;
-        children.push(Some(child));
+            .env(
+                "GREEDIRIS_FABRIC_TIMEOUT_MS",
+                (opts.timeouts.recv.as_millis() as u64).to_string(),
+            )
+            .stdin(Stdio::null());
+        // Explicit per-child fault plumbing — never inherit ambient state.
+        match opts.fault {
+            Some(f) => {
+                cmd.env("GREEDIRIS_FAULT", f.to_env());
+            }
+            None => {
+                cmd.env_remove("GREEDIRIS_FAULT");
+            }
+        }
+        match cmd.spawn() {
+            Ok(child) => children.push(Some(child)),
+            Err(e) => {
+                reap_children(&mut children);
+                return Err(launch_io(Some(p), e));
+            }
+        }
     }
 
-    // Accept + identify every worker, with a deadline so a dead child
-    // cannot hang the supervisor.
+    // Accept + identify every worker, under the configurable join window.
+    health.set_phase(FabricPhase::Join);
+    let join_read_timeout = opts.timeouts.connect.min(Duration::from_secs(5));
     let mut joined: Vec<Option<(TcpStream, FrameReader)>> = (1..m).map(|_| None).collect();
-    let deadline = Instant::now() + JOIN_TIMEOUT;
+    let deadline = Instant::now() + opts.timeouts.connect;
     let mut pending = m - 1;
     while pending > 0 {
         match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nodelay(true)?;
-                stream.set_nonblocking(false)?;
-                let mut fr = FrameReader::new();
-                let mut read_half = stream.try_clone()?;
-                let msg = fr.read_frame(&mut read_half)?.ok_or_else(|| {
-                    io::Error::new(io::ErrorKind::UnexpectedEof, "worker closed before JOIN")
-                })?;
-                let (_, kind, body) = parse_routed(&msg)
-                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-                if kind != K_JOIN {
-                    return Err(io::Error::new(
-                        io::ErrorKind::InvalidData,
-                        format!("expected JOIN, got kind {kind}"),
-                    ));
+            Ok((stream, _)) => match read_join(stream, join_read_timeout) {
+                Ok((rank, retries, stream, fr)) => {
+                    if rank == 0 || rank >= m || joined[rank - 1].is_some() || health.is_lost(rank)
+                    {
+                        reap_children(&mut children);
+                        return Err(FabricError::new(
+                            FabricErrorKind::Protocol,
+                            FabricPhase::Join,
+                            Some(rank),
+                            format!("bad or duplicate worker rank {rank}"),
+                        ));
+                    }
+                    health.mark_seen(rank);
+                    health.connect_retries.fetch_add(retries, Ordering::Relaxed);
+                    joined[rank - 1] = Some((stream, fr));
+                    pending -= 1;
                 }
-                let rank = wire::Reader::new(&body)
-                    .varint()
-                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?
-                    as usize;
-                if rank == 0 || rank >= m || joined[rank - 1].is_some() {
-                    return Err(io::Error::new(
-                        io::ErrorKind::InvalidData,
-                        format!("bad or duplicate worker rank {rank}"),
-                    ));
-                }
-                joined[rank - 1] = Some((stream, fr));
-                pending -= 1;
-            }
+                Err(e) => match opts.policy {
+                    LossPolicy::Fail => {
+                        reap_children(&mut children);
+                        return Err(e);
+                    }
+                    // The connection never identified itself; drop it and
+                    // keep waiting — if it was a worker, its child-exit or
+                    // the deadline resolves the rank below.
+                    LossPolicy::Redistribute => {}
+                },
+            },
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 if Instant::now() > deadline {
-                    return Err(io::Error::new(
-                        io::ErrorKind::TimedOut,
-                        "rank workers did not all join in time",
-                    ));
-                }
-                for (i, slot) in children.iter_mut().enumerate() {
-                    if let Some(c) = slot {
-                        if let Ok(Some(status)) = c.try_wait() {
-                            return Err(io::Error::new(
-                                io::ErrorKind::Other,
-                                format!("rank {} worker exited before joining: {status}", i + 1),
+                    match opts.policy {
+                        LossPolicy::Fail => {
+                            reap_children(&mut children);
+                            return Err(FabricError::timeout(
+                                FabricPhase::Join,
+                                opts.timeouts.connect,
+                                format!("{pending} rank worker(s) did not join"),
                             ));
+                        }
+                        LossPolicy::Redistribute => {
+                            for i in 0..m - 1 {
+                                let rank = i + 1;
+                                if joined[i].is_none() && !health.is_lost(rank) {
+                                    health.timeouts.fetch_add(1, Ordering::Relaxed);
+                                    health.mark_lost(
+                                        rank,
+                                        "did not join within the connect deadline",
+                                    );
+                                    if let Some(c) = children[i].as_mut() {
+                                        let _ = c.kill();
+                                        let _ = c.wait();
+                                    }
+                                }
+                            }
+                            break;
+                        }
+                    }
+                }
+                for i in 0..m - 1 {
+                    let rank = i + 1;
+                    if joined[i].is_some() || health.is_lost(rank) {
+                        continue;
+                    }
+                    let Some(c) = children[i].as_mut() else { continue };
+                    if let Ok(Some(status)) = c.try_wait() {
+                        match opts.policy {
+                            LossPolicy::Fail => {
+                                reap_children(&mut children);
+                                return Err(FabricError::new(
+                                    FabricErrorKind::RankLost,
+                                    FabricPhase::Join,
+                                    Some(rank),
+                                    format!("worker exited before joining: {status}"),
+                                ));
+                            }
+                            LossPolicy::Redistribute => {
+                                health
+                                    .mark_lost(rank, format!("exited before joining: {status}"));
+                                pending -= 1;
+                            }
                         }
                     }
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
+            Err(e) => {
+                reap_children(&mut children);
+                return Err(FabricError::new(
+                    FabricErrorKind::Io,
+                    FabricPhase::Join,
+                    None,
+                    e,
+                ));
+            }
         }
     }
 
+    health.set_phase(FabricPhase::Round);
     let (s2_tx, s2_rx) = mpsc::channel();
     let (s3_tx, s3_rx) = mpsc::channel();
     let (ctrl_tx, ctrl_rx) = mpsc::channel();
+    let ledger = Arc::new(RelayLedger::new(m));
+
+    // Every fallible try_clone happens before any thread or handle is
+    // built, so error cleanup stays a plain reap.
+    let mut read_halves: Vec<Option<(TcpStream, FrameReader)>> = Vec::with_capacity(m - 1);
+    let mut write_halves: Vec<Option<TcpStream>> = Vec::with_capacity(m - 1);
+    for slot in joined {
+        match slot {
+            Some((stream, fr)) => {
+                let write_half = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(e) => {
+                        reap_children(&mut children);
+                        return Err(launch_io(None, e));
+                    }
+                };
+                read_halves.push(Some((stream, fr)));
+                write_halves.push(Some(write_half));
+            }
+            None => {
+                read_halves.push(None);
+                write_halves.push(None);
+            }
+        }
+    }
 
     // Writer threads first, so reader threads can forward to any rank.
-    let mut streams: Vec<(TcpStream, FrameReader)> =
-        joined.into_iter().map(|s| s.expect("joined")).collect();
-    let mut out_txs: Vec<mpsc::Sender<Vec<u8>>> = Vec::with_capacity(m - 1);
-    let mut writers: Vec<JoinHandle<()>> = Vec::with_capacity(m - 1);
-    for (stream, _) in &streams {
-        let (tx, rx) = mpsc::channel::<Vec<u8>>();
-        let write_half = stream.try_clone()?;
-        writers.push(std::thread::spawn(move || hub_writer(write_half, rx)));
-        out_txs.push(tx);
+    let mut out_txs: Vec<Option<mpsc::Sender<Vec<u8>>>> = Vec::with_capacity(m - 1);
+    let mut writers: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(m - 1);
+    for half in write_halves {
+        match half {
+            Some(w) => {
+                let (tx, rx) = mpsc::channel::<Vec<u8>>();
+                writers.push(Some(std::thread::spawn(move || hub_writer(w, rx))));
+                out_txs.push(Some(tx));
+            }
+            None => {
+                writers.push(None);
+                out_txs.push(None);
+            }
+        }
     }
-    // forwards[dst] for dst in 0..m (0 unused).
-    let forwards: Vec<Option<mpsc::Sender<Vec<u8>>>> = std::iter::once(None)
-        .chain(out_txs.iter().cloned().map(Some))
-        .collect();
+    // forwards[dst] for dst in 0..m (0 and never-joined ranks: None).
+    let forwards: Vec<Option<mpsc::Sender<Vec<u8>>>> =
+        std::iter::once(None).chain(out_txs.iter().cloned()).collect();
+    let lanes = HubLanes {
+        s2: s2_tx.clone(),
+        s3: s3_tx,
+        ctrl: ctrl_tx,
+        forwards,
+        health: Arc::clone(&health),
+        ledger: Arc::clone(&ledger),
+    };
 
     let mut workers: Vec<WorkerHandle> = Vec::with_capacity(m - 1);
-    for (i, (stream, fr)) in streams.drain(..).enumerate() {
-        let rank = i + 1;
-        let reader = {
-            let s2 = s2_tx.clone();
-            let s3 = s3_tx.clone();
-            let ctrl = ctrl_tx.clone();
-            let fwd = forwards.clone();
-            std::thread::spawn(move || hub_reader(rank, stream, fr, s2, s3, ctrl, fwd))
-        };
+    for (i, link) in read_halves.into_iter().enumerate() {
+        let reader = link.map(|(stream, fr)| {
+            let rank = i + 1;
+            let lanes = lanes.clone();
+            std::thread::spawn(move || hub_reader(rank, stream, fr, lanes))
+        });
         workers.push(WorkerHandle {
             child: children[i].take().expect("spawned"),
-            out_tx: Some(out_txs[i].clone()),
-            writer: Some(writers.remove(0)),
-            reader: Some(reader),
+            out_tx: out_txs[i].clone(),
+            writer: writers[i].take(),
+            reader,
         });
     }
 
@@ -780,9 +1678,16 @@ fn spawn_cluster(m: usize, hello: &[u8]) -> io::Result<ProcessCluster> {
         m,
         workers,
         s2_tx,
-        s2_rx: TaggedInbox::new(s2_rx, m),
-        s3_rx: Some(TaggedInbox::new(s3_rx, m)),
+        s2_rx: TaggedInbox::new(s2_rx, m).with_health(Arc::clone(&health), opts.timeouts.recv),
+        s3_rx: Some(
+            TaggedInbox::new(s3_rx, m).with_health(Arc::clone(&health), opts.timeouts.recv),
+        ),
         ctrl_rx,
+        ctrl_acked: vec![false; m],
+        health,
+        ledger,
+        timeouts: opts.timeouts,
+        policy: opts.policy,
     };
     for p in 1..m {
         cluster.ctrl_send(p, hello);
@@ -811,17 +1716,20 @@ impl ProcessTransport {
 
     /// The running worker pool, spawning it on first use. `hello` builds
     /// the one-time join payload (config + graph blobs; see
-    /// [`crate::coordinator::process`]). Panics on launch failure — a
-    /// mis-deployed worker binary is an environment error, not a runtime
-    /// condition to limp through.
-    pub fn ensure_cluster(&mut self, hello: impl FnOnce() -> Vec<u8>) -> &mut ProcessCluster {
+    /// [`crate::coordinator::process`]). Launch failure is a typed
+    /// [`FabricError`] — a mis-deployed worker binary or a worker lost
+    /// during join propagates to the CLI as a per-rank diagnostic, never
+    /// a panic.
+    pub fn ensure_cluster(
+        &mut self,
+        opts: &FabricOptions,
+        hello: impl FnOnce() -> Vec<u8>,
+    ) -> Result<&mut ProcessCluster, FabricError> {
         if self.cluster.is_none() {
             let payload = hello();
-            let c = spawn_cluster(self.inner.m(), &payload)
-                .unwrap_or_else(|e| panic!("failed to launch --transport process workers: {e}"));
-            self.cluster = Some(c);
+            self.cluster = Some(spawn_cluster(self.inner.m(), &payload, opts)?);
         }
-        self.cluster.as_mut().expect("just ensured")
+        Ok(self.cluster.as_mut().expect("just ensured"))
     }
 
     /// The running pool, if any (`None` before the first process round).
@@ -886,6 +1794,10 @@ impl Transport for ProcessTransport {
     fn as_process(&mut self) -> Option<&mut ProcessTransport> {
         Some(self)
     }
+
+    fn fault_stats(&self) -> FaultStats {
+        self.cluster.as_ref().map(|c| c.fault_stats()).unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -944,10 +1856,117 @@ mod tests {
         tx.send((2, vec![21])).unwrap();
         tx.send((1, vec![11])).unwrap();
         tx.send((1, vec![12])).unwrap();
-        assert_eq!(inbox.recv_from(1), vec![11]);
+        assert_eq!(inbox.recv_from(1).unwrap(), vec![11]);
         // The stray from source 2 was buffered; arrival order preserved.
-        assert_eq!(inbox.recv_any(), (2, vec![21]));
-        assert_eq!(inbox.recv_from(1), vec![12]);
+        assert_eq!(inbox.recv_any().unwrap(), (2, vec![21]));
+        assert_eq!(inbox.recv_from(1).unwrap(), vec![12]);
+    }
+
+    #[test]
+    fn inbox_deadline_surfaces_typed_timeout() {
+        let (tx, rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        let health = Arc::new(FabricHealth::new(2));
+        health.set_phase(FabricPhase::Round);
+        let mut inbox = TaggedInbox::new(rx, 2)
+            .with_health(Arc::clone(&health), Duration::from_millis(60));
+        let e = inbox.recv_any().unwrap_err();
+        assert_eq!(e.kind, FabricErrorKind::Timeout);
+        assert_eq!(e.phase, FabricPhase::Round);
+        assert!(health.fault_stats().timeouts >= 1);
+        // The sender is still alive: data delivered after the timeout is
+        // observed normally on the next receive.
+        tx.send((1, vec![5])).unwrap();
+        assert_eq!(inbox.recv_any().unwrap(), (1, vec![5]));
+    }
+
+    #[test]
+    fn loss_surfaces_once_and_inbox_stays_usable() {
+        let (tx, rx) = mpsc::channel();
+        let health = Arc::new(FabricHealth::new(3));
+        health.set_phase(FabricPhase::Round);
+        let mut inbox =
+            TaggedInbox::new(rx, 3).with_health(Arc::clone(&health), Duration::from_secs(5));
+        assert!(health.mark_lost(1, "socket closed (EOF)"));
+        assert!(!health.mark_lost(1, "second verdict"), "first cause wins");
+        tx.send((2, vec![9])).unwrap();
+        // The loss surfaces exactly once (typed, rank-attributed)…
+        let e = inbox.recv_any().unwrap_err();
+        assert_eq!(e.lost_rank(), Some(1));
+        assert!(e.detail.contains("EOF"), "{}", e.detail);
+        // …then the inbox keeps serving survivors' traffic.
+        assert_eq!(inbox.recv_any().unwrap(), (2, vec![9]));
+        // A new round re-arms the surfacing.
+        inbox.reset_acks();
+        assert_eq!(inbox.recv_any().unwrap_err().lost_rank(), Some(1));
+    }
+
+    #[test]
+    fn shutdown_outranks_losses_and_suppresses_new_ones() {
+        let (_tx, rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        let health = Arc::new(FabricHealth::new(2));
+        health.mark_shutdown();
+        assert!(!health.mark_lost(1, "late EOF"), "teardown EOFs are not losses");
+        assert_eq!(health.fault_stats().ranks_lost, 0);
+        let mut inbox =
+            TaggedInbox::new(rx, 2).with_health(Arc::clone(&health), Duration::from_secs(5));
+        let e = inbox.recv_any().unwrap_err();
+        assert_eq!(e.kind, FabricErrorKind::Shutdown);
+    }
+
+    #[test]
+    fn stale_ranks_are_swept_after_heartbeat_silence() {
+        let health = Arc::new(FabricHealth::new(3));
+        health.set_phase(FabricPhase::Round);
+        health.mark_seen(1);
+        // Rank 2 never joined: the sweep must leave it to the join logic.
+        health.scan_stale(Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(30));
+        health.scan_stale(Duration::from_millis(10));
+        assert!(health.is_lost(1));
+        assert!(!health.is_lost(2), "never-seen ranks are not swept");
+        let loss = health.loss(1).unwrap();
+        assert!(loss.cause.contains("no traffic"), "{}", loss.cause);
+        assert_eq!(health.fault_stats().timeouts, 1);
+        // Idempotent: a second sweep changes nothing.
+        health.scan_stale(Duration::from_millis(10));
+        assert_eq!(health.fault_stats().ranks_lost, 1);
+    }
+
+    #[test]
+    fn relay_ledger_counts_per_pair_and_resets() {
+        let ledger = RelayLedger::new(3);
+        ledger.inc(2, 0);
+        ledger.inc(2, 0);
+        ledger.inc(2, 1);
+        ledger.inc(1, 2);
+        assert_eq!(ledger.relayed(2, 0), 2);
+        assert_eq!(ledger.relayed(2, 1), 1);
+        assert_eq!(ledger.relayed(1, 2), 1);
+        assert_eq!(ledger.relayed(0, 2), 0);
+        ledger.reset();
+        assert_eq!(ledger.relayed(2, 0), 0);
+    }
+
+    #[test]
+    fn feeder_injects_into_the_hub_lanes() {
+        let (s2_tx, s2_rx) = mpsc::channel();
+        let (out1, out1_rx) = mpsc::channel();
+        let health = Arc::new(FabricHealth::new(3));
+        let feeder = HubFeeder {
+            s2_tx,
+            out: vec![out1, dead_tx()],
+            ledger: Arc::new(RelayLedger::new(3)),
+            health: Arc::clone(&health),
+        };
+        feeder.inject_s2(2, 0, vec![1, 2]);
+        feeder.inject_s2(2, 1, vec![3]);
+        // A dead destination drops silently — never a panic, never a block.
+        feeder.inject_s2(2, 2, vec![4]);
+        assert_eq!(s2_rx.try_recv().unwrap(), (2, vec![1, 2]));
+        let relayed = out1_rx.try_recv().unwrap();
+        let (src, kind, body) = parse_routed(&relayed).unwrap();
+        assert_eq!((src, kind, body), (2, K_S2, vec![3]));
+        assert_eq!(health.fault_stats().adopted_payloads, 3);
     }
 
     #[test]

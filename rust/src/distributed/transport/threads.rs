@@ -18,6 +18,7 @@
 use super::sim::SimTransport;
 use super::{PeerReceiver, PeerSender, Transport, TransportKind};
 use crate::distributed::cluster::RankClock;
+use crate::distributed::fault::{FabricError, FabricErrorKind, FabricPhase};
 use crate::distributed::netmodel::NetModel;
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -221,13 +222,38 @@ impl PeerSender for RankEndpoint {
     }
 }
 
+/// The thread fabric's only failure mode: every sender dropped while a
+/// receive was outstanding. Surfaced as a non-recoverable teardown
+/// (threads cannot lose a single rank; a dropped endpoint means the
+/// round is over or a rank body panicked, and the panic is what the
+/// driver reports after join).
+fn hangup() -> FabricError {
+    FabricError::new(
+        FabricErrorKind::Shutdown,
+        FabricPhase::Round,
+        None,
+        "thread fabric hung up with a receive outstanding",
+    )
+}
+
 impl PeerReceiver for RankEndpoint {
-    fn recv_any(&mut self) -> (usize, Vec<u8>) {
-        RankEndpoint::recv_any(self)
+    fn recv_any(&mut self) -> Result<(usize, Vec<u8>), FabricError> {
+        for (src, q) in self.pending.iter_mut().enumerate() {
+            if let Some(p) = q.pop_front() {
+                return Ok((src, p));
+            }
+        }
+        self.rx.recv().map_err(|_| hangup())
     }
 
-    fn recv_from(&mut self, src: usize) -> Vec<u8> {
-        RankEndpoint::recv_from(self, src)
+    fn recv_from(&mut self, src: usize) -> Result<Vec<u8>, FabricError> {
+        loop {
+            if let Some(p) = self.pending[src].pop_front() {
+                return Ok(p);
+            }
+            let (s, p) = self.rx.recv().map_err(|_| hangup())?;
+            self.pending[s].push_back(p);
+        }
     }
 }
 

@@ -7,6 +7,15 @@
 //! extension trait for annotating fallible operations. Context is recorded
 //! by prefixing the message (`"open foo: No such file"`), which matches how
 //! the CLI renders errors.
+//!
+//! The process fabric's typed error ([`FabricError`]) is re-exported
+//! here: it *does* implement `std::error::Error`, so the blanket
+//! `From` below converts it with `?`, and fabric failures keep their
+//! rank/phase/cause structure all the way to the layer that formats
+//! them (the round drivers attach per-rank diagnostics before the
+//! message is flattened into [`Error`]).
+
+pub use crate::distributed::fault::FabricError;
 
 use std::fmt;
 

@@ -12,7 +12,10 @@
 
 use greediris::error::Result;
 use greediris::{anyhow, bail};
-use greediris::coordinator::{run_infmax, run_infmax_with_scorer, run_opim, Algorithm, Config, LocalSolver};
+use greediris::coordinator::{
+    run_infmax_checked, run_infmax_with_scorer_checked, run_opim, Algorithm, Config, LocalSolver,
+};
+use greediris::distributed::fault::{FaultSpec, LossPolicy};
 use greediris::distributed::TransportKind;
 use greediris::diffusion::{evaluate_spread, DiffusionModel};
 use greediris::exp::inputs::{analog, build_analog, weights_for, ANALOGS};
@@ -33,6 +36,7 @@ USAGE:
                 [--s1-threads N] [--transport sim|threads|process]
                 [--wire varint|raw] [--prune on|off]
                 [--overlap on|off] [--chunk N]
+                [--fabric-timeout MS] [--on-rank-loss fail|redistribute]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
   greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
   greediris inputs
@@ -50,10 +54,20 @@ stream through S2 while sampling continues; S3 starts per sender);
 --overlap off pins the phase-stepped engine. Seed sets and raw-byte
 counters are bit-identical either way. --chunk N sets the chunk size in
 samples (0 = auto).
+--fabric-timeout MS bounds every process-fabric wait (connect handshake,
+hub/worker receives, heartbeat staleness; default 60000). --on-rank-loss
+picks what happens when a worker dies mid-round: fail (default) stops
+with a typed per-rank diagnostic; redistribute deterministically
+reassigns the lost rank's remaining sampling quota to the survivors and
+finishes the round. Both only apply to --transport process.
 Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
      GREEDIRIS_TRANSPORT=sim|threads|process sets the default transport
      (unknown values are an error, never a silent fallback);
-     GREEDIRIS_WORKER_BIN overrides the rank-worker binary.";
+     GREEDIRIS_WORKER_BIN overrides the rank-worker binary;
+     GREEDIRIS_FABRIC_TIMEOUT_MS sets the default fabric deadline;
+     GREEDIRIS_FAULT=rank:phase:kind[:ms] injects one deterministic
+     fault for testing (phases hello|round|select, kinds
+     kill|hang|corrupt|slow).";
 
 /// Minimal --flag value parser.
 struct Flags {
@@ -152,6 +166,15 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         other => bail!("unknown overlap setting '{other}' (on | off)"),
     }
     cfg = cfg.with_chunk(flags.get("chunk", 0usize)?);
+    cfg = cfg.with_fabric_timeout(flags.get("fabric-timeout", cfg.fabric_timeout_ms)?);
+    if let Some(p) = flags.map.get("on-rank-loss") {
+        cfg = cfg.with_on_rank_loss(p.parse::<LossPolicy>().map_err(|e| anyhow!(e))?);
+    }
+    // Validate GREEDIRIS_FAULT up front: a typo'd fault spec must be a
+    // clean CLI error, never a silently fault-free run.
+    if let Some(spec) = FaultSpec::from_env().map_err(|e| anyhow!(e))? {
+        cfg = cfg.with_fault(spec);
+    }
     if let Some(t) = flags.map.get("theta") {
         cfg = cfg.with_theta(t.parse()?);
     }
@@ -162,9 +185,12 @@ fn cmd_run(flags: &Flags) -> Result<()> {
         greediris::coordinator::process::check_worker_binary()?;
     }
     let solver = flags.get_str("solver", "lazy");
+    // The checked entry points turn fabric failures (lost rank, deadline,
+    // corrupt frame) into typed messages with per-rank diagnostics; main
+    // prints them and exits nonzero instead of panicking.
     let result = match solver.as_str() {
-        "lazy" => run_infmax(&g, &cfg),
-        "dense-cpu" => run_infmax(&g, &cfg.with_local_solver(LocalSolver::DenseCpu)),
+        "lazy" => run_infmax_checked(&g, &cfg)?,
+        "dense-cpu" => run_infmax_checked(&g, &cfg.with_local_solver(LocalSolver::DenseCpu))?,
         "dense-xla" => {
             if transport_kind == TransportKind::Process {
                 bail!("--solver dense-xla is not supported with --transport process \
@@ -174,7 +200,11 @@ fn cmd_run(flags: &Flags) -> Result<()> {
             if !scorer.artifacts_present() {
                 bail!("no AOT artifacts found — run `make artifacts` first");
             }
-            run_infmax_with_scorer(&g, &cfg.with_local_solver(LocalSolver::DenseXla), Some(&mut scorer))
+            run_infmax_with_scorer_checked(
+                &g,
+                &cfg.with_local_solver(LocalSolver::DenseXla),
+                Some(&mut scorer),
+            )?
         }
         other => bail!("unknown solver '{other}'"),
     };
@@ -190,6 +220,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     println!("breakdown: {}", result.breakdown);
     if result.breakdown.overlap.chunks > 0 {
         println!("overlap: {}", result.breakdown.overlap);
+    }
+    if !result.breakdown.fabric.is_zero() {
+        println!("fabric: {}", result.breakdown.fabric);
     }
     println!(
         "comm: all-to-all {} B (raw {} B) | stream {} B (raw {} B, {} seeds, {} pruned) | reductions {} B",

@@ -40,6 +40,59 @@ impl fmt::Display for OverlapStats {
     }
 }
 
+/// Fault-tolerance counters from the process fabric (PR 6). Zero for
+/// the in-process backends, and zero on a healthy socket run — the CLI
+/// only prints the `fabric:` line when something actually fired. Like
+/// [`OverlapStats`], these ride inside [`Breakdown`] without
+/// contributing to [`Breakdown::total`]: they describe the fabric, not
+/// the modeled critical path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Worker connect attempts beyond the first, summed across ranks.
+    pub connect_retries: u64,
+    /// Ranks declared lost (EOF, corrupt stream, heartbeat silence).
+    pub ranks_lost: u64,
+    /// Deadline expiries observed by hub-side waits.
+    pub timeouts: u64,
+    /// Frames rejected by the checksum/parse layer.
+    pub corrupt_frames: u64,
+    /// Faults fired by the `GREEDIRIS_FAULT` injection harness.
+    pub injected_faults: u64,
+    /// S2 payloads regenerated at the supervisor on behalf of lost
+    /// ranks (`--on-rank-loss redistribute`).
+    pub adopted_payloads: u64,
+}
+
+impl FaultStats {
+    pub fn is_zero(&self) -> bool {
+        *self == FaultStats::default()
+    }
+
+    pub fn add(&mut self, o: &FaultStats) {
+        self.connect_retries += o.connect_retries;
+        self.ranks_lost += o.ranks_lost;
+        self.timeouts += o.timeouts;
+        self.corrupt_frames += o.corrupt_frames;
+        self.injected_faults += o.injected_faults;
+        self.adopted_payloads += o.adopted_payloads;
+    }
+}
+
+impl fmt::Display for FaultStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} lost | {} retries | {} timeouts | {} corrupt | {} injected | {} adopted payloads",
+            self.ranks_lost,
+            self.connect_retries,
+            self.timeouts,
+            self.corrupt_frames,
+            self.injected_faults,
+            self.adopted_payloads
+        )
+    }
+}
+
 /// Simulated-time breakdown of one InfMax run (accumulated across
 /// martingale rounds). All values are seconds of *critical-path* time
 /// attributable to the phase, per the paper's Fig. 4 methodology:
@@ -64,6 +117,8 @@ pub struct Breakdown {
     pub coordination: f64,
     /// Chunked-pipeline overlap metrics (PR 4).
     pub overlap: OverlapStats,
+    /// Process-fabric fault counters (PR 6).
+    pub fabric: FaultStats,
 }
 
 impl Breakdown {
@@ -87,6 +142,7 @@ impl Breakdown {
         self.select_global += other.select_global;
         self.coordination += other.coordination;
         self.overlap.add(&other.overlap);
+        self.fabric.add(&other.fabric);
     }
 }
 
@@ -203,6 +259,23 @@ mod tests {
         b.add(&Breakdown { overlap: a, ..Default::default() });
         assert_eq!(b.overlap.chunks, 5);
         assert_eq!(b.total(), 0.0, "overlap metrics do not inflate the phase total");
+    }
+
+    #[test]
+    fn fault_stats_accumulate_without_inflating_total() {
+        let mut a = FaultStats { connect_retries: 2, ranks_lost: 1, ..Default::default() };
+        assert!(!a.is_zero());
+        assert!(FaultStats::default().is_zero());
+        a.add(&FaultStats { timeouts: 3, adopted_payloads: 5, ..Default::default() });
+        assert_eq!(a.connect_retries, 2);
+        assert_eq!(a.timeouts, 3);
+        assert_eq!(a.adopted_payloads, 5);
+        let mut b = Breakdown::default();
+        b.add(&Breakdown { fabric: a, ..Default::default() });
+        assert_eq!(b.fabric.ranks_lost, 1);
+        assert_eq!(b.total(), 0.0, "fault counters do not inflate the phase total");
+        let s = format!("{a}");
+        assert!(s.contains("1 lost") && s.contains("2 retries"), "{s}");
     }
 
     #[test]

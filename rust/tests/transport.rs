@@ -16,11 +16,21 @@
 //!   rejects corruption with a `DecodeError`, never a panic or a short
 //!   silent read;
 //! - threshold-floor pruning and wire compression never change seeds;
-//! - truncated runs respect the `greediris_trunc_ratio` quality bound.
+//! - truncated runs respect the `greediris_trunc_ratio` quality bound;
+//! - the PR-6 fault matrix: a worker killed, hung, or corrupting its
+//!   stream in any phase yields a typed rank-attributed failure
+//!   (`--on-rank-loss fail`) or a deterministic degraded seed set
+//!   (`--on-rank-loss redistribute`) — never a panic, never a hang —
+//!   and a refused connect is retried under backoff until the hub
+//!   appears.
 
 use greediris::coordinator::sampling::{grow_to, DistState};
-use greediris::coordinator::{run_infmax, Algorithm, Config};
+use greediris::coordinator::{run_infmax, run_infmax_checked, Algorithm, Config};
 use greediris::diffusion::DiffusionModel;
+use greediris::distributed::fault::{FabricTimeouts, FaultKind, FaultPhase, FaultSpec, LossPolicy};
+use greediris::distributed::transport::process::{
+    parse_routed, routed_msg, WorkerLink, K_CTRL, K_JOIN,
+};
 use greediris::distributed::{wire, NetModel, TransportKind};
 use greediris::graph::weights::WeightModel;
 use greediris::graph::{generators, Graph};
@@ -422,4 +432,146 @@ fn truncated_runs_respect_trunc_ratio_bound() {
         // Sanity: the bound itself must order correctly.
         assert!(bound <= bounds::greediris_ratio(c.delta, c.eps) + 1e-12);
     }
+}
+
+// --------------------------------------------------------- fault matrix --
+//
+// The PR-6 failure-semantics contract: with any single worker killed,
+// hung, or corrupting its stream in any phase, a process-transport run
+// terminates within its deadline with either a typed per-rank diagnostic
+// (`--on-rank-loss fail`, the default) or a completed deterministic seed
+// set (`--on-rank-loss redistribute`) — never a panic, never a hang.
+// Faults are injected via `Config::with_fault`, which the supervisor
+// forwards to exactly one child's environment; nothing here mutates the
+// ambient `GREEDIRIS_FAULT`, so these tests are parallel-safe.
+
+fn fault(rank: usize, phase: FaultPhase, kind: FaultKind) -> FaultSpec {
+    FaultSpec { rank, phase, kind, millis: 0 }
+}
+
+/// Fail-mode process config with a bounded fabric deadline so no
+/// assertion failure can turn into a test-harness hang.
+fn fault_cfg(m: usize) -> Config {
+    cfg(Algorithm::GreediRis, m, TransportKind::Process).with_fabric_timeout(15_000)
+}
+
+#[test]
+fn fault_kill_at_hello_fails_typed() {
+    set_worker_bin();
+    let c = fault_cfg(4).with_fault(fault(2, FaultPhase::Hello, FaultKind::Kill));
+    let err = run_infmax_checked(&graph(), &c).expect_err("run survived a dead rank");
+    let msg = format!("{err}");
+    assert!(msg.contains("rank 2"), "diagnostic does not identify the rank: {msg}");
+}
+
+#[test]
+fn fault_kill_mid_round_fails_typed() {
+    set_worker_bin();
+    let c = fault_cfg(4).with_fault(fault(2, FaultPhase::Round, FaultKind::Kill));
+    let err = run_infmax_checked(&graph(), &c).expect_err("run survived a dead rank");
+    let msg = format!("{err}");
+    assert!(msg.contains("rank 2"), "diagnostic does not identify the rank: {msg}");
+}
+
+#[test]
+fn fault_kill_mid_round_redistribute_is_deterministic() {
+    set_worker_bin();
+    let g = graph();
+    let c = fault_cfg(4)
+        .with_fault(fault(2, FaultPhase::Round, FaultKind::Kill))
+        .with_on_rank_loss(LossPolicy::Redistribute);
+    let a = run_infmax_checked(&g, &c).expect("redistribute run failed");
+    let b = run_infmax_checked(&g, &c).expect("redistribute rerun failed");
+    assert_eq!(a.seeds, b.seeds, "redistributed seeds are not deterministic");
+    assert_eq!(a.coverage, b.coverage);
+    assert_eq!(a.theta, b.theta);
+    assert!(!a.seeds.is_empty());
+}
+
+#[test]
+fn fault_kill_at_select_redistribute_completes() {
+    set_worker_bin();
+    let g = graph();
+    // Fused (overlapped) rounds never send OP_SELECT, so pin the phased
+    // protocol to actually exercise a SELECT-time loss.
+    let c = fault_cfg(3)
+        .with_overlap(false)
+        .with_fault(fault(2, FaultPhase::Select, FaultKind::Kill))
+        .with_on_rank_loss(LossPolicy::Redistribute);
+    let a = run_infmax_checked(&g, &c).expect("redistribute run failed");
+    let b = run_infmax_checked(&g, &c).expect("redistribute rerun failed");
+    assert_eq!(a.seeds, b.seeds, "redistributed seeds are not deterministic");
+    assert!(!a.seeds.is_empty());
+}
+
+#[test]
+fn fault_hang_detected_within_deadline() {
+    set_worker_bin();
+    // The hung worker's heartbeat thread keeps beating, so liveness alone
+    // cannot clear it — only the per-receive starvation deadline can.
+    // A hang is therefore a typed timeout (no identified dead rank), and
+    // fails cleanly under either loss policy.
+    let c = cfg(Algorithm::GreediRis, 3, TransportKind::Process)
+        .with_fabric_timeout(2_000)
+        .with_fault(fault(2, FaultPhase::Round, FaultKind::Hang));
+    let t0 = std::time::Instant::now();
+    let err = run_infmax_checked(&graph(), &c).expect_err("run survived a hung rank");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(60),
+        "hang detection blew through the deadline ({:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+    let msg = format!("{err}");
+    assert!(msg.contains("timeout"), "hang not reported as a timeout: {msg}");
+}
+
+#[test]
+fn fault_corrupt_frame_mid_round_fails_typed() {
+    set_worker_bin();
+    // A checksum failure poisons the whole stream (resync is impossible
+    // mid-frame), so the hub declares the sender lost with a typed,
+    // rank-attributed diagnostic.
+    let c = fault_cfg(4).with_fault(fault(2, FaultPhase::Round, FaultKind::Corrupt));
+    let err = run_infmax_checked(&graph(), &c).expect_err("run survived a corrupted stream");
+    let msg = format!("{err}");
+    assert!(msg.contains("rank 2"), "diagnostic does not identify the rank: {msg}");
+}
+
+#[test]
+fn connect_retry_succeeds_after_refused_attempts() {
+    use greediris::distributed::transport::frame::{write_frame, FrameReader};
+
+    // Reserve a port, then drop the listener: the link's first connect
+    // attempts are refused and must be retried under backoff.
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let hub_addr = addr.clone();
+    let hub = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        let l = std::net::TcpListener::bind(&hub_addr).expect("rebind reserved port");
+        let (mut s, _) = l.accept().unwrap();
+        let mut fr = FrameReader::new();
+        let join = fr.read_frame(&mut s).unwrap().expect("worker closed before JOIN");
+        let (tag, kind, body) = parse_routed(&join).unwrap();
+        assert_eq!(tag, 0);
+        assert_eq!(kind, K_JOIN, "first worker frame must be JOIN");
+        let mut r = wire::Reader::new(&body);
+        assert_eq!(r.varint().unwrap(), 1, "JOIN must carry the rank");
+        let reported_retries = r.varint().unwrap();
+        // HELLO: first varint is m, the rest is opaque to the link layer.
+        let mut hello = Vec::new();
+        wire::put_varint(&mut hello, 2);
+        write_frame(&mut s, &[&routed_msg(0, K_CTRL, &hello)]).unwrap();
+        // Hold the socket open until the link has consumed HELLO.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        reported_retries
+    });
+    let (link, hello) =
+        WorkerLink::connect(&addr, 1, FabricTimeouts::from_millis(10_000)).expect("connect");
+    assert_eq!(link.m(), 2);
+    assert_eq!(wire::Reader::new(&hello).varint().unwrap(), 2);
+    assert!(link.retries() >= 1, "connect succeeded without any refused attempt");
+    assert_eq!(hub.join().unwrap(), link.retries(), "JOIN retry count disagrees");
 }

@@ -18,17 +18,25 @@
 #      three-way matrix) AND under --overlap on vs off (the chunked
 #      overlapped engine is bit-equal by design; this catches drift at the
 #      CLI level on top of tests/transport.rs and tests/overlap.rs).
-#   4. quick-scale micro benches (sampling / shuffle / maxcover /
+#   4. fault-injection gates (PR-6): the same run with a worker killed
+#      mid-round must (a) under --on-rank-loss fail exit nonzero with a
+#      rank-attributed diagnostic, and (b) under --on-rank-loss
+#      redistribute complete with seeds that are deterministic across
+#      reruns — each leg under a wall-clock `timeout`, so a wedged fabric
+#      is a loud failure, never a stuck CI job. A no-fault redistribute
+#      run must still match the pinned sim seeds (the policy flag alone
+#      cannot perturb the three-way contract).
+#   5. quick-scale micro benches (sampling / shuffle / maxcover /
 #      transport, incl. the socket-backend leg) through the in-tree
 #      harness (src/exp/bench.rs), each measurement exported as a JSON
 #      line via GREEDIRIS_BENCH_JSON.
-#   5. assemble the lines into BENCH_PR5.json at the repo root — the
+#   6. assemble the lines into BENCH_PR5.json at the repo root — the
 #      current perf record, stamped with the git SHA and the flag matrix
 #      the benches ran (transport/wire/prune/overlap A/B pairs live in
 #      the same array; see scripts/README.md). A record is only written
 #      when this run actually measured something: an existing measured
 #      BENCH_PR5.json is never replaced by a placeholder or an empty run.
-#   6. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
+#   7. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
 #      authoring containers had no Rust toolchain, so the repo may carry
 #      marked placeholders; the first run on a toolchain-equipped host
 #      replaces a placeholder (or missing file) with this run's measured
@@ -116,6 +124,61 @@ if [ "$OVL_ON" != "$OVL_OFF" ]; then
   exit 1
 fi
 echo "seed sets identical across overlap on/off"
+
+echo "== fault-injection gates =="
+# Every leg runs under a wall-clock `timeout`: the contract is "typed
+# failure or deterministic degradation, never a hang", and a hang here
+# must fail CI loudly instead of wedging the job. GREEDIRIS_FAULT is
+# consumed by the supervisor, which forwards it to exactly the targeted
+# rank's environment (see scripts/README.md for the spec format).
+FAULT_BUDGET=120
+# Fail mode (the default policy, passed explicitly for clarity): a worker
+# killed mid-round must exit nonzero with a rank-attributed diagnostic.
+set +e
+FAIL_OUT="$(GREEDIRIS_FAULT=2:round:kill timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss fail 2>&1)"
+FAIL_RC=$?
+set -e
+if [ "$FAIL_RC" -eq 124 ] || [ "$FAIL_RC" -eq 137 ]; then
+  echo "error: fail-mode fault run hung past ${FAULT_BUDGET}s" >&2
+  exit 1
+fi
+if [ "$FAIL_RC" -eq 0 ]; then
+  echo "error: fail-mode run survived a killed rank" >&2
+  echo "$FAIL_OUT" >&2
+  exit 1
+fi
+if ! grep -q "rank 2" <<<"$FAIL_OUT"; then
+  echo "error: fail-mode diagnostic does not identify the lost rank" >&2
+  echo "$FAIL_OUT" >&2
+  exit 1
+fi
+echo "fail mode: killed rank 2 produced a typed diagnostic (exit $FAIL_RC)"
+# Redistribute mode: the same kill must complete, and the degraded seed
+# set must be deterministic run-to-run (a pure function of config, seed,
+# and fault spec — asserted by rerunning the identical command).
+RED_A="$(GREEDIRIS_FAULT=2:round:kill timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss redistribute | grep '^seeds:')"
+RED_B="$(GREEDIRIS_FAULT=2:round:kill timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss redistribute | grep '^seeds:')"
+if [ -z "$RED_A" ] || [ "$RED_A" != "$RED_B" ]; then
+  echo "error: redistribute-mode seeds are empty or nondeterministic" >&2
+  echo "  run 1: $RED_A" >&2
+  echo "  run 2: $RED_B" >&2
+  exit 1
+fi
+echo "redistribute mode: killed rank 2, deterministic degraded seed set"
+# The policy flag alone must not perturb the no-fault contract: a clean
+# redistribute run still matches the pinned three-way seed set.
+RED_CLEAN="$(timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss redistribute | grep '^seeds:')"
+if [ "$RED_CLEAN" != "$SIM_SEEDS" ]; then
+  echo "error: no-fault redistribute run diverged from sim" >&2
+  echo "  sim:          $SIM_SEEDS" >&2
+  echo "  redistribute: $RED_CLEAN" >&2
+  exit 1
+fi
+echo "no-fault redistribute seeds identical to sim"
 
 echo "== micro benches (scale: ${GREEDIRIS_BENCH_SCALE:-quick}) =="
 JSONL="$ROOT/rust/target/bench_pr5.jsonl"
