@@ -137,10 +137,22 @@ pub struct Config {
     /// remaining S1 quota to the survivors and finish the round.
     pub on_rank_loss: LossPolicy,
     /// Deterministic fault injection (`GREEDIRIS_FAULT`, testing only):
-    /// armed in the matching rank worker at the matching phase entry.
-    /// Never part of the wire config blob — each worker reads only its
-    /// own environment.
-    pub fault: Option<FaultSpec>,
+    /// each spec is armed in the matching rank worker at the matching
+    /// phase entry, in order (rank-0 specs fire in the supervisor's
+    /// pipeline driver). Never part of the wire config blob — each worker
+    /// reads only its own slice of the environment list.
+    pub fault: Vec<FaultSpec>,
+    /// Durable checkpointing (PR 7): directory snapshots are written to
+    /// at round boundaries (`--checkpoint`). `None` disables.
+    pub checkpoint_dir: Option<String>,
+    /// Throttle: write a snapshot only after at least this many pipeline
+    /// chunks of grow work since the last one (`--checkpoint-every`;
+    /// `0` = every round boundary).
+    pub checkpoint_every: u64,
+    /// Restore from the latest snapshot in this directory before running
+    /// (`--resume`). An empty/missing `latest.ckpt` is a clean start; a
+    /// snapshot from a different config/graph is a typed error.
+    pub resume_dir: Option<String>,
 }
 
 impl Config {
@@ -170,7 +182,10 @@ impl Config {
             chunk: 0,
             fabric_timeout_ms: env_fabric_timeout_ms(),
             on_rank_loss: LossPolicy::Fail,
-            fault: None,
+            fault: Vec::new(),
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+            resume_dir: None,
         }
     }
 
@@ -238,9 +253,31 @@ impl Config {
         self
     }
 
-    /// Arms a deterministic injected fault (testing; see [`Config::fault`]).
+    /// Arms a deterministic injected fault, appending to any already armed
+    /// (testing; see [`Config::fault`]).
     pub fn with_fault(mut self, spec: FaultSpec) -> Self {
-        self.fault = Some(spec);
+        self.fault.push(spec);
+        self
+    }
+
+    /// Enables durable checkpoints into `dir` (see
+    /// [`Config::checkpoint_dir`]).
+    pub fn with_checkpoint(mut self, dir: impl Into<String>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Sets the checkpoint chunk throttle (see
+    /// [`Config::checkpoint_every`]).
+    pub fn with_checkpoint_every(mut self, chunks: u64) -> Self {
+        self.checkpoint_every = chunks;
+        self
+    }
+
+    /// Resumes from the latest snapshot in `dir` (see
+    /// [`Config::resume_dir`]).
+    pub fn with_resume(mut self, dir: impl Into<String>) -> Self {
+        self.resume_dir = Some(dir.into());
         self
     }
 

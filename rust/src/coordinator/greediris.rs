@@ -119,6 +119,10 @@ pub struct StreamRound {
     pub sender_end_max: f64,
     /// Receiver finish (absolute cluster time).
     pub receiver_end: f64,
+    /// Receiver threshold floor at completion, `(floor, l_seen)` — the
+    /// `BucketBank` state the checkpoint layer (PR 7) snapshots.
+    /// `(0.0, 0)` on paths with no receiver floor (m == 1).
+    pub final_floor: (f64, u64),
 }
 
 /// Runs local selection on one sender's system, returning its trace.
@@ -205,6 +209,7 @@ pub fn streaming_round_checked<'a, 'b>(
             receiver: ReceiverBreakdown::default(),
             sender_end_max: end,
             receiver_end: end,
+            final_floor: (0.0, 0),
         });
     }
 
@@ -364,6 +369,7 @@ pub fn streaming_round_checked<'a, 'b>(
     }
     // Final compare: best bucket vs best local (measured, negligible).
     let tc = Instant::now();
+    let final_floor = (stream.prune_floor(), stream.l_seen());
     let global = stream.finalize();
     let local = best_local.cloned().unwrap_or_default();
     let solution = if global.coverage >= local.coverage { global } else { local };
@@ -389,6 +395,7 @@ pub fn streaming_round_checked<'a, 'b>(
         },
         sender_end_max,
         receiver_end,
+        final_floor,
     })
 }
 
@@ -476,10 +483,12 @@ pub(crate) struct MergeOutcome {
 /// atomics).
 ///
 /// Failure semantics (PR 6): a fabric error naming a lost rank is handled
-/// per `policy` — under [`LossPolicy::Redistribute`] the dead sender is
+/// per `policy` — under a degrading policy ([`LossPolicy::Redistribute`],
+/// or [`LossPolicy::Respawn`] within the failing round) the dead sender is
 /// dropped from the sweep (it contributes no further runs and no local
 /// solution; a kill at phase entry means it contributed nothing at all,
-/// keeping the surviving stream deterministic), under
+/// keeping the surviving stream deterministic; a respawn-policy driver
+/// then redoes the whole selection after reviving the rank), under
 /// [`LossPolicy::Fail`] (and for every non-loss error: deadline expiry,
 /// teardown, undecodable payload) the typed error propagates. Malformed
 /// RUN/tombstone payloads and unknown tags are decode/protocol errors
@@ -512,7 +521,7 @@ pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
             let msg = match ep0.recv_from(p) {
                 Ok(msg) => msg,
                 Err(e) => match e.lost_rank() {
-                    Some(l) if policy == LossPolicy::Redistribute => {
+                    Some(l) if policy.degrades() => {
                         // Drop the dead rank from this and all later
                         // sweeps. When the loss names a rank other than
                         // the one being awaited, keep waiting on `p` (its
@@ -682,6 +691,7 @@ fn threaded_streaming_round(
         },
         sender_end_max,
         receiver_end,
+        final_floor: board.read(),
     }
 }
 
@@ -856,6 +866,7 @@ pub fn overlapped_round_threaded(
         receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
         sender_end_max,
         receiver_end,
+        final_floor: board.read(),
     };
     (gstats, round)
 }

@@ -8,7 +8,8 @@ use crate::coordinator::greediris::{
     overlapped_round_threaded, streaming_round_checked, StreamRound,
 };
 use crate::coordinator::randgreedi::offline_round;
-use crate::coordinator::sampling::{grow_to, grow_to_checked, DistState, GrowStats};
+use crate::coordinator::sampling::{grow_to, grow_to_checked, rank_ranges, DistState, GrowStats};
+use crate::distributed::fault::{FaultKind, FaultPhase, FaultSpec};
 use crate::distributed::{collectives, make_transport, Transport, TransportKind};
 use crate::error::Result;
 use crate::graph::Graph;
@@ -17,6 +18,8 @@ use crate::imm::opim::{OpimBound, OpimParams};
 use crate::imm::{MartingaleDriver, RoundDecision};
 use crate::maxcover::{CoverSolution, GainScorer};
 use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
+use crate::runtime::checkpoint::{self, Checkpoint, CheckpointError, Stage};
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Fresh sample-id space for the final selection phase (Chen'18 fix: the
@@ -35,6 +38,9 @@ struct SelectOutcome {
     receiver: ReceiverBreakdown,
     sender_end_max: f64,
     receiver_end: f64,
+    /// Receiver `(prune_floor, l_seen)` at completion — snapshot fodder
+    /// for the checkpoint layer; `(0.0, 0)` for non-streaming backends.
+    floor: (f64, u64),
 }
 
 /// Maps a streaming round onto the algorithm-agnostic outcome record.
@@ -51,6 +57,7 @@ fn stream_outcome(r: StreamRound) -> SelectOutcome {
         receiver: r.receiver,
         sender_end_max: r.sender_end_max,
         receiver_end: r.receiver_end,
+        floor: r.final_floor,
     }
 }
 
@@ -93,6 +100,7 @@ fn select<'a, 'b>(
                 receiver: ReceiverBreakdown::default(),
                 sender_end_max: 0.0,
                 receiver_end: 0.0,
+                floor: (0.0, 0),
             }
         }
         Algorithm::Ripples => {
@@ -109,6 +117,7 @@ fn select<'a, 'b>(
                 receiver: ReceiverBreakdown::default(),
                 sender_end_max: 0.0,
                 receiver_end: 0.0,
+                floor: (0.0, 0),
             }
         }
         Algorithm::DiImm => {
@@ -125,6 +134,7 @@ fn select<'a, 'b>(
                 receiver: ReceiverBreakdown::default(),
                 sender_end_max: 0.0,
                 receiver_end: 0.0,
+                floor: (0.0, 0),
             }
         }
     })
@@ -160,6 +170,222 @@ fn owner_pool(cfg: &Config) -> (Vec<usize>, bool) {
         Algorithm::RandGreediOffline => ((0..cfg.m).collect(), true),
         Algorithm::Ripples | Algorithm::DiImm => (vec![0], false),
     }
+}
+
+/// Supervisor-side (rank 0) injected faults, fired by the pipeline driver
+/// itself so they work on every transport — the checkpoint kill/resume
+/// gates key on killing rank 0, the one rank the process fabric cannot
+/// respawn. For rank 0 the spec's `ms` field is reinterpreted as the
+/// 1-based phase-entry ordinal: `0:round:kill:2` dies entering the second
+/// grow round (the final-phase grow counts as one more entry after
+/// estimation), `0:select:kill` dies entering the first selection. Only
+/// `kill` is meaningful at the supervisor — the other kinds model worker
+/// lifecycle behaviours and are ignored here.
+struct Rank0Faults {
+    round: Vec<FaultSpec>,
+    select: Vec<FaultSpec>,
+    rounds_entered: u64,
+    selects_entered: u64,
+}
+
+impl Rank0Faults {
+    /// Arms the rank-0 specs; a `hello` spec fires immediately.
+    fn new(cfg: &Config) -> Self {
+        let mine: Vec<FaultSpec> = cfg
+            .fault
+            .iter()
+            .copied()
+            .filter(|f| f.rank == 0 && f.kind == FaultKind::Kill)
+            .collect();
+        for f in &mine {
+            if f.phase == FaultPhase::Hello {
+                Self::fire(f);
+            }
+        }
+        Rank0Faults {
+            round: mine.iter().copied().filter(|f| f.phase == FaultPhase::Round).collect(),
+            select: mine.iter().copied().filter(|f| f.phase == FaultPhase::Select).collect(),
+            rounds_entered: 0,
+            selects_entered: 0,
+        }
+    }
+
+    /// Exit code 17 — same as an injected worker kill, so gates can tell
+    /// an injected death from a genuine failure.
+    fn fire(f: &FaultSpec) -> ! {
+        eprintln!("injected supervisor fault: {f}");
+        std::process::exit(17);
+    }
+
+    fn enter_round(&mut self) {
+        self.rounds_entered += 1;
+        for f in &self.round {
+            if f.millis.max(1) == self.rounds_entered {
+                Self::fire(f);
+            }
+        }
+    }
+
+    fn enter_select(&mut self) {
+        self.selects_entered += 1;
+        for f in &self.select {
+            if f.millis.max(1) == self.selects_entered {
+                Self::fire(f);
+            }
+        }
+    }
+}
+
+/// Rank-0 durable snapshot writer (PR 7): owns the write throttle
+/// (`--checkpoint-every` counts overlapped sample chunks since the last
+/// write; 0 = snapshot at every opportunity) and the snapshot assembly.
+/// [`Stage::Finalized`] writes bypass the throttle — the estimation
+/// verdict must never be lost.
+struct Checkpointer {
+    dir: PathBuf,
+    every: u64,
+    chunks_since: u64,
+    config_fp: u64,
+    graph_fp: u64,
+    m: usize,
+    /// Process transport: worker covers live out-of-process and are
+    /// rebuilt on resume by REJOIN pure regeneration, so snapshots carry
+    /// no cover blobs (and no [`Stage::AfterGrow`] — a resumed selection
+    /// needs its grow to have materialized the worker cluster).
+    process: bool,
+    written: u64,
+}
+
+impl Checkpointer {
+    fn new(dir: &str, cfg: &Config, graph: &Graph) -> Self {
+        Checkpointer {
+            dir: PathBuf::from(dir),
+            every: cfg.checkpoint_every,
+            chunks_since: 0,
+            config_fp: checkpoint::fnv1a(&crate::coordinator::process::encode_config(cfg)),
+            graph_fp: checkpoint::fnv1a(&crate::distributed::transport::process::encode_graph(
+                graph,
+            )),
+            m: cfg.m,
+            process: cfg.transport == TransportKind::Process,
+            written: 0,
+        }
+    }
+
+    fn note_chunks(&mut self, chunks: u64) {
+        self.chunks_since += chunks;
+    }
+
+    fn due(&self) -> bool {
+        self.every == 0 || self.chunks_since >= self.every
+    }
+
+    /// Assembles a snapshot of the loop state at a round boundary.
+    #[allow(clippy::too_many_arguments)]
+    fn snap(
+        &self,
+        stage: Stage,
+        rounds: u32,
+        theta: u64,
+        grow_from: u64,
+        lower_bound: f64,
+        floor: (f64, u64),
+        coverages: &[u64],
+        volumes: &CommVolume,
+        covers: Option<&DistState>,
+    ) -> Checkpoint {
+        // Finalized resumes by redoing the final phase from scratch, so
+        // its stored schedule is the final-phase grow `[0, θ)`; the
+        // estimation stages store the last grow's `[from, θ̂)`.
+        let (lo_from, lo_to) = match stage {
+            Stage::Finalized => (0, theta),
+            _ => (grow_from, theta),
+        };
+        let rng_lo = rank_ranges(self.m, lo_from, lo_to).iter().map(|&(lo, _)| lo as u64).collect();
+        let covers = match covers {
+            Some(state) if !self.process => {
+                state.covers.iter().map(|c| Some(checkpoint::encode_cover(c))).collect()
+            }
+            _ => vec![None; self.m],
+        };
+        Checkpoint {
+            config_fp: self.config_fp,
+            graph_fp: self.graph_fp,
+            stage,
+            rounds,
+            theta,
+            grow_from,
+            id_base: 0,
+            lower_bound,
+            floor,
+            coverages: coverages.to_vec(),
+            volumes: *volumes,
+            rng_lo,
+            covers,
+        }
+    }
+
+    fn write(&mut self, ck: &Checkpoint) -> Result<()> {
+        checkpoint::write_snapshot(&self.dir, ck)?;
+        self.chunks_since = 0;
+        self.written += 1;
+        Ok(())
+    }
+}
+
+/// Loads and validates the latest resume snapshot: fingerprints, cover
+/// arity, and the rederived RNG schedule must all match this run, or the
+/// resume is a typed [`CheckpointError::Mismatch`] — never a silently
+/// diverging run. `Ok(None)` when no `--resume` dir or no snapshot yet.
+fn load_resume(cfg: &Config, graph: &Graph) -> Result<Option<Checkpoint>> {
+    let Some(dir) = &cfg.resume_dir else {
+        return Ok(None);
+    };
+    let Some(ck) = checkpoint::load_latest(Path::new(dir))? else {
+        return Ok(None);
+    };
+    let cfp = checkpoint::fnv1a(&crate::coordinator::process::encode_config(cfg));
+    if ck.config_fp != cfp {
+        return Err(CheckpointError::Mismatch(format!(
+            "snapshot written under a different config (fp {:#018x}, this run {cfp:#018x})",
+            ck.config_fp
+        ))
+        .into());
+    }
+    let gfp = checkpoint::fnv1a(&crate::distributed::transport::process::encode_graph(graph));
+    if ck.graph_fp != gfp {
+        return Err(CheckpointError::Mismatch(format!(
+            "snapshot written against a different graph (fp {:#018x}, this run {gfp:#018x})",
+            ck.graph_fp
+        ))
+        .into());
+    }
+    if ck.covers.len() != cfg.m {
+        return Err(CheckpointError::Mismatch(format!(
+            "snapshot holds {} rank covers for m = {}",
+            ck.covers.len(),
+            cfg.m
+        ))
+        .into());
+    }
+    let (lo_from, lo_to) = match ck.stage {
+        Stage::Finalized => (0, ck.theta),
+        _ => (ck.grow_from, ck.theta),
+    };
+    if lo_from > lo_to {
+        return Err(
+            CheckpointError::Mismatch("snapshot grow range runs backwards".into()).into()
+        );
+    }
+    let expect: Vec<u64> =
+        rank_ranges(cfg.m, lo_from, lo_to).iter().map(|&(lo, _)| lo as u64).collect();
+    if ck.rng_lo != expect {
+        return Err(CheckpointError::Mismatch(
+            "snapshot RNG stream positions diverge from this build's schedule".into(),
+        )
+        .into());
+    }
+    Ok(Some(ck))
 }
 
 /// Runs the full distributed IMM pipeline. See [`run_infmax`] for the
@@ -202,59 +428,209 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
         && cfg.m > 1
         && matches!(cfg.algorithm, Algorithm::GreediRis | Algorithm::GreediRisTrunc);
 
+    // ---- Elastic recovery (PR 7): rank-0 fault injection, durable
+    // snapshots, resume. The snapshot layer only engages for the
+    // streaming algorithms (the checkpoint/resume contract is defined on
+    // their determinism backbone).
+    let mut r0 = Rank0Faults::new(cfg);
+    let elastic = matches!(cfg.algorithm, Algorithm::GreediRis | Algorithm::GreediRisTrunc);
+    let mut writer = match (&cfg.checkpoint_dir, elastic) {
+        (Some(d), true) => Some(Checkpointer::new(d, cfg, graph)),
+        _ => None,
+    };
+    let resume = if elastic { load_resume(cfg, graph)? } else { None };
+
     // ---- Estimation phase (martingale rounds), unless θ is overridden. ----
     let (theta, lower_bound) = if let Some(t) = cfg.theta_override {
+        if let Some(ck) = &resume {
+            if ck.stage != Stage::Finalized || ck.theta != t {
+                return Err(CheckpointError::Mismatch(format!(
+                    "snapshot θ {} (stage {:?}) does not match --theta {t}",
+                    ck.theta, ck.stage
+                ))
+                .into());
+            }
+        }
+        if let Some(w) = writer.as_mut() {
+            // A θ-override run has no estimation state to lose; the
+            // Finalized marker just keeps kill/resume uniform.
+            let ck = w.snap(Stage::Finalized, 0, t, 0, f64::NAN, (0.0, 0), &[], &volumes, None);
+            w.write(&ck)?;
+        }
         (t, f64::NAN)
     } else {
         let params = ImmParams::new(graph.n() as u64, cfg.k as u64, cfg.eps);
         let mut driver = MartingaleDriver::new(params);
         let mut state = DistState::new(graph.n(), cfg.m, &pool, cfg.seed, 0, do_shuffle);
-        loop {
-            rounds += 1;
-            let target = driver.theta_hat();
-            let (gs, out) = if fused && scorer.is_none() {
-                let (gs, r) = fused_round(cluster, graph, cfg, &mut state, target)?;
-                (gs, stream_outcome(r))
-            } else {
-                let gs = grow_to_checked(cluster, graph, cfg, &mut state, target)?;
-                let out = select(
-                    cluster,
-                    &state,
-                    graph,
-                    cfg,
-                    scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
-                )?;
-                (gs, out)
-            };
-            fold_grow(&mut breakdown, &mut volumes, &gs);
-            breakdown.select_local += out.select_local;
-            breakdown.select_global += out.select_global;
-            volumes.stream_bytes += out.stream_bytes;
-            volumes.stream_raw_bytes += out.stream_raw_bytes;
-            volumes.reduction_bytes += out.reduction_bytes;
-            volumes.streamed_seeds += out.streamed_seeds;
-            volumes.pruned_seeds += out.pruned_seeds;
-            // Broadcast of the round's utility (Alg. 4 epilogue).
-            collectives::broadcast_cost(cluster, 0, 8);
-            volumes.broadcast_bytes += 8;
-            match driver.report(out.solution.coverage) {
-                RoundDecision::Continue { .. } => continue,
-                RoundDecision::Finalize { theta, lower_bound } => break (theta, lower_bound),
+        let mut coverages: Vec<u64> = Vec::new();
+        let mut floor = (0.0f64, 0u64);
+        // Replay the snapshot's coverage history through the fresh driver:
+        // its state is a pure function of the reports, so the remaining
+        // round schedule is exactly the uninterrupted run's. The replay is
+        // validated against the snapshot's verdict — a history that
+        // disagrees with this build's martingale math is a typed mismatch,
+        // never a silently different run.
+        let mut replayed_final: Option<(u64, f64)> = None;
+        if let Some(ck) = &resume {
+            for (i, &cov) in ck.coverages.iter().enumerate() {
+                rounds += 1;
+                let _target = driver.theta_hat();
+                let last = i + 1 == ck.coverages.len();
+                match driver.report(cov) {
+                    RoundDecision::Continue { .. } => {
+                        if last && ck.stage == Stage::Finalized {
+                            return Err(CheckpointError::Mismatch(
+                                "snapshot is finalized but its history keeps estimating".into(),
+                            )
+                            .into());
+                        }
+                    }
+                    RoundDecision::Finalize { theta, lower_bound } => {
+                        if !(last && ck.stage == Stage::Finalized && theta == ck.theta) {
+                            return Err(CheckpointError::Mismatch(format!(
+                                "history finalizes at round {rounds} with θ {theta}, \
+                                 snapshot says stage {:?} with θ {}",
+                                ck.stage, ck.theta
+                            ))
+                            .into());
+                        }
+                        replayed_final = Some((theta, lower_bound));
+                    }
+                }
+            }
+            coverages = ck.coverages.clone();
+            volumes = ck.volumes;
+            floor = ck.floor;
+            if replayed_final.is_none() {
+                // Re-enter the loop mid-schedule: restore the materialized
+                // sampling prefix and the accumulated covers (in-memory
+                // engines; process workers rebuild theirs through the
+                // REJOIN catch-up broadcast on first contact).
+                state.theta = ck.theta;
+                for (p, blob) in ck.covers.iter().enumerate() {
+                    if let Some(blob) = blob {
+                        state.covers[p] = checkpoint::decode_cover(blob)?;
+                    }
+                }
+            }
+        }
+        if let Some((th, lb)) = replayed_final {
+            (th, lb)
+        } else {
+            loop {
+                rounds += 1;
+                r0.enter_round();
+                let target = driver.theta_hat();
+                let grow_from = state.theta;
+                let out = if fused && scorer.is_none() {
+                    let (gs, r) = fused_round(cluster, graph, cfg, &mut state, target)?;
+                    fold_grow(&mut breakdown, &mut volumes, &gs);
+                    if let Some(w) = writer.as_mut() {
+                        w.note_chunks(gs.chunks);
+                    }
+                    stream_outcome(r)
+                } else {
+                    let gs = grow_to_checked(cluster, graph, cfg, &mut state, target)?;
+                    // Fold before the AfterGrow snapshot so its stored
+                    // volumes include this grow — resume re-runs the grow
+                    // as a no-op and must not re-count it.
+                    fold_grow(&mut breakdown, &mut volumes, &gs);
+                    if let Some(w) = writer.as_mut() {
+                        w.note_chunks(gs.chunks);
+                        if !w.process && w.due() {
+                            let ck = w.snap(
+                                Stage::AfterGrow,
+                                rounds - 1,
+                                state.theta,
+                                grow_from,
+                                f64::NAN,
+                                floor,
+                                &coverages,
+                                &volumes,
+                                Some(&state),
+                            );
+                            w.write(&ck)?;
+                        }
+                    }
+                    r0.enter_select();
+                    select(
+                        cluster,
+                        &state,
+                        graph,
+                        cfg,
+                        scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
+                    )?
+                };
+                breakdown.select_local += out.select_local;
+                breakdown.select_global += out.select_global;
+                volumes.stream_bytes += out.stream_bytes;
+                volumes.stream_raw_bytes += out.stream_raw_bytes;
+                volumes.reduction_bytes += out.reduction_bytes;
+                volumes.streamed_seeds += out.streamed_seeds;
+                volumes.pruned_seeds += out.pruned_seeds;
+                coverages.push(out.solution.coverage);
+                floor = out.floor;
+                // Broadcast of the round's utility (Alg. 4 epilogue).
+                collectives::broadcast_cost(cluster, 0, 8);
+                volumes.broadcast_bytes += 8;
+                match driver.report(out.solution.coverage) {
+                    RoundDecision::Continue { .. } => {
+                        if let Some(w) = writer.as_mut() {
+                            if w.due() {
+                                let ck = w.snap(
+                                    Stage::RoundStart,
+                                    rounds,
+                                    state.theta,
+                                    grow_from,
+                                    f64::NAN,
+                                    floor,
+                                    &coverages,
+                                    &volumes,
+                                    Some(&state),
+                                );
+                                w.write(&ck)?;
+                            }
+                        }
+                        continue;
+                    }
+                    RoundDecision::Finalize { theta, lower_bound } => {
+                        if let Some(w) = writer.as_mut() {
+                            let ck = w.snap(
+                                Stage::Finalized,
+                                rounds,
+                                theta,
+                                grow_from,
+                                lower_bound,
+                                floor,
+                                &coverages,
+                                &volumes,
+                                None,
+                            );
+                            w.write(&ck)?;
+                        }
+                        break (theta, lower_bound);
+                    }
+                }
             }
         }
     };
 
-    // ---- Final phase: fresh samples, final selection. ----
+    // ---- Final phase: fresh samples, final selection (always redone from
+    // scratch on resume — its id space is disjoint and single-shot). ----
+    r0.enter_round();
     let mut state = DistState::new(graph.n(), cfg.m, &pool, cfg.seed, FINAL_PHASE_BASE, do_shuffle);
-    let (t_before_final, gs, out) = if fused && scorer.is_none() {
+    let (t_before_final, out) = if fused && scorer.is_none() {
         // The fused round has no S2/S3 boundary: sender/receiver spans are
         // measured from the round's start.
         let tb = cluster.makespan();
         let (gs, r) = fused_round(cluster, graph, cfg, &mut state, theta)?;
-        (tb, gs, stream_outcome(r))
+        fold_grow(&mut breakdown, &mut volumes, &gs);
+        (tb, stream_outcome(r))
     } else {
         let gs = grow_to_checked(cluster, graph, cfg, &mut state, theta)?;
+        fold_grow(&mut breakdown, &mut volumes, &gs);
         let tb = cluster.makespan();
+        r0.enter_select();
         let out = select(
             cluster,
             &state,
@@ -262,9 +638,8 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
             cfg,
             scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b)),
         )?;
-        (tb, gs, out)
+        (tb, out)
     };
-    fold_grow(&mut breakdown, &mut volumes, &gs);
     breakdown.select_local += out.select_local;
     breakdown.select_global += out.select_global;
     volumes.stream_bytes += out.stream_bytes;
@@ -276,8 +651,11 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
     volumes.broadcast_bytes += (cfg.k as u64 + 1) * 4;
     breakdown.coordination = (cluster.makespan() - breakdown.total()).max(0.0);
     // Fabric robustness counters (process transport only; all-zero — and
-    // unprinted — elsewhere).
+    // unprinted — elsewhere), plus this run's durable snapshot count.
     breakdown.fabric = cluster.fault_stats();
+    if let Some(w) = &writer {
+        breakdown.fabric.checkpoints = w.written;
+    }
 
     let _ = lower_bound;
     Ok(RunResult {

@@ -76,13 +76,27 @@
 //!   resulting seed set is a pure function of (config, seed, loss
 //!   point) — rerunning with the same injected fault reproduces it
 //!   bit-identically.
+//! - **respawn** (PR 7): within the failing round the supervisor degrades
+//!   exactly as `redistribute`; at the next phase boundary
+//!   ([`prepare_fabric_round`]) it re-launches the worker binary
+//!   (`GREEDIRIS_REJOIN=1`), replays HELLO, and sends **REJOIN**
+//!   (`[id_base][rebuild-to θ]`) so the fresh process rebuilds its
+//!   accumulated cover by pure regeneration — the completed run's seeds
+//!   are bit-identical to the no-fault run. Attempts are capped per rank
+//!   ([`MAX_RESPAWNS`]); an exhausted rank is abandoned and stays
+//!   redistributed. A fused or select round that lost a rank mid-phase
+//!   redoes the selection after revival (S3 never mutates the covers).
 //!
 //! The no-fault path is untouched: seeds, θ schedule, and raw-byte
 //! counters stay bit-identical across `sim | threads | process`.
 //! Deterministic fault injection for tests/CI rides in
-//! `GREEDIRIS_FAULT=<rank>:<phase>:<kind>[:<ms>]` (phases
+//! `GREEDIRIS_FAULT=<spec>[,<spec>...]` with
+//! `<spec> = <rank>:<phase>:<kind>[:<ms>]` (phases
 //! `hello|round|select`, kinds `kill|hang|corrupt|slow`); workers arm
-//! the fault at the matching phase entry (see [`fire_fault`]).
+//! their matching specs in order at each phase entry (see
+//! [`fire_fault`]), and a respawned worker skips the specs its earlier
+//! lives already consumed (`GREEDIRIS_FAULT_SKIP`), so
+//! respawn-then-kill-again scenarios are expressible.
 
 use crate::coordinator::config::{Algorithm, Config, LocalSolver};
 use crate::coordinator::greediris::{
@@ -91,17 +105,17 @@ use crate::coordinator::greediris::{
 use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard};
 use crate::coordinator::sampling::{
     apply_overlap_timeline, draw_owner_partition, invert_batch_to_streams, rank_ranges,
-    run_rank_chunk_stages, wire_volumes, ChunkGrow, ChunkPlan, DistState, GrowStats, MergeOut,
-    SamplerOut,
+    rebuild_cover_to, run_rank_chunk_stages, wire_volumes, ChunkGrow, ChunkPlan, DistState,
+    GrowStats, MergeOut, SamplerOut,
 };
 use crate::diffusion::DiffusionModel;
 use crate::distributed::fault::{
-    env_fabric_timeout_ms, FabricError, FabricErrorKind, FabricPhase, FabricTimeouts, FaultKind,
-    FaultPhase, FaultSpec, LossPolicy, LossRecovery, NoRecovery,
+    env_fabric_timeout_ms, env_fault_skip, FabricError, FabricErrorKind, FabricPhase,
+    FabricTimeouts, FaultKind, FaultPhase, FaultSpec, LossPolicy, LossRecovery, NoRecovery,
 };
 use crate::distributed::transport::process::{
     decode_graph, encode_graph, get_f64, put_f64, worker_binary, FabricOptions, HubFeeder,
-    ProcessCluster, WorkerLink, K_S2, K_S3,
+    ProcessCluster, WorkerLink, K_S2, K_S3, MAX_RESPAWNS,
 };
 use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{wire, Transport, TransportKind};
@@ -111,6 +125,8 @@ use crate::maxcover::InvertedIndex;
 use crate::metrics::ReceiverBreakdown;
 use crate::sampling::{batch_parallel, SampleBatch};
 use crate::{anyhow, bail};
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
@@ -120,6 +136,12 @@ const OP_SELECT: u8 = 2;
 const OP_STATS_CHUNK: u8 = 3;
 const OP_STATS_PHASED: u8 = 4;
 const OP_STATS_SELECT: u8 = 5;
+/// REJOIN (supervisor → one worker, PR 7): `[id_base][rebuild-to θ]`.
+/// Sent right after HELLO to a respawned worker (and broadcast on a
+/// fresh cluster whose `--resume`d state already holds a sampling
+/// prefix): the worker rebuilds its accumulated cover for `[0, θ)` by
+/// pure regeneration — no peer traffic, byte-identical CSR.
+const OP_REJOIN: u8 = 6;
 
 fn derr(e: wire::DecodeError) -> Error {
     Error::msg(format!("process control payload: {e}"))
@@ -182,7 +204,11 @@ fn solver_from(t: u8) -> Result<LocalSolver> {
     }
 }
 
-fn encode_config(cfg: &Config) -> Vec<u8> {
+/// Serializes the seed-bearing config knobs (also the byte string the
+/// checkpoint layer fingerprints — see `runtime::checkpoint`: two runs
+/// whose encodings match produce bit-identical seeds, and fault/recovery
+/// plumbing is deliberately excluded).
+pub(crate) fn encode_config(cfg: &Config) -> Vec<u8> {
     let mut b = Vec::new();
     wire::put_varint(&mut b, cfg.k as u64);
     wire::put_varint(&mut b, cfg.m as u64);
@@ -238,12 +264,12 @@ fn decode_config(bytes: &[u8]) -> Result<Config> {
     c.floor_prune = floor_prune;
     c.overlap = overlap;
     // Workers never dispatch on the transport; pin the field so an
-    // inherited GREEDIRIS_TRANSPORT can't confuse diagnostics. The fault
-    // spec never rides the config blob either: a worker arms only the
-    // fault addressed to it via its own GREEDIRIS_FAULT env (set
-    // per-child by the spawner), so pin it out of the decoded config.
+    // inherited GREEDIRIS_TRANSPORT can't confuse diagnostics. Fault
+    // specs never ride the config blob either: a worker arms only the
+    // faults addressed to it via its own GREEDIRIS_FAULT env (set
+    // per-child by the spawner), so pin them out of the decoded config.
     c.transport = TransportKind::Sim;
-    c.fault = None;
+    c.fault = Vec::new();
     Ok(c)
 }
 
@@ -392,6 +418,13 @@ fn enc_stats_select(solve: f64) -> Vec<u8> {
     b
 }
 
+fn enc_rejoin(id_base: u64, to: u64) -> Vec<u8> {
+    let mut b = vec![OP_REJOIN];
+    wire::put_varint(&mut b, id_base);
+    wire::put_varint(&mut b, to);
+    b
+}
+
 // ---------------------------------------------------------------------------
 // Fault tolerance: fabric options, loss-aware stats collection, adoption.
 // ---------------------------------------------------------------------------
@@ -402,7 +435,37 @@ pub(crate) fn fabric_options(cfg: &Config) -> FabricOptions {
     FabricOptions {
         timeouts: FabricTimeouts::from_millis(cfg.fabric_timeout_ms),
         policy: cfg.on_rank_loss,
-        fault: cfg.fault,
+        fault: cfg.fault.clone(),
+    }
+}
+
+/// Round-boundary fabric preparation (PR 7), called after
+/// `ensure_cluster` and before [`ProcessCluster::begin_round`] + the
+/// round broadcast. `prefix` is the sampling prefix `[0, prefix)` a
+/// participating worker must already hold at this boundary (the round's
+/// `from` θ; the accumulated θ at a select).
+///
+/// - On a **fresh** cluster whose coordinator state already carries a
+///   prefix (`--resume` restored θ > 0), every worker is told to rebuild
+///   it — worker covers are a pure function of (config, seed, id_base),
+///   so the catch-up is bit-identical to the covers the killed run had.
+/// - Under `--on-rank-loss respawn`, every lost non-abandoned rank is
+///   re-launched ([`ProcessCluster::respawn_rank`]) and handed the same
+///   rebuild order. A failed relaunch (or the attempt cap) abandons the
+///   rank — it keeps redistribute semantics and the round runs degraded.
+fn prepare_fabric_round(pc: &mut ProcessCluster, id_base: u64, prefix: u64) {
+    if pc.take_fresh() && prefix > 0 {
+        pc.ctrl_broadcast(&enc_rejoin(id_base, prefix));
+        pc.health().rejoined.fetch_add(pc.m() as u64 - 1, Ordering::Relaxed);
+    }
+    if pc.policy() != LossPolicy::Respawn {
+        return;
+    }
+    for rank in pc.lost_live_ranks() {
+        if pc.respawn_rank(rank).is_ok() {
+            pc.ctrl_send(rank, &enc_rejoin(id_base, prefix));
+            pc.health().rejoined.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 
@@ -443,7 +506,7 @@ fn collect_stats(pc: &mut ProcessCluster, expect_op: u8) -> Result<Vec<Option<Ve
                 // A lost rank reports nothing; its measurement is
                 // substituted with zeros by the caller. A rank that
                 // reported *before* dying already counted.
-                (LossPolicy::Redistribute, Some(l)) if l > 0 && l < m => {
+                (p, Some(l)) if p.degrades() && l > 0 && l < m => {
                     if !reported[l] {
                         reported[l] = true;
                         need -= 1;
@@ -509,7 +572,7 @@ impl<'a> ChunkAdopter<'a> {
 
 impl LossRecovery for ChunkAdopter<'_> {
     fn redistribute(&mut self, rank: usize) -> bool {
-        if self.policy != LossPolicy::Redistribute || rank == 0 || rank >= self.m {
+        if !self.policy.degrades() || rank == 0 || rank >= self.m {
             return false;
         }
         if self.adopted[rank] {
@@ -564,7 +627,7 @@ struct PhasedAdopter<'a> {
 
 impl LossRecovery for PhasedAdopter<'_> {
     fn redistribute(&mut self, rank: usize) -> bool {
-        if self.policy != LossPolicy::Redistribute || rank == 0 || rank >= self.m {
+        if !self.policy.degrades() || rank == 0 || rank >= self.m {
             return false;
         }
         if self.adopted[rank] {
@@ -639,6 +702,7 @@ pub fn overlapped_round_process(
 
     let pt = t.as_process().expect("process transport");
     let pc = pt.ensure_cluster(&fabric_options(cfg), || hello_payload(m, cfg, graph))?;
+    prepare_fabric_round(pc, id_base, from);
     pc.begin_round(FabricPhase::Round);
     pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, true, true));
     let policy = pc.policy();
@@ -764,7 +828,21 @@ pub fn overlapped_round_process(
         receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
         sender_end_max,
         receiver_end,
+        final_floor: board.read(),
     };
+
+    // A rank lost during a *fused* round under `--on-rank-loss respawn`:
+    // the grow half completed degraded (adoption made every survivor's
+    // cover whole), so keep its side effects, revive the rank, and
+    // recompute only the selection with full participation — covers are
+    // side-effect-free inputs to S3, and the redone solution is exactly
+    // the no-fault one. Only modeled timing differs, never seeds/θ.
+    let pt = t.as_process().expect("process transport");
+    if policy == LossPolicy::Respawn && pt.cluster_mut().is_some_and(|c| c.has_live_losses()) {
+        let t1 = t.makespan();
+        let round = select_process(t, state, cfg, t1)?;
+        return Ok((gstats, round));
+    }
     Ok((gstats, round))
 }
 
@@ -790,6 +868,7 @@ pub(crate) fn grow_process(
         let plan = ChunkPlan::new(m, from, target_theta, cfg);
         let pt = t.as_process().expect("process transport");
         let pc = pt.ensure_cluster(&fabric_options(cfg), || hello_payload(m, cfg, graph))?;
+        prepare_fabric_round(pc, id_base, from);
         pc.begin_round(FabricPhase::Round);
         pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, true, false));
         let policy = pc.policy();
@@ -836,6 +915,7 @@ pub(crate) fn grow_process(
     // the thread backend's phase-stepped grow). ----
     let pt = t.as_process().expect("process transport");
     let pc = pt.ensure_cluster(&fabric_options(cfg), || hello_payload(m, cfg, graph))?;
+    prepare_fabric_round(pc, id_base, from);
     pc.begin_round(FabricPhase::Round);
     pc.ctrl_broadcast(&enc_round(id_base, from, target_theta, false, false));
     let policy = pc.policy();
@@ -959,6 +1039,14 @@ pub(crate) fn grow_process(
 /// accumulated covers, the supervisor runs the canonical merger + live
 /// threaded receiver. Mirrors the thread backend's phase-stepped
 /// `threaded_streaming_round` result- and clock-wise.
+///
+/// Under `--on-rank-loss respawn` a rank lost during the select is
+/// recovered by *redoing the whole phase*: S3 reads the accumulated
+/// covers without mutating them and every attempt starts a fresh
+/// receiver, so the driver purges the round buffers, respawns the rank
+/// at the retry's boundary, and reruns — the completed retry is exactly
+/// the no-fault selection. The retry count is bounded by the per-rank
+/// respawn caps (exhausted ranks degrade to redistribute semantics).
 pub(crate) fn select_process(
     t: &mut dyn Transport,
     state: &DistState,
@@ -971,62 +1059,80 @@ pub(crate) fn select_process(
     let theta = state.theta as usize;
     let delta = cfg.delta;
     let bucket_threads = live_bucket_threads(cfg);
-    let board = Arc::new(FloorBoard::new(bucket_threads));
-    let pt = t.as_process().expect("process transport");
-    let pc = pt
-        .cluster_mut()
-        .ok_or_else(|| anyhow!("process select requires a preceding process grow round"))?;
-    pc.begin_round(FabricPhase::Select);
-    pc.ctrl_broadcast(&[OP_SELECT]);
-    let policy = pc.policy();
-    let mut s3_inbox = match pc.take_s3_inbox() {
-        Ok(i) => i,
-        Err(e) => return Err(fab_err(pc, e)),
-    };
-    let floor_out = pc.floor_pusher();
-    let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
+    // Terminates without it (abandonment shrinks the eligible set), but
+    // bound the redo loop explicitly all the same.
+    let max_attempts = 1 + MAX_RESPAWNS as usize * m;
+    let mut attempt = 0usize;
+    let (merge, solves, recv_secs, sols, final_floor) = loop {
+        attempt += 1;
+        let board = Arc::new(FloorBoard::new(bucket_threads));
+        let pt = t.as_process().expect("process transport");
+        let pc = pt
+            .cluster_mut()
+            .ok_or_else(|| anyhow!("process select requires a preceding process grow round"))?;
+        prepare_fabric_round(pc, state.id_base, state.theta);
+        pc.begin_round(FabricPhase::Select);
+        pc.ctrl_broadcast(&[OP_SELECT]);
+        let policy = pc.policy();
+        let mut s3_inbox = match pc.take_s3_inbox() {
+            Ok(i) => i,
+            Err(e) => return Err(fab_err(pc, e)),
+        };
+        let floor_out = pc.floor_pusher();
+        let (tx_burst, rx_burst) = mpsc::channel::<Burst>();
 
-    let (sols, merge_res, stats_res, recv_secs, s3_back) = std::thread::scope(|scope| {
-        let board_r = Arc::clone(&board);
-        let threads = bucket_threads + 1;
-        let recv_handle = scope.spawn(move || {
-            let tr = Instant::now();
-            let out = run_threaded_receiver(
-                theta,
-                k,
-                delta,
-                threads,
-                ship_limit.max(1) + 1,
-                rx_burst,
-                Some(board_r),
-            );
-            (out, tr.elapsed().as_secs_f64())
+        let (sols, merge_res, stats_res, recv_secs, s3_back) = std::thread::scope(|scope| {
+            let board_r = Arc::clone(&board);
+            let threads = bucket_threads + 1;
+            let recv_handle = scope.spawn(move || {
+                let tr = Instant::now();
+                let out = run_threaded_receiver(
+                    theta,
+                    k,
+                    delta,
+                    threads,
+                    ship_limit.max(1) + 1,
+                    rx_burst,
+                    Some(board_r),
+                );
+                (out, tr.elapsed().as_secs_f64())
+            });
+            let board_m = Arc::clone(&board);
+            let merge_handle = scope.spawn(move || {
+                let push = move |live: &[usize]| {
+                    let (floor, l) = board_m.read();
+                    floor_out.push(floor, l, live);
+                };
+                let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push), policy);
+                (out, s3_inbox)
+            });
+            let stats_res = collect_stats(pc, OP_STATS_SELECT);
+            let (merge_res, s3_back) = merge_handle.join().expect("merge thread");
+            let ((sols, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
+            (sols, merge_res, stats_res, recv_secs, s3_back)
         });
-        let board_m = Arc::clone(&board);
-        let merge_handle = scope.spawn(move || {
-            let push = move |live: &[usize]| {
-                let (floor, l) = board_m.read();
-                floor_out.push(floor, l, live);
-            };
-            let out = run_canonical_merger(&mut s3_inbox, m, tx_burst, Some(push), policy);
-            (out, s3_inbox)
-        });
-        let stats_res = collect_stats(pc, OP_STATS_SELECT);
-        let (merge_res, s3_back) = merge_handle.join().expect("merge thread");
-        let ((sols, _stats), recv_secs) = recv_handle.join().expect("receiver thread");
-        (sols, merge_res, stats_res, recv_secs, s3_back)
-    });
-    pc.put_s3_inbox(s3_back);
-    let merge = match merge_res {
-        Ok(out) => out,
-        Err(e) => return Err(fab_err(pc, e)),
-    };
-    let mut solves = vec![0.0f64; m];
-    for (i, body) in stats_res?.into_iter().enumerate() {
-        if let Some(b) = body {
-            solves[i + 1] = get_f64(&mut wire::Reader::new(&b)).map_err(derr)?;
+        pc.put_s3_inbox(s3_back);
+        let merge = match merge_res {
+            Ok(out) => out,
+            Err(e) => return Err(fab_err(pc, e)),
+        };
+        let bodies = stats_res?;
+        if policy == LossPolicy::Respawn && pc.has_live_losses() && attempt < max_attempts {
+            // This attempt completed degraded; discard it, drop any
+            // stragglers from the aborted phase, and redo with the rank
+            // respawned at the retry's boundary.
+            pc.purge_round_buffers();
+            drop(sols);
+            continue;
         }
-    }
+        let mut solves = vec![0.0f64; m];
+        for (i, body) in bodies.into_iter().enumerate() {
+            if let Some(b) = body {
+                solves[i + 1] = get_f64(&mut wire::Reader::new(&b)).map_err(derr)?;
+            }
+        }
+        break (merge, solves, recv_secs, sols, board.read());
+    };
 
     // ---- Clock parity: charge measured per-rank work into the model. ----
     let mut sender_end_max = t0;
@@ -1051,6 +1157,7 @@ pub(crate) fn select_process(
         receiver: ReceiverBreakdown { bucket_threads, ..ReceiverBreakdown::default() },
         sender_end_max,
         receiver_end,
+        final_floor,
     })
 }
 
@@ -1184,8 +1291,25 @@ pub fn run_rank_worker() -> Result<()> {
     let timeouts = FabricTimeouts::from_millis(env_fabric_timeout_ms());
     // A malformed GREEDIRIS_FAULT is a hard error: a typo'd harness must
     // never silently run fault-free.
-    let fault = FaultSpec::from_env().map_err(Error::msg)?;
-    let hello_fault = fault.filter(|f| f.hits(rank, FaultPhase::Hello));
+    let mut armed: Vec<FaultSpec> = FaultSpec::from_env().map_err(Error::msg)?;
+    armed.retain(|f| f.rank == rank);
+    // A respawned life skips the specs its earlier lives consumed (the
+    // supervisor stamps GREEDIRIS_FAULT_SKIP with the prior-life count),
+    // and never re-fires hello-phase specs — that phase fired, if at all,
+    // in life one.
+    let rejoining = std::env::var_os("GREEDIRIS_REJOIN").is_some();
+    let skip = env_fault_skip().min(armed.len());
+    let mut armed = armed.split_off(skip);
+    if rejoining {
+        armed.retain(|f| !f.hits(rank, FaultPhase::Hello));
+    }
+    let mut hello_faults: VecDeque<FaultSpec> =
+        armed.iter().copied().filter(|f| f.hits(rank, FaultPhase::Hello)).collect();
+    let mut round_faults: VecDeque<FaultSpec> =
+        armed.iter().copied().filter(|f| f.hits(rank, FaultPhase::Round)).collect();
+    let mut select_faults: VecDeque<FaultSpec> =
+        armed.iter().copied().filter(|f| f.hits(rank, FaultPhase::Select)).collect();
+    let hello_fault = hello_faults.pop_front();
     if let Some(f) = hello_fault {
         if f.kind != FaultKind::Corrupt {
             // Kill/hang fire before the fabric ever sees this rank; slow
@@ -1200,8 +1324,6 @@ pub fn run_rank_worker() -> Result<()> {
             fire_fault(f, Some(&link));
         }
     }
-    let mut round_fault = fault.filter(|f| f.hits(rank, FaultPhase::Round));
-    let mut select_fault = fault.filter(|f| f.hits(rank, FaultPhase::Select));
     let (m, cfg, graph) = decode_hello(&hello)?;
     if rank >= m {
         bail!("rank {rank} out of range for m = {m}");
@@ -1218,7 +1340,7 @@ pub fn run_rank_worker() -> Result<()> {
         let mut r = wire::Reader::new(&body);
         match r.byte().map_err(derr)? {
             OP_ROUND => {
-                if let Some(f) = round_fault.take() {
+                if let Some(f) = round_faults.pop_front() {
                     fire_fault(f, Some(&link));
                 }
                 let id_base = r.varint().map_err(derr)?;
@@ -1273,11 +1395,32 @@ pub fn run_rank_worker() -> Result<()> {
                 link.ctrl_send(&stats);
             }
             OP_SELECT => {
-                if let Some(f) = select_fault.take() {
+                if let Some(f) = select_faults.pop_front() {
                     fire_fault(f, Some(&link));
                 }
                 let solve = run_s3(&link, &cover, &cfg, theta);
                 link.ctrl_send(&enc_stats_select(solve));
+            }
+            OP_REJOIN => {
+                // Round-phase specs pop here too, so a respawned life can
+                // be killed again right at rejoin (expressed as a second
+                // round spec for this rank).
+                if let Some(f) = round_faults.pop_front() {
+                    fire_fault(f, Some(&link));
+                }
+                let id_base = r.varint().map_err(derr)?;
+                let to = r.varint().map_err(derr)?;
+                if id_base != cur_base {
+                    owner = draw_owner_partition(n, &pool, cfg.seed, id_base);
+                    cur_base = id_base;
+                }
+                cover = InvertedIndex::new();
+                if to > 0 {
+                    rebuild_cover_to(&mut cover, &graph, &cfg, &owner, m, rank, id_base, to);
+                }
+                theta = to;
+                // No STATS reply: rebuild happens off the measured clock
+                // (recovery work is not part of the no-fault timeline).
             }
             other => bail!("unknown control opcode {other}"),
         }

@@ -248,6 +248,49 @@ pub(crate) fn rank_ranges(m: usize, from: u64, to: u64) -> Vec<(SampleId, usize)
         .collect()
 }
 
+/// Rebuilds one rank's accumulated S2 cover for the sampling prefix
+/// `[0, to)` by pure regeneration — the recovery path of worker
+/// respawn/rejoin and checkpoint resume (PR 7).
+///
+/// A rank's accumulated cover holds the `(vertex ∈ owned(rank), id)`
+/// pairs contributed by *every* source rank's batches over the full id
+/// range, and the CSR it converges to is canonical (ids ascending per
+/// vertex — [`crate::maxcover::InvertedIndex::merge_streams_keyed`] is
+/// arrival-order-invariant). Sample content is a pure function of the
+/// global id (`seed ^ id_base` leap-frog), so regenerating all ids
+/// ascending, inverting each chunk against the same owner partition,
+/// and keeping only this rank's stream reproduces that CSR
+/// byte-identically, for any chunk size ([`InvertedIndex::merge_streams`]
+/// preserves sorted runs when merged ids strictly ascend). No peer
+/// traffic, no ledger replay — recovery needs only `(config, seed,
+/// id_base, owner, to)`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rebuild_cover_to(
+    cover: &mut InvertedIndex,
+    graph: &Graph,
+    cfg: &Config,
+    owner: &[u32],
+    m: usize,
+    rank: usize,
+    id_base: u64,
+    to: u64,
+) {
+    // Cut at the round pipeline's chunk granularity: bounded peak memory,
+    // and the result is chunk-size-invariant anyway.
+    let per_rank = to.div_ceil(m.max(1) as u64) as usize;
+    let chunk = cfg.chunk_size(per_rank).max(1);
+    let mut lo = 0u64;
+    while lo < to {
+        let len = (chunk as u64).min(to - lo) as usize;
+        let batch =
+            batch_parallel(graph, cfg.model, cfg.seed ^ id_base, lo as SampleId, len, cfg.s1_threads);
+        let streams = invert_batch_to_streams(&batch, owner, m);
+        let own = std::slice::from_ref(&streams[rank]);
+        cover.merge_streams(own);
+        lo += len as u64;
+    }
+}
+
 /// `(vertex, id)` entries carried by a `[v, count, ids...]` wire stream
 /// (run headers excluded — the partition-invariant payload volume).
 fn stream_entries(s: &[u32]) -> u64 {

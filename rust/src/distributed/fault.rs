@@ -12,13 +12,15 @@
 //!   with `?` everywhere.
 //! - [`RankLoss`] — the hub's liveness verdict for one rank (recorded
 //!   once, first cause wins), and [`LossPolicy`] — what the round driver
-//!   does about it: fail the round with a per-rank diagnostic, or
-//!   deterministically redistribute the lost rank's remaining work.
+//!   does about it: fail the round with a per-rank diagnostic,
+//!   deterministically redistribute the lost rank's remaining work, or
+//!   (PR 7) respawn the worker and rejoin it at the next round boundary.
 //! - [`FaultSpec`] — the deterministic fault-injection grammar
-//!   (`GREEDIRIS_FAULT=<rank>:<phase>:<kind>[:<ms>]`) CI uses to prove
-//!   the detection/degradation paths actually fire. Runtime checks, no
-//!   `#[cfg]` walls: the release binary under test is the binary that
-//!   ships.
+//!   (`GREEDIRIS_FAULT=<rank>:<phase>:<kind>[:<ms>]`, comma-separated
+//!   for multiple faults) CI uses to prove the detection/degradation
+//!   paths actually fire. A malformed spec is a typed [`FabricError`]
+//!   at startup, never a silent ignore. Runtime checks, no `#[cfg]`
+//!   walls: the release binary under test is the binary that ships.
 //! - [`FabricTimeouts`] + [`backoff_delay`] — the deadline/retry policy:
 //!   every blocking fabric wait has a configurable deadline
 //!   (`--fabric-timeout` / `GREEDIRIS_FABRIC_TIMEOUT_MS`), and workers
@@ -223,6 +225,16 @@ pub enum LossPolicy {
     /// they are a pure function of the global sample ids — and the lost
     /// rank's S3 stream is dropped from the canonical merge).
     Redistribute,
+    /// Redistribute the failing round like [`LossPolicy::Redistribute`],
+    /// then re-launch the lost worker at the next round boundary: the
+    /// fresh process env-joins with `GREEDIRIS_REJOIN=1`, replays HELLO,
+    /// and rebuilds its accumulated cover by pure sample regeneration
+    /// (bit-identical CSR — see `coordinator::sampling::rebuild_cover_to`),
+    /// so a completed run's seed set matches the no-fault run exactly.
+    /// Capped respawn attempts per rank; a rank that exhausts them is
+    /// abandoned and degrades to redistribute semantics (and a fabric
+    /// that cannot even degrade still fails typed).
+    Respawn,
 }
 
 impl LossPolicy {
@@ -230,7 +242,14 @@ impl LossPolicy {
         match self {
             LossPolicy::Fail => "fail",
             LossPolicy::Redistribute => "redistribute",
+            LossPolicy::Respawn => "respawn",
         }
+    }
+
+    /// Whether a lost rank's round work is deterministically taken over
+    /// by the supervisor (both degrade-and-continue policies).
+    pub fn degrades(self) -> bool {
+        matches!(self, LossPolicy::Redistribute | LossPolicy::Respawn)
     }
 }
 
@@ -240,7 +259,10 @@ impl std::str::FromStr for LossPolicy {
         match s.to_ascii_lowercase().as_str() {
             "fail" => Ok(LossPolicy::Fail),
             "redistribute" | "drop" => Ok(LossPolicy::Redistribute),
-            other => Err(format!("unknown rank-loss policy '{other}' (fail | redistribute)")),
+            "respawn" => Ok(LossPolicy::Respawn),
+            other => Err(format!(
+                "unknown rank-loss policy '{other}' (fail | redistribute | respawn)"
+            )),
         }
     }
 }
@@ -314,38 +336,54 @@ impl FaultKind {
 }
 
 /// A deterministic injected fault: `<rank>:<phase>:<kind>[:<ms>]`, e.g.
-/// `GREEDIRIS_FAULT=2:round:kill` or `1:round:slow:250`. Parsed by the
-/// CLI into [`Config::fault`](crate::coordinator::Config) and handed to
-/// spawned workers explicitly via their environment, so concurrent
-/// clusters in one test binary never race on ambient state.
+/// `GREEDIRIS_FAULT=2:round:kill` or `1:round:slow:250`. Multiple faults
+/// are comma-separated (`2:round:kill,2:round:kill` kills the respawned
+/// incarnation again). Parsed by the CLI into
+/// [`Config::fault`](crate::coordinator::Config) and handed to spawned
+/// workers explicitly via their environment, so concurrent clusters in
+/// one test binary never race on ambient state.
+///
+/// Rank-0 specs target the supervisor itself and are fired by the
+/// pipeline driver (transport-agnostic): for rank 0 the `ms` field is
+/// reinterpreted as the 1-based phase-entry ordinal (`0:round:kill:2` =
+/// die entering the second grow round; absent = first entry), which is
+/// what the checkpoint kill/resume gates key on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultSpec {
     pub rank: usize,
     pub phase: FaultPhase,
     pub kind: FaultKind,
-    /// Delay for `slow` (default 1000 ms); ignored by other kinds.
+    /// Delay for `slow` (default 1000 ms); the 1-based phase-entry
+    /// ordinal for rank-0 (supervisor) specs; ignored otherwise.
     pub millis: u64,
 }
 
 impl FaultSpec {
-    /// Parses the `<rank>:<phase>:<kind>[:<ms>]` grammar.
-    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+    /// Turns a grammar violation into the typed configuration error the
+    /// CLI and workers surface at startup.
+    fn bad(detail: String) -> FabricError {
+        FabricError::new(FabricErrorKind::Protocol, FabricPhase::Launch, None, detail)
+    }
+
+    /// Parses the `<rank>:<phase>:<kind>[:<ms>]` grammar. A malformed
+    /// spec is a typed [`FabricError`] (kind `Protocol`, phase `Launch`).
+    pub fn parse(s: &str) -> Result<FaultSpec, FabricError> {
         let mut it = s.split(':');
         let rank = it
             .next()
             .filter(|t| !t.is_empty())
-            .ok_or_else(|| format!("empty fault spec '{s}'"))?
+            .ok_or_else(|| Self::bad(format!("empty fault spec '{s}'")))?
             .parse::<usize>()
-            .map_err(|e| format!("fault rank in '{s}': {e}"))?;
+            .map_err(|e| Self::bad(format!("fault rank in '{s}': {e}")))?;
         let phase = match it.next() {
             Some("hello") => FaultPhase::Hello,
             Some("round") => FaultPhase::Round,
             Some("select") => FaultPhase::Select,
             other => {
-                return Err(format!(
+                return Err(Self::bad(format!(
                     "fault phase '{}' in '{s}' (hello | round | select)",
                     other.unwrap_or("")
-                ))
+                )))
             }
         };
         let kind = match it.next() {
@@ -354,30 +392,49 @@ impl FaultSpec {
             Some("corrupt") => FaultKind::Corrupt,
             Some("slow") => FaultKind::Slow,
             other => {
-                return Err(format!(
+                return Err(Self::bad(format!(
                     "fault kind '{}' in '{s}' (kill | hang | corrupt | slow)",
                     other.unwrap_or("")
-                ))
+                )))
             }
         };
         let millis = match it.next() {
-            Some(ms) => ms.parse::<u64>().map_err(|e| format!("fault ms in '{s}': {e}"))?,
-            None => 1000,
+            Some(ms) => {
+                ms.parse::<u64>().map_err(|e| Self::bad(format!("fault ms in '{s}': {e}")))?
+            }
+            // `slow` uses ms as its delay (generous default); every other
+            // kind only reads it as the rank-0 phase-entry ordinal, where
+            // "absent" must mean "first entry".
+            None => match kind {
+                FaultKind::Slow => 1000,
+                _ => 1,
+            },
         };
         if it.next().is_some() {
-            return Err(format!("trailing fields in fault spec '{s}'"));
+            return Err(Self::bad(format!("trailing fields in fault spec '{s}'")));
         }
         Ok(FaultSpec { rank, phase, kind, millis })
     }
 
-    /// Reads `GREEDIRIS_FAULT`. `Ok(None)` when unset; a malformed value
-    /// is a hard configuration error (never silently ignored — a fault
-    /// gate that thinks it injected a fault but didn't proves nothing).
-    pub fn from_env() -> Result<Option<FaultSpec>, String> {
+    /// Parses a comma-separated list of specs. Empty input parses to an
+    /// empty list; any malformed element fails the whole list typed.
+    pub fn parse_list(s: &str) -> Result<Vec<FaultSpec>, FabricError> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(Vec::new());
+        }
+        s.split(',').map(|part| FaultSpec::parse(part.trim())).collect()
+    }
+
+    /// Reads `GREEDIRIS_FAULT` as a (possibly multi-spec) fault list.
+    /// Empty when unset; a malformed value is a hard configuration error
+    /// (never silently ignored — a fault gate that thinks it injected a
+    /// fault but didn't proves nothing).
+    pub fn from_env() -> Result<Vec<FaultSpec>, FabricError> {
         match std::env::var("GREEDIRIS_FAULT") {
-            Ok(v) if v.is_empty() => Ok(None),
-            Ok(v) => FaultSpec::parse(&v).map(Some).map_err(|e| format!("invalid GREEDIRIS_FAULT: {e}")),
-            Err(_) => Ok(None),
+            Ok(v) => FaultSpec::parse_list(&v)
+                .map_err(|e| Self::bad(format!("invalid GREEDIRIS_FAULT: {}", e.detail))),
+            Err(_) => Ok(Vec::new()),
         }
     }
 
@@ -386,10 +443,27 @@ impl FaultSpec {
         format!("{}:{}:{}:{}", self.rank, self.phase.as_str(), self.kind.as_str(), self.millis)
     }
 
+    /// The comma-joined env-var form of a fault list.
+    pub fn to_env_list(specs: &[FaultSpec]) -> String {
+        specs.iter().map(|s| s.to_env()).collect::<Vec<_>>().join(",")
+    }
+
     /// Whether this fault arms at (`rank`, `phase`).
     pub fn hits(&self, rank: usize, phase: FaultPhase) -> bool {
         self.rank == rank && self.phase == phase
     }
+}
+
+/// Reads `GREEDIRIS_FAULT_SKIP`: how many of this rank's fault specs a
+/// respawned worker must skip (the ones its previous incarnations
+/// already fired). Set by the supervisor on rejoin spawns; absent or
+/// malformed means zero (the env var is an internal supervisor→worker
+/// channel).
+pub fn env_fault_skip() -> usize {
+    std::env::var("GREEDIRIS_FAULT_SKIP")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(0)
 }
 
 impl fmt::Display for FaultSpec {
@@ -468,7 +542,8 @@ mod tests {
         assert_eq!(f.rank, 2);
         assert_eq!(f.phase, FaultPhase::Round);
         assert_eq!(f.kind, FaultKind::Kill);
-        assert_eq!(f.millis, 1000, "default delay");
+        assert_eq!(f.millis, 1, "default ordinal: first phase entry");
+        assert_eq!(FaultSpec::parse("1:round:slow").unwrap().millis, 1000, "default slow delay");
         let f = FaultSpec::parse("1:select:slow:250").unwrap();
         assert_eq!(f.kind, FaultKind::Slow);
         assert_eq!(f.millis, 250);
@@ -479,18 +554,42 @@ mod tests {
     }
 
     #[test]
-    fn fault_spec_rejects_malformed() {
+    fn fault_spec_rejects_malformed_typed() {
         for bad in ["", "x:round:kill", "1:boot:kill", "1:round:melt", "1:round:kill:9:9", "1:round:slow:x"] {
-            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+            let e = FaultSpec::parse(bad).unwrap_err();
+            assert_eq!(e.kind, FabricErrorKind::Protocol, "{bad:?}: {e}");
+            assert_eq!(e.phase, FabricPhase::Launch, "{bad:?}: {e}");
         }
+        // A malformed element poisons the whole list, typed.
+        let e = FaultSpec::parse_list("2:round:kill,1:boot:kill").unwrap_err();
+        assert_eq!(e.kind, FabricErrorKind::Protocol);
+    }
+
+    #[test]
+    fn fault_spec_list_roundtrips() {
+        assert!(FaultSpec::parse_list("").unwrap().is_empty());
+        assert!(FaultSpec::parse_list("  ").unwrap().is_empty());
+        let specs = FaultSpec::parse_list("2:round:kill, 2:round:kill,1:select:slow:250").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[0], specs[1]);
+        assert_eq!(specs[2].millis, 250);
+        let env = FaultSpec::to_env_list(&specs);
+        assert_eq!(FaultSpec::parse_list(&env).unwrap(), specs, "to_env_list roundtrips");
     }
 
     #[test]
     fn loss_policy_parses() {
         assert_eq!("fail".parse::<LossPolicy>().unwrap(), LossPolicy::Fail);
         assert_eq!("redistribute".parse::<LossPolicy>().unwrap(), LossPolicy::Redistribute);
+        assert_eq!("respawn".parse::<LossPolicy>().unwrap(), LossPolicy::Respawn);
+        assert_eq!(LossPolicy::Respawn.as_str(), "respawn");
+        assert!(LossPolicy::Respawn.degrades() && LossPolicy::Redistribute.degrades());
+        assert!(!LossPolicy::Fail.degrades());
         let err = "retry".parse::<LossPolicy>().unwrap_err();
-        assert!(err.contains("fail") && err.contains("redistribute"), "{err}");
+        assert!(
+            err.contains("fail") && err.contains("redistribute") && err.contains("respawn"),
+            "{err}"
+        );
     }
 
     #[test]

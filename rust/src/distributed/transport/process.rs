@@ -63,6 +63,19 @@
 //!   killing — *before* joining hub threads, because hub readers only
 //!   exit on EOF (which requires the children dead).
 //!
+//! - **Respawn (PR 7).** Under `--on-rank-loss respawn` the supervisor
+//!   keeps its join listener for the whole run. A lost worker behaves
+//!   like `redistribute` for the remainder of the failing round; at the
+//!   next round boundary [`ProcessCluster::respawn_rank`] re-launches
+//!   the worker binary over the same env-join path (plus
+//!   `GREEDIRIS_REJOIN=1` and `GREEDIRIS_FAULT_SKIP`), replays HELLO as
+//!   the first frame on the replacement's fresh queue, and re-points
+//!   the shared routing table ([`HubLanes`]' forward table is
+//!   mutex-shared exactly so long-lived hub readers pick up the new
+//!   queue mid-stream). Attempts are capped at [`MAX_RESPAWNS`] per
+//!   rank; past the cap the rank is *abandoned*
+//!   ([`FabricHealth::abandon`]) and keeps redistribute semantics.
+//!
 //! All counters feed [`FaultStats`] and ride the run's
 //! [`Breakdown`](crate::metrics::Breakdown) without touching modeled
 //! time; the no-fault hot path is byte-identical to the pre-fault
@@ -126,6 +139,11 @@ pub const K_HB: u8 = 7;
 /// polls while starved), fine enough that teardown and loss surfacing
 /// feel immediate.
 const POLL: Duration = Duration::from_millis(25);
+
+/// Respawn attempts per rank before `--on-rank-loss respawn` gives up on
+/// it: the rank is then abandoned ([`FabricHealth::abandon`]) and keeps
+/// redistribute semantics for the rest of the run.
+pub const MAX_RESPAWNS: u32 = 2;
 
 /// Builds a routed message: `[tag varint][kind u8][body]`. `tag` is the
 /// destination on the worker→hub direction and the source on the
@@ -265,6 +283,10 @@ fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 pub struct FabricHealth {
     m: usize,
     losses: Mutex<Vec<Option<RankLoss>>>,
+    /// Ranks the respawn path has given up on (attempt cap, failed
+    /// relaunch): they keep redistribute semantics for the rest of the
+    /// run and are never respawned again.
+    abandoned: Mutex<Vec<bool>>,
     /// Milliseconds since `epoch` at the last frame from each rank;
     /// `u64::MAX` = never seen (join logic owns pre-join liveness).
     last_seen_ms: Vec<AtomicU64>,
@@ -277,6 +299,8 @@ pub struct FabricHealth {
     pub corrupt_frames: AtomicU64,
     pub injected_faults: AtomicU64,
     pub adopted_payloads: AtomicU64,
+    pub respawns: AtomicU64,
+    pub rejoined: AtomicU64,
 }
 
 impl FabricHealth {
@@ -284,6 +308,7 @@ impl FabricHealth {
         FabricHealth {
             m,
             losses: Mutex::new(vec![None; m]),
+            abandoned: Mutex::new(vec![false; m]),
             last_seen_ms: (0..m).map(|_| AtomicU64::new(u64::MAX)).collect(),
             epoch: Instant::now(),
             phase: Mutex::new(FabricPhase::Launch),
@@ -294,6 +319,8 @@ impl FabricHealth {
             corrupt_frames: AtomicU64::new(0),
             injected_faults: AtomicU64::new(0),
             adopted_payloads: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            rejoined: AtomicU64::new(0),
         }
     }
 
@@ -360,6 +387,28 @@ impl FabricHealth {
             .collect()
     }
 
+    /// Clears `rank`'s loss verdict after a successful respawn: the rank
+    /// is live again, its last-seen stamp is fresh, and a *new* failure
+    /// records a fresh first-cause verdict. The cumulative `ranks_lost`
+    /// counter is deliberately left alone — it counts loss events, not
+    /// currently-dead ranks.
+    pub fn revive(&self, rank: usize) {
+        lock_unpoisoned(&self.losses)[rank] = None;
+        self.mark_seen(rank);
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Latches `rank` out of the respawn path (attempt cap hit, or a
+    /// relaunch failed): the rank keeps redistribute semantics for the
+    /// rest of the run.
+    pub fn abandon(&self, rank: usize) {
+        lock_unpoisoned(&self.abandoned)[rank] = true;
+    }
+
+    pub fn is_abandoned(&self, rank: usize) -> bool {
+        lock_unpoisoned(&self.abandoned)[rank]
+    }
+
     /// Latches teardown: blocked receives surface `Shutdown` on their
     /// next poll tick and later loss verdicts are suppressed.
     pub fn mark_shutdown(&self) {
@@ -405,6 +454,12 @@ impl FabricHealth {
             corrupt_frames: self.corrupt_frames.load(Ordering::Relaxed),
             injected_faults: self.injected_faults.load(Ordering::Relaxed),
             adopted_payloads: self.adopted_payloads.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            rejoined: self.rejoined.load(Ordering::Relaxed),
+            // Checkpoints are written by the rank-0 checkpoint layer
+            // (`runtime::checkpoint`), which stamps the run breakdown
+            // directly — the fabric never sees them.
+            checkpoints: 0,
         }
     }
 }
@@ -486,6 +541,16 @@ impl TaggedInbox {
         for a in &mut self.acked {
             *a = false;
         }
+    }
+
+    /// Discards every buffered and in-flight payload. The select-redo
+    /// path (`--on-rank-loss respawn`) replays the whole phase after a
+    /// respawn and must not see frames from the aborted attempt.
+    pub fn purge(&mut self) {
+        for q in &mut self.pending {
+            q.clear();
+        }
+        while self.rx.try_recv().is_ok() {}
     }
 
     fn phase(&self) -> FabricPhase {
@@ -1050,15 +1115,17 @@ fn worker_reader(
 
 /// Knobs the round drivers hand the fabric at spawn time (built from the
 /// run [`Config`](crate::coordinator::Config)).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct FabricOptions {
     pub timeouts: FabricTimeouts,
     pub policy: LossPolicy,
-    /// Deterministic fault to arm in the workers' environment
-    /// (`GREEDIRIS_FAULT` is set/removed *explicitly* per child, so
+    /// Deterministic faults to arm in the workers' environment. Each
+    /// child receives only its *own* rank's specs as a comma-separated
+    /// `GREEDIRIS_FAULT` list (set/removed *explicitly* per child, so
     /// concurrent clusters in one test binary never race on ambient
-    /// state).
-    pub fault: Option<FaultSpec>,
+    /// state); rank-0 specs are fired by the pipeline driver and never
+    /// reach a worker.
+    pub fault: Vec<FaultSpec>,
 }
 
 struct WorkerHandle {
@@ -1069,14 +1136,20 @@ struct WorkerHandle {
     reader: Option<JoinHandle<()>>,
 }
 
+/// The hub's shared routing table: `forwards[dst]` is the outbound queue
+/// of worker `dst` (index 0 and never-joined ranks: `None`). Shared and
+/// mutex-guarded — not a per-reader snapshot — so a respawn can re-point
+/// routing at the replacement worker's fresh queue while the long-lived
+/// hub readers keep draining.
+type ForwardTable = Arc<Mutex<Vec<Option<mpsc::Sender<Vec<u8>>>>>>;
+
 /// The lanes one hub reader demuxes into (cloned per reader thread).
 #[derive(Clone)]
 struct HubLanes {
     s2: mpsc::Sender<(usize, Vec<u8>)>,
     s3: mpsc::Sender<(usize, Vec<u8>)>,
     ctrl: mpsc::Sender<(usize, Vec<u8>)>,
-    /// `forwards[dst]` for dst in 0..m (0 and lost ranks: `None`).
-    forwards: Vec<Option<mpsc::Sender<Vec<u8>>>>,
+    forwards: ForwardTable,
     health: Arc<FabricHealth>,
     ledger: Arc<RelayLedger>,
 }
@@ -1096,6 +1169,21 @@ pub struct ProcessCluster {
     ledger: Arc<RelayLedger>,
     timeouts: FabricTimeouts,
     policy: LossPolicy,
+    /// Everything a boundary respawn needs: the join listener stays
+    /// bound for the whole run, the HELLO blob is replayed verbatim to
+    /// every replacement, and `lanes` is the prototype handed to each
+    /// new hub reader (it owns the shared [`ForwardTable`]).
+    listener: TcpListener,
+    addr: String,
+    bin: PathBuf,
+    hello: Vec<u8>,
+    lanes: HubLanes,
+    faults: Vec<FaultSpec>,
+    /// Respawns attempted per rank (capped at [`MAX_RESPAWNS`]); doubles
+    /// as the replacement's `GREEDIRIS_FAULT_SKIP` so already-fired
+    /// fault specs are not re-armed.
+    attempts: Vec<u32>,
+    fresh: bool,
 }
 
 impl ProcessCluster {
@@ -1169,6 +1257,175 @@ impl ProcessCluster {
             ledger: Arc::clone(&self.ledger),
             health: Arc::clone(&self.health),
         }
+    }
+
+    /// `true` exactly once, right after the cluster was spawned — lets a
+    /// round driver distinguish a cluster's very first round (where a
+    /// `--resume` catch-up must replay the restored sampling prefix to
+    /// the fresh workers) from a later round of a long-lived one.
+    pub fn take_fresh(&mut self) -> bool {
+        std::mem::take(&mut self.fresh)
+    }
+
+    /// Lost worker ranks still eligible for respawn (not abandoned),
+    /// ascending.
+    pub fn lost_live_ranks(&self) -> Vec<usize> {
+        self.health
+            .lost_ranks()
+            .into_iter()
+            .filter(|&r| r > 0 && r < self.m && !self.health.is_abandoned(r))
+            .collect()
+    }
+
+    pub fn has_live_losses(&self) -> bool {
+        !self.lost_live_ranks().is_empty()
+    }
+
+    /// Discards every buffered S2/S3/control payload. The select-redo
+    /// path replays the phase from scratch after a respawn, and frames
+    /// from the aborted attempt must not leak into the retry.
+    pub fn purge_round_buffers(&mut self) {
+        self.s2_rx.purge();
+        if let Some(s3) = self.s3_rx.as_mut() {
+            s3.purge();
+        }
+        while self.ctrl_rx.try_recv().is_ok() {}
+    }
+
+    /// Re-launches lost worker `rank` (`--on-rank-loss respawn`). Called
+    /// by the round drivers at a round *boundary* — never mid-round. The
+    /// replacement child is spawned over the same env-join path as the
+    /// original, plus `GREEDIRIS_REJOIN=1` and `GREEDIRIS_FAULT_SKIP`
+    /// (the number of this rank's fault specs its predecessors already
+    /// fired), joins on the retained listener, is wired into the shared
+    /// routing table, and receives the HELLO blob as the first frame on
+    /// its fresh queue — its `WorkerLink::connect` is indistinguishable
+    /// from a first launch. The caller follows up with the REJOIN
+    /// control payload (owned by [`crate::coordinator::process`]) that
+    /// tells the worker how much sampling prefix to rebuild.
+    ///
+    /// Attempts are capped at [`MAX_RESPAWNS`] per rank; on a cap hit or
+    /// a failed relaunch the rank is abandoned
+    /// ([`FabricHealth::abandon`]) and the typed error returned — the
+    /// caller degrades to redistribute semantics for that rank.
+    pub fn respawn_rank(&mut self, rank: usize) -> Result<(), FabricError> {
+        let rerr =
+            |kind, detail: String| FabricError::new(kind, FabricPhase::Join, Some(rank), detail);
+        if rank == 0 || rank >= self.m {
+            return Err(rerr(FabricErrorKind::Protocol, format!("cannot respawn rank {rank}")));
+        }
+        if self.health.is_abandoned(rank) {
+            return Err(rerr(FabricErrorKind::RankLost, "rank already abandoned".into()));
+        }
+        if self.attempts[rank] >= MAX_RESPAWNS {
+            self.health.abandon(rank);
+            return Err(rerr(
+                FabricErrorKind::RankLost,
+                format!("respawn cap reached ({MAX_RESPAWNS} attempts)"),
+            ));
+        }
+        self.attempts[rank] += 1;
+
+        // Retire the dead worker: un-route it first so no frame can reach
+        // the stale queue, then reap the child. The old writer/reader
+        // threads exit on their own (socket EOF / failed write once the
+        // child is gone) — they are detached, never joined, so a wedged
+        // child cannot deadlock the respawn.
+        lock_unpoisoned(&self.lanes.forwards)[rank] = None;
+        {
+            let w = &mut self.workers[rank - 1];
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+            w.out_tx = None;
+            drop(w.writer.take());
+            drop(w.reader.take());
+        }
+
+        let specs: Vec<FaultSpec> =
+            self.faults.iter().copied().filter(|f| f.rank == rank).collect();
+        let mut cmd = Command::new(&self.bin);
+        cmd.env("GREEDIRIS_RANK", rank.to_string())
+            .env("GREEDIRIS_FABRIC_ADDR", &self.addr)
+            .env(
+                "GREEDIRIS_FABRIC_TIMEOUT_MS",
+                (self.timeouts.recv.as_millis() as u64).to_string(),
+            )
+            .env("GREEDIRIS_REJOIN", "1")
+            .env("GREEDIRIS_FAULT_SKIP", self.attempts[rank].to_string())
+            .stdin(Stdio::null());
+        if specs.is_empty() {
+            cmd.env_remove("GREEDIRIS_FAULT");
+        } else {
+            cmd.env("GREEDIRIS_FAULT", FaultSpec::to_env_list(&specs));
+        }
+        let mut child = match cmd.spawn() {
+            Ok(c) => c,
+            Err(e) => {
+                self.health.abandon(rank);
+                return Err(rerr(FabricErrorKind::Io, format!("respawn launch failed: {e}")));
+            }
+        };
+
+        // Accept the replacement on the retained (non-blocking) listener.
+        let join_read_timeout = self.timeouts.connect.min(Duration::from_secs(5));
+        let deadline = Instant::now() + self.timeouts.connect;
+        let joined = loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => match read_join(stream, join_read_timeout) {
+                    Ok((r, retries, stream, fr)) if r == rank => {
+                        self.health.connect_retries.fetch_add(retries, Ordering::Relaxed);
+                        break Some((stream, fr));
+                    }
+                    // A foreign or misidentified connection: drop it and
+                    // keep waiting for the replacement.
+                    Ok(_) | Err(_) => {}
+                },
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        break None;
+                    }
+                    // The replacement dying before it joins (e.g. its own
+                    // armed hello fault) resolves the wait immediately.
+                    if matches!(child.try_wait(), Ok(Some(_))) {
+                        break None;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break None,
+            }
+        };
+        let Some((stream, fr)) = joined else {
+            let _ = child.kill();
+            let _ = child.wait();
+            self.health.abandon(rank);
+            return Err(rerr(
+                FabricErrorKind::Timeout,
+                "replacement worker did not rejoin within the connect deadline".into(),
+            ));
+        };
+        let write_half = match stream.try_clone() {
+            Ok(w) => w,
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                self.health.abandon(rank);
+                return Err(rerr(FabricErrorKind::Io, e.to_string()));
+            }
+        };
+
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let writer = std::thread::spawn(move || hub_writer(write_half, rx));
+        let lanes = self.lanes.clone();
+        let reader = std::thread::spawn(move || hub_reader(rank, stream, fr, lanes));
+        lock_unpoisoned(&self.lanes.forwards)[rank] = Some(tx.clone());
+        self.workers[rank - 1] =
+            WorkerHandle { child, out_tx: Some(tx), writer: Some(writer), reader: Some(reader) };
+        self.health.revive(rank);
+        // HELLO is the first frame on the fresh queue — the replacement
+        // blocks on it exactly like a first launch.
+        self.ctrl_send(rank, &self.hello);
+        Ok(())
     }
 
     /// Ships a control payload to worker `dst` (dropped if `dst` never
@@ -1377,14 +1634,19 @@ fn hub_reader(src_rank: usize, mut stream: TcpStream, mut fr: FrameReader, lanes
             if gone {
                 return;
             }
-        } else if let Some(Some(tx)) = lanes.forwards.get(dst) {
-            if kind == K_S2 {
-                lanes.ledger.inc(src_rank, dst);
-            }
+        } else {
             // Worker-to-worker traffic: re-tag with the source and relay.
-            // A dead destination queue does not make the *source* dead —
-            // drop the payload and keep this reader draining.
-            let _ = tx.send(routed_msg(src_rank, kind, &body));
+            // The routing table is locked per frame (shared, so a
+            // respawned destination's fresh queue is picked up
+            // mid-stream); a dead or absent destination does not make
+            // the *source* dead — drop the payload and keep draining.
+            let tx = lock_unpoisoned(&lanes.forwards).get(dst).and_then(|t| t.clone());
+            if let Some(tx) = tx {
+                if kind == K_S2 {
+                    lanes.ledger.inc(src_rank, dst);
+                }
+                let _ = tx.send(routed_msg(src_rank, kind, &body));
+            }
         }
     }
 }
@@ -1452,16 +1714,17 @@ fn read_join(
 /// payload sent to every worker right after it joins (its first varint
 /// must be `m`; see [`WorkerLink::connect`]). Join-phase failures resolve
 /// by `opts.policy`: `Fail` reaps everything and returns the typed error;
-/// `Redistribute` records the loss and brings the cluster up around the
-/// hole (bad/duplicate ranks are always hard errors — they mean a foreign
-/// client, not a lost worker).
+/// a degrading policy (`redistribute`/`respawn`) records the loss and
+/// brings the cluster up around the hole — under `respawn` the first
+/// round boundary re-launches it (bad/duplicate ranks are always hard
+/// errors — they mean a foreign client, not a lost worker).
 fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<ProcessCluster, FabricError> {
     assert!(m > 1, "a process cluster needs at least one worker rank");
     let health = Arc::new(FabricHealth::new(m));
-    if opts.fault.is_some() {
+    if !opts.fault.is_empty() {
         // "Armed", not "fired": the worker that fires usually dies before
         // it could report, so the supervisor counts the arming.
-        health.injected_faults.store(1, Ordering::Relaxed);
+        health.injected_faults.store(opts.fault.len() as u64, Ordering::Relaxed);
     }
     let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| launch_io(None, e))?;
     let addr = listener.local_addr().map_err(|e| launch_io(None, e))?;
@@ -1477,14 +1740,16 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
                 (opts.timeouts.recv.as_millis() as u64).to_string(),
             )
             .stdin(Stdio::null());
-        // Explicit per-child fault plumbing — never inherit ambient state.
-        match opts.fault {
-            Some(f) => {
-                cmd.env("GREEDIRIS_FAULT", f.to_env());
-            }
-            None => {
-                cmd.env_remove("GREEDIRIS_FAULT");
-            }
+        // Explicit per-child fault plumbing — never inherit ambient
+        // state, and a first launch is never a rejoin.
+        cmd.env_remove("GREEDIRIS_REJOIN");
+        cmd.env_remove("GREEDIRIS_FAULT_SKIP");
+        let specs: Vec<FaultSpec> =
+            opts.fault.iter().copied().filter(|f| f.rank == p).collect();
+        if specs.is_empty() {
+            cmd.env_remove("GREEDIRIS_FAULT");
+        } else {
+            cmd.env("GREEDIRIS_FAULT", FaultSpec::to_env_list(&specs));
         }
         match cmd.spawn() {
             Ok(child) => children.push(Some(child)),
@@ -1520,46 +1785,38 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
                     joined[rank - 1] = Some((stream, fr));
                     pending -= 1;
                 }
-                Err(e) => match opts.policy {
-                    LossPolicy::Fail => {
+                Err(e) => {
+                    if !opts.policy.degrades() {
                         reap_children(&mut children);
                         return Err(e);
                     }
                     // The connection never identified itself; drop it and
                     // keep waiting — if it was a worker, its child-exit or
                     // the deadline resolves the rank below.
-                    LossPolicy::Redistribute => {}
-                },
+                }
             },
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 if Instant::now() > deadline {
-                    match opts.policy {
-                        LossPolicy::Fail => {
-                            reap_children(&mut children);
-                            return Err(FabricError::timeout(
-                                FabricPhase::Join,
-                                opts.timeouts.connect,
-                                format!("{pending} rank worker(s) did not join"),
-                            ));
-                        }
-                        LossPolicy::Redistribute => {
-                            for i in 0..m - 1 {
-                                let rank = i + 1;
-                                if joined[i].is_none() && !health.is_lost(rank) {
-                                    health.timeouts.fetch_add(1, Ordering::Relaxed);
-                                    health.mark_lost(
-                                        rank,
-                                        "did not join within the connect deadline",
-                                    );
-                                    if let Some(c) = children[i].as_mut() {
-                                        let _ = c.kill();
-                                        let _ = c.wait();
-                                    }
-                                }
+                    if !opts.policy.degrades() {
+                        reap_children(&mut children);
+                        return Err(FabricError::timeout(
+                            FabricPhase::Join,
+                            opts.timeouts.connect,
+                            format!("{pending} rank worker(s) did not join"),
+                        ));
+                    }
+                    for i in 0..m - 1 {
+                        let rank = i + 1;
+                        if joined[i].is_none() && !health.is_lost(rank) {
+                            health.timeouts.fetch_add(1, Ordering::Relaxed);
+                            health.mark_lost(rank, "did not join within the connect deadline");
+                            if let Some(c) = children[i].as_mut() {
+                                let _ = c.kill();
+                                let _ = c.wait();
                             }
-                            break;
                         }
                     }
+                    break;
                 }
                 for i in 0..m - 1 {
                     let rank = i + 1;
@@ -1568,22 +1825,17 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
                     }
                     let Some(c) = children[i].as_mut() else { continue };
                     if let Ok(Some(status)) = c.try_wait() {
-                        match opts.policy {
-                            LossPolicy::Fail => {
-                                reap_children(&mut children);
-                                return Err(FabricError::new(
-                                    FabricErrorKind::RankLost,
-                                    FabricPhase::Join,
-                                    Some(rank),
-                                    format!("worker exited before joining: {status}"),
-                                ));
-                            }
-                            LossPolicy::Redistribute => {
-                                health
-                                    .mark_lost(rank, format!("exited before joining: {status}"));
-                                pending -= 1;
-                            }
+                        if !opts.policy.degrades() {
+                            reap_children(&mut children);
+                            return Err(FabricError::new(
+                                FabricErrorKind::RankLost,
+                                FabricPhase::Join,
+                                Some(rank),
+                                format!("worker exited before joining: {status}"),
+                            ));
                         }
+                        health.mark_lost(rank, format!("exited before joining: {status}"));
+                        pending -= 1;
                     }
                 }
                 std::thread::sleep(Duration::from_millis(5));
@@ -1648,8 +1900,9 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
         }
     }
     // forwards[dst] for dst in 0..m (0 and never-joined ranks: None).
-    let forwards: Vec<Option<mpsc::Sender<Vec<u8>>>> =
-        std::iter::once(None).chain(out_txs.iter().cloned()).collect();
+    let forwards: ForwardTable = Arc::new(Mutex::new(
+        std::iter::once(None).chain(out_txs.iter().cloned()).collect(),
+    ));
     let lanes = HubLanes {
         s2: s2_tx.clone(),
         s3: s3_tx,
@@ -1688,6 +1941,14 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
         ledger,
         timeouts: opts.timeouts,
         policy: opts.policy,
+        listener,
+        addr: addr.to_string(),
+        bin,
+        hello: hello.to_vec(),
+        lanes,
+        faults: opts.fault.clone(),
+        attempts: vec![0; m],
+        fresh: true,
     };
     for p in 1..m {
         cluster.ctrl_send(p, hello);

@@ -4,53 +4,112 @@
 //! comment lines — the format of every input in the paper's Table 3. Vertex
 //! ids are remapped to a dense `[0, n)` range in first-appearance order, as
 //! Ripples does.
+//!
+//! Both loaders fail **typed** ([`LoadError`]) and never panic on
+//! malformed input: garbage text carries its 1-based line number, a
+//! truncated or bit-flipped binary blob is rejected before any
+//! oversized allocation (lengths are validated against what the input
+//! can actually hold), and every error converts into the crate
+//! [`Error`](crate::error::Error) with `?`, so the CLI prints a clean
+//! message instead of a backtrace. The same fuzz discipline as
+//! `distributed::wire::DecodeError` — see the mutated-byte and
+//! truncated-prefix tests below.
 
 use crate::graph::weights::WeightModel;
 use crate::graph::Graph;
 use crate::Vertex;
-use crate::anyhow;
-use crate::error::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 use std::path::Path;
+
+/// Typed graph-loading failure. `std::error::Error`, so it propagates
+/// through the crate's blanket `From` with `?` and keeps its structure
+/// until the CLI formats it.
+#[derive(Debug)]
+pub enum LoadError {
+    /// Filesystem / reader failure underneath the parser.
+    Io(std::io::Error),
+    /// A text edge-list line that is not `src dst` (1-based line number).
+    Garbage { line: usize, what: String },
+    /// Binary input ended mid-record.
+    Truncated { what: &'static str },
+    /// Binary input does not start with the GreediRIS graph magic.
+    BadMagic,
+    /// A count or vertex id exceeds representable or declared bounds
+    /// (also flags trailing bytes after the declared records).
+    Overflow { what: String },
+}
+
+impl fmt::Display for LoadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LoadError::Io(e) => write!(f, "graph io: {e}"),
+            LoadError::Garbage { line, what } => write!(f, "edge list line {line}: {what}"),
+            LoadError::Truncated { what } => write!(f, "binary graph truncated reading {what}"),
+            LoadError::BadMagic => write!(f, "bad magic: not a GreediRIS binary graph"),
+            LoadError::Overflow { what } => write!(f, "binary graph malformed: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for LoadError {}
+
+impl From<std::io::Error> for LoadError {
+    fn from(e: std::io::Error) -> Self {
+        LoadError::Io(e)
+    }
+}
 
 /// Parses SNAP edge-list text from any reader. Returns `(n, edges)` with
 /// dense vertex ids.
-pub fn parse_edge_list<R: Read>(reader: R) -> Result<(usize, Vec<(Vertex, Vertex)>)> {
+pub fn parse_edge_list<R: Read>(reader: R) -> Result<(usize, Vec<(Vertex, Vertex)>), LoadError> {
     let mut remap: HashMap<u64, Vertex> = HashMap::new();
     let mut edges = Vec::new();
-    let mut intern = |raw: u64, remap: &mut HashMap<u64, Vertex>| -> Vertex {
-        let next = remap.len() as Vertex;
-        *remap.entry(raw).or_insert(next)
-    };
-    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
-        let line = line.context("read line")?;
+    for (i, line) in BufReader::new(reader).lines().enumerate() {
+        let lineno = i + 1;
+        let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
             continue;
         }
         let mut it = t.split_whitespace();
-        let a: u64 = it
-            .next()
-            .ok_or_else(|| anyhow!("line {}: missing src", lineno + 1))?
-            .parse()
-            .with_context(|| format!("line {}: bad src", lineno + 1))?;
-        let b: u64 = it
-            .next()
-            .ok_or_else(|| anyhow!("line {}: missing dst", lineno + 1))?
-            .parse()
-            .with_context(|| format!("line {}: bad dst", lineno + 1))?;
-        let u = intern(a, &mut remap);
-        let v = intern(b, &mut remap);
+        let mut field = |what: &str| -> Result<u64, LoadError> {
+            it.next()
+                .ok_or_else(|| LoadError::Garbage {
+                    line: lineno,
+                    what: format!("missing {what}"),
+                })?
+                .parse()
+                .map_err(|e| LoadError::Garbage {
+                    line: lineno,
+                    what: format!("bad {what}: {e}"),
+                })
+        };
+        let a = field("src")?;
+        let b = field("dst")?;
+        let mut intern = |raw: u64| -> Result<Vertex, LoadError> {
+            let next = remap.len();
+            if next > u32::MAX as usize && !remap.contains_key(&raw) {
+                return Err(LoadError::Overflow {
+                    what: format!("more than {} distinct vertices", u32::MAX),
+                });
+            }
+            Ok(*remap.entry(raw).or_insert(next as Vertex))
+        };
+        let u = intern(a)?;
+        let v = intern(b)?;
         edges.push((u, v));
     }
     Ok((remap.len(), edges))
 }
 
 /// Loads a SNAP edge-list file and attaches weights per `model`.
-pub fn load_snap(path: &Path, model: WeightModel, seed: u64) -> Result<Graph> {
+pub fn load_snap(path: &Path, model: WeightModel, seed: u64) -> crate::error::Result<Graph> {
+    use crate::error::Context;
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let (n, edges) = parse_edge_list(f)?;
+    let (n, edges) =
+        parse_edge_list(f).with_context(|| format!("load {}", path.display()))?;
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
@@ -63,7 +122,7 @@ const BIN_MAGIC: u32 = 0x47524952; // "GRIR"
 /// Writes the edge list in a compact little-endian binary format
 /// (magic, n, m, then m (u32,u32) pairs). Weights are re-derived from the
 /// model at load time, so they are not stored.
-pub fn save_binary<W: Write>(w: W, n: usize, edges: &[(Vertex, Vertex)]) -> Result<()> {
+pub fn save_binary<W: Write>(w: W, n: usize, edges: &[(Vertex, Vertex)]) -> Result<(), LoadError> {
     let mut w = BufWriter::new(w);
     w.write_all(&BIN_MAGIC.to_le_bytes())?;
     w.write_all(&(n as u64).to_le_bytes())?;
@@ -76,26 +135,61 @@ pub fn save_binary<W: Write>(w: W, n: usize, edges: &[(Vertex, Vertex)]) -> Resu
     Ok(())
 }
 
-/// Reads the binary format written by [`save_binary`].
-pub fn load_binary<R: Read>(r: R) -> Result<(usize, Vec<(Vertex, Vertex)>)> {
+fn read_exactly<R: Read, const N: usize>(
+    r: &mut R,
+    what: &'static str,
+) -> Result<[u8; N], LoadError> {
+    let mut buf = [0u8; N];
+    r.read_exact(&mut buf).map_err(|e| {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            LoadError::Truncated { what }
+        } else {
+            LoadError::Io(e)
+        }
+    })?;
+    Ok(buf)
+}
+
+/// Reads the binary format written by [`save_binary`]. Fuzz-hardened: a
+/// corrupt header cannot trigger an oversized allocation (capacity is
+/// grown as records actually arrive), vertex ids are validated against
+/// the declared `n`, and trailing bytes after the last record are an
+/// error — every malformed input is a typed [`LoadError`].
+pub fn load_binary<R: Read>(r: R) -> Result<(usize, Vec<(Vertex, Vertex)>), LoadError> {
     let mut r = BufReader::new(r);
-    let mut buf4 = [0u8; 4];
-    let mut buf8 = [0u8; 8];
-    r.read_exact(&mut buf4)?;
-    if u32::from_le_bytes(buf4) != BIN_MAGIC {
-        return Err(anyhow!("bad magic: not a GreediRIS binary graph"));
+    if u32::from_le_bytes(read_exactly(&mut r, "magic")?) != BIN_MAGIC {
+        return Err(LoadError::BadMagic);
     }
-    r.read_exact(&mut buf8)?;
-    let n = u64::from_le_bytes(buf8) as usize;
-    r.read_exact(&mut buf8)?;
-    let m = u64::from_le_bytes(buf8) as usize;
-    let mut edges = Vec::with_capacity(m);
+    let n = u64::from_le_bytes(read_exactly(&mut r, "vertex count")?);
+    if n > u32::MAX as u64 + 1 {
+        return Err(LoadError::Overflow {
+            what: format!("vertex count {n} exceeds the u32 id space"),
+        });
+    }
+    let n = n as usize;
+    let m = u64::from_le_bytes(read_exactly(&mut r, "edge count")?);
+    // Cap the up-front reservation: a bit-flipped count must not balloon
+    // memory before the (inevitable) Truncated error surfaces.
+    let mut edges: Vec<(Vertex, Vertex)> = Vec::with_capacity(m.min(1 << 20) as usize);
     for _ in 0..m {
-        r.read_exact(&mut buf4)?;
-        let u = u32::from_le_bytes(buf4);
-        r.read_exact(&mut buf4)?;
-        let v = u32::from_le_bytes(buf4);
+        let u = u32::from_le_bytes(read_exactly(&mut r, "edge src")?);
+        let v = u32::from_le_bytes(read_exactly(&mut r, "edge dst")?);
+        if u as usize >= n || v as usize >= n {
+            return Err(LoadError::Overflow {
+                what: format!("edge ({u}, {v}) outside the declared {n} vertices"),
+            });
+        }
         edges.push((u, v));
+    }
+    let mut probe = [0u8; 1];
+    match r.read(&mut probe) {
+        Ok(0) => {}
+        Ok(_) => {
+            return Err(LoadError::Overflow {
+                what: "trailing bytes after the declared edge records".into(),
+            })
+        }
+        Err(e) => return Err(LoadError::Io(e)),
     }
     Ok((n, edges))
 }
@@ -113,9 +207,22 @@ mod tests {
     }
 
     #[test]
-    fn parse_rejects_garbage() {
-        assert!(parse_edge_list("1 x\n".as_bytes()).is_err());
-        assert!(parse_edge_list("1\n".as_bytes()).is_err());
+    fn parse_rejects_garbage_with_line_numbers() {
+        match parse_edge_list("0 1\n1 x\n".as_bytes()) {
+            Err(LoadError::Garbage { line, what }) => {
+                assert_eq!(line, 2);
+                assert!(what.contains("dst"), "{what}");
+            }
+            other => panic!("expected Garbage, got {other:?}"),
+        }
+        match parse_edge_list("# ok\n\n7\n".as_bytes()) {
+            Err(LoadError::Garbage { line, what }) => {
+                assert_eq!(line, 3, "comment/blank lines still count");
+                assert!(what.contains("missing dst"), "{what}");
+            }
+            other => panic!("expected Garbage, got {other:?}"),
+        }
+        assert!(parse_edge_list("x 1\n".as_bytes()).is_err());
     }
 
     #[test]
@@ -137,6 +244,79 @@ mod tests {
 
     #[test]
     fn binary_rejects_bad_magic() {
-        assert!(load_binary(&b"XXXXXXXXXXXXXXXXXXXXXXX"[..]).is_err());
+        assert!(matches!(
+            load_binary(&b"XXXXXXXXXXXXXXXXXXXXXXX"[..]),
+            Err(LoadError::BadMagic)
+        ));
+    }
+
+    #[test]
+    fn binary_every_truncated_prefix_is_typed() {
+        let mut buf = Vec::new();
+        save_binary(&mut buf, 6, &[(0u32, 1u32), (5, 2), (3, 3)]).unwrap();
+        for len in 0..buf.len() {
+            match load_binary(&buf[..len]) {
+                Err(LoadError::Truncated { .. }) => {}
+                other => panic!("prefix of {len}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn binary_every_byte_flip_is_handled() {
+        // The wire::DecodeError fuzz discipline: no mutation may panic or
+        // slip through as an *inconsistent* graph. A flip either still
+        // decodes (payload bits within bounds are honest data) or fails
+        // typed; flips in the magic specifically report BadMagic.
+        let mut buf = Vec::new();
+        save_binary(&mut buf, 6, &[(0u32, 1u32), (5, 2), (3, 3)]).unwrap();
+        for i in 0..buf.len() {
+            for flip in [0x01u8, 0x80] {
+                let mut bad = buf.clone();
+                bad[i] ^= flip;
+                match load_binary(&bad[..]) {
+                    Ok((n, edges)) => {
+                        for &(u, v) in &edges {
+                            assert!((u as usize) < n && (v as usize) < n);
+                        }
+                    }
+                    Err(LoadError::BadMagic) => assert!(i < 4, "BadMagic from byte {i}"),
+                    Err(_) => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_huge_count_fails_without_allocating() {
+        // A forged header claiming u64::MAX edges must fail fast and
+        // typed, not reserve 2^64 slots.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&BIN_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&6u64.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            load_binary(&buf[..]),
+            Err(LoadError::Truncated { .. })
+        ));
+        // Oversized vertex-count claim is an Overflow, not a u32 wrap.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&BIN_MAGIC.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        assert!(matches!(load_binary(&buf[..]), Err(LoadError::Overflow { .. })));
+    }
+
+    #[test]
+    fn binary_rejects_out_of_range_ids_and_trailing_bytes() {
+        // Edge id >= n.
+        let mut buf = Vec::new();
+        save_binary(&mut buf, 2, &[(0u32, 5u32)]).unwrap();
+        assert!(matches!(load_binary(&buf[..]), Err(LoadError::Overflow { .. })));
+        // Bytes after the declared records.
+        let mut buf = Vec::new();
+        save_binary(&mut buf, 2, &[(0u32, 1u32)]).unwrap();
+        buf.push(0xAB);
+        assert!(matches!(load_binary(&buf[..]), Err(LoadError::Overflow { .. })));
     }
 }

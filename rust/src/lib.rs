@@ -149,6 +149,34 @@
 //! ([`maxcover::bitset::avx512`] on `x86_64`): native `vpopcntq` over
 //! 8×u64 lanes behind a runtime probe, bit-identical, pinned by
 //! `tests/kernels.rs`.
+//!
+//! ## Fault tolerance & elastic recovery (PR 6 + 7)
+//!
+//! The process fabric never panics and never hangs on a sick worker:
+//! every hub/worker/launch failure is a typed, rank-attributed
+//! [`distributed::fault::FabricError`], deadlines bound every blocking
+//! receive, and deterministic fault injection
+//! (`GREEDIRIS_FAULT=<rank>:<phase>:<kind>[:<ms>][,spec...]`) drives the
+//! whole matrix in tests/CI. A lost rank is handled per
+//! [`distributed::fault::LossPolicy`]: `fail` aborts with the
+//! diagnostic; `redistribute` deterministically adopts the lost rank's
+//! remaining chunk quota; `respawn` (PR 7) **heals** the fabric — the
+//! supervisor re-launches the rank through the env-join protocol, the
+//! new life rebuilds its accumulated cover for `[0, θ)` by pure
+//! regeneration (sample content is a function of the global id alone,
+//! so the rebuilt CSR is byte-identical — the same property behind
+//! [`coordinator::sampling`]'s order-invariant merge), and the selection
+//! is redone on the full fabric, making the finished seed set
+//! bit-identical to the no-fault run. Orthogonally,
+//! [`runtime::checkpoint`] (PR 7) gives the run itself durable
+//! round-boundary state: `--checkpoint DIR` writes versioned,
+//! FNV-checksummed, atomically-renamed snapshots of the martingale
+//! transcript, θ, comm counters, and per-rank covers; `--resume DIR`
+//! replays the transcript through a fresh driver (validating every
+//! recorded verdict), restores state, and continues — a
+//! killed-and-resumed run reports seeds, θ, rounds, and counters
+//! bit-identical to an uninterrupted one, across transports (pinned by
+//! `tests/checkpoint.rs`, `tests/transport.rs`, and ci.sh gate 5).
 
 #![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
 // Style lints that conflict with this crate's deliberate idiom (explicit

@@ -36,7 +36,8 @@ USAGE:
                 [--s1-threads N] [--transport sim|threads|process]
                 [--wire varint|raw] [--prune on|off]
                 [--overlap on|off] [--chunk N]
-                [--fabric-timeout MS] [--on-rank-loss fail|redistribute]
+                [--fabric-timeout MS] [--on-rank-loss fail|redistribute|respawn]
+                [--checkpoint DIR] [--checkpoint-every N] [--resume DIR]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
   greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
   greediris inputs
@@ -59,15 +60,28 @@ hub/worker receives, heartbeat staleness; default 60000). --on-rank-loss
 picks what happens when a worker dies mid-round: fail (default) stops
 with a typed per-rank diagnostic; redistribute deterministically
 reassigns the lost rank's remaining sampling quota to the survivors and
-finishes the round. Both only apply to --transport process.
+finishes the round; respawn additionally re-launches the lost worker at
+the next round boundary (REJOIN handshake + pure cover rebuild), so the
+completed run's seeds match the no-fault run bit-identically. All three
+only apply to --transport process.
+--checkpoint DIR writes durable snapshots of the martingale loop at
+round boundaries (atomic write + fsync; format in scripts/README.md);
+--checkpoint-every N throttles writes to every N overlapped sample
+chunks (0 = every boundary). --resume DIR restarts from DIR's latest
+snapshot: the resumed run finishes with bit-identical seeds, theta, and
+round counts to the uninterrupted one, and rejects a snapshot from a
+different config or graph with a typed mismatch error.
 Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
      GREEDIRIS_TRANSPORT=sim|threads|process sets the default transport
      (unknown values are an error, never a silent fallback);
      GREEDIRIS_WORKER_BIN overrides the rank-worker binary;
      GREEDIRIS_FABRIC_TIMEOUT_MS sets the default fabric deadline;
-     GREEDIRIS_FAULT=rank:phase:kind[:ms] injects one deterministic
-     fault for testing (phases hello|round|select, kinds
-     kill|hang|corrupt|slow).";
+     GREEDIRIS_FAULT=rank:phase:kind[:ms][,spec...] injects deterministic
+     faults for testing (phases hello|round|select, kinds
+     kill|hang|corrupt|slow; a malformed spec is a startup error). Specs
+     for rank 0 target the supervisor itself on any transport, with the
+     ms field read as the 1-based phase-entry ordinal (0:round:kill:2 =
+     die entering the second estimation round).";
 
 /// Minimal --flag value parser.
 struct Flags {
@@ -172,8 +186,15 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     // Validate GREEDIRIS_FAULT up front: a typo'd fault spec must be a
     // clean CLI error, never a silently fault-free run.
-    if let Some(spec) = FaultSpec::from_env().map_err(|e| anyhow!(e))? {
+    for spec in FaultSpec::from_env().map_err(|e| anyhow!(e))? {
         cfg = cfg.with_fault(spec);
+    }
+    if let Some(d) = flags.map.get("checkpoint") {
+        cfg = cfg.with_checkpoint(d.clone());
+    }
+    cfg = cfg.with_checkpoint_every(flags.get("checkpoint-every", 0u64)?);
+    if let Some(d) = flags.map.get("resume") {
+        cfg = cfg.with_resume(d.clone());
     }
     if let Some(t) = flags.map.get("theta") {
         cfg = cfg.with_theta(t.parse()?);

@@ -59,8 +59,15 @@ pub struct FaultStats {
     /// Faults fired by the `GREEDIRIS_FAULT` injection harness.
     pub injected_faults: u64,
     /// S2 payloads regenerated at the supervisor on behalf of lost
-    /// ranks (`--on-rank-loss redistribute`).
+    /// ranks (`--on-rank-loss redistribute` / `respawn`).
     pub adopted_payloads: u64,
+    /// Workers re-launched after a loss (`--on-rank-loss respawn`).
+    pub respawns: u64,
+    /// REJOIN handshakes completed (HELLO replay + cover rebuild order
+    /// delivered to a respawned or freshly resumed worker).
+    pub rejoined: u64,
+    /// Durable snapshots written by the checkpoint layer (PR 7).
+    pub checkpoints: u64,
 }
 
 impl FaultStats {
@@ -75,6 +82,9 @@ impl FaultStats {
         self.corrupt_frames += o.corrupt_frames;
         self.injected_faults += o.injected_faults;
         self.adopted_payloads += o.adopted_payloads;
+        self.respawns += o.respawns;
+        self.rejoined += o.rejoined;
+        self.checkpoints += o.checkpoints;
     }
 }
 
@@ -82,13 +92,16 @@ impl fmt::Display for FaultStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "{} lost | {} retries | {} timeouts | {} corrupt | {} injected | {} adopted payloads",
+            "{} lost | {} retries | {} timeouts | {} corrupt | {} injected | {} adopted payloads | {} respawned | {} rejoined | {} checkpoints",
             self.ranks_lost,
             self.connect_retries,
             self.timeouts,
             self.corrupt_frames,
             self.injected_faults,
-            self.adopted_payloads
+            self.adopted_payloads,
+            self.respawns,
+            self.rejoined,
+            self.checkpoints
         )
     }
 }
@@ -157,7 +170,7 @@ impl fmt::Display for Breakdown {
 }
 
 /// Communication-volume counters (bytes on the modeled wire).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CommVolume {
     /// S2 shuffle bytes actually on the wire (encoded).
     pub alltoall_bytes: u64,
@@ -266,16 +279,20 @@ mod tests {
         let mut a = FaultStats { connect_retries: 2, ranks_lost: 1, ..Default::default() };
         assert!(!a.is_zero());
         assert!(FaultStats::default().is_zero());
-        a.add(&FaultStats { timeouts: 3, adopted_payloads: 5, ..Default::default() });
+        a.add(&FaultStats { timeouts: 3, adopted_payloads: 5, respawns: 2, rejoined: 2, checkpoints: 4, ..Default::default() });
         assert_eq!(a.connect_retries, 2);
         assert_eq!(a.timeouts, 3);
         assert_eq!(a.adopted_payloads, 5);
+        assert_eq!(a.respawns, 2);
+        assert_eq!(a.rejoined, 2);
+        assert_eq!(a.checkpoints, 4);
         let mut b = Breakdown::default();
         b.add(&Breakdown { fabric: a, ..Default::default() });
         assert_eq!(b.fabric.ranks_lost, 1);
         assert_eq!(b.total(), 0.0, "fault counters do not inflate the phase total");
         let s = format!("{a}");
         assert!(s.contains("1 lost") && s.contains("2 retries"), "{s}");
+        assert!(s.contains("2 respawned") && s.contains("4 checkpoints"), "{s}");
     }
 
     #[test]

@@ -1,0 +1,635 @@
+//! Durable checkpoint/restart for the InfMax pipeline (PR 7 tentpole).
+//!
+//! Rank 0 snapshots the martingale loop's full result-bearing state at
+//! round boundaries so a killed run — supervisor included — restarts
+//! from the last snapshot and finishes with **bit-identical seeds, θ,
+//! and round counts** to an uninterrupted run (the hard gate pinned by
+//! `tests/checkpoint.rs` and `scripts/ci.sh`).
+//!
+//! ## What a snapshot holds
+//!
+//! Everything the resumed driver cannot rederive cheaply, and nothing
+//! timing-dependent:
+//!
+//! - **Config fingerprint** (FNV-1a over the canonical wire config blob,
+//!   fault/recovery knobs excluded) and a **graph fingerprint** — resuming
+//!   under a different config or input is a typed [`CheckpointError::Mismatch`],
+//!   never a silently-diverging run.
+//! - **Martingale history**: round count, per-round coverages, the current
+//!   θ target, phase `id_base`, and (once finalized) the final θ and lower
+//!   bound. Resume *replays* the coverage reports through a fresh
+//!   [`crate::imm::MartingaleDriver`] — the driver's state is a pure
+//!   function of them, so the remaining schedule is exactly the
+//!   uninterrupted one.
+//! - **Per-rank RNG stream positions** (the `rank_ranges` lower ids at
+//!   the snapshot's θ). These are rederivable — sample content is a pure
+//!   function of the global id — and are stored precisely so resume can
+//!   *validate* that the rederived schedule matches the writer's.
+//! - **Accumulated covers** as wire-codec CSR blobs (`sim`/`threads`
+//!   engines; the process engine stores none — workers rebuild theirs by
+//!   pure regeneration via the REJOIN catch-up broadcast).
+//! - **Receiver floor** (`BucketBank` prune floor + l_seen at the last
+//!   selection) and the accumulated [`CommVolume`] byte counters, so the
+//!   resumed run's printed raw-byte totals match the uninterrupted run's.
+//!
+//! ## Format
+//!
+//! `"GRCK"` magic, format-version varint, payload, trailing FNV-1a-64
+//! checksum (little-endian, over everything before it). Integers are the
+//! wire codec's varints; floats ship as `f64::to_bits` varints. Writes
+//! are atomic: temp file in the same directory, `fsync`, `rename`, then a
+//! best-effort directory fsync — a crash mid-write never corrupts
+//! `latest.ckpt`, and every snapshot is additionally retained as
+//! `ckpt-r<rounds>-s<stage>.bin` so tests can resume from *every* stage.
+//! Decoding is fuzz-hardened: arbitrary bytes produce a typed
+//! [`CheckpointError`], never a panic or an unbounded allocation.
+
+use crate::distributed::wire::{self, put_varint};
+use crate::maxcover::InvertedIndex;
+use crate::metrics::CommVolume;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Current snapshot format version. Bump on any payload change; older
+/// readers reject newer blobs with [`CheckpointError::Version`].
+pub const FORMAT_VERSION: u64 = 1;
+
+/// File holding the most recent snapshot (atomically replaced).
+pub const LATEST: &str = "latest.ckpt";
+
+const MAGIC: &[u8; 4] = b"GRCK";
+
+/// FNV-1a 64-bit — the repo's standing fingerprint hash (matches the
+/// artifact manifest hashing; zero-dependency).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Where in the round loop the snapshot was taken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// After a `Continue` report: the next estimation round (`rounds + 1`)
+    /// has not started.
+    RoundStart = 1,
+    /// Between a completed (non-fused) grow and its selection.
+    AfterGrow = 2,
+    /// After `Finalize`: `theta`/`lower_bound` are final; only the final
+    /// selection phase remains (redone from scratch on resume).
+    Finalized = 3,
+}
+
+impl Stage {
+    fn from_byte(b: u8) -> Result<Self, CheckpointError> {
+        match b {
+            1 => Ok(Stage::RoundStart),
+            2 => Ok(Stage::AfterGrow),
+            3 => Ok(Stage::Finalized),
+            other => Err(CheckpointError::Corrupt(format!("unknown stage byte {other}"))),
+        }
+    }
+}
+
+/// Typed checkpoint failure — never a panic.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem failure (create/write/rename/read).
+    Io(std::io::Error),
+    /// Bad magic, checksum mismatch, truncated or garbage payload.
+    Corrupt(String),
+    /// Valid envelope, unsupported format version.
+    Version(u64),
+    /// Valid snapshot written by a different config/graph.
+    Mismatch(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CheckpointError::Corrupt(w) => write!(f, "checkpoint corrupt: {w}"),
+            CheckpointError::Version(v) => {
+                write!(f, "checkpoint format version {v} unsupported (this build reads {FORMAT_VERSION})")
+            }
+            CheckpointError::Mismatch(w) => write!(f, "checkpoint mismatch: {w}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// One durable snapshot of the pipeline's round-boundary state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// FNV-1a over the canonical wire config blob.
+    pub config_fp: u64,
+    /// FNV-1a over the wire graph blob (weights + thresholds included).
+    pub graph_fp: u64,
+    pub stage: Stage,
+    /// Completed estimation rounds (`coverages.len()`).
+    pub rounds: u32,
+    /// The sampling prefix materialized at the snapshot (current θ).
+    pub theta: u64,
+    /// Grow start of the in-flight round (only meaningful at
+    /// [`Stage::AfterGrow`]).
+    pub grow_from: u64,
+    /// Sample-id base of the current phase (0 = estimation,
+    /// `FINAL_PHASE_BASE` = final).
+    pub id_base: u64,
+    /// Final lower bound (NaN until [`Stage::Finalized`]).
+    pub lower_bound: f64,
+    /// Receiver `(prune_floor, l_seen)` at the last completed selection.
+    pub floor: (f64, u64),
+    /// Per-round coverages reported to the martingale driver, in order.
+    pub coverages: Vec<u64>,
+    /// Accumulated communication counters at the snapshot.
+    pub volumes: CommVolume,
+    /// Per-rank S1 stream lower ids at θ (validation only — rederivable).
+    pub rng_lo: Vec<u64>,
+    /// Per-rank accumulated covers as CSR blobs (`None` for ranks whose
+    /// covers live out-of-process and are rebuilt by regeneration).
+    pub covers: Vec<Option<Vec<u8>>>,
+}
+
+// ---------------------------------------------------------------------------
+// Cover (InvertedIndex CSR) blobs.
+// ---------------------------------------------------------------------------
+
+/// Encodes an accumulated cover's CSR arrays — `vertices`, `offsets`,
+/// `ids` as length-prefixed varint sequences. Byte-identical for
+/// byte-identical CSRs (the determinism backbone makes the converse hold
+/// too).
+pub fn encode_cover(ix: &InvertedIndex) -> Vec<u8> {
+    let mut b = Vec::with_capacity(8 + 2 * ix.vertices.len() + 4 * ix.ids.len());
+    put_varint(&mut b, ix.vertices.len() as u64);
+    for &v in &ix.vertices {
+        put_varint(&mut b, v as u64);
+    }
+    put_varint(&mut b, ix.offsets.len() as u64);
+    for &o in &ix.offsets {
+        put_varint(&mut b, o as u64);
+    }
+    put_varint(&mut b, ix.ids.len() as u64);
+    for &id in &ix.ids {
+        put_varint(&mut b, id as u64);
+    }
+    b
+}
+
+fn read_u32_vec(r: &mut wire::Reader<'_>, what: &str) -> Result<Vec<u32>, CheckpointError> {
+    let n = r.varint().map_err(|e| CheckpointError::Corrupt(format!("{what} len: {e}")))? as usize;
+    // Every entry is at least one payload byte — caps the allocation at
+    // the blob size, so garbage lengths cannot balloon memory.
+    if n > r.remaining() {
+        return Err(CheckpointError::Corrupt(format!(
+            "{what} claims {n} entries with {} bytes left",
+            r.remaining()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(
+            r.varint_u32().map_err(|e| CheckpointError::Corrupt(format!("{what} entry: {e}")))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Decodes a cover blob back into an [`InvertedIndex`]; validates the CSR
+/// shape (offsets length/monotonicity and the ids span) so a corrupt blob
+/// can never panic downstream indexing.
+pub fn decode_cover(bytes: &[u8]) -> Result<InvertedIndex, CheckpointError> {
+    let mut r = wire::Reader::new(bytes);
+    let vertices = read_u32_vec(&mut r, "cover vertices")?;
+    let offsets = read_u32_vec(&mut r, "cover offsets")?;
+    let ids = read_u32_vec(&mut r, "cover ids")?;
+    if offsets.len() != vertices.len() + 1 || offsets.first().copied().unwrap_or(1) != 0 {
+        return Err(CheckpointError::Corrupt("cover CSR offsets malformed".into()));
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) || *offsets.last().unwrap() as usize != ids.len() {
+        return Err(CheckpointError::Corrupt("cover CSR offsets inconsistent".into()));
+    }
+    let mut ix = InvertedIndex::new();
+    ix.vertices = vertices;
+    ix.offsets = offsets;
+    ix.ids = ids;
+    Ok(ix)
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot codec.
+// ---------------------------------------------------------------------------
+
+fn put_f64_bits(b: &mut Vec<u8>, x: f64) {
+    put_varint(b, x.to_bits());
+}
+
+fn volume_words(v: &CommVolume) -> [u64; 8] {
+    [
+        v.alltoall_bytes,
+        v.alltoall_raw_bytes,
+        v.stream_bytes,
+        v.stream_raw_bytes,
+        v.reduction_bytes,
+        v.broadcast_bytes,
+        v.streamed_seeds,
+        v.pruned_seeds,
+    ]
+}
+
+/// Encodes a snapshot to its on-disk bytes (envelope + checksum).
+pub fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut b = Vec::with_capacity(256);
+    b.extend_from_slice(MAGIC);
+    put_varint(&mut b, FORMAT_VERSION);
+    put_varint(&mut b, ck.config_fp);
+    put_varint(&mut b, ck.graph_fp);
+    b.push(ck.stage as u8);
+    put_varint(&mut b, ck.rounds as u64);
+    put_varint(&mut b, ck.theta);
+    put_varint(&mut b, ck.grow_from);
+    put_varint(&mut b, ck.id_base);
+    put_f64_bits(&mut b, ck.lower_bound);
+    put_f64_bits(&mut b, ck.floor.0);
+    put_varint(&mut b, ck.floor.1);
+    put_varint(&mut b, ck.coverages.len() as u64);
+    for &c in &ck.coverages {
+        put_varint(&mut b, c);
+    }
+    for w in volume_words(&ck.volumes) {
+        put_varint(&mut b, w);
+    }
+    put_varint(&mut b, ck.rng_lo.len() as u64);
+    for &lo in &ck.rng_lo {
+        put_varint(&mut b, lo);
+    }
+    put_varint(&mut b, ck.covers.len() as u64);
+    for c in &ck.covers {
+        match c {
+            None => b.push(0),
+            Some(blob) => {
+                b.push(1);
+                put_varint(&mut b, blob.len() as u64);
+                b.extend_from_slice(blob);
+            }
+        }
+    }
+    let sum = fnv1a(&b);
+    b.extend_from_slice(&sum.to_le_bytes());
+    b
+}
+
+fn corrupt(e: wire::DecodeError, what: &str) -> CheckpointError {
+    CheckpointError::Corrupt(format!("{what}: {e}"))
+}
+
+fn read_u64_vec(r: &mut wire::Reader<'_>, what: &str) -> Result<Vec<u64>, CheckpointError> {
+    let n = r.varint().map_err(|e| corrupt(e, what))? as usize;
+    if n > r.remaining() {
+        return Err(CheckpointError::Corrupt(format!(
+            "{what} claims {n} entries with {} bytes left",
+            r.remaining()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.varint().map_err(|e| corrupt(e, what))?);
+    }
+    Ok(out)
+}
+
+/// Decodes on-disk bytes back into a snapshot. Arbitrary input yields a
+/// typed error (checksum first, then structure) — never a panic.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+    if bytes.len() < MAGIC.len() + 1 + 8 {
+        return Err(CheckpointError::Corrupt("shorter than envelope".into()));
+    }
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().expect("8 bytes"));
+    if fnv1a(body) != stored {
+        return Err(CheckpointError::Corrupt("checksum mismatch".into()));
+    }
+    if &body[..MAGIC.len()] != MAGIC {
+        return Err(CheckpointError::Corrupt("bad magic".into()));
+    }
+    let mut r = wire::Reader::new(&body[MAGIC.len()..]);
+    let version = r.varint().map_err(|e| corrupt(e, "version"))?;
+    if version != FORMAT_VERSION {
+        return Err(CheckpointError::Version(version));
+    }
+    let config_fp = r.varint().map_err(|e| corrupt(e, "config fp"))?;
+    let graph_fp = r.varint().map_err(|e| corrupt(e, "graph fp"))?;
+    let stage = Stage::from_byte(r.byte().map_err(|e| corrupt(e, "stage"))?)?;
+    let rounds = r.varint().map_err(|e| corrupt(e, "rounds"))?;
+    let rounds = u32::try_from(rounds)
+        .map_err(|_| CheckpointError::Corrupt(format!("rounds {rounds} out of range")))?;
+    let theta = r.varint().map_err(|e| corrupt(e, "theta"))?;
+    let grow_from = r.varint().map_err(|e| corrupt(e, "grow_from"))?;
+    let id_base = r.varint().map_err(|e| corrupt(e, "id_base"))?;
+    let lower_bound = f64::from_bits(r.varint().map_err(|e| corrupt(e, "lower bound"))?);
+    let floor_bits = r.varint().map_err(|e| corrupt(e, "floor"))?;
+    let floor_l = r.varint().map_err(|e| corrupt(e, "floor l"))?;
+    let coverages = read_u64_vec(&mut r, "coverages")?;
+    if coverages.len() != rounds as usize {
+        return Err(CheckpointError::Corrupt(format!(
+            "{} coverages for {rounds} rounds",
+            coverages.len()
+        )));
+    }
+    let mut volumes = CommVolume::default();
+    {
+        let slots: [&mut u64; 8] = [
+            &mut volumes.alltoall_bytes,
+            &mut volumes.alltoall_raw_bytes,
+            &mut volumes.stream_bytes,
+            &mut volumes.stream_raw_bytes,
+            &mut volumes.reduction_bytes,
+            &mut volumes.broadcast_bytes,
+            &mut volumes.streamed_seeds,
+            &mut volumes.pruned_seeds,
+        ];
+        for s in slots {
+            *s = r.varint().map_err(|e| corrupt(e, "volumes"))?;
+        }
+    }
+    let rng_lo = read_u64_vec(&mut r, "rng positions")?;
+    let nc = r.varint().map_err(|e| corrupt(e, "covers len"))? as usize;
+    if nc > r.remaining() {
+        return Err(CheckpointError::Corrupt(format!(
+            "covers claim {nc} entries with {} bytes left",
+            r.remaining()
+        )));
+    }
+    let mut covers = Vec::with_capacity(nc);
+    for i in 0..nc {
+        match r.byte().map_err(|e| corrupt(e, "cover tag"))? {
+            0 => covers.push(None),
+            1 => {
+                let len = r.varint().map_err(|e| corrupt(e, "cover blob len"))? as usize;
+                if len > r.remaining() {
+                    return Err(CheckpointError::Corrupt(format!(
+                        "cover {i} blob of {len} bytes with {} left",
+                        r.remaining()
+                    )));
+                }
+                let mut blob = Vec::with_capacity(len);
+                for _ in 0..len {
+                    blob.push(r.byte().map_err(|e| corrupt(e, "cover blob"))?);
+                }
+                // Shape-validate now so resume can't trip later.
+                decode_cover(&blob)?;
+                covers.push(Some(blob));
+            }
+            other => {
+                return Err(CheckpointError::Corrupt(format!("cover tag {other}")));
+            }
+        }
+    }
+    if !r.is_empty() {
+        return Err(CheckpointError::Corrupt(format!("{} trailing bytes", r.remaining())));
+    }
+    Ok(Checkpoint {
+        config_fp,
+        graph_fp,
+        stage,
+        rounds,
+        theta,
+        grow_from,
+        id_base,
+        lower_bound,
+        floor: (f64::from_bits(floor_bits), floor_l),
+        coverages,
+        volumes,
+        rng_lo,
+        covers,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Durable IO.
+// ---------------------------------------------------------------------------
+
+/// The retained per-stage snapshot name.
+pub fn snapshot_name(rounds: u32, stage: Stage) -> String {
+    format!("ckpt-r{rounds}-s{}.bin", stage as u8)
+}
+
+fn write_atomic(dir: &Path, name: &str, bytes: &[u8]) -> Result<PathBuf, CheckpointError> {
+    let tmp = dir.join(format!(".{name}.tmp"));
+    let dst = dir.join(name);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, &dst)?;
+    // Make the rename itself durable; failure here (exotic filesystems)
+    // costs durability of the *latest* write only, never atomicity.
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(dst)
+}
+
+/// Atomically writes one snapshot: the retained `ckpt-r<rounds>-s<stage>.bin`
+/// plus the [`LATEST`] pointer copy. Creates `dir` if missing. Returns the
+/// retained path.
+pub fn write_snapshot(dir: &Path, ck: &Checkpoint) -> Result<PathBuf, CheckpointError> {
+    fs::create_dir_all(dir)?;
+    let bytes = encode(ck);
+    let kept = write_atomic(dir, &snapshot_name(ck.rounds, ck.stage), &bytes)?;
+    write_atomic(dir, LATEST, &bytes)?;
+    Ok(kept)
+}
+
+/// Loads and validates a snapshot file.
+pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+    decode(&fs::read(path)?)
+}
+
+/// Loads the latest snapshot from `dir`; `Ok(None)` when the directory or
+/// the [`LATEST`] pointer does not exist (a clean start, not an error).
+pub fn load_latest(dir: &Path) -> Result<Option<Checkpoint>, CheckpointError> {
+    let path = dir.join(LATEST);
+    match fs::read(&path) {
+        Ok(bytes) => decode(&bytes).map(Some),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(CheckpointError::Io(e)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn sample() -> Checkpoint {
+        let mut ix = InvertedIndex::new();
+        ix.vertices = vec![3, 7, 9];
+        ix.offsets = vec![0, 2, 2, 5];
+        ix.ids = vec![1, 4, 0, 2, 8];
+        let mut volumes = CommVolume::default();
+        volumes.alltoall_bytes = 12_345;
+        volumes.stream_raw_bytes = 99;
+        volumes.pruned_seeds = 7;
+        Checkpoint {
+            config_fp: 0xDEAD_BEEF_CAFE,
+            graph_fp: 0x1234_5678,
+            stage: Stage::RoundStart,
+            rounds: 2,
+            theta: 4096,
+            grow_from: 2048,
+            id_base: 0,
+            lower_bound: f64::NAN,
+            floor: (1.25, 17),
+            coverages: vec![1000, 2000],
+            volumes,
+            rng_lo: vec![0, 1024, 2048, 3072],
+            covers: vec![None, Some(encode_cover(&ix)), None, Some(encode_cover(&ix))],
+        }
+    }
+
+    fn scratch_dir() -> std::path::PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "greediris-ckpt-test-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn snapshot_roundtrips() {
+        let ck = sample();
+        let back = decode(&encode(&ck)).unwrap();
+        assert_eq!(back.config_fp, ck.config_fp);
+        assert_eq!(back.graph_fp, ck.graph_fp);
+        assert_eq!(back.stage, ck.stage);
+        assert_eq!(back.rounds, ck.rounds);
+        assert_eq!(back.theta, ck.theta);
+        assert_eq!(back.grow_from, ck.grow_from);
+        assert_eq!(back.id_base, ck.id_base);
+        assert!(back.lower_bound.is_nan());
+        assert_eq!(back.floor.0.to_bits(), ck.floor.0.to_bits());
+        assert_eq!(back.floor.1, ck.floor.1);
+        assert_eq!(back.coverages, ck.coverages);
+        assert_eq!(back.volumes, ck.volumes);
+        assert_eq!(back.rng_lo, ck.rng_lo);
+        assert_eq!(back.covers, ck.covers);
+    }
+
+    #[test]
+    fn cover_blob_roundtrips() {
+        let mut ix = InvertedIndex::new();
+        ix.vertices = vec![0, 5, 1000];
+        ix.offsets = vec![0, 1, 1, 4];
+        ix.ids = vec![9, 2, 3, 4];
+        let back = decode_cover(&encode_cover(&ix)).unwrap();
+        assert_eq!(back.vertices, ix.vertices);
+        assert_eq!(back.offsets, ix.offsets);
+        assert_eq!(back.ids, ix.ids);
+    }
+
+    #[test]
+    fn every_byte_flip_is_a_typed_error() {
+        let bytes = encode(&sample());
+        for i in 0..bytes.len() {
+            for flip in [0x01u8, 0x80] {
+                let mut bad = bytes.clone();
+                bad[i] ^= flip;
+                assert!(
+                    decode(&bad).is_err(),
+                    "flip {flip:#x} at byte {i} of {} decoded",
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let bytes = encode(&sample());
+        for len in 0..bytes.len() {
+            assert!(decode(&bytes[..len]).is_err(), "prefix of {len} decoded");
+        }
+    }
+
+    #[test]
+    fn version_bump_rejected_typed() {
+        let ck = sample();
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        put_varint(&mut b, FORMAT_VERSION + 1);
+        // Reuse a valid payload after the version so only the version is
+        // at fault.
+        let inner = encode(&ck);
+        b.extend_from_slice(&inner[MAGIC.len() + 1..inner.len() - 8]);
+        let sum = fnv1a(&b);
+        b.extend_from_slice(&sum.to_le_bytes());
+        match decode(&b) {
+            Err(CheckpointError::Version(v)) => assert_eq!(v, FORMAT_VERSION + 1),
+            other => panic!("expected Version error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_cover_shape_rejected() {
+        let mut ck = sample();
+        // offsets not monotone.
+        let mut b = Vec::new();
+        put_varint(&mut b, 2); // 2 vertices
+        put_varint(&mut b, 1);
+        put_varint(&mut b, 2);
+        put_varint(&mut b, 3); // 3 offsets
+        put_varint(&mut b, 0);
+        put_varint(&mut b, 5);
+        put_varint(&mut b, 2);
+        put_varint(&mut b, 0); // 0 ids — inconsistent with offsets
+        ck.covers = vec![Some(b)];
+        assert!(matches!(decode(&encode(&ck)), Err(CheckpointError::Corrupt(_))));
+    }
+
+    #[test]
+    fn write_load_latest_roundtrip() {
+        let dir = scratch_dir();
+        assert!(load_latest(&dir).unwrap().is_none(), "missing dir is a clean start");
+        let ck = sample();
+        let kept = write_snapshot(&dir, &ck).unwrap();
+        assert!(kept.ends_with(snapshot_name(ck.rounds, ck.stage)));
+        let latest = load_latest(&dir).unwrap().expect("latest present");
+        assert_eq!(latest.theta, ck.theta);
+        assert_eq!(latest.coverages, ck.coverages);
+        // Retained per-stage file loads too.
+        assert_eq!(load(&kept).unwrap().rounds, ck.rounds);
+        // A later snapshot replaces latest but keeps the old stage file.
+        let mut ck2 = ck.clone();
+        ck2.rounds = 3;
+        ck2.coverages.push(3000);
+        ck2.stage = Stage::Finalized;
+        write_snapshot(&dir, &ck2).unwrap();
+        assert_eq!(load_latest(&dir).unwrap().unwrap().rounds, 3);
+        assert_eq!(load(&kept).unwrap().rounds, ck.rounds);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

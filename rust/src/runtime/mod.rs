@@ -4,8 +4,13 @@
 //! greedy solver. Python never runs here: the HLO text is the interchange
 //! format (see /opt/xla-example/README.md on why text, not serialized
 //! protos).
+//!
+//! Also home to the run-level durable state machinery:
+//! [`checkpoint`] (PR 7) snapshots/restores the pipeline's round
+//! boundaries for elastic kill/resume.
 
 pub mod artifacts;
+pub mod checkpoint;
 pub mod scorer;
 
 pub use artifacts::{bucket_for, ShapeBucket, BUCKETS};

@@ -1,0 +1,297 @@
+//! Durable checkpoint/restart (PR 7) — the elastic-recovery half that
+//! survives losing the *supervisor*, not just a worker.
+//!
+//! The contract under test:
+//!
+//! - a run with `--checkpoint` produces **exactly** the seeds, θ, round
+//!   count, and comm counters of a run without it (observation must not
+//!   perturb);
+//! - resuming from **any** retained snapshot — every `RoundStart`, every
+//!   `AfterGrow`, the `Finalized` marker — replays the martingale
+//!   transcript and finishes bit-identical to the uninterrupted run;
+//! - snapshots are transport-portable: a checkpoint written by the
+//!   sequential engine resumes under `threads` and `process` (where the
+//!   restored sampling prefix is rebuilt in the fresh workers via
+//!   REJOIN regeneration) with the same seeds and raw-byte counters;
+//! - a flipped byte anywhere in a snapshot is a typed
+//!   `checkpoint corrupt` error, a snapshot from a different
+//!   config/graph/θ-override is a typed `checkpoint mismatch` — never a
+//!   panic, never a silently-wrong resume;
+//! - `--resume` over an empty directory is a fresh run, and
+//!   `--checkpoint-every` throttles round snapshots without ever
+//!   skipping the `Finalized` marker.
+//!
+//! (The killed-supervisor end-to-end path — exit 17 mid-run, then
+//! `--resume` — lives in `tests/transport.rs`, which drives the real CLI
+//! binary; here we exercise the snapshot matrix in-process.)
+
+use greediris::coordinator::{run_infmax, run_infmax_checked, Algorithm, Config};
+use greediris::diffusion::DiffusionModel;
+use greediris::distributed::TransportKind;
+use greediris::graph::generators;
+use greediris::graph::weights::WeightModel;
+use greediris::graph::Graph;
+use greediris::runtime::checkpoint::LATEST;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Fresh per-test scratch directory (collision-free across the parallel
+/// test harness without wall-clock entropy).
+fn scratch() -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "greediris-ckpt-{}-{}",
+        std::process::id(),
+        SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn graph() -> Graph {
+    let edges = generators::barabasi_albert(300, 4, 7);
+    Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 7)
+}
+
+/// Martingale config (no θ override) so there are real estimation rounds
+/// to snapshot; loose eps keeps them to a handful.
+fn martingale_cfg(kind: TransportKind) -> Config {
+    let mut c = Config::new(6, 4, DiffusionModel::IC, Algorithm::GreediRis).with_transport(kind);
+    c.eps = 0.3;
+    c
+}
+
+/// The retained per-stage snapshot files (`ckpt-r<rounds>-s<stage>.bin`),
+/// sorted by name.
+fn retained(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            name.starts_with("ckpt-") && name.ends_with(".bin")
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+/// Copies one retained snapshot into a fresh directory as `latest.ckpt`,
+/// ready to be `--resume`d in isolation.
+fn isolate(snapshot: &Path) -> PathBuf {
+    let dir = scratch();
+    std::fs::copy(snapshot, dir.join(LATEST)).unwrap();
+    dir
+}
+
+#[test]
+fn resume_from_every_retained_snapshot_matches_uninterrupted() {
+    let g = graph();
+    let reference = run_infmax(&g, &martingale_cfg(TransportKind::Sim));
+    assert!(reference.rounds >= 2, "analog too easy: {} rounds", reference.rounds);
+
+    // Writing snapshots must not perturb the run in any observable way.
+    let ckdir = scratch();
+    let writer_cfg =
+        martingale_cfg(TransportKind::Sim).with_checkpoint(ckdir.to_string_lossy().into_owned());
+    let observed = run_infmax(&g, &writer_cfg);
+    assert_eq!(observed.seeds, reference.seeds, "checkpoint writes perturbed the seeds");
+    assert_eq!(observed.theta, reference.theta);
+    assert_eq!(observed.rounds, reference.rounds);
+    assert_eq!(observed.volumes, reference.volumes);
+    assert!(
+        observed.breakdown.fabric.checkpoints >= 2,
+        "expected at least a round snapshot and the final marker: {}",
+        observed.breakdown.fabric.checkpoints
+    );
+
+    let snapshots = retained(&ckdir);
+    assert_eq!(snapshots.len() as u64, observed.breakdown.fabric.checkpoints);
+    assert!(
+        snapshots.iter().any(|p| p.to_string_lossy().ends_with("-s3.bin")),
+        "no Finalized marker among {snapshots:?}"
+    );
+    for snap in &snapshots {
+        let resume_cfg = martingale_cfg(TransportKind::Sim)
+            .with_resume(isolate(snap).to_string_lossy().into_owned());
+        let resumed = run_infmax_checked(&g, &resume_cfg)
+            .unwrap_or_else(|e| panic!("resume from {snap:?} failed: {e}"));
+        assert_eq!(resumed.seeds, reference.seeds, "seeds diverged resuming from {snap:?}");
+        assert_eq!(resumed.coverage, reference.coverage, "resuming from {snap:?}");
+        assert_eq!(resumed.theta, reference.theta, "resuming from {snap:?}");
+        assert_eq!(resumed.rounds, reference.rounds, "resuming from {snap:?}");
+        assert_eq!(resumed.volumes, reference.volumes, "comm counters diverged from {snap:?}");
+    }
+}
+
+#[test]
+fn snapshots_are_transport_portable() {
+    std::env::set_var("GREEDIRIS_WORKER_BIN", env!("CARGO_BIN_EXE_greediris"));
+    let g = graph();
+    let reference = run_infmax(&g, &martingale_cfg(TransportKind::Sim));
+
+    let ckdir = scratch();
+    run_infmax(
+        &g,
+        &martingale_cfg(TransportKind::Sim).with_checkpoint(ckdir.to_string_lossy().into_owned()),
+    );
+    // The latest mid-run round boundary: resuming it under the process
+    // transport forces the fresh workers to rebuild the restored sampling
+    // prefix by REJOIN regeneration before any new round runs.
+    let snap = retained(&ckdir)
+        .into_iter()
+        .filter(|p| p.to_string_lossy().ends_with("-s1.bin"))
+        .next_back()
+        .expect("no RoundStart snapshot retained");
+    for kind in [TransportKind::Threads, TransportKind::Process] {
+        let resume_cfg =
+            martingale_cfg(kind).with_resume(isolate(&snap).to_string_lossy().into_owned());
+        let resumed = run_infmax_checked(&g, &resume_cfg)
+            .unwrap_or_else(|e| panic!("{kind:?} resume failed: {e}"));
+        assert_eq!(resumed.seeds, reference.seeds, "seeds diverged under {kind:?}");
+        assert_eq!(resumed.theta, reference.theta);
+        assert_eq!(resumed.rounds, reference.rounds);
+        // Raw counters are the transport-invariant ones (the PR-5 gate);
+        // encoded bytes may legitimately differ across backends.
+        assert_eq!(resumed.volumes.alltoall_raw_bytes, reference.volumes.alltoall_raw_bytes);
+        assert_eq!(resumed.volumes.stream_raw_bytes, reference.volumes.stream_raw_bytes);
+    }
+}
+
+#[test]
+fn corrupt_snapshot_is_a_typed_error() {
+    let g = graph();
+    let ckdir = scratch();
+    run_infmax(
+        &g,
+        &martingale_cfg(TransportKind::Sim).with_checkpoint(ckdir.to_string_lossy().into_owned()),
+    );
+    let pristine = std::fs::read(ckdir.join(LATEST)).unwrap();
+    // Flip one bit at a spread of offsets — envelope, payload, checksum:
+    // every corruption must surface as the typed error, never a panic or
+    // a silently-wrong resume.
+    for at in [0, 5, pristine.len() / 2, pristine.len() - 1] {
+        let mut bytes = pristine.clone();
+        bytes[at] ^= 0x40;
+        let dir = scratch();
+        std::fs::write(dir.join(LATEST), &bytes).unwrap();
+        let resume_cfg =
+            martingale_cfg(TransportKind::Sim).with_resume(dir.to_string_lossy().into_owned());
+        let err = run_infmax_checked(&g, &resume_cfg)
+            .err()
+            .unwrap_or_else(|| panic!("flipped byte {at} resumed successfully"));
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("checkpoint"),
+            "corruption at byte {at} not typed as a checkpoint failure: {msg}"
+        );
+    }
+}
+
+#[test]
+fn foreign_config_snapshot_is_rejected() {
+    let g = graph();
+    let ckdir = scratch();
+    run_infmax(
+        &g,
+        &martingale_cfg(TransportKind::Sim).with_checkpoint(ckdir.to_string_lossy().into_owned()),
+    );
+    // Same graph, different sampling seed: the config fingerprint must
+    // refuse the resume before any replay happens.
+    let resume_cfg = martingale_cfg(TransportKind::Sim)
+        .with_seed(0xD15C0)
+        .with_resume(ckdir.to_string_lossy().into_owned());
+    let err = run_infmax_checked(&g, &resume_cfg).expect_err("foreign-config snapshot resumed");
+    let msg = format!("{err}");
+    assert!(msg.contains("checkpoint mismatch"), "not typed as a mismatch: {msg}");
+
+    // Different graph, same config: the graph fingerprint must refuse it.
+    let edges = generators::barabasi_albert(300, 4, 8);
+    let other = Graph::from_edges(300, &edges, WeightModel::UniformIc { max: 0.1 }, 8);
+    let resume_cfg = martingale_cfg(TransportKind::Sim)
+        .with_resume(ckdir.to_string_lossy().into_owned());
+    let err = run_infmax_checked(&other, &resume_cfg).expect_err("foreign-graph snapshot resumed");
+    let msg = format!("{err}");
+    assert!(msg.contains("checkpoint mismatch"), "not typed as a mismatch: {msg}");
+}
+
+#[test]
+fn theta_override_runs_write_and_resume_a_final_marker() {
+    let g = graph();
+    let mk = |kind| {
+        Config::new(6, 4, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_theta(1024)
+            .with_transport(kind)
+    };
+    let reference = run_infmax(&g, &mk(TransportKind::Sim));
+    let ckdir = scratch();
+    run_infmax(&g, &mk(TransportKind::Sim).with_checkpoint(ckdir.to_string_lossy().into_owned()));
+    assert!(ckdir.join(LATEST).exists(), "θ-override run wrote no Finalized marker");
+
+    let resumed = run_infmax_checked(
+        &g,
+        &mk(TransportKind::Sim).with_resume(ckdir.to_string_lossy().into_owned()),
+    )
+    .expect("θ-override resume failed");
+    assert_eq!(resumed.seeds, reference.seeds);
+    assert_eq!(resumed.theta, reference.theta);
+    assert_eq!(resumed.rounds, 0);
+
+    // A snapshot taken under a different θ override must be refused.
+    let err = run_infmax_checked(
+        &g,
+        &mk(TransportKind::Sim)
+            .with_theta(2048)
+            .with_resume(ckdir.to_string_lossy().into_owned()),
+    )
+    .expect_err("mismatched θ override resumed");
+    let msg = format!("{err}");
+    assert!(msg.contains("checkpoint mismatch"), "not typed as a mismatch: {msg}");
+}
+
+#[test]
+fn checkpoint_every_throttles_rounds_but_never_the_final_marker() {
+    let g = graph();
+    let reference = run_infmax(&g, &martingale_cfg(TransportKind::Sim));
+    let ckdir = scratch();
+    // A throttle far above the whole run's chunk count: every per-round
+    // snapshot is skipped, the Finalized marker must still be written.
+    let observed = run_infmax(
+        &g,
+        &martingale_cfg(TransportKind::Sim)
+            .with_checkpoint(ckdir.to_string_lossy().into_owned())
+            .with_checkpoint_every(1_000_000),
+    );
+    assert_eq!(observed.breakdown.fabric.checkpoints, 1, "throttle did not suppress rounds");
+    let snapshots = retained(&ckdir);
+    assert_eq!(snapshots.len(), 1);
+    assert!(
+        snapshots[0].to_string_lossy().ends_with("-s3.bin"),
+        "the one retained snapshot is not the Finalized marker: {snapshots:?}"
+    );
+    let resumed = run_infmax_checked(
+        &g,
+        &martingale_cfg(TransportKind::Sim)
+            .with_resume(ckdir.to_string_lossy().into_owned()),
+    )
+    .expect("Finalized resume failed");
+    assert_eq!(resumed.seeds, reference.seeds);
+    assert_eq!(resumed.rounds, reference.rounds);
+    assert_eq!(resumed.volumes, reference.volumes);
+}
+
+#[test]
+fn resume_over_an_empty_directory_is_a_fresh_run() {
+    let g = graph();
+    let reference = run_infmax(&g, &martingale_cfg(TransportKind::Sim));
+    let resumed = run_infmax_checked(
+        &g,
+        &martingale_cfg(TransportKind::Sim)
+            .with_resume(scratch().to_string_lossy().into_owned()),
+    )
+    .expect("empty-dir resume failed");
+    assert_eq!(resumed.seeds, reference.seeds);
+    assert_eq!(resumed.rounds, reference.rounds);
+}

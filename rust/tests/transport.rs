@@ -22,7 +22,13 @@
 //!   (`--on-rank-loss fail`) or a deterministic degraded seed set
 //!   (`--on-rank-loss redistribute`) — never a panic, never a hang —
 //!   and a refused connect is retried under backoff until the hub
-//!   appears.
+//!   appears;
+//! - the PR-7 elastic-recovery contract: under `--on-rank-loss respawn`
+//!   a killed worker (even killed repeatedly) is re-launched and
+//!   rejoined, and the finished run's seeds are **bit-identical to the
+//!   no-fault run**; a killed *supervisor* resumes from its durable
+//!   checkpoint (`--checkpoint` / `--resume`) with identical seeds, θ,
+//!   round counts, and comm counters.
 
 use greediris::coordinator::sampling::{grow_to, DistState};
 use greediris::coordinator::{run_infmax, run_infmax_checked, Algorithm, Config};
@@ -535,6 +541,150 @@ fn fault_corrupt_frame_mid_round_fails_typed() {
     let err = run_infmax_checked(&graph(), &c).expect_err("run survived a corrupted stream");
     let msg = format!("{err}");
     assert!(msg.contains("rank 2"), "diagnostic does not identify the rank: {msg}");
+}
+
+// ----------------------------------------------- elastic recovery (PR 7) --
+//
+// The respawn loss policy and the checkpoint/restart layer share one
+// contract: a run that loses a process mid-flight must end with exactly
+// the seed set of the uninterrupted run. A lost *worker* is healed in
+// place (supervisor respawn + REJOIN cover rebuild); a lost *supervisor*
+// is healed across process lifetimes (durable snapshot + `--resume`).
+
+#[test]
+fn fault_kill_mid_round_respawn_matches_no_fault_seeds() {
+    set_worker_bin();
+    let g = graph();
+    let clean = run_infmax_checked(&g, &fault_cfg(4)).expect("no-fault run failed");
+    let c = fault_cfg(4)
+        .with_fault(fault(2, FaultPhase::Round, FaultKind::Kill))
+        .with_on_rank_loss(LossPolicy::Respawn);
+    let r = run_infmax_checked(&g, &c).expect("respawn run failed");
+    assert_eq!(r.seeds, clean.seeds, "respawned run diverged from the no-fault run");
+    assert_eq!(r.coverage, clean.coverage);
+    assert_eq!(r.theta, clean.theta);
+    assert!(r.breakdown.fabric.respawns >= 1, "no respawn recorded: {}", r.breakdown.fabric);
+    assert!(r.breakdown.fabric.rejoined >= 1, "no rejoin recorded: {}", r.breakdown.fabric);
+}
+
+#[test]
+fn fault_kill_at_select_respawn_matches_no_fault_seeds() {
+    set_worker_bin();
+    let g = graph();
+    // Fused rounds never send OP_SELECT; pin the phased protocol so the
+    // loss lands in the SELECT retry loop itself.
+    let base = || fault_cfg(3).with_overlap(false);
+    let clean = run_infmax_checked(&g, &base()).expect("no-fault run failed");
+    let c = base()
+        .with_fault(fault(2, FaultPhase::Select, FaultKind::Kill))
+        .with_on_rank_loss(LossPolicy::Respawn);
+    let r = run_infmax_checked(&g, &c).expect("respawn run failed");
+    assert_eq!(r.seeds, clean.seeds, "respawned run diverged from the no-fault run");
+    assert_eq!(r.coverage, clean.coverage);
+    assert!(r.breakdown.fabric.respawns >= 1, "no respawn recorded: {}", r.breakdown.fabric);
+}
+
+#[test]
+fn fault_repeated_kills_of_one_rank_still_respawn_deterministically() {
+    set_worker_bin();
+    let g = graph();
+    let clean = run_infmax_checked(&g, &fault_cfg(4)).expect("no-fault run failed");
+    // Two queued round-phase kills for the same rank: the respawned life
+    // skips only the spec its first life consumed, then pops the second
+    // at REJOIN and dies again — forcing a second supervisor respawn
+    // before the select redo can complete.
+    let c = fault_cfg(4)
+        .with_fault(fault(2, FaultPhase::Round, FaultKind::Kill))
+        .with_fault(fault(2, FaultPhase::Round, FaultKind::Kill))
+        .with_on_rank_loss(LossPolicy::Respawn);
+    let r = run_infmax_checked(&g, &c).expect("respawn run failed");
+    assert_eq!(r.seeds, clean.seeds, "twice-respawned run diverged from the no-fault run");
+    assert!(
+        r.breakdown.fabric.respawns >= 2,
+        "expected two respawns of rank 2: {}",
+        r.breakdown.fabric
+    );
+}
+
+/// Kill the *supervisor* (rank 0) at its second round entry via the CLI,
+/// then `--resume` from the durable checkpoint: seeds, θ, round count,
+/// and every comm counter must be bit-identical to an uninterrupted run.
+///
+/// Rank-0 faults fire in the pipeline driver via `process::exit(17)`,
+/// so the killed run must be a real child process — we drive the
+/// installed binary exactly as `scripts/ci.sh` does.
+#[test]
+fn supervisor_kill_then_resume_is_bit_identical() {
+    use std::process::{Command, Output};
+
+    let scratch = std::env::temp_dir().join(format!("greediris-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).expect("mk scratch");
+    let ckdir = scratch.join("ck");
+
+    // Small analog + loose eps keeps the martingale at a handful of
+    // rounds; --sims 0 skips the (non-deterministic-time) spread eval.
+    let base = [
+        "run", "--input", "github", "--m", "6", "--k", "8", "--eps", "0.35", "--sims", "0",
+        "--transport", "sim",
+    ];
+    let run = |extra: &[&str], fault: Option<&str>| -> Output {
+        let mut c = Command::new(env!("CARGO_BIN_EXE_greediris"));
+        c.args(base).args(extra).env_remove("GREEDIRIS_FAULT");
+        if let Some(f) = fault {
+            c.env("GREEDIRIS_FAULT", f);
+        }
+        c.output().expect("spawn greediris CLI")
+    };
+    // The lines of the report that must survive a kill/resume unchanged:
+    // the seed set, the comm-volume counters, and the theta/rounds fields
+    // of the summary line (wall/modeled time legitimately differ).
+    let fingerprint = |out: &Output| -> Vec<String> {
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let mut keep: Vec<String> = Vec::new();
+        for l in stdout.lines() {
+            if l.starts_with("seeds:") || l.starts_with("comm:") {
+                keep.push(l.to_string());
+            } else if l.contains("| theta = ") {
+                keep.extend(
+                    l.split(" | ")
+                        .filter(|p| p.starts_with("theta = ") || p.starts_with("rounds = "))
+                        .map(str::to_string),
+                );
+            }
+        }
+        assert!(keep.len() >= 4, "unrecognized CLI report:\n{stdout}");
+        keep
+    };
+
+    let reference = run(&[], None);
+    assert!(
+        reference.status.success(),
+        "reference run failed: {}",
+        String::from_utf8_lossy(&reference.stderr)
+    );
+
+    let killed = run(&["--checkpoint", ckdir.to_str().unwrap()], Some("0:round:kill:2"));
+    assert_eq!(
+        killed.status.code(),
+        Some(17),
+        "injected supervisor kill must exit 17: {}",
+        String::from_utf8_lossy(&killed.stderr)
+    );
+    assert!(ckdir.join("latest.ckpt").exists(), "no snapshot written before the kill");
+
+    let resumed = run(&["--resume", ckdir.to_str().unwrap()], None);
+    assert!(
+        resumed.status.success(),
+        "resume failed: {}",
+        String::from_utf8_lossy(&resumed.stderr)
+    );
+    assert_eq!(
+        fingerprint(&resumed),
+        fingerprint(&reference),
+        "resumed run diverged from the uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&scratch);
 }
 
 #[test]

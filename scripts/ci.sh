@@ -26,17 +26,25 @@
 #      is a loud failure, never a stuck CI job. A no-fault redistribute
 #      run must still match the pinned sim seeds (the policy flag alone
 #      cannot perturb the three-way contract).
-#   5. quick-scale micro benches (sampling / shuffle / maxcover /
+#   5. elastic-recovery gates (PR 7): (a) the same mid-round kill under
+#      --on-rank-loss respawn must finish with seeds bit-identical to the
+#      no-fault sim run (the lost rank is re-launched and rejoined, not
+#      merely dropped); (b) a run whose *supervisor* is killed at its
+#      second round entry (GREEDIRIS_FAULT=0:round:kill:2, rank-0 specs
+#      read <ms> as a 1-based phase-entry ordinal) must leave a durable
+#      snapshot behind and, rerun with --resume, print identical seeds,
+#      θ, round count, and comm counters to an uninterrupted run.
+#   6. quick-scale micro benches (sampling / shuffle / maxcover /
 #      transport, incl. the socket-backend leg) through the in-tree
 #      harness (src/exp/bench.rs), each measurement exported as a JSON
 #      line via GREEDIRIS_BENCH_JSON.
-#   6. assemble the lines into BENCH_PR5.json at the repo root — the
+#   7. assemble the lines into BENCH_PR5.json at the repo root — the
 #      current perf record, stamped with the git SHA and the flag matrix
 #      the benches ran (transport/wire/prune/overlap A/B pairs live in
 #      the same array; see scripts/README.md). A record is only written
 #      when this run actually measured something: an existing measured
 #      BENCH_PR5.json is never replaced by a placeholder or an empty run.
-#   7. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
+#   8. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
 #      authoring containers had no Rust toolchain, so the repo may carry
 #      marked placeholders; the first run on a toolchain-equipped host
 #      replaces a placeholder (or missing file) with this run's measured
@@ -179,6 +187,58 @@ if [ "$RED_CLEAN" != "$SIM_SEEDS" ]; then
   exit 1
 fi
 echo "no-fault redistribute seeds identical to sim"
+
+echo "== elastic-recovery gates (PR 7) =="
+# Respawn mode: the same mid-round kill must be healed *in place* — the
+# supervisor re-launches the lost rank, the new life rejoins by cover
+# regeneration, and the selection is redone with the full fabric. Unlike
+# redistribute (deterministic but degraded), the finished seed set must
+# be bit-identical to the no-fault pinned seeds.
+RSP_SEEDS="$(GREEDIRIS_FAULT=2:round:kill timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss respawn | grep '^seeds:')"
+if [ "$RSP_SEEDS" != "$SIM_SEEDS" ]; then
+  echo "error: respawned run diverged from the no-fault seeds" >&2
+  echo "  sim:     $SIM_SEEDS" >&2
+  echo "  respawn: $RSP_SEEDS" >&2
+  exit 1
+fi
+echo "respawn mode: killed rank 2 healed in place, seeds identical to sim"
+
+# Checkpoint/restart: kill the *supervisor* (rank 0) at its second round
+# entry, then resume from the durable snapshot. No --theta override here:
+# the martingale round transcript is exactly what snapshot/replay must
+# preserve. The comparison covers the seed set, the comm counters, and
+# the theta/rounds summary fields — wall/modeled times legitimately
+# differ across process lifetimes.
+ck_fingerprint() {
+  grep -E '^seeds:|^comm:' <<<"$1"
+  grep '| theta = ' <<<"$1" | sed -E 's/ \| modeled time = .*$//'
+}
+CK_ARGS=(run --input dblp --m 8 --k 20 --eps 0.3 --sims 0 --transport sim)
+CKDIR="$(mktemp -d)"
+REF_OUT="$(timeout "$FAULT_BUDGET" "$BIN" "${CK_ARGS[@]}")"
+set +e
+KILL_OUT="$(GREEDIRIS_FAULT=0:round:kill:2 timeout "$FAULT_BUDGET" \
+  "$BIN" "${CK_ARGS[@]}" --checkpoint "$CKDIR" 2>&1)"
+KILL_RC=$?
+set -e
+if [ "$KILL_RC" -ne 17 ]; then
+  echo "error: injected supervisor kill exited $KILL_RC (want 17)" >&2
+  echo "$KILL_OUT" >&2
+  exit 1
+fi
+if [ ! -f "$CKDIR/latest.ckpt" ]; then
+  echo "error: no snapshot written before the supervisor kill" >&2
+  exit 1
+fi
+RES_OUT="$(timeout "$FAULT_BUDGET" "$BIN" "${CK_ARGS[@]}" --resume "$CKDIR")"
+if [ "$(ck_fingerprint "$REF_OUT")" != "$(ck_fingerprint "$RES_OUT")" ]; then
+  echo "error: resumed run diverged from the uninterrupted run" >&2
+  diff <(ck_fingerprint "$REF_OUT") <(ck_fingerprint "$RES_OUT") >&2 || true
+  exit 1
+fi
+rm -rf "$CKDIR"
+echo "checkpoint/restart: supervisor killed at round 2, resume bit-identical"
 
 echo "== micro benches (scale: ${GREEDIRIS_BENCH_SCALE:-quick}) =="
 JSONL="$ROOT/rust/target/bench_pr5.jsonl"
