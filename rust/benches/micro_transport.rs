@@ -20,8 +20,15 @@
 //!    counters asserted identical to both in-process backends before any
 //!    timing. Worker processes are forked from the `greediris` binary
 //!    (`CARGO_BIN_EXE_greediris`, resolved at compile time).
+//! 6. PR-8 coalescing A/B — `infmax_coalesce_{on,off}_*`: the process
+//!    backend with the per-peer vectored send coalescer at its default
+//!    byte budget vs `--coalesce 0` (one write per frame). Seeds are
+//!    asserted bit-identical, the hub-side syscall/byte/batch counters
+//!    are exported, and the ≥5× send-syscall reduction on the chunked
+//!    overlapped m=8 round is asserted before any timing.
 //!
-//! `scripts/ci.sh` collects every line into `BENCH_PR5.json`.
+//! `scripts/ci.sh` collects the PR-3..5 lines into `BENCH_PR5.json` and
+//! the coalescing lines into `BENCH_PR8.json`.
 
 use greediris::coordinator::sampling::{invert_batch_to_streams, DistState};
 use greediris::coordinator::{run_infmax, Algorithm, Config};
@@ -190,5 +197,59 @@ fn main() {
         off_ref.sim_time / on_ref.sim_time,
         off_ref.sim_time,
         on_ref.sim_time,
+    );
+
+    // ---- A/B (PR 8): per-peer send coalescing on the socket backend —
+    // hub relay frames batched into vectored writes under the default
+    // byte budget vs one blocking write per frame (`--coalesce 0`). The
+    // chunked overlapped m=8 round is the acceptance workload: same
+    // seeds, ≥5× fewer hub-side send syscalls.
+    use greediris::distributed::transport::process::DEFAULT_COALESCE;
+    let cfg_co = cfg_prc.clone().with_overlap(true);
+    let co_on = run_infmax(&g, &cfg_co.clone().with_coalesce(DEFAULT_COALESCE));
+    let co_off = run_infmax(&g, &cfg_co.clone().with_coalesce(0));
+    assert_eq!(co_on.seeds, co_off.seeds, "coalescing must not change seeds");
+    assert_eq!(co_on.seeds, sim_ref.seeds, "coalesced process run diverged from sim");
+    assert_eq!(
+        co_on.volumes.stream_raw_bytes, co_off.volumes.stream_raw_bytes,
+        "raw-byte counters must be batching-invariant"
+    );
+    let (w_on, w_off) = (&co_on.breakdown.wire, &co_off.breakdown.wire);
+    assert!(w_on.send_syscalls > 0 && w_off.send_syscalls > 0, "hub wire counters missing");
+    let reduction = w_off.send_syscalls as f64 / w_on.send_syscalls as f64;
+    assert!(
+        reduction >= 5.0,
+        "coalescing must cut hub send syscalls >=5x on the chunked overlapped \
+         m=8 round (got {:.2}x: {} writes vs {})",
+        reduction,
+        w_off.send_syscalls,
+        w_on.send_syscalls,
+    );
+    export_extra("coalesce_on_send_syscalls", "count", w_on.send_syscalls as f64);
+    export_extra("coalesce_off_send_syscalls", "count", w_off.send_syscalls as f64);
+    export_extra("coalesce_syscall_reduction", "ratio", reduction);
+    export_extra("coalesce_on_bytes_per_syscall", "bytes", w_on.bytes_per_syscall());
+    export_extra("coalesce_off_bytes_per_syscall", "bytes", w_off.bytes_per_syscall());
+    export_extra("coalesce_on_coalesced_frames", "count", w_on.coalesced_frames as f64);
+    export_extra("coalesce_on_raw_relays", "count", w_on.raw_relays as f64);
+    export_extra("infmax_coalesce_on_m8_theta4096", "makespan_s", co_on.sim_time);
+    export_extra("infmax_coalesce_off_m8_theta4096", "makespan_s", co_off.sim_time);
+    let co_on_stats = b.bench("infmax_coalesce_on_m8_theta4096", || {
+        run_infmax(&g, &cfg_co.clone().with_coalesce(DEFAULT_COALESCE)).coverage
+    });
+    let co_off_stats = b.bench("infmax_coalesce_off_m8_theta4096", || {
+        run_infmax(&g, &cfg_co.clone().with_coalesce(0)).coverage
+    });
+    println!(
+        "process coalescing on-vs-off: syscalls {:.1}x fewer ({} vs {}), \
+         {:.0} B/send vs {:.0} B/send, wall {:.2}x (off {:.3}s vs on {:.3}s medians)",
+        reduction,
+        w_off.send_syscalls,
+        w_on.send_syscalls,
+        w_on.bytes_per_syscall(),
+        w_off.bytes_per_syscall(),
+        co_off_stats.median / co_on_stats.median,
+        co_off_stats.median,
+        co_on_stats.median,
     );
 }

@@ -2,7 +2,19 @@
 
 use crate::diffusion::DiffusionModel;
 use crate::distributed::fault::{env_fabric_timeout_ms, FaultSpec, LossPolicy};
+use crate::distributed::transport::process::DEFAULT_COALESCE;
 use crate::distributed::{NetModel, TransportKind};
+
+/// Default coalescing budget: `GREEDIRIS_COALESCE` (bytes) when set and
+/// parseable, else [`DEFAULT_COALESCE`] — so `scripts/ci.sh` can sweep
+/// the knob across the whole test suite without threading a flag through
+/// every entry point.
+fn env_coalesce() -> usize {
+    std::env::var("GREEDIRIS_COALESCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_COALESCE)
+}
 use crate::imm::bounds;
 use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
 use crate::Vertex;
@@ -153,6 +165,25 @@ pub struct Config {
     /// (`--resume`). An empty/missing `latest.ckpt` is a clean start; a
     /// snapshot from a different config/graph is a typed error.
     pub resume_dir: Option<String>,
+    /// Per-peer send-coalescing byte budget on the process fabric
+    /// (`--coalesce`, default from `GREEDIRIS_COALESCE` or
+    /// [`DEFAULT_COALESCE`]): each hub writer wakeup drains its queued
+    /// frames into vectored writes up to this many payload bytes. `0`
+    /// restores the one-write-per-frame baseline. Pure transport knob —
+    /// seeds, θ, and raw-byte counters are identical at every setting
+    /// (never part of the wire config blob or checkpoint fingerprint).
+    pub coalesce: usize,
+    /// Routable rank-0 listener address (`--fabric-bind host:port`) for
+    /// multi-host runs; `None` binds an ephemeral loopback port.
+    pub fabric_bind: Option<String>,
+    /// Worker placement (`--hosts <file>`): rank `p` launches on
+    /// `hosts[(p - 1) % hosts.len()]`. Empty = every rank local.
+    pub hosts: Vec<String>,
+    /// Per-host launch command template (`--launch`, `GREEDIRIS_LAUNCH`;
+    /// placeholders `{host} {rank} {addr} {timeout_ms} {bin} {env}`).
+    /// `None` = direct spawn locally / `ssh {host} env {env} {bin}`
+    /// remotely; the literal `manual` prints env-join instructions.
+    pub launch: Option<String>,
 }
 
 impl Config {
@@ -186,6 +217,10 @@ impl Config {
             checkpoint_dir: None,
             checkpoint_every: 0,
             resume_dir: None,
+            coalesce: env_coalesce(),
+            fabric_bind: None,
+            hosts: Vec::new(),
+            launch: std::env::var("GREEDIRIS_LAUNCH").ok(),
         }
     }
 
@@ -278,6 +313,32 @@ impl Config {
     /// [`Config::resume_dir`]).
     pub fn with_resume(mut self, dir: impl Into<String>) -> Self {
         self.resume_dir = Some(dir.into());
+        self
+    }
+
+    /// Sets the send-coalescing byte budget (`0` = per-frame baseline;
+    /// see [`Config::coalesce`]).
+    pub fn with_coalesce(mut self, bytes: usize) -> Self {
+        self.coalesce = bytes;
+        self
+    }
+
+    /// Binds rank 0's join listener to a routable address (see
+    /// [`Config::fabric_bind`]).
+    pub fn with_fabric_bind(mut self, addr: impl Into<String>) -> Self {
+        self.fabric_bind = Some(addr.into());
+        self
+    }
+
+    /// Sets the worker placement host list (see [`Config::hosts`]).
+    pub fn with_hosts(mut self, hosts: Vec<String>) -> Self {
+        self.hosts = hosts;
+        self
+    }
+
+    /// Sets the per-host launch template (see [`Config::launch`]).
+    pub fn with_launch(mut self, template: impl Into<String>) -> Self {
+        self.launch = Some(template.into());
         self
     }
 
@@ -427,6 +488,23 @@ mod tests {
         assert_eq!(auto.chunk_size(0), Config::MIN_AUTO_CHUNK);
         assert_eq!(auto.chunk_size(8), Config::MIN_AUTO_CHUNK);
         assert_eq!(auto.chunk_size(80_000), 10_000);
+    }
+
+    #[test]
+    fn fabric_launcher_builders() {
+        let c = cfg(Algorithm::GreediRis);
+        assert!(c.coalesce > 0, "coalescing defaults on");
+        assert!(c.fabric_bind.is_none());
+        assert!(c.hosts.is_empty());
+        let c = c
+            .with_coalesce(0)
+            .with_fabric_bind("10.0.0.2:7000")
+            .with_hosts(vec!["a".into(), "b".into()])
+            .with_launch("manual");
+        assert_eq!(c.coalesce, 0);
+        assert_eq!(c.fabric_bind.as_deref(), Some("10.0.0.2:7000"));
+        assert_eq!(c.hosts, vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(c.launch.as_deref(), Some("manual"));
     }
 
     #[test]

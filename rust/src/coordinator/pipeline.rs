@@ -656,6 +656,9 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
     if let Some(w) = &writer {
         breakdown.fabric.checkpoints = w.written;
     }
+    // Socket send-path counters (syscalls, bytes/syscall, coalescing, raw
+    // relays) — likewise process-only and unprinted when all-zero.
+    breakdown.wire = cluster.wire_stats();
 
     let _ = lower_bound;
     Ok(RunResult {

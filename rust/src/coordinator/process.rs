@@ -430,12 +430,20 @@ fn enc_rejoin(id_base: u64, to: u64) -> Vec<u8> {
 // ---------------------------------------------------------------------------
 
 /// The fabric knobs a process round runs under, lifted off the config
-/// (`--fabric-timeout`, `--on-rank-loss`, and the injection harness).
+/// (`--fabric-timeout`, `--on-rank-loss`, the injection harness, the
+/// send-coalescing budget, and the multi-host launcher). None of these
+/// enter [`encode_config`] — they shape *how* bytes move and where
+/// workers run, never *what* is computed, so seeds and checkpoint
+/// fingerprints stay identical across all settings.
 pub(crate) fn fabric_options(cfg: &Config) -> FabricOptions {
     FabricOptions {
         timeouts: FabricTimeouts::from_millis(cfg.fabric_timeout_ms),
         policy: cfg.on_rank_loss,
         fault: cfg.fault.clone(),
+        coalesce: cfg.coalesce,
+        bind: cfg.fabric_bind.clone(),
+        hosts: cfg.hosts.clone(),
+        launch: cfg.launch.clone(),
     }
 }
 

@@ -74,7 +74,7 @@ pub use threads::{Fabric, RankEndpoint, ThreadTransport};
 use super::cluster::RankClock;
 use super::fault::FabricError;
 use super::netmodel::NetModel;
-use crate::metrics::FaultStats;
+use crate::metrics::{FaultStats, WireStats};
 use std::time::Instant;
 
 /// Which execution engine backs a [`Transport`].
@@ -196,6 +196,14 @@ pub trait Transport: Send {
     /// Zero for the in-process backends, which cannot lose a rank.
     fn fault_stats(&self) -> FaultStats {
         FaultStats::default()
+    }
+
+    /// Socket send-path counters (syscalls, bytes, coalesced and
+    /// raw-relayed frames) accumulated by the fabric since this transport
+    /// was created. Zero for the in-process backends, which own no
+    /// sockets.
+    fn wire_stats(&self) -> WireStats {
+        WireStats::default()
     }
 }
 

@@ -101,7 +101,7 @@ use crate::distributed::fault::{
 use crate::distributed::netmodel::NetModel;
 use crate::distributed::wire::{self, DecodeError};
 use crate::graph::{Csr, Graph};
-use crate::metrics::FaultStats;
+use crate::metrics::{FaultStats, WireStats};
 use std::collections::VecDeque;
 use std::io;
 use std::net::{TcpListener, TcpStream};
@@ -145,24 +145,85 @@ const POLL: Duration = Duration::from_millis(25);
 /// redistribute semantics for the rest of the run.
 pub const MAX_RESPAWNS: u32 = 2;
 
-/// Builds a routed message: `[tag varint][kind u8][body]`. `tag` is the
-/// destination on the worker→hub direction and the source on the
-/// hub→worker direction.
-pub fn routed_msg(tag: usize, kind: u8, body: &[u8]) -> Vec<u8> {
-    let mut p = Vec::with_capacity(6 + body.len());
-    wire::put_varint(&mut p, tag as u64);
+/// Default per-peer send-coalescing budget in **bytes**: a hub writer
+/// wakeup drains its FIFO into one vectored write until this much payload
+/// is queued (or the FIFO runs dry). `0` restores the per-frame baseline
+/// (one write per frame). Runtime knob: `--coalesce` /
+/// `GREEDIRIS_COALESCE`.
+pub const DEFAULT_COALESCE: usize = 64 * 1024;
+
+/// Frames-per-syscall ceiling on the coalescing drain, mirroring the
+/// iovec window [`frame::FrameWriter::flush_into`] can retire in one
+/// `writev`. Draining deeper would only grow the queue ahead of the
+/// window without saving syscalls.
+const MAX_COALESCED_FRAMES: usize = 64;
+
+/// Builds a routed message: `[src varint][dst varint][kind u8][body]`.
+/// Both ranks ride in **every** frame, in both directions (hub-originated
+/// messages carry `src = 0`; worker→hub messages carry `dst = 0`), so a
+/// relayed frame is byte-identical on ingress and egress — the hub
+/// forwards the verified frame verbatim ([`frame::FrameWriter::push_raw`])
+/// instead of re-tagging and re-checksumming it.
+pub fn routed_msg(src: usize, dst: usize, kind: u8, body: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(11 + body.len());
+    wire::put_varint(&mut p, src as u64);
+    wire::put_varint(&mut p, dst as u64);
     p.push(kind);
     p.extend_from_slice(body);
     p
 }
 
-/// Splits a routed message into `(tag, kind, body)`.
-pub fn parse_routed(msg: &[u8]) -> Result<(usize, u8, Vec<u8>), DecodeError> {
+/// Splits a routed message into `(src, dst, kind, body)`.
+pub fn parse_routed(msg: &[u8]) -> Result<(usize, usize, u8, Vec<u8>), DecodeError> {
+    let (src, dst, kind, off) = routed_prefix(msg)?;
+    Ok((src, dst, kind, msg[off..].to_vec()))
+}
+
+/// Parses just the routing prefix of a routed message, without copying the
+/// body: `(src, dst, kind, body_offset)` — the relay path's zero-copy
+/// dispatch view.
+pub fn routed_prefix(msg: &[u8]) -> Result<(usize, usize, u8, usize), DecodeError> {
     let mut r = wire::Reader::new(msg);
-    let tag = r.varint()? as usize;
+    let src = r.varint()? as usize;
+    let dst = r.varint()? as usize;
     let kind = r.byte()?;
-    let body = msg[msg.len() - r.remaining()..].to_vec();
-    Ok((tag, kind, body))
+    Ok((src, dst, kind, msg.len() - r.remaining()))
+}
+
+/// Stack-allocated `[src varint][dst varint][kind u8]` routing prefix.
+/// Control-path sends frame it alongside the body
+/// (`frame::write_frame(w, &[hdr.as_slice(), body])`), so a heartbeat,
+/// CTRL, or JOIN frame goes out with **zero per-send heap allocation**.
+pub struct RoutedHdr {
+    buf: [u8; 21],
+    len: usize,
+}
+
+impl RoutedHdr {
+    pub fn new(src: usize, dst: usize, kind: u8) -> Self {
+        let mut h = Self { buf: [0; 21], len: 0 };
+        h.put_varint(src as u64);
+        h.put_varint(dst as u64);
+        h.buf[h.len] = kind;
+        h.len += 1;
+        h
+    }
+
+    fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            self.buf[self.len] = if v == 0 { byte } else { byte | 0x80 };
+            self.len += 1;
+            if v == 0 {
+                break;
+            }
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[..self.len]
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -712,16 +773,26 @@ impl PeerSender for SocketSender {
             let _ = self.local.send((self.rank, payload));
             return;
         }
-        let mut hdr = Vec::with_capacity(6);
-        wire::put_varint(&mut hdr, dst as u64);
-        hdr.push(self.kind);
+        // Routing prefix on the stack, payload borrowed: the frame goes
+        // out as one vectored write with zero per-send heap allocation.
+        let hdr = RoutedHdr::new(self.rank, dst, self.kind);
         // A write can only fail when the supervisor is gone; the round is
         // dead either way and the worker will observe the loss on its
         // inbox. A poisoned lock is recovered, not propagated — the frame
         // boundary is intact (writes hold the lock for the whole frame).
         let mut s = lock_unpoisoned(&self.stream);
-        let _ = frame::write_frame(&mut *s, &[&hdr, &payload]);
+        let _ = frame::write_frame(&mut *s, &[hdr.as_slice(), &payload]);
     }
+}
+
+/// One queued frame on a hub writer's outbound FIFO. `Msg` is a
+/// hub-originated routed message, framed (length + checksum) at flush
+/// time; `Raw` is an ingress-verified frame relayed **verbatim** — the
+/// 8-byte header is reused and the checksum never recomputed
+/// ([`frame::FrameWriter::push_raw`]).
+pub enum OutFrame {
+    Msg(Vec<u8>),
+    Raw(Vec<u8>),
 }
 
 /// The supervisor-side (rank 0) send half: self-addressed payloads go to
@@ -733,7 +804,7 @@ pub struct HubSender {
     kind: u8,
     local: mpsc::Sender<(usize, Vec<u8>)>,
     /// Outbound queue of worker rank `p` at index `p - 1`.
-    out: Vec<mpsc::Sender<Vec<u8>>>,
+    out: Vec<mpsc::Sender<OutFrame>>,
 }
 
 impl PeerSender for HubSender {
@@ -741,7 +812,7 @@ impl PeerSender for HubSender {
         if dst == 0 {
             let _ = self.local.send((0, payload));
         } else {
-            let _ = self.out[dst - 1].send(routed_msg(0, self.kind, &payload));
+            let _ = self.out[dst - 1].send(OutFrame::Msg(routed_msg(0, dst, self.kind, &payload)));
         }
     }
 }
@@ -749,7 +820,7 @@ impl PeerSender for HubSender {
 /// Pushes threshold-floor snapshots to live sender ranks (held by the
 /// canonical merger thread during S3).
 pub struct FloorPusher {
-    out: Vec<mpsc::Sender<Vec<u8>>>,
+    out: Vec<mpsc::Sender<OutFrame>>,
 }
 
 impl FloorPusher {
@@ -758,7 +829,7 @@ impl FloorPusher {
         put_f64(&mut body, floor);
         wire::put_varint(&mut body, l);
         for &p in live {
-            let _ = self.out[p - 1].send(routed_msg(0, K_FLOOR, &body));
+            let _ = self.out[p - 1].send(OutFrame::Msg(routed_msg(0, p, K_FLOOR, &body)));
         }
     }
 }
@@ -767,7 +838,7 @@ impl FloorPusher {
 /// Stands in for the outbound queue of a rank that was lost (or never
 /// joined), so every send path stays infallible without `expect`ing on
 /// liveness.
-fn dead_tx() -> mpsc::Sender<Vec<u8>> {
+fn dead_tx() -> mpsc::Sender<OutFrame> {
     let (tx, _rx) = mpsc::channel();
     tx
 }
@@ -782,7 +853,7 @@ pub struct HubFeeder {
     s2_tx: mpsc::Sender<(usize, Vec<u8>)>,
     /// Outbound queue of worker rank `p` at index `p - 1` (dead queues
     /// for lost ranks).
-    out: Vec<mpsc::Sender<Vec<u8>>>,
+    out: Vec<mpsc::Sender<OutFrame>>,
     ledger: Arc<RelayLedger>,
     health: Arc<FabricHealth>,
 }
@@ -800,7 +871,7 @@ impl HubFeeder {
         if dst == 0 {
             let _ = self.s2_tx.send((src, payload));
         } else {
-            let _ = self.out[dst - 1].send(routed_msg(src, K_S2, &payload));
+            let _ = self.out[dst - 1].send(OutFrame::Msg(routed_msg(src, dst, K_S2, &payload)));
         }
     }
 }
@@ -902,7 +973,8 @@ impl WorkerLink {
         wire::put_varint(&mut join, retries);
         {
             let mut w = &stream;
-            frame::write_frame(&mut w, &[&routed_msg(0, K_JOIN, &join)])?;
+            let hdr = RoutedHdr::new(rank, 0, K_JOIN);
+            frame::write_frame(&mut w, &[hdr.as_slice(), &join])?;
         }
         // First inbound frame is HELLO; read it synchronously — and under
         // a read deadline, so a worker whose supervisor died at join
@@ -933,7 +1005,7 @@ impl WorkerLink {
                 }
                 Err(e) => return Err(e),
             };
-            let (_, kind, body) = parse_routed(&msg)
+            let (_, _, kind, body) = parse_routed(&msg)
                 .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
             match kind {
                 K_CTRL => break body,
@@ -968,14 +1040,19 @@ impl WorkerLink {
         let hb_every = (timeouts.recv / 4).clamp(Duration::from_millis(50), Duration::from_secs(5));
         let hb_stream = Arc::clone(&stream);
         let hb_health = Arc::clone(&health);
-        let heartbeat = std::thread::spawn(move || loop {
-            std::thread::sleep(hb_every);
-            if hb_health.is_shutdown() {
-                return;
-            }
-            let mut s = lock_unpoisoned(&hb_stream);
-            if frame::write_frame(&mut *s, &[&routed_msg(0, K_HB, &[])]).is_err() {
-                return;
+        let heartbeat = std::thread::spawn(move || {
+            // One stack prefix for the life of the thread: a beat is a
+            // single vectored write with no per-send allocation.
+            let hdr = RoutedHdr::new(rank, 0, K_HB);
+            loop {
+                std::thread::sleep(hb_every);
+                if hb_health.is_shutdown() {
+                    return;
+                }
+                let mut s = lock_unpoisoned(&hb_stream);
+                if frame::write_frame(&mut *s, &[hdr.as_slice()]).is_err() {
+                    return;
+                }
             }
         });
         Ok((
@@ -1037,15 +1114,17 @@ impl WorkerLink {
 
     /// Ships a control payload (STATS) to the supervisor.
     pub fn ctrl_send(&self, body: &[u8]) {
+        let hdr = RoutedHdr::new(self.rank, 0, K_CTRL);
         let mut s = lock_unpoisoned(&self.stream);
-        let _ = frame::write_frame(&mut *s, &[&routed_msg(0, K_CTRL, body)]);
+        let _ = frame::write_frame(&mut *s, &[hdr.as_slice(), body]);
     }
 
     /// Fault injection (`corrupt`): ships a frame whose checksum is
     /// deliberately wrong, exercising the hub's corrupt-stream verdict.
     pub fn send_corrupt_frame(&self) -> io::Result<()> {
+        let hdr = RoutedHdr::new(self.rank, 0, K_S2);
         let mut s = lock_unpoisoned(&self.stream);
-        frame::write_corrupt_frame(&mut *s, &[&routed_msg(0, K_S2, b"injected corruption")])
+        frame::write_corrupt_frame(&mut *s, &[hdr.as_slice(), b"injected corruption"])
     }
 
     /// The live threshold-floor cell fed by the hub's K_FLOOR pushes.
@@ -1074,7 +1153,7 @@ fn worker_reader(
                 return;
             }
         };
-        let (src, kind, body) = match parse_routed(&msg) {
+        let (src, _dst, kind, body) = match parse_routed(&msg) {
             Ok(t) => t,
             Err(e) => {
                 health.mark_all_lost(format!("malformed frame from hub: {e}"));
@@ -1115,7 +1194,7 @@ fn worker_reader(
 
 /// Knobs the round drivers hand the fabric at spawn time (built from the
 /// run [`Config`](crate::coordinator::Config)).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct FabricOptions {
     pub timeouts: FabricTimeouts,
     pub policy: LossPolicy,
@@ -1126,12 +1205,42 @@ pub struct FabricOptions {
     /// state); rank-0 specs are fired by the pipeline driver and never
     /// reach a worker.
     pub fault: Vec<FaultSpec>,
+    /// Per-peer send-coalescing byte budget (`--coalesce`); `0` = one
+    /// write per frame (the pre-coalescing baseline).
+    pub coalesce: usize,
+    /// Routable rank-0 listener address (`--fabric-bind host:port`);
+    /// `None` binds an ephemeral loopback port (the single-host default).
+    pub bind: Option<String>,
+    /// Worker placement (`--hosts`): rank `p` runs on
+    /// `hosts[(p - 1) % hosts.len()]`. Empty = every rank local.
+    pub hosts: Vec<String>,
+    /// Per-host launch template (`--launch`, `GREEDIRIS_LAUNCH`); `None`
+    /// = direct spawn for local hosts, the default ssh template
+    /// otherwise; the literal `"manual"` prints env-join instructions
+    /// instead of launching.
+    pub launch: Option<String>,
+}
+
+impl Default for FabricOptions {
+    fn default() -> Self {
+        Self {
+            timeouts: FabricTimeouts::default(),
+            policy: LossPolicy::default(),
+            fault: Vec::new(),
+            coalesce: DEFAULT_COALESCE,
+            bind: None,
+            hosts: Vec::new(),
+            launch: None,
+        }
+    }
 }
 
 struct WorkerHandle {
-    child: Child,
+    /// `None` for a worker the supervisor did not itself spawn (a
+    /// `--launch manual` env-join, where the operator owns the process).
+    child: Option<Child>,
     /// `None` once shutdown was queued, or for a rank that never joined.
-    out_tx: Option<mpsc::Sender<Vec<u8>>>,
+    out_tx: Option<mpsc::Sender<OutFrame>>,
     writer: Option<JoinHandle<()>>,
     reader: Option<JoinHandle<()>>,
 }
@@ -1141,7 +1250,7 @@ struct WorkerHandle {
 /// mutex-guarded — not a per-reader snapshot — so a respawn can re-point
 /// routing at the replacement worker's fresh queue while the long-lived
 /// hub readers keep draining.
-type ForwardTable = Arc<Mutex<Vec<Option<mpsc::Sender<Vec<u8>>>>>>;
+type ForwardTable = Arc<Mutex<Vec<Option<mpsc::Sender<OutFrame>>>>>;
 
 /// The lanes one hub reader demuxes into (cloned per reader thread).
 #[derive(Clone)]
@@ -1179,6 +1288,11 @@ pub struct ProcessCluster {
     hello: Vec<u8>,
     lanes: HubLanes,
     faults: Vec<FaultSpec>,
+    /// Launcher state replayed on respawn: placement list, launch
+    /// template, and the writer-coalescing budget for replacement queues.
+    hosts: Vec<String>,
+    launch: Option<String>,
+    coalesce: usize,
     /// Respawns attempted per rank (capped at [`MAX_RESPAWNS`]); doubles
     /// as the replacement's `GREEDIRIS_FAULT_SKIP` so already-fired
     /// fault specs are not re-armed.
@@ -1208,7 +1322,7 @@ impl ProcessCluster {
         self.health.fault_stats()
     }
 
-    fn out_or_dead(&self, i: usize) -> mpsc::Sender<Vec<u8>> {
+    fn out_or_dead(&self, i: usize) -> mpsc::Sender<OutFrame> {
         self.workers[i].out_tx.clone().unwrap_or_else(dead_tx)
     }
 
@@ -1334,8 +1448,11 @@ impl ProcessCluster {
         lock_unpoisoned(&self.lanes.forwards)[rank] = None;
         {
             let w = &mut self.workers[rank - 1];
-            let _ = w.child.kill();
-            let _ = w.child.wait();
+            if let Some(c) = w.child.as_mut() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            w.child = None;
             w.out_tx = None;
             drop(w.writer.take());
             drop(w.reader.take());
@@ -1343,22 +1460,16 @@ impl ProcessCluster {
 
         let specs: Vec<FaultSpec> =
             self.faults.iter().copied().filter(|f| f.rank == rank).collect();
-        let mut cmd = Command::new(&self.bin);
-        cmd.env("GREEDIRIS_RANK", rank.to_string())
-            .env("GREEDIRIS_FABRIC_ADDR", &self.addr)
-            .env(
-                "GREEDIRIS_FABRIC_TIMEOUT_MS",
-                (self.timeouts.recv.as_millis() as u64).to_string(),
-            )
-            .env("GREEDIRIS_REJOIN", "1")
-            .env("GREEDIRIS_FAULT_SKIP", self.attempts[rank].to_string())
-            .stdin(Stdio::null());
-        if specs.is_empty() {
-            cmd.env_remove("GREEDIRIS_FAULT");
-        } else {
-            cmd.env("GREEDIRIS_FAULT", FaultSpec::to_env_list(&specs));
-        }
-        let mut child = match cmd.spawn() {
+        let host = pick_host(&self.hosts, rank).map(str::to_owned);
+        let relaunch = WorkerLaunch {
+            bin: &self.bin,
+            addr: &self.addr,
+            timeout_ms: self.timeouts.recv.as_millis() as u64,
+            launch: self.launch.as_deref(),
+            rejoin: true,
+            fault_skip: self.attempts[rank],
+        };
+        let mut child = match relaunch.spawn(rank, host.as_deref(), &specs) {
             Ok(c) => c,
             Err(e) => {
                 self.health.abandon(rank);
@@ -1386,8 +1497,12 @@ impl ProcessCluster {
                     }
                     // The replacement dying before it joins (e.g. its own
                     // armed hello fault) resolves the wait immediately.
-                    if matches!(child.try_wait(), Ok(Some(_))) {
-                        break None;
+                    // (An externally launched replacement has no child to
+                    // watch — the deadline alone bounds the wait.)
+                    if let Some(c) = child.as_mut() {
+                        if matches!(c.try_wait(), Ok(Some(_))) {
+                            break None;
+                        }
                     }
                     std::thread::sleep(Duration::from_millis(5));
                 }
@@ -1396,8 +1511,7 @@ impl ProcessCluster {
             }
         };
         let Some((stream, fr)) = joined else {
-            let _ = child.kill();
-            let _ = child.wait();
+            reap_children(std::slice::from_mut(&mut child));
             self.health.abandon(rank);
             return Err(rerr(
                 FabricErrorKind::Timeout,
@@ -1407,15 +1521,15 @@ impl ProcessCluster {
         let write_half = match stream.try_clone() {
             Ok(w) => w,
             Err(e) => {
-                let _ = child.kill();
-                let _ = child.wait();
+                reap_children(std::slice::from_mut(&mut child));
                 self.health.abandon(rank);
                 return Err(rerr(FabricErrorKind::Io, e.to_string()));
             }
         };
 
-        let (tx, rx) = mpsc::channel::<Vec<u8>>();
-        let writer = std::thread::spawn(move || hub_writer(write_half, rx));
+        let (tx, rx) = mpsc::channel::<OutFrame>();
+        let coalesce = self.coalesce;
+        let writer = std::thread::spawn(move || hub_writer(write_half, rx, coalesce));
         let lanes = self.lanes.clone();
         let reader = std::thread::spawn(move || hub_reader(rank, stream, fr, lanes));
         lock_unpoisoned(&self.lanes.forwards)[rank] = Some(tx.clone());
@@ -1432,7 +1546,7 @@ impl ProcessCluster {
     /// joined or is being torn down).
     pub fn ctrl_send(&self, dst: usize, body: &[u8]) {
         if let Some(tx) = self.workers[dst - 1].out_tx.as_ref() {
-            let _ = tx.send(routed_msg(0, K_CTRL, body));
+            let _ = tx.send(OutFrame::Msg(routed_msg(0, dst, K_CTRL, body)));
         }
     }
 
@@ -1516,10 +1630,11 @@ impl ProcessCluster {
         let _ = writeln!(out, "  rank 0: supervisor (this process)");
         for i in 0..self.workers.len() {
             let rank = i + 1;
-            let status = match self.workers[i].child.try_wait() {
-                Ok(Some(st)) => format!("exited ({st})"),
-                Ok(None) => "running".to_string(),
-                Err(e) => format!("status unknown ({e})"),
+            let status = match self.workers[i].child.as_mut().map(Child::try_wait) {
+                Some(Ok(Some(st))) => format!("exited ({st})"),
+                Some(Ok(None)) => "running".to_string(),
+                Some(Err(e)) => format!("status unknown ({e})"),
+                None => "externally launched".to_string(),
             };
             let verdict = match self.health.loss(rank) {
                 Some(l) => format!("lost in phase {}: {}", l.phase, l.cause),
@@ -1537,9 +1652,9 @@ impl Drop for ProcessCluster {
         // Latch shutdown first: blocked receives unblock within one poll
         // tick and late reader EOFs are not recorded as losses.
         self.health.mark_shutdown();
-        for w in &mut self.workers {
+        for (i, w) in self.workers.iter_mut().enumerate() {
             if let Some(tx) = w.out_tx.take() {
-                let _ = tx.send(routed_msg(0, K_SHUTDOWN, &[]));
+                let _ = tx.send(OutFrame::Msg(routed_msg(0, i + 1, K_SHUTDOWN, &[])));
                 // Dropping the sender lets the writer thread drain and exit.
             }
         }
@@ -1549,14 +1664,15 @@ impl Drop for ProcessCluster {
         // the children dead. Joining writers first would deadlock on a
         // hung child.
         for w in &mut self.workers {
+            let Some(child) = w.child.as_mut() else { continue };
             let grace = Instant::now() + Duration::from_secs(2);
             loop {
-                match w.child.try_wait() {
+                match child.try_wait() {
                     Ok(Some(_)) => break,
                     Ok(None) => {
                         if Instant::now() >= grace {
-                            let _ = w.child.kill();
-                            let _ = w.child.wait();
+                            let _ = child.kill();
+                            let _ = child.wait();
                             break;
                         }
                         std::thread::sleep(Duration::from_millis(10));
@@ -1578,9 +1694,38 @@ impl Drop for ProcessCluster {
     }
 }
 
-fn hub_writer(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
-    for payload in rx {
-        if frame::write_frame(&mut stream, &[&payload]).is_err() {
+/// Drains one worker's outbound FIFO onto its socket. With a nonzero
+/// `coalesce` budget, each wakeup keeps pulling already-queued frames
+/// (never *waiting* for more — latency-sensitive floors and heartbeats
+/// flush on the write they arrived for) until `coalesce` bytes or
+/// [`MAX_COALESCED_FRAMES`] frames are staged, then retires the whole
+/// batch through vectored writes. `coalesce == 0` degenerates to exactly
+/// one frame per flush — the per-frame baseline the A/B bench and the CI
+/// divergence gate compare against.
+fn hub_writer(mut stream: TcpStream, rx: mpsc::Receiver<OutFrame>, coalesce: usize) {
+    let mut w = frame::FrameWriter::new();
+    fn queue(w: &mut frame::FrameWriter, f: OutFrame) {
+        match f {
+            OutFrame::Msg(payload) => w.push_owned(payload),
+            OutFrame::Raw(bytes) => w.push_raw(bytes),
+        }
+    }
+    while let Ok(first) = rx.recv() {
+        queue(&mut w, first);
+        if coalesce > 0 {
+            while w.pending() < coalesce && w.frames_pending() < MAX_COALESCED_FRAMES {
+                match rx.try_recv() {
+                    Ok(f) => queue(&mut w, f),
+                    Err(_) => break,
+                }
+            }
+        }
+        if w.flush_all(&mut stream).is_err() {
+            // The socket is dead (worker lost or tearing down). Exit and
+            // let the channel buffer absorb — and drop — whatever the
+            // round still sends; a dead peer's full queue must never
+            // wedge a sender (the no-wedge contract the fault matrix
+            // re-checks under coalescing).
             return;
         }
     }
@@ -1588,7 +1733,10 @@ fn hub_writer(mut stream: TcpStream, rx: mpsc::Receiver<Vec<u8>>) {
 
 fn hub_reader(src_rank: usize, mut stream: TcpStream, mut fr: FrameReader, lanes: HubLanes) {
     loop {
-        let msg = match fr.read_frame(&mut stream) {
+        // `fr` is a raw-mode reader ([`FrameReader::with_raw`]): `raw` is
+        // the checksum-verified frame *including* its 8-byte header, so a
+        // relay can forward these exact bytes.
+        let raw = match fr.read_frame(&mut stream) {
             Ok(Some(m)) => m,
             Ok(None) => {
                 lanes.health.mark_lost(src_rank, "socket closed (EOF)");
@@ -1608,20 +1756,31 @@ fn hub_reader(src_rank: usize, mut stream: TcpStream, mut fr: FrameReader, lanes
             }
         };
         lanes.health.mark_seen(src_rank);
-        let (dst, kind, body) = match parse_routed(&msg) {
+        let (src, dst, kind, off) = match routed_prefix(&raw[frame::HEADER_LEN..]) {
             Ok(t) => t,
             Err(e) => {
-                // Satellite 1: a malformed routed frame identifies its
-                // *source* — the hub records the verdict and keeps every
-                // other rank flowing instead of panicking.
+                // A malformed routed frame identifies its *source* — the
+                // hub records the verdict and keeps every other rank
+                // flowing instead of panicking.
                 lanes.health.mark_lost(src_rank, format!("malformed routed frame: {e}"));
                 return;
             }
         };
+        // The frame's claimed source is relay-trusted downstream (the
+        // ledger and the destination's inbox key on it), so it must match
+        // the socket it arrived on.
+        if src != src_rank {
+            lanes.health.mark_lost(
+                src_rank,
+                format!("protocol violation: frame claims src {src} on rank {src_rank}'s socket"),
+            );
+            return;
+        }
         if kind == K_HB {
             continue;
         }
         if dst == 0 {
+            let body = raw[frame::HEADER_LEN + off..].to_vec();
             let gone = match kind {
                 K_S2 => {
                     lanes.ledger.inc(src_rank, 0);
@@ -1635,17 +1794,20 @@ fn hub_reader(src_rank: usize, mut stream: TcpStream, mut fr: FrameReader, lanes
                 return;
             }
         } else {
-            // Worker-to-worker traffic: re-tag with the source and relay.
-            // The routing table is locked per frame (shared, so a
-            // respawned destination's fresh queue is picked up
-            // mid-stream); a dead or absent destination does not make
-            // the *source* dead — drop the payload and keep draining.
+            // Worker-to-worker traffic: the relay fast path. The frame
+            // already carries `[src][dst][kind]` and a verified checksum,
+            // so it is forwarded **verbatim** — no decode, no re-tag, no
+            // checksum recomputation, no payload copy. The routing table
+            // is locked per frame (shared, so a respawned destination's
+            // fresh queue is picked up mid-stream); a dead or absent
+            // destination does not make the *source* dead — drop the
+            // frame and keep draining.
             let tx = lock_unpoisoned(&lanes.forwards).get(dst).and_then(|t| t.clone());
             if let Some(tx) = tx {
                 if kind == K_S2 {
                     lanes.ledger.inc(src_rank, dst);
                 }
-                let _ = tx.send(routed_msg(src_rank, kind, &body));
+                let _ = tx.send(OutFrame::Raw(raw));
             }
         }
     }
@@ -1665,6 +1827,122 @@ fn launch_io(rank: Option<usize>, e: io::Error) -> FabricError {
     FabricError::new(FabricErrorKind::Io, FabricPhase::Launch, rank, e)
 }
 
+/// Round-robin placement: rank `p` (p ≥ 1) runs on
+/// `hosts[(p - 1) % hosts.len()]`; an empty list places every rank
+/// locally.
+fn pick_host(hosts: &[String], rank: usize) -> Option<&str> {
+    if hosts.is_empty() {
+        None
+    } else {
+        Some(hosts[(rank - 1) % hosts.len()].as_str())
+    }
+}
+
+/// Hosts a worker can launch locally on without a remote hop.
+fn is_local_host(host: &str) -> bool {
+    matches!(host, "localhost" | "127.0.0.1" | "::1" | "[::1]")
+}
+
+/// The address workers are told to join. The configured bind host is kept
+/// (it is the name routable from the workers' side), with the kernel's
+/// actual port substituted when the bind asked for `:0`; wildcard binds
+/// fall back to the kernel-reported address (the caller should bind a
+/// concrete interface for multi-host runs).
+fn advertised_addr(bind: &str, local: std::net::SocketAddr) -> String {
+    let host = bind.rsplit_once(':').map(|(h, _)| h).unwrap_or(bind);
+    if host.is_empty() || host == "0.0.0.0" || host == "::" || host == "[::]" {
+        local.to_string()
+    } else {
+        format!("{host}:{}", local.port())
+    }
+}
+
+/// Everything a worker launch needs beyond its rank and placement —
+/// shared by [`spawn_cluster`] (first launch) and
+/// [`ProcessCluster::respawn_rank`] (replacement launch), so both travel
+/// the identical local/ssh/manual path.
+struct WorkerLaunch<'a> {
+    bin: &'a std::path::Path,
+    addr: &'a str,
+    timeout_ms: u64,
+    launch: Option<&'a str>,
+    rejoin: bool,
+    fault_skip: u32,
+}
+
+impl WorkerLaunch<'_> {
+    /// Launches rank `rank` on `host` (`None` = this machine).
+    ///
+    /// - Local hosts: direct `Command` spawn with explicit env plumbing
+    ///   (exactly the pre-multi-host behavior).
+    /// - `launch == Some("manual")`: prints the env-join command for the
+    ///   operator to run by hand and returns `Ok(None)` — the join
+    ///   deadline bounds the wait for the external worker.
+    /// - Remote hosts: renders the launch template (default
+    ///   `ssh {host} env {env} {bin}`) with `{host}`, `{rank}`,
+    ///   `{addr}`, `{timeout_ms}`, `{bin}`, `{env}` placeholders and
+    ///   runs it through `sh -c`.
+    fn spawn(
+        &self,
+        rank: usize,
+        host: Option<&str>,
+        specs: &[FaultSpec],
+    ) -> io::Result<Option<Child>> {
+        if self.launch != Some("manual") && host.map_or(true, is_local_host) {
+            let mut cmd = Command::new(self.bin);
+            cmd.env("GREEDIRIS_RANK", rank.to_string())
+                .env("GREEDIRIS_FABRIC_ADDR", self.addr)
+                .env("GREEDIRIS_FABRIC_TIMEOUT_MS", self.timeout_ms.to_string())
+                .stdin(Stdio::null());
+            // Explicit per-child fault/rejoin plumbing — never inherit
+            // ambient state, and a first launch is never a rejoin.
+            if self.rejoin {
+                cmd.env("GREEDIRIS_REJOIN", "1")
+                    .env("GREEDIRIS_FAULT_SKIP", self.fault_skip.to_string());
+            } else {
+                cmd.env_remove("GREEDIRIS_REJOIN");
+                cmd.env_remove("GREEDIRIS_FAULT_SKIP");
+            }
+            if specs.is_empty() {
+                cmd.env_remove("GREEDIRIS_FAULT");
+            } else {
+                cmd.env("GREEDIRIS_FAULT", FaultSpec::to_env_list(specs));
+            }
+            return cmd.spawn().map(Some);
+        }
+
+        let mut env = format!(
+            "GREEDIRIS_RANK={rank} GREEDIRIS_FABRIC_ADDR={} GREEDIRIS_FABRIC_TIMEOUT_MS={}",
+            self.addr, self.timeout_ms
+        );
+        if self.rejoin {
+            env.push_str(&format!(" GREEDIRIS_REJOIN=1 GREEDIRIS_FAULT_SKIP={}", self.fault_skip));
+        }
+        if !specs.is_empty() {
+            env.push_str(&format!(" GREEDIRIS_FAULT={}", FaultSpec::to_env_list(specs)));
+        }
+        let bin = self.bin.display().to_string();
+        let host_s = host.unwrap_or("localhost");
+        if self.launch == Some("manual") {
+            eprintln!(
+                "[greediris] rank {rank} expected on {host_s} — start it by hand within the \
+                 join deadline:\n  env {env} {bin}"
+            );
+            return Ok(None);
+        }
+        let cmd_line = self
+            .launch
+            .unwrap_or("ssh {host} env {env} {bin}")
+            .replace("{host}", host_s)
+            .replace("{rank}", &rank.to_string())
+            .replace("{addr}", self.addr)
+            .replace("{timeout_ms}", &self.timeout_ms.to_string())
+            .replace("{bin}", &bin)
+            .replace("{env}", &env);
+        Command::new("sh").arg("-c").arg(&cmd_line).stdin(Stdio::null()).spawn().map(Some)
+    }
+}
+
 /// Reads and validates one JOIN handshake off a freshly accepted
 /// connection. Per-connection failures are typed `Join` errors the caller
 /// resolves by policy (fail the launch, or drop the connection and keep
@@ -1681,7 +1959,10 @@ fn read_join(
         // the accept loop for the whole join window.
         .and_then(|_| stream.set_read_timeout(Some(join_read_timeout)))
         .map_err(|e| jerr(FabricErrorKind::Io, e.to_string()))?;
-    let mut fr = FrameReader::new();
+    // Raw mode: this reader lives on as the hub reader for the worker's
+    // whole lifetime, and the relay path needs verified frames with their
+    // headers intact ([`hub_reader`]).
+    let mut fr = FrameReader::with_raw();
     let mut read_half =
         stream.try_clone().map_err(|e| jerr(FabricErrorKind::Io, e.to_string()))?;
     let msg = match fr.read_frame(&mut read_half) {
@@ -1694,12 +1975,13 @@ fn read_join(
     stream
         .set_read_timeout(None)
         .map_err(|e| jerr(FabricErrorKind::Io, e.to_string()))?;
-    let (_, kind, body) =
-        parse_routed(&msg).map_err(|e| jerr(FabricErrorKind::Decode, e.to_string()))?;
+    let (_, _, kind, off) = routed_prefix(&msg[frame::HEADER_LEN..])
+        .map_err(|e| jerr(FabricErrorKind::Decode, e.to_string()))?;
     if kind != K_JOIN {
         return Err(jerr(FabricErrorKind::Protocol, format!("expected JOIN, got kind {kind}")));
     }
-    let mut r = wire::Reader::new(&body);
+    let body = &msg[frame::HEADER_LEN + off..];
+    let mut r = wire::Reader::new(body);
     let rank = r
         .varint()
         .map_err(|e| jerr(FabricErrorKind::Decode, format!("JOIN rank: {e}")))?
@@ -1726,33 +2008,28 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
         // it could report, so the supervisor counts the arming.
         health.injected_faults.store(opts.fault.len() as u64, Ordering::Relaxed);
     }
-    let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| launch_io(None, e))?;
-    let addr = listener.local_addr().map_err(|e| launch_io(None, e))?;
+    // `--fabric-bind` promotes the ephemeral loopback listener to a
+    // routable rendezvous address workers on other hosts can join.
+    let bind = opts.bind.as_deref().unwrap_or("127.0.0.1:0");
+    let listener = TcpListener::bind(bind).map_err(|e| launch_io(None, e))?;
+    let local = listener.local_addr().map_err(|e| launch_io(None, e))?;
+    let addr = advertised_addr(bind, local);
     listener.set_nonblocking(true).map_err(|e| launch_io(None, e))?;
     let bin = worker_binary().map_err(|e| launch_io(None, e))?;
+    let launcher = WorkerLaunch {
+        bin: &bin,
+        addr: &addr,
+        timeout_ms: opts.timeouts.recv.as_millis() as u64,
+        launch: opts.launch.as_deref(),
+        rejoin: false,
+        fault_skip: 0,
+    };
     let mut children: Vec<Option<Child>> = Vec::with_capacity(m - 1);
     for p in 1..m {
-        let mut cmd = Command::new(&bin);
-        cmd.env("GREEDIRIS_RANK", p.to_string())
-            .env("GREEDIRIS_FABRIC_ADDR", addr.to_string())
-            .env(
-                "GREEDIRIS_FABRIC_TIMEOUT_MS",
-                (opts.timeouts.recv.as_millis() as u64).to_string(),
-            )
-            .stdin(Stdio::null());
-        // Explicit per-child fault plumbing — never inherit ambient
-        // state, and a first launch is never a rejoin.
-        cmd.env_remove("GREEDIRIS_REJOIN");
-        cmd.env_remove("GREEDIRIS_FAULT_SKIP");
         let specs: Vec<FaultSpec> =
             opts.fault.iter().copied().filter(|f| f.rank == p).collect();
-        if specs.is_empty() {
-            cmd.env_remove("GREEDIRIS_FAULT");
-        } else {
-            cmd.env("GREEDIRIS_FAULT", FaultSpec::to_env_list(&specs));
-        }
-        match cmd.spawn() {
-            Ok(child) => children.push(Some(child)),
+        match launcher.spawn(p, pick_host(&opts.hosts, p), &specs) {
+            Ok(child) => children.push(child),
             Err(e) => {
                 reap_children(&mut children);
                 return Err(launch_io(Some(p), e));
@@ -1884,13 +2161,14 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
     }
 
     // Writer threads first, so reader threads can forward to any rank.
-    let mut out_txs: Vec<Option<mpsc::Sender<Vec<u8>>>> = Vec::with_capacity(m - 1);
+    let mut out_txs: Vec<Option<mpsc::Sender<OutFrame>>> = Vec::with_capacity(m - 1);
     let mut writers: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(m - 1);
     for half in write_halves {
         match half {
             Some(w) => {
-                let (tx, rx) = mpsc::channel::<Vec<u8>>();
-                writers.push(Some(std::thread::spawn(move || hub_writer(w, rx))));
+                let (tx, rx) = mpsc::channel::<OutFrame>();
+                let coalesce = opts.coalesce;
+                writers.push(Some(std::thread::spawn(move || hub_writer(w, rx, coalesce))));
                 out_txs.push(Some(tx));
             }
             None => {
@@ -1920,7 +2198,7 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
             std::thread::spawn(move || hub_reader(rank, stream, fr, lanes))
         });
         workers.push(WorkerHandle {
-            child: children[i].take().expect("spawned"),
+            child: children[i].take(),
             out_tx: out_txs[i].clone(),
             writer: writers[i].take(),
             reader,
@@ -1942,11 +2220,14 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
         timeouts: opts.timeouts,
         policy: opts.policy,
         listener,
-        addr: addr.to_string(),
+        addr,
         bin,
         hello: hello.to_vec(),
         lanes,
         faults: opts.fault.clone(),
+        hosts: opts.hosts.clone(),
+        launch: opts.launch.clone(),
+        coalesce: opts.coalesce,
         attempts: vec![0; m],
         fresh: true,
     };
@@ -1968,11 +2249,16 @@ fn spawn_cluster(m: usize, hello: &[u8], opts: &FabricOptions) -> Result<Process
 pub struct ProcessTransport {
     inner: SimTransport,
     cluster: Option<ProcessCluster>,
+    /// Process-global send-counter snapshot at construction;
+    /// [`Transport::wire_stats`] reports the delta, i.e. this run's own
+    /// socket traffic (supervisor-side — the hub relays every
+    /// worker↔worker frame, so the counters see the whole data plane).
+    wire_base: frame::SendCounters,
 }
 
 impl ProcessTransport {
     pub fn new(m: usize, net: NetModel) -> Self {
-        Self { inner: SimTransport::new(m, net), cluster: None }
+        Self { inner: SimTransport::new(m, net), cluster: None, wire_base: frame::send_counters() }
     }
 
     /// The running worker pool, spawning it on first use. `hello` builds
@@ -2059,6 +2345,17 @@ impl Transport for ProcessTransport {
     fn fault_stats(&self) -> FaultStats {
         self.cluster.as_ref().map(|c| c.fault_stats()).unwrap_or_default()
     }
+
+    fn wire_stats(&self) -> WireStats {
+        let now = frame::send_counters();
+        WireStats {
+            send_syscalls: now.syscalls.saturating_sub(self.wire_base.syscalls),
+            sent_bytes: now.bytes.saturating_sub(self.wire_base.bytes),
+            frames_sent: now.frames.saturating_sub(self.wire_base.frames),
+            coalesced_frames: now.coalesced.saturating_sub(self.wire_base.coalesced),
+            raw_relays: now.raw_relays.saturating_sub(self.wire_base.raw_relays),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -2069,12 +2366,105 @@ mod tests {
 
     #[test]
     fn routed_message_roundtrip() {
-        let msg = routed_msg(300, K_S3, &[9, 8, 7]);
-        let (tag, kind, body) = parse_routed(&msg).unwrap();
-        assert_eq!(tag, 300);
-        assert_eq!(kind, K_S3);
+        let msg = routed_msg(300, 7, K_S3, &[9, 8, 7]);
+        let (src, dst, kind, body) = parse_routed(&msg).unwrap();
+        assert_eq!((src, dst, kind), (300, 7, K_S3));
         assert_eq!(body, vec![9, 8, 7]);
+        // The zero-copy prefix view agrees byte for byte.
+        let (s, d, k, off) = routed_prefix(&msg).unwrap();
+        assert_eq!((s, d, k), (300, 7, K_S3));
+        assert_eq!(&msg[off..], &[9, 8, 7]);
+        // The stack-allocated control-path encoder produces the identical
+        // routing prefix.
+        let hdr = RoutedHdr::new(300, 7, K_S3);
+        assert_eq!(hdr.as_slice(), &msg[..off]);
         assert!(parse_routed(&[]).is_err());
+    }
+
+    #[test]
+    fn manual_launch_prints_instructions_and_spawns_nothing() {
+        let launcher = WorkerLaunch {
+            bin: std::path::Path::new("/opt/greediris/bin/greediris"),
+            addr: "10.0.0.1:9000",
+            timeout_ms: 5000,
+            launch: Some("manual"),
+            rejoin: false,
+            fault_skip: 0,
+        };
+        let child = launcher.spawn(3, Some("node-a"), &[]).unwrap();
+        assert!(child.is_none(), "manual mode must not fork anything");
+    }
+
+    #[test]
+    fn launch_template_substitutes_and_runs_via_shell() {
+        let launcher = WorkerLaunch {
+            bin: std::path::Path::new("/bin/true"),
+            addr: "hub:1234",
+            timeout_ms: 250,
+            launch: Some(": {host} {rank} {addr} {timeout_ms} {env} {bin}"),
+            rejoin: true,
+            fault_skip: 2,
+        };
+        // `:` ignores its arguments, so success == the template rendered
+        // into a runnable command line.
+        let mut child = launcher.spawn(1, Some("node-b"), &[]).unwrap().expect("spawned");
+        assert!(child.wait().unwrap().success());
+    }
+
+    #[test]
+    fn advertised_address_keeps_the_routable_host() {
+        let local: std::net::SocketAddr = "127.0.0.1:4567".parse().unwrap();
+        // Ephemeral-port binds advertise the kernel's actual port under
+        // the configured (routable) host name.
+        assert_eq!(advertised_addr("10.1.2.3:0", local), "10.1.2.3:4567");
+        assert_eq!(advertised_addr("127.0.0.1:0", local), "127.0.0.1:4567");
+        // Wildcard binds cannot be advertised; fall back to the socket.
+        assert_eq!(advertised_addr("0.0.0.0:0", local), "127.0.0.1:4567");
+    }
+
+    #[test]
+    fn round_robin_placement_covers_all_hosts() {
+        let hosts = vec!["a".to_string(), "b".to_string()];
+        assert_eq!(pick_host(&hosts, 1), Some("a"));
+        assert_eq!(pick_host(&hosts, 2), Some("b"));
+        assert_eq!(pick_host(&hosts, 3), Some("a"));
+        assert_eq!(pick_host(&[], 1), None);
+    }
+
+    #[test]
+    fn hub_writer_coalesces_queued_frames_and_survives_a_dead_peer() {
+        use std::io::Read as _;
+        // A real socket pair: queue several frames *before* the writer
+        // thread starts, so its first wakeup sees a backlog to coalesce.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        let (tx, rx) = mpsc::channel::<OutFrame>();
+        let mut expect = Vec::new();
+        for i in 0..10u8 {
+            let msg = routed_msg(0, 1, K_S2, &[i; 100]);
+            expect.extend_from_slice(&frame::encode_frame(&msg));
+            tx.send(OutFrame::Msg(msg)).unwrap();
+        }
+        let writer = std::thread::spawn(move || hub_writer(client, rx, DEFAULT_COALESCE));
+        let mut got = vec![0u8; expect.len()];
+        server.read_exact(&mut got).unwrap();
+        assert_eq!(got, expect, "coalesced byte stream must be identical to per-frame");
+        // Kill the peer: the writer must exit instead of wedging, and
+        // senders keep succeeding into the (now draining-to-nowhere)
+        // channel — the no-wedge contract.
+        drop(server);
+        for _ in 0..100 {
+            if tx.send(OutFrame::Msg(routed_msg(0, 1, K_S2, &[0; 100_000]))).is_err() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Hang up the queue too: even if the kernel buffered every byte
+        // without surfacing the reset yet, the writer must wind down.
+        drop(tx);
+        writer.join().unwrap();
     }
 
     #[test]
@@ -2224,9 +2614,11 @@ mod tests {
         // A dead destination drops silently — never a panic, never a block.
         feeder.inject_s2(2, 2, vec![4]);
         assert_eq!(s2_rx.try_recv().unwrap(), (2, vec![1, 2]));
-        let relayed = out1_rx.try_recv().unwrap();
-        let (src, kind, body) = parse_routed(&relayed).unwrap();
-        assert_eq!((src, kind, body), (2, K_S2, vec![3]));
+        let OutFrame::Msg(relayed) = out1_rx.try_recv().unwrap() else {
+            panic!("injected payloads are hub-framed messages, not raw relays");
+        };
+        let (src, dst, kind, body) = parse_routed(&relayed).unwrap();
+        assert_eq!((src, dst, kind, body), (2, 1, K_S2, vec![3]));
         assert_eq!(health.fault_stats().adopted_payloads, 3);
     }
 

@@ -38,6 +38,8 @@ USAGE:
                 [--overlap on|off] [--chunk N]
                 [--fabric-timeout MS] [--on-rank-loss fail|redistribute|respawn]
                 [--checkpoint DIR] [--checkpoint-every N] [--resume DIR]
+                [--coalesce BYTES] [--fabric-bind HOST:PORT] [--hosts FILE]
+                [--launch TEMPLATE|manual]
   greediris exp  <table2|table4|table5|table6|fig3|fig4|fig5|all>
   greediris opim [--input NAME] [--m N] [--k N] [--theta-max N]
   greediris inputs
@@ -71,11 +73,29 @@ chunks (0 = every boundary). --resume DIR restarts from DIR's latest
 snapshot: the resumed run finishes with bit-identical seeds, theta, and
 round counts to the uninterrupted one, and rejects a snapshot from a
 different config or graph with a typed mismatch error.
+--coalesce BYTES sets the per-peer send-coalescing budget on the process
+fabric (default 65536): each writer wakeup drains queued frames into
+vectored writes until that many payload bytes are staged; 0 restores the
+one-write-per-frame baseline. Seeds, theta, and raw-byte counters are
+bit-identical at every setting.
+--fabric-bind HOST:PORT makes rank 0 listen on a routable address so
+workers on other machines can join (default: ephemeral loopback).
+--hosts FILE places workers across machines: one host per line (#
+comments and blanks skipped), rank p on line ((p-1) mod count). Local
+entries (localhost, 127.0.0.1, ::1) fork directly; remote entries run
+the --launch TEMPLATE through `sh -c` with {host} {rank} {addr}
+{timeout_ms} {bin} {env} placeholders (default
+`ssh {host} env {env} {bin}`; the binary must exist at the same path on
+every host). --launch manual launches nothing and prints the env-join
+command for each remote rank — start them by hand (or from any
+orchestrator) within the join deadline.
 Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
      GREEDIRIS_TRANSPORT=sim|threads|process sets the default transport
      (unknown values are an error, never a silent fallback);
      GREEDIRIS_WORKER_BIN overrides the rank-worker binary;
      GREEDIRIS_FABRIC_TIMEOUT_MS sets the default fabric deadline;
+     GREEDIRIS_COALESCE sets the default --coalesce budget in bytes;
+     GREEDIRIS_LAUNCH sets the default --launch template;
      GREEDIRIS_FAULT=rank:phase:kind[:ms][,spec...] injects deterministic
      faults for testing (phases hello|round|select, kinds
      kill|hang|corrupt|slow; a malformed spec is a startup error). Specs
@@ -125,6 +145,24 @@ impl Flags {
     fn get_str(&self, name: &str, default: &str) -> String {
         self.map.get(name).cloned().unwrap_or_else(|| default.to_string())
     }
+}
+
+/// Reads a `--hosts` file: one host per line, `#` comments and blank
+/// lines skipped. An empty result is an error — a hostfile that places
+/// nothing is a deployment mistake, not an all-local run.
+fn parse_hostfile(path: &str) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read hosts file '{path}': {e}"))?;
+    let hosts: Vec<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect();
+    if hosts.is_empty() {
+        bail!("hosts file '{path}' lists no hosts");
+    }
+    Ok(hosts)
 }
 
 fn load_graph(input: &str, file: Option<&str>, model: DiffusionModel, seed: u64) -> Result<Graph> {
@@ -181,6 +219,16 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     cfg = cfg.with_chunk(flags.get("chunk", 0usize)?);
     cfg = cfg.with_fabric_timeout(flags.get("fabric-timeout", cfg.fabric_timeout_ms)?);
+    cfg = cfg.with_coalesce(flags.get("coalesce", cfg.coalesce)?);
+    if let Some(addr) = flags.map.get("fabric-bind") {
+        cfg = cfg.with_fabric_bind(addr.clone());
+    }
+    if let Some(path) = flags.map.get("hosts") {
+        cfg = cfg.with_hosts(parse_hostfile(path)?);
+    }
+    if let Some(tpl) = flags.map.get("launch") {
+        cfg = cfg.with_launch(tpl.clone());
+    }
     if let Some(p) = flags.map.get("on-rank-loss") {
         cfg = cfg.with_on_rank_loss(p.parse::<LossPolicy>().map_err(|e| anyhow!(e))?);
     }
@@ -244,6 +292,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     if !result.breakdown.fabric.is_zero() {
         println!("fabric: {}", result.breakdown.fabric);
+    }
+    if !result.breakdown.wire.is_zero() {
+        println!("wire: {}", result.breakdown.wire);
     }
     println!(
         "comm: all-to-all {} B (raw {} B) | stream {} B (raw {} B, {} seeds, {} pruned) | reductions {} B",

@@ -106,6 +106,67 @@ impl fmt::Display for FaultStats {
     }
 }
 
+/// Socket send-path counters from the process fabric (PR 8): syscall and
+/// coalescing efficiency of the supervisor's vectored writers. Zero for
+/// the in-process backends — the CLI only prints the `wire:` line when a
+/// socket actually carried bytes. Like [`FaultStats`], these ride inside
+/// [`Breakdown`] without contributing to [`Breakdown::total`]: they
+/// describe the transport, not the modeled critical path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Successful send syscalls (`write`/`write_vectored`) on supervisor
+    /// sockets.
+    pub send_syscalls: u64,
+    /// Bytes those syscalls accepted (frame headers included).
+    pub sent_bytes: u64,
+    /// Frames fully handed to the OS.
+    pub frames_sent: u64,
+    /// Frames that left in a syscall carrying at least one other frame
+    /// (the per-peer coalescing win).
+    pub coalesced_frames: u64,
+    /// Ingress-verified frames relayed verbatim — no decode, re-encode,
+    /// or checksum recomputation (the hub fast path).
+    pub raw_relays: u64,
+}
+
+impl WireStats {
+    pub fn is_zero(&self) -> bool {
+        *self == WireStats::default()
+    }
+
+    /// Mean bytes per send syscall (0.0 when nothing was sent).
+    pub fn bytes_per_syscall(&self) -> f64 {
+        if self.send_syscalls == 0 {
+            0.0
+        } else {
+            self.sent_bytes as f64 / self.send_syscalls as f64
+        }
+    }
+
+    pub fn add(&mut self, o: &WireStats) {
+        self.send_syscalls += o.send_syscalls;
+        self.sent_bytes += o.sent_bytes;
+        self.frames_sent += o.frames_sent;
+        self.coalesced_frames += o.coalesced_frames;
+        self.raw_relays += o.raw_relays;
+    }
+}
+
+impl fmt::Display for WireStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} sends | {} B | {} frames | {} coalesced | {} raw-relayed | {:.1} B/send",
+            self.send_syscalls,
+            self.sent_bytes,
+            self.frames_sent,
+            self.coalesced_frames,
+            self.raw_relays,
+            self.bytes_per_syscall()
+        )
+    }
+}
+
 /// Simulated-time breakdown of one InfMax run (accumulated across
 /// martingale rounds). All values are seconds of *critical-path* time
 /// attributable to the phase, per the paper's Fig. 4 methodology:
@@ -132,6 +193,8 @@ pub struct Breakdown {
     pub overlap: OverlapStats,
     /// Process-fabric fault counters (PR 6).
     pub fabric: FaultStats,
+    /// Socket send-path counters (PR 8).
+    pub wire: WireStats,
 }
 
 impl Breakdown {
@@ -156,6 +219,7 @@ impl Breakdown {
         self.coordination += other.coordination;
         self.overlap.add(&other.overlap);
         self.fabric.add(&other.fabric);
+        self.wire.add(&other.wire);
     }
 }
 
@@ -293,6 +357,26 @@ mod tests {
         let s = format!("{a}");
         assert!(s.contains("1 lost") && s.contains("2 retries"), "{s}");
         assert!(s.contains("2 respawned") && s.contains("4 checkpoints"), "{s}");
+    }
+
+    #[test]
+    fn wire_stats_accumulate_without_inflating_total() {
+        let mut a = WireStats { send_syscalls: 2, sent_bytes: 100, frames_sent: 8, ..Default::default() };
+        assert!(!a.is_zero());
+        assert!(WireStats::default().is_zero());
+        assert_eq!(a.bytes_per_syscall(), 50.0);
+        assert_eq!(WireStats::default().bytes_per_syscall(), 0.0);
+        a.add(&WireStats { send_syscalls: 2, sent_bytes: 60, coalesced_frames: 6, raw_relays: 3, ..Default::default() });
+        assert_eq!(a.send_syscalls, 4);
+        assert_eq!(a.sent_bytes, 160);
+        assert_eq!(a.coalesced_frames, 6);
+        assert_eq!(a.raw_relays, 3);
+        let mut b = Breakdown::default();
+        b.add(&Breakdown { wire: a, ..Default::default() });
+        assert_eq!(b.wire.frames_sent, 8);
+        assert_eq!(b.total(), 0.0, "wire counters do not inflate the phase total");
+        let s = format!("{a}");
+        assert!(s.contains("4 sends") && s.contains("3 raw-relayed") && s.contains("40.0 B/send"), "{s}");
     }
 
     #[test]

@@ -287,6 +287,67 @@ fn process_transport_seeds_and_raw_bytes_equal_sim_and_threads() {
 }
 
 #[test]
+fn coalescing_is_invisible_to_seeds_and_raw_counters() {
+    // PR-8 divergence gate: per-peer send coalescing batches frames into
+    // vectored writes but must be a pure syscall-count optimisation —
+    // seeds, θ, and the engine-invariant raw-byte counters are identical
+    // with the batching on (default budget) and off (per-frame baseline).
+    set_worker_bin();
+    let g = graph();
+    let mk = |coalesce: usize| {
+        run_infmax(
+            &g,
+            &cfg(Algorithm::GreediRis, 8, TransportKind::Process).with_coalesce(coalesce),
+        )
+    };
+    let on = mk(greediris::distributed::transport::process::DEFAULT_COALESCE);
+    let off = mk(0);
+    let sim = run_infmax(&g, &cfg(Algorithm::GreediRis, 8, TransportKind::Sim));
+    assert_eq!(on.seeds, off.seeds, "coalescing changed the seed set");
+    assert_eq!(on.seeds, sim.seeds, "process diverged from sim");
+    assert_eq!(on.theta, off.theta);
+    assert_eq!(on.coverage, off.coverage);
+    assert_eq!(on.volumes.alltoall_raw_bytes, off.volumes.alltoall_raw_bytes);
+    assert_eq!(on.volumes.stream_raw_bytes, off.volumes.stream_raw_bytes);
+    assert_eq!(on.volumes.stream_raw_bytes, sim.volumes.stream_raw_bytes);
+    // The hub side of both runs lives in this process, so the wire
+    // counters are observable: coalescing must actually batch, and the
+    // zero-budget baseline must never batch. (Cross-run syscall counts
+    // aren't compared — live-floor frames race, so frame totals may
+    // legitimately differ between runs.)
+    assert!(on.breakdown.wire.send_syscalls > 0, "hub wrote nothing?");
+    assert!(off.breakdown.wire.send_syscalls > 0, "hub wrote nothing?");
+    assert!(on.breakdown.wire.raw_relays > 0, "m=8 must relay worker frames verbatim");
+    assert_eq!(
+        off.breakdown.wire.coalesced_frames, 0,
+        "budget 0 is the per-frame baseline and must never batch"
+    );
+    assert!(
+        off.breakdown.wire.send_syscalls >= off.breakdown.wire.frames_sent,
+        "per-frame baseline needs at least one write per frame"
+    );
+}
+
+#[test]
+fn loopback_hostfile_placement_matches_the_direct_path() {
+    // The multi-host launcher with an all-loopback hostfile must take the
+    // local spawn path for every rank (no ssh in CI) and change nothing
+    // about the run: same seeds, same raw counters as the hostless spawn.
+    set_worker_bin();
+    let g = graph();
+    let direct = run_infmax(&g, &cfg(Algorithm::GreediRis, 4, TransportKind::Process));
+    let hosted = run_infmax(
+        &g,
+        &cfg(Algorithm::GreediRis, 4, TransportKind::Process)
+            .with_hosts(vec!["127.0.0.1".into(), "localhost".into()])
+            .with_fabric_bind("127.0.0.1:0"),
+    );
+    assert_eq!(direct.seeds, hosted.seeds);
+    assert_eq!(direct.coverage, hosted.coverage);
+    assert_eq!(direct.volumes.stream_raw_bytes, hosted.volumes.stream_raw_bytes);
+}
+
+#[test]
 fn process_transport_matches_sim_under_truncation_and_wire_variants() {
     set_worker_bin();
     let g = graph();
@@ -704,8 +765,9 @@ fn connect_retry_succeeds_after_refused_attempts() {
         let (mut s, _) = l.accept().unwrap();
         let mut fr = FrameReader::new();
         let join = fr.read_frame(&mut s).unwrap().expect("worker closed before JOIN");
-        let (tag, kind, body) = parse_routed(&join).unwrap();
-        assert_eq!(tag, 0);
+        let (src, dst, kind, body) = parse_routed(&join).unwrap();
+        assert_eq!(src, 1, "JOIN must carry the joining rank as src");
+        assert_eq!(dst, 0, "worker→hub frames are addressed to rank 0");
         assert_eq!(kind, K_JOIN, "first worker frame must be JOIN");
         let mut r = wire::Reader::new(&body);
         assert_eq!(r.varint().unwrap(), 1, "JOIN must carry the rank");
@@ -713,7 +775,7 @@ fn connect_retry_succeeds_after_refused_attempts() {
         // HELLO: first varint is m, the rest is opaque to the link layer.
         let mut hello = Vec::new();
         wire::put_varint(&mut hello, 2);
-        write_frame(&mut s, &[&routed_msg(0, K_CTRL, &hello)]).unwrap();
+        write_frame(&mut s, &[&routed_msg(0, 1, K_CTRL, &hello)]).unwrap();
         // Hold the socket open until the link has consumed HELLO.
         std::thread::sleep(std::time::Duration::from_millis(300));
         reported_retries

@@ -34,17 +34,30 @@
 #      read <ms> as a 1-based phase-entry ordinal) must leave a durable
 #      snapshot behind and, rerun with --resume, print identical seeds,
 #      θ, round count, and comm counters to an uninterrupted run.
-#   6. quick-scale micro benches (sampling / shuffle / maxcover /
-#      transport, incl. the socket-backend leg) through the in-tree
-#      harness (src/exp/bench.rs), each measurement exported as a JSON
-#      line via GREEDIRIS_BENCH_JSON.
-#   7. assemble the lines into BENCH_PR5.json at the repo root — the
+#   6. coalescing + multi-host gates (PR 8): (a) the per-peer vectored
+#      send coalescer must be invisible — seeds, θ, and the raw-byte
+#      counters bit-identical between the default byte budget and
+#      `--coalesce 0` (one blocking write per frame), compared against
+#      the sim fingerprint; (b) the fault matrix reruns with the batching
+#      disabled (a killed rank's full send queue must not wedge either
+#      path — the earlier fault legs already cover the default-on side);
+#      (c) a loopback "multi-host" leg: a hostfile with two 127.0.0.1
+#      entries through --hosts/--fabric-bind must take the local spawn
+#      path on every rank and reproduce the pinned seeds.
+#   7. quick-scale micro benches (sampling / shuffle / maxcover /
+#      transport, incl. the socket-backend leg and the PR-8 coalescing
+#      A/B — which asserts the >=5x send-syscall reduction) through the
+#      in-tree harness (src/exp/bench.rs), each measurement exported as
+#      a JSON line via GREEDIRIS_BENCH_JSON.
+#   8. assemble the lines into BENCH_PR5.json at the repo root — the
 #      current perf record, stamped with the git SHA and the flag matrix
 #      the benches ran (transport/wire/prune/overlap A/B pairs live in
 #      the same array; see scripts/README.md). A record is only written
 #      when this run actually measured something: an existing measured
 #      BENCH_PR5.json is never replaced by a placeholder or an empty run.
-#   8. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
+#      The coalescing lines are additionally split into BENCH_PR8.json
+#      (same stamp discipline).
+#   9. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
 #      authoring containers had no Rust toolchain, so the repo may carry
 #      marked placeholders; the first run on a toolchain-equipped host
 #      replaces a placeholder (or missing file) with this run's measured
@@ -240,6 +253,73 @@ fi
 rm -rf "$CKDIR"
 echo "checkpoint/restart: supervisor killed at round 2, resume bit-identical"
 
+echo "== coalescing + multi-host gates (PR 8) =="
+# The per-peer send coalescer batches hub frames into vectored writes;
+# it must be a pure syscall-count optimisation. The fingerprint is the
+# seed set, θ, and the engine-invariant *raw* byte counters. Encoded
+# byte counters are excluded on purpose: chunk framing restarts delta
+# chains and the live floor races, so they may legitimately differ
+# between runs (the same exclusion the PR-5 three-way contract makes).
+co_fp() {
+  grep '^seeds:' <<<"$1"
+  grep -o 'raw [0-9]* B' <<<"$1"
+  grep '| theta = ' <<<"$1" | sed -E 's/ \| modeled time = .*$//'
+}
+CO_SIM="$(co_fp "$("$BIN" "${RUN_ARGS[@]}" --transport sim)")"
+CO_PRC_ON="$(co_fp "$(timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process)")"
+CO_PRC_OFF="$(co_fp "$(timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --coalesce 0)")"
+CO_THR_OFF="$(co_fp "$("$BIN" "${RUN_ARGS[@]}" --transport threads --coalesce 0)")"
+for LEG in "process default:$CO_PRC_ON" "process --coalesce 0:$CO_PRC_OFF" \
+           "threads --coalesce 0:$CO_THR_OFF"; do
+  if [ "$CO_SIM" != "${LEG#*:}" ]; then
+    echo "error: ${LEG%%:*} fingerprint diverged from sim under the coalescing gate" >&2
+    diff <(echo "$CO_SIM") <(echo "${LEG#*:}") >&2 || true
+    exit 1
+  fi
+done
+echo "seeds/theta/raw-byte counters identical with coalescing on and off"
+# Fault matrix under the per-frame baseline: the no-wedge contract must
+# hold with the batching disabled too — a killed rank's queued frames are
+# dropped by the writer in both modes, never spun on. (The PR-6/7 legs
+# above already exercise the default-on side.)
+RED_CO="$(GREEDIRIS_FAULT=2:round:kill timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss redistribute --coalesce 0 \
+  | grep '^seeds:')"
+if [ "$RED_CO" != "$RED_A" ]; then
+  echo "error: redistribute seeds differ between coalescing on and off" >&2
+  echo "  default:      $RED_A" >&2
+  echo "  --coalesce 0: $RED_CO" >&2
+  exit 1
+fi
+RSP_CO="$(GREEDIRIS_FAULT=2:round:kill timeout "$FAULT_BUDGET" \
+  "$BIN" "${RUN_ARGS[@]}" --transport process --on-rank-loss respawn --coalesce 0 \
+  | grep '^seeds:')"
+if [ "$RSP_CO" != "$SIM_SEEDS" ]; then
+  echo "error: respawn under --coalesce 0 diverged from the no-fault seeds" >&2
+  echo "  sim:     $SIM_SEEDS" >&2
+  echo "  respawn: $RSP_CO" >&2
+  exit 1
+fi
+echo "fault matrix holds under --coalesce 0 (no wedge, same verdicts)"
+# Loopback "multi-host" leg: a hostfile whose entries all resolve to this
+# machine must route every rank through the launcher's local spawn path
+# (no ssh in CI) and change nothing about the run.
+HOSTFILE="$(mktemp)"
+printf '# loopback fabric: both entries land on this host\n127.0.0.1\n127.0.0.1\n' \
+  > "$HOSTFILE"
+HOSTED="$(timeout "$FAULT_BUDGET" "$BIN" "${RUN_ARGS[@]}" --transport process \
+  --hosts "$HOSTFILE" --fabric-bind 127.0.0.1:0 | grep '^seeds:')"
+rm -f "$HOSTFILE"
+if [ "$HOSTED" != "$SIM_SEEDS" ]; then
+  echo "error: loopback hostfile run diverged from the pinned seeds" >&2
+  echo "  sim:    $SIM_SEEDS" >&2
+  echo "  hosted: $HOSTED" >&2
+  exit 1
+fi
+echo "loopback hostfile leg: round-robin local spawns, seeds identical"
+
 echo "== micro benches (scale: ${GREEDIRIS_BENCH_SCALE:-quick}) =="
 JSONL="$ROOT/rust/target/bench_pr5.jsonl"
 rm -f "$JSONL"
@@ -268,6 +348,27 @@ STAMP="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\
   echo ']'
 } > "$OUT"
 echo "wrote $OUT ($(grep -c . "$JSONL") measurements, sha $GIT_SHA)"
+
+# PR-8 record: the coalescing A/B lines in their own file. micro_transport
+# asserts the >=5x syscall reduction before exporting, so if the lines are
+# present the acceptance bar already passed; if the transport bench ran
+# but they are absent, the A/B silently vanished — fail loudly.
+OUT8="$ROOT/BENCH_PR8.json"
+CO_LINES="$(grep -E '"name":"(coalesce_|infmax_coalesce_)' "$JSONL" || true)"
+if [ -z "$CO_LINES" ]; then
+  echo "error: transport bench exported no coalescing measurements" >&2
+  if [ -f "$OUT8" ] && ! grep -q '"provenance"' "$OUT8"; then
+    echo "kept existing measured $OUT8" >&2
+  fi
+  exit 1
+fi
+STAMP8="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\":\"$GREEDIRIS_BENCH_SCALE\",\"workload\":\"process m=8 chunked overlapped\",\"coalesce\":\"default(64KiB)+0 A/B\",\"gate\":\"send syscalls >=5x fewer, seeds bit-identical\"}"
+{
+  echo '['
+  { echo "$STAMP8"; printf '%s\n' "$CO_LINES"; } | paste -sd,
+  echo ']'
+} > "$OUT8"
+echo "wrote $OUT8 ($(printf '%s\n' "$CO_LINES" | grep -c .) measurements, sha $GIT_SHA)"
 
 for BASE in "$ROOT/BENCH_PR1.json" "$ROOT/BENCH_PR2.json" "$ROOT/BENCH_PR3.json" "$ROOT/BENCH_PR4.json"; do
   if [ ! -f "$BASE" ] || grep -q '"provenance"' "$BASE"; then
