@@ -1,0 +1,126 @@
+//! Micro-benchmarks of the marginal-gain scorer dispatch (PR 9): the
+//! serial per-candidate sweep ([`KernelScorer`]) vs the tiled parallel
+//! batched backend ([`TiledCpuScorer`]), on the same instances and
+//! asserted bit-identical before any number is reported.
+//!
+//! The A/B ladder, oldest to newest:
+//!   1. `dense_scalar_sweep_*`  — one kernel call per candidate (the
+//!      pre-PR9 dispatch shape; `--scorer scalar`).
+//!   2. `dense_batch_t1_*`      — tiled dispatch, single worker: isolates
+//!      the tiling overhead from the parallelism.
+//!   3. `dense_batch_t{2,4,8}_*` — tiled dispatch across the pool
+//!      (`--scorer batch`): the thread-scaling sweep.
+//! A tile-width sweep at the default worker count shows where the
+//! device-shaped padding pays for itself (the ≥ 64 candidates/tile
+//! acceptance shape), and per-dispatch stats (dispatches, tiles,
+//! candidates/dispatch, reduce time) are printed from the instance
+//! counters — the same numbers the CLI surfaces on its `scorer:` line.
+//!
+//! `scripts/ci.sh` collects the JSONL (GREEDIRIS_BENCH_JSON) into
+//! BENCH_PR9.json.
+
+use greediris::exp::bench::Bench;
+use greediris::maxcover::bitset;
+use greediris::maxcover::{
+    dense_greedy_max_cover, KernelScorer, PackedCovers, SetSystem, TiledCpuScorer, DEFAULT_TILE,
+};
+use greediris::rng::Xoshiro256pp;
+
+fn random_system(seed: u64, n: usize, theta: usize, avg_len: u64) -> SetSystem {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = 1 + rng.gen_range(2 * avg_len) as usize;
+            let mut v: Vec<u32> = (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect();
+    SetSystem::from_sets(theta, (0..n as u32).collect(), &sets)
+}
+
+fn main() {
+    let kern = bitset::kernels();
+    println!("dispatched kernel backend: {}", kern.name);
+    let b = Bench::new("scorer");
+
+    // The selection-dominated shape: many candidates, big universe.
+    let sys = random_system(9, 8000, 16_384, 40);
+    let covers = PackedCovers::from_sets(sys.view());
+    let k = 100;
+
+    // Golden gate before any timing: every configuration below must
+    // produce the scalar sweep's exact seed set.
+    let reference = dense_greedy_max_cover(&covers, k, &mut KernelScorer::auto());
+    for (tile, threads) in [(1usize, 1usize), (7, 2), (64, 1), (64, 4), (256, 8)] {
+        let mut s = TiledCpuScorer::new(tile, threads);
+        let got = dense_greedy_max_cover(&covers, k, &mut s);
+        assert_eq!(
+            (&got.seeds, &got.gains, got.coverage),
+            (&reference.seeds, &reference.gains, reference.coverage),
+            "batched dispatch drifted (tile {tile} threads {threads})"
+        );
+    }
+
+    // ---- A/B: per-candidate sweep vs batched tiles. ----
+    let scalar = b.bench("dense_scalar_sweep_n8k_k100", || {
+        dense_greedy_max_cover(&covers, k, &mut KernelScorer::auto())
+    });
+    let mut batch1 = TiledCpuScorer::new(DEFAULT_TILE, 1);
+    let t1 = b.bench("dense_batch_t1_n8k_k100", || {
+        dense_greedy_max_cover(&covers, k, &mut batch1)
+    });
+    println!(
+        "tiling overhead (1 worker): {:.2}x vs scalar sweep",
+        t1.median / scalar.median
+    );
+
+    // ---- Thread-scaling sweep at the default tile width. ----
+    let mut best_median = t1.median;
+    for threads in [2usize, 4, 8] {
+        let mut s = TiledCpuScorer::new(DEFAULT_TILE, threads);
+        let st = b.bench(&format!("dense_batch_t{threads}_n8k_k100"), || {
+            dense_greedy_max_cover(&covers, k, &mut s)
+        });
+        best_median = best_median.min(st.median);
+        let i = s.stats();
+        println!(
+            "  t{threads}: speedup vs scalar {:.2}x | per-dispatch: {:.1} tiles, {:.1} candidates ({} rows / tile {}), reduce {:.6}s total",
+            scalar.median / st.median,
+            i.tiles as f64 / i.dispatches.max(1) as f64,
+            i.candidates_per_dispatch(),
+            covers.n,
+            DEFAULT_TILE,
+            i.reduce_s,
+        );
+        assert!(
+            i.candidates_per_dispatch() / (i.tiles as f64 / i.dispatches.max(1) as f64)
+                >= 64.0,
+            "acceptance: batched dispatch must average ≥ 64 candidates per tile"
+        );
+    }
+    println!(
+        "speedup batched best: {:.2}x (scalar median / best batched median)",
+        scalar.median / best_median
+    );
+
+    // ---- Tile-width sweep at 4 workers (shape sensitivity). ----
+    for tile in [16usize, 64, 256, 1024] {
+        let mut s = TiledCpuScorer::new(tile, 4);
+        b.bench(&format!("dense_batch_tile{tile}_w4_n8k_k100"), || {
+            dense_greedy_max_cover(&covers, k, &mut s)
+        });
+    }
+
+    // ---- Small instance: where `--scorer auto` stays scalar. ----
+    let small = random_system(3, 200, 2000, 20);
+    let small_covers = PackedCovers::from_sets(small.view());
+    b.bench("dense_scalar_sweep_n200_k20", || {
+        dense_greedy_max_cover(&small_covers, 20, &mut KernelScorer::auto())
+    });
+    let mut s_small = TiledCpuScorer::new(DEFAULT_TILE, 4);
+    b.bench("dense_batch_w4_n200_k20", || {
+        dense_greedy_max_cover(&small_covers, 20, &mut s_small)
+    });
+}

@@ -11,6 +11,7 @@
 use super::RankSelectState;
 use crate::coordinator::sampling::DistState;
 use crate::distributed::{collectives, Transport, TransportExt};
+use crate::maxcover::lazy::FRONTIER;
 use crate::maxcover::CoverSolution;
 use crate::Vertex;
 use std::cmp::Reverse;
@@ -72,22 +73,81 @@ pub fn diimm_select(cluster: &mut dyn Transport, state: &DistState, n: usize, k:
 
     let mut solution = CoverSolution::default();
     let mut stale_pops = 0u64;
+    // Heap ordering as a predicate: `(a0, a1)` pops before key `(c, v)`
+    // iff its count is larger, or equal with a smaller vertex.
+    let beats = |a: (u32, u32), key: (u32, u32)| a.0 > key.0 || (a.0 == key.0 && a.1 < key.1);
+    let mut frontier: Vec<(u32, u32)> = Vec::with_capacity(FRONTIER);
     while solution.len() < k {
-        // Master: lazily pop until a candidate's key is fresh. (Counts are
-        // globally fresh after each reduction, but heap keys are not.)
+        // Master: pop a *frontier* of stale candidates at a time and
+        // re-score the whole batch against the reduced vector (the
+        // batched twin of the serial pop-refresh-repush loop). Heap keys
+        // are upper bounds (counts only decrease), so a refreshed
+        // candidate that beats the best unrefreshed key is exactly the
+        // fresh top the serial loop stops at — chosen seeds and
+        // stale-pop counts are bit-identical (`matches_ripples_selection`).
         let mut chosen: Option<(u32, Vertex)> = None;
         let t = Instant::now();
-        while let Some((c, Reverse(v))) = heap.pop() {
-            let actual = global[v as usize];
-            if c == actual {
-                if actual > 0 {
-                    chosen = Some((actual, v));
+        // Refreshed-but-unchosen candidates, returned to the heap with
+        // their tightened keys at the end; `best_ref` is their running
+        // first-maximum in heap order.
+        let mut refreshed: Vec<(u32, u32)> = Vec::new();
+        let mut best_ref: Option<(u32, u32)> = None;
+        'master: loop {
+            if let Some(b) = best_ref {
+                let dominates = match heap.peek() {
+                    Some(&(c, Reverse(v))) => beats(b, (c, v)),
+                    None => true,
+                };
+                if dominates {
+                    // The serial loop would pop `b` here, find it fresh,
+                    // and stop — without refreshing anything deeper.
+                    chosen = Some((b.0, b.1 as Vertex));
+                    break;
                 }
+            }
+            if heap.is_empty() {
                 break;
             }
-            stale_pops += 1;
-            if actual > 0 {
-                heap.push((actual, Reverse(v)));
+            frontier.clear();
+            for _ in 0..FRONTIER {
+                let Some((c, Reverse(v))) = heap.pop() else { break };
+                frontier.push((c, v));
+            }
+            // Walk the batch in pop order; the tail a stop leaves
+            // untouched goes back with its original keys (the serial loop
+            // never popped it, so it is not counted stale).
+            for (j, &(c, v)) in frontier.iter().enumerate() {
+                if let Some(b) = best_ref {
+                    if beats(b, (c, v)) {
+                        chosen = Some((b.0, b.1 as Vertex));
+                        for &(c2, v2) in &frontier[j..] {
+                            heap.push((c2, Reverse(v2)));
+                        }
+                        break 'master;
+                    }
+                }
+                let actual = global[v as usize];
+                if c == actual {
+                    if actual > 0 {
+                        chosen = Some((actual, v as Vertex));
+                    }
+                    for &(c2, v2) in &frontier[j + 1..] {
+                        heap.push((c2, Reverse(v2)));
+                    }
+                    break 'master;
+                }
+                stale_pops += 1;
+                if actual > 0 {
+                    refreshed.push((actual, v));
+                    if best_ref.map(|b| beats((actual, v), b)).unwrap_or(true) {
+                        best_ref = Some((actual, v));
+                    }
+                }
+            }
+        }
+        for (a, v) in refreshed {
+            if chosen != Some((a, v as Vertex)) {
+                heap.push((a, Reverse(v)));
             }
         }
         cluster.charge_compute(MASTER, t.elapsed().as_secs_f64());
@@ -143,6 +203,60 @@ mod tests {
         let r = ripples_select(&mut cl2, &st2, g2.n(), cfg.k);
         assert_eq!(d.solution.seeds, r.solution.seeds);
         assert_eq!(d.solution.coverage, r.solution.coverage);
+    }
+
+    /// The pre-batching master loop, kept verbatim as the reference the
+    /// frontier-batched pop must reproduce — seeds, gains, AND stale-pop
+    /// counts.
+    fn serial_reference(state: &DistState, n: usize, k: usize) -> (CoverSolution, u64) {
+        let m = 4;
+        let mut global = vec![0u32; n];
+        let mut ranks: Vec<RankSelectState> = Vec::with_capacity(m);
+        for p in 0..m {
+            ranks.push(RankSelectState::build(state, p, &mut global));
+        }
+        let mut heap: BinaryHeap<(u32, Reverse<u32>)> = BinaryHeap::new();
+        for (v, &c) in global.iter().enumerate() {
+            if c > 0 {
+                heap.push((c, Reverse(v as u32)));
+            }
+        }
+        let mut solution = CoverSolution::default();
+        let mut stale_pops = 0u64;
+        while solution.len() < k {
+            let mut chosen: Option<(u32, Vertex)> = None;
+            while let Some((c, Reverse(v))) = heap.pop() {
+                let actual = global[v as usize];
+                if c == actual {
+                    if actual > 0 {
+                        chosen = Some((actual, v));
+                    }
+                    break;
+                }
+                stale_pops += 1;
+                if actual > 0 {
+                    heap.push((actual, Reverse(v)));
+                }
+            }
+            let Some((gain, seed)) = chosen else { break };
+            for (p, r) in ranks.iter_mut().enumerate() {
+                r.apply_seed(state, p, seed, &mut global);
+            }
+            solution.push(seed, gain);
+        }
+        (solution, stale_pops)
+    }
+
+    #[test]
+    fn batched_frontier_matches_serial_master_loop() {
+        for (theta, k) in [(260u64, 6usize), (320, 12), (300, 250)] {
+            let (g, mut cl, st, _) = setup(4, theta);
+            let d = diimm_select(&mut cl, &st, g.n(), k);
+            let (sol, stale) = serial_reference(&st, g.n(), k);
+            assert_eq!(d.solution.seeds, sol.seeds, "theta {theta} k {k}");
+            assert_eq!(d.solution.gains, sol.gains, "theta {theta} k {k}");
+            assert_eq!(d.stale_pops, stale, "theta {theta} k {k} stale pops");
+        }
     }
 
     #[test]

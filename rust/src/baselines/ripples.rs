@@ -11,6 +11,7 @@
 use super::RankSelectState;
 use crate::coordinator::sampling::DistState;
 use crate::distributed::Transport;
+use crate::maxcover::batch::argmax_first;
 use crate::maxcover::CoverSolution;
 use crate::Vertex;
 use std::time::Instant;
@@ -56,13 +57,12 @@ pub fn ripples_select(cluster: &mut dyn Transport, state: &DistState, n: usize, 
         }
         super::charge_reduction_compute(&mut *cluster, &mut scratch);
         reduction_bytes += reduce_bytes_per_iter;
-        // Replicated argmax: every rank scans the reduced vector. Measure
-        // once, charge all ranks the same scan time.
+        // Replicated argmax: every rank scans the reduced vector through
+        // the tiled first-maximum reduction (bit-identical to the serial
+        // fold, including all-zero → vertex 0). Measure once, charge all
+        // ranks the same scan time.
         let t = Instant::now();
-        let (best_v, best_c) = global
-            .iter()
-            .enumerate()
-            .fold((0usize, 0u32), |acc, (v, &c)| if c > acc.1 { (v, c) } else { acc });
+        let (best_v, best_c) = argmax_first(&global);
         let scan = t.elapsed().as_secs_f64();
         for r in 0..m {
             cluster.charge_compute(r, scan);

@@ -16,6 +16,7 @@ fn env_coalesce() -> usize {
         .unwrap_or(DEFAULT_COALESCE)
 }
 use crate::imm::bounds;
+use crate::maxcover::ScorerKind;
 use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
 use crate::Vertex;
 
@@ -184,6 +185,16 @@ pub struct Config {
     /// `None` = direct spawn locally / `ssh {host} env {env} {bin}`
     /// remotely; the literal `manual` prints env-join instructions.
     pub launch: Option<String>,
+    /// Marginal-gain scoring backend for the dense/lazy selection paths
+    /// (`--scorer auto|scalar|batch`, default from `GREEDIRIS_SCORER` or
+    /// [`ScorerKind::Auto`]): `scalar` pins the candidate-at-a-time
+    /// sweep, `batch` the tiled batched dispatcher
+    /// ([`crate::maxcover::TiledCpuScorer`]), and `auto` picks batch
+    /// above [`crate::maxcover::BATCH_AUTO_THRESHOLD`] candidates. Pure
+    /// performance knob — seed sets are bit-identical for every setting
+    /// (never part of the wire config blob or checkpoint fingerprint; an
+    /// unknown env value panics here, a clean CLI error in `main`).
+    pub scorer: ScorerKind,
 }
 
 impl Config {
@@ -221,6 +232,9 @@ impl Config {
             fabric_bind: None,
             hosts: Vec::new(),
             launch: std::env::var("GREEDIRIS_LAUNCH").ok(),
+            scorer: ScorerKind::from_env()
+                .unwrap_or_else(|e| panic!("{e}"))
+                .unwrap_or(ScorerKind::Auto),
         }
     }
 
@@ -368,6 +382,13 @@ impl Config {
         self
     }
 
+    /// Selects the marginal-gain scoring backend (bit-identical seeds for
+    /// every setting; see [`Config::scorer`]).
+    pub fn with_scorer(mut self, kind: ScorerKind) -> Self {
+        self.scorer = kind;
+        self
+    }
+
     /// Number of sender processes (the receiver, rank 0, does not own a
     /// vertex partition in the streaming variants; with m == 1 everything
     /// degenerates to a single local solve).
@@ -505,6 +526,15 @@ mod tests {
         assert_eq!(c.fabric_bind.as_deref(), Some("10.0.0.2:7000"));
         assert_eq!(c.hosts, vec!["a".to_string(), "b".to_string()]);
         assert_eq!(c.launch.as_deref(), Some("manual"));
+    }
+
+    #[test]
+    fn scorer_builder_and_default() {
+        let c = cfg(Algorithm::GreediRis);
+        assert_eq!(c.scorer, ScorerKind::Auto, "scorer defaults to auto");
+        let c = c.with_scorer(ScorerKind::Batch);
+        assert_eq!(c.scorer, ScorerKind::Batch);
+        assert_eq!(c.with_scorer(ScorerKind::Scalar).scorer, ScorerKind::Scalar);
     }
 
     #[test]

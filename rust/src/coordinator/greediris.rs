@@ -38,8 +38,9 @@ use crate::distributed::transport::threads::Fabric;
 use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{wire, Transport, TransportExt, TransportKind};
 use crate::graph::Graph;
+use crate::maxcover::batch::{make_scorer, ScorerKind};
 use crate::maxcover::dense::{dense_greedy_max_cover_stream, PackedCovers};
-use crate::maxcover::lazy::lazy_greedy_stream;
+use crate::maxcover::lazy::{lazy_greedy_stream, lazy_greedy_stream_batched, FRONTIER};
 use crate::maxcover::streaming::prunable;
 use crate::maxcover::{CoverSolution, GainScorer, SetSystemView, StreamingMaxCover};
 use crate::metrics::ReceiverBreakdown;
@@ -126,18 +127,30 @@ pub struct StreamRound {
 }
 
 /// Runs local selection on one sender's system, returning its trace.
-/// `ship_limit` = ⌈α·k⌉ (or k when not truncating).
+/// `ship_limit` = ⌈α·k⌉ (or k when not truncating). `kind` picks the
+/// marginal-gain backend ([`Config::scorer`]): on the dense solvers it
+/// selects the [`GainScorer`] instance (unless an external XLA scorer is
+/// passed in), on the lazy solver it routes through the batched-frontier
+/// re-evaluation — all bit-identical to the scalar sweep.
 fn run_sender<'s, 'a, 'b>(
     rank: usize,
     system: SetSystemView<'s>,
     k: usize,
     ship_limit: usize,
     solver: LocalSolver,
+    kind: ScorerKind,
     scorer: Option<&'a mut (dyn GainScorer + 'b)>,
 ) -> SenderTrace<'s> {
     let mut emits: Vec<(f64, usize)> = Vec::with_capacity(ship_limit);
     let t0 = Instant::now();
     let solution = match solver {
+        LocalSolver::LazyGreedy if kind.picks_batch(system.len()) => {
+            lazy_greedy_stream_batched(system, k, FRONTIER, |e| {
+                if e.order < ship_limit {
+                    emits.push((t0.elapsed().as_secs_f64(), e.idx));
+                }
+            })
+        }
         LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
             if e.order < ship_limit {
                 emits.push((t0.elapsed().as_secs_f64(), e.idx));
@@ -145,10 +158,10 @@ fn run_sender<'s, 'a, 'b>(
         }),
         LocalSolver::DenseCpu | LocalSolver::DenseXla => {
             let covers = PackedCovers::from_sets(system);
-            let mut cpu = crate::maxcover::CpuScorer;
+            let mut fallback: Option<Box<dyn GainScorer>> = None;
             let scorer: &mut dyn GainScorer = match (solver, scorer) {
                 (LocalSolver::DenseXla, Some(s)) => s,
-                _ => &mut cpu,
+                _ => &mut **fallback.insert(make_scorer(kind, covers.n)),
             };
             dense_greedy_max_cover_stream(&covers, k, scorer, |order, idx, _gain| {
                 if order < ship_limit {
@@ -195,8 +208,9 @@ pub fn streaming_round_checked<'a, 'b>(
     if m == 1 {
         t.barrier();
         let system = state.system_at(0);
-        let (trace, secs) =
-            t.run_compute(0, || run_sender(0, system, k, ship_limit, cfg.local_solver, None));
+        let (trace, secs) = t.run_compute(0, || {
+            run_sender(0, system, k, ship_limit, cfg.local_solver, cfg.scorer, None)
+        });
         let end = t.now(0);
         return Ok(StreamRound {
             solution: trace.solution,
@@ -259,7 +273,7 @@ pub fn streaming_round_checked<'a, 'b>(
         // The trace is produced by real execution; the measured per-seed
         // timestamps already advance this rank's clock below.
         let scorer_ref = scorer.as_mut().map(|s| &mut **s as &mut (dyn GainScorer + 'b));
-        let trace = run_sender(p, system, k, ship_limit, cfg.local_solver, scorer_ref);
+        let trace = run_sender(p, system, k, ship_limit, cfg.local_solver, cfg.scorer, scorer_ref);
         t.charge_compute(p, trace.total);
         traces.push(trace);
     }
@@ -441,6 +455,13 @@ pub(crate) fn run_wire_sender(
         ep.send_to(0, msg);
     };
     let solution = match cfg.local_solver {
+        LocalSolver::LazyGreedy if cfg.scorer.picks_batch(system.len()) => {
+            lazy_greedy_stream_batched(system, k, FRONTIER, |e| {
+                if e.order < ship_limit {
+                    emit(e.idx);
+                }
+            })
+        }
         LocalSolver::LazyGreedy => lazy_greedy_stream(system, k, |e| {
             if e.order < ship_limit {
                 emit(e.idx);
@@ -448,8 +469,8 @@ pub(crate) fn run_wire_sender(
         }),
         LocalSolver::DenseCpu | LocalSolver::DenseXla => {
             let covers = PackedCovers::from_sets(system);
-            let mut cpu = crate::maxcover::CpuScorer;
-            dense_greedy_max_cover_stream(&covers, k, &mut cpu, |order, idx, _g| {
+            let mut scorer = make_scorer(cfg.scorer, covers.n);
+            dense_greedy_max_cover_stream(&covers, k, &mut *scorer, |order, idx, _g| {
                 if order < ship_limit {
                     emit(idx);
                 }
@@ -1002,6 +1023,28 @@ mod tests {
             r.receiver.comm_thread_wait,
             r.receiver.bucket_thread_work
         );
+    }
+
+    #[test]
+    fn scorer_backends_are_bit_identical() {
+        // `--scorer` is a pure performance knob: batch vs scalar must hand
+        // back the exact seed sequence on both solvers and both in-memory
+        // transports.
+        for kind in [TransportKind::Sim, TransportKind::Threads] {
+            for solver in [LocalSolver::LazyGreedy, LocalSolver::DenseCpu] {
+                let (mut a, st_a, cfg_a) = setup_with(3, 384, kind);
+                let cfg_a = cfg_a.with_local_solver(solver).with_scorer(ScorerKind::Scalar);
+                let scalar = streaming_round(a.as_mut(), &st_a, &cfg_a, None);
+                let (mut b, st_b, cfg_b) = setup_with(3, 384, kind);
+                let cfg_b = cfg_b.with_local_solver(solver).with_scorer(ScorerKind::Batch);
+                let batch = streaming_round(b.as_mut(), &st_b, &cfg_b, None);
+                assert_eq!(
+                    scalar.solution.seeds, batch.solution.seeds,
+                    "{kind:?} {solver:?} scorer backends diverged"
+                );
+                assert_eq!(scalar.solution.coverage, batch.solution.coverage);
+            }
+        }
     }
 
     #[test]

@@ -659,6 +659,12 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
     // Socket send-path counters (syscalls, bytes/syscall, coalescing, raw
     // relays) — likewise process-only and unprinted when all-zero.
     breakdown.wire = cluster.wire_stats();
+    // Batched-scorer dispatch counters (tiles, candidates/dispatch, reduce
+    // time), drained from the process-wide accumulator so per-run numbers
+    // don't bleed across back-to-back runs. All-zero — and unprinted —
+    // when every solve took the scalar path. Worker-process dispatches
+    // happen in other address spaces and are not aggregated here.
+    breakdown.scorer = crate::maxcover::batch::stats_take();
 
     let _ = lower_bound;
     Ok(RunResult {

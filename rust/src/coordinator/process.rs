@@ -121,7 +121,7 @@ use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{wire, Transport, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::Graph;
-use crate::maxcover::InvertedIndex;
+use crate::maxcover::{InvertedIndex, ScorerKind};
 use crate::metrics::ReceiverBreakdown;
 use crate::sampling::{batch_parallel, SampleBatch};
 use crate::{anyhow, bail};
@@ -273,12 +273,36 @@ fn decode_config(bytes: &[u8]) -> Result<Config> {
     Ok(c)
 }
 
+fn scorer_tag(s: ScorerKind) -> u8 {
+    match s {
+        ScorerKind::Auto => 0,
+        ScorerKind::Scalar => 1,
+        ScorerKind::Batch => 2,
+    }
+}
+
+fn scorer_from(t: u8) -> Result<ScorerKind> {
+    match t {
+        0 => Ok(ScorerKind::Auto),
+        1 => Ok(ScorerKind::Scalar),
+        2 => Ok(ScorerKind::Batch),
+        other => bail!("bad scorer tag {other}"),
+    }
+}
+
+/// The scorer byte rides the HELLO *next to* the config blob, not inside
+/// it: `--scorer` is determinism-neutral (bit-identical seeds either
+/// way), so it must stay out of [`encode_config`] — the checkpoint
+/// fingerprint — or switching backends would invalidate snapshots. The
+/// graph blob consumes the remainder of the payload, so the byte sits
+/// between the two.
 fn hello_payload(m: usize, cfg: &Config, graph: &Graph) -> Vec<u8> {
     let mut b = Vec::new();
     wire::put_varint(&mut b, m as u64);
     let cb = encode_config(cfg);
     wire::put_varint(&mut b, cb.len() as u64);
     b.extend_from_slice(&cb);
+    b.push(scorer_tag(cfg.scorer));
     b.extend_from_slice(&encode_graph(graph));
     b
 }
@@ -288,11 +312,12 @@ fn decode_hello(bytes: &[u8]) -> Result<(usize, Config, Graph)> {
     let m = r.varint().map_err(derr)? as usize;
     let clen = r.varint().map_err(derr)? as usize;
     let pos = bytes.len() - r.remaining();
-    if clen > bytes.len() - pos {
+    if clen >= bytes.len() - pos {
         bail!("HELLO config blob truncated");
     }
-    let cfg = decode_config(&bytes[pos..pos + clen])?;
-    let graph = decode_graph(&bytes[pos + clen..]).map_err(derr)?;
+    let mut cfg = decode_config(&bytes[pos..pos + clen])?;
+    cfg.scorer = scorer_from(bytes[pos + clen])?;
+    let graph = decode_graph(&bytes[pos + clen + 1..]).map_err(derr)?;
     Ok((m, cfg, graph))
 }
 
@@ -1490,14 +1515,22 @@ mod tests {
         let edges = generators::erdos_renyi(80, 300, 3);
         let g = Graph::from_edges(80, &edges, WeightModel::UniformIc { max: 0.1 }, 3)
             .with_name("hello");
-        let cfg = Config::new(5, 4, DiffusionModel::IC, Algorithm::GreediRis);
+        let cfg = Config::new(5, 4, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_scorer(ScorerKind::Batch);
         let hello = hello_payload(4, &cfg, &g);
         let (m, c, gg) = decode_hello(&hello).unwrap();
         assert_eq!(m, 4);
         assert_eq!(c.k, 5);
+        assert_eq!(c.scorer, ScorerKind::Batch, "scorer byte rides the HELLO");
         assert_eq!(gg.n(), 80);
         assert_eq!(gg.name, "hello");
         assert!(decode_hello(&hello[..hello.len() - 2]).is_err());
+        // The scorer stays out of the config blob — the checkpoint
+        // fingerprint must not change when the backend does.
+        assert_eq!(
+            encode_config(&cfg),
+            encode_config(&cfg.clone().with_scorer(ScorerKind::Scalar))
+        );
     }
 
     #[test]

@@ -8,7 +8,20 @@
 use crate::coordinator::config::Config;
 use crate::coordinator::sampling::DistState;
 use crate::distributed::{collectives, Transport, TransportExt};
-use crate::maxcover::{lazy_greedy_max_cover, CoverSolution, SetSystem};
+use crate::maxcover::batch::ScorerKind;
+use crate::maxcover::lazy::{lazy_greedy_stream_batched, FRONTIER};
+use crate::maxcover::{lazy_greedy_max_cover, CoverSolution, SetSystem, SetSystemView};
+
+/// Local/global lazy greedy behind the `--scorer` knob: the batched
+/// backend routes through the batched-frontier re-evaluation
+/// ([`lazy_greedy_stream_batched`]) — bit-identical solutions either way.
+fn lazy_solve(system: SetSystemView<'_>, k: usize, scorer: ScorerKind) -> CoverSolution {
+    if scorer.picks_batch(system.len()) {
+        lazy_greedy_stream_batched(system, k, FRONTIER, |_| {})
+    } else {
+        lazy_greedy_max_cover(system, k)
+    }
+}
 
 /// Outcome of one offline RandGreedi round, with the Table-2 timings.
 pub struct OfflineRound {
@@ -35,7 +48,7 @@ pub fn offline_round(cluster: &mut dyn Transport, state: &DistState, cfg: &Confi
     for p in 0..m {
         let system = state.system_at(p);
         let ((sol, payload), secs) = cluster.run_compute(p, || {
-            let sol = lazy_greedy_max_cover(system, k);
+            let sol = lazy_solve(system, k, cfg.scorer);
             // Serialize (vertex, full covering subset) pairs for the gather.
             let mut buf: Vec<u32> = Vec::new();
             for &v in &sol.seeds {
@@ -74,7 +87,7 @@ pub fn offline_round(cluster: &mut dyn Transport, state: &DistState, cfg: &Confi
                 i += 2 + cnt;
             }
         }
-        lazy_greedy_max_cover(merged.view(), k)
+        lazy_solve(merged.view(), k, cfg.scorer)
     });
     let global_time = cluster.now(0) - t_gather_start;
     let _ = global_solve_secs;
@@ -135,6 +148,17 @@ mod tests {
         let r = offline_round(&mut cl, &st, &cfg);
         let direct = lazy_greedy_max_cover(st.system_at(0), cfg.k);
         assert_eq!(r.solution.coverage, direct.coverage);
+    }
+
+    #[test]
+    fn scorer_backends_match_offline_round() {
+        let (mut a, st_a, cfg_a) = setup(4, 384);
+        let scalar = offline_round(&mut a, &st_a, &cfg_a.with_scorer(ScorerKind::Scalar));
+        let (mut b, st_b, cfg_b) = setup(4, 384);
+        let batch = offline_round(&mut b, &st_b, &cfg_b.with_scorer(ScorerKind::Batch));
+        assert_eq!(scalar.solution.seeds, batch.solution.seeds);
+        assert_eq!(scalar.solution.coverage, batch.solution.coverage);
+        assert_eq!(scalar.gather_bytes, batch.gather_bytes);
     }
 
     #[test]

@@ -177,6 +177,39 @@
 //! killed-and-resumed run reports seeds, θ, rounds, and counters
 //! bit-identical to an uninterrupted one, across transports (pinned by
 //! `tests/checkpoint.rs`, `tests/transport.rs`, and ci.sh gate 5).
+//!
+//! ## Batched device-shaped marginal-gain scorer (PR 9)
+//!
+//! Selection's inner loop is batched behind
+//! [`maxcover::dense::BatchScorer`]: the unit of dispatch is many
+//! candidate marginals at once (`score_tile` over a padded
+//! [`maxcover::batch::TileShape`] tile; `best` dispatches every tile and
+//! reduces per-tile `(gain, idx)` partials **in ascending tile order**
+//! with a strictly-greater rule — bit-identical to the serial
+//! first-maximum sweep for every tile size, thread count, and kernel
+//! tier, pinned by `tests/scorer.rs`). The first backend is the tiled
+//! parallel CPU pool [`maxcover::batch::TiledCpuScorer`] (contiguous
+//! tile blocks on a persistent worker pool, scored through the
+//! dispatched [`maxcover::bitset`] tier); the same trait is the drop-in
+//! surface for a PJRT/GPU backend, and without the `xla` feature
+//! [`runtime::XlaScorer`] is a constructible stand-in that delegates to
+//! it, so `tests/runtime_xla.rs` pins the device-dispatch semantics on
+//! every build. Every dense-selection consumer routes through
+//! [`maxcover::batch::ScorerKind`] (`--scorer auto|scalar|batch` /
+//! `GREEDIRIS_SCORER`): the dense solvers and coordinator SELECT on all
+//! transports (the kind rides the process HELLO payload *next to* the
+//! config blob — it is determinism-neutral and deliberately outside the
+//! checkpoint fingerprint), the lazy senders' invalidated-frontier
+//! re-scores ([`maxcover::lazy`]'s batched wave), the threshold sweep's
+//! tiled twin ([`maxcover::threshold_greedy_max_cover_tiled`]), and the
+//! reduction baselines' replicated argmax
+//! ([`maxcover::batch::argmax_first`]; DiIMM's master pops stale
+//! frontiers in batches with a domination check proven equivalent to
+//! the serial pop loop). Per-dispatch stats (dispatches, tiles,
+//! candidates/dispatch, reduce time, peak workers) surface in
+//! [`metrics::Breakdown`] and the CLI `scorer:` stats line; ci.sh gates
+//! `--scorer batch` vs `scalar` seed equality across transports and
+//! records the A/B in `BENCH_PR9.json` via `benches/micro_scorer.rs`.
 
 #![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
 // Style lints that conflict with this crate's deliberate idiom (explicit

@@ -22,6 +22,7 @@ use greediris::exp::inputs::{analog, build_analog, weights_for, ANALOGS};
 use greediris::exp::tables::{self, BenchScale, GraphCache};
 use greediris::graph::io::load_snap;
 use greediris::graph::Graph;
+use greediris::maxcover::ScorerKind;
 use greediris::runtime::XlaScorer;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -32,7 +33,8 @@ greediris — distributed streaming influence maximization (GreediRIS reproducti
 USAGE:
   greediris run [--input NAME | --file PATH] [--algorithm A] [--model IC|LT]
                 [--m N] [--k N] [--eps F] [--alpha F] [--theta N]
-                [--solver lazy|dense-cpu|dense-xla] [--sims N] [--seed N]
+                [--solver lazy|dense-cpu|dense-xla] [--scorer auto|scalar|batch]
+                [--sims N] [--seed N]
                 [--s1-threads N] [--transport sim|threads|process]
                 [--wire varint|raw] [--prune on|off]
                 [--overlap on|off] [--chunk N]
@@ -78,6 +80,14 @@ fabric (default 65536): each writer wakeup drains queued frames into
 vectored writes until that many payload bytes are staged; 0 restores the
 one-write-per-frame baseline. Seeds, theta, and raw-byte counters are
 bit-identical at every setting.
+--scorer picks the marginal-gain dispatch for the dense/lazy selection
+paths: scalar scores one candidate per kernel call, batch shards
+candidate tiles across a persistent thread pool (device-shaped
+dispatch; see scripts/README.md), auto (default) uses batch above a
+candidate-count threshold. Seed sets are bit-identical across all
+three — the scorer changes dispatch shape, never results. When batched
+dispatch ran, the stats block prints a `scorer:` line (dispatches,
+tiles, candidates/dispatch, reduce time, threads).
 --fabric-bind HOST:PORT makes rank 0 listen on a routable address so
 workers on other machines can join (default: ephemeral loopback).
 --hosts FILE places workers across machines: one host per line (#
@@ -92,6 +102,10 @@ orchestrator) within the join deadline.
 Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
      GREEDIRIS_TRANSPORT=sim|threads|process sets the default transport
      (unknown values are an error, never a silent fallback);
+     GREEDIRIS_SCORER=auto|scalar|batch sets the default --scorer
+     (unknown values are an error, never a silent fallback);
+     GREEDIRIS_SCORER_TILE / GREEDIRIS_SCORER_THREADS size the batched
+     backend's tiles and pool (defaults: 64, min(cores, 8));
      GREEDIRIS_WORKER_BIN overrides the rank-worker binary;
      GREEDIRIS_FABRIC_TIMEOUT_MS sets the default fabric deadline;
      GREEDIRIS_COALESCE sets the default --coalesce budget in bytes;
@@ -247,6 +261,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if let Some(t) = flags.map.get("theta") {
         cfg = cfg.with_theta(t.parse()?);
     }
+    if let Some(s) = flags.map.get("scorer") {
+        cfg = cfg.with_scorer(ScorerKind::parse(s).map_err(|e| anyhow!(e))?);
+    }
     let transport_kind = cfg.transport;
     if transport_kind == TransportKind::Process {
         // Surface a missing worker binary as a clean error before any
@@ -295,6 +312,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     if !result.breakdown.wire.is_zero() {
         println!("wire: {}", result.breakdown.wire);
+    }
+    if !result.breakdown.scorer.is_zero() {
+        println!("scorer: {}", result.breakdown.scorer);
     }
     println!(
         "comm: all-to-all {} B (raw {} B) | stream {} B (raw {} B, {} seeds, {} pruned) | reductions {} B",
@@ -397,9 +417,12 @@ fn main() -> Result<()> {
     if greediris::coordinator::process::worker_env_present() {
         return greediris::coordinator::process::run_rank_worker();
     }
-    // Validate the env-default transport up front so a typo is a clean CLI
-    // error instead of a panic inside Config::new.
+    // Validate the env-default transport and scorer up front so a typo is
+    // a clean CLI error instead of a panic inside Config::new.
     if let Err(e) = TransportKind::from_env() {
+        bail!("{e}");
+    }
+    if let Err(e) = ScorerKind::from_env() {
         bail!("{e}");
     }
     let args: Vec<String> = std::env::args().skip(1).collect();

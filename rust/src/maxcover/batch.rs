@@ -1,0 +1,694 @@
+//! Tiled multi-threaded CPU backend of the batched scoring contract
+//! ([`BatchScorer`]) — many candidate marginals per dispatch, sharded
+//! across a persistent worker pool (PR 9 tentpole).
+//!
+//! ## Why a batched shape
+//!
+//! Once S1–S3 are parallel (PR 1–8), selection cost dominates: every
+//! greedy step is a full `gains[i] = popcount(row_i & !covered)` sweep
+//! plus an argmax. gIM (arxiv 2009.07325) shows that sweep is a natural
+//! batched-device workload. This module gives it the device shape on the
+//! CPU: candidates are cut into fixed-width *tiles* (padded to tile
+//! boundaries via [`TileShape`], mirroring the xla path's `ShapeBucket`
+//! padding), tiles are sharded as contiguous blocks across a persistent
+//! thread pool, each tile is scored through the dispatched
+//! [`bitset::Kernels`](super::bitset) tier (scalar/AVX2/AVX-512/wide)
+//! against the packed [`PackedCovers`] arena, and per-tile `(gain, idx)`
+//! partials are reduced **in ascending tile order** — so the argmax is
+//! bit-identical to the serial first-maximum sweep for every tile size
+//! and thread count (pinned by `tests/scorer.rs`). A PJRT/GPU backend
+//! later drops in behind the same [`BatchScorer`] trait with no caller
+//! changes.
+//!
+//! ## Determinism
+//!
+//! Within a tile the worker takes a later candidate only on a strictly
+//! greater gain (first maximum); across tiles the reduction does the
+//! same, and tiles partition the candidate range in order — so the
+//! selected `(idx, gain)` is exactly [`KernelScorer`]'s, independent of
+//! how tiles land on threads. Selected rows score 0 and are excluded
+//! from partials, so all-selected tiles carry an explicit empty
+//! sentinel rather than a fake candidate.
+//!
+//! ## Dispatch
+//!
+//! Callers pick a backend through [`ScorerKind`] (`--scorer
+//! auto|scalar|batch` / `GREEDIRIS_SCORER`): `scalar` is the serial
+//! [`KernelScorer`], `batch` is [`TiledCpuScorer`], and `auto` uses the
+//! batched pool only at or above [`BATCH_AUTO_THRESHOLD`] candidates
+//! (below it the dispatch overhead outweighs the parallel sweep).
+//! Because every backend returns bit-identical argmaxes, the scorer
+//! choice is determinism-neutral — it never enters the config
+//! fingerprint, and ci.sh gates `--scorer batch` vs `--scorer scalar`
+//! seed equality across transports.
+//!
+//! Per-dispatch counters (dispatches, tiles, candidates, reduce time,
+//! peak worker count) accumulate in process-global atomics; the
+//! pipeline harvests them into [`metrics::Breakdown::scorer`] via
+//! [`stats_take`] and the CLI prints them on a `scorer:` stats line.
+
+use super::bitset::{kernels, Kernels};
+use super::dense::{BatchScorer, GainScorer, KernelScorer, PackedCovers, DEFAULT_TILE};
+use crate::metrics::ScorerStats;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Process-global per-dispatch counters (only the tiled pool bumps these;
+// the serial reference backends stay silent so A/B stats are attributable).
+// ---------------------------------------------------------------------------
+
+static STAT_DISPATCHES: AtomicU64 = AtomicU64::new(0);
+static STAT_TILES: AtomicU64 = AtomicU64::new(0);
+static STAT_CANDIDATES: AtomicU64 = AtomicU64::new(0);
+static STAT_REDUCE_NS: AtomicU64 = AtomicU64::new(0);
+static STAT_THREADS: AtomicU64 = AtomicU64::new(0);
+
+/// Drains the process-global batched-scorer counters into a
+/// [`ScorerStats`] delta — the pipeline calls this once per run, right
+/// where the fabric/wire counters are harvested, so concurrent runs in
+/// one process each see their own dispatch window.
+pub fn stats_take() -> ScorerStats {
+    ScorerStats {
+        dispatches: STAT_DISPATCHES.swap(0, Ordering::Relaxed),
+        tiles: STAT_TILES.swap(0, Ordering::Relaxed),
+        candidates: STAT_CANDIDATES.swap(0, Ordering::Relaxed),
+        reduce_s: STAT_REDUCE_NS.swap(0, Ordering::Relaxed) as f64 * 1e-9,
+        threads: STAT_THREADS.swap(0, Ordering::Relaxed),
+    }
+}
+
+/// Non-draining snapshot of the global counters (tests).
+pub fn stats_snapshot() -> ScorerStats {
+    ScorerStats {
+        dispatches: STAT_DISPATCHES.load(Ordering::Relaxed),
+        tiles: STAT_TILES.load(Ordering::Relaxed),
+        candidates: STAT_CANDIDATES.load(Ordering::Relaxed),
+        reduce_s: STAT_REDUCE_NS.load(Ordering::Relaxed) as f64 * 1e-9,
+        threads: STAT_THREADS.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scorer dispatch: `--scorer auto|scalar|batch` / GREEDIRIS_SCORER.
+// ---------------------------------------------------------------------------
+
+/// Candidate count at which `--scorer auto` switches from the serial
+/// sweep to the tiled pool. Matches the smallest xla `ShapeBucket`'s row
+/// count: below it one kernel sweep is cheaper than a pool dispatch.
+pub const BATCH_AUTO_THRESHOLD: usize = 256;
+
+/// Which gain-scoring backend dense selection uses. Determinism-neutral
+/// by construction (every backend returns bit-identical argmaxes), so it
+/// is deliberately excluded from the config/checkpoint fingerprint —
+/// like `--coalesce` and `--transport` — and rides the HELLO payload
+/// outside the config blob to reach process-transport workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScorerKind {
+    /// Batch at or above [`BATCH_AUTO_THRESHOLD`] candidates, else scalar.
+    #[default]
+    Auto,
+    /// Always the serial per-candidate [`KernelScorer`] sweep.
+    Scalar,
+    /// Always the tiled parallel [`TiledCpuScorer`] pool.
+    Batch,
+}
+
+impl ScorerKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(ScorerKind::Auto),
+            "scalar" => Ok(ScorerKind::Scalar),
+            "batch" => Ok(ScorerKind::Batch),
+            other => Err(format!(
+                "unknown scorer {other:?} (expected auto, scalar, or batch)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ScorerKind::Auto => "auto",
+            ScorerKind::Scalar => "scalar",
+            ScorerKind::Batch => "batch",
+        }
+    }
+
+    /// Reads `GREEDIRIS_SCORER`; unknown values are a hard error (a
+    /// typo'd env must never silently fall back), unset is `None`.
+    pub fn from_env() -> Result<Option<Self>, String> {
+        match std::env::var("GREEDIRIS_SCORER") {
+            Ok(v) => Self::parse(&v).map(Some).map_err(|e| format!("GREEDIRIS_SCORER: {e}")),
+            Err(_) => Ok(None),
+        }
+    }
+
+    /// Whether this kind routes an `n`-candidate instance to the batched
+    /// pool.
+    pub fn picks_batch(self, n: usize) -> bool {
+        match self {
+            ScorerKind::Scalar => false,
+            ScorerKind::Batch => true,
+            ScorerKind::Auto => n >= BATCH_AUTO_THRESHOLD,
+        }
+    }
+}
+
+/// Builds the [`GainScorer`] backend `kind` selects for an `n`-candidate
+/// instance — the single construction point every dense-selection
+/// consumer (dense solvers, coordinator SELECT, baselines) goes through.
+pub fn make_scorer(kind: ScorerKind, n: usize) -> Box<dyn GainScorer> {
+    if kind.picks_batch(n) {
+        Box::new(TiledCpuScorer::auto())
+    } else {
+        Box::new(KernelScorer::auto())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tile geometry.
+// ---------------------------------------------------------------------------
+
+/// Padded tile layout for an `[n, w]` instance — the batched twin of the
+/// xla path's `ShapeBucket`: candidates are padded up to a whole number
+/// of `tile`-wide tiles so a device backend can dispatch fixed shapes,
+/// and the scratch `gains` vector is sized to `padded_n` (tail entries
+/// stay 0 and are never reduced — tile `tiles - 1` clamps its row range
+/// to `n`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileShape {
+    /// Candidates per tile (≥ 1).
+    pub tile: usize,
+    /// Number of tiles covering `n` candidates.
+    pub tiles: usize,
+    /// `tiles * tile` — the padded candidate count.
+    pub padded_n: usize,
+    /// Words per row (unpadded; rows are contiguous in the arena).
+    pub w: usize,
+}
+
+impl TileShape {
+    pub fn for_instance(n: usize, w: usize, tile: usize) -> Self {
+        let tile = tile.max(1);
+        let tiles = n.div_ceil(tile).max(1);
+        TileShape { tile, tiles, padded_n: tiles * tile, w }
+    }
+
+    /// The real (unpadded) row range of tile `t`.
+    #[inline]
+    pub fn rows(&self, t: usize, n: usize) -> Range<usize> {
+        let lo = t * self.tile;
+        lo..(lo + self.tile).min(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The worker pool.
+// ---------------------------------------------------------------------------
+
+/// One dispatch unit: a contiguous block of tiles, carried to a worker as
+/// raw pointers into the caller's borrows. Sound because [`Pool::run`]
+/// blocks until every job's ack returns — the pointers never outlive the
+/// `best_batched` call that formed them — and tile blocks write disjoint
+/// `gains`/`partials` ranges.
+struct Job {
+    bits: *const u32,
+    covered: *const u32,
+    selected: *const bool,
+    gains: *mut u32,
+    partials: *mut (u32, u32),
+    n: usize,
+    w: usize,
+    shape: TileShape,
+    tiles: Range<usize>,
+    kern: &'static Kernels,
+}
+
+// SAFETY: the pointers reference slices that outlive the dispatch (the
+// caller blocks on acks before returning), and disjoint tile blocks
+// never alias their output ranges.
+unsafe impl Send for Job {}
+
+/// Scores every tile in `job.tiles`: writes per-candidate gains (0 for
+/// selected rows) and the tile's first-maximum `(gain, idx)` partial
+/// (`idx == u32::MAX` marks an all-selected tile).
+fn score_tiles(job: &Job) {
+    let bits = unsafe { std::slice::from_raw_parts(job.bits, job.n * job.w) };
+    let covered = unsafe { std::slice::from_raw_parts(job.covered, job.w) };
+    let selected = unsafe { std::slice::from_raw_parts(job.selected, job.n) };
+    let count = job.kern.and_not_count_u32;
+    for t in job.tiles.clone() {
+        let mut part = (0u32, u32::MAX);
+        for i in job.shape.rows(t, job.n) {
+            let gain = if selected[i] {
+                0
+            } else {
+                count(&bits[i * job.w..(i + 1) * job.w], covered)
+            };
+            unsafe { *job.gains.add(i) = gain };
+            if !selected[i] && (part.1 == u32::MAX || gain > part.0) {
+                part = (gain, i as u32);
+            }
+        }
+        unsafe { *job.partials.add(t) = part };
+    }
+}
+
+/// Persistent worker pool: one mpsc lane per worker, a shared ack
+/// channel back. Dispatch sends at most one contiguous tile block per
+/// worker and blocks for all acks (bounding every borrow the raw
+/// pointers alias); workers idle on their lane between dispatches, so
+/// per-`best` cost is two channel hops, not thread spawns.
+struct Pool {
+    lanes: Vec<mpsc::Sender<Job>>,
+    acks: mpsc::Receiver<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    fn new(threads: usize) -> Self {
+        let (ack_tx, acks) = mpsc::channel::<()>();
+        let mut lanes = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let ack = ack_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    score_tiles(&job);
+                    if ack.send(()).is_err() {
+                        break;
+                    }
+                }
+            }));
+            lanes.push(tx);
+        }
+        Pool { lanes, acks, handles }
+    }
+
+    fn run(&self, jobs: Vec<Job>) {
+        debug_assert!(jobs.len() <= self.lanes.len());
+        let mut sent = 0usize;
+        for (lane, job) in self.lanes.iter().zip(jobs) {
+            lane.send(job).expect("scorer pool worker gone");
+            sent += 1;
+        }
+        for _ in 0..sent {
+            self.acks.recv().expect("scorer pool ack");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // Closing the lanes ends every worker's recv loop.
+        self.lanes.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The tiled CPU scorer.
+// ---------------------------------------------------------------------------
+
+fn env_usize(var: &str) -> Option<usize> {
+    let v = std::env::var(var).ok()?;
+    match v.trim().parse::<usize>() {
+        Ok(x) if x > 0 => Some(x),
+        _ => panic!("{var} must be a positive integer, got {v:?}"),
+    }
+}
+
+/// The tiled parallel CPU instance of [`BatchScorer`]: `best` dispatches
+/// every tile across the persistent pool in one go, then reduces the
+/// per-tile `(gain, idx)` partials serially in ascending tile order —
+/// bit-identical to the serial first-maximum sweep (see module docs).
+/// Also a [`GainScorer`], so it slots into every dense-selection caller.
+pub struct TiledCpuScorer {
+    kern: &'static Kernels,
+    tile: usize,
+    threads: usize,
+    pool: Option<Pool>,
+    gains: Vec<u32>,
+    partials: Vec<(u32, u32)>,
+    stats: ScorerStats,
+}
+
+impl TiledCpuScorer {
+    /// Pool on the process-wide dispatched kernel backend with the
+    /// default tile width; tile and worker count overridable via
+    /// `GREEDIRIS_SCORER_TILE` / `GREEDIRIS_SCORER_THREADS`.
+    pub fn auto() -> Self {
+        let tile = env_usize("GREEDIRIS_SCORER_TILE").unwrap_or(DEFAULT_TILE);
+        let threads = env_usize("GREEDIRIS_SCORER_THREADS").unwrap_or_else(|| {
+            // Cap the default: the scorer runs inside rank compute
+            // threads, and past a handful of workers the sweep is
+            // memory-bound anyway.
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+        });
+        Self::new(tile, threads)
+    }
+
+    pub fn new(tile: usize, threads: usize) -> Self {
+        Self::with_kernels(kernels(), tile, threads)
+    }
+
+    /// Pool pinned to an explicit kernel backend (the property suite and
+    /// A/B benches construct this directly).
+    pub fn with_kernels(kern: &'static Kernels, tile: usize, threads: usize) -> Self {
+        let tile = tile.max(1);
+        let threads = threads.max(1);
+        let pool = (threads > 1).then(|| Pool::new(threads));
+        TiledCpuScorer {
+            kern,
+            tile,
+            threads,
+            pool,
+            gains: Vec::new(),
+            partials: Vec::new(),
+            stats: ScorerStats::default(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// This instance's lifetime dispatch counters (the process-global
+    /// accumulator the pipeline drains via [`stats_take`] sums these
+    /// across instances).
+    pub fn stats(&self) -> ScorerStats {
+        self.stats
+    }
+
+    /// The parallel whole-range dispatch + in-order partial reduction.
+    fn best_batched(
+        &mut self,
+        covers: &PackedCovers,
+        covered: &[u32],
+        selected: &[bool],
+    ) -> (usize, u32) {
+        let n = covers.n;
+        if n == 0 {
+            return (usize::MAX, 0);
+        }
+        let shape = TileShape::for_instance(n, covers.w, self.tile);
+        self.gains.clear();
+        self.gains.resize(shape.padded_n, 0);
+        self.partials.clear();
+        self.partials.resize(shape.tiles, (0, u32::MAX));
+        let workers = self.threads.min(shape.tiles).max(1);
+        let kern = self.kern;
+        let job_for = move |tiles: Range<usize>, gains: *mut u32, partials: *mut (u32, u32)| Job {
+            bits: covers.bits.as_ptr(),
+            covered: covered.as_ptr(),
+            selected: selected.as_ptr(),
+            gains,
+            partials,
+            n,
+            w: covers.w,
+            shape,
+            tiles,
+            kern,
+        };
+        let gains_ptr = self.gains.as_mut_ptr();
+        let partials_ptr = self.partials.as_mut_ptr();
+        match (&self.pool, workers > 1) {
+            (Some(pool), true) => {
+                let per = shape.tiles.div_ceil(workers);
+                let mut jobs = Vec::with_capacity(workers);
+                let mut lo = 0;
+                while lo < shape.tiles {
+                    let hi = (lo + per).min(shape.tiles);
+                    jobs.push(job_for(lo..hi, gains_ptr, partials_ptr));
+                    lo = hi;
+                }
+                pool.run(jobs);
+            }
+            _ => score_tiles(&job_for(0..shape.tiles, gains_ptr, partials_ptr)),
+        }
+        let tr = Instant::now();
+        let mut best = (usize::MAX, 0u32);
+        for &(gain, idx) in &self.partials {
+            if idx == u32::MAX {
+                continue;
+            }
+            if best.0 == usize::MAX || gain > best.1 {
+                best = (idx as usize, gain);
+            }
+        }
+        let reduce_ns = tr.elapsed().as_nanos() as u64;
+        STAT_DISPATCHES.fetch_add(1, Ordering::Relaxed);
+        STAT_TILES.fetch_add(shape.tiles as u64, Ordering::Relaxed);
+        STAT_CANDIDATES.fetch_add(n as u64, Ordering::Relaxed);
+        STAT_REDUCE_NS.fetch_add(reduce_ns, Ordering::Relaxed);
+        STAT_THREADS.fetch_max(workers as u64, Ordering::Relaxed);
+        self.stats.add(&ScorerStats {
+            dispatches: 1,
+            tiles: shape.tiles as u64,
+            candidates: n as u64,
+            reduce_s: reduce_ns as f64 * 1e-9,
+            threads: workers as u64,
+        });
+        best
+    }
+}
+
+impl BatchScorer for TiledCpuScorer {
+    fn tile(&self) -> usize {
+        self.tile
+    }
+
+    fn score_tile(
+        &mut self,
+        covers: &PackedCovers,
+        covered: &[u32],
+        selected: &[bool],
+        tile_range: Range<usize>,
+        out_gains: &mut [u32],
+    ) {
+        // One tile is one device-dispatch unit — scored serially; the
+        // pool parallelism lives a level up, across tiles in `best`.
+        debug_assert_eq!(out_gains.len(), tile_range.len());
+        let count = self.kern.and_not_count_u32;
+        for (out, i) in out_gains.iter_mut().zip(tile_range) {
+            *out = if selected[i] { 0 } else { count(covers.row(i), covered) };
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "batch-cpu"
+    }
+
+    fn pinned_kernels(&self) -> Option<&'static Kernels> {
+        Some(self.kern)
+    }
+
+    fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
+        self.best_batched(covers, covered, selected)
+    }
+}
+
+impl GainScorer for TiledCpuScorer {
+    fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
+        self.best_batched(covers, covered, selected)
+    }
+
+    fn name(&self) -> &'static str {
+        "batch-cpu"
+    }
+
+    fn pinned_kernels(&self) -> Option<&'static Kernels> {
+        Some(self.kern)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiled dense-vector argmax (the reduction baselines' inner loop).
+// ---------------------------------------------------------------------------
+
+/// First-maximum argmax over a dense count vector, reduced tile-by-tile:
+/// per-tile partials merged in ascending order with a strictly-greater
+/// rule — exactly equivalent to the serial
+/// `fold((0, 0), |acc, (v, c)| if c > acc.1 { (v, c) } else { acc })`
+/// the replicated baselines used, including the all-zero case → `(0, 0)`.
+pub fn argmax_first(counts: &[u32]) -> (usize, u32) {
+    let mut best = (0usize, 0u32);
+    for (t, chunk) in counts.chunks(DEFAULT_TILE).enumerate() {
+        let mut part = (0usize, 0u32);
+        for (j, &c) in chunk.iter().enumerate() {
+            if c > part.1 {
+                part = (j, c);
+            }
+        }
+        if part.1 > best.1 {
+            best = (t * DEFAULT_TILE + part.0, part.1);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::maxcover::bitset;
+    use crate::maxcover::SetSystem;
+
+    fn splitmix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn random_instance(seed: u64, n: usize, theta: usize) -> (PackedCovers, Vec<u32>, Vec<bool>) {
+        let mut st = seed;
+        let sets: Vec<Vec<crate::SampleId>> = (0..n)
+            .map(|_| {
+                let len = (splitmix(&mut st) % 9) as usize;
+                (0..len).map(|_| (splitmix(&mut st) % theta as u64) as u32).collect()
+            })
+            .collect();
+        let vertices: Vec<u32> = (0..n as u32).collect();
+        let sys = SetSystem::from_sets(theta, vertices, &sets);
+        let p = PackedCovers::from_sets(sys.view());
+        let mut covered = vec![0u32; p.w];
+        for wd in covered.iter_mut() {
+            *wd = (splitmix(&mut st) & 0x1111_2222) as u32;
+        }
+        let selected: Vec<bool> = (0..n).map(|_| splitmix(&mut st) % 5 == 0).collect();
+        (p, covered, selected)
+    }
+
+    #[test]
+    fn tile_shape_pads_to_tile_boundary() {
+        let s = TileShape::for_instance(130, 4, 64);
+        assert_eq!(s.tiles, 3);
+        assert_eq!(s.padded_n, 192);
+        assert_eq!(s.rows(0, 130), 0..64);
+        assert_eq!(s.rows(2, 130), 128..130);
+        // n = 0 still yields one (empty) tile so scratch stays sized.
+        let z = TileShape::for_instance(0, 4, 64);
+        assert_eq!(z.tiles, 1);
+        assert_eq!(z.rows(0, 0), 0..0);
+    }
+
+    #[test]
+    fn tiled_best_matches_serial_across_tiles_and_threads() {
+        for seed in 0..6u64 {
+            let n = 100 + (seed as usize) * 37;
+            let (p, covered, selected) = random_instance(seed * 77 + 1, n, 200);
+            let reference =
+                GainScorer::best(&mut KernelScorer::auto(), &p, &covered, &selected);
+            for tile in [1usize, 7, 64, n] {
+                for threads in [1usize, 2, 8] {
+                    let mut s = TiledCpuScorer::new(tile, threads);
+                    let got = GainScorer::best(&mut s, &p, &covered, &selected);
+                    assert_eq!(
+                        got, reference,
+                        "tile {tile} threads {threads} seed {seed}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_best_all_selected_and_empty() {
+        let (p, covered, _) = random_instance(3, 40, 100);
+        let selected = vec![true; p.n];
+        let mut s = TiledCpuScorer::new(7, 2);
+        assert_eq!(GainScorer::best(&mut s, &p, &covered, &selected), (usize::MAX, 0));
+        let empty = PackedCovers { n: 0, w: 1, bits: vec![], vertices: vec![], theta: 32 };
+        assert_eq!(GainScorer::best(&mut s, &empty, &[0u32], &[]), (usize::MAX, 0));
+    }
+
+    #[test]
+    fn tiled_best_prefers_first_maximum_on_ties() {
+        // Rows 1 and 5 tie; the serial contract picks row 1. Use tile=2
+        // so the tie crosses a tile boundary.
+        let sets: Vec<Vec<u32>> = vec![
+            vec![0],
+            vec![1, 2, 3],
+            vec![4],
+            vec![],
+            vec![5],
+            vec![6, 7, 8],
+        ];
+        let sys = SetSystem::from_sets(32, (0..6).collect(), &sets);
+        let p = PackedCovers::from_sets(sys.view());
+        let covered = vec![0u32; p.w];
+        let selected = vec![false; p.n];
+        let mut s = TiledCpuScorer::new(2, 2);
+        assert_eq!(GainScorer::best(&mut s, &p, &covered, &selected), (1, 3));
+    }
+
+    #[test]
+    fn tiled_backends_match_across_kernel_tiers() {
+        let (p, covered, selected) = random_instance(11, 300, 500);
+        let reference = GainScorer::best(&mut KernelScorer::auto(), &p, &covered, &selected);
+        for kern in bitset::all_available() {
+            let mut s = TiledCpuScorer::with_kernels(kern, 64, 4);
+            assert_eq!(
+                GainScorer::best(&mut s, &p, &covered, &selected),
+                reference,
+                "backend {}",
+                kern.name
+            );
+        }
+    }
+
+    #[test]
+    fn dispatch_bumps_counters() {
+        // Asserted on the per-instance mirror — the process-global twin
+        // is drained concurrently by pipeline tests in this binary.
+        let (p, covered, selected) = random_instance(5, 150, 128);
+        let mut s = TiledCpuScorer::new(64, 2);
+        assert!(s.stats().is_zero());
+        let _ = GainScorer::best(&mut s, &p, &covered, &selected);
+        let st = s.stats();
+        assert_eq!(st.dispatches, 1);
+        assert_eq!(st.tiles, 3); // ceil(150/64)
+        assert_eq!(st.candidates, 150);
+        assert_eq!(st.threads, 2);
+        let _ = GainScorer::best(&mut s, &p, &covered, &selected);
+        assert_eq!(s.stats().dispatches, 2);
+        assert!((s.stats().candidates_per_dispatch() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scorer_kind_parses_and_dispatches() {
+        assert_eq!(ScorerKind::parse("auto").unwrap(), ScorerKind::Auto);
+        assert_eq!(ScorerKind::parse("scalar").unwrap(), ScorerKind::Scalar);
+        assert_eq!(ScorerKind::parse("batch").unwrap(), ScorerKind::Batch);
+        assert!(ScorerKind::parse("gpu").is_err());
+        assert!(!ScorerKind::Scalar.picks_batch(1 << 20));
+        assert!(ScorerKind::Batch.picks_batch(1));
+        assert!(!ScorerKind::Auto.picks_batch(BATCH_AUTO_THRESHOLD - 1));
+        assert!(ScorerKind::Auto.picks_batch(BATCH_AUTO_THRESHOLD));
+        assert_eq!(make_scorer(ScorerKind::Batch, 10).name(), "batch-cpu");
+        assert_ne!(make_scorer(ScorerKind::Scalar, 1 << 20).name(), "batch-cpu");
+        assert_eq!(make_scorer(ScorerKind::Auto, BATCH_AUTO_THRESHOLD).name(), "batch-cpu");
+    }
+
+    #[test]
+    fn argmax_first_matches_serial_fold() {
+        let mut st = 42u64;
+        for len in [0usize, 1, 5, 64, 65, 200, 1000] {
+            let counts: Vec<u32> =
+                (0..len).map(|_| (splitmix(&mut st) % 7) as u32).collect();
+            let folded = counts
+                .iter()
+                .enumerate()
+                .fold((0usize, 0u32), |acc, (v, &c)| if c > acc.1 { (v, c) } else { acc });
+            assert_eq!(argmax_first(&counts), folded, "len {len}");
+        }
+        assert_eq!(argmax_first(&[]), (0, 0));
+        assert_eq!(argmax_first(&[0, 0, 0]), (0, 0));
+    }
+}

@@ -67,6 +67,73 @@ pub trait GainScorer {
     }
 }
 
+/// Batched gain scoring: the unit of dispatch is a *tile* of candidate
+/// rows, not one row — the interface shape a device backend (PJRT/GPU)
+/// wants, with the tiled CPU pool of [`super::batch::TiledCpuScorer`] as
+/// the first instance.
+///
+/// ## Contract
+///
+/// `score_tile` writes one gain per candidate in `tile_range` into
+/// `out_gains` (`out_gains.len() == tile_range.len()`): the marginal
+/// `and_not_count(row_i, covered)` for unselected rows, `0` for selected
+/// rows (backends may skip them). The provided [`BatchScorer::best`]
+/// dispatches tiles in ascending order and reduces with the exact
+/// first-maximum rule of [`KernelScorer`] — skip selected rows, take a
+/// later candidate only on a *strictly* greater gain — so for any tile
+/// size the argmax (index **and** gain) is bit-identical to the serial
+/// sweep. Backends that override `best` (the tiled pool does, to reduce
+/// per-tile partials) must preserve that equivalence; `tests/scorer.rs`
+/// pins it across tile sizes × thread counts × kernel tiers.
+pub trait BatchScorer {
+    /// Candidates per dispatch tile (≥ 1).
+    fn tile(&self) -> usize;
+
+    /// Scores the candidates in `tile_range` against `covered`, writing
+    /// `out_gains[j]` for row `tile_range.start + j` (0 for selected rows).
+    fn score_tile(
+        &mut self,
+        covers: &PackedCovers,
+        covered: &[u32],
+        selected: &[bool],
+        tile_range: std::ops::Range<usize>,
+        out_gains: &mut [u32],
+    );
+
+    /// Human-readable backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// See [`GainScorer::pinned_kernels`].
+    fn pinned_kernels(&self) -> Option<&'static Kernels> {
+        None
+    }
+
+    /// First-maximum argmax over all candidates, built from tile
+    /// dispatch. Bit-identical to [`KernelScorer`]'s serial sweep.
+    fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
+        let tile = self.tile().max(1);
+        let mut gains = vec![0u32; tile];
+        let mut best = (usize::MAX, 0u32);
+        let mut lo = 0;
+        while lo < covers.n {
+            let hi = (lo + tile).min(covers.n);
+            let out = &mut gains[..hi - lo];
+            self.score_tile(covers, covered, selected, lo..hi, out);
+            for (j, &gain) in out.iter().enumerate() {
+                let i = lo + j;
+                if selected[i] {
+                    continue;
+                }
+                if best.0 == usize::MAX || gain > best.1 {
+                    best = (i, gain);
+                }
+            }
+            lo = hi;
+        }
+        best
+    }
+}
+
 /// CPU scorer parameterized by an explicit [`Kernels`] backend — the
 /// vectorized row sweep `gains[i] = and_not_count_u32(row_i, covered)`
 /// with first-maximum argmax. [`CpuScorer`] is the auto-dispatched
@@ -113,6 +180,46 @@ impl GainScorer for KernelScorer {
     }
 }
 
+/// [`KernelScorer`] as a batched backend: one serial kernel sweep per
+/// tile. This is the scalar *reference instance* of the batched contract
+/// — `tests/scorer.rs` compares every real batched backend against it —
+/// and the delegate the non-`xla` [`crate::runtime::XlaScorer`] stub
+/// scores through.
+impl BatchScorer for KernelScorer {
+    fn tile(&self) -> usize {
+        DEFAULT_TILE
+    }
+
+    fn score_tile(
+        &mut self,
+        covers: &PackedCovers,
+        covered: &[u32],
+        selected: &[bool],
+        tile_range: std::ops::Range<usize>,
+        out_gains: &mut [u32],
+    ) {
+        debug_assert_eq!(out_gains.len(), tile_range.len());
+        let count = self.kern.and_not_count_u32;
+        for (out, i) in out_gains.iter_mut().zip(tile_range) {
+            *out = if selected[i] { 0 } else { count(covers.row(i), covered) };
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        self.kern.name
+    }
+
+    fn pinned_kernels(&self) -> Option<&'static Kernels> {
+        Some(self.kern)
+    }
+}
+
+/// Default dispatch-tile width: matches the smallest device shape bucket's
+/// row granularity and the acceptance bar "≥ 64 candidate marginals per
+/// dispatch" — large enough to amortize dispatch overhead, small enough
+/// that tiny instances still shard across threads.
+pub const DEFAULT_TILE: usize = 64;
+
 /// Native CPU scorer on the dispatched [`Kernels`] backend (scalar u64-pair
 /// popcounts on the baseline, AVX2 nibble-shuffle popcounts when detected,
 /// the `simd`-feature wide path otherwise).
@@ -121,7 +228,7 @@ pub struct CpuScorer;
 
 impl GainScorer for CpuScorer {
     fn best(&mut self, covers: &PackedCovers, covered: &[u32], selected: &[bool]) -> (usize, u32) {
-        KernelScorer::auto().best(covers, covered, selected)
+        GainScorer::best(&mut KernelScorer::auto(), covers, covered, selected)
     }
 
     fn name(&self) -> &'static str {
@@ -258,9 +365,40 @@ mod tests {
         let selected = vec![false; p.n];
         let reference = CpuScorer.best(&p, &covered, &selected);
         for kern in crate::maxcover::bitset::all_available() {
-            let got = KernelScorer::with_kernels(kern).best(&p, &covered, &selected);
+            let got =
+                GainScorer::best(&mut KernelScorer::with_kernels(kern), &p, &covered, &selected);
             assert_eq!(got, reference, "backend {}", kern.name);
         }
+    }
+
+    #[test]
+    fn batch_scorer_default_best_matches_serial_sweep() {
+        let p = PackedCovers::from_sets(tiny_system().view());
+        let covered = pack_mask(40, &[2, 3, 33]);
+        let selected = vec![false; p.n];
+        let reference = GainScorer::best(&mut CpuScorer, &p, &covered, &selected);
+        let got = BatchScorer::best(&mut KernelScorer::auto(), &p, &covered, &selected);
+        assert_eq!(got, reference);
+    }
+
+    #[test]
+    fn batch_scorer_score_tile_zeroes_selected_rows() {
+        let p = PackedCovers::from_sets(tiny_system().view());
+        let covered = vec![0u32; p.w];
+        let mut selected = vec![false; p.n];
+        selected[1] = true;
+        let mut gains = vec![u32::MAX; p.n];
+        KernelScorer::auto().score_tile(&p, &covered, &selected, 0..p.n, &mut gains);
+        assert_eq!(gains, vec![4, 0, 5]);
+    }
+
+    #[test]
+    fn batch_scorer_all_selected_returns_sentinel() {
+        let p = PackedCovers::from_sets(tiny_system().view());
+        let covered = vec![0u32; p.w];
+        let selected = vec![true; p.n];
+        let got = BatchScorer::best(&mut KernelScorer::auto(), &p, &covered, &selected);
+        assert_eq!(got, (usize::MAX, 0));
     }
 
     #[test]

@@ -130,6 +130,106 @@ pub fn lazy_greedy_max_cover(sys: SetSystemView<'_>, k: usize) -> CoverSolution 
     lazy_greedy_stream(sys, k, |_| {})
 }
 
+/// Default invalidated-frontier width for [`lazy_greedy_stream_batched`]:
+/// how many stale heap entries are popped and re-scored per wave.
+pub const FRONTIER: usize = 16;
+
+/// [`lazy_greedy_stream`] with batched frontier re-evaluation (PR 9):
+/// instead of recomputing one stale candidate per heap pop, each wave
+/// pops up to `frontier` entries, refreshes all their marginal gains in
+/// one batch (the shape a batched scoring backend wants), and selects
+/// the refreshed first-maximum iff it dominates the remaining heap top.
+///
+/// ## Why the output is identical to the serial path
+///
+/// Heap keys are stale upper bounds (submodularity), and the wave's
+/// refreshed gains are *current* true gains — still upper bounds on any
+/// future evaluation. The wave's first-maximum `b` is selected only when
+/// `b.gain > next.gain`, or `b.gain == next.gain && b.idx < next.idx`,
+/// for the remaining heap top `next`: every un-popped candidate's true
+/// gain is ≤ its key ≤ `next.gain`, and any candidate tying `next.gain`
+/// has a higher index than `next` (heap order), hence than `b` — so `b`
+/// is exactly the global first-maximum the standard greedy picks.
+/// Unchosen refreshed entries are pushed back with their tighter keys,
+/// which never changes subsequent argmaxes. A dominant zero gain ends
+/// the run (every remaining true gain is zero too). Pinned against
+/// [`lazy_greedy_stream`] across frontier widths in the tests below.
+pub fn lazy_greedy_stream_batched(
+    sys: SetSystemView<'_>,
+    k: usize,
+    frontier: usize,
+    mut emit: impl FnMut(SelectEvent<'_>),
+) -> CoverSolution {
+    let frontier = frontier.max(1);
+    let mut covered = BitCover::new(sys.theta);
+    let mut heap: BinaryHeap<HeapEntry> = (0..sys.len())
+        .map(|i| HeapEntry { gain: sys.set(i).len() as u32, idx: i as u32 })
+        .collect();
+    let mut sol = CoverSolution::default();
+    let mut residual: Vec<SampleId> = Vec::new();
+    let runs = MaskedRuns::from_view(sys);
+    let mut wave: Vec<HeapEntry> = Vec::with_capacity(frontier);
+    while sol.len() < k {
+        wave.clear();
+        while wave.len() < frontier {
+            let Some(top) = heap.pop() else { break };
+            wave.push(top);
+        }
+        if wave.is_empty() {
+            break;
+        }
+        // Batched refresh of the whole invalidated frontier.
+        for e in wave.iter_mut() {
+            let (rw, rm) = runs.run(e.idx as usize);
+            e.gain = covered.count_new_masked(rw, rm);
+        }
+        // First maximum among the refreshed wave (ties → lower index).
+        let mut b = 0usize;
+        for j in 1..wave.len() {
+            let (e, cur) = (&wave[j], &wave[b]);
+            if e.gain > cur.gain || (e.gain == cur.gain && e.idx < cur.idx) {
+                b = j;
+            }
+        }
+        let best = wave.swap_remove(b);
+        let select = match heap.peek() {
+            None => true,
+            Some(next) => {
+                best.gain > next.gain || (best.gain == next.gain && best.idx < next.idx)
+            }
+        };
+        // Unchosen refreshed entries go back with their tighter keys.
+        for e in wave.drain(..) {
+            heap.push(e);
+        }
+        if !select {
+            heap.push(best);
+            continue;
+        }
+        if best.gain == 0 {
+            break;
+        }
+        let i = best.idx as usize;
+        residual.clear();
+        for &id in sys.set(i) {
+            if !covered.contains(id) {
+                residual.push(id);
+            }
+        }
+        debug_assert_eq!(residual.len() as u32, best.gain);
+        covered.insert_all(&residual);
+        emit(SelectEvent {
+            order: sol.len(),
+            idx: i,
+            vertex: sys.vertex(i),
+            gain: best.gain,
+            residual: &residual,
+        });
+        sol.push(sys.vertex(i), best.gain);
+    }
+    sol
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +317,46 @@ mod tests {
             assert_eq!(a.seeds, b.seeds, "seed {seed}");
             assert_eq!(a.coverage, b.coverage, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn batched_frontier_is_bit_identical_to_serial() {
+        for seed in 0..20u64 {
+            let mut rng = Xoshiro256pp::seeded(seed.wrapping_mul(31) + 7);
+            let theta = 160;
+            let sets: Vec<Vec<u32>> = (0..45)
+                .map(|_| {
+                    let len = rng.gen_range(14) as usize;
+                    let mut v: Vec<u32> =
+                        (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect();
+            let s = sys(theta, sets);
+            let mut serial_events: Vec<(usize, usize, Vertex, u32, Vec<u32>)> = Vec::new();
+            let a = lazy_greedy_stream(s.view(), 12, |e| {
+                serial_events.push((e.order, e.idx, e.vertex, e.gain, e.residual.to_vec()))
+            });
+            for frontier in [1usize, 3, FRONTIER, 1000] {
+                let mut events: Vec<(usize, usize, Vertex, u32, Vec<u32>)> = Vec::new();
+                let b = lazy_greedy_stream_batched(s.view(), 12, frontier, |e| {
+                    events.push((e.order, e.idx, e.vertex, e.gain, e.residual.to_vec()))
+                });
+                assert_eq!(a.seeds, b.seeds, "seed {seed} frontier {frontier}");
+                assert_eq!(a.gains, b.gains, "seed {seed} frontier {frontier}");
+                assert_eq!(a.coverage, b.coverage, "seed {seed} frontier {frontier}");
+                assert_eq!(serial_events, events, "seed {seed} frontier {frontier}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_frontier_stops_at_zero_gain() {
+        let s = sys(3, vec![vec![0, 1, 2], vec![0], vec![1, 2]]);
+        let sol = lazy_greedy_stream_batched(s.view(), 3, FRONTIER, |_| {});
+        assert_eq!(sol.seeds, vec![0]);
     }
 
     #[test]

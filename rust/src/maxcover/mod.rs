@@ -19,16 +19,25 @@
 //! - [`dense::PackedCovers`] + [`dense::GainScorer`] — the packed-bitmap
 //!   scoring hot path shared by the native CPU backend and the AOT-compiled
 //!   XLA/Pallas backend ([`crate::runtime`]).
+//! - [`dense::BatchScorer`] + [`batch::TiledCpuScorer`] — the batched
+//!   scoring layer (PR 9): many candidate marginals per dispatch in
+//!   padded [`batch::TileShape`] tiles, sharded across a persistent
+//!   thread pool with a deterministic in-order first-maximum reduction
+//!   (bit-identical argmaxes to the serial sweep for every tile size /
+//!   thread count / kernel tier). Callers pick a backend via
+//!   [`batch::ScorerKind`] (`--scorer auto|scalar|batch`); the same
+//!   trait is the drop-in surface for a PJRT/GPU backend.
 //! - [`bitset`] — the shared vectorized bitmap kernel layer (scalar / AVX2
 //!   runtime-dispatch / `simd`-feature wide lanes) every popcount consumer
-//!   above is built on: streaming admission, dense CPU scoring, and the
-//!   lazy/threshold re-evaluation sweeps.
+//!   above is built on: streaming admission, dense CPU scoring, the
+//!   lazy/threshold re-evaluation sweeps, and the batched tile workers.
 //!
 //! All sparse solvers consume the borrowed CSR view
 //! [`coverage::SetSystemView`]; rank state accumulates shuffled covering
 //! sets in the flat [`coverage::InvertedIndex`] and lends it out without
 //! cloning (see the data-path invariants in [`crate`] docs).
 
+pub mod batch;
 pub mod bitset;
 pub mod coverage;
 pub mod dense;
@@ -38,17 +47,18 @@ pub mod stochastic;
 pub mod streaming;
 pub mod threshold;
 
+pub use batch::{make_scorer, ScorerKind, TileShape, TiledCpuScorer, BATCH_AUTO_THRESHOLD};
 pub use bitset::{kernels, Kernels, MaskedRuns, OfferMask};
 pub use coverage::{BitCover, InvertedIndex, SetSystem, SetSystemView};
 pub use dense::{
-    dense_greedy_max_cover, dense_greedy_max_cover_stream, CpuScorer, GainScorer, KernelScorer,
-    PackedCovers,
+    dense_greedy_max_cover, dense_greedy_max_cover_stream, BatchScorer, CpuScorer, GainScorer,
+    KernelScorer, PackedCovers, DEFAULT_TILE,
 };
 pub use greedy::greedy_max_cover;
 pub use lazy::lazy_greedy_max_cover;
 pub use stochastic::stochastic_greedy_max_cover;
 pub use streaming::StreamingMaxCover;
-pub use threshold::threshold_greedy_max_cover;
+pub use threshold::{threshold_greedy_max_cover, threshold_greedy_max_cover_tiled};
 
 use crate::Vertex;
 

@@ -9,6 +9,7 @@
 
 use super::bitset::MaskedRuns;
 use super::coverage::{BitCover, SetSystemView};
+use super::dense::DEFAULT_TILE;
 use super::CoverSolution;
 
 /// Runs threshold greedy with accuracy parameter `eps ∈ (0, 1)`.
@@ -17,9 +18,36 @@ use super::CoverSolution;
 /// candidate is re-scored once per τ level), so the covering runs are
 /// pre-packed once into [`MaskedRuns`] and each marginal gain is a single
 /// vectorized gather-AND-NOT-popcount over the touched words instead of a
-/// per-id bit probe.
+/// per-id bit probe. Delegates to the tiled sweep at the default tile
+/// width (PR 9); `tile = 1` reproduces the original candidate-at-a-time
+/// sweep exactly.
 pub fn threshold_greedy_max_cover(sys: SetSystemView<'_>, k: usize, eps: f64) -> CoverSolution {
+    threshold_greedy_max_cover_tiled(sys, k, eps, DEFAULT_TILE)
+}
+
+/// Threshold greedy with a tiled re-evaluation sweep: each τ level scores
+/// a whole tile of candidates against the covered state *at tile entry*
+/// in one batch (the shape a batched scoring backend wants), then walks
+/// the tile in order.
+///
+/// ## Why the output is identical for every tile width
+///
+/// The batched pre-score is an upper bound on the candidate's gain at its
+/// serial visit time (covered only grows within the tile), so a
+/// pre-score below τ — or zero — is a sound skip: the serial sweep would
+/// not have selected that candidate either. A candidate whose pre-score
+/// clears τ is re-scored fresh iff a selection happened since the tile
+/// scan (`dirty`); when nothing was selected the pre-score *is* the
+/// fresh value. Selections therefore happen at exactly the serial
+/// sweep's candidates and gains — pinned across tile widths below.
+pub fn threshold_greedy_max_cover_tiled(
+    sys: SetSystemView<'_>,
+    k: usize,
+    eps: f64,
+    tile: usize,
+) -> CoverSolution {
     assert!(eps > 0.0 && eps < 1.0);
+    let tile = tile.max(1).min(sys.len().max(1));
     let mut covered = BitCover::new(sys.theta);
     let mut selected = vec![false; sys.len()];
     let mut sol = CoverSolution::default();
@@ -28,21 +56,47 @@ pub fn threshold_greedy_max_cover(sys: SetSystemView<'_>, k: usize, eps: f64) ->
         return sol;
     }
     let runs = MaskedRuns::from_view(sys);
+    let mut pre = vec![0u32; tile];
     // Sweep until τ < ε·d/n (the tail contributes ≤ ε·OPT in total).
     let floor = eps * d / sys.len().max(1) as f64;
     let mut tau = d;
     while tau >= floor && sol.len() < k {
-        for i in 0..sys.len() {
-            if selected[i] || sol.len() >= k {
-                continue;
+        let mut lo = 0;
+        while lo < sys.len() && sol.len() < k {
+            let hi = (lo + tile).min(sys.len());
+            // Batched tile pre-score against covered-at-tile-entry.
+            for i in lo..hi {
+                pre[i - lo] = if selected[i] {
+                    0
+                } else {
+                    let (rw, rm) = runs.run(i);
+                    covered.count_new_masked(rw, rm)
+                };
             }
-            let (rw, rm) = runs.run(i);
-            let gain = covered.count_new_masked(rw, rm);
-            if gain as f64 >= tau && gain > 0 {
-                selected[i] = true;
-                covered.insert_masked(rw, rm);
-                sol.push(sys.vertex(i), gain);
+            let mut dirty = false;
+            for i in lo..hi {
+                if selected[i] || sol.len() >= k {
+                    continue;
+                }
+                let mut gain = pre[i - lo];
+                if gain == 0 || (gain as f64) < tau {
+                    // Upper bound already below τ — the serial sweep
+                    // would skip this candidate too.
+                    continue;
+                }
+                if dirty {
+                    let (rw, rm) = runs.run(i);
+                    gain = covered.count_new_masked(rw, rm);
+                }
+                if gain as f64 >= tau && gain > 0 {
+                    let (rw, rm) = runs.run(i);
+                    selected[i] = true;
+                    covered.insert_masked(rw, rm);
+                    sol.push(sys.vertex(i), gain);
+                    dirty = true;
+                }
             }
+            lo = hi;
         }
         tau *= 1.0 - eps;
     }
@@ -115,6 +169,37 @@ mod tests {
             }
         }
         assert!(worse <= 3, "tight eps should rarely lose ({worse}/20)");
+    }
+
+    #[test]
+    fn tiled_sweep_is_bit_identical_across_tile_widths() {
+        // tile = 1 degenerates to the original candidate-at-a-time sweep
+        // (every pre-score is fresh, dirty never matters); wider tiles must
+        // reproduce it exactly — seeds, gains, and coverage.
+        for seed in 0..20u64 {
+            let sys = random_system(seed + 300, 90, 350);
+            for &(k, eps) in &[(6usize, 0.3f64), (12, 0.1), (90, 0.05)] {
+                let serial = threshold_greedy_max_cover_tiled(sys.view(), k, eps, 1);
+                for tile in [7usize, 64, usize::MAX] {
+                    let tiled = threshold_greedy_max_cover_tiled(sys.view(), k, eps, tile);
+                    assert_eq!(
+                        tiled, serial,
+                        "seed {seed} k {k} eps {eps} tile {tile} diverged"
+                    );
+                }
+                // The public entry point delegates at DEFAULT_TILE.
+                assert_eq!(threshold_greedy_max_cover(sys.view(), k, eps), serial);
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_sweep_handles_degenerate_tiles() {
+        let empty = SetSystem::new(4);
+        assert!(threshold_greedy_max_cover_tiled(empty.view(), 3, 0.1, 0).is_empty());
+        let one = SetSystem::from_sets(4, vec![9], &[vec![0, 1]]);
+        let sol = threshold_greedy_max_cover_tiled(one.view(), 3, 0.1, 0);
+        assert_eq!(sol.seeds, vec![9]);
     }
 
     #[test]

@@ -167,6 +167,66 @@ impl fmt::Display for WireStats {
     }
 }
 
+/// Batched-scorer dispatch counters (PR 9): how the tiled
+/// [`maxcover::batch`](crate::maxcover::batch) backend carved candidate
+/// sweeps into device-shaped tiles. Zero when every selection ran the
+/// serial scalar sweep — the CLI only prints the `scorer:` line when a
+/// batched dispatch actually fired. Like [`FaultStats`]/[`WireStats`],
+/// these ride inside [`Breakdown`] without contributing to
+/// [`Breakdown::total`]: they describe the scoring backend, not the
+/// modeled critical path.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ScorerStats {
+    /// Batched `best` dispatches (one per greedy step routed to the pool).
+    pub dispatches: u64,
+    /// Candidate tiles scored across all dispatches.
+    pub tiles: u64,
+    /// Candidate marginals evaluated across all dispatches.
+    pub candidates: u64,
+    /// Seconds spent in the serial in-order partial reduction.
+    pub reduce_s: f64,
+    /// Peak worker count a dispatch sharded across.
+    pub threads: u64,
+}
+
+impl ScorerStats {
+    pub fn is_zero(&self) -> bool {
+        *self == ScorerStats::default()
+    }
+
+    /// Mean candidate marginals per dispatch (0.0 when nothing dispatched).
+    pub fn candidates_per_dispatch(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.candidates as f64 / self.dispatches as f64
+        }
+    }
+
+    pub fn add(&mut self, o: &ScorerStats) {
+        self.dispatches += o.dispatches;
+        self.tiles += o.tiles;
+        self.candidates += o.candidates;
+        self.reduce_s += o.reduce_s;
+        self.threads = self.threads.max(o.threads);
+    }
+}
+
+impl fmt::Display for ScorerStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} dispatches | {} tiles | {} candidates | {:.1} cand/dispatch | reduce {:.4}s | {} threads",
+            self.dispatches,
+            self.tiles,
+            self.candidates,
+            self.candidates_per_dispatch(),
+            self.reduce_s,
+            self.threads
+        )
+    }
+}
+
 /// Simulated-time breakdown of one InfMax run (accumulated across
 /// martingale rounds). All values are seconds of *critical-path* time
 /// attributable to the phase, per the paper's Fig. 4 methodology:
@@ -195,6 +255,8 @@ pub struct Breakdown {
     pub fabric: FaultStats,
     /// Socket send-path counters (PR 8).
     pub wire: WireStats,
+    /// Batched-scorer dispatch counters (PR 9).
+    pub scorer: ScorerStats,
 }
 
 impl Breakdown {
@@ -220,6 +282,7 @@ impl Breakdown {
         self.overlap.add(&other.overlap);
         self.fabric.add(&other.fabric);
         self.wire.add(&other.wire);
+        self.scorer.add(&other.scorer);
     }
 }
 
@@ -377,6 +440,27 @@ mod tests {
         assert_eq!(b.total(), 0.0, "wire counters do not inflate the phase total");
         let s = format!("{a}");
         assert!(s.contains("4 sends") && s.contains("3 raw-relayed") && s.contains("40.0 B/send"), "{s}");
+    }
+
+    #[test]
+    fn scorer_stats_accumulate_without_inflating_total() {
+        let mut a = ScorerStats { dispatches: 2, tiles: 6, candidates: 128, threads: 4, ..Default::default() };
+        assert!(!a.is_zero());
+        assert!(ScorerStats::default().is_zero());
+        assert_eq!(a.candidates_per_dispatch(), 64.0);
+        assert_eq!(ScorerStats::default().candidates_per_dispatch(), 0.0);
+        a.add(&ScorerStats { dispatches: 2, tiles: 2, candidates: 72, reduce_s: 0.25, threads: 2, ..Default::default() });
+        assert_eq!(a.dispatches, 4);
+        assert_eq!(a.tiles, 8);
+        assert_eq!(a.candidates, 200);
+        assert_eq!(a.reduce_s, 0.25);
+        assert_eq!(a.threads, 4, "threads is a peak, not a sum");
+        let mut b = Breakdown::default();
+        b.add(&Breakdown { scorer: a, ..Default::default() });
+        assert_eq!(b.scorer.dispatches, 4);
+        assert_eq!(b.total(), 0.0, "scorer counters do not inflate the phase total");
+        let s = format!("{a}");
+        assert!(s.contains("4 dispatches") && s.contains("50.0 cand/dispatch"), "{s}");
     }
 
     #[test]

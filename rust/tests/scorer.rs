@@ -1,0 +1,205 @@
+//! Property suite for the batched scoring layer (PR 9): the tiled
+//! parallel backend ([`TiledCpuScorer`]) must be **bit-identical** to the
+//! serial per-candidate sweep ([`CpuScorer`] / [`KernelScorer`]) — argmax
+//! index AND gain — for every tile size × thread count × kernel tier,
+//! including the degenerate shapes a device-padded layout is most likely
+//! to get wrong: ties across tile boundaries, all-selected instances,
+//! zero-gain rows, and lane-tail word counts where `theta` is not a
+//! multiple of the 32-bit packing word.
+
+use greediris::maxcover::bitset;
+use greediris::maxcover::{
+    dense_greedy_max_cover, make_scorer, BatchScorer, CpuScorer, GainScorer, KernelScorer,
+    PackedCovers, ScorerKind, SetSystem, TiledCpuScorer,
+};
+use greediris::rng::Xoshiro256pp;
+
+const TILES: [usize; 4] = [1, 7, 64, usize::MAX];
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// A random instance with controllable universe size (`theta`); lane
+/// tails are exercised by passing a theta that is not a multiple of 32.
+fn random_instance(
+    seed: u64,
+    n: usize,
+    theta: usize,
+    max_len: u64,
+) -> (PackedCovers, Vec<u32>, Vec<bool>) {
+    let mut rng = Xoshiro256pp::seeded(seed);
+    let sets: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = rng.gen_range(max_len) as usize;
+            let mut v: Vec<u32> =
+                (0..len).map(|_| rng.gen_range(theta as u64) as u32).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        })
+        .collect();
+    let sys = SetSystem::from_sets(theta, (0..n as u32).collect(), &sets);
+    let covers = PackedCovers::from_sets(sys.view());
+    let mut covered = vec![0u32; covers.w];
+    for w in covered.iter_mut() {
+        *w = rng.gen_range(u64::from(u32::MAX)) as u32 & 0x3333_0F0F;
+    }
+    let selected: Vec<bool> = (0..n).map(|_| rng.gen_range(4) == 0).collect();
+    (covers, covered, selected)
+}
+
+fn clamp_tile(tile: usize, n: usize) -> usize {
+    if tile == usize::MAX { n.max(1) } else { tile }
+}
+
+/// The core property: every (tile, threads, kernel) combination returns
+/// the serial scorer's exact `(idx, gain)` pair.
+#[test]
+fn batched_argmax_is_bit_identical_to_serial() {
+    for seed in 0..8u64 {
+        // theta = 100/250/333… — mostly NOT multiples of 32, so the last
+        // packing word has a ragged lane tail.
+        let n = 60 + seed as usize * 45;
+        let theta = 100 + seed as usize * 77;
+        let (covers, covered, selected) = random_instance(seed, n, theta, 12);
+        let want = CpuScorer.best(&covers, &covered, &selected);
+        for kern in bitset::all_available() {
+            let serial = GainScorer::best(
+                &mut KernelScorer::with_kernels(kern),
+                &covers,
+                &covered,
+                &selected,
+            );
+            assert_eq!(serial, want, "serial tier {} diverges", kern.name);
+            for tile in TILES {
+                for threads in THREADS {
+                    let mut s =
+                        TiledCpuScorer::with_kernels(kern, clamp_tile(tile, n), threads);
+                    let got = GainScorer::best(&mut s, &covers, &covered, &selected);
+                    assert_eq!(
+                        got, want,
+                        "seed {seed} tier {} tile {tile} threads {threads}",
+                        kern.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Ties must resolve to the lowest row index on every backend, even when
+/// the tying rows land in different tiles (and therefore on different
+/// worker threads).
+#[test]
+fn ties_resolve_to_first_maximum_across_tile_boundaries() {
+    // Rows 3, 65, 130 all gain exactly 4; row 3 must win everywhere.
+    let mut sets: Vec<Vec<u32>> = (0..140).map(|i| vec![(i % 64) as u32]).collect();
+    for &r in &[3usize, 65, 130] {
+        sets[r] = vec![100, 101, 102, 103];
+    }
+    let sys = SetSystem::from_sets(200, (0..140).collect(), &sets);
+    let covers = PackedCovers::from_sets(sys.view());
+    // Cover the first 64 universe elements so the filler rows gain 0 and
+    // zero-gain rows are exercised alongside the tie.
+    let mut covered = vec![0u32; covers.w];
+    covered[0] = u32::MAX;
+    covered[1] = u32::MAX;
+    let selected = vec![false; covers.n];
+    let want = CpuScorer.best(&covers, &covered, &selected);
+    assert_eq!(want, (3, 4));
+    for tile in TILES {
+        for threads in THREADS {
+            let mut s = TiledCpuScorer::new(clamp_tile(tile, covers.n), threads);
+            assert_eq!(
+                GainScorer::best(&mut s, &covers, &covered, &selected),
+                want,
+                "tile {tile} threads {threads}"
+            );
+        }
+    }
+}
+
+/// All-selected and fully-covered (all-zero-gain) instances: the batched
+/// backend must return the serial sentinel/first-row answers, never a
+/// padded phantom candidate.
+#[test]
+fn degenerate_instances_match_serial() {
+    let (covers, covered, _) = random_instance(21, 100, 130, 10);
+    let all_sel = vec![true; covers.n];
+    let full_cover = vec![u32::MAX; covers.w];
+    let none_sel = vec![false; covers.n];
+    for tile in TILES {
+        for threads in THREADS {
+            let mut s = TiledCpuScorer::new(clamp_tile(tile, covers.n), threads);
+            // All selected → (usize::MAX, 0).
+            assert_eq!(
+                GainScorer::best(&mut s, &covers, &covered, &all_sel),
+                (usize::MAX, 0),
+                "all-selected tile {tile} threads {threads}"
+            );
+            // Universe fully covered → every gain 0; serial picks row 0.
+            assert_eq!(
+                GainScorer::best(&mut s, &covers, &full_cover, &none_sel),
+                CpuScorer.best(&covers, &full_cover, &none_sel),
+                "zero-gain tile {tile} threads {threads}"
+            );
+        }
+    }
+}
+
+/// `score_tile` is the per-candidate ground truth `best` reduces over —
+/// check it against a reference popcount for ragged final tiles.
+#[test]
+fn score_tile_writes_reference_gains() {
+    let (covers, covered, selected) = random_instance(33, 131, 333, 12);
+    let refer = |i: usize| -> u32 {
+        covers.row(i)
+            .iter()
+            .zip(covered.iter())
+            .map(|(&a, &b)| (a & !b).count_ones())
+            .sum()
+    };
+    for tile in [1usize, 7, 64] {
+        let mut s = TiledCpuScorer::new(tile, 1);
+        let mut lo = 0;
+        while lo < covers.n {
+            let hi = (lo + tile).min(covers.n);
+            let mut gains = vec![u32::MAX; hi - lo];
+            s.score_tile(&covers, &covered, &selected, lo..hi, &mut gains);
+            for (j, i) in (lo..hi).enumerate() {
+                let want = if selected[i] { 0 } else { refer(i) };
+                assert_eq!(gains[j], want, "row {i} tile {tile}");
+            }
+            lo = hi;
+        }
+    }
+}
+
+/// End-to-end: the full dense greedy run selects identical seed sets,
+/// gains, and coverage through the scalar and batched dispatches.
+#[test]
+fn dense_greedy_seed_sets_match_across_dispatch() {
+    for seed in 40..44u64 {
+        let (covers, _, _) = random_instance(seed, 300, 420, 18);
+        let mut scalar = make_scorer(ScorerKind::Scalar, covers.n);
+        let a = dense_greedy_max_cover(&covers, 15, &mut *scalar);
+        for threads in THREADS {
+            for tile in [7usize, 64] {
+                let mut batch = TiledCpuScorer::new(tile, threads);
+                let b = dense_greedy_max_cover(&covers, 15, &mut batch);
+                assert_eq!(a.seeds, b.seeds, "seed {seed} tile {tile} threads {threads}");
+                assert_eq!(a.gains, b.gains, "seed {seed} tile {tile} threads {threads}");
+                assert_eq!(a.coverage, b.coverage);
+            }
+        }
+    }
+}
+
+/// The dispatch surface: `make_scorer` routes by kind and candidate
+/// count, and the batched instance reports its shape-bucketed tile.
+#[test]
+fn dispatch_routes_and_reports_shape() {
+    assert_eq!(make_scorer(ScorerKind::Batch, 8).name(), "batch-cpu");
+    assert_ne!(make_scorer(ScorerKind::Scalar, 1 << 20).name(), "batch-cpu");
+    let s = TiledCpuScorer::new(64, 4);
+    assert_eq!(BatchScorer::tile(&s), 64);
+    assert_eq!(s.threads(), 4);
+}

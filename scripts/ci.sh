@@ -44,20 +44,29 @@
 #      (c) a loopback "multi-host" leg: a hostfile with two 127.0.0.1
 #      entries through --hosts/--fabric-bind must take the local spawn
 #      path on every rank and reproduce the pinned seeds.
-#   7. quick-scale micro benches (sampling / shuffle / maxcover /
-#      transport, incl. the socket-backend leg and the PR-8 coalescing
-#      A/B — which asserts the >=5x send-syscall reduction) through the
+#   7. scorer-dispatch gates (PR 9): the same `greediris run` must print
+#      identical seed sets under --scorer batch vs --scorer scalar, on
+#      both --transport sim and threads (the batched tiled scorer is
+#      bit-identical to the serial sweep by construction; this catches
+#      drift at the CLI level on top of tests/scorer.rs). CLI flags, not
+#      GREEDIRIS_SCORER, so the config-default unit tests stay
+#      env-independent.
+#   8. quick-scale micro benches (sampling / shuffle / maxcover /
+#      transport / scorer, incl. the socket-backend leg, the PR-8
+#      coalescing A/B — which asserts the >=5x send-syscall reduction —
+#      and the PR-9 scalar-vs-batched scorer A/B, which asserts seed
+#      equality and the >=64 candidates/tile dispatch shape) through the
 #      in-tree harness (src/exp/bench.rs), each measurement exported as
 #      a JSON line via GREEDIRIS_BENCH_JSON.
-#   8. assemble the lines into BENCH_PR5.json at the repo root — the
+#   9. assemble the lines into BENCH_PR5.json at the repo root — the
 #      current perf record, stamped with the git SHA and the flag matrix
 #      the benches ran (transport/wire/prune/overlap A/B pairs live in
 #      the same array; see scripts/README.md). A record is only written
 #      when this run actually measured something: an existing measured
 #      BENCH_PR5.json is never replaced by a placeholder or an empty run.
-#      The coalescing lines are additionally split into BENCH_PR8.json
-#      (same stamp discipline).
-#   9. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
+#      The coalescing lines are additionally split into BENCH_PR8.json,
+#      and the scorer lines into BENCH_PR9.json (same stamp discipline).
+#  10. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
 #      authoring containers had no Rust toolchain, so the repo may carry
 #      marked placeholders; the first run on a toolchain-equipped host
 #      replaces a placeholder (or missing file) with this run's measured
@@ -145,6 +154,21 @@ if [ "$OVL_ON" != "$OVL_OFF" ]; then
   exit 1
 fi
 echo "seed sets identical across overlap on/off"
+# Scorer-dispatch gate (PR 9): the batched tiled scorer vs the serial
+# sweep, on both in-process transports. The scorer changes dispatch
+# shape only — any seed drift is a first-maximum/tie-break bug.
+for TR in sim threads; do
+  SC_SCALAR="$("$BIN" "${RUN_ARGS[@]}" --transport "$TR" --scorer scalar | grep '^seeds:')"
+  SC_BATCH="$("$BIN" "${RUN_ARGS[@]}" --transport "$TR" --scorer batch | grep '^seeds:')"
+  if [ "$SC_SCALAR" != "$SC_BATCH" ] || [ "$SC_SCALAR" != "$SIM_SEEDS" ]; then
+    echo "error: scorer dispatch seed sets diverged (transport $TR)" >&2
+    echo "  pinned: $SIM_SEEDS" >&2
+    echo "  scalar: $SC_SCALAR" >&2
+    echo "  batch:  $SC_BATCH" >&2
+    exit 1
+  fi
+done
+echo "seed sets identical across scorer {scalar, batch} x transport {sim, threads}"
 
 echo "== fault-injection gates =="
 # Every leg runs under a wall-clock `timeout`: the contract is "typed
@@ -330,6 +354,7 @@ cargo bench --bench micro_sampling
 cargo bench --bench micro_shuffle
 cargo bench --bench micro_maxcover
 cargo bench --bench micro_transport
+cargo bench --bench micro_scorer
 
 OUT="$ROOT/BENCH_PR5.json"
 if [ ! -s "$JSONL" ]; then
@@ -369,6 +394,27 @@ STAMP8="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale
   echo ']'
 } > "$OUT8"
 echo "wrote $OUT8 ($(printf '%s\n' "$CO_LINES" | grep -c .) measurements, sha $GIT_SHA)"
+
+# PR-9 record: the scorer-dispatch A/B lines in their own file.
+# micro_scorer asserts seed equality and the >=64 candidates/tile shape
+# before exporting, so present lines mean the acceptance bar passed; a
+# silent disappearance fails loudly.
+OUT9="$ROOT/BENCH_PR9.json"
+SC_LINES="$(grep -E '"group":"scorer"' "$JSONL" || true)"
+if [ -z "$SC_LINES" ]; then
+  echo "error: scorer bench exported no measurements" >&2
+  if [ -f "$OUT9" ] && ! grep -q '"provenance"' "$OUT9"; then
+    echo "kept existing measured $OUT9" >&2
+  fi
+  exit 1
+fi
+STAMP9="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\":\"$GREEDIRIS_BENCH_SCALE\",\"workload\":\"dense greedy n=8000 theta=16384 k=100\",\"scorer\":\"scalar sweep vs tiled batch, tile+thread sweeps\",\"gate\":\"seeds bit-identical, >=64 candidates/tile\",\"simd\":\"${GREEDIRIS_SIMD:-auto}\"}"
+{
+  echo '['
+  { echo "$STAMP9"; printf '%s\n' "$SC_LINES"; } | paste -sd,
+  echo ']'
+} > "$OUT9"
+echo "wrote $OUT9 ($(printf '%s\n' "$SC_LINES" | grep -c .) measurements, sha $GIT_SHA)"
 
 for BASE in "$ROOT/BENCH_PR1.json" "$ROOT/BENCH_PR2.json" "$ROOT/BENCH_PR3.json" "$ROOT/BENCH_PR4.json"; do
   if [ ! -f "$BASE" ] || grep -q '"provenance"' "$BASE"; then
