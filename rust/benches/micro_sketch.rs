@@ -1,0 +1,153 @@
+//! Micro-benchmarks of the sketch coverage path (PR 10): exact bitmap
+//! coverage vs KMV bottom-w sketch coverage in the streaming receiver,
+//! plus the error-adaptive round controller vs the classic martingale
+//! schedule — on the same instances, with the quality gates asserted
+//! *before* any number is reported.
+//!
+//! The A/B ladder:
+//!   1. `round_exact_*`        — one streaming round, exact bitmaps
+//!      (`--coverage exact`, the golden reference).
+//!   2. `round_sketch_w{64,128,512}_*` — the same round with KMV
+//!      sketches at three widths (`--coverage sketch --sketch-width W`).
+//!   3. `martingale_classic_*` / `martingale_adaptive_*` — the full
+//!      estimation loop without and with `--eps-adaptive 0.05`.
+//!
+//! Gates (the PR 10 acceptance shapes), checked before timing:
+//!   - a sketch wider than θ is bit-identical to exact (sub-width
+//!     estimates are exact integers, saturation is impossible);
+//!   - narrow-sketch seeds keep expected influence within a few percent
+//!     of exact;
+//!   - peak receiver coverage bytes drop ≥ 4× under the sketch on the
+//!     large config (read from the per-run `mem:` counters — this
+//!     process is single-threaded, so the process-wide peaks are
+//!     attributable, unlike in the parallel `cargo test` harness);
+//!   - `--eps-adaptive 0.05` draws no more total RR samples than the
+//!     classic schedule.
+//!
+//! `scripts/ci.sh` collects the JSONL (GREEDIRIS_BENCH_JSON) into
+//! BENCH_PR10.json.
+
+use greediris::coordinator::{run_infmax, Algorithm, Config, RunResult};
+use greediris::diffusion::{evaluate_spread, DiffusionModel};
+use greediris::exp::bench::Bench;
+use greediris::graph::{generators, weights::WeightModel, Graph};
+use greediris::imm::math::ImmParams;
+use greediris::maxcover::CoverageKind;
+
+fn ba_graph(n: usize, seed: u64) -> Graph {
+    let edges = generators::barabasi_albert(n, 4, seed);
+    Graph::from_edges(n, &edges, WeightModel::UniformIc { max: 0.1 }, seed)
+}
+
+/// Total RR samples drawn by a run: estimation doublings θ̂₁·(2^rounds − 1)
+/// plus the final θ (same accounting as the integration suite).
+fn total_samples(theta1: u64, r: &RunResult) -> u64 {
+    theta1 * ((1u64 << r.rounds) - 1) + r.theta
+}
+
+fn main() {
+    let b = Bench::new("sketch");
+
+    // The memory-bound shape: big universe (θ/8 bytes per exact bucket
+    // bitmap = 8 KiB at θ = 65536) against 8·width-byte sketches.
+    let g = ba_graph(2000, 21);
+    let (k, m, theta) = (32, 8, 65_536u64);
+    let mk = |kind: CoverageKind, width: usize| {
+        let cfg = Config::new(k, m, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_theta(theta)
+            .with_coverage(kind)
+            .with_sketch_width(width);
+        run_infmax(&g, &cfg)
+    };
+
+    // ---- Gate 1: a sketch wider than θ is bit-identical to exact. ----
+    // Sub-width KMV estimates are exact integers and saturation cannot
+    // happen, so every admission decision matches the bitmap path.
+    {
+        let small = ba_graph(600, 22);
+        let run = |kind, width| {
+            let cfg = Config::new(10, 4, DiffusionModel::IC, Algorithm::GreediRis)
+                .with_theta(1024)
+                .with_coverage(kind)
+                .with_sketch_width(width);
+            run_infmax(&small, &cfg)
+        };
+        let exact = run(CoverageKind::Exact, 1024);
+        let wide = run(CoverageKind::Sketch, 1100); // width > θ = 1024
+        assert_eq!(
+            (&exact.seeds, exact.coverage),
+            (&wide.seeds, wide.coverage),
+            "wide sketch must be bit-identical to exact"
+        );
+    }
+
+    // ---- Gate 2 + 3: narrow-sketch quality and the ≥4× memory drop. ----
+    let exact = mk(CoverageKind::Exact, 128);
+    let sketch = mk(CoverageKind::Sketch, 128);
+    let s_exact = evaluate_spread(&g, &exact.seeds, DiffusionModel::IC, 200, 77).mean;
+    let s_sketch = evaluate_spread(&g, &sketch.seeds, DiffusionModel::IC, 200, 77).mean;
+    assert!(
+        s_sketch >= 0.95 * s_exact,
+        "sketch influence {s_sketch:.1} fell below 95% of exact {s_exact:.1}"
+    );
+    let (ep, sp) = (exact.breakdown.mem.exact_peak, sketch.breakdown.mem.sketch_peak);
+    assert!(ep > 0, "exact run must have charged bitmap bytes");
+    assert!(sp > 0, "sketch run must have charged sketch bytes");
+    assert!(
+        sp * 4 <= ep,
+        "acceptance: sketch coverage peak {sp} B must be ≥ 4x below exact {ep} B"
+    );
+    println!(
+        "peak receiver coverage: exact {ep} B vs sketch {sp} B ({:.1}x drop) | \
+         influence {s_sketch:.1} vs {s_exact:.1} ({:.1}% of exact)",
+        ep as f64 / sp as f64,
+        100.0 * s_sketch / s_exact,
+    );
+
+    // ---- A/B: exact bitmaps vs sketch widths on one streaming round. ----
+    let t_exact = b.bench("round_exact_n2k_th64k", || mk(CoverageKind::Exact, 128));
+    for width in [64usize, 128, 512] {
+        let st = b.bench(&format!("round_sketch_w{width}_n2k_th64k"), || {
+            mk(CoverageKind::Sketch, width)
+        });
+        println!(
+            "  w{width}: {:.2}x vs exact round",
+            t_exact.median / st.median
+        );
+    }
+
+    // ---- Error-adaptive controller vs the classic schedule. ----
+    // No θ override: the martingale loop runs. ε = 0.3 keeps the loop
+    // short enough for a bench while still exercising several doublings.
+    let mk_loop = |eps_adaptive: f64| {
+        let mut cfg = Config::new(8, 4, DiffusionModel::IC, Algorithm::GreediRis)
+            .with_eps_adaptive(eps_adaptive);
+        cfg.eps = 0.3;
+        run_infmax(&g, &cfg)
+    };
+    let classic = mk_loop(0.0);
+    let adaptive = mk_loop(0.05);
+    let theta1 = ImmParams::new(g.n() as u64, 8, 0.3).theta_initial();
+    let (n_classic, n_adaptive) =
+        (total_samples(theta1, &classic), total_samples(theta1, &adaptive));
+    assert!(
+        n_adaptive <= n_classic,
+        "acceptance: adaptive drew more samples: {n_adaptive} vs {n_classic}"
+    );
+    let q_classic = evaluate_spread(&g, &classic.seeds, DiffusionModel::IC, 200, 99).mean;
+    let q_adaptive = evaluate_spread(&g, &adaptive.seeds, DiffusionModel::IC, 200, 99).mean;
+    assert!(
+        q_adaptive >= 0.99 * q_classic,
+        "adaptive influence {q_adaptive:.1} fell below 99% of classic {q_classic:.1}"
+    );
+    println!(
+        "samples drawn: classic {n_classic} ({} rounds) vs adaptive {n_adaptive} ({} rounds, \
+         {:.1}% of classic) | influence {:.1}% of classic",
+        classic.rounds,
+        adaptive.rounds,
+        100.0 * n_adaptive as f64 / n_classic as f64,
+        100.0 * q_adaptive / q_classic,
+    );
+    b.bench("martingale_classic_n2k_k8", || mk_loop(0.0));
+    b.bench("martingale_adaptive005_n2k_k8", || mk_loop(0.05));
+}

@@ -16,6 +16,7 @@ fn env_coalesce() -> usize {
         .unwrap_or(DEFAULT_COALESCE)
 }
 use crate::imm::bounds;
+use crate::maxcover::sketch::{sketch_key, CoverageKind, CoverageMode};
 use crate::maxcover::ScorerKind;
 use crate::metrics::{Breakdown, CommVolume, ReceiverBreakdown};
 use crate::Vertex;
@@ -195,6 +196,28 @@ pub struct Config {
     /// (never part of the wire config blob or checkpoint fingerprint; an
     /// unknown env value panics here, a clean CLI error in `main`).
     pub scorer: ScorerKind,
+    /// Coverage accounting backend at the streaming receiver
+    /// (`--coverage exact|sketch`, default from `GREEDIRIS_COVERAGE` or
+    /// [`CoverageKind::Exact`]): `exact` keeps per-bucket bitmaps (the
+    /// golden reference, bit-identical across transports), `sketch`
+    /// scores offers from fixed-width KMV cardinality estimates
+    /// ([`crate::maxcover::sketch`]) — ~`8·width` bytes per bucket
+    /// instead of `θ/8`, with quality bounded by the `1/√(w−2)` error
+    /// model. Changes results, so it IS part of the wire config blob and
+    /// checkpoint fingerprint. An unknown env value panics here, a clean
+    /// CLI error in `main` — never a silent fallback.
+    pub coverage: CoverageKind,
+    /// KMV sketch width (minima retained per bucket, `--sketch-width`,
+    /// default 1024 → ~3.1% relative error). Only meaningful with
+    /// `--coverage sketch`; part of the config blob/fingerprint.
+    pub sketch_width: usize,
+    /// Error-adaptive martingale stopping ε (`--eps-adaptive`, default
+    /// `0.0` = off): when > 0 the driver finalizes at the current θ̂ as
+    /// soon as consecutive rounds' coverage fractions agree within ε,
+    /// skipping the remaining sample doublings
+    /// ([`crate::imm::MartingaleDriver::with_adaptive`]). Changes θ and
+    /// therefore results — part of the config blob/fingerprint.
+    pub eps_adaptive: f64,
 }
 
 impl Config {
@@ -235,6 +258,11 @@ impl Config {
             scorer: ScorerKind::from_env()
                 .unwrap_or_else(|e| panic!("{e}"))
                 .unwrap_or(ScorerKind::Auto),
+            coverage: CoverageKind::from_env()
+                .unwrap_or_else(|e| panic!("{e}"))
+                .unwrap_or(CoverageKind::Exact),
+            sketch_width: 1024,
+            eps_adaptive: 0.0,
         }
     }
 
@@ -389,6 +417,48 @@ impl Config {
         self
     }
 
+    /// Selects the receiver coverage backend (see [`Config::coverage`]).
+    /// Unlike `with_scorer`, this changes results: sketch mode trades
+    /// bounded coverage error for ~`θ/(8·width)`× less receiver memory.
+    pub fn with_coverage(mut self, kind: CoverageKind) -> Self {
+        self.coverage = kind;
+        self
+    }
+
+    /// Sets the KMV sketch width (minima per bucket; see
+    /// [`Config::sketch_width`]). Widths below 3 have no defined error
+    /// estimator, so they are rejected up front.
+    pub fn with_sketch_width(mut self, width: usize) -> Self {
+        assert!(width >= 3, "sketch width must be >= 3, got {width}");
+        self.sketch_width = width;
+        self
+    }
+
+    /// Sets the error-adaptive stopping ε (see [`Config::eps_adaptive`]);
+    /// `0.0` disables adaptive stopping (the bit-identical default).
+    pub fn with_eps_adaptive(mut self, eps: f64) -> Self {
+        assert!(
+            eps == 0.0 || (0.0..1.0).contains(&eps),
+            "eps-adaptive must be 0 (off) or in [0, 1), got {eps}"
+        );
+        self.eps_adaptive = eps;
+        self
+    }
+
+    /// The resolved per-run coverage mode handed to the streaming
+    /// receiver: [`CoverageMode::Exact`], or a sketch mode whose hash key
+    /// is derived from the run seed so every rank (and the sim path)
+    /// hashes sample ids identically.
+    pub fn coverage_mode(&self) -> CoverageMode {
+        match self.coverage {
+            CoverageKind::Exact => CoverageMode::Exact,
+            CoverageKind::Sketch => CoverageMode::Sketch {
+                width: self.sketch_width,
+                key: sketch_key(self.seed),
+            },
+        }
+    }
+
     /// Number of sender processes (the receiver, rank 0, does not own a
     /// vertex partition in the streaming variants; with m == 1 everything
     /// degenerates to a single local solve).
@@ -535,6 +605,47 @@ mod tests {
         let c = c.with_scorer(ScorerKind::Batch);
         assert_eq!(c.scorer, ScorerKind::Batch);
         assert_eq!(c.with_scorer(ScorerKind::Scalar).scorer, ScorerKind::Scalar);
+    }
+
+    #[test]
+    fn coverage_builder_and_default() {
+        let c = cfg(Algorithm::GreediRis);
+        assert_eq!(c.coverage, CoverageKind::Exact, "coverage defaults to exact");
+        assert_eq!(c.sketch_width, 1024);
+        assert_eq!(c.eps_adaptive, 0.0);
+        assert_eq!(c.coverage_mode(), CoverageMode::Exact);
+
+        let c = c
+            .with_coverage(CoverageKind::Sketch)
+            .with_sketch_width(64)
+            .with_eps_adaptive(0.05);
+        assert_eq!(c.coverage, CoverageKind::Sketch);
+        assert_eq!(c.eps_adaptive, 0.05);
+        match c.coverage_mode() {
+            CoverageMode::Sketch { width, key } => {
+                assert_eq!(width, 64);
+                assert_eq!(key, sketch_key(c.seed), "hash key derives from run seed");
+            }
+            other => panic!("expected sketch mode, got {other:?}"),
+        }
+        // Same seed → same key; different seed → different key.
+        assert_ne!(
+            sketch_key(c.seed),
+            sketch_key(c.seed ^ 1),
+            "key must be seed-sensitive"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "sketch width")]
+    fn tiny_sketch_width_is_rejected() {
+        let _ = cfg(Algorithm::GreediRis).with_sketch_width(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "eps-adaptive")]
+    fn out_of_range_eps_adaptive_is_rejected() {
+        let _ = cfg(Algorithm::GreediRis).with_eps_adaptive(1.5);
     }
 
     #[test]

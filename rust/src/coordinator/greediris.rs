@@ -27,7 +27,7 @@
 //! waiting on gaps.
 
 use crate::coordinator::config::{Config, LocalSolver};
-use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard, FloorSource};
+use crate::coordinator::receiver::{run_threaded_receiver_mode, Burst, FloorBoard, FloorSource};
 use crate::distributed::fault::{
     FabricError, FabricErrorKind, FabricPhase, LossPolicy, NoRecovery,
 };
@@ -41,6 +41,7 @@ use crate::graph::Graph;
 use crate::maxcover::batch::{make_scorer, ScorerKind};
 use crate::maxcover::dense::{dense_greedy_max_cover_stream, PackedCovers};
 use crate::maxcover::lazy::{lazy_greedy_stream, lazy_greedy_stream_batched, FRONTIER};
+use crate::maxcover::sketch::CoverageMode;
 use crate::maxcover::streaming::prunable;
 use crate::maxcover::{CoverSolution, GainScorer, SetSystemView, StreamingMaxCover};
 use crate::metrics::ReceiverBreakdown;
@@ -57,6 +58,12 @@ const MSG_RUN: u8 = 1;
 const MSG_PRUNED: u8 = 2;
 /// Sender termination: carries the full local solution (the §3.4 alert).
 const MSG_DONE: u8 = 3;
+/// A sketch-mode emission (PR 10): the run's exact length plus its
+/// bottom-w hash pre-truncation ([`crate::distributed::wire::encode_sketch_into`]).
+/// By KMV mergeability the receiver's merged sketch is identical to one
+/// built from the full run, so shipping `min(|S|, w)` hashes is lossless
+/// for the sketch state.
+const MSG_SKETCH: u8 = 4;
 
 fn encode_done(sol: &CoverSolution) -> Vec<u8> {
     let mut msg = vec![MSG_DONE];
@@ -290,8 +297,9 @@ pub fn streaming_round_checked<'a, 'b>(
     events.sort_unstable();
 
     let compress = cfg.wire_compression;
+    let mode = cfg.coverage_mode();
     let net = t.net();
-    let mut stream = StreamingMaxCover::new(state.theta as usize, k, cfg.delta);
+    let mut stream = StreamingMaxCover::new_mode(state.theta as usize, k, cfg.delta, mode);
     let bucketing_threads = cfg.threads.saturating_sub(1).max(1);
     let mut recv_clock = t0;
     let mut wait = 0.0f64;
@@ -311,6 +319,7 @@ pub fn streaming_round_checked<'a, 'b>(
     // admission sweep ([`StreamingMaxCover::offer_burst`]), which rejects
     // bursts below the threshold floor without packing an OfferMask.
     let mut burst = Burst::new();
+    let mut sk_scratch: Vec<u64> = Vec::new();
     let mut e = 0usize;
     while e < events.len() {
         let ordinal = events[e].0;
@@ -332,7 +341,17 @@ pub fn streaming_round_checked<'a, 'b>(
                 pruned += 1;
                 continue;
             }
-            let bytes = (1 + wire::encoded_run_len(v, ids, compress)) as u64;
+            let bytes = match mode {
+                CoverageMode::Exact => (1 + wire::encoded_run_len(v, ids, compress)) as u64,
+                CoverageMode::Sketch { width, key } => {
+                    // Model exactly what a wire sender ships in sketch
+                    // mode: the bottom-w pre-truncation as a MSG_SKETCH
+                    // payload (the bucket state itself is fed the raw run —
+                    // KMV mergeability makes that bit-identical).
+                    crate::maxcover::sketch::bottom_w(key, ids, width, &mut sk_scratch);
+                    (1 + wire::encoded_sketch_len(v, ids.len() as u32, &sk_scratch)) as u64
+                }
+            };
             stream_bytes += bytes;
             shipped += 1;
             let arrival = starts[tr.rank] + t_rel + net.p2p(bytes);
@@ -436,8 +455,10 @@ pub(crate) fn run_wire_sender(
     let k = cfg.k;
     let compress = cfg.wire_compression;
     let prune = cfg.floor_prune;
+    let mode = cfg.coverage_mode();
+    let mut sk_scratch: Vec<u64> = Vec::new();
     let ts = Instant::now();
-    let emit = |idx: usize| {
+    let mut emit = |idx: usize| {
         let v = system.vertex(idx);
         let ids: &[SampleId] = system.set(idx);
         if prune {
@@ -448,6 +469,18 @@ pub(crate) fn run_wire_sender(
                 ep.send_to(0, msg);
                 return;
             }
+        }
+        if let CoverageMode::Sketch { width, key } = mode {
+            // Sender-side pre-truncation: the receiver's KMV merge can
+            // never retain more than the run's bottom-w hashes, so ship
+            // only those (plus the exact length for `l`/materialization
+            // bookkeeping) — lossless for the merged sketch state.
+            crate::maxcover::sketch::bottom_w(key, ids, width, &mut sk_scratch);
+            let mut msg = Vec::with_capacity(2 + 9 * sk_scratch.len());
+            msg.push(MSG_SKETCH);
+            wire::encode_sketch_into(&mut msg, v, ids.len() as u32, &sk_scratch);
+            ep.send_to(0, msg);
+            return;
         }
         let mut msg = Vec::with_capacity(2 + ids.len());
         msg.push(MSG_RUN);
@@ -533,6 +566,7 @@ pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
         FabricError::new(FabricErrorKind::Decode, FabricPhase::Select, Some(p), what)
     };
     let mut burst = Burst::new();
+    let mut sk_scratch: Vec<u64> = Vec::new();
     while !live.is_empty() {
         burst.clear();
         let mut still = Vec::with_capacity(live.len());
@@ -582,6 +616,15 @@ pub(crate) fn run_canonical_merger<R: PeerReceiver, F: FnMut(&[usize])>(
                     out.pruned += 1;
                     still.push(p);
                 }
+                MSG_SKETCH => {
+                    out.stream_bytes += msg.len() as u64;
+                    let (v, count) = wire::decode_sketch_into(&msg[1..], &mut sk_scratch)
+                        .map_err(|e| bad(p, format!("S3 sketch payload: {e}")))?;
+                    out.stream_raw_bytes += (count as u64 + 2) * 4;
+                    out.shipped += 1;
+                    burst.push_sketch(v, count, &sk_scratch);
+                    still.push(p);
+                }
                 MSG_DONE => {
                     out.locals.push((p, decode_done(&msg[1..])));
                 }
@@ -629,6 +672,7 @@ fn threaded_streaming_round(
     let theta = state.theta as usize;
     let delta = cfg.delta;
     let bucket_threads = live_bucket_threads(cfg);
+    let mode = cfg.coverage_mode();
     let board = Arc::new(FloorBoard::new(bucket_threads));
     let mut endpoints = Fabric::endpoints(m);
     let ep0 = endpoints.remove(0);
@@ -640,7 +684,7 @@ fn threaded_streaming_round(
         let threads = bucket_threads + 1;
         let recv_handle = scope.spawn(move || {
             let tr = Instant::now();
-            let out = run_threaded_receiver(
+            let out = run_threaded_receiver_mode(
                 theta,
                 k,
                 delta,
@@ -648,6 +692,7 @@ fn threaded_streaming_round(
                 ship_limit.max(1) + 1,
                 rx_burst,
                 Some(board_r),
+                mode,
             );
             (out, tr.elapsed().as_secs_f64())
         });
@@ -782,6 +827,7 @@ pub fn overlapped_round_threaded(
     let covers: &mut [crate::maxcover::InvertedIndex] = &mut state.covers;
 
     let bucket_threads = live_bucket_threads(cfg);
+    let mode = cfg.coverage_mode();
     let board = Arc::new(FloorBoard::new(bucket_threads));
     let s2_eps = Fabric::endpoints(m);
     let mut s3_eps = Fabric::endpoints(m);
@@ -794,7 +840,7 @@ pub fn overlapped_round_threaded(
         let board_r = Arc::clone(&board);
         let recv_handle = scope.spawn(move || {
             let tr = Instant::now();
-            let out = run_threaded_receiver(
+            let out = run_threaded_receiver_mode(
                 theta_target,
                 k,
                 delta,
@@ -802,6 +848,7 @@ pub fn overlapped_round_threaded(
                 ship_limit.max(1) + 1,
                 rx_burst,
                 Some(board_r),
+                mode,
             );
             (out, tr.elapsed().as_secs_f64())
         });
@@ -1044,6 +1091,70 @@ mod tests {
                 );
                 assert_eq!(scalar.solution.coverage, batch.solution.coverage);
             }
+        }
+    }
+
+    /// True coverage of `seeds` over the round's θ samples: union of their
+    /// covering sets across every sender's shuffled index. Sketch-mode
+    /// solutions report *estimated* coverage, so quality tests recount.
+    fn true_coverage(st: &DistState, m: usize, theta: usize, seeds: &[Vertex]) -> u64 {
+        let mut covered = vec![false; theta];
+        for p in 1..m {
+            let sys = st.system_at(p);
+            for idx in 0..sys.len() {
+                if seeds.contains(&sys.vertex(idx)) {
+                    for &id in sys.set(idx) {
+                        covered[id as usize] = true;
+                    }
+                }
+            }
+        }
+        covered.iter().filter(|&&c| c).count() as u64
+    }
+
+    #[test]
+    fn wide_sketch_round_is_bit_identical_to_exact() {
+        // With width > θ no bucket sketch ever saturates, so every KMV
+        // estimate is an exact integer and admissions (and the final
+        // fuse) match exact mode bit-for-bit — on both in-memory engines.
+        use crate::maxcover::CoverageKind;
+        for kind in [TransportKind::Sim, TransportKind::Threads] {
+            let (mut a, st_a, cfg_a) = setup_with(3, 384, kind);
+            let exact = streaming_round(a.as_mut(), &st_a, &cfg_a, None);
+            let (mut b, st_b, cfg_b) = setup_with(3, 384, kind);
+            let cfg_b = cfg_b.with_coverage(CoverageKind::Sketch).with_sketch_width(385);
+            let sk = streaming_round(b.as_mut(), &st_b, &cfg_b, None);
+            assert_eq!(exact.solution.seeds, sk.solution.seeds, "{kind:?}");
+            assert_eq!(exact.solution.coverage, sk.solution.coverage, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn narrow_sketch_round_is_deterministic_and_keeps_quality() {
+        use crate::maxcover::CoverageKind;
+        let theta = 384usize;
+        let (mut a, st_a, cfg_a) = setup(4, theta as u64);
+        let exact = streaming_round(a.as_mut(), &st_a, &cfg_a, None);
+        let run_sketch = |kind: TransportKind| {
+            let (mut t, st, cfg) = setup_with(4, theta as u64, kind);
+            let cfg = cfg.with_coverage(CoverageKind::Sketch).with_sketch_width(64);
+            let r = streaming_round(t.as_mut(), &st, &cfg, None);
+            (r, st)
+        };
+        let (s1, st1) = run_sketch(TransportKind::Sim);
+        let (s2, _) = run_sketch(TransportKind::Sim);
+        assert_eq!(s1.solution.seeds, s2.solution.seeds, "sketch round must be deterministic");
+        assert_eq!(s1.stream_bytes, s2.stream_bytes);
+        let (s3, st3) = run_sketch(TransportKind::Threads);
+        // True (recounted) influence of the sketch-picked seeds stays
+        // within the configured error regime of exact selection.
+        for (r, st) in [(&s1, &st1), (&s3, &st3)] {
+            let tc = true_coverage(st, 4, theta, &r.solution.seeds);
+            assert!(
+                tc as f64 >= 0.7 * exact.solution.coverage as f64,
+                "sketch quality collapsed: {tc} vs exact {}",
+                exact.solution.coverage
+            );
         }
     }
 

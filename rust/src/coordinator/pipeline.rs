@@ -460,7 +460,7 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
         (t, f64::NAN)
     } else {
         let params = ImmParams::new(graph.n() as u64, cfg.k as u64, cfg.eps);
-        let mut driver = MartingaleDriver::new(params);
+        let mut driver = MartingaleDriver::with_adaptive(params, cfg.eps_adaptive);
         let mut state = DistState::new(graph.n(), cfg.m, &pool, cfg.seed, 0, do_shuffle);
         let mut coverages: Vec<u64> = Vec::new();
         let mut floor = (0.0f64, 0u64);
@@ -665,6 +665,11 @@ pub fn run_infmax_with_scorer_checked<'a, 'b>(
     // when every solve took the scalar path. Worker-process dispatches
     // happen in other address spaces and are not aggregated here.
     breakdown.scorer = crate::maxcover::batch::stats_take();
+    // Coverage/index peak-memory high-water marks (exact bitmaps vs KMV
+    // sketches at the receiver, merged-index bytes), drained per run like
+    // the scorer counters. All-zero — and unprinted — before the first
+    // selection round.
+    breakdown.mem = crate::metrics::mem_stats_take();
 
     let _ = lower_bound;
     Ok(RunResult {

@@ -102,7 +102,7 @@ use crate::coordinator::config::{Algorithm, Config, LocalSolver};
 use crate::coordinator::greediris::{
     fuse_solution, live_bucket_threads, run_canonical_merger, run_wire_sender, StreamRound,
 };
-use crate::coordinator::receiver::{run_threaded_receiver, Burst, FloorBoard};
+use crate::coordinator::receiver::{run_threaded_receiver_mode, Burst, FloorBoard};
 use crate::coordinator::sampling::{
     apply_overlap_timeline, draw_owner_partition, invert_batch_to_streams, rank_ranges,
     rebuild_cover_to, run_rank_chunk_stages, wire_volumes, ChunkGrow, ChunkPlan, DistState,
@@ -121,7 +121,7 @@ use crate::distributed::transport::{PeerReceiver, PeerSender};
 use crate::distributed::{wire, Transport, TransportKind};
 use crate::error::{Error, Result};
 use crate::graph::Graph;
-use crate::maxcover::{InvertedIndex, ScorerKind};
+use crate::maxcover::{CoverageKind, InvertedIndex, ScorerKind};
 use crate::metrics::ReceiverBreakdown;
 use crate::sampling::{batch_parallel, SampleBatch};
 use crate::{anyhow, bail};
@@ -227,6 +227,13 @@ pub(crate) fn encode_config(cfg: &Config) -> Vec<u8> {
     b.push(cfg.wire_compression as u8);
     b.push(cfg.floor_prune as u8);
     b.push(cfg.overlap as u8);
+    // PR 10 result-changing knobs, appended at the end so older blobs
+    // remain a strict prefix (the decoder below always expects them, so
+    // mixed-version fleets fail loudly at HELLO rather than silently
+    // diverge — the checkpoint fingerprint likewise changes).
+    b.push(coverage_tag(cfg.coverage));
+    wire::put_varint(&mut b, cfg.sketch_width as u64);
+    put_f64(&mut b, cfg.eps_adaptive);
     b
 }
 
@@ -249,6 +256,9 @@ fn decode_config(bytes: &[u8]) -> Result<Config> {
     let wire_compression = r.byte().map_err(derr)? != 0;
     let floor_prune = r.byte().map_err(derr)? != 0;
     let overlap = r.byte().map_err(derr)? != 0;
+    let coverage = coverage_from(r.byte().map_err(derr)?)?;
+    let sketch_width = r.varint().map_err(derr)? as usize;
+    let eps_adaptive = get_f64(&mut r).map_err(derr)?;
     let mut c = Config::new(k, m, model, algorithm);
     c.threads = threads;
     c.s1_threads = s1_threads;
@@ -263,6 +273,9 @@ fn decode_config(bytes: &[u8]) -> Result<Config> {
     c.wire_compression = wire_compression;
     c.floor_prune = floor_prune;
     c.overlap = overlap;
+    c.coverage = coverage;
+    c.sketch_width = sketch_width;
+    c.eps_adaptive = eps_adaptive;
     // Workers never dispatch on the transport; pin the field so an
     // inherited GREEDIRIS_TRANSPORT can't confuse diagnostics. Fault
     // specs never ride the config blob either: a worker arms only the
@@ -271,6 +284,21 @@ fn decode_config(bytes: &[u8]) -> Result<Config> {
     c.transport = TransportKind::Sim;
     c.fault = Vec::new();
     Ok(c)
+}
+
+fn coverage_tag(c: CoverageKind) -> u8 {
+    match c {
+        CoverageKind::Exact => 0,
+        CoverageKind::Sketch => 1,
+    }
+}
+
+fn coverage_from(t: u8) -> Result<CoverageKind> {
+    match t {
+        0 => Ok(CoverageKind::Exact),
+        1 => Ok(CoverageKind::Sketch),
+        other => bail!("bad coverage tag {other}"),
+    }
 }
 
 fn scorer_tag(s: ScorerKind) -> u8 {
@@ -754,9 +782,10 @@ pub fn overlapped_round_process(
     let (grow0, stats_res, merge_res, sols, recv_secs, s3_back) = std::thread::scope(|scope| {
         // S4: the live threaded receiver consumes from round start.
         let board_r = Arc::clone(&board);
+        let mode = cfg.coverage_mode();
         let recv_handle = scope.spawn(move || {
             let tr = Instant::now();
-            let out = run_threaded_receiver(
+            let out = run_threaded_receiver_mode(
                 theta_target,
                 k,
                 delta,
@@ -764,6 +793,7 @@ pub fn overlapped_round_process(
                 ship_limit.max(1) + 1,
                 rx_burst,
                 Some(board_r),
+                mode,
             );
             (out, tr.elapsed().as_secs_f64())
         });
@@ -1117,9 +1147,10 @@ pub(crate) fn select_process(
         let (sols, merge_res, stats_res, recv_secs, s3_back) = std::thread::scope(|scope| {
             let board_r = Arc::clone(&board);
             let threads = bucket_threads + 1;
+            let mode = cfg.coverage_mode();
             let recv_handle = scope.spawn(move || {
                 let tr = Instant::now();
-                let out = run_threaded_receiver(
+                let out = run_threaded_receiver_mode(
                     theta,
                     k,
                     delta,
@@ -1127,6 +1158,7 @@ pub(crate) fn select_process(
                     ship_limit.max(1) + 1,
                     rx_burst,
                     Some(board_r),
+                    mode,
                 );
                 (out, tr.elapsed().as_secs_f64())
             });
@@ -1490,6 +1522,10 @@ mod tests {
         cfg.node_threads = 17.0;
         cfg.floor_feedback_every = 5;
         cfg.local_solver = LocalSolver::DenseCpu;
+        cfg = cfg
+            .with_coverage(CoverageKind::Sketch)
+            .with_sketch_width(77)
+            .with_eps_adaptive(0.03);
         let back = decode_config(&encode_config(&cfg)).unwrap();
         assert_eq!(back.k, cfg.k);
         assert_eq!(back.m, cfg.m);
@@ -1508,6 +1544,23 @@ mod tests {
         assert_eq!(back.wire_compression, cfg.wire_compression);
         assert_eq!(back.floor_prune, cfg.floor_prune);
         assert_eq!(back.overlap, cfg.overlap);
+        assert_eq!(back.coverage, cfg.coverage);
+        assert_eq!(back.sketch_width, cfg.sketch_width);
+        assert_eq!(back.eps_adaptive.to_bits(), cfg.eps_adaptive.to_bits());
+    }
+
+    #[test]
+    fn coverage_knobs_change_the_config_fingerprint() {
+        // Unlike `--scorer`, the coverage/sketch/eps-adaptive knobs change
+        // results, so they MUST be inside the blob the checkpoint layer
+        // fingerprints.
+        let cfg = Config::new(5, 4, DiffusionModel::IC, Algorithm::GreediRis);
+        let base = encode_config(&cfg);
+        assert_ne!(base, encode_config(&cfg.clone().with_coverage(CoverageKind::Sketch)));
+        assert_ne!(base, encode_config(&cfg.clone().with_sketch_width(512)));
+        assert_ne!(base, encode_config(&cfg.clone().with_eps_adaptive(0.05)));
+        assert!(coverage_from(coverage_tag(CoverageKind::Sketch)).unwrap() == CoverageKind::Sketch);
+        assert!(coverage_from(9).is_err());
     }
 
     #[test]

@@ -55,6 +55,7 @@
 //! [`crate::coordinator::greediris`] (DESIGN.md §3 explains why timing is
 //! simulated rather than measured on this 1-core host).
 
+use crate::maxcover::sketch::CoverageMode;
 use crate::maxcover::streaming::{best_across, BucketBank};
 use crate::maxcover::CoverSolution;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -204,6 +205,26 @@ pub fn run_threaded_receiver(
     rx: mpsc::Receiver<Burst>,
     board: Option<Arc<FloorBoard>>,
 ) -> (CoverSolution, ThreadedStats) {
+    run_threaded_receiver_mode(theta, k, delta, t, capacity, rx, board, CoverageMode::Exact)
+}
+
+/// [`run_threaded_receiver`] with an explicit coverage backend: every
+/// bucketing thread's bank is built in `mode`, so under
+/// [`CoverageMode::Sketch`] bucket state is KMV sketches and the floor
+/// feedback published to `board` is the sketch-deflated conservative floor
+/// (see [`BucketBank::prune_floor`]). Exact mode delegates here with
+/// [`CoverageMode::Exact`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_threaded_receiver_mode(
+    theta: usize,
+    k: usize,
+    delta: f64,
+    t: usize,
+    capacity: usize,
+    rx: mpsc::Receiver<Burst>,
+    board: Option<Arc<FloorBoard>>,
+    mode: CoverageMode,
+) -> (CoverSolution, ThreadedStats) {
     let bucket_threads = t.saturating_sub(1).max(1);
     let slots = Arc::new(SlotArray::new(capacity));
 
@@ -215,7 +236,7 @@ pub fn run_threaded_receiver(
             let mut elements = 0usize;
             let mut bursts = 0usize;
             while let Ok(burst) = rx.recv() {
-                elements += burst.len();
+                elements += burst.total_len();
                 bursts += 1;
                 slots_w.publish(burst);
             }
@@ -231,7 +252,7 @@ pub fn run_threaded_receiver(
             let slots_r = Arc::clone(&slots);
             let board_j = board.clone();
             handles.push(scope.spawn(move || {
-                let mut bank = BucketBank::new(theta, k, delta, j, bucket_threads);
+                let mut bank = BucketBank::new_mode(theta, k, delta, j, bucket_threads, mode);
                 let mut cursor = 0usize;
                 while let Some(burst) = slots_r.wait_for(cursor) {
                     cursor += 1;
@@ -315,6 +336,37 @@ mod tests {
             assert_eq!(got.seeds, expected.seeds, "seed {seed}");
             assert_eq!(stats.elements, 120);
             assert!(stats.bursts <= 120);
+        }
+    }
+
+    #[test]
+    fn threaded_sketch_matches_sequential_sketch_bitwise() {
+        // Same lock-free protocol, sketch banks: the threaded receiver in
+        // sketch mode must equal the sequential sketch engine exactly
+        // (identical hashes → identical KMV state → identical admissions).
+        let theta = 512;
+        let k = 8;
+        let delta = 0.1;
+        let mode = CoverageMode::Sketch { width: 48, key: 0xABCD_1234 };
+        for seed in 0..4u64 {
+            let bursts = random_bursts(seed, 100, theta, 6);
+            let mut seq = StreamingMaxCover::new_mode(theta, k, delta, mode);
+            for b in &bursts {
+                for it in b.iter() {
+                    seq.offer(it.vertex, it.ids);
+                }
+            }
+            let expected = seq.finalize();
+            let (tx, rx) = mpsc::channel();
+            for b in bursts {
+                tx.send(b).unwrap();
+            }
+            drop(tx);
+            let (got, stats) =
+                run_threaded_receiver_mode(theta, k, delta, 4, 200, rx, None, mode);
+            assert_eq!(got.seeds, expected.seeds, "seed {seed}");
+            assert_eq!(got.coverage, expected.coverage, "seed {seed}");
+            assert_eq!(stats.elements, 100);
         }
     }
 

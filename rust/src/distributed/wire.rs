@@ -417,6 +417,80 @@ impl<'a> Iterator for RunIds<'a> {
 
 impl ExactSizeIterator for RunIds<'_> {}
 
+/// Appends one encoded S3 *sketch* payload to `out` (PR 10): the seed
+/// vertex, the exact run length it summarizes, and the bottom-w hash
+/// minima. Hashes are strictly-ascending distinct u64s, so they are
+/// delta-encoded with an implicit `+1` per gap — every decodable payload
+/// is strictly ascending *by construction*, and the first hash rides
+/// absolute. Always varint-packed: sketch payloads carry uniform 64-bit
+/// order statistics whose deltas are small relative to u64, so there is
+/// no raw-format win to preserve.
+pub fn encode_sketch_into(out: &mut Vec<u8>, vertex: Vertex, count: u32, hashes: &[u64]) {
+    debug_assert!(hashes.windows(2).all(|w| w[0] < w[1]));
+    put_varint(out, vertex as u64);
+    put_varint(out, count as u64);
+    put_varint(out, hashes.len() as u64);
+    let mut prev = 0u64;
+    for (i, &h) in hashes.iter().enumerate() {
+        if i == 0 {
+            put_varint(out, h);
+        } else {
+            put_varint(out, h - prev - 1);
+        }
+        prev = h;
+    }
+}
+
+/// Wire length of [`encode_sketch_into`] output without allocating (the
+/// simulated backend charges byte costs without materializing payloads).
+pub fn encoded_sketch_len(vertex: Vertex, count: u32, hashes: &[u64]) -> usize {
+    let mut len = varint_len(vertex as u64) + varint_len(count as u64) + varint_len(hashes.len() as u64);
+    let mut prev = 0u64;
+    for (i, &h) in hashes.iter().enumerate() {
+        len += if i == 0 { varint_len(h) } else { varint_len(h - prev - 1) };
+        prev = h;
+    }
+    len
+}
+
+/// Decodes a sketch payload into `(vertex, exact count)`, appending the
+/// hash minima into the caller's scratch (cleared first). Bounds-checked
+/// like every other decode path: truncated buffers, counts the payload
+/// cannot hold, and delta-chain overflow all return a [`DecodeError`]
+/// instead of panicking; trailing bytes are rejected (the payload must be
+/// exactly one sketch).
+pub fn decode_sketch_into(
+    bytes: &[u8],
+    out: &mut Vec<u64>,
+) -> Result<(Vertex, u32), DecodeError> {
+    out.clear();
+    let mut r = Reader::new(bytes);
+    let vertex = r.varint_u32()?;
+    let count = r.varint_u32()?;
+    let n = r.varint_u32()? as usize;
+    // Each hash takes at least one byte; reject counts the remaining
+    // payload cannot possibly hold before sizing anything from them.
+    if n > r.remaining() {
+        return Err(DecodeError::Truncated);
+    }
+    out.reserve(n);
+    let mut prev = 0u64;
+    for i in 0..n {
+        let x = r.varint()?;
+        let h = if i == 0 {
+            x
+        } else {
+            prev.checked_add(x).and_then(|v| v.checked_add(1)).ok_or(DecodeError::Overflow)?
+        };
+        prev = h;
+        out.push(h);
+    }
+    if !r.is_empty() {
+        return Err(DecodeError::Truncated);
+    }
+    Ok((vertex, count))
+}
+
 /// Wire length of [`encode_run`] output without allocating (the simulated
 /// backend charges byte costs without materializing payloads).
 pub fn encoded_run_len(vertex: Vertex, ids: &[SampleId], compress: bool) -> usize {
@@ -624,6 +698,59 @@ mod tests {
         assert_eq!(run_decode_allocs(), before, "RunView must not allocate-decode");
         let _ = decode_run(&enc).unwrap();
         assert_eq!(run_decode_allocs(), before + 1);
+    }
+
+    #[test]
+    fn sketch_roundtrip_and_len() {
+        let cases: Vec<(Vertex, u32, Vec<u64>)> = vec![
+            (0, 0, vec![]),
+            (7, 3, vec![42]),
+            (1000, 5000, vec![1, 2, 900, 1 << 40, u64::MAX]),
+            (u32::MAX, u32::MAX, vec![0, u64::MAX - 1, u64::MAX]),
+        ];
+        let mut scratch = Vec::new();
+        for (v, count, hashes) in cases {
+            let mut enc = Vec::new();
+            encode_sketch_into(&mut enc, v, count, &hashes);
+            assert_eq!(enc.len(), encoded_sketch_len(v, count, &hashes));
+            let (gv, gc) = decode_sketch_into(&enc, &mut scratch).unwrap();
+            assert_eq!((gv, gc), (v, count));
+            assert_eq!(scratch, hashes);
+        }
+    }
+
+    #[test]
+    fn sketch_decode_is_bounds_checked_and_panic_free() {
+        let mut enc = Vec::new();
+        encode_sketch_into(&mut enc, 9, 120, &[3, 17, 1 << 33, 1 << 50]);
+        let mut scratch = Vec::new();
+        // Every truncation errors rather than panicking.
+        for cut in 0..enc.len() {
+            assert!(decode_sketch_into(&enc[..cut], &mut scratch).is_err());
+        }
+        // Trailing garbage is rejected — a payload is exactly one sketch.
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(decode_sketch_into(&padded, &mut scratch).is_err());
+        // A hash count the payload cannot hold is rejected up front.
+        let mut huge = Vec::new();
+        put_varint(&mut huge, 1); // vertex
+        put_varint(&mut huge, 1); // count
+        put_varint(&mut huge, u32::MAX as u64); // hash count
+        assert_eq!(decode_sketch_into(&huge, &mut scratch), Err(DecodeError::Truncated));
+        // Mutated-byte fuzz: decode may succeed or fail, never panic; any
+        // accepted payload is strictly ascending by construction.
+        let mut rng = Xoshiro256pp::seeded(0x5BE7C4);
+        for _ in 0..300 {
+            let mut m = enc.clone();
+            for _ in 0..3 {
+                let i = rng.gen_range(m.len() as u64) as usize;
+                m[i] ^= 1 << rng.gen_range(8);
+            }
+            if decode_sketch_into(&m, &mut scratch).is_ok() {
+                assert!(scratch.windows(2).all(|w| w[0] < w[1]), "{scratch:?}");
+            }
+        }
     }
 
     #[test]

@@ -32,12 +32,34 @@ pub struct MartingaleDriver {
     round: u32,
     theta_hat: u64,
     finished: bool,
+    /// Error-adaptive stopping tolerance (PR 10): `0.0` = off (the
+    /// bit-identical default). When > 0, the driver finalizes at the
+    /// *current* θ̂ as soon as two consecutive rounds' coverage fractions
+    /// `C(S)/θ̂` agree within relative ε — the estimate has stabilized, so
+    /// further sample doublings cannot move the seeds by more than the
+    /// tolerated error. Applied after the goodness check (a goodness pass
+    /// still wins) and before the doubling step.
+    eps_adaptive: f64,
+    /// Previous round's coverage fraction, once one exists.
+    prev_frac: Option<f64>,
 }
 
 impl MartingaleDriver {
     pub fn new(params: ImmParams) -> Self {
         let theta_hat = params.theta_initial();
-        Self { params, round: 1, theta_hat, finished: false }
+        Self { params, round: 1, theta_hat, finished: false, eps_adaptive: 0.0, prev_frac: None }
+    }
+
+    /// A driver with error-adaptive early stopping enabled (`eps` ∈ (0,1);
+    /// `0.0` reproduces [`MartingaleDriver::new`] exactly).
+    pub fn with_adaptive(params: ImmParams, eps: f64) -> Self {
+        assert!(
+            eps == 0.0 || (0.0..1.0).contains(&eps),
+            "eps-adaptive must be 0 (off) or in [0, 1), got {eps}"
+        );
+        let mut d = Self::new(params);
+        d.eps_adaptive = eps;
+        d
     }
 
     /// Current round's sample budget θ̂.
@@ -56,6 +78,28 @@ impl MartingaleDriver {
         if let Some(lb) = self.params.check_goodness(coverage, self.theta_hat, self.round) {
             self.finished = true;
             return RoundDecision::Finalize { theta: self.params.theta_final(lb), lower_bound: lb };
+        }
+        // Error-adaptive stop: once the coverage fraction has stabilized
+        // to within relative ε across consecutive doublings, stop drawing
+        // — finalize from the current estimate exactly as the
+        // rounds-exhausted branch does, but rounds earlier.
+        if self.eps_adaptive > 0.0 && self.round >= 2 {
+            let frac = coverage as f64 / self.theta_hat as f64;
+            if let Some(prev) = self.prev_frac {
+                let gap = (frac - prev).abs() / prev.max(f64::MIN_POSITIVE);
+                if gap <= self.eps_adaptive {
+                    let est = self.params.n as f64 * frac;
+                    let lb = (est / (1.0 + self.params.eps_prime())).max(1.0);
+                    self.finished = true;
+                    return RoundDecision::Finalize {
+                        theta: self.params.theta_final(lb),
+                        lower_bound: lb,
+                    };
+                }
+            }
+        }
+        if self.eps_adaptive > 0.0 {
+            self.prev_frac = Some(coverage as f64 / self.theta_hat as f64);
         }
         if self.round >= self.params.max_rounds() {
             // Rounds exhausted: fall back to the current estimate as LB
@@ -126,6 +170,76 @@ mod tests {
         let th = d.theta_hat();
         let _ = d.report(th);
         let _ = d.report(th);
+    }
+
+    #[test]
+    fn adaptive_zero_is_bit_identical_to_default() {
+        // ε = 0 must reproduce the classic driver decision-for-decision.
+        let mut a = MartingaleDriver::new(params());
+        let mut b = MartingaleDriver::with_adaptive(params(), 0.0);
+        let covs = [3u64, 7, 15, 40, 200, 900];
+        for &c in &covs {
+            let da = a.report(c);
+            let db = b.report(c);
+            assert_eq!(da, db);
+            if matches!(da, RoundDecision::Finalize { .. }) {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_stops_earlier_on_stable_coverage_fraction() {
+        // Feed both drivers the same stable coverage *fraction* (coverage
+        // scales with θ̂, so the estimate never moves): the adaptive
+        // driver must finalize in strictly fewer rounds, and its final θ
+        // must not exceed the exhaustive driver's (same LB formula, same
+        // estimate).
+        // coverage = θ̂/8 exactly: the fraction is identical every round
+        // (zero drift), and the implied influence estimate n/8 is too low
+        // for the early goodness rounds.
+        let run = |mut d: MartingaleDriver| {
+            let mut rounds = 0u32;
+            loop {
+                rounds += 1;
+                let cov = d.theta_hat() / 8;
+                match d.report(cov) {
+                    RoundDecision::Continue { .. } => continue,
+                    RoundDecision::Finalize { theta, .. } => return (rounds, theta),
+                }
+            }
+        };
+        let (r_exact, th_exact) = run(MartingaleDriver::new(params()));
+        let (r_adapt, th_adapt) = run(MartingaleDriver::with_adaptive(params(), 0.05));
+        assert!(
+            r_adapt < r_exact,
+            "adaptive must stop earlier: {r_adapt} vs {r_exact} rounds"
+        );
+        assert_eq!(r_adapt, 2, "a zero-drift fraction stops at the first comparison");
+        assert!(th_adapt <= th_exact.saturating_mul(2), "{th_adapt} vs {th_exact}");
+    }
+
+    #[test]
+    fn adaptive_keeps_doubling_while_estimate_moves() {
+        // A coverage fraction that keeps drifting by more than ε must not
+        // trigger the adaptive stop: fractions 1/4, 1/8, 1/16 (drift 50%
+        // per round ≫ 5%) all continue, and the too-low influence
+        // estimates keep goodness from firing either.
+        let mut d = MartingaleDriver::with_adaptive(params(), 0.05);
+        for (round, div) in [(1u32, 4u64), (2, 8), (3, 16)] {
+            let cov = d.theta_hat() / div;
+            assert!(cov > 0, "round {round} coverage underflowed");
+            assert!(
+                matches!(d.report(cov), RoundDecision::Continue { .. }),
+                "round {round} must continue"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "eps-adaptive")]
+    fn adaptive_rejects_out_of_range_eps() {
+        let _ = MartingaleDriver::with_adaptive(params(), 1.0);
     }
 
     #[test]

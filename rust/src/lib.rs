@@ -210,6 +210,52 @@
 //! [`metrics::Breakdown`] and the CLI `scorer:` stats line; ci.sh gates
 //! `--scorer batch` vs `scalar` seed equality across transports and
 //! records the A/B in `BENCH_PR9.json` via `benches/micro_scorer.rs`.
+//!
+//! ## Sketch coverage & error-adaptive sampling (PR 10)
+//!
+//! The streaming receiver's per-bucket coverage state has a second
+//! backend: `--coverage sketch` / `GREEDIRIS_COVERAGE` replaces each
+//! bucket's exact θ/8-byte bitmap with a fixed-width bottom-w KMV
+//! cardinality sketch ([`maxcover::sketch::CardSketch`], ~`8·width`
+//! bytes, `--sketch-width`, default 1024). The contract:
+//!
+//! - **Determinism.** Sample ids are hashed with splitmix64 under a key
+//!   derived from the run seed ([`maxcover::sketch::sketch_key`]), so
+//!   every rank — and the simulated engine — sees identical hashes.
+//!   Senders pre-truncate each covering run to its bottom-w hashes and
+//!   ship them as a tagged `MSG_SKETCH` payload (strictly-ascending
+//!   delta varints, [`distributed::wire::encode_sketch_into`]); KMV
+//!   mergeability makes that truncation lossless for the receiver's
+//!   merged sketch, which is why local offers and wire offers produce
+//!   bit-identical bucket state. Results are a pure function of
+//!   config+seed per transport; while every bucket sketch stays below
+//!   `width`, estimates are exact integers and the whole path is
+//!   bit-identical to exact mode (pinned by tests at `width > θ`).
+//! - **Error bounds.** A saturated width-w sketch estimates cardinality
+//!   within `1/√(w−2)` relative standard error
+//!   ([`maxcover::sketch::rel_error`]); the bucket admission threshold
+//!   and the sender-visible prune floor are deflated by `1 + ε` so
+//!   pruning stays conservative under estimate noise
+//!   ([`maxcover::streaming::BucketBank::prune_floor`]). Exact mode
+//!   (default) remains the golden reference.
+//! - **Wire/checkpoint compatibility.** `coverage`, `sketch_width`, and
+//!   `eps_adaptive` change results, so — unlike `--scorer` — they ride
+//!   *inside* the process HELLO config blob and the checkpoint
+//!   fingerprint (appended at the end; mixed versions fail loudly at
+//!   HELLO).
+//!
+//! Independently, `--eps-adaptive ε` arms an error-adaptive round
+//! controller in the martingale driver
+//! ([`imm::MartingaleDriver::with_adaptive`]): once consecutive
+//! estimation rounds' coverage fractions agree within relative ε, the
+//! driver finalizes from the current estimate instead of doubling θ̂
+//! again — measurably fewer RR samples at a bounded influence cost
+//! (`0.0`, the default, is bit-identical to the classic schedule).
+//! Receiver coverage peaks (exact vs sketch) and merged-index bytes
+//! surface in [`metrics::MemStats`] and the CLI `mem:` stats line;
+//! `benches/micro_sketch.rs` records the exact-vs-sketch A/B in
+//! `BENCH_PR10.json`, and ci.sh gates both the wide-sketch bit-identity
+//! and the narrow-sketch quality bound across transports.
 
 #![cfg_attr(all(feature = "simd", greediris_portable_simd), feature(portable_simd))]
 // Style lints that conflict with this crate's deliberate idiom (explicit

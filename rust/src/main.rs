@@ -22,7 +22,7 @@ use greediris::exp::inputs::{analog, build_analog, weights_for, ANALOGS};
 use greediris::exp::tables::{self, BenchScale, GraphCache};
 use greediris::graph::io::load_snap;
 use greediris::graph::Graph;
-use greediris::maxcover::ScorerKind;
+use greediris::maxcover::{CoverageKind, ScorerKind};
 use greediris::runtime::XlaScorer;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -34,6 +34,7 @@ USAGE:
   greediris run [--input NAME | --file PATH] [--algorithm A] [--model IC|LT]
                 [--m N] [--k N] [--eps F] [--alpha F] [--theta N]
                 [--solver lazy|dense-cpu|dense-xla] [--scorer auto|scalar|batch]
+                [--coverage exact|sketch] [--sketch-width N] [--eps-adaptive F]
                 [--sims N] [--seed N]
                 [--s1-threads N] [--transport sim|threads|process]
                 [--wire varint|raw] [--prune on|off]
@@ -88,6 +89,19 @@ candidate-count threshold. Seed sets are bit-identical across all
 three — the scorer changes dispatch shape, never results. When batched
 dispatch ran, the stats block prints a `scorer:` line (dispatches,
 tiles, candidates/dispatch, reduce time, threads).
+--coverage picks the receiver's coverage backend: exact (default) keeps
+per-bucket bitmaps (~theta/8 bytes each; the golden reference,
+bit-identical across transports), sketch scores admissions from
+fixed-width KMV cardinality sketches (~8·width bytes per bucket,
+deterministic per-seed hashing; bottom-w payloads ride the S3 wire as a
+tagged message). Sketch mode trades a bounded 1/sqrt(width-2) relative
+coverage error for receiver memory; --sketch-width N sets the width
+(default 1024 ≈ 3.1% error). A `mem:` stats line reports the peak
+receiver coverage bytes (exact vs sketch) and merged-index bytes.
+--eps-adaptive F (default 0 = off) stops the martingale estimation
+rounds early once consecutive rounds' coverage fractions agree within
+relative F — fewer RR samples drawn at a bounded influence error; 0
+keeps the classic (bit-identical) schedule.
 --fabric-bind HOST:PORT makes rank 0 listen on a routable address so
 workers on other machines can join (default: ephemeral loopback).
 --hosts FILE places workers across machines: one host per line (#
@@ -103,6 +117,8 @@ Env: GREEDIRIS_BENCH_SCALE=quick|full controls `exp` effort;
      GREEDIRIS_TRANSPORT=sim|threads|process sets the default transport
      (unknown values are an error, never a silent fallback);
      GREEDIRIS_SCORER=auto|scalar|batch sets the default --scorer
+     (unknown values are an error, never a silent fallback);
+     GREEDIRIS_COVERAGE=exact|sketch sets the default --coverage
      (unknown values are an error, never a silent fallback);
      GREEDIRIS_SCORER_TILE / GREEDIRIS_SCORER_THREADS size the batched
      backend's tiles and pool (defaults: 64, min(cores, 8));
@@ -264,6 +280,23 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     if let Some(s) = flags.map.get("scorer") {
         cfg = cfg.with_scorer(ScorerKind::parse(s).map_err(|e| anyhow!(e))?);
     }
+    if let Some(c) = flags.map.get("coverage") {
+        cfg = cfg.with_coverage(CoverageKind::parse(c).map_err(|e| anyhow!(e))?);
+    }
+    if let Some(w) = flags.map.get("sketch-width") {
+        let w: usize = w.parse().map_err(|e| anyhow!("bad value for --sketch-width: {e}"))?;
+        if w < 3 {
+            bail!("--sketch-width must be at least 3 (got {w})");
+        }
+        cfg = cfg.with_sketch_width(w);
+    }
+    if let Some(e) = flags.map.get("eps-adaptive") {
+        let e: f64 = e.parse().map_err(|e| anyhow!("bad value for --eps-adaptive: {e}"))?;
+        if !(e == 0.0 || (0.0..1.0).contains(&e)) {
+            bail!("--eps-adaptive must be 0 (off) or in [0, 1) (got {e})");
+        }
+        cfg = cfg.with_eps_adaptive(e);
+    }
     let transport_kind = cfg.transport;
     if transport_kind == TransportKind::Process {
         // Surface a missing worker binary as a clean error before any
@@ -315,6 +348,9 @@ fn cmd_run(flags: &Flags) -> Result<()> {
     }
     if !result.breakdown.scorer.is_zero() {
         println!("scorer: {}", result.breakdown.scorer);
+    }
+    if !result.breakdown.mem.is_zero() {
+        println!("mem: {}", result.breakdown.mem);
     }
     println!(
         "comm: all-to-all {} B (raw {} B) | stream {} B (raw {} B, {} seeds, {} pruned) | reductions {} B",
@@ -423,6 +459,9 @@ fn main() -> Result<()> {
         bail!("{e}");
     }
     if let Err(e) = ScorerKind::from_env() {
+        bail!("{e}");
+    }
+    if let Err(e) = CoverageKind::from_env() {
         bail!("{e}");
     }
     let args: Vec<String> = std::env::args().skip(1).collect();

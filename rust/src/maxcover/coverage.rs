@@ -378,6 +378,14 @@ impl InvertedIndex {
         self.ids.len()
     }
 
+    /// Heap bytes of the CSR storage (vertices + offsets + ids) — the
+    /// quantity the `mem:` stats line tracks as the merged-index peak.
+    pub fn bytes(&self) -> usize {
+        self.vertices.capacity() * std::mem::size_of::<Vertex>()
+            + self.offsets.capacity() * std::mem::size_of::<u32>()
+            + self.ids.capacity() * std::mem::size_of::<SampleId>()
+    }
+
     /// The id run of the `i`-th vertex.
     #[inline]
     pub fn run(&self, i: usize) -> &[SampleId] {
@@ -439,6 +447,7 @@ impl InvertedIndex {
         } else {
             self.merge_runs_kway(streams, runs, added);
         }
+        crate::metrics::mem_note_index(self.bytes() as u64);
     }
 
     /// Forces the k-way run-merge path (benches/tests).
@@ -576,6 +585,7 @@ impl InvertedIndex {
         self.vertices = vertices;
         self.offsets = offsets;
         self.ids = ids;
+        crate::metrics::mem_note_index(self.bytes() as u64);
     }
 
     /// Counting-sort merge: count ids per vertex (existing + new), prefix-sum

@@ -31,6 +31,14 @@
 //!   runtime-dispatch / `simd`-feature wide lanes) every popcount consumer
 //!   above is built on: streaming admission, dense CPU scoring, the
 //!   lazy/threshold re-evaluation sweeps, and the batched tile workers.
+//! - [`sketch`] — mergeable fixed-width KMV cardinality sketches (PR 10):
+//!   the `--coverage sketch` backend that replaces per-bucket exact
+//!   bitmaps with ~`8·width`-byte bottom-w sketches at the streaming
+//!   receiver, deterministic per-seed hashing, sender-side pre-truncation
+//!   riding the S3 wire as a tagged payload, and the `1/√(w−2)` error
+//!   model the conservative prune floor and the `--eps-adaptive` round
+//!   controller are calibrated against. Exact mode stays the default and
+//!   the golden reference.
 //!
 //! All sparse solvers consume the borrowed CSR view
 //! [`coverage::SetSystemView`]; rank state accumulates shuffled covering
@@ -43,6 +51,7 @@ pub mod coverage;
 pub mod dense;
 pub mod greedy;
 pub mod lazy;
+pub mod sketch;
 pub mod stochastic;
 pub mod streaming;
 pub mod threshold;
@@ -56,6 +65,7 @@ pub use dense::{
 };
 pub use greedy::greedy_max_cover;
 pub use lazy::lazy_greedy_max_cover;
+pub use sketch::{CardSketch, CoverageKind, CoverageMode};
 pub use stochastic::stochastic_greedy_max_cover;
 pub use streaming::StreamingMaxCover;
 pub use threshold::{threshold_greedy_max_cover, threshold_greedy_max_cover_tiled};

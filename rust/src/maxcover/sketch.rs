@@ -1,0 +1,356 @@
+//! Mergeable fixed-width cardinality sketches (KMV / "bottom-w").
+//!
+//! A [`CardSketch`] keeps the `w` smallest distinct 64-bit hashes of the
+//! sample ids it has absorbed. Below `w` distinct elements the estimate is
+//! the *exact* count (the sketch degenerates to a sorted set), so admission
+//! decisions in the sub-width regime are bit-identical to exact coverage.
+//! At or above `w` elements the classic KMV estimator applies:
+//!
+//! ```text
+//!   n̂ = (w − 1) / v_w       where v_w = (h_w + 1) / 2^64
+//! ```
+//!
+//! with relative standard error ≈ `1/√(w−2)` ([`rel_error`]).
+//!
+//! Determinism and mergeability are the two load-bearing properties:
+//!
+//! * **Determinism.** Hashing is a fixed splitmix64 finalizer keyed from
+//!   the run seed ([`sketch_key`]); the same `(seed, id)` pair hashes
+//!   identically on every rank, so sender-side pre-hashed payloads and
+//!   receiver-side hashing agree bit-for-bit.
+//! * **Mergeability.** `bottom_w(A ∪ B) = bottom_w(bottom_w(A) ∪
+//!   bottom_w(B))` exactly — truncating to the `w` smallest hashes before
+//!   shipping loses nothing the merged sketch would have kept. This is why
+//!   sketches can ride the S3 wire pre-truncated ([`bottom_w`]) and the
+//!   receiver's merged state is independent of how runs were partitioned
+//!   across senders.
+//!
+//! The threshold-floor interaction lives in `maxcover::streaming`: in
+//! sketch mode the published prune floor is deflated by `1 + rel_error` so
+//! a sender never drops a run that an (over)estimating receiver might have
+//! admitted — conservative, quality-bound-preserving pruning rather than
+//! the exact mode's lossless guarantee.
+
+use crate::{SampleId, Vertex};
+
+/// Coverage accounting backend selected by `--coverage` /
+/// `GREEDIRIS_COVERAGE`. [`CoverageKind::Exact`] (the default) is the
+/// golden reference: per-bucket bitmaps, lossless pruning, bit-identical
+/// across transports. [`CoverageKind::Sketch`] scores offers from KMV
+/// estimates instead.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CoverageKind {
+    /// Exact per-bucket coverage bitmaps (default, golden reference).
+    #[default]
+    Exact,
+    /// Fixed-width KMV cardinality sketches per bucket.
+    Sketch,
+}
+
+impl CoverageKind {
+    /// Parses a `--coverage` value. Unknown names are a hard error so a
+    /// typo cannot silently fall back to a different backend.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "exact" => Ok(CoverageKind::Exact),
+            "sketch" => Ok(CoverageKind::Sketch),
+            other => Err(format!(
+                "unknown coverage mode '{other}' (expected exact|sketch)"
+            )),
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CoverageKind::Exact => "exact",
+            CoverageKind::Sketch => "sketch",
+        }
+    }
+
+    /// Reads `GREEDIRIS_COVERAGE`. `Ok(None)` when unset; a set-but-invalid
+    /// value is a hard error, matching the `--scorer` / `--transport`
+    /// handling.
+    pub fn from_env() -> Result<Option<Self>, String> {
+        match std::env::var("GREEDIRIS_COVERAGE") {
+            Ok(v) => Self::parse(&v).map(Some).map_err(|e| format!("GREEDIRIS_COVERAGE: {e}")),
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+/// Resolved per-run coverage mode handed to the streaming receiver. The
+/// sketch variant carries the width and the seed-derived hash key so every
+/// component (sim walk, wire senders, threaded receivers) hashes
+/// identically without re-deriving from a `Config`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoverageMode {
+    /// Exact bitmaps.
+    Exact,
+    /// KMV sketches of `width` minima under the keyed hash.
+    Sketch {
+        /// Number of minima retained per bucket (≥ 3).
+        width: usize,
+        /// splitmix64 key derived from the run seed ([`sketch_key`]).
+        key: u64,
+    },
+}
+
+impl CoverageMode {
+    /// True when scoring from sketches.
+    pub fn is_sketch(self) -> bool {
+        matches!(self, CoverageMode::Sketch { .. })
+    }
+}
+
+/// Relative standard error of the KMV estimator at a given width,
+/// ≈ `1/√(w−2)`. Width 1026 ⇒ ~3.1%; width 258 ⇒ ~6.2%.
+pub fn rel_error(width: usize) -> f64 {
+    assert!(width >= 3, "sketch width must be >= 3");
+    1.0 / ((width - 2) as f64).sqrt()
+}
+
+/// Derives the sketch hash key from the run seed. A fixed odd constant
+/// offset keeps the key distinct from the seed's other derived streams
+/// (samplers, shuffles) without any extra config surface.
+pub fn sketch_key(seed: u64) -> u64 {
+    seed ^ 0x9E6C_63D0_876A_3F6B
+}
+
+/// splitmix64 finalizer over `(key, id)` — a fixed, portable, seedable
+/// 64-bit hash. Every rank computes the same value for the same pair.
+#[inline]
+pub fn hash_id(key: u64, id: u64) -> u64 {
+    let mut z = id.wrapping_add(key).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hashes a covering run's sample ids under `key` and writes the `width`
+/// smallest *distinct* hashes into `out`, sorted ascending. This is the
+/// sender-side pre-truncation: by KMV mergeability the receiver's merged
+/// sketch is identical whether it saw the full run or only this bottom-w.
+pub fn bottom_w(key: u64, ids: &[SampleId], width: usize, out: &mut Vec<u64>) {
+    out.clear();
+    out.extend(ids.iter().map(|&id| hash_id(key, id as u64)));
+    out.sort_unstable();
+    out.dedup();
+    out.truncate(width);
+}
+
+/// A KMV bottom-w sketch: the `width` smallest distinct hashes seen so
+/// far, sorted ascending. ~`8·width` bytes regardless of the true
+/// cardinality — the memory lever for huge m·θ.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CardSketch {
+    width: usize,
+    hashes: Vec<u64>,
+}
+
+impl CardSketch {
+    /// An empty sketch of the given width (≥ 3, see [`rel_error`]).
+    pub fn new(width: usize) -> Self {
+        assert!(width >= 3, "sketch width must be >= 3");
+        CardSketch { width, hashes: Vec::new() }
+    }
+
+    /// Retained width.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of hashes currently retained (≤ width).
+    pub fn len(&self) -> usize {
+        self.hashes.len()
+    }
+
+    /// True when nothing has been absorbed.
+    pub fn is_empty(&self) -> bool {
+        self.hashes.is_empty()
+    }
+
+    /// Heap bytes held by the retained minima.
+    pub fn bytes(&self) -> usize {
+        self.hashes.capacity() * std::mem::size_of::<u64>()
+    }
+
+    /// Absorbs one pre-computed hash.
+    pub fn insert_hash(&mut self, h: u64) {
+        if self.hashes.len() == self.width {
+            // Full: only a hash strictly below the current max can enter.
+            if h >= *self.hashes.last().unwrap() {
+                return;
+            }
+        }
+        if let Err(pos) = self.hashes.binary_search(&h) {
+            self.hashes.insert(pos, h);
+            self.hashes.truncate(self.width);
+        }
+    }
+
+    /// Merges a sorted-ascending, distinct hash slice (another sketch's
+    /// retained minima, or a [`bottom_w`] payload). Linear merge keeping
+    /// the `width` smallest distinct values.
+    pub fn merge_sorted(&mut self, other: &[u64]) {
+        debug_assert!(other.windows(2).all(|w| w[0] < w[1]));
+        if other.is_empty() {
+            return;
+        }
+        let mut merged = Vec::with_capacity((self.hashes.len() + other.len()).min(self.width));
+        let (mut i, mut j) = (0usize, 0usize);
+        while merged.len() < self.width && (i < self.hashes.len() || j < other.len()) {
+            let take_a = match (self.hashes.get(i), other.get(j)) {
+                (Some(&a), Some(&b)) => {
+                    if a == b {
+                        j += 1; // dedup across the two inputs
+                    }
+                    a <= b
+                }
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => unreachable!(),
+            };
+            if take_a {
+                merged.push(self.hashes[i]);
+                i += 1;
+            } else {
+                merged.push(other[j]);
+                j += 1;
+            }
+        }
+        self.hashes = merged;
+    }
+
+    /// The retained minima, sorted ascending (what rides the wire).
+    pub fn hashes(&self) -> &[u64] {
+        &self.hashes
+    }
+
+    /// Cardinality estimate. Exact (an integer-valued f64) while fewer
+    /// than `width` distinct hashes have been seen; the KMV estimator
+    /// `(w−1)/v_w` once the sketch is full.
+    pub fn estimate(&self) -> f64 {
+        if self.hashes.len() < self.width {
+            self.hashes.len() as f64
+        } else {
+            let kth = self.hashes[self.width - 1];
+            // v_w = (kth + 1) / 2^64, so n̂ = (w−1) · 2^64 / (kth + 1).
+            (self.width - 1) as f64 * (u64::MAX as f64 + 1.0) / (kth as f64 + 1.0)
+        }
+    }
+}
+
+/// Convenience: hash a raw vertex id (sample ids are `u64`, vertex ids
+/// widen losslessly).
+#[inline]
+pub fn hash_vertex(key: u64, v: Vertex) -> u64 {
+    hash_id(key, v as u64)
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sketch_of(key: u64, ids: impl Iterator<Item = u64>, width: usize) -> CardSketch {
+        let mut s = CardSketch::new(width);
+        for id in ids {
+            s.insert_hash(hash_id(key, id));
+        }
+        s
+    }
+
+    #[test]
+    fn exact_below_width() {
+        let key = sketch_key(0x5EED);
+        for n in [0usize, 1, 7, 63] {
+            let s = sketch_of(key, 0..n as u64, 64);
+            assert_eq!(s.estimate(), n as f64, "sub-width estimate must be exact");
+        }
+    }
+
+    #[test]
+    fn estimates_within_error_bound_across_seeds_and_widths() {
+        // Deterministic property suite: for n >> width the KMV estimate
+        // must land within 5σ of truth (σ = rel_error(width)). 5σ leaves
+        // vast headroom over the ~1σ typical deviation while still
+        // pinning the estimator: a broken v_w or off-by-one in the
+        // (w−1) numerator blows past it immediately.
+        for &width in &[66usize, 258, 1026] {
+            for seed in [0x5EEDu64, 1, 42, 0xDEAD_BEEF] {
+                let key = sketch_key(seed);
+                let n = 50_000u64;
+                let s = sketch_of(key, (0..n).map(|i| i.wrapping_mul(0x9E37).wrapping_add(seed)), width);
+                let est = s.estimate();
+                let rel = (est - n as f64).abs() / n as f64;
+                let bound = 5.0 * rel_error(width);
+                assert!(
+                    rel <= bound,
+                    "width {width} seed {seed:#x}: rel err {rel:.4} > bound {bound:.4}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_of_truncated_parts_equals_sketch_of_union() {
+        // bottom_w(A ∪ B) == merge(bottom_w(A), bottom_w(B)) — the wire
+        // pre-truncation identity.
+        let key = sketch_key(7);
+        let width = 32;
+        let a: Vec<SampleId> = (0..500).collect();
+        let b: Vec<SampleId> = (250..900).collect();
+
+        let mut ba = Vec::new();
+        let mut bb = Vec::new();
+        bottom_w(key, &a, width, &mut ba);
+        bottom_w(key, &b, width, &mut bb);
+        let mut merged = CardSketch::new(width);
+        merged.merge_sorted(&ba);
+        merged.merge_sorted(&bb);
+
+        let direct = sketch_of(key, 0..900u64, width);
+        assert_eq!(merged.hashes(), direct.hashes());
+        assert_eq!(merged.estimate(), direct.estimate());
+    }
+
+    #[test]
+    fn insert_is_order_invariant_and_deduplicating() {
+        let key = sketch_key(11);
+        let fwd = sketch_of(key, 0..100, 16);
+        let mut rev = CardSketch::new(16);
+        for id in (0..100).rev() {
+            rev.insert_hash(hash_id(key, id));
+            rev.insert_hash(hash_id(key, id)); // duplicates are no-ops
+        }
+        assert_eq!(fwd.hashes(), rev.hashes());
+        assert!(fwd.hashes().windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn hashing_is_deterministic_and_key_sensitive() {
+        assert_eq!(hash_id(1, 2), hash_id(1, 2));
+        assert_ne!(hash_id(1, 2), hash_id(2, 2));
+        assert_ne!(sketch_key(1), sketch_key(2));
+    }
+
+    #[test]
+    fn coverage_kind_parses_and_rejects() {
+        assert_eq!(CoverageKind::parse("exact").unwrap(), CoverageKind::Exact);
+        assert_eq!(CoverageKind::parse("sketch").unwrap(), CoverageKind::Sketch);
+        assert!(CoverageKind::parse("approx").is_err());
+        assert_eq!(CoverageKind::default(), CoverageKind::Exact);
+    }
+
+    #[test]
+    fn bottom_w_is_sorted_distinct_truncated() {
+        let key = sketch_key(3);
+        let ids: Vec<SampleId> = (0..200).chain(0..200).collect();
+        let mut out = Vec::new();
+        bottom_w(key, &ids, 24, &mut out);
+        assert_eq!(out.len(), 24);
+        assert!(out.windows(2).all(|w| w[0] < w[1]));
+    }
+}

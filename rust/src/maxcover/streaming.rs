@@ -46,7 +46,24 @@
 //! lossless: the final bucket state is bit-identical to the unpruned
 //! stream (pinned by tests here and in `tests/transport.rs`).
 
+//! ## Sketch coverage mode (PR 10)
+//!
+//! With [`CoverageMode::Sketch`] each bucket scores offers from a
+//! fixed-width KMV [`CardSketch`](super::sketch::CardSketch) instead of an
+//! exact bitmap: ~`8·width` bytes per bucket regardless of θ — the memory
+//! lever for huge m·θ. The stream order, `l_seen` bookkeeping, and bucket
+//! materialization schedule are *identical* to exact mode (they depend
+//! only on declared run lengths), so the bucket set matches bit-for-bit;
+//! only admission gains are estimates. Below `width` distinct ids per
+//! bucket the estimates are exact integers, so sketch mode with a width
+//! ≥ θ is bit-identical to exact mode end-to-end (pinned below). The
+//! published [`BucketBank::prune_floor`] is deflated by `1 + rel_error`
+//! in sketch mode so sender-side pruning stays conservative under
+//! estimate error — quality-bound preserving rather than exactly
+//! lossless.
+
 use super::bitset::{kernels, Kernels, OfferMask};
+use super::sketch::{rel_error, CardSketch, CoverageMode};
 use super::CoverSolution;
 use crate::{SampleId, Vertex};
 
@@ -69,7 +86,26 @@ pub struct Burst {
     ids: Vec<SampleId>,
     /// Longest run in the burst — the upper bound any item's marginal gain
     /// can reach, maintained incrementally for the fused admission check.
+    /// Covers both the exact and the sketch arena (a sketch item's declared
+    /// exact count bounds its gain the same way).
     max_run: usize,
+    /// Sketch-arena twin of the exact arena: pre-hashed bottom-w payloads
+    /// ([`MSG_SKETCH`](crate::coordinator) wire deliveries) with their
+    /// declared exact run lengths. A burst may carry items in either or
+    /// both arenas; [`BucketBank::offer_burst`] sweeps both.
+    sk_vertices: Vec<Vertex>,
+    sk_counts: Vec<u32>,
+    sk_offsets: Vec<u32>,
+    sk_hashes: Vec<u64>,
+}
+
+/// One sketch-arena element: the declared exact run length plus the
+/// bottom-w hashes, borrowing from the publishing burst.
+#[derive(Clone, Copy, Debug)]
+pub struct SketchItem<'a> {
+    pub vertex: Vertex,
+    pub count: usize,
+    pub hashes: &'a [u64],
 }
 
 impl Default for Burst {
@@ -80,7 +116,16 @@ impl Default for Burst {
 
 impl Burst {
     pub fn new() -> Self {
-        Self { vertices: Vec::new(), offsets: vec![0], ids: Vec::new(), max_run: 0 }
+        Self {
+            vertices: Vec::new(),
+            offsets: vec![0],
+            ids: Vec::new(),
+            max_run: 0,
+            sk_vertices: Vec::new(),
+            sk_counts: Vec::new(),
+            sk_offsets: vec![0],
+            sk_hashes: Vec::new(),
+        }
     }
 
     /// A single-element burst (convenience for tests and item-at-a-time
@@ -113,6 +158,16 @@ impl Burst {
         self.max_run = self.max_run.max(run.len());
     }
 
+    /// Appends one pre-hashed sketch element (`hashes` sorted-ascending
+    /// distinct bottom-w, `count` the exact run length it summarizes).
+    pub fn push_sketch(&mut self, vertex: Vertex, count: u32, hashes: &[u64]) {
+        self.sk_vertices.push(vertex);
+        self.sk_counts.push(count);
+        self.sk_hashes.extend_from_slice(hashes);
+        self.sk_offsets.push(self.sk_hashes.len() as u32);
+        self.max_run = self.max_run.max(count as usize);
+    }
+
     /// Resets the burst for reuse without freeing the arena.
     pub fn clear(&mut self) {
         self.vertices.clear();
@@ -120,15 +175,30 @@ impl Burst {
         self.offsets.clear();
         self.offsets.push(0);
         self.max_run = 0;
+        self.sk_vertices.clear();
+        self.sk_counts.clear();
+        self.sk_offsets.clear();
+        self.sk_offsets.push(0);
+        self.sk_hashes.clear();
     }
 
-    /// Number of elements in the burst.
+    /// Number of exact-arena elements in the burst.
     pub fn len(&self) -> usize {
         self.vertices.len()
     }
 
+    /// Number of sketch-arena elements in the burst.
+    pub fn sketch_len(&self) -> usize {
+        self.sk_vertices.len()
+    }
+
+    /// Total elements across both arenas.
+    pub fn total_len(&self) -> usize {
+        self.vertices.len() + self.sk_vertices.len()
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.vertices.is_empty()
+        self.vertices.is_empty() && self.sk_vertices.is_empty()
     }
 
     /// Total covering entries across the burst.
@@ -154,6 +224,22 @@ impl Burst {
     pub fn iter(&self) -> impl Iterator<Item = StreamItem<'_>> + '_ {
         (0..self.len()).map(move |i| self.item(i))
     }
+
+    /// The `i`-th sketch-arena element, borrowing from the arena.
+    #[inline]
+    pub fn sketch_item(&self, i: usize) -> SketchItem<'_> {
+        SketchItem {
+            vertex: self.sk_vertices[i],
+            count: self.sk_counts[i] as usize,
+            hashes: &self.sk_hashes
+                [self.sk_offsets[i] as usize..self.sk_offsets[i + 1] as usize],
+        }
+    }
+
+    /// Iterates the sketch-arena elements in publication order.
+    pub fn sketch_iter(&self) -> impl Iterator<Item = SketchItem<'_>> + '_ {
+        (0..self.sketch_len()).map(move |i| self.sketch_item(i))
+    }
 }
 
 /// The lossless sender-side drop rule: an element whose covering run has
@@ -175,9 +261,12 @@ pub fn prunable(run_len: usize, l_seen: u64, floor: f64) -> bool {
 pub struct Bucket {
     /// This bucket's guess of OPT (`(1+δ)^exponent`).
     pub opt_guess: f64,
-    /// Covered sample ids (bitmap over the universe).
+    /// Covered sample ids (bitmap over the universe; empty in sketch mode).
     covered: Vec<u64>,
     covered_count: u64,
+    /// KMV sketch of the covered ids (`Some` iff the bank runs in sketch
+    /// mode — exact-mode buckets never allocate one).
+    sketch: Option<CardSketch>,
     /// Selected seeds.
     pub seeds: Vec<Vertex>,
     pub gains: Vec<u32>,
@@ -187,7 +276,27 @@ impl Bucket {
     /// Creates an empty bucket guessing `opt_guess` for OPT, over a universe
     /// of `words`×64 bits.
     pub fn new(opt_guess: f64, words: usize) -> Self {
-        Self { opt_guess, covered: vec![0; words], covered_count: 0, seeds: Vec::new(), gains: Vec::new() }
+        Self {
+            opt_guess,
+            covered: vec![0; words],
+            covered_count: 0,
+            sketch: None,
+            seeds: Vec::new(),
+            gains: Vec::new(),
+        }
+    }
+
+    /// Creates an empty sketch-mode bucket: no bitmap, a fixed-width KMV
+    /// sketch in its place (~`8·width` bytes regardless of θ).
+    pub fn new_sketch(opt_guess: f64, width: usize) -> Self {
+        Self {
+            opt_guess,
+            covered: Vec::new(),
+            covered_count: 0,
+            sketch: Some(CardSketch::new(width)),
+            seeds: Vec::new(),
+            gains: Vec::new(),
+        }
     }
 
     #[inline]
@@ -247,6 +356,54 @@ impl Bucket {
             false
         }
     }
+
+    /// The sketch-mode twin of [`Bucket::try_admit`]: the same admission
+    /// rule, with the marginal gain estimated as the difference of KMV
+    /// cardinality estimates before/after merging the offer's bottom-w
+    /// hashes. `exact_len` (the declared run length) plays
+    /// `distinct_bits`' role as the cheap gain upper bound. While the
+    /// bucket's sketch holds fewer than `width` hashes both estimates are
+    /// exact integers, so the decision is bit-identical to exact mode.
+    pub fn try_admit_sketch(
+        &mut self,
+        v: Vertex,
+        exact_len: usize,
+        hashes: &[u64],
+        k: usize,
+    ) -> bool {
+        if self.seeds.len() >= k {
+            return false;
+        }
+        let threshold = self.opt_guess / (2.0 * k as f64);
+        if (exact_len.max(1) as f64) < threshold {
+            return false;
+        }
+        let sk = self.sketch.as_mut().expect("sketch-mode bucket");
+        let before = sk.estimate();
+        let mut merged = sk.clone();
+        merged.merge_sorted(hashes);
+        let gain = merged.estimate() - before;
+        // `gain >= 0.5` is the estimate-regime analogue of exact mode's
+        // `gain > 0`: integer gains (sub-width regime) pass iff >= 1.
+        if gain >= threshold && gain >= 0.5 {
+            let g = (gain.round().max(1.0) as u64).min(u32::MAX as u64);
+            *sk = merged;
+            self.covered_count += g;
+            self.seeds.push(v);
+            self.gains.push(g as u32);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Heap bytes of this bucket's coverage state (bitmap or sketch).
+    pub fn cover_bytes(&self) -> usize {
+        match &self.sketch {
+            Some(s) => s.bytes(),
+            None => self.covered.capacity() * std::mem::size_of::<u64>(),
+        }
+    }
 }
 
 /// A dynamically-grown family of threshold buckets, optionally restricted
@@ -259,6 +416,8 @@ pub struct BucketBank {
     words: usize,
     residue: usize,
     modulus: usize,
+    /// Coverage backend: exact bitmaps (default) or KMV sketches.
+    mode: CoverageMode,
     /// Largest subset size seen (the online lower bound `l` on OPT).
     l_seen: u64,
     /// Highest exponent materialized so far (buckets cover `..=hi`).
@@ -271,11 +430,38 @@ pub struct BucketBank {
     mask: OfferMask,
     /// Dense staging buffer for [`Bucket::try_admit`] (dense offers only).
     staged: Vec<u64>,
+    /// Scratch for hashing sim-path offers in sketch mode.
+    hash_scratch: Vec<u64>,
+    /// Coverage bytes charged to the global `mem:` peak counters
+    /// (released in `Drop`).
+    noted_bytes: u64,
+}
+
+impl Drop for BucketBank {
+    fn drop(&mut self) {
+        if self.noted_bytes > 0 {
+            crate::metrics::mem_release_cover(self.noted_bytes, self.mode.is_sketch());
+        }
+    }
 }
 
 impl BucketBank {
     pub fn new(theta: usize, k: usize, delta: f64, residue: usize, modulus: usize) -> Self {
         Self::with_kernels(theta, k, delta, residue, modulus, kernels())
+    }
+
+    /// Like [`BucketBank::new`] but with an explicit coverage mode — the
+    /// threaded receiver and the sim event-walk construct through this in
+    /// sketch runs.
+    pub fn new_mode(
+        theta: usize,
+        k: usize,
+        delta: f64,
+        residue: usize,
+        modulus: usize,
+        mode: CoverageMode,
+    ) -> Self {
+        Self::with_kernels_mode(theta, k, delta, residue, modulus, kernels(), mode)
     }
 
     /// Like [`BucketBank::new`] but with an explicit kernel backend —
@@ -288,6 +474,19 @@ impl BucketBank {
         modulus: usize,
         kern: &'static Kernels,
     ) -> Self {
+        Self::with_kernels_mode(theta, k, delta, residue, modulus, kern, CoverageMode::Exact)
+    }
+
+    /// Fully-explicit constructor (kernel backend + coverage mode).
+    pub fn with_kernels_mode(
+        theta: usize,
+        k: usize,
+        delta: f64,
+        residue: usize,
+        modulus: usize,
+        kern: &'static Kernels,
+        mode: CoverageMode,
+    ) -> Self {
         assert!(delta > 0.0 && delta < 0.5, "delta must be in (0, 1/2)");
         assert!(k >= 1 && modulus >= 1 && residue < modulus);
         let words = theta.div_ceil(64).max(1);
@@ -297,13 +496,21 @@ impl BucketBank {
             words,
             residue,
             modulus,
+            mode,
             l_seen: 0,
             hi: None,
             buckets: Vec::new(),
             kern,
             mask: OfferMask::new(),
             staged: Vec::new(),
+            hash_scratch: Vec::new(),
+            noted_bytes: 0,
         }
+    }
+
+    /// The bank's coverage mode.
+    pub fn mode(&self) -> CoverageMode {
+        self.mode
     }
 
     /// Name of the kernel backend this bank dispatches to.
@@ -311,33 +518,65 @@ impl BucketBank {
         self.kern.name
     }
 
+    /// Updates `l` and materializes any newly justified buckets (guesses up
+    /// to `k·l`). Shared by the exact and sketch offer paths — the schedule
+    /// depends only on declared run lengths, so the two modes materialize
+    /// identical bucket sets.
+    fn note_size(&mut self, s: u64) {
+        if s <= self.l_seen {
+            return;
+        }
+        self.l_seen = s;
+        // Guesses span up to u = k·l (paper: u/l = k). Materialize all
+        // exponents b with (1+δ)^b <= k·l not yet present.
+        let u = (self.k as u64 * self.l_seen) as f64;
+        let new_hi = (u.ln() / (1.0 + self.delta).ln()).floor() as i32;
+        let start = match self.hi {
+            None => {
+                // First element: also materialize down to l's exponent.
+                let lo = ((self.l_seen as f64).ln() / (1.0 + self.delta).ln()).floor() as i32;
+                lo
+            }
+            Some(h) => h + 1,
+        };
+        let mut added = 0u64;
+        for b in start..=new_hi {
+            if (b.rem_euclid(self.modulus as i32)) as usize == self.residue {
+                let guess = (1.0 + self.delta).powi(b);
+                let bucket = match self.mode {
+                    CoverageMode::Exact => Bucket::new(guess, self.words),
+                    CoverageMode::Sketch { width, .. } => Bucket::new_sketch(guess, width),
+                };
+                added += match self.mode {
+                    CoverageMode::Exact => (self.words * 8) as u64,
+                    CoverageMode::Sketch { width, .. } => (width * 8) as u64,
+                };
+                self.buckets.push((b, bucket));
+            }
+        }
+        if added > 0 {
+            self.noted_bytes += added;
+            crate::metrics::mem_note_cover(added, self.mode.is_sketch());
+        }
+        self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
+    }
+
     /// Processes one streamed element: update `l`, materialize any newly
     /// justified buckets (guesses up to `k·l`), pack the covering set once,
     /// then run the admission rule on every owned bucket. Returns the
-    /// number of admissions.
+    /// number of admissions. In sketch mode the raw ids are hashed and
+    /// truncated to bottom-w first — exactly what a wire sender would have
+    /// shipped, so the sim/local path and the wire path see identical
+    /// sketch state (KMV mergeability).
     pub fn offer(&mut self, v: Vertex, ids: &[SampleId]) -> usize {
-        let s = ids.len().max(1) as u64;
-        if s > self.l_seen {
-            self.l_seen = s;
-            // Guesses span up to u = k·l (paper: u/l = k). Materialize all
-            // exponents b with (1+δ)^b <= k·l not yet present.
-            let u = (self.k as u64 * self.l_seen) as f64;
-            let new_hi = (u.ln() / (1.0 + self.delta).ln()).floor() as i32;
-            let start = match self.hi {
-                None => {
-                    // First element: also materialize down to l's exponent.
-                    let lo = ((self.l_seen as f64).ln() / (1.0 + self.delta).ln()).floor() as i32;
-                    lo
-                }
-                Some(h) => h + 1,
-            };
-            for b in start..=new_hi {
-                if (b.rem_euclid(self.modulus as i32)) as usize == self.residue {
-                    self.buckets.push((b, Bucket::new((1.0 + self.delta).powi(b), self.words)));
-                }
-            }
-            self.hi = Some(new_hi.max(self.hi.unwrap_or(new_hi)));
+        if let CoverageMode::Sketch { width, key } = self.mode {
+            let mut scratch = std::mem::take(&mut self.hash_scratch);
+            super::sketch::bottom_w(key, ids, width, &mut scratch);
+            let adm = self.offer_sketch(v, ids.len(), &scratch);
+            self.hash_scratch = scratch;
+            return adm;
         }
+        self.note_size(ids.len().max(1) as u64);
         self.mask.build(ids, self.words);
         let mut adm = 0;
         let k = self.k;
@@ -346,6 +585,23 @@ impl BucketBank {
         let staged = &mut self.staged;
         for (_, b) in self.buckets.iter_mut() {
             if b.try_admit(v, mask, k, kern, staged) {
+                adm += 1;
+            }
+        }
+        adm
+    }
+
+    /// Processes one pre-hashed sketch element (`hashes` = bottom-w of the
+    /// run, `count` = its exact length). Same `l`/materialization
+    /// bookkeeping as [`BucketBank::offer`], then the sketch admission
+    /// sweep. Only valid on sketch-mode banks.
+    pub fn offer_sketch(&mut self, v: Vertex, count: usize, hashes: &[u64]) -> usize {
+        debug_assert!(self.mode.is_sketch(), "offer_sketch on an exact-mode bank");
+        self.note_size(count.max(1) as u64);
+        let mut adm = 0;
+        let k = self.k;
+        for (_, b) in self.buckets.iter_mut() {
+            if b.try_admit_sketch(v, count, hashes, k) {
                 adm += 1;
             }
         }
@@ -375,15 +631,28 @@ impl BucketBank {
     /// threshold of the next bucket that could ever be materialized
     /// (`(1+δ)^(hi+1) / 2k`). `0.0` before any element has been processed —
     /// nothing may be pruned against an uninitialized bank.
+    ///
+    /// In sketch mode the exact floor is deflated by `1 + rel_error(width)`
+    /// before publication: a run of length `s` is then only pruned when
+    /// even a one-σ-inflated gain estimate (`s · (1+ε)`) could not clear
+    /// any live or future threshold. Every consumer — the sim event-walk
+    /// snapshot, the `FloorBoard` the wire senders read, the burst fusion
+    /// below — goes through this one accessor, so the conservatism is
+    /// uniform.
     pub fn prune_floor(&self) -> f64 {
         let Some(hi) = self.hi else { return 0.0 };
         let next = (1.0 + self.delta).powi(hi + 1) / (2.0 * self.k as f64);
         let k = self.k;
-        self.buckets
+        let floor = self
+            .buckets
             .iter()
             .filter(|(_, b)| b.seeds.len() < k)
             .map(|(_, b)| b.opt_guess / (2.0 * k as f64))
-            .fold(next, f64::min)
+            .fold(next, f64::min);
+        match self.mode {
+            CoverageMode::Exact => floor,
+            CoverageMode::Sketch { width, .. } => floor / (1.0 + rel_error(width)),
+        }
     }
 
     /// Burst-level admission fusion: rejects a whole [`Burst`] against the
@@ -403,7 +672,16 @@ impl BucketBank {
         for item in burst.iter() {
             adm += self.offer(item.vertex, item.ids);
         }
+        for i in 0..burst.sketch_len() {
+            let it = burst.sketch_item(i);
+            adm += self.offer_sketch(it.vertex, it.count, it.hashes);
+        }
         adm
+    }
+
+    /// Heap bytes of coverage state across all owned buckets.
+    pub fn cover_bytes(&self) -> usize {
+        self.buckets.iter().map(|(_, b)| b.cover_bytes()).sum()
     }
 }
 
@@ -442,6 +720,12 @@ impl StreamingMaxCover {
         Self { bank: BucketBank::new(theta, k, delta, 0, 1), processed: 0, insertions: 0 }
     }
 
+    /// Like [`StreamingMaxCover::new`] with an explicit coverage mode
+    /// (the sim event-walk's constructor in sketch runs).
+    pub fn new_mode(theta: usize, k: usize, delta: f64, mode: CoverageMode) -> Self {
+        Self { bank: BucketBank::new_mode(theta, k, delta, 0, 1, mode), processed: 0, insertions: 0 }
+    }
+
     /// Like [`StreamingMaxCover::new`] with an explicit kernel backend
     /// (scalar-vs-SIMD A/B benches and the dispatch golden tests).
     pub fn with_kernels(theta: usize, k: usize, delta: f64, kern: &'static Kernels) -> Self {
@@ -460,12 +744,18 @@ impl StreamingMaxCover {
         self.insertions += self.bank.offer(v, ids);
     }
 
+    /// Processes one pre-hashed sketch element (sketch-mode banks only).
+    pub fn offer_sketch(&mut self, v: Vertex, count: usize, hashes: &[u64]) {
+        self.processed += 1;
+        self.insertions += self.bank.offer_sketch(v, count, hashes);
+    }
+
     /// Processes a whole [`Burst`] through the fused admission sweep
     /// ([`BucketBank::offer_burst`]) — bit-identical to offering each
     /// element, but a burst whose longest run cannot clear the threshold
     /// floor never touches a bucket.
     pub fn offer_burst(&mut self, burst: &Burst) {
-        self.processed += burst.len();
+        self.processed += burst.total_len();
         self.insertions += self.bank.offer_burst(burst);
     }
 
@@ -492,6 +782,17 @@ impl StreamingMaxCover {
     /// Name of the kernel backend the underlying bank dispatches to.
     pub fn backend(&self) -> &'static str {
         self.bank.backend()
+    }
+
+    /// The solver's coverage mode.
+    pub fn mode(&self) -> CoverageMode {
+        self.bank.mode()
+    }
+
+    /// Heap bytes of coverage state across all buckets (bitmaps or
+    /// sketches) — the quantity the `mem:` stats line peaks.
+    pub fn cover_bytes(&self) -> usize {
+        self.bank.cover_bytes()
     }
 
     /// Read access for tests/diagnostics.
@@ -810,6 +1111,165 @@ mod tests {
         b.clear();
         assert_eq!(b.max_run_len(), 0);
         assert!(b.is_empty());
+    }
+
+    fn sketch_mode(width: usize, seed: u64) -> CoverageMode {
+        CoverageMode::Sketch { width, key: crate::maxcover::sketch::sketch_key(seed) }
+    }
+
+    #[test]
+    fn wide_sketch_is_bit_identical_to_exact() {
+        // With width ≥ θ no bucket sketch ever fills, estimates are exact
+        // integers, and every admission decision matches exact mode —
+        // seeds, gains, coverage, bucket count, all of it.
+        for seed in 0..6u64 {
+            let theta = 300;
+            let k = 5;
+            let items = random_items(seed.wrapping_add(31), 90, theta, 28);
+            let mut exact = StreamingMaxCover::new(theta, k, 0.12);
+            let mut sketched = StreamingMaxCover::new_mode(theta, k, 0.12, sketch_mode(theta, seed));
+            for (i, ids) in items.iter().enumerate() {
+                exact.offer(i as u32, ids);
+                sketched.offer(i as u32, ids);
+            }
+            let a = exact.finalize();
+            let b = sketched.finalize();
+            assert_eq!(a.seeds, b.seeds, "seed {seed}");
+            assert_eq!(a.gains, b.gains, "seed {seed}");
+            assert_eq!(a.coverage, b.coverage, "seed {seed}");
+            assert_eq!(exact.num_buckets(), sketched.num_buckets(), "seed {seed}");
+            for (x, y) in exact.buckets().zip(sketched.buckets()) {
+                assert_eq!(x.seeds, y.seeds, "seed {seed}");
+                assert_eq!(x.coverage(), y.coverage(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_offer_matches_prehashed_offer_sketch() {
+        // The sim/local path (raw ids, hashed in offer) and the wire path
+        // (sender pre-hashes bottom-w, receiver calls offer_sketch) must
+        // leave identical state — KMV mergeability end to end.
+        use crate::maxcover::sketch::{bottom_w, sketch_key};
+        let theta = 400;
+        let k = 5;
+        let width = 24;
+        let key = sketch_key(0xABCD);
+        let mode = CoverageMode::Sketch { width, key };
+        let items = random_items(17, 100, theta, 40);
+        let mut local = StreamingMaxCover::new_mode(theta, k, 0.1, mode);
+        let mut wired = StreamingMaxCover::new_mode(theta, k, 0.1, mode);
+        let mut payload = Vec::new();
+        for (i, ids) in items.iter().enumerate() {
+            local.offer(i as u32, ids);
+            bottom_w(key, ids, width, &mut payload);
+            wired.offer_sketch(i as u32, ids.len(), &payload);
+        }
+        let a = local.finalize();
+        let b = wired.finalize();
+        assert_eq!(a.seeds, b.seeds);
+        assert_eq!(a.coverage, b.coverage);
+    }
+
+    #[test]
+    fn sketch_burst_offer_matches_per_item() {
+        use crate::maxcover::sketch::{bottom_w, sketch_key};
+        let theta = 350;
+        let k = 6;
+        let width = 20;
+        let key = sketch_key(9);
+        let mode = CoverageMode::Sketch { width, key };
+        let items = random_items(23, 70, theta, 30);
+        let mut per_item = StreamingMaxCover::new_mode(theta, k, 0.12, mode);
+        let mut fused = StreamingMaxCover::new_mode(theta, k, 0.12, mode);
+        let mut payload = Vec::new();
+        let mut burst = Burst::new();
+        for (i, ids) in items.iter().enumerate() {
+            bottom_w(key, ids, width, &mut payload);
+            per_item.offer_sketch(i as u32, ids.len(), &payload);
+            burst.push_sketch(i as u32, ids.len() as u32, &payload);
+            if burst.sketch_len() == 5 || i + 1 == items.len() {
+                fused.offer_burst(&burst);
+                burst.clear();
+            }
+        }
+        assert_eq!(per_item.finalize(), fused.finalize());
+        assert_eq!(per_item.processed, fused.processed);
+    }
+
+    #[test]
+    fn sketch_floor_is_deflated_conservatively() {
+        let theta = 256;
+        let items = random_items(41, 60, theta, 25);
+        let mut exact = StreamingMaxCover::new(theta, 5, 0.1);
+        let mut sk = StreamingMaxCover::new_mode(theta, 5, 0.1, sketch_mode(theta, 41));
+        for (i, ids) in items.iter().enumerate() {
+            exact.offer(i as u32, ids);
+            sk.offer(i as u32, ids);
+            // Identical bucket schedule ⇒ the sketch floor is exactly the
+            // exact floor deflated by (1 + rel_error) — strictly below it.
+            let e = exact.prune_floor();
+            let s = sk.prune_floor();
+            assert!(s <= e, "sketch floor {s} above exact floor {e}");
+            if e > 0.0 {
+                assert!(s > 0.0 && s < e);
+            }
+            assert_eq!(exact.l_seen(), sk.l_seen());
+        }
+    }
+
+    #[test]
+    fn narrow_sketch_keeps_quality_bound() {
+        // Estimation regime: width far below run sizes. The selected
+        // seeds' TRUE coverage (recounted exactly) must stay within the
+        // pinned factor of the exact streaming solution — the module's
+        // quality contract, modeled on the α-truncation test.
+        use crate::maxcover::coverage::SetSystem;
+        for seed in 0..5u64 {
+            let theta = 512;
+            let k = 5;
+            let items = random_items(seed.wrapping_mul(13).wrapping_add(7), 120, theta, 60);
+            let mut exact = StreamingMaxCover::new(theta, k, 0.1);
+            let mut sk = StreamingMaxCover::new_mode(theta, k, 0.1, sketch_mode(66, seed));
+            for (i, ids) in items.iter().enumerate() {
+                exact.offer(i as u32, ids);
+                sk.offer(i as u32, ids);
+            }
+            let exact_cov = exact.finalize().coverage as f64;
+            // Recount the sketch-selected seeds exactly.
+            let sys = SetSystem::from_sets(
+                theta,
+                (0..items.len() as u32).collect(),
+                &items,
+            );
+            let true_cov = sys.coverage_of(&sk.finalize().seeds) as f64;
+            // width 66 ⇒ rel_error = 12.5%; half-minus-delta already costs
+            // a factor ~(0.5−δ). Pin sketch-vs-exact at 0.7 — generous
+            // headroom over the ~1σ typical error, tight enough to catch a
+            // broken estimator or admission rule.
+            assert!(
+                true_cov >= 0.7 * exact_cov,
+                "seed {seed}: sketch true coverage {true_cov} < 0.7 × exact {exact_cov}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_mode_reports_smaller_cover_bytes() {
+        let theta = 1 << 16; // 1024 bitmap words per bucket
+        let items = random_items(3, 40, theta, 50);
+        let mut exact = StreamingMaxCover::new(theta, 5, 0.1);
+        let mut sk = StreamingMaxCover::new_mode(theta, 5, 0.1, sketch_mode(64, 3));
+        for (i, ids) in items.iter().enumerate() {
+            exact.offer(i as u32, ids);
+            sk.offer(i as u32, ids);
+        }
+        assert_eq!(exact.num_buckets(), sk.num_buckets());
+        let (eb, sb) = (exact.cover_bytes(), sk.cover_bytes());
+        assert!(
+            sb * 4 <= eb,
+            "sketch coverage bytes {sb} not ≥4× below exact {eb}"
+        );
     }
 
     #[test]

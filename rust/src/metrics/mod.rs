@@ -2,6 +2,7 @@
 //! regenerates the paper's breakdown figures (Fig. 4, Fig. 5 shaded region).
 
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-stage metrics of the chunked overlapped pipeline (PR 4). Zero when
 /// the phase-stepped engine ran (`--overlap off` or shuffle-free
@@ -227,6 +228,87 @@ impl fmt::Display for ScorerStats {
     }
 }
 
+/// Peak memory counters for the coverage data structures (PR 10): the
+/// receiver's per-bucket coverage state (exact bitmaps vs KMV sketches)
+/// and the merged `InvertedIndex`. Peaks, not sums — `add` folds with
+/// `max`, matching how concurrent banks overlap in time. Zero when no
+/// receiver ran — the CLI only prints the `mem:` line when a peak was
+/// recorded. Like the other sub-structs, these ride inside [`Breakdown`]
+/// without contributing to [`Breakdown::total`]: they describe memory,
+/// not the modeled critical path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// Peak bytes of exact per-bucket coverage bitmaps live at once.
+    pub exact_peak: u64,
+    /// Peak bytes of per-bucket KMV sketches live at once.
+    pub sketch_peak: u64,
+    /// Peak bytes of the merged inverted index (CSR storage).
+    pub index_peak: u64,
+}
+
+impl MemStats {
+    pub fn is_zero(&self) -> bool {
+        *self == MemStats::default()
+    }
+
+    pub fn add(&mut self, o: &MemStats) {
+        self.exact_peak = self.exact_peak.max(o.exact_peak);
+        self.sketch_peak = self.sketch_peak.max(o.sketch_peak);
+        self.index_peak = self.index_peak.max(o.index_peak);
+    }
+}
+
+impl fmt::Display for MemStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} B exact-cover peak | {} B sketch-cover peak | {} B index peak",
+            self.exact_peak, self.sketch_peak, self.index_peak
+        )
+    }
+}
+
+// Process-wide peak trackers. Coverage banks charge their allocation on
+// materialization (`mem_note_cover`) and release it on `Drop`
+// (`mem_release_cover`); the current-bytes counters let concurrently live
+// banks (the threaded receiver's residue shards, overlapped rounds) peak
+// correctly. The index tracker is a plain high-water mark. Drained once
+// per run by `mem_stats_take`.
+static EXACT_CUR: AtomicU64 = AtomicU64::new(0);
+static EXACT_PEAK: AtomicU64 = AtomicU64::new(0);
+static SKETCH_CUR: AtomicU64 = AtomicU64::new(0);
+static SKETCH_PEAK: AtomicU64 = AtomicU64::new(0);
+static INDEX_PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// Charges `bytes` of live coverage state and raises the matching peak.
+pub fn mem_note_cover(bytes: u64, sketch: bool) {
+    let (cur, peak) = if sketch { (&SKETCH_CUR, &SKETCH_PEAK) } else { (&EXACT_CUR, &EXACT_PEAK) };
+    let now = cur.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    peak.fetch_max(now, Ordering::Relaxed);
+}
+
+/// Releases `bytes` of live coverage state (bank teardown).
+pub fn mem_release_cover(bytes: u64, sketch: bool) {
+    let cur = if sketch { &SKETCH_CUR } else { &EXACT_CUR };
+    cur.fetch_sub(bytes, Ordering::Relaxed);
+}
+
+/// Raises the merged-index high-water mark.
+pub fn mem_note_index(bytes: u64) {
+    INDEX_PEAK.fetch_max(bytes, Ordering::Relaxed);
+}
+
+/// Reads and resets the peaks (once per run, after the pipeline folds its
+/// stats). Current-bytes counters are left alone — still-live banks keep
+/// their charge.
+pub fn mem_stats_take() -> MemStats {
+    MemStats {
+        exact_peak: EXACT_PEAK.swap(0, Ordering::Relaxed),
+        sketch_peak: SKETCH_PEAK.swap(0, Ordering::Relaxed),
+        index_peak: INDEX_PEAK.swap(0, Ordering::Relaxed),
+    }
+}
+
 /// Simulated-time breakdown of one InfMax run (accumulated across
 /// martingale rounds). All values are seconds of *critical-path* time
 /// attributable to the phase, per the paper's Fig. 4 methodology:
@@ -257,6 +339,8 @@ pub struct Breakdown {
     pub wire: WireStats,
     /// Batched-scorer dispatch counters (PR 9).
     pub scorer: ScorerStats,
+    /// Coverage/index peak-memory counters (PR 10).
+    pub mem: MemStats,
 }
 
 impl Breakdown {
@@ -283,6 +367,7 @@ impl Breakdown {
         self.fabric.add(&other.fabric);
         self.wire.add(&other.wire);
         self.scorer.add(&other.scorer);
+        self.mem.add(&other.mem);
     }
 }
 
@@ -461,6 +546,44 @@ mod tests {
         assert_eq!(b.total(), 0.0, "scorer counters do not inflate the phase total");
         let s = format!("{a}");
         assert!(s.contains("4 dispatches") && s.contains("50.0 cand/dispatch"), "{s}");
+    }
+
+    #[test]
+    fn mem_stats_peak_without_inflating_total() {
+        let mut a = MemStats { exact_peak: 1000, sketch_peak: 0, index_peak: 400 };
+        assert!(!a.is_zero());
+        assert!(MemStats::default().is_zero());
+        a.add(&MemStats { exact_peak: 800, sketch_peak: 64, index_peak: 900 });
+        assert_eq!(a.exact_peak, 1000, "peaks fold with max, not sum");
+        assert_eq!(a.sketch_peak, 64);
+        assert_eq!(a.index_peak, 900);
+        let mut b = Breakdown::default();
+        b.add(&Breakdown { mem: a, ..Default::default() });
+        assert_eq!(b.mem.exact_peak, 1000);
+        assert_eq!(b.total(), 0.0, "memory peaks do not inflate the phase total");
+        let s = format!("{a}");
+        assert!(s.contains("1000 B exact-cover peak") && s.contains("900 B index peak"), "{s}");
+    }
+
+    #[test]
+    fn mem_counters_track_concurrent_peaks() {
+        // Serialize against other tests touching the global counters by
+        // draining first.
+        let _ = mem_stats_take();
+        mem_note_cover(100, false);
+        mem_note_cover(50, false);
+        mem_release_cover(100, false);
+        mem_note_cover(64, true);
+        mem_release_cover(64, true);
+        mem_note_index(300);
+        mem_note_index(200);
+        let got = mem_stats_take();
+        assert!(got.exact_peak >= 150, "peak {got:?} missed the overlap");
+        assert!(got.sketch_peak >= 64);
+        assert!(got.index_peak >= 300);
+        // Drain leftover live bytes so later tests start clean.
+        mem_release_cover(50, false);
+        let _ = mem_stats_take();
     }
 
     #[test]

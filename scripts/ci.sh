@@ -51,22 +51,38 @@
 #      drift at the CLI level on top of tests/scorer.rs). CLI flags, not
 #      GREEDIRIS_SCORER, so the config-default unit tests stay
 #      env-independent.
-#   8. quick-scale micro benches (sampling / shuffle / maxcover /
-#      transport / scorer, incl. the socket-backend leg, the PR-8
-#      coalescing A/B — which asserts the >=5x send-syscall reduction —
-#      and the PR-9 scalar-vs-batched scorer A/B, which asserts seed
-#      equality and the >=64 candidates/tile dispatch shape) through the
-#      in-tree harness (src/exp/bench.rs), each measurement exported as
-#      a JSON line via GREEDIRIS_BENCH_JSON.
-#   9. assemble the lines into BENCH_PR5.json at the repo root — the
+#   8. sketch-coverage + adaptive-sampling gates (PR 10): (a) `--coverage
+#      sketch` with a width wider than θ must print seeds bit-identical
+#      to exact coverage on --transport sim AND threads (sub-width KMV
+#      estimates are exact integers and saturation is impossible, so the
+#      whole admission path degenerates to the bitmap one); (b) a narrow
+#      sketch (width 256 ≪ θ) must be deterministic rerun-to-rerun on sim
+#      (threads' live prune floor is timing-dependent once pruning stops
+#      being lossless, so cross-run equality is only contracted on sim)
+#      and keep evaluated influence within 5% of exact on both
+#      transports; (c) `--eps-adaptive 0.05` must use no more martingale
+#      rounds than the classic schedule at influence within 1%; (d) an
+#      unknown --coverage value must exit nonzero with a typed message,
+#      never a silent fallback.
+#   9. quick-scale micro benches (sampling / shuffle / maxcover /
+#      transport / scorer / sketch, incl. the socket-backend leg, the
+#      PR-8 coalescing A/B — which asserts the >=5x send-syscall
+#      reduction — the PR-9 scalar-vs-batched scorer A/B, which asserts
+#      seed equality and the >=64 candidates/tile dispatch shape, and the
+#      PR-10 exact-vs-sketch A/B, which asserts the >=4x peak coverage
+#      memory drop and the adaptive controller's sample reduction) through
+#      the in-tree harness (src/exp/bench.rs), each measurement exported
+#      as a JSON line via GREEDIRIS_BENCH_JSON.
+#  10. assemble the lines into BENCH_PR5.json at the repo root — the
 #      current perf record, stamped with the git SHA and the flag matrix
 #      the benches ran (transport/wire/prune/overlap A/B pairs live in
 #      the same array; see scripts/README.md). A record is only written
 #      when this run actually measured something: an existing measured
 #      BENCH_PR5.json is never replaced by a placeholder or an empty run.
 #      The coalescing lines are additionally split into BENCH_PR8.json,
-#      and the scorer lines into BENCH_PR9.json (same stamp discipline).
-#  10. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
+#      the scorer lines into BENCH_PR9.json, and the sketch lines into
+#      BENCH_PR10.json (same stamp discipline).
+#  11. BENCH_PR1-4.json: earlier baselines future PRs diff against. The
 #      authoring containers had no Rust toolchain, so the repo may carry
 #      marked placeholders; the first run on a toolchain-equipped host
 #      replaces a placeholder (or missing file) with this run's measured
@@ -169,6 +185,80 @@ for TR in sim threads; do
   fi
 done
 echo "seed sets identical across scorer {scalar, batch} x transport {sim, threads}"
+
+echo "== sketch-coverage + adaptive-sampling gates (PR 10) =="
+# Wide sketch (width 4096 > θ = 2048): saturation is impossible and
+# sub-width KMV estimates are exact integers, so every admission decision
+# must match the bitmap path bit-for-bit — on both in-process transports.
+for TR in sim threads; do
+  SK_WIDE="$("$BIN" "${RUN_ARGS[@]}" --transport "$TR" \
+    --coverage sketch --sketch-width 4096 | grep '^seeds:')"
+  if [ "$SK_WIDE" != "$SIM_SEEDS" ]; then
+    echo "error: wide sketch diverged from exact (transport $TR)" >&2
+    echo "  exact:  $SIM_SEEDS" >&2
+    echo "  sketch: $SK_WIDE" >&2
+    exit 1
+  fi
+done
+echo "seed sets identical for wide sketch (width > theta) x transport {sim, threads}"
+# Narrow sketch (width 256 ≪ θ): estimates now carry ~1/sqrt(w-2) error,
+# so the contract weakens to (a) sim rerun determinism (threads' live
+# prune floor is timing-dependent once pruning stops being lossless) and
+# (b) evaluated influence within 5% of exact on both transports. The
+# spread evaluation is seeded, so equal seed sets give equal spread lines.
+SK_RUN=(run --input dblp --m 8 --k 20 --theta 2048 --sims 200)
+spread_of() { grep -o 'sims: [0-9.]*' <<<"$1" | grep -o '[0-9.]*$'; }
+EX_SPREAD="$(spread_of "$("$BIN" "${SK_RUN[@]}" --transport sim)")"
+NARROW_A="$("$BIN" "${SK_RUN[@]}" --transport sim --coverage sketch --sketch-width 256)"
+NARROW_B="$("$BIN" "${SK_RUN[@]}" --transport sim --coverage sketch --sketch-width 256)"
+if [ "$(grep '^seeds:' <<<"$NARROW_A")" != "$(grep '^seeds:' <<<"$NARROW_B")" ]; then
+  echo "error: narrow sketch on sim is nondeterministic across reruns" >&2
+  exit 1
+fi
+for TR in sim threads; do
+  NARROW="$("$BIN" "${SK_RUN[@]}" --transport "$TR" --coverage sketch --sketch-width 256)"
+  SK_SPREAD="$(spread_of "$NARROW")"
+  if ! awk -v s="$SK_SPREAD" -v e="$EX_SPREAD" 'BEGIN { exit !(s >= 0.95 * e) }'; then
+    echo "error: narrow sketch influence $SK_SPREAD below 95% of exact $EX_SPREAD (transport $TR)" >&2
+    exit 1
+  fi
+done
+echo "narrow sketch: sim deterministic, influence within 5% of exact on {sim, threads}"
+# Error-adaptive controller: with the martingale loop live (no --theta
+# override), --eps-adaptive 0.05 must not add rounds, and its seeds must
+# keep evaluated influence within 1% of the classic schedule's. If the
+# stabilization stop never fires the run is bit-identical by design —
+# allowed, but surfaced.
+AD_RUN=(run --input dblp --m 8 --k 20 --eps 0.3 --sims 200 --transport sim)
+rounds_of() { grep -o 'rounds = [0-9]*' <<<"$1" | grep -o '[0-9]*'; }
+CL_OUT="$(timeout "${FAULT_BUDGET:-120}" "$BIN" "${AD_RUN[@]}")"
+AD_OUT="$(timeout "${FAULT_BUDGET:-120}" "$BIN" "${AD_RUN[@]}" --eps-adaptive 0.05)"
+CL_R="$(rounds_of "$CL_OUT")"; AD_R="$(rounds_of "$AD_OUT")"
+if [ "$AD_R" -gt "$CL_R" ]; then
+  echo "error: --eps-adaptive used more rounds ($AD_R) than classic ($CL_R)" >&2
+  exit 1
+fi
+if ! awk -v a="$(spread_of "$AD_OUT")" -v c="$(spread_of "$CL_OUT")" \
+    'BEGIN { exit !(a >= 0.99 * c) }'; then
+  echo "error: adaptive influence $(spread_of "$AD_OUT") below 99% of classic $(spread_of "$CL_OUT")" >&2
+  exit 1
+fi
+if [ "$AD_R" -eq "$CL_R" ]; then
+  echo "note: adaptive stop did not fire on this instance (rounds $AD_R = classic)"
+else
+  echo "eps-adaptive: $AD_R rounds vs classic $CL_R, influence within 1%"
+fi
+# Typed-error gate: an unknown coverage kind must be a clean nonzero exit
+# (from Config validation through the CLI), never a silent exact fallback.
+if "$BIN" run --input dblp --coverage bogus >/dev/null 2>&1; then
+  echo "error: unknown --coverage value was silently accepted" >&2
+  exit 1
+fi
+if GREEDIRIS_COVERAGE=bogus "$BIN" run --input dblp >/dev/null 2>&1; then
+  echo "error: unknown GREEDIRIS_COVERAGE value was silently accepted" >&2
+  exit 1
+fi
+echo "unknown coverage values rejected (flag and env)"
 
 echo "== fault-injection gates =="
 # Every leg runs under a wall-clock `timeout`: the contract is "typed
@@ -355,6 +445,7 @@ cargo bench --bench micro_shuffle
 cargo bench --bench micro_maxcover
 cargo bench --bench micro_transport
 cargo bench --bench micro_scorer
+cargo bench --bench micro_sketch
 
 OUT="$ROOT/BENCH_PR5.json"
 if [ ! -s "$JSONL" ]; then
@@ -415,6 +506,28 @@ STAMP9="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale
   echo ']'
 } > "$OUT9"
 echo "wrote $OUT9 ($(printf '%s\n' "$SC_LINES" | grep -c .) measurements, sha $GIT_SHA)"
+
+# PR-10 record: the exact-vs-sketch and classic-vs-adaptive A/B lines in
+# their own file. micro_sketch asserts the quality bounds, the >=4x peak
+# coverage memory drop, and the adaptive sample reduction before
+# exporting, so present lines mean the acceptance bar passed; a silent
+# disappearance fails loudly.
+OUT10="$ROOT/BENCH_PR10.json"
+SK_LINES="$(grep -E '"group":"sketch"' "$JSONL" || true)"
+if [ -z "$SK_LINES" ]; then
+  echo "error: sketch bench exported no measurements" >&2
+  if [ -f "$OUT10" ] && ! grep -q '"provenance"' "$OUT10"; then
+    echo "kept existing measured $OUT10" >&2
+  fi
+  exit 1
+fi
+STAMP10="{\"group\":\"meta\",\"name\":\"record\",\"git_sha\":\"$GIT_SHA\",\"scale\":\"$GREEDIRIS_BENCH_SCALE\",\"workload\":\"streaming round n=2000 theta=65536 m=8 k=32 + martingale loop\",\"sketch\":\"exact vs KMV w{64,128,512} A/B\",\"adaptive\":\"eps-adaptive 0 vs 0.05 A/B\",\"gate\":\"wide-sketch bit-identity, >=4x coverage-memory drop, adaptive samples <= classic at >=99% influence\"}"
+{
+  echo '['
+  { echo "$STAMP10"; printf '%s\n' "$SK_LINES"; } | paste -sd,
+  echo ']'
+} > "$OUT10"
+echo "wrote $OUT10 ($(printf '%s\n' "$SK_LINES" | grep -c .) measurements, sha $GIT_SHA)"
 
 for BASE in "$ROOT/BENCH_PR1.json" "$ROOT/BENCH_PR2.json" "$ROOT/BENCH_PR3.json" "$ROOT/BENCH_PR4.json"; do
   if [ ! -f "$BASE" ] || grep -q '"provenance"' "$BASE"; then
